@@ -1,0 +1,92 @@
+//! Microbenchmarks of the coordinator-side hot path: policy decisions,
+//! interpolation-weight computation, CRF cache operations, band masks.
+//! None of these may be visible next to a multi-millisecond model step —
+//! the bench pins that budget (<1% of a step).
+//!
+//!     cargo bench --offline --bench cache_policies
+
+use freqca::benchkit::{bench, BenchOpts, Table};
+use freqca::cache::CrfCache;
+use freqca::freq::{band_mask, BandSpec, Decomp};
+use freqca::policy::{self, interp, StepCtx};
+use freqca::util::{Rng, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts { warmup_iters: 10, iters: 200 };
+    let mut table = Table::new(&["op", "mean us", "p50 us"]);
+    let mut push = |name: &str, r: freqca::benchkit::BenchResult| {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", r.summary.mean * 1e6),
+            format!("{:.2}", r.summary.p50 * 1e6),
+        ]);
+    };
+
+    // Hermite/least-squares weight computation (runs once per cached step).
+    let s_hist = [-0.9f64, -0.7, -0.5];
+    let r = bench("interp::poly_weights(order=2)", &opts, || {
+        interp::poly_weights(&s_hist, -0.3, 2).unwrap();
+    });
+    push("poly_weights_o2", r);
+
+    // Policy decision (FreqCa) including weight computation.
+    let mut pol = policy::parse_policy("freqca:n=7", Decomp::Dct, 8, 3).unwrap();
+    let x = vec![0.5f32; 1024];
+    let r = bench("policy::decide(freqca)", &opts, || {
+        let ctx = StepCtx {
+            step: 5,
+            n_steps: 50,
+            s: -0.3,
+            hist_s: &s_hist,
+            x: &x,
+            x_at_last_full: None,
+        };
+        pol.decide(&ctx).unwrap();
+    });
+    push("freqca_decide", r);
+
+    // TeaCache indicator over a realistic latent (rel-L1 on 64x64x4).
+    let mut tc = policy::parse_policy("teacache:l=1.0", Decomp::None, 8, 3)
+        .unwrap();
+    let big = vec![0.25f32; 16384];
+    let prev = vec![0.26f32; 16384];
+    let r = bench("policy::decide(teacache)", &opts, || {
+        let ctx = StepCtx {
+            step: 5,
+            n_steps: 50,
+            s: -0.3,
+            hist_s: &s_hist,
+            x: &big,
+            x_at_last_full: Some(&prev),
+        };
+        tc.decide(&ctx).unwrap();
+    });
+    push("teacache_decide", r);
+
+    // CRF cache push + stack (the per-step cache maintenance).
+    let mut rng = Rng::new(1);
+    let crf = Tensor::new(vec![64, 192], rng.normal_vec(64 * 192)).unwrap();
+    let mut cache = CrfCache::new(3);
+    cache.push(-0.9, crf.clone());
+    cache.push(-0.7, crf.clone());
+    cache.push(-0.5, crf.clone());
+    let r = bench("CrfCache::push+evict", &opts, || {
+        cache.push(-0.4, crf.clone());
+    });
+    push("cache_push", r);
+    let r = bench("CrfCache::stacked [3,64,192]", &opts, || {
+        cache.stacked().unwrap();
+    });
+    push("cache_stacked", r);
+
+    // Band-mask construction (cached per cutoff in practice).
+    let r = bench("band_mask(dct, 12x12)", &opts, || {
+        band_mask(BandSpec::new(Decomp::Dct, 3), 12);
+    });
+    push("band_mask", r);
+
+    println!("\n{}", table.render());
+    std::fs::create_dir_all("results")?;
+    table.save_csv("results/bench_cache_policies.csv")?;
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Coordinator-layer benches: batching efficiency end-to-end (does
+//! batch-4 beat 4x batch-1?), router/batcher throughput, and JSON
+//! protocol framing cost.
+//!
+//!     cargo bench --offline --bench coordinator
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use freqca::benchkit::{bench, BenchOpts, Table};
+use freqca::coordinator::batcher::Batcher;
+use freqca::coordinator::Request;
+use freqca::freq::Decomp;
+use freqca::model::{weights, ModelConfig};
+use freqca::policy;
+use freqca::runtime::Runtime;
+use freqca::sampler::{generate_batch, BatchJob, JobSpec, SampleOpts};
+use freqca::util::Json;
+use freqca::workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(&["bench", "mean ms", "p50 ms", "note"]);
+
+    // --- batched vs sequential generation (flux-sim exports b in {1,4}).
+    let rt = Runtime::new("artifacts")?;
+    let cfg = ModelConfig::load("artifacts", "flux-sim")?;
+    let host = weights::load_weights("artifacts", "flux-sim", cfg.param_count)?;
+    let w: Rc<xla::PjRtBuffer> = rt.weights_buffer(&cfg, &host)?;
+    let steps = 10;
+    let jobs: Vec<JobSpec> = (0..4u64)
+        .map(|i| {
+            let p = workload::build_prompt(&cfg, i).unwrap();
+            JobSpec { cond: p.cond, ref_img: None, seed: i }
+        })
+        .collect();
+    let opts = BenchOpts { warmup_iters: 1, iters: 5 };
+
+    let r = bench("generate batch=4 (freqca:n=5)", &opts, || {
+        let mut pol =
+            policy::parse_policy("freqca:n=5", Decomp::Dct, cfg.grid, 3)
+                .unwrap();
+        let b = BatchJob {
+            cfg: &cfg,
+            weights: w.clone(),
+            jobs: jobs.clone(),
+            n_steps: steps,
+        };
+        generate_batch(&rt, &b, pol.as_mut(), &SampleOpts::default()).unwrap();
+    });
+    let batch4 = r.summary.mean;
+    table.row(vec![
+        "batch=4 x 10 steps".into(),
+        format!("{:.2}", r.summary.mean * 1e3),
+        format!("{:.2}", r.summary.p50 * 1e3),
+        "4 requests/iter".into(),
+    ]);
+
+    let r = bench("generate 4 x batch=1 (freqca:n=5)", &opts, || {
+        for j in &jobs {
+            let mut pol =
+                policy::parse_policy("freqca:n=5", Decomp::Dct, cfg.grid, 3)
+                    .unwrap();
+            let b = BatchJob {
+                cfg: &cfg,
+                weights: w.clone(),
+                jobs: vec![j.clone()],
+                n_steps: steps,
+            };
+            generate_batch(&rt, &b, pol.as_mut(), &SampleOpts::default())
+                .unwrap();
+        }
+    });
+    table.row(vec![
+        "4 x batch=1 x 10 steps".into(),
+        format!("{:.2}", r.summary.mean * 1e3),
+        format!("{:.2}", r.summary.p50 * 1e3),
+        format!("batching gain {:.2}x", r.summary.mean / batch4),
+    ]);
+
+    // --- batcher throughput (pure queueing, no model).
+    let opts = BenchOpts { warmup_iters: 5, iters: 100 };
+    let mk_req = |id: u64| Request {
+        id,
+        model: "m".into(),
+        policy: "freqca:n=7".into(),
+        seed: id,
+        n_steps: 50,
+        cond: vec![0.0; 32],
+        ref_img: None,
+        return_latent: false,
+    };
+    let r = bench("batcher push+drain 256 reqs", &opts, || {
+        let mut b = Batcher::new(vec![1, 4], Duration::ZERO, 512);
+        for i in 0..256 {
+            b.push(mk_req(i));
+        }
+        while b.next_batch(std::time::Instant::now()).is_some() {}
+    });
+    table.row(vec![
+        "batcher 256 reqs".into(),
+        format!("{:.3}", r.summary.mean * 1e3),
+        format!("{:.3}", r.summary.p50 * 1e3),
+        format!("{:.1} us/req", r.summary.mean * 1e6 / 256.0),
+    ]);
+
+    // --- JSON protocol framing.
+    let req_json = mk_req(1).to_json().to_string();
+    let r = bench("json parse request", &opts, || {
+        Json::parse(&req_json).unwrap();
+    });
+    table.row(vec![
+        "json parse req".into(),
+        format!("{:.4}", r.summary.mean * 1e3),
+        format!("{:.4}", r.summary.p50 * 1e3),
+        format!("{} B", req_json.len()),
+    ]);
+
+    println!("\n{}", table.render());
+    std::fs::create_dir_all("results")?;
+    table.save_csv("results/bench_coordinator.csv")?;
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Per-step latency decomposition: the cost of a full DiT forward vs the
+//! FreqCa predictor paths and the head re-projection, per model.  This is
+//! the bench behind the paper's C_pred << C_full premise (§4.4.1) and the
+//! primary perf-pass fixture (EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --offline --bench step_latency
+
+use std::rc::Rc;
+
+use freqca::benchkit::{bench, BenchOpts, Table};
+use freqca::freq::dct::dct_matrix_tensor;
+use freqca::model::{weights, ModelConfig};
+use freqca::runtime::Runtime;
+use freqca::util::{Rng, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::default();
+    let mut table = Table::new(&[
+        "model", "artifact", "mean ms", "p50 ms",
+    ]);
+    for model in ["tiny", "flux-sim", "qwen-sim"] {
+        bench_model(model, &opts, &mut table)?;
+    }
+    println!("\n{}", table.render());
+    std::fs::create_dir_all("results")?;
+    table.save_csv("results/bench_step_latency.csv")?;
+    Ok(())
+}
+
+fn bench_model(
+    model: &str,
+    opts: &BenchOpts,
+    table: &mut Table,
+) -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let cfg = ModelConfig::load("artifacts", model)?;
+    let host = weights::load_weights("artifacts", model, cfg.param_count)?;
+    let w: Rc<xla::PjRtBuffer> = rt.weights_buffer(&cfg, &host)?;
+    let mut rng = Rng::new(7);
+    let x = Tensor::new(
+        vec![1, cfg.latent, cfg.latent, cfg.channels],
+        rng.normal_vec(cfg.latent_elems()),
+    )?;
+    let cond = Tensor::new(vec![1, cfg.cond_dim], rng.normal_vec(cfg.cond_dim))?;
+    let t = Tensor::new(vec![1], vec![0.5])?;
+    let hist = Tensor::new(
+        vec![1, cfg.k_hist, cfg.tokens, cfg.dim],
+        rng.normal_vec(cfg.k_hist * cfg.crf_elems()),
+    )?;
+    let crf = Tensor::new(
+        vec![1, cfg.tokens, cfg.dim],
+        rng.normal_vec(cfg.crf_elems()),
+    )?;
+    let kw = Tensor::new(vec![cfg.k_hist], vec![0.2, 0.3, 0.5])?;
+    let mask = Tensor::new(
+        vec![cfg.grid, cfg.grid],
+        vec![1.0; cfg.grid * cfg.grid],
+    )?;
+    let basis = dct_matrix_tensor(cfg.grid);
+
+    let mut push = |name: &str, r: freqca::benchkit::BenchResult| {
+        table.row(vec![
+            model.to_string(),
+            name.to_string(),
+            format!("{:.3}", r.summary.mean * 1e3),
+            format!("{:.3}", r.summary.p50 * 1e3),
+        ]);
+    };
+
+    let args: Vec<&Tensor> = vec![&x, &cond, &t];
+    let r = bench(&format!("{model}/fwd_b1"), opts, || {
+        rt.exec_host(&cfg, "fwd_b1", Some(&w), &args).unwrap();
+    });
+    push("fwd_b1", r);
+    let r = bench(&format!("{model}/head_b1"), opts, || {
+        rt.exec_host(&cfg, "head_b1", Some(&w), &[&crf, &cond, &t]).unwrap();
+    });
+    push("head_b1", r);
+    let r = bench(&format!("{model}/predict_plain_b1"), opts, || {
+        rt.exec_host(&cfg, "predict_plain_b1", None, &[&hist, &kw]).unwrap();
+    });
+    push("predict_plain_b1", r);
+    let r = bench(&format!("{model}/predict_dct_b1"), opts, || {
+        rt.exec_host(&cfg, "predict_dct_b1", None,
+                     &[&hist, &mask, &kw, &kw, &basis])
+            .unwrap();
+    });
+    push("predict_dct_b1", r);
+    let (fr, fi) = freqca::freq::fft::dft_matrices_tensor(cfg.grid);
+    let r = bench(&format!("{model}/predict_fft_b1"), opts, || {
+        rt.exec_host(&cfg, "predict_fft_b1", None,
+                     &[&hist, &mask, &kw, &kw, &fr, &fi])
+            .unwrap();
+    });
+    push("predict_fft_b1", r);
+    Ok(())
+}

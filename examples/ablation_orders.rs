@@ -1,0 +1,120 @@
+//! Ablations on decomposition and prediction order (paper Fig. 7,
+//! Fig. 10, Fig. C1).
+//!
+//! * decomposition: DCT vs FFT vs None, across activation intervals N —
+//!   the paper's claim: decomposition-less caching collapses at large N,
+//!   DCT is most robust on the FLUX family, FFT on the Qwen family.
+//! * prediction orders (low, high) in {0, 1, 2}^2 — the paper's optimum
+//!   is (0, 2): reuse the low band, Hermite-2 the high band.
+//!
+//!     cargo run --release --offline --example ablation_orders -- \
+//!         [--model flux-sim] [--orders] [--decomp]
+
+use anyhow::Result;
+
+use freqca::benchkit::Table;
+use freqca::harness::{self, EvalOpts, Session};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args
+        .iter()
+        .position(|a| a == "--model")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "flux-sim".into());
+    let all = !args
+        .iter()
+        .any(|a| a == "--orders" || a == "--decomp" || a == "--cutoff");
+    let has = |f: &str| all || args.iter().any(|a| a == f);
+
+    let opts = EvalOpts::default();
+    let s = Session::open(&opts.artifact_dir, &model)?;
+    eprintln!("[ablation] baseline on {model}...");
+    let base = harness::run_baseline(&s, &opts)?;
+    std::fs::create_dir_all("results")?;
+
+    if has("--decomp") {
+        // Fig. 10 / C1: decomposition x interval sweep.
+        let mut table = Table::new(&[
+            "decomp", "N", "FLOPs x", "ImageReward*", "PSNR", "SSIM",
+        ]);
+        for decomp in ["dct", "fft", "none"] {
+            for n in [3usize, 5, 7, 8, 10, 12] {
+                let desc = format!("freqca:n={n},d={decomp}");
+                let r = harness::eval_policy(&s, &base, &desc, &opts)?;
+                table.row(vec![
+                    decomp.into(),
+                    n.to_string(),
+                    format!("{:.2}", r.flops_speedup),
+                    format!("{:.3}", r.image_reward),
+                    format!("{:.2}", r.psnr),
+                    format!("{:.3}", r.ssim),
+                ]);
+                eprintln!("[decomp] {desc} done");
+            }
+        }
+        println!("\n=== Fig 10 / C1: decomposition ablation on {model} ===");
+        println!("{}", table.render());
+        table.save_csv(&format!("results/fig10_decomp_{model}.csv"))?;
+    }
+
+    if has("--orders") {
+        // Fig. 7 / C1: (low, high) prediction-order grid at a fixed
+        // aggressive interval.
+        let n = 7;
+        let mut table = Table::new(&[
+            "(low,high)", "ImageReward*", "PSNR", "SSIM", "bLPIPS",
+        ]);
+        let mut best = (String::new(), f64::MIN);
+        for low in 0..=2usize {
+            for high in 0..=2usize {
+                let desc = format!("freqca:n={n},low={low},o={high}");
+                let r = harness::eval_policy(&s, &base, &desc, &opts)?;
+                if r.image_reward > best.1 {
+                    best = (format!("({low},{high})"), r.image_reward);
+                }
+                table.row(vec![
+                    format!("({low},{high})"),
+                    format!("{:.3}", r.image_reward),
+                    format!("{:.2}", r.psnr),
+                    format!("{:.3}", r.ssim),
+                    format!("{:.3}", r.band_lpips),
+                ]);
+                eprintln!("[orders] ({low},{high}) done");
+            }
+        }
+        println!("\n=== Fig 7: prediction-order grid on {model} (N={n}) ===");
+        println!("{}", table.render());
+        println!(
+            "best combo: {} (paper's optimum is (0,2) — low reuse, high \
+             Hermite-2)",
+            best.0
+        );
+        table.save_csv(&format!("results/fig7_orders_{model}.csv"))?;
+    }
+
+    if has("--cutoff") {
+        // Low-band cutoff sweep (the per-model hyperparameter the paper
+        // tunes; DESIGN.md §3): cutoff 0 = DC-only low band, grid-1 =
+        // everything low (degenerates to reuse).
+        let n = 7;
+        let mut table =
+            Table::new(&["cutoff", "ImageReward*", "PSNR", "SSIM"]);
+        for cutoff in 0..s.cfg.grid {
+            let desc = format!("freqca:n={n},c={cutoff}");
+            let r = harness::eval_policy(&s, &base, &desc, &opts)?;
+            table.row(vec![
+                cutoff.to_string(),
+                format!("{:.3}", r.image_reward),
+                format!("{:.2}", r.psnr),
+                format!("{:.3}", r.ssim),
+            ]);
+            eprintln!("[cutoff] c={cutoff} done");
+        }
+        println!("\n=== cutoff sweep on {model} (N={n}, dct) ===");
+        println!("{}", table.render());
+        table.save_csv(&format!("results/cutoff_{model}.csv"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Qualitative editing grids (paper Fig. 5 / Fig. 6 / Fig. 9): run the
+//! editing sims on a handful of instructed edits under every method and
+//! dump reference / baseline / accelerated images as PPMs, plus an
+//! inpainting-style workload (Fig. 9's FLUX.1-Fill analogue: the edit
+//! family "resize/recolor in place" with the source as reference).
+//!
+//!     cargo run --release --offline --example edit_workload
+
+use anyhow::Result;
+
+use freqca::benchkit::Table;
+use freqca::harness::Session;
+use freqca::imaging;
+use freqca::quality;
+use freqca::sampler::SampleOpts;
+use freqca::util::Tensor;
+
+fn main() -> Result<()> {
+    std::fs::create_dir_all("results/edits")?;
+    for model in ["kontext-sim", "qwen-edit-sim"] {
+        run_model(model)?;
+    }
+    println!("\nwrote grids under results/edits/ (view any .ppm)");
+    Ok(())
+}
+
+fn run_model(model: &str) -> Result<()> {
+    let s = Session::open("artifacts", model)?;
+    let steps = 50;
+    let methods = [
+        ("baseline", "baseline"),
+        ("fora6", "fora:n=6"),
+        ("taylorseer6", "taylorseer:n=6,o=2"),
+        ("freqca6", "freqca:n=6"),
+        ("freqca10", "freqca:n=10"),
+    ];
+    let mut table = Table::new(&[
+        "prompt", "method", "latency s", "Q_SC*", "Q_PQ*", "Q_O*",
+    ]);
+    for idx in 0..3u64 {
+        let mut baseline: Option<Tensor> = None;
+        for (tag, desc) in methods {
+            let (r, p) = s.run_prompt(desc, idx, steps, &SampleOpts::default())?;
+            if tag == "baseline" {
+                // reference image + target render, once per prompt
+                let ref_img = Tensor::new(
+                    vec![s.cfg.latent, s.cfg.latent, s.cfg.channels],
+                    p.ref_img.clone().unwrap(),
+                )?;
+                imaging::write_ppm(
+                    &format!("results/edits/{model}_{idx}_source.ppm"),
+                    &ref_img,
+                    8,
+                )?;
+                imaging::write_ppm(
+                    &format!("results/edits/{model}_{idx}_target.ppm"),
+                    &p.target_render,
+                    8,
+                )?;
+                baseline = Some(r.latent.clone());
+            }
+            let base = baseline.as_ref().expect("baseline first");
+            let g = quality::gedit_scores(&r.latent, base, &p.target_render)?;
+            imaging::write_ppm(
+                &format!("results/edits/{model}_{idx}_{tag}.ppm"),
+                &r.latent,
+                8,
+            )?;
+            table.row(vec![
+                idx.to_string(),
+                tag.into(),
+                format!("{:.3}", r.wall_s),
+                format!("{:.2}", g.q_sc),
+                format!("{:.2}", g.q_pq),
+                format!("{:.2}", g.q_o),
+            ]);
+            eprintln!("[{model}] prompt {idx} {tag} done");
+        }
+    }
+    println!("\n=== {model} qualitative editing grid (Figs 5/6/9) ===");
+    println!("{}", table.render());
+    table.save_csv(&format!("results/edits/{model}_scores.csv"))?;
+    Ok(())
+}

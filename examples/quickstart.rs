@@ -1,0 +1,79 @@
+//! Quickstart: load the FLUX.1-dev analogue, generate the same prompt
+//! uncached and with FreqCa, and compare cost + fidelity.
+//!
+//!     cargo run --release --offline --example quickstart
+//!
+//! Requires `make artifacts` (the build-time python pass) to have run.
+
+use anyhow::Result;
+
+use freqca::harness::Session;
+use freqca::imaging;
+use freqca::quality;
+use freqca::sampler::SampleOpts;
+
+fn main() -> Result<()> {
+    let session = Session::open("artifacts", "flux-sim")?;
+    println!(
+        "loaded {}: {} params, {} tokens, decomp={}",
+        session.cfg.name,
+        session.cfg.param_count,
+        session.cfg.tokens,
+        session.cfg.decomp
+    );
+
+    let steps = 50;
+    let prompt_idx = 4;
+
+    println!("\n-- uncached baseline ({steps} steps) --");
+    let (base, prompt) =
+        session.run_prompt("baseline", prompt_idx, steps, &SampleOpts::default())?;
+    println!(
+        "latency {:.3}s, {:.2} GFLOPs",
+        base.wall_s,
+        base.flops / 1e9
+    );
+
+    println!("\n-- FreqCa N=7 (paper's ~5x operating point) --");
+    let (fast, _) =
+        session.run_prompt("freqca:n=7", prompt_idx, steps, &SampleOpts::default())?;
+    println!(
+        "latency {:.3}s ({:.2}x), {:.2} GFLOPs ({:.2}x), full steps {}/{}",
+        fast.wall_s,
+        base.wall_s / fast.wall_s,
+        fast.flops / 1e9,
+        fast.flops_speedup(&session.cfg),
+        fast.full_steps,
+        steps
+    );
+    println!(
+        "cache footprint: {} B (O(1): {} CRF snapshots of [{} x {}])",
+        fast.cache_peak_bytes,
+        session.cfg.k_hist,
+        session.cfg.tokens,
+        session.cfg.dim
+    );
+
+    println!("\n-- fidelity vs baseline --");
+    println!(
+        "proxy-ImageReward {:.3} (baseline scores {:.2})",
+        quality::proxy_image_reward(&fast.latent, &base.latent),
+        quality::BASELINE_IMAGE_REWARD
+    );
+    println!(
+        "PSNR {:.2} dB   SSIM {:.3}   band-LPIPS {:.3}",
+        imaging::psnr(&fast.latent.data, &base.latent.data),
+        imaging::ssim(&fast.latent, &base.latent)?,
+        imaging::band_lpips(&fast.latent, &base.latent)?
+    );
+    println!(
+        "cond-consistency (CLIP proxy) {:.2}",
+        quality::clip_proxy(&fast.latent, &prompt.target_render)
+    );
+
+    std::fs::create_dir_all("results")?;
+    imaging::write_ppm("results/quickstart_baseline.ppm", &base.latent, 8)?;
+    imaging::write_ppm("results/quickstart_freqca.ppm", &fast.latent, 8)?;
+    println!("\nwrote results/quickstart_{{baseline,freqca}}.ppm");
+    Ok(())
+}

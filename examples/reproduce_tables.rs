@@ -1,0 +1,346 @@
+//! Regenerate every quantitative exhibit of the paper's evaluation:
+//!
+//!   --table1   FLUX.1-dev comparison (Table 1) on flux-sim
+//!   --table2   Qwen-Image comparison (Table 2) on qwen-sim
+//!   --table3   FLUX.1-Kontext editing (Table 3) on kontext-sim
+//!   --table4   Qwen-Image-Edit editing (Table 4) on qwen-edit-sim
+//!   --table5   cache memory / MACs / latency (Table 5)
+//!   --fig4     layer-wise vs CRF prediction MSE (Fig. 4)
+//!   --fig8     quality vs speedup bubble data (Fig. 8)
+//!   --distilled  few-step rows (schnell / lightning analogues)
+//!   (no flag = everything)
+//!
+//! Prompt count defaults to 16 (FREQCA_PROMPTS=200 for paper scale); the
+//! absolute numbers live on a different substrate than the paper's A100s
+//! — the claims under reproduction are the *shapes* listed in DESIGN.md
+//! §5.  Every table is printed and saved under results/.
+
+use anyhow::Result;
+
+use freqca::analysis;
+use freqca::benchkit::Table;
+use freqca::cache;
+use freqca::harness::{self, EvalOpts, Session};
+use freqca::model::{flops, weights};
+use freqca::workload;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let all = args.is_empty();
+    let has = |f: &str| all || args.iter().any(|a| a == f);
+    std::fs::create_dir_all("results")?;
+
+    if has("--table1") {
+        generation_table(
+            "table1",
+            "flux-sim",
+            // method grid mirroring the paper's three speedup bands
+            &[
+                "fora:n=3", "teacache:l=0.6", "taylorseer:n=3,o=2",
+                "freqca:n=3",
+                "fora:n=5", "toca:n=8,r=0.75", "duca:n=8,r=0.7",
+                "teacache:l=1.0", "taylorseer:n=6,o=2", "freqca:n=7",
+                "fora:n=7", "toca:n=12,r=0.85", "duca:n=12,r=0.8",
+                "teacache:l=1.4", "taylorseer:n=9,o=2", "freqca:n=10",
+            ],
+        )?;
+    }
+    if has("--table2") {
+        generation_table(
+            "table2",
+            "qwen-sim",
+            &[
+                "fora:n=4", "toca:n=8,r=0.75", "duca:n=9,r=0.8",
+                "taylorseer:n=6,o=2", "freqca:n=6",
+                "fora:n=6", "toca:n=12,r=0.85", "duca:n=12,r=0.9",
+                "taylorseer:n=9,o=2", "freqca:n=10",
+            ],
+        )?;
+    }
+    if has("--table3") {
+        edit_table(
+            "table3",
+            "kontext-sim",
+            &[
+                "toca:n=8,r=0.7", "duca:n=8,r=0.6", "taylorseer:n=6,o=2",
+                "freqca:n=7",
+                "toca:n=12,r=0.75", "duca:n=12,r=0.7",
+                "taylorseer:n=9,o=2", "freqca:n=10",
+            ],
+        )?;
+    }
+    if has("--table4") {
+        edit_table(
+            "table4",
+            "qwen-edit-sim",
+            &[
+                "fora:n=5", "duca:n=7,r=0.95", "taylorseer:n=6,o=2",
+                "freqca:n=6",
+                "fora:n=7", "duca:n=10,r=0.95", "taylorseer:n=9,o=2",
+                "freqca:n=9",
+            ],
+        )?;
+    }
+    if has("--table5") {
+        table5_memory()?;
+    }
+    if has("--fig4") {
+        fig4_crf_mse()?;
+    }
+    if has("--fig8") {
+        fig8_bubble()?;
+    }
+    if has("--distilled") {
+        distilled_rows()?;
+    }
+    Ok(())
+}
+
+/// Tables 1 / 2: text-to-image generation comparison.
+fn generation_table(tag: &str, model: &str, methods: &[&str]) -> Result<()> {
+    let opts = EvalOpts::default();
+    let s = Session::open(&opts.artifact_dir, model)?;
+    eprintln!("[{tag}] baseline ({} prompts x {} steps)...", opts.prompts, opts.steps);
+    let base = harness::run_baseline(&s, &opts)?;
+
+    let mut table = Table::new(&[
+        "method", "latency s", "lat x", "FLOPs T", "FLOPs x",
+        "ImageReward*", "CLIP*", "PSNR", "SSIM", "bLPIPS", "cache B",
+    ]);
+    table.row(vec![
+        format!("[{model}]: {} steps", opts.steps),
+        format!("{:.3}", base.latency_s),
+        "1.00".into(),
+        format!("{:.4}", base.flops / 1e12),
+        "1.00".into(),
+        "1.000".into(), "36.00".into(), "inf".into(), "1.000".into(),
+        "0.000".into(),
+        "-".into(),
+    ]);
+    for frac in [0.6, 0.5, 0.2] {
+        let row = harness::eval_step_reduction(&s, &base, frac, &opts)?;
+        push_row(&mut table, &row);
+        eprintln!("[{tag}] {} done", row.method);
+    }
+    for m in methods {
+        let row = harness::eval_policy(&s, &base, m, &opts)?;
+        push_row(&mut table, &row);
+        eprintln!("[{tag}] {} done", row.method);
+    }
+    println!("\n=== {tag}: {model} generation (paper Table {}) ===",
+             &tag[5..]);
+    println!("{}", table.render());
+    println!("* proxy metrics — see DESIGN.md §1 for the substitution map");
+    table.save_csv(&format!("results/{tag}_{model}.csv"))?;
+    Ok(())
+}
+
+fn push_row(table: &mut Table, r: &harness::MethodRow) {
+    table.row(vec![
+        r.method.clone(),
+        format!("{:.3}", r.latency_s),
+        format!("{:.2}", r.latency_speedup),
+        format!("{:.4}", r.flops_t),
+        format!("{:.2}", r.flops_speedup),
+        format!("{:.3}", r.image_reward),
+        format!("{:.2}", r.clip),
+        format!("{:.2}", r.psnr),
+        format!("{:.3}", r.ssim),
+        format!("{:.3}", r.band_lpips),
+        r.cache_bytes.to_string(),
+    ]);
+}
+
+/// Tables 3 / 4: instruction editing with GEdit-style proxies.
+fn edit_table(tag: &str, model: &str, methods: &[&str]) -> Result<()> {
+    let opts = EvalOpts::default();
+    let s = Session::open(&opts.artifact_dir, model)?;
+    eprintln!("[{tag}] baseline ({} edits x {} steps)...", opts.prompts, opts.steps);
+    let base = harness::run_baseline(&s, &opts)?;
+    let mut table = Table::new(&[
+        "method", "latency s", "lat x", "FLOPs T", "FLOPs x",
+        "Q_SC*", "Q_PQ*", "Q_O*",
+    ]);
+    let base_scores = harness::eval_edit_policy(&s, &base, "baseline", &opts)?;
+    table.row(vec![
+        format!("[{model}]: {} steps", opts.steps),
+        format!("{:.3}", base.latency_s),
+        "1.00".into(),
+        format!("{:.4}", base.flops / 1e12),
+        "1.00".into(),
+        format!("{:.3}", base_scores.q_sc),
+        format!("{:.3}", base_scores.q_pq),
+        format!("{:.3}", base_scores.q_o),
+    ]);
+    for m in methods {
+        let r = harness::eval_edit_policy(&s, &base, m, &opts)?;
+        table.row(vec![
+            r.method.clone(),
+            format!("{:.3}", r.latency_s),
+            format!("{:.2}", r.latency_speedup),
+            format!("{:.4}", r.flops_t),
+            format!("{:.2}", r.flops_speedup),
+            format!("{:.3}", r.q_sc),
+            format!("{:.3}", r.q_pq),
+            format!("{:.3}", r.q_o),
+        ]);
+        eprintln!("[{tag}] {} done", r.method);
+    }
+    println!("\n=== {tag}: {model} editing (paper Table {}) ===", &tag[5..]);
+    println!("{}", table.render());
+    println!("* GEdit proxies — see DESIGN.md §1");
+    table.save_csv(&format!("results/{tag}_{model}.csv"))?;
+    Ok(())
+}
+
+/// Table 5: cache memory / MACs / latency / quality on flux-sim.
+fn table5_memory() -> Result<()> {
+    let opts = EvalOpts::default();
+    let s = Session::open(&opts.artifact_dir, "flux-sim")?;
+    let base = harness::run_baseline(&s, &opts)?;
+    let units = harness::cache_memory_units(&s.cfg, 2);
+    let mut table = Table::new(&[
+        "method", "cache bytes (measured)", "cache bytes (model)",
+        "MACs T", "latency s", "ImageReward*",
+    ]);
+    table.row(vec![
+        format!("[flux-sim]: {} steps", opts.steps),
+        "0".into(),
+        "0".into(),
+        format!("{:.4}", flops::to_macs(base.flops) / 1e12),
+        format!("{:.3}", base.latency_s),
+        "1.000".into(),
+    ]);
+    for (m, model_key) in [
+        ("toca:n=8,r=0.75", "layerwise"),
+        ("taylorseer:n=6,o=2", "layerwise"),
+        ("teacache:l=1.0", "teacache"),
+        ("freqca:n=7", "freqca"),
+    ] {
+        let row = harness::eval_policy(&s, &base, m, &opts)?;
+        table.row(vec![
+            row.method.clone(),
+            row.cache_bytes.to_string(),
+            units[model_key].to_string(),
+            format!("{:.4}", flops::to_macs(row.flops_t * 1e12) / 1e12),
+            format!("{:.3}", row.latency_s),
+            format!("{:.3}", row.image_reward),
+        ]);
+        eprintln!("[table5] {} done", row.method);
+    }
+    println!("\n=== table5: cache memory / compute (paper Table 5) ===");
+    println!("{}", table.render());
+    let ratio = cache::memory_ratio(s.cfg.depth, 2);
+    println!(
+        "paper §4.4.1 memory model at L={} m=2: K_freqca=4, K_layer={}, R={:.2}% \
+         (paper reports 1.17% at L=57)",
+        s.cfg.depth,
+        2 * 3 * s.cfg.depth,
+        ratio * 100.0
+    );
+    table.save_csv("results/table5_memory.csv")?;
+    Ok(())
+}
+
+/// Fig. 4: prediction MSE of layer-wise vs CRF caching per timestep.
+fn fig4_crf_mse() -> Result<()> {
+    let s = Session::open("artifacts", "flux-sim")?;
+    let host = weights::load_weights("artifacts", &s.cfg.name, s.cfg.param_count)?;
+    let wbuf = s.rt.weights_buffer(&s.cfg, &host)?;
+    let steps = 50;
+    let mut csv = String::from("prompt,step,mse_layerwise,mse_crf\n");
+    let mut ratios = Vec::new();
+    for idx in 0..4u64 {
+        let p = workload::build_prompt(&s.cfg, idx)?;
+        let run = analysis::trace_run(
+            &s.rt, &s.cfg, &wbuf, &p.cond, p.ref_img.as_deref(), steps, idx,
+        )?;
+        for (step, lw_mse, crf_mse) in
+            analysis::fig4_pred_mse(&s.cfg, &run, 4)?
+        {
+            csv.push_str(&format!("{idx},{step},{lw_mse:.6},{crf_mse:.6}\n"));
+            if lw_mse > 0.0 {
+                ratios.push(crf_mse / lw_mse);
+            }
+        }
+    }
+    let mean_ratio = freqca::util::stats::mean(&ratios);
+    println!("\n=== fig4: CRF vs layer-wise prediction MSE ===");
+    println!(
+        "mean MSE ratio (CRF / layer-wise) = {:.3} (paper: ~1.04, i.e. \
+         within ~4%)",
+        mean_ratio
+    );
+    std::fs::write("results/fig4_mse.csv", csv)?;
+    println!("wrote results/fig4_mse.csv");
+    Ok(())
+}
+
+/// Fig. 8: ImageReward vs speedup with cache-size bubbles.
+fn fig8_bubble() -> Result<()> {
+    let opts = EvalOpts::default();
+    let s = Session::open(&opts.artifact_dir, "flux-sim")?;
+    let base = harness::run_baseline(&s, &opts)?;
+    let mut csv = String::from("method,flops_speedup,image_reward,cache_bytes\n");
+    for m in [
+        "fora:n=3", "fora:n=5", "fora:n=7",
+        "taylorseer:n=3,o=2", "taylorseer:n=6,o=2", "taylorseer:n=9,o=2",
+        "teacache:l=0.6", "teacache:l=1.0", "teacache:l=1.4",
+        "freqca:n=3", "freqca:n=7", "freqca:n=10",
+    ] {
+        let r = harness::eval_policy(&s, &base, m, &opts)?;
+        // layer-wise baselines carry 2(m+1)L-unit caches; FreqCa carries 4
+        let bytes = if m.starts_with("taylorseer") {
+            harness::cache_memory_units(&s.cfg, 2)["layerwise"]
+        } else {
+            r.cache_bytes
+        };
+        csv.push_str(&format!(
+            "{},{:.3},{:.3},{}\n",
+            r.method, r.flops_speedup, r.image_reward, bytes
+        ));
+        eprintln!("[fig8] {} done", r.method);
+    }
+    std::fs::write("results/fig8_bubble.csv", &csv)?;
+    println!("\n=== fig8: quality vs speedup bubble data ===\n{csv}");
+    Ok(())
+}
+
+/// Distilled-model rows (FLUX.1-schnell / Qwen-Lightning analogues):
+/// the sims run at 4 / 8 sampling steps.
+fn distilled_rows() -> Result<()> {
+    for (model, steps, methods) in [
+        ("flux-sim", 4usize, vec!["freqca:n=3"]),
+        ("qwen-sim", 8, vec!["freqca:n=2", "freqca:n=3", "freqca:n=4"]),
+    ] {
+        let opts = EvalOpts { steps, ..EvalOpts::default() };
+        let s = Session::open(&opts.artifact_dir, model)?;
+        let base = harness::run_baseline(&s, &opts)?;
+        let mut table = Table::new(&[
+            "method", "latency s", "lat x", "FLOPs x", "ImageReward*",
+            "PSNR", "SSIM",
+        ]);
+        table.row(vec![
+            format!("[{model}-distilled]: {steps} steps"),
+            format!("{:.3}", base.latency_s),
+            "1.00".into(), "1.00".into(), "1.000".into(), "inf".into(),
+            "1.000".into(),
+        ]);
+        for m in &methods {
+            let r = harness::eval_policy(&s, &base, m, &opts)?;
+            table.row(vec![
+                r.method.clone(),
+                format!("{:.3}", r.latency_s),
+                format!("{:.2}", r.latency_speedup),
+                format!("{:.2}", r.flops_speedup),
+                format!("{:.3}", r.image_reward),
+                format!("{:.2}", r.psnr),
+                format!("{:.3}", r.ssim),
+            ]);
+        }
+        println!("\n=== distilled rows: {model} at {steps} steps ===");
+        println!("{}", table.render());
+        table.save_csv(&format!("results/distilled_{model}.csv"))?;
+    }
+    Ok(())
+}

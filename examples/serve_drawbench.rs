@@ -1,0 +1,135 @@
+//! End-to-end serving driver (the repo's E2E validation, EXPERIMENTS.md
+//! §E2E): starts the real TCP server in-process, replays a DrawBench-like
+//! trace of generation requests from concurrent client connections
+//! through router -> dynamic batcher -> engine -> PJRT, and reports
+//! latency percentiles + throughput per policy.
+//!
+//!     cargo run --release --offline --example serve_drawbench
+//!     FREQCA_PROMPTS=200 cargo run ... (paper-scale prompt count)
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use freqca::benchkit::Table;
+use freqca::coordinator::Request;
+use freqca::server::{client::Client, serve, ServeOpts};
+use freqca::util::stats::Summary;
+use freqca::workload;
+
+const ADDR: &str = "127.0.0.1:7464";
+const MODEL: &str = "flux-sim";
+
+fn main() -> Result<()> {
+    let n_requests: usize = std::env::var("FREQCA_PROMPTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    let steps = 50;
+
+    // Boot the real server (engine thread + acceptor) in-process.
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_stop = stop.clone();
+    std::thread::spawn(move || {
+        let opts = ServeOpts {
+            addr: ADDR.into(),
+            batch_wait_ms: 30,
+            queue_capacity: 512,
+            warmup: vec![MODEL.to_string()],
+        };
+        if let Err(e) = serve("artifacts", opts, server_stop) {
+            eprintln!("server error: {e:#}");
+        }
+    });
+    wait_up();
+
+    let cfg = freqca::model::ModelConfig::load("artifacts", MODEL)?;
+    let mut table = Table::new(&[
+        "policy", "clients", "throughput req/s", "p50 s", "p90 s", "p99 s",
+        "mean queue s", "batched",
+    ]);
+
+    for (policy, clients) in [
+        ("baseline", 4),
+        ("freqca:n=7", 4),
+        ("freqca:n=7", 1),
+        ("taylorseer:n=6,o=2", 4),
+        ("fora:n=3", 4),
+    ] {
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        let per_client = n_requests / clients;
+        for c in 0..clients {
+            let policy = policy.to_string();
+            let cond_dim = cfg.cond_dim;
+            handles.push(std::thread::spawn(move || -> Result<Vec<(f64, f64)>> {
+                let mut cli = Client::connect(ADDR)?;
+                let mut out = Vec::new();
+                for i in 0..per_client {
+                    let idx = (c * per_client + i) as u64;
+                    let u = workload::prompt_unit(idx);
+                    let req = Request {
+                        id: idx,
+                        model: MODEL.into(),
+                        policy: policy.clone(),
+                        seed: idx,
+                        n_steps: steps,
+                        cond: workload::cond_vector(&u, cond_dim),
+                        ref_img: None,
+                        return_latent: false,
+                    };
+                    let t = Instant::now();
+                    let resp = cli.generate(&req)?;
+                    anyhow::ensure!(resp.ok, "request failed: {:?}", resp.error);
+                    out.push((t.elapsed().as_secs_f64(), resp.queue_s));
+                }
+                Ok(out)
+            }));
+        }
+        let mut e2e = Vec::new();
+        let mut queue = Vec::new();
+        for h in handles {
+            for (l, q) in h.join().expect("client thread")? {
+                e2e.push(l);
+                queue.push(q);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = Summary::of(&e2e);
+        let total = clients * per_client;
+        table.row(vec![
+            policy.into(),
+            clients.to_string(),
+            format!("{:.3}", total as f64 / wall),
+            format!("{:.3}", s.p50),
+            format!("{:.3}", s.p90),
+            format!("{:.3}", s.p99),
+            format!("{:.3}", freqca::util::stats::mean(&queue)),
+            format!("{}", clients > 1),
+        ]);
+        eprintln!("[serve_drawbench] {policy} x{clients}: {total} reqs in {wall:.1}s");
+    }
+
+    println!("\n=== serving benchmark ({MODEL}, {steps} steps, {n_requests} requests) ===");
+    println!("{}", table.render());
+    std::fs::create_dir_all("results")?;
+    table.save_csv("results/serve_drawbench.csv")?;
+
+    // Server-side metrics snapshot.
+    let mut cli = Client::connect(ADDR)?;
+    println!("server metrics: {}", cli.metrics()?);
+    stop.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+fn wait_up() {
+    for _ in 0..300 {
+        if Client::connect(ADDR).map(|mut c| c.ping().unwrap_or(false)).unwrap_or(false) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("server did not come up");
+}

@@ -1,0 +1,214 @@
+"""AOT export: lower every (config, role, batch) jax function to HLO text.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model config (K = 3 cached states, paper §4.4.1):
+
+  fwd_b{B}.hlo.txt           (params, x, cond, t[, ref]) -> (v, crf)
+  head_b{B}.hlo.txt          (params, crf, cond, t)      -> (v,)
+  predict_dct_b{B}.hlo.txt   (hist, mask, lw, hw)        -> (crf_hat,)
+  predict_fft_b{B}.hlo.txt   (hist, mask, lw, hw)        -> (crf_hat,)
+  predict_plain_b{B}.hlo.txt (hist, w)                   -> (crf_hat,)
+  fwd_trace_b1.hlo.txt       analysis only: (..., layers [L+1,B,T,D])
+
+plus meta_{cfg}.json describing shapes so the Rust artifact registry can
+type-check its literals before execution.
+"""
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import CONFIGS, ModelConfig
+
+K_HIST = 3  # cached history depth (second-order prediction, paper §4.4.1)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs(cfg: ModelConfig):
+    """(name, fn, example_args) for every artifact of one config."""
+    p = M.param_count(cfg)
+    s, c, dc = cfg.latent, cfg.channels, cfg.cond_dim
+    t_all, d, g = cfg.tokens, cfg.dim, cfg.grid
+    specs = []
+    for b in cfg.batch_sizes:
+        if cfg.is_edit:
+            fwd = lambda pr, x, cd, t, r: M.dit_forward(
+                cfg, pr, x, cd, t, ref_img=r)
+            fwd_args = [f32(p), f32(b, s, s, c), f32(b, dc), f32(b),
+                        f32(b, s, s, c)]
+        else:
+            fwd = lambda pr, x, cd, t: M.dit_forward(cfg, pr, x, cd, t)
+            fwd_args = [f32(p), f32(b, s, s, c), f32(b, dc), f32(b)]
+        specs.append((f"fwd_b{b}", fwd, fwd_args))
+        specs.append((
+            f"head_b{b}",
+            lambda pr, z, cd, t: M.head_only(cfg, pr, z, cd, t),
+            [f32(p), f32(b, t_all, d), f32(b, dc), f32(b)],
+        ))
+        hist = f32(b, K_HIST, t_all, d)
+        kw = f32(K_HIST)
+        specs.append((
+            f"predict_dct_b{b}",
+            lambda h, m, lw, hw, basis: M.predict_dct(cfg, h, m, lw, hw,
+                                                      basis),
+            [hist, f32(g, g), kw, kw, f32(g, g)],
+        ))
+        specs.append((
+            f"predict_fft_b{b}",
+            lambda h, m, lw, hw, fr, fi: M.predict_fft(cfg, h, m, lw, hw,
+                                                       fr, fi),
+            [hist, f32(g, g), kw, kw, f32(g, g), f32(g, g)],
+        ))
+        specs.append((
+            f"predict_plain_b{b}",
+            lambda h, w: M.predict_plain(cfg, h, w),
+            [hist, kw],
+        ))
+    # analysis artifact (layer trace) at batch 1
+    if cfg.name in ("tiny", "flux-sim"):
+        if cfg.is_edit:
+            tr = lambda pr, x, cd, t, r: M.dit_forward_trace(
+                cfg, pr, x, cd, t, ref_img=r)
+            tr_args = [f32(p), f32(1, s, s, c), f32(1, dc), f32(1),
+                       f32(1, s, s, c)]
+        else:
+            tr = lambda pr, x, cd, t: M.dit_forward_trace(cfg, pr, x, cd, t)
+            tr_args = [f32(p), f32(1, s, s, c), f32(1, dc), f32(1)]
+        specs.append(("fwd_trace_b1", tr, tr_args))
+    return specs
+
+
+def export_config(cfg: ModelConfig, out_dir: str, force: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    meta = {
+        "name": cfg.name,
+        "latent": cfg.latent,
+        "channels": cfg.channels,
+        "patch": cfg.patch,
+        "grid": cfg.grid,
+        "tokens": cfg.tokens,
+        "dim": cfg.dim,
+        "depth": cfg.depth,
+        "heads": cfg.heads,
+        "cond_dim": cfg.cond_dim,
+        "mlp_ratio": cfg.mlp_ratio,
+        "is_edit": cfg.is_edit,
+        "decomp": cfg.decomp,
+        "param_count": M.param_count(cfg),
+        "k_hist": K_HIST,
+        "batch_sizes": list(cfg.batch_sizes),
+        "artifacts": {},
+    }
+    for name, fn, args in artifact_specs(cfg):
+        path = os.path.join(out_dir, f"{cfg.name}_{name}.hlo.txt")
+        meta["artifacts"][name] = {
+            "file": os.path.basename(path),
+            "inputs": [list(a.shape) for a in args],
+        }
+        if os.path.exists(path) and not force:
+            print(f"  [skip] {path}")
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [ok] {path} ({len(text) / 1e6:.2f} MB)", flush=True)
+    with open(os.path.join(out_dir, f"meta_{cfg.name}.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def export_fixtures(out_dir: str, seed: int = 777):
+    """Cross-language parity fixtures for the tiny model.
+
+    Dumps known inputs + jax-computed outputs; the Rust side re-executes
+    the artifacts on the same inputs and asserts equality
+    (rust/tests/integration_parity.rs).  This is the contract test that
+    caught the xla_extension 0.5.1 constant-operand Pallas miscompile.
+    """
+    import numpy as np
+
+    from .kernels import ref
+
+    cfg = CONFIGS["tiny"]
+    fdir = os.path.join(out_dir, "fixtures")
+    os.makedirs(fdir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    flat = np.fromfile(
+        os.path.join(out_dir, "weights_tiny.bin"), dtype=np.float32
+    )
+    x = rng.normal(size=(1, cfg.latent, cfg.latent, cfg.channels)).astype(
+        np.float32
+    )
+    cond = rng.normal(size=(1, cfg.cond_dim)).astype(np.float32)
+    t = np.asarray([0.63], np.float32)
+    v, crf = M.dit_forward(
+        cfg, jnp.asarray(flat), jnp.asarray(x), jnp.asarray(cond),
+        jnp.asarray(t)
+    )
+    hist = rng.normal(size=(1, K_HIST, cfg.tokens, cfg.dim)).astype(
+        np.float32
+    )
+    mask = (rng.random((cfg.grid, cfg.grid)) < 0.5).astype(np.float32)
+    lw = np.asarray([0.2, 0.3, 0.5], np.float32)
+    hw = np.asarray([1.5, -2.0, 1.5], np.float32)
+    basis = np.asarray(ref.dct_matrix(cfg.grid), np.float32)
+    pd = M.predict_dct(
+        cfg, jnp.asarray(hist), jnp.asarray(mask), jnp.asarray(lw),
+        jnp.asarray(hw), jnp.asarray(basis)
+    )[0]
+    pf = M.predict_fft(
+        cfg, jnp.asarray(hist), jnp.asarray(mask), jnp.asarray(lw),
+        jnp.asarray(hw)
+    )[0]
+    import numpy as _np
+
+    for name, arr in [
+        ("x", x), ("cond", cond), ("t", t),
+        ("v", _np.asarray(v)), ("crf", _np.asarray(crf)),
+        ("hist", hist), ("mask", mask), ("lw", lw), ("hw", hw),
+        ("basis", basis),
+        ("pred_dct", _np.asarray(pd)), ("pred_fft", _np.asarray(pf)),
+    ]:
+        arr.astype(_np.float32).tofile(
+            os.path.join(fdir, f"tiny_{name}.bin")
+        )
+    print(f"  [ok] fixtures -> {fdir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="all")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    names = list(CONFIGS) if args.config == "all" else [args.config]
+    for name in names:
+        print(f"[aot] {name}")
+        export_config(CONFIGS[name], args.out, force=args.force)
+    if "tiny" in names:
+        export_fixtures(args.out)
+
+
+if __name__ == "__main__":
+    main()

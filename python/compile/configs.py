@@ -1,0 +1,74 @@
+"""Model configurations for the FreqCa simulation models.
+
+Each config is the small-scale analogue of one of the paper's testbeds
+(DESIGN.md §1). `grid` is the token grid side (tokens = grid**2 for
+generation, 2*grid**2 for editing models, which concatenate reference
+tokens Kontext-style). `decomp` records the paper's per-model frequency
+decomposition choice (App. B.3).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    latent: int          # latent image side (latent x latent x channels)
+    channels: int        # latent channels
+    patch: int           # patch size (token grid = latent // patch)
+    dim: int             # model width
+    depth: int           # number of DiT blocks
+    heads: int           # attention heads
+    cond_dim: int        # conditioning ("prompt embedding") dimension
+    mlp_ratio: int = 4
+    is_edit: bool = False  # editing model: reference tokens concatenated
+    decomp: str = "dct"    # paper's decomposition choice for this model
+    train_steps: int = 300
+    batch_sizes: tuple = (1, 4)
+
+    @property
+    def grid(self) -> int:
+        return self.latent // self.patch
+
+    @property
+    def tokens(self) -> int:
+        t = self.grid * self.grid
+        return 2 * t if self.is_edit else t
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+
+CONFIGS = {
+    # test-scale model: fast to train/lower, used by pytest + cargo tests
+    "tiny": ModelConfig(
+        name="tiny", latent=8, channels=4, patch=2, dim=64, depth=2,
+        heads=2, cond_dim=16, decomp="dct", train_steps=120,
+        batch_sizes=(1, 2),
+    ),
+    # FLUX.1-dev analogue (paper: DCT decomposition, A100)
+    "flux-sim": ModelConfig(
+        name="flux-sim", latent=16, channels=4, patch=2, dim=192, depth=6,
+        heads=4, cond_dim=32, decomp="dct", train_steps=160,
+        batch_sizes=(1, 4),
+    ),
+    # Qwen-Image analogue (paper: FFT decomposition, H20, higher res)
+    "qwen-sim": ModelConfig(
+        name="qwen-sim", latent=24, channels=4, patch=2, dim=224, depth=8,
+        heads=4, cond_dim=32, decomp="fft", train_steps=100,
+        batch_sizes=(1,),
+    ),
+    # FLUX.1-Kontext-dev analogue: in-context reference tokens
+    "kontext-sim": ModelConfig(
+        name="kontext-sim", latent=16, channels=4, patch=2, dim=192, depth=6,
+        heads=4, cond_dim=32, is_edit=True, decomp="dct", train_steps=100,
+        batch_sizes=(1,),
+    ),
+    # Qwen-Image-Edit analogue
+    "qwen-edit-sim": ModelConfig(
+        name="qwen-edit-sim", latent=16, channels=4, patch=2, dim=224,
+        depth=8, heads=4, cond_dim=32, is_edit=True, decomp="fft",
+        train_steps=80, batch_sizes=(1,),
+    ),
+}

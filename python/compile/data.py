@@ -1,0 +1,131 @@
+"""Procedural shapes dataset — the DrawBench / GEdit stand-in.
+
+Each "prompt" is a conditioning vector that *deterministically* encodes a
+scene (shape type, position, size, color, background, orientation); the
+renderer draws the anti-aliased scene on the latent grid.  This gives the
+serving stack everything the paper's benchmarks provide:
+
+- 200 seeded "DrawBench prompts" = 200 conditioning vectors;
+- an analytic ground-truth image per prompt (render(cond)), which powers
+  the semantic-consistency proxy (Q_SC) used for the GEdit tables;
+- editing pairs for the Kontext/Qwen-Edit sims: a source scene plus an
+  edit instruction (delta on the scene parameters) and its target render.
+
+Values are in [-1, 1]; channel 3 is a coverage/mask channel so that the
+latent has the 4-channel shape of the paper's VAEs.
+"""
+
+import numpy as np
+
+COND_SCENE_DIMS = 12  # dims of the cond vector that encode the scene
+
+
+def _aa_mask(side, fx, fy, kind, cx, cy, r, angle):
+    """Anti-aliased coverage in [0,1] for one shape on a side x side grid."""
+    ys, xs = np.meshgrid(np.arange(side) + 0.5, np.arange(side) + 0.5,
+                         indexing="ij")
+    xs, ys = xs / side, ys / side
+    ca, sa = np.cos(angle), np.sin(angle)
+    xr = ca * (xs - cx) - sa * (ys - cy)
+    yr = sa * (xs - cx) + ca * (ys - cy)
+    soft = 1.5 / side
+    if kind == 0:      # disc
+        d = np.sqrt(xr ** 2 + yr ** 2) - r
+    elif kind == 1:    # square
+        d = np.maximum(np.abs(xr), np.abs(yr)) - r
+    else:              # horizontal bar
+        d = np.maximum(np.abs(xr) - 2.5 * r, np.abs(yr) - 0.5 * r)
+    return np.clip(0.5 - d / soft, 0.0, 1.0)
+
+
+def scene_from_unit(u):
+    """Map a unit vector u in [0,1]^COND_SCENE_DIMS to scene parameters."""
+    return {
+        "kind": int(u[0] * 3) % 3,
+        "cx": 0.25 + 0.5 * u[1],
+        "cy": 0.25 + 0.5 * u[2],
+        "r": 0.10 + 0.22 * u[3],
+        "fg": 2.0 * u[4:7] - 1.0,
+        "bg": 0.6 * (2.0 * u[7:10] - 1.0),
+        "angle": np.pi * u[10],
+        "grad": 2.0 * u[11] - 1.0,
+    }
+
+
+def render(side, scene):
+    """Render a scene dict to a [side, side, 4] latent in [-1, 1]."""
+    m = _aa_mask(side, None, None, scene["kind"], scene["cx"], scene["cy"],
+                 scene["r"], scene["angle"])
+    ys = (np.arange(side) + 0.5) / side
+    grad = scene["grad"] * (ys - 0.5)[:, None]
+    img = np.empty((side, side, 4), np.float32)
+    for ch in range(3):
+        img[:, :, ch] = scene["bg"][ch] + grad \
+            + m * (scene["fg"][ch] - scene["bg"][ch])
+    img[:, :, 3] = 2.0 * m - 1.0
+    return np.clip(img, -1.0, 1.0)
+
+
+def cond_vector(u, cond_dim, rng=None):
+    """Embed the unit scene vector into the model's cond space.
+
+    Scene dims are mapped to [-1, 1]; remaining dims carry seeded jitter
+    (standing in for the uninformative directions of a text embedding).
+    """
+    c = np.zeros(cond_dim, np.float32)
+    c[:COND_SCENE_DIMS] = 2.0 * u - 1.0
+    if rng is not None and cond_dim > COND_SCENE_DIMS:
+        c[COND_SCENE_DIMS:] = 0.1 * rng.standard_normal(
+            cond_dim - COND_SCENE_DIMS)
+    return c
+
+
+def sample_batch(rng, batch, side, cond_dim):
+    """Training batch: (x0 [B,S,S,4], cond [B,Dc])."""
+    x0 = np.empty((batch, side, side, 4), np.float32)
+    cond = np.empty((batch, cond_dim), np.float32)
+    for i in range(batch):
+        u = rng.random(COND_SCENE_DIMS)
+        x0[i] = render(side, scene_from_unit(u))
+        cond[i] = cond_vector(u, cond_dim, rng)
+    return x0, cond
+
+
+def sample_edit_batch(rng, batch, side, cond_dim):
+    """Editing batch: (target, cond, reference).
+
+    The reference is the source scene; the cond vector encodes the *edited*
+    scene (recolor / move / grow, Kontext-style instruction embedding);
+    the target is the edited render.
+    """
+    tgt = np.empty((batch, side, side, 4), np.float32)
+    src = np.empty((batch, side, side, 4), np.float32)
+    cond = np.empty((batch, cond_dim), np.float32)
+    for i in range(batch):
+        u = rng.random(COND_SCENE_DIMS)
+        src[i] = render(side, scene_from_unit(u))
+        ue = apply_edit(u, rng)
+        tgt[i] = render(side, scene_from_unit(ue))
+        cond[i] = cond_vector(ue, cond_dim, rng)
+    return tgt, cond, src
+
+
+def apply_edit(u, rng):
+    """One of three edit families: recolor, translate, resize."""
+    ue = u.copy()
+    op = rng.integers(3)
+    if op == 0:
+        ue[4:7] = rng.random(3)
+    elif op == 1:
+        ue[1:3] = np.clip(u[1:3] + 0.35 * (rng.random(2) - 0.5), 0, 1)
+    else:
+        ue[3] = np.clip(u[3] + 0.4 * (rng.random() - 0.5), 0, 1)
+    return ue
+
+
+def drawbench_prompts(n, cond_dim, seed=2024):
+    """The 200 seeded 'DrawBench' prompts (unit vecs + cond embeddings)."""
+    rng = np.random.default_rng(seed)
+    us = rng.random((n, COND_SCENE_DIMS))
+    conds = np.stack([cond_vector(u, cond_dim, rng) for u in us])
+    return us, conds

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: multi-head attention for the DiT block.
+
+Hardware adaptation (DESIGN.md §4): the paper's testbeds use CUDA flash
+attention (warp-level WMMA over shared memory).  On a TPU-shaped target the
+same insight — never materialise the full [T, T] score matrix in HBM — is
+expressed as a VMEM-tiled kernel: the grid iterates over (batch*heads,
+query tiles); each program holds one [Tq_blk, Dh] query tile plus the full
+[T, Dh] K/V panel in VMEM (token counts here are <= 288, so K/V panels of
+at most 288 x 64 x 4 B = 72 KiB fit comfortably inside a 16 MiB VMEM
+budget together with the f32 score tile), and accumulates the softmax in
+f32 on the MXU.
+
+The kernel MUST be lowered with interpret=True: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One program = one (batch*head, query-tile) cell.
+
+    q_ref: [1, Tq_blk, Dh]; k_ref/v_ref: [1, T, Dh]; o_ref: [1, Tq_blk, Dh].
+    """
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    # MXU matmul: [Tq_blk, T] score tile, f32 accumulation.
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def attention(q, k, v, *, q_block: int = 64, interpret: bool = True):
+    """Pallas multi-head attention.
+
+    q, k, v: [B, H, T, Dh] -> [B, H, Tq, Dh].  The (B, H) axes are folded
+    into the grid's first dimension; queries are tiled by `q_block`.
+    """
+    b, h, tq, dh = q.shape
+    t = k.shape[2]
+    scale = 1.0 / np.sqrt(dh)
+    qf = q.reshape(b * h, tq, dh)
+    kf = k.reshape(b * h, t, dh)
+    vf = v.reshape(b * h, t, dh)
+    qb = min(q_block, tq)
+    while tq % qb != 0:  # shrink until it divides the query count
+        qb -= 1
+    grid = (b * h, tq // qb)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, tq, dh), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, tq, dh)

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: 2-D DCT-II / DCT-III over the token grid.
+
+Hardware adaptation (DESIGN.md §4): a GPU implementation would use a
+butterfly FFT in shared memory; on an MXU-shaped target a dense basis
+matmul `C @ X @ C^T` is strictly better for grid sides <= 32 (the systolic
+array does an [G,G]x[G,G] matmul per cycle-burst, while a butterfly
+serialises into vector ops).  The grid iterates over channel tiles so the
+VMEM working set per program is 2 basis panels + one [G, G, Dblk] tile.
+
+All kernels are lowered with interpret=True (CPU PJRT; see attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dct2_kernel(x_ref, c_ref, o_ref, *, inverse):
+    """One program = one channel tile: o = C X C^T (or C^T X C)."""
+    x = x_ref[...].astype(jnp.float32)      # [G, G, Dblk]
+    c = c_ref[...].astype(jnp.float32)      # [G, G]
+    ct = c.T
+    a, b = (ct, c) if inverse else (c, ct)
+    # rows: y[u, g, d] = sum_g' a[u, g'] x[g', g, d]
+    y = jax.lax.dot_general(
+        a, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # cols: o[u, v, d] = sum_w y[u, w, d] b[w, v]  (contract middle axis)
+    o = jax.lax.dot_general(
+        y, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # dot_general output is [u, d, v] — restore [u, v, d]
+    o_ref[...] = jnp.transpose(o, (0, 2, 1)).astype(o_ref.dtype)
+
+
+def _dct2_call(x, basis, *, inverse, d_block, interpret):
+    g, g2, d = x.shape
+    assert g == g2, "token grid must be square"
+    db = min(d_block, d)
+    while d % db != 0:
+        db -= 1
+    return pl.pallas_call(
+        functools.partial(_dct2_kernel, inverse=inverse),
+        grid=(d // db,),
+        in_specs=[
+            pl.BlockSpec((g, g, db), lambda i: (0, 0, i)),
+            pl.BlockSpec((g, g), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, g, db), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((g, g, d), x.dtype),
+        interpret=interpret,
+    )(x, basis)
+
+
+def dct2(x, basis, *, d_block: int = 128, interpret: bool = True):
+    """Forward 2-D DCT-II of x: [G, G, D] with orthonormal basis [G, G]."""
+    return _dct2_call(x, basis, inverse=False, d_block=d_block,
+                      interpret=interpret)
+
+
+def idct2(y, basis, *, d_block: int = 128, interpret: bool = True):
+    """Inverse 2-D DCT (DCT-III) of y: [G, G, D]."""
+    return _dct2_call(y, basis, inverse=True, d_block=d_block,
+                      interpret=interpret)

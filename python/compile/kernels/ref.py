@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+pytest checks each kernel against these under hypothesis-driven shape and
+value sweeps; the L2 model can also be built entirely on these references
+(`model.py` takes `use_pallas=False`) which is how the lowering tests
+isolate kernel bugs from model bugs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, scale=None):
+    """Multi-head attention oracle.
+
+    q,k,v: [B, H, T, Dh] (q may have a different T than k/v).
+    Returns [B, H, Tq, Dh].
+    """
+    dh = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def dct_matrix(n: int, dtype=jnp.float32):
+    """Orthonormal DCT-II basis matrix C (n x n); y = C @ x is the DCT.
+
+    C[k, i] = a_k * cos(pi * (2i + 1) * k / (2n)),
+    a_0 = sqrt(1/n), a_k = sqrt(2/n).  C is orthogonal: C^T C = I, so the
+    inverse transform (DCT-III) is C^T @ y.
+    """
+    i = np.arange(n)
+    k = np.arange(n)[:, None]
+    mat = np.cos(np.pi * (2 * i + 1) * k / (2 * n)) * np.sqrt(2.0 / n)
+    mat[0] = np.sqrt(1.0 / n)
+    return jnp.asarray(mat, dtype=dtype)
+
+
+def dct2_ref(x, basis):
+    """2-D DCT-II over the leading two spatial axes of x: [G, G, D]."""
+    y = jnp.einsum("ug,gvd->uvd", basis, x)       # rows
+    return jnp.einsum("vw,uwd->uvd", basis, y)    # cols
+
+
+def idct2_ref(y, basis):
+    """Inverse of dct2_ref (DCT-III; basis is orthogonal so C^T inverts)."""
+    x = jnp.einsum("vw,uvd->uwd", basis, y)       # cols (C^T)
+    return jnp.einsum("ug,uwd->gwd", basis, x)    # rows (C^T)
+
+
+def band_predict_dct_ref(hist, mask, lw, hw, basis):
+    """FreqCa predictor oracle (DCT decomposition).
+
+    hist:  [K, G, G, D] cached CRF history (oldest first), token-grid layout.
+    mask:  [G, G] 1.0 where a DCT coefficient belongs to the LOW band.
+    lw,hw: [K] per-band history-combination weights (computed by the Rust
+           coordinator from the cached timesteps; low-band order-0 reuse is
+           lw = [0, ..., 0, 1]; high-band order-2 Hermite is a
+           Lagrange-type triple).
+    Returns the predicted CRF [G, G, D]:
+        z = iDCT(mask * DCT(sum_k lw_k h_k) + (1-mask) * DCT(sum_k hw_k h_k))
+    The weighted sum commutes with the linear transform, so each band needs
+    one forward transform and the bands share one inverse transform — the
+    paper's "<=0.01% latency" predictor.
+    """
+    low_acc = jnp.einsum("k,kuvd->uvd", lw, hist)
+    high_acc = jnp.einsum("k,kuvd->uvd", hw, hist)
+    low_c = dct2_ref(low_acc, basis)
+    high_c = dct2_ref(high_acc, basis)
+    mixed = mask[:, :, None] * low_c + (1.0 - mask[:, :, None]) * high_c
+    return idct2_ref(mixed, basis)
+
+
+def band_predict_fft_ref(hist, mask, lw, hw):
+    """FreqCa predictor oracle (FFT decomposition, used by the Qwen sims).
+
+    Same contract as band_predict_dct_ref but the transform is a 2-D FFT
+    over the token grid and `mask` lives on the FFT frequency grid.
+    Output is real (inputs are real and the mask must be Hermitian-
+    symmetric, which radial masks on min(u, G-u) are).
+    """
+    low_acc = jnp.einsum("k,kuvd->uvd", lw, hist)
+    high_acc = jnp.einsum("k,kuvd->uvd", hw, hist)
+    low_c = jnp.fft.fft2(low_acc, axes=(0, 1))
+    high_c = jnp.fft.fft2(high_acc, axes=(0, 1))
+    mixed = mask[:, :, None] * low_c + (1.0 - mask[:, :, None]) * high_c
+    return jnp.real(jnp.fft.ifft2(mixed, axes=(0, 1)))
+
+
+def weighted_sum_ref(hist, w):
+    """Plain history combination (no decomposition): sum_k w_k h_k.
+
+    The oracle for the `predict_plain` artifact used by FORA / TaylorSeer /
+    TeaCache and the paper's "None" decomposition ablation arm.
+    """
+    return jnp.einsum("k,k...->...", w, hist)
+
+
+def adaln_modulate_ref(x, shift, scale):
+    """AdaLN-zero modulation oracle: LN(x) * (1 + scale) + shift.
+
+    x: [..., T, D]; shift/scale: [..., D] (broadcast over tokens).
+    LayerNorm has no learned affine (DiT convention) — the modulation IS
+    the affine.
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xn = (x - mu) / jnp.sqrt(var + 1e-6)
+    return xn * (1.0 + scale) + shift

@@ -1,0 +1,395 @@
+"""L2: the Diffusion Transformer (rectified-flow DiT) in JAX.
+
+The model is the small-scale analogue of the paper's testbeds (DESIGN.md
+§1): patchify -> L x (AdaLN-zero attention + MLP residual blocks) ->
+**Cumulative Residual Feature** -> AdaLN head -> unpatchify.  The residual
+stream value after the final block is *exactly* the paper's CRF
+(§3.2-2): h^(L) = h^(0) + sum_l F^(l)(h^(l), t) — the single tensor the
+Rust coordinator caches.
+
+Calling convention: all parameters travel as ONE flat f32 vector (arg 0 of
+every artifact).  `param_specs` defines the deterministic layout; the Rust
+side only needs the total length (recorded in meta_<cfg>.json) and loads
+`weights_<cfg>.bin` straight into a PJRT literal.
+
+Editing models (`cfg.is_edit`) concatenate patchified reference-image
+tokens to the sequence (FLUX.1-Kontext's in-context conditioning); the
+head reads only the first T_gen tokens, but the CRF covers the full
+sequence, matching how Kontext-style models cache.
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import bandpredict as bp_k
+from .kernels import dct as dct_k
+from .kernels import ref
+
+TEMB_DIM = 64  # sinusoidal timestep-frequency embedding width
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    d, p, c = cfg.dim, cfg.patch, cfg.channels
+    pd = p * p * c
+    hid = cfg.mlp_ratio * d
+    l = cfg.depth
+    return [
+        ("patch_w", (pd, d)),
+        ("patch_b", (d,)),
+        ("pos", (cfg.tokens, d)),
+        ("tmlp_w1", (TEMB_DIM, d)),
+        ("tmlp_b1", (d,)),
+        ("tmlp_w2", (d, d)),
+        ("tmlp_b2", (d,)),
+        ("cond_w", (cfg.cond_dim, d)),
+        ("cond_b", (d,)),
+        # per-block parameters, stacked over depth for lax.scan
+        ("mod_w", (l, d, 6 * d)),
+        ("mod_b", (l, 6 * d)),
+        ("qkv_w", (l, d, 3 * d)),
+        ("qkv_b", (l, 3 * d)),
+        ("proj_w", (l, d, d)),
+        ("proj_b", (l, d)),
+        ("mlp_w1", (l, d, hid)),
+        ("mlp_b1", (l, hid)),
+        ("mlp_w2", (l, hid, d)),
+        ("mlp_b2", (l, d)),
+        ("head_mod_w", (d, 2 * d)),
+        ("head_mod_b", (2 * d,)),
+        ("head_w", (d, pd)),
+        ("head_b", (pd,)),
+    ]
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_specs(cfg))
+
+
+def unflatten(cfg: ModelConfig, flat):
+    """Slice the flat vector into the named parameter pytree."""
+    params = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        n = int(np.prod(shape))
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """DiT-style init: truncated-normal-ish weights, zero AdaLN-zero gates.
+
+    Returns the flat f32 vector.
+    """
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_specs(cfg):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = 1.0 / math.sqrt(fan_in)
+        if name.endswith("_b"):
+            w = np.zeros(shape, np.float32)
+        elif name in ("mod_w", "head_mod_w", "head_w"):
+            # AdaLN-zero: modulation + output head start at zero so every
+            # block is the identity at init (gates = 0).
+            w = np.zeros(shape, np.float32)
+        elif name == "pos":
+            w = sincos_pos(cfg).astype(np.float32)
+        else:
+            w = rng.normal(0.0, std, size=shape).astype(np.float32)
+        chunks.append(w.reshape(-1))
+    return np.concatenate(chunks)
+
+
+def sincos_pos(cfg: ModelConfig):
+    """2-D sin/cos positional embedding over the token grid.
+
+    For editing models the reference tokens reuse the same grid embedding
+    shifted by a learned-free constant phase (they are a second 'image').
+    """
+    g, d = cfg.grid, cfg.dim
+    def grid_emb(phase):
+        ys, xs = np.meshgrid(np.arange(g), np.arange(g), indexing="ij")
+        pos = np.stack([ys.reshape(-1), xs.reshape(-1)], -1).astype(np.float64)
+        half = d // 4
+        freqs = np.exp(-math.log(10000.0) * np.arange(half) / max(half - 1, 1))
+        out = []
+        for axis in range(2):
+            ang = pos[:, axis:axis + 1] * freqs[None, :] + phase
+            out += [np.sin(ang), np.cos(ang)]
+        e = np.concatenate(out, -1)
+        if e.shape[1] < d:
+            e = np.pad(e, ((0, 0), (0, d - e.shape[1])))
+        return e[:, :d]
+    e = grid_emb(0.0)
+    if cfg.is_edit:
+        e = np.concatenate([e, grid_emb(math.pi / 3.0)], 0)
+    return e
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def timestep_embedding(t, dim=TEMB_DIM):
+    """Standard sinusoidal embedding of the diffusion time t in [0, 1]."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = t[:, None] * 1000.0 * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def patchify(cfg: ModelConfig, x):
+    """[B, S, S, C] latent -> [B, T, p*p*C] patch tokens (row-major grid)."""
+    b = x.shape[0]
+    g, p, c = cfg.grid, cfg.patch, cfg.channels
+    x = x.reshape(b, g, p, g, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, g * g, p * p * c)
+
+
+def unpatchify(cfg: ModelConfig, tok):
+    """[B, T_gen, p*p*C] -> [B, S, S, C]."""
+    b = tok.shape[0]
+    g, p, c = cfg.grid, cfg.patch, cfg.channels
+    x = tok.reshape(b, g, g, p, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, g * p, g * p, c)
+
+
+def _cond_vector(params, cond, t):
+    """AdaLN conditioning vector c = MLP(temb(t)) + W cond."""
+    temb = timestep_embedding(t)
+    h = jnp.tanh(temb @ params["tmlp_w1"] + params["tmlp_b1"])
+    tvec = h @ params["tmlp_w2"] + params["tmlp_b2"]
+    cvec = cond @ params["cond_w"] + params["cond_b"]
+    return tvec + cvec
+
+
+def _block(cfg: ModelConfig, h, c, blk, use_pallas):
+    """One AdaLN-zero DiT block. h: [B, T, D]; c: [B, D]; blk: params."""
+    d = cfg.dim
+    mod = c @ blk["mod_w"] + blk["mod_b"]                 # [B, 6D]
+    (sh_a, sc_a, g_a, sh_m, sc_m, g_m) = [
+        mod[:, i * d:(i + 1) * d][:, None, :] for i in range(6)
+    ]
+    xn = ref.adaln_modulate_ref(h, sh_a, sc_a)
+    qkv = xn @ blk["qkv_w"] + blk["qkv_b"]                # [B, T, 3D]
+    b, t = h.shape[0], h.shape[1]
+    qkv = qkv.reshape(b, t, 3, cfg.heads, cfg.head_dim)
+    q, k, v = [qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3)]
+    if use_pallas:
+        o = attn_k.attention(q, k, v)
+    else:
+        o = ref.attention_ref(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    h = h + g_a * (o @ blk["proj_w"] + blk["proj_b"])
+    xn = ref.adaln_modulate_ref(h, sh_m, sc_m)
+    y = jax.nn.gelu(xn @ blk["mlp_w1"] + blk["mlp_b1"])
+    h = h + g_m * (y @ blk["mlp_w2"] + blk["mlp_b2"])
+    return h
+
+
+def crf_forward(cfg: ModelConfig, params, x, cond, t, ref_img=None,
+                use_pallas=True, collect_layers=False):
+    """Token embedding + all blocks; returns the CRF [B, T, D].
+
+    If collect_layers, also returns the residual stream after every block
+    ([L+1, B, T, D], layer 0 = embedding) for the Fig. 2 / Fig. 4 analysis.
+    """
+    tok = patchify(cfg, x) @ params["patch_w"] + params["patch_b"]
+    if cfg.is_edit:
+        rtok = patchify(cfg, ref_img) @ params["patch_w"] + params["patch_b"]
+        tok = jnp.concatenate([tok, rtok], axis=1)
+    h = tok + params["pos"][None, :, :]
+    c = _cond_vector(params, cond, t)
+
+    block_names = ["mod_w", "mod_b", "qkv_w", "qkv_b", "proj_w", "proj_b",
+                   "mlp_w1", "mlp_b1", "mlp_w2", "mlp_b2"]
+    stacked = {k: params[k] for k in block_names}
+
+    if collect_layers:
+        layers = [h]
+        for i in range(cfg.depth):
+            blk = {k: stacked[k][i] for k in block_names}
+            h = _block(cfg, h, c, blk, use_pallas)
+            layers.append(h)
+        return h, jnp.stack(layers)
+
+    def body(h, blk):
+        return _block(cfg, h, c, blk, use_pallas), None
+
+    h, _ = jax.lax.scan(body, h, stacked)
+    return h
+
+
+def head(cfg: ModelConfig, params, crf, cond, t):
+    """Final AdaLN head: CRF [B, T, D] -> velocity [B, S, S, C].
+
+    Exported as its own artifact: on cached steps the Rust coordinator
+    feeds the *predicted* CRF through this head only (paper Fig. 3a).
+    """
+    d = cfg.dim
+    c = _cond_vector(params, cond, t)
+    mod = c @ params["head_mod_w"] + params["head_mod_b"]
+    shift, scale = mod[:, None, :d], mod[:, None, d:]
+    t_gen = cfg.grid * cfg.grid
+    z = crf[:, :t_gen, :]
+    zn = ref.adaln_modulate_ref(z, shift, scale)
+    out = zn @ params["head_w"] + params["head_b"]
+    return unpatchify(cfg, out)
+
+
+def dit_forward(cfg: ModelConfig, params_flat, x, cond, t, ref_img=None,
+                use_pallas=True):
+    """Full forward: returns (velocity, CRF) — the `fwd` artifact."""
+    params = unflatten(cfg, params_flat)
+    crf = crf_forward(cfg, params, x, cond, t, ref_img, use_pallas)
+    v = head(cfg, params, crf, cond, t)
+    return v, crf
+
+
+def dit_forward_trace(cfg: ModelConfig, params_flat, x, cond, t,
+                      ref_img=None, use_pallas=True):
+    """Forward that also returns every layer's residual stream
+    ([L+1, B, T, D]) — the `fwd_trace` analysis artifact (Fig. 2/4)."""
+    params = unflatten(cfg, params_flat)
+    crf, layers = crf_forward(cfg, params, x, cond, t, ref_img, use_pallas,
+                              collect_layers=True)
+    v = head(cfg, params, crf, cond, t)
+    return v, crf, layers
+
+
+def head_only(cfg: ModelConfig, params_flat, crf, cond, t):
+    """The `head` artifact: predicted CRF -> velocity."""
+    params = unflatten(cfg, params_flat)
+    return (head(cfg, params, crf, cond, t),)
+
+
+# ---------------------------------------------------------------------------
+# Predictor graphs (the FreqCa hot path on cached steps)
+# ---------------------------------------------------------------------------
+
+def predict_dct(cfg: ModelConfig, hist, mask, lw, hw, basis=None,
+                use_pallas=True):
+    """`predict_dct` artifact: hist [B, K, T, D] -> CRF-hat [B, T, D].
+
+    Token axis is reshaped onto the (G, G) grid (editing models stack the
+    generated and reference grids as two independent G x G planes so the
+    spatial DCT stays meaningful for both).
+
+    `basis` MUST be a runtime argument of the lowered artifact, never a
+    closed-over constant: xla_extension 0.5.1 mis-executes gridded Pallas
+    calls whose operands are HLO constants after the text round-trip (see
+    DESIGN.md §Gotchas and rust/tests/integration_runtime.rs parity
+    tests).  The Rust coordinator supplies it from freq::dct_matrix.
+    """
+    b, k, t, d = hist.shape
+    g = cfg.grid
+    planes = t // (g * g)
+    if basis is None:
+        basis = ref.dct_matrix(g)
+    h = hist.reshape(b, k, planes, g, g, d)
+
+    def per_plane(hp):  # [K, G, G, D]
+        if use_pallas:
+            return bp_k.band_predict_dct(hp, mask, lw, hw, basis)
+        return ref.band_predict_dct_ref(hp, mask, lw, hw, basis)
+
+    out = jax.vmap(jax.vmap(per_plane, in_axes=1, out_axes=0))(h)
+    return (out.reshape(b, t, d),)
+
+
+def predict_fft(cfg: ModelConfig, hist, mask, lw, hw, fr=None, fi=None):
+    """`predict_fft` artifact (Qwen sims): FFT-domain band split.
+
+    Implemented as dense DFT basis *matmuls* rather than `jnp.fft`: the
+    XLA CPU FFT falls back to Bluestein on the non-power-of-two token
+    grids (12x12 for qwen-sim) and measured 17 ms/step vs 0.7 ms for the
+    matmul form — and on an MXU target a dense (G x G) basis matmul is
+    the right shape anyway (DESIGN.md §4, EXPERIMENTS.md §Perf fix #3).
+    Numerics match `ref.band_predict_fft_ref` (the jnp.fft oracle).
+    """
+    b, k, t, d = hist.shape
+    g = cfg.grid
+    planes = t // (g * g)
+    h = hist.reshape(b, k, planes, g, g, d)
+
+    # DFT matrices as real pairs: F = Fr + i Fi, F^{-1} = (Fr - i Fi)/g.
+    # Runtime arguments of the artifact (NOT closed-over constants):
+    # xla_extension 0.5.1 mis-executes constant operands after the text
+    # round-trip — same gotcha as the DCT basis (see predict_dct).
+    if fr is None or fi is None:
+        idx = np.arange(g)
+        ang = -2.0 * np.pi * np.outer(idx, idx) / g
+        fr = jnp.asarray(np.cos(ang), jnp.float32)
+        fi = jnp.asarray(np.sin(ang), jnp.float32)
+
+    def fwd2(x):
+        # rows: A = F x  (x real) -> (Ar, Ai)
+        ar = jnp.einsum("ug,gvd->uvd", fr, x)
+        ai = jnp.einsum("ug,gvd->uvd", fi, x)
+        # cols: Y = A F^T (F symmetric: F^T = F)
+        yr = jnp.einsum("vw,uwd->uvd", fr, ar) - jnp.einsum(
+            "vw,uwd->uvd", fi, ai)
+        yi = jnp.einsum("vw,uwd->uvd", fr, ai) + jnp.einsum(
+            "vw,uwd->uvd", fi, ar)
+        return yr, yi
+
+    def inv2_real(yr, yi):
+        # X = F^{-1} Y F^{-T} / 1, F^{-1} = (Fr - i Fi)/g; output real part.
+        ar = jnp.einsum("ug,gvd->uvd", fr, yr) + jnp.einsum(
+            "ug,gvd->uvd", fi, yi)
+        ai = jnp.einsum("ug,gvd->uvd", fr, yi) - jnp.einsum(
+            "ug,gvd->uvd", fi, yr)
+        xr = jnp.einsum("vw,uwd->uvd", fr, ar) + jnp.einsum(
+            "vw,uwd->uvd", fi, ai)
+        return xr / (g * g)
+
+    def per_plane(hp):  # [K, G, G, D]
+        low_acc = jnp.einsum("k,kuvd->uvd", lw, hp)
+        high_acc = jnp.einsum("k,kuvd->uvd", hw, hp)
+        lr, li = fwd2(low_acc)
+        hr, hi = fwd2(high_acc)
+        m = mask[:, :, None]
+        zr = m * lr + (1.0 - m) * hr
+        zi = m * li + (1.0 - m) * hi
+        return inv2_real(zr, zi)
+
+    out = jax.vmap(jax.vmap(per_plane, in_axes=1, out_axes=0))(h)
+    return (out.reshape(b, t, d),)
+
+
+def predict_plain(cfg: ModelConfig, hist, w, use_pallas=True):
+    """`predict_plain` artifact: sum_k w_k hist_k (no decomposition)."""
+    b, k, t, d = hist.shape
+
+    def per_b(hb):
+        if use_pallas:
+            return bp_k.weighted_sum(hb, w)
+        return ref.weighted_sum_ref(hb, w)
+
+    return (jax.vmap(per_b)(hist),)
+
+
+# ---------------------------------------------------------------------------
+# Training loss (rectified flow)
+# ---------------------------------------------------------------------------
+
+def rf_loss(cfg: ModelConfig, params_flat, x0, cond, noise, t, ref_img=None,
+            use_pallas=False):
+    """Rectified-flow loss: x_t = (1-t) x0 + t eps, target v = eps - x0."""
+    tb = t[:, None, None, None]
+    xt = (1.0 - tb) * x0 + tb * noise
+    v, _ = dit_forward(cfg, params_flat, xt, cond, t, ref_img, use_pallas)
+    return jnp.mean((v - (noise - x0)) ** 2)

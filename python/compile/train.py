@@ -1,0 +1,103 @@
+"""Build-time training of the simulation models (rectified flow + Adam).
+
+Runs ONCE at `make artifacts`; produces `artifacts/weights_<cfg>.bin` (the
+flat f32 parameter vector the Rust runtime feeds to every executable) and
+`artifacts/train_<cfg>.csv` (the loss curve recorded in EXPERIMENTS.md).
+
+Training is intentionally small (hundreds of Adam steps on procedural
+scenes): the goal is a *non-degenerate denoiser* whose residual-stream
+dynamics exhibit the frequency structure the paper analyses, not a
+state-of-the-art generator.  optax is unavailable in this environment, so
+Adam is implemented inline.
+"""
+
+import argparse
+import os
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .configs import CONFIGS
+from . import model as M
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * grads
+    v = b2 * v + (1 - b2) * grads ** 2
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    return params - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def train(cfg_name: str, out_dir: str, steps: int = None, batch: int = 16,
+          lr: float = 2e-3, seed: int = 0, log_every: int = 25):
+    cfg = CONFIGS[cfg_name]
+    steps = steps or cfg.train_steps
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(M.init_params(cfg, seed))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+
+    if cfg.is_edit:
+        def loss_fn(p, x0, cond, noise, t, ref_img):
+            return M.rf_loss(cfg, p, x0, cond, noise, t, ref_img)
+    else:
+        def loss_fn(p, x0, cond, noise, t):
+            return M.rf_loss(cfg, p, x0, cond, noise, t)
+
+    @partial(jax.jit, donate_argnums=(0, 1, 2))
+    def step_fn(p, m, v, step, *batch_args):
+        loss, g = jax.value_and_grad(loss_fn)(p, *batch_args)
+        p, m, v = adam_update(p, g, m, v, step, lr)
+        return p, m, v, loss
+
+    curve = []
+    t0 = time.time()
+    for i in range(1, steps + 1):
+        if cfg.is_edit:
+            x0, cond, ref_img = data.sample_edit_batch(
+                rng, batch, cfg.latent, cfg.cond_dim)
+        else:
+            x0, cond = data.sample_batch(rng, batch, cfg.latent, cfg.cond_dim)
+            ref_img = None
+        noise = rng.standard_normal(x0.shape).astype(np.float32)
+        t = rng.random(batch).astype(np.float32)
+        args = [jnp.asarray(a) for a in
+                ([x0, cond, noise, t, ref_img] if cfg.is_edit
+                 else [x0, cond, noise, t])]
+        flat, m, v, loss = step_fn(flat, m, v, jnp.float32(i), *args)
+        if i % log_every == 0 or i == 1 or i == steps:
+            curve.append((i, float(loss)))
+            print(f"[{cfg_name}] step {i}/{steps} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    os.makedirs(out_dir, exist_ok=True)
+    weights = np.asarray(flat, np.float32)
+    weights.tofile(os.path.join(out_dir, f"weights_{cfg_name}.bin"))
+    with open(os.path.join(out_dir, f"train_{cfg_name}.csv"), "w") as f:
+        f.write("step,loss\n")
+        for s, l in curve:
+            f.write(f"{s},{l}\n")
+    print(f"[{cfg_name}] wrote {weights.nbytes} bytes of weights")
+    return curve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="all")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override per-config train_steps")
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+    names = list(CONFIGS) if args.config == "all" else [args.config]
+    for name in names:
+        train(name, args.out, steps=args.steps, batch=args.batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Dataset/workload properties + AOT lowering contract.
+
+`test_workload_parity_golden` pins the renderer with golden values that
+the Rust port (`rust/src/workload/`) asserts too — the cross-language
+contract for the Q_SC proxy.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, data, model as M
+from compile.configs import CONFIGS
+
+settings.register_profile("data", deadline=None, max_examples=15)
+settings.load_profile("data")
+
+
+# ---------------------------------------------------------------------
+# Procedural scenes
+# ---------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31))
+def test_render_in_range_and_nontrivial(seed):
+    rng = np.random.default_rng(seed)
+    u = rng.random(data.COND_SCENE_DIMS)
+    img = data.render(16, data.scene_from_unit(u))
+    assert img.shape == (16, 16, 4)
+    assert img.min() >= -1.0 and img.max() <= 1.0
+    assert img.std() > 0.01  # not a constant image
+
+
+@given(seed=st.integers(0, 2**31))
+def test_cond_roundtrip_encodes_scene(seed):
+    rng = np.random.default_rng(seed)
+    u = rng.random(data.COND_SCENE_DIMS)
+    c = data.cond_vector(u, 32)
+    # scene dims recoverable: c = 2u - 1
+    np.testing.assert_allclose((c[:12] + 1) / 2, u, atol=1e-6)
+
+
+def test_edit_changes_scene():
+    rng = np.random.default_rng(7)
+    tgt, cond, src = data.sample_edit_batch(rng, 8, 16, 32)
+    assert tgt.shape == src.shape == (8, 16, 16, 4)
+    diffs = np.abs(tgt - src).reshape(8, -1).mean(1)
+    assert (diffs > 1e-4).any(), "edits never changed the image"
+
+
+def test_drawbench_prompts_deterministic():
+    us1, conds1 = data.drawbench_prompts(16, 32)
+    us2, conds2 = data.drawbench_prompts(16, 32)
+    np.testing.assert_array_equal(us1, us2)
+    np.testing.assert_array_equal(conds1, conds2)
+    assert len(np.unique(us1[:, 0])) > 4  # actually diverse
+
+
+def test_workload_parity_golden():
+    # Golden values pinned against rust/src/workload (same math).  A fixed
+    # scene, probed at fixed pixels.
+    u = np.array([0.1, 0.5, 0.5, 0.5, 1.0, 0.0, 0.0,
+                  0.0, 0.0, 0.0, 0.0, 0.5])
+    img = data.render(8, data.scene_from_unit(u))
+    # center pixel inside the disc -> fg red channel = 1.0
+    assert img[4, 4, 0] == pytest.approx(1.0, abs=1e-6)
+    assert img[4, 4, 3] == pytest.approx(1.0, abs=1e-6)
+    # corner outside -> bg (0) channel 0, mask -1
+    assert img[0, 0, 3] == pytest.approx(-1.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------
+# AOT lowering
+# ---------------------------------------------------------------------
+
+def test_artifact_specs_cover_all_roles():
+    cfg = CONFIGS["tiny"]
+    names = [name for name, _, _ in aot.artifact_specs(cfg)]
+    for b in cfg.batch_sizes:
+        for role in ["fwd", "head", "predict_dct", "predict_fft",
+                     "predict_plain"]:
+            assert f"{role}_b{b}" in names
+    assert "fwd_trace_b1" in names
+
+
+def test_lowering_produces_parseable_hlo_text():
+    cfg = CONFIGS["tiny"]
+    # Lower the cheapest artifact and sanity-check the text format the
+    # rust loader expects.
+    specs = {n: (f, a) for n, f, a in aot.artifact_specs(cfg)}
+    fn, args = specs["predict_plain_b1"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "ENTRY" in text and "parameter(0)" in text
+    assert "f32[1,3,16,64]" in text  # hist input shape
+
+def test_predict_dct_artifact_takes_basis_argument():
+    # Regression for the xla_extension 0.5.1 constant-operand miscompile:
+    # the DCT basis must be artifact input #4, never an HLO constant.
+    cfg = CONFIGS["tiny"]
+    specs = {n: (f, a) for n, f, a in aot.artifact_specs(cfg)}
+    _, args = specs["predict_dct_b1"]
+    assert len(args) == 5
+    assert tuple(args[4].shape) == (cfg.grid, cfg.grid)
+
+
+def test_exported_meta_matches_configs():
+    # If artifacts exist (built by make artifacts), their metadata must
+    # agree with the in-repo configs.
+    meta_path = os.path.join(os.path.dirname(__file__), "..", "..",
+                             "artifacts", "meta_tiny.json")
+    if not os.path.exists(meta_path):
+        pytest.skip("artifacts not built")
+    import json
+
+    with open(meta_path) as f:
+        meta = json.load(f)
+    cfg = CONFIGS["tiny"]
+    assert meta["dim"] == cfg.dim
+    assert meta["depth"] == cfg.depth
+    assert meta["tokens"] == cfg.tokens
+    assert meta["param_count"] == M.param_count(cfg)

@@ -1,0 +1,222 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes and dtypes with hypothesis.  This is the CORE correctness signal
+for the kernels that end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, bandpredict, dct, ref
+
+settings.register_profile("kernels", deadline=None, max_examples=20)
+settings.load_profile("kernels")
+
+
+def rand(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, size=shape), dtype)
+
+
+# ---------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 4),
+    t=st.sampled_from([4, 16, 64, 96]),
+    dh=st.sampled_from([8, 16, 48]),
+    seed=st.integers(0, 2**31),
+)
+def test_attention_matches_ref(b, h, t, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (b, h, t, dh))
+    k = rand(rng, (b, h, t, dh))
+    v = rand(rng, (b, h, t, dh))
+    out = attention.attention(q, k, v)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(qb=st.sampled_from([1, 3, 16, 64, 100]), seed=st.integers(0, 2**31))
+def test_attention_query_blocking_invariant(qb, seed):
+    # The result must not depend on the query tile size.
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (1, 2, 48, 16))
+    k = rand(rng, (1, 2, 48, 16))
+    v = rand(rng, (1, 2, 48, 16))
+    a = attention.attention(q, k, v, q_block=qb)
+    b = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_softmax_rows_bounded():
+    rng = np.random.default_rng(0)
+    q = rand(rng, (1, 1, 8, 4), scale=30.0)  # extreme logits
+    k = rand(rng, (1, 1, 8, 4), scale=30.0)
+    v = jnp.ones((1, 1, 8, 4), jnp.float32)
+    out = attention.attention(q, k, v)
+    # convex combination of ones stays ones (softmax sums to 1)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)
+
+
+def test_attention_bf16_runs():
+    rng = np.random.default_rng(1)
+    q = rand(rng, (1, 2, 16, 8)).astype(jnp.bfloat16)
+    k = rand(rng, (1, 2, 16, 8)).astype(jnp.bfloat16)
+    v = rand(rng, (1, 2, 16, 8)).astype(jnp.bfloat16)
+    out = attention.attention(q, k, v)
+    expect = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32))
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect), rtol=0.05, atol=0.05
+    )
+
+
+# ---------------------------------------------------------------------
+# DCT
+# ---------------------------------------------------------------------
+
+@given(
+    g=st.sampled_from([2, 4, 8, 12, 16]),
+    d=st.sampled_from([1, 3, 64, 130]),
+    seed=st.integers(0, 2**31),
+)
+def test_dct2_matches_ref(g, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (g, g, d))
+    basis = ref.dct_matrix(g)
+    np.testing.assert_allclose(
+        np.asarray(dct.dct2(x, basis)),
+        np.asarray(ref.dct2_ref(x, basis)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@given(g=st.sampled_from([4, 8]), seed=st.integers(0, 2**31))
+def test_dct_roundtrip_is_identity(g, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (g, g, 32))
+    basis = ref.dct_matrix(g)
+    back = dct.idct2(dct.dct2(x, basis), basis)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_dct_parseval():
+    # Orthonormal transform preserves energy.
+    rng = np.random.default_rng(2)
+    x = rand(rng, (8, 8, 16))
+    basis = ref.dct_matrix(8)
+    y = dct.dct2(x, basis)
+    e_x = float(jnp.sum(x * x))
+    e_y = float(jnp.sum(y * y))
+    assert abs(e_x - e_y) < 1e-3 * e_x
+
+
+# ---------------------------------------------------------------------
+# Band predictor (the FreqCa hot path)
+# ---------------------------------------------------------------------
+
+@given(
+    g=st.sampled_from([4, 8]),
+    d=st.sampled_from([16, 64, 96]),
+    cutoff=st.integers(0, 7),
+    seed=st.integers(0, 2**31),
+)
+def test_band_predict_dct_matches_ref(g, d, cutoff, seed):
+    rng = np.random.default_rng(seed)
+    hist = rand(rng, (3, g, g, d))
+    basis = ref.dct_matrix(g)
+    mask = jnp.asarray(
+        (np.maximum.outer(np.arange(g), np.arange(g)) <= cutoff)
+        .astype(np.float32)
+    )
+    lw = jnp.asarray([0.0, 0.0, 1.0], jnp.float32)
+    hw = jnp.asarray(np.random.default_rng(seed + 1).normal(size=3),
+                     jnp.float32)
+    out = bandpredict.band_predict_dct(hist, mask, lw, hw, basis)
+    expect = ref.band_predict_dct_ref(hist, mask, lw, hw, basis)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31))
+def test_band_predict_full_mask_reduces_to_weighted_sum(seed):
+    rng = np.random.default_rng(seed)
+    g, d = 8, 32
+    hist = rand(rng, (3, g, g, d))
+    basis = ref.dct_matrix(g)
+    lw = jnp.asarray(rng.normal(size=3), jnp.float32)
+    hw = jnp.asarray(rng.normal(size=3), jnp.float32)
+    ones = jnp.ones((g, g), jnp.float32)
+    out = bandpredict.band_predict_dct(hist, ones, lw, hw, basis)
+    expect = jnp.einsum("k,kuvd->uvd", lw, hist)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(
+    t=st.sampled_from([4, 16, 144]),
+    d=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31),
+)
+def test_weighted_sum_matches_ref(t, d, seed):
+    rng = np.random.default_rng(seed)
+    hist = rand(rng, (3, t, d))
+    w = jnp.asarray(rng.normal(size=3), jnp.float32)
+    out = bandpredict.weighted_sum(hist, w)
+    expect = ref.weighted_sum_ref(hist, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_band_predict_bands_are_complementary():
+    # Swapping the per-band weights under the SAME mask sums to the plain
+    # (lw + hw) combination: both bands then carry lw + hw, and the
+    # transform is linear and orthogonal.
+    rng = np.random.default_rng(3)
+    g, d = 8, 16
+    hist = rand(rng, (3, g, g, d))
+    basis = ref.dct_matrix(g)
+    mask = jnp.asarray((np.random.default_rng(4).random((g, g)) < 0.5)
+                       .astype(np.float32))
+    lw = jnp.asarray([0.2, 0.3, 0.5], jnp.float32)
+    hw = jnp.asarray([-1.0, 1.0, 1.0], jnp.float32)
+    a = bandpredict.band_predict_dct(hist, mask, lw, hw, basis)
+    b = bandpredict.band_predict_dct(hist, mask, hw, lw, basis)
+    total = jnp.einsum("k,kuvd->uvd", lw + hw, hist)
+    np.testing.assert_allclose(np.asarray(a + b), np.asarray(total),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------
+# FFT reference predictor (used directly by the artifacts)
+# ---------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31))
+def test_fft_predictor_is_real_valued_with_symmetric_mask(seed):
+    rng = np.random.default_rng(seed)
+    g, d = 8, 8
+    hist = rand(rng, (3, g, g, d))
+    # Hermitian-symmetric radial mask (fold min(u, G-u)).
+    u = np.minimum(np.arange(g), g - np.arange(g))
+    rad = np.maximum.outer(u, u)
+    mask = jnp.asarray((rad <= 2).astype(np.float32))
+    lw = jnp.asarray([0.0, 0.0, 1.0], jnp.float32)
+    hw = jnp.asarray([0.5, -1.5, 2.0], jnp.float32)
+    out = ref.band_predict_fft_ref(hist, mask, lw, hw)
+    # Must equal band-wise combination computed through real DCT-like path
+    # only in the full-mask case; here we check realness + reconstruction:
+    ones = jnp.ones((g, g), jnp.float32)
+    full = ref.band_predict_fft_ref(hist, ones, lw, lw)
+    np.testing.assert_allclose(
+        np.asarray(full), np.asarray(jnp.einsum("k,kuvd->uvd", lw, hist)),
+        rtol=1e-4, atol=1e-5,
+    )
+    assert np.all(np.isfinite(np.asarray(out)))

@@ -1,0 +1,176 @@
+"""L2 correctness: DiT model structure, CRF identities, predictor graphs,
+and the flat-parameter layout contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, model as M
+from compile.configs import CONFIGS, ModelConfig
+
+settings.register_profile("model", deadline=None, max_examples=10)
+settings.load_profile("model")
+
+CFG = CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jnp.asarray(M.init_params(CFG, seed=0))
+
+
+def inputs(cfg, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, cfg.latent, cfg.latent,
+                                     cfg.channels)), jnp.float32)
+    cond = jnp.asarray(rng.normal(size=(b, cfg.cond_dim)), jnp.float32)
+    t = jnp.asarray(rng.random(b), jnp.float32)
+    return x, cond, t
+
+
+def test_param_count_matches_specs():
+    flat = M.init_params(CFG, 0)
+    assert flat.shape == (M.param_count(CFG),)
+    # unflatten consumes exactly the whole vector
+    p = M.unflatten(CFG, jnp.asarray(flat))
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == flat.size
+
+
+def test_patchify_roundtrip(params):
+    x, _, _ = inputs(CFG)
+    tok = M.patchify(CFG, x)
+    assert tok.shape == (2, CFG.grid * CFG.grid,
+                         CFG.patch * CFG.patch * CFG.channels)
+    back = M.unpatchify(CFG, tok)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x))
+
+
+def test_forward_shapes_and_finite(params):
+    x, cond, t = inputs(CFG)
+    v, crf = M.dit_forward(CFG, params, x, cond, t, use_pallas=False)
+    assert v.shape == x.shape
+    assert crf.shape == (2, CFG.tokens, CFG.dim)
+    assert np.all(np.isfinite(np.asarray(v)))
+
+
+def test_pallas_and_ref_forward_agree(params):
+    x, cond, t = inputs(CFG)
+    v1, c1 = M.dit_forward(CFG, params, x, cond, t, use_pallas=True)
+    v2, c2 = M.dit_forward(CFG, params, x, cond, t, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_head_of_crf_equals_velocity(params):
+    # The CRF identity the whole caching scheme rests on (paper §3.2-2):
+    # the final output is a pure function (head) of the CRF.
+    x, cond, t = inputs(CFG)
+    v, crf = M.dit_forward(CFG, params, x, cond, t, use_pallas=False)
+    v2 = M.head_only(CFG, params, crf, cond, t)[0]
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_trace_layers_accumulate_to_crf(params):
+    x, cond, t = inputs(CFG)
+    _, crf, layers = M.dit_forward_trace(CFG, params, x, cond, t,
+                                         use_pallas=False)
+    assert layers.shape == (CFG.depth + 1, 2, CFG.tokens, CFG.dim)
+    np.testing.assert_allclose(np.asarray(layers[-1]), np.asarray(crf),
+                               rtol=1e-6)
+
+
+def test_adaln_zero_init_makes_blocks_identity():
+    # With zero-initialised modulation the blocks are identity and the
+    # CRF equals the embedded input — the Veit et al. ensemble view.
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    p = M.unflatten(CFG, flat)
+    x, cond, t = inputs(CFG)
+    crf = M.crf_forward(CFG, p, x, cond, t, use_pallas=False)
+    tok = M.patchify(CFG, x) @ p["patch_w"] + p["patch_b"]
+    h0 = tok + p["pos"][None]
+    np.testing.assert_allclose(np.asarray(crf), np.asarray(h0),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31))
+def test_predict_dct_ones_mask_equals_plain(seed):
+    rng = np.random.default_rng(seed)
+    hist = jnp.asarray(rng.normal(size=(2, 3, CFG.tokens, CFG.dim)),
+                       jnp.float32)
+    lw = jnp.asarray(rng.normal(size=3), jnp.float32)
+    hw = jnp.asarray(rng.normal(size=3), jnp.float32)
+    ones = jnp.ones((CFG.grid, CFG.grid), jnp.float32)
+    pd = M.predict_dct(CFG, hist, ones, lw, hw)[0]
+    pp = M.predict_plain(CFG, hist, lw)[0]
+    np.testing.assert_allclose(np.asarray(pd), np.asarray(pp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_predict_polynomial_exactness():
+    # A CRF history lying on a quadratic in s is predicted exactly by
+    # order-2 weights (computed here with numpy lstsq, mirroring the rust
+    # policy layer).
+    rng = np.random.default_rng(1)
+    base = rng.normal(size=(CFG.tokens, CFG.dim)).astype(np.float32)
+    lin = rng.normal(size=(CFG.tokens, CFG.dim)).astype(np.float32)
+    quad = rng.normal(size=(CFG.tokens, CFG.dim)).astype(np.float32)
+    s_hist = np.array([-0.9, -0.5, -0.1])
+    s_t = 0.3
+    hist = np.stack([base + s * lin + s * s * quad for s in s_hist])[None]
+    # Lagrange weights through 3 points
+    w = []
+    for j in range(3):
+        num = den = 1.0
+        for i in range(3):
+            if i != j:
+                num *= s_t - s_hist[i]
+                den *= s_hist[j] - s_hist[i]
+        w.append(num / den)
+    w = jnp.asarray(np.array(w, np.float32))
+    pred = M.predict_plain(CFG, jnp.asarray(hist), w)[0][0]
+    expect = base + s_t * lin + s_t * s_t * quad
+    np.testing.assert_allclose(np.asarray(pred), expect, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_edit_model_uses_reference():
+    cfg = CONFIGS["kontext-sim"]
+    flat = jnp.asarray(M.init_params(cfg, 0))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, cfg.latent, cfg.latent,
+                                     cfg.channels)), jnp.float32)
+    cond = jnp.asarray(rng.normal(size=(1, cfg.cond_dim)), jnp.float32)
+    t = jnp.asarray([0.5], jnp.float32)
+    r1 = jnp.asarray(rng.normal(size=x.shape), jnp.float32)
+    r2 = jnp.asarray(rng.normal(size=x.shape), jnp.float32)
+    _, crf1 = M.dit_forward(cfg, flat, x, cond, t, ref_img=r1,
+                            use_pallas=False)
+    _, crf2 = M.dit_forward(cfg, flat, x, cond, t, ref_img=r2,
+                            use_pallas=False)
+    assert crf1.shape == (1, cfg.tokens, cfg.dim)
+    # reference tokens occupy the second half of the sequence
+    assert not np.allclose(np.asarray(crf1[:, cfg.tokens // 2:]),
+                           np.asarray(crf2[:, cfg.tokens // 2:]))
+
+
+def test_rf_loss_finite_and_positive():
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    x0, cond = data.sample_batch(rng, 4, CFG.latent, CFG.cond_dim)
+    noise = rng.standard_normal(x0.shape).astype(np.float32)
+    t = rng.random(4).astype(np.float32)
+    loss = M.rf_loss(CFG, flat, jnp.asarray(x0), jnp.asarray(cond),
+                     jnp.asarray(noise), jnp.asarray(t))
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+def test_timestep_embedding_distinguishes_times():
+    e1 = M.timestep_embedding(jnp.asarray([0.1]))
+    e2 = M.timestep_embedding(jnp.asarray([0.9]))
+    assert float(jnp.abs(e1 - e2).max()) > 0.1

@@ -1,0 +1,180 @@
+//! Bench harness (criterion replacement): warmup + timed iterations +
+//! percentile report, plus a tiny table printer shared by the
+//! table-reproduction examples.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Options for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        // Modest defaults: PJRT CPU execution is milliseconds-scale, so a
+        // handful of iterations gives stable medians without blowing the
+        // suite's time budget.  Override with FREQCA_BENCH_ITERS.
+        let iters = std::env::var("FREQCA_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10);
+        BenchOpts { warmup_iters: 2, iters }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>10.3} ms/iter (p50 {:>8.3}, p90 {:>8.3}, n={})",
+            self.name,
+            s.mean * 1e3,
+            s.p50 * 1e3,
+            s.p90 * 1e3,
+            s.n
+        )
+    }
+}
+
+/// Time `f` under the harness.
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.iters);
+    for _ in 0..opts.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult { name: name.to_string(), summary: Summary::of(&samples) };
+    println!("{}", r.report());
+    r
+}
+
+/// Fixed-width table printer for the paper-table harnesses.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        out.push_str(
+            &widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  "),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Also emit as CSV for EXPERIMENTS.md / plotting.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') {
+                format!("\"{s}\"")
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(esc)
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &str) -> anyhow::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut calls = 0;
+        let opts = BenchOpts { warmup_iters: 1, iters: 5 };
+        let r = bench("noop", &opts, || calls += 1);
+        assert_eq!(calls, 6);
+        assert_eq!(r.summary.n, 5);
+    }
+
+    #[test]
+    fn table_renders_and_escapes_csv() {
+        let mut t = Table::new(&["method", "speed"]);
+        t.row(vec!["FreqCa(N=7, dct)".into(), "4.99x".into()]);
+        let text = t.render();
+        assert!(text.contains("FreqCa"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"FreqCa(N=7, dct)\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Feature caches.
+//!
+//! `CrfCache` is the paper's contribution (§3.2-2): a per-request ring of
+//! at most K Cumulative Residual Features + their timesteps — **O(1)** in
+//! model depth.  `LayerwiseCache` emulates the prior art's layout
+//! (2 features per block, (m+1) history) purely for the memory ablation
+//! (Table 5) and the fidelity comparison (Fig. 4); it is never on the
+//! serving path.
+
+use crate::util::Tensor;
+
+/// Ring buffer of the K most recent activated CRFs (oldest first).
+#[derive(Debug, Clone)]
+pub struct CrfCache {
+    k: usize,
+    entries: Vec<(f64, Tensor)>, // (normalized time s, CRF [T, D])
+    /// Peak bytes ever held (for Table 5's VRAM-overhead column).
+    peak_bytes: usize,
+    /// Total pushes (metrics).
+    pushes: u64,
+    /// Bumped on every mutation; lets the sampler cache the uploaded
+    /// device stack across the predicted steps between two refreshes
+    /// (perf-pass fix #2, EXPERIMENTS.md §Perf).
+    generation: u64,
+}
+
+impl CrfCache {
+    pub fn new(k: usize) -> CrfCache {
+        assert!(k >= 1);
+        CrfCache {
+            k,
+            entries: Vec::with_capacity(k),
+            peak_bytes: 0,
+            pushes: 0,
+            generation: 0,
+        }
+    }
+
+    /// Record a freshly computed CRF at normalized time `s`.  Evicts the
+    /// oldest entry beyond capacity K.
+    pub fn push(&mut self, s: f64, crf: Tensor) {
+        if self.entries.len() == self.k {
+            self.entries.remove(0);
+        }
+        self.entries.push((s, crf));
+        self.pushes += 1;
+        self.generation += 1;
+        self.peak_bytes = self.peak_bytes.max(self.bytes());
+    }
+
+    /// Replace the newest entry in place (ToCa-style partial token
+    /// refresh mutates the newest snapshot rather than appending).
+    pub fn replace_newest(&mut self, s: f64, crf: Tensor) {
+        if let Some(last) = self.entries.last_mut() {
+            *last = (s, crf);
+            self.generation += 1;
+        } else {
+            self.push(s, crf);
+        }
+        self.peak_bytes = self.peak_bytes.max(self.bytes());
+    }
+
+    /// Mutation counter (see field docs).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Cached normalized timesteps, oldest first.
+    pub fn times(&self) -> Vec<f64> {
+        self.entries.iter().map(|(s, _)| *s).collect()
+    }
+
+    pub fn newest(&self) -> Option<&Tensor> {
+        self.entries.last().map(|(_, t)| t)
+    }
+
+    /// Stack the history into the device layout [K, T, D], padding the
+    /// *oldest* slots by repeating the oldest entry when fewer than K
+    /// entries exist (their weights are zero by construction — see
+    /// `policy::interp::pad_left`).
+    pub fn stacked(&self) -> Option<Tensor> {
+        let newestless = self.entries.is_empty();
+        if newestless {
+            return None;
+        }
+        let mut refs: Vec<&Tensor> = Vec::with_capacity(self.k);
+        let missing = self.k - self.entries.len();
+        for _ in 0..missing {
+            refs.push(&self.entries[0].1);
+        }
+        for (_, t) in &self.entries {
+            refs.push(t);
+        }
+        Some(Tensor::stack(&refs).expect("uniform CRF shapes"))
+    }
+
+    /// Current bytes held by the cache.
+    pub fn bytes(&self) -> usize {
+        self.entries.iter().map(|(_, t)| t.nbytes()).sum()
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+}
+
+/// Prior-art layer-wise cache: stores (m+1) history states of 2 features
+/// (attention + MLP output) per block — K_layer = 2 (m+1) L units
+/// (paper §4.4.1).  Exists for the ablation/memory studies only.
+#[derive(Debug)]
+pub struct LayerwiseCache {
+    depth: usize,
+    history: usize,
+    entries: Vec<(f64, Vec<Tensor>)>,
+    peak_bytes: usize,
+}
+
+impl LayerwiseCache {
+    pub fn new(depth: usize, history: usize) -> LayerwiseCache {
+        LayerwiseCache { depth, history, entries: Vec::new(), peak_bytes: 0 }
+    }
+
+    /// Push the per-layer features of one activated step.  `features`
+    /// must contain 2 * depth tensors (attention + MLP per block).
+    pub fn push(&mut self, s: f64, features: Vec<Tensor>) {
+        assert_eq!(features.len(), 2 * self.depth, "2 features per block");
+        if self.entries.len() == self.history {
+            self.entries.remove(0);
+        }
+        self.entries.push((s, features));
+        self.peak_bytes = self.peak_bytes.max(self.bytes());
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|(_, fs)| fs.iter().map(Tensor::nbytes).sum::<usize>())
+            .sum()
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Cache units held (the paper counts units, K_layer = 2(m+1)L).
+    pub fn units(&self) -> usize {
+        self.entries.len() * 2 * self.depth
+    }
+}
+
+/// The paper's §4.4.1 memory-ratio formula:
+/// R = K_FreqCa / K_layer = (1 + (m+1)) / (2 (m+1) L).
+pub fn memory_ratio(depth: usize, order: usize) -> f64 {
+    let freqca_units = 1.0 + (order + 1) as f64;
+    let layer_units = 2.0 * (order + 1) as f64 * depth as f64;
+    freqca_units / layer_units
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn crf(v: f32) -> Tensor {
+        Tensor::new(vec![4, 2], vec![v; 8]).unwrap()
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut c = CrfCache::new(3);
+        for i in 0..5 {
+            c.push(i as f64, crf(i as f32));
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.times(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(c.newest().unwrap().data[0], 4.0);
+    }
+
+    #[test]
+    fn stacked_pads_oldest() {
+        let mut c = CrfCache::new(3);
+        c.push(0.0, crf(7.0));
+        let s = c.stacked().unwrap();
+        assert_eq!(s.shape, vec![3, 4, 2]);
+        // all three slots filled with the only entry
+        assert!(s.data.iter().all(|v| *v == 7.0));
+    }
+
+    #[test]
+    fn bytes_are_o1_in_depth() {
+        let mut c = CrfCache::new(3);
+        for i in 0..10 {
+            c.push(i as f64, crf(0.0));
+        }
+        assert_eq!(c.bytes(), 3 * 8 * 4);
+        assert_eq!(c.peak_bytes(), 3 * 8 * 4);
+        assert_eq!(c.pushes(), 10);
+    }
+
+    #[test]
+    fn replace_newest_keeps_len() {
+        let mut c = CrfCache::new(3);
+        c.push(0.0, crf(1.0));
+        c.push(1.0, crf(2.0));
+        c.replace_newest(1.5, crf(9.0));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.newest().unwrap().data[0], 9.0);
+        assert_eq!(c.times(), vec![0.0, 1.5]);
+    }
+
+    #[test]
+    fn layerwise_counts_match_paper() {
+        // FLUX.1-dev: L = 57, m = 2 -> 342 units, ratio ~= 1.17%
+        let mut lw = LayerwiseCache::new(57, 3);
+        for h in 0..3 {
+            lw.push(h as f64, vec![Tensor::zeros(vec![2, 2]); 114]);
+        }
+        assert_eq!(lw.units(), 342);
+        let r = memory_ratio(57, 2);
+        assert!((r - 4.0 / 342.0).abs() < 1e-12);
+        assert!((r - 0.0117).abs() < 2e-4);
+    }
+}

@@ -1,0 +1,145 @@
+//! Hand-rolled CLI (clap is unavailable in the sandbox): flag parsing and
+//! the `freqca` subcommands.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line: subcommand + `--key value` flags + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        if argv.is_empty() {
+            return Ok(out);
+        }
+        out.command = argv[0].clone();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    out.flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+pub const USAGE: &str = "\
+freqca — FreqCa diffusion-serving coordinator
+
+USAGE:
+  freqca serve    [--addr 127.0.0.1:7463] [--artifacts DIR] [--wait-ms 5]
+                  [--capacity 256] [--warmup MODEL,...]
+  freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
+                  [--steps 50] [--prompt IDX] [--out out.ppm]
+                  [--artifacts DIR]
+  freqca edit     [--model kontext-sim] [--policy freqca:n=7] [--seed 0]
+                  [--steps 50] [--prompt IDX] [--out out.ppm]
+  freqca models   [--artifacts DIR]
+  freqca metrics  [--addr 127.0.0.1:7463]
+  freqca help
+
+Policies: freqca:n=7[,low=0,o=2,c=2,d=dct|fft|none]  freqca-a:l=0.8
+          fora:n=3  taylorseer:n=6,o=2  teacache:l=1.0  toca:n=8,r=0.75
+          duca:n=8,r=0.7  baseline
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|v| v.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // NB: a bare `--flag` followed by a non-flag token consumes it as
+        // the flag's value, so positionals must precede bare flags.
+        let a = Args::parse(&argv(&[
+            "generate",
+            "extra",
+            "--model",
+            "flux-sim",
+            "--steps=25",
+            "--verbose",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "generate");
+        assert_eq!(a.get("model"), Some("flux-sim"));
+        assert_eq!(a.usize_or("steps", 50).unwrap(), 25);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&["serve"])).unwrap();
+        assert_eq!(a.str_or("addr", "x"), "x");
+        assert_eq!(a.usize_or("capacity", 256).unwrap(), 256);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv(&["serve", "--capacity", "abc"])).unwrap();
+        assert!(a.usize_or("capacity", 1).is_err());
+    }
+}

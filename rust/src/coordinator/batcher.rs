@@ -1,0 +1,182 @@
+//! Dynamic batcher: groups compatible queued requests into one device
+//! batch.
+//!
+//! Requests are compatible when they share `(model, policy, n_steps)` —
+//! interval policies are step-index-driven, so every request in the batch
+//! follows the same full/predict schedule and one `fwd_b{B}` /
+//! `predict_*_b{B}` execution serves them all.  The batcher picks the
+//! largest exported batch size that the queue can fill, waiting up to
+//! `max_wait` for stragglers (classic size-or-timeout batching).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+/// A request waiting in the batcher with its enqueue time.
+#[derive(Debug)]
+pub struct Pending {
+    pub request: Request,
+    pub enqueued: Instant,
+}
+
+/// Size-or-timeout dynamic batcher over one logical queue.
+pub struct Batcher {
+    queue: VecDeque<Pending>,
+    /// Batch sizes the artifacts were exported at, descending.
+    sizes: Vec<usize>,
+    pub max_wait: Duration,
+    /// Queue capacity; past it, new requests are shed (backpressure).
+    pub capacity: usize,
+    shed: u64,
+}
+
+impl Batcher {
+    pub fn new(mut sizes: Vec<usize>, max_wait: Duration, capacity: usize) -> Batcher {
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        if sizes.is_empty() {
+            sizes.push(1);
+        }
+        Batcher { queue: VecDeque::new(), sizes, max_wait, capacity, shed: 0 }
+    }
+
+    /// Try to enqueue; false = shed due to backpressure.
+    pub fn push(&mut self, request: Request) -> bool {
+        if self.queue.len() >= self.capacity {
+            self.shed += 1;
+            return false;
+        }
+        self.queue.push_back(Pending { request, enqueued: Instant::now() });
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed
+    }
+
+    /// Pop the next batch: the longest *compatible prefix* of the queue
+    /// (FIFO — no request overtakes an earlier incompatible one, so no
+    /// starvation), cut to the largest exported batch size it can fill.
+    /// Returns `None` when the queue should keep waiting for stragglers.
+    pub fn next_batch(&mut self, now: Instant) -> Option<Vec<Pending>> {
+        let first = self.queue.front()?;
+        let key = first.request.batch_key();
+        let deadline_hit = now.duration_since(first.enqueued) >= self.max_wait;
+        let mut prefix = 0;
+        for p in &self.queue {
+            if p.request.batch_key() == key {
+                prefix += 1;
+            } else {
+                break;
+            }
+        }
+        let max_size = self.sizes[0];
+        if prefix < max_size && !deadline_hit {
+            // Wait for more compatible requests unless the queue already
+            // contains an incompatible one (then waiting cannot help the
+            // *head* batch grow).
+            if prefix == self.queue.len() {
+                return None;
+            }
+        }
+        // Largest exported size <= prefix.
+        let size = self
+            .sizes
+            .iter()
+            .copied()
+            .find(|s| *s <= prefix)
+            .unwrap_or(1)
+            .min(prefix);
+        Some(self.queue.drain(..size).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: &str, policy: &str) -> Request {
+        Request {
+            id,
+            model: model.into(),
+            policy: policy.into(),
+            seed: id,
+            n_steps: 50,
+            cond: vec![],
+            ref_img: None,
+            return_latent: false,
+        }
+    }
+
+    #[test]
+    fn batches_compatible_prefix() {
+        let mut b = Batcher::new(vec![1, 4], Duration::from_millis(0), 100);
+        for i in 0..3 {
+            assert!(b.push(req(i, "m", "fora:n=3")));
+        }
+        // timeout 0 -> batch immediately; 3 compatible but largest
+        // exported size <= 3 is 1... sizes are {4, 1}; expect size 1.
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn fills_largest_size() {
+        let mut b = Batcher::new(vec![1, 4], Duration::from_secs(10), 100);
+        for i in 0..5 {
+            b.push(req(i, "m", "fora:n=3"));
+        }
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn waits_for_stragglers() {
+        let mut b = Batcher::new(vec![1, 4], Duration::from_secs(10), 100);
+        b.push(req(0, "m", "fora:n=3"));
+        // young queue, under max size, nothing incompatible -> wait
+        assert!(b.next_batch(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn incompatible_tail_forces_flush() {
+        let mut b = Batcher::new(vec![1, 4], Duration::from_secs(10), 100);
+        b.push(req(0, "m", "fora:n=3"));
+        b.push(req(1, "m", "freqca:n=7"));
+        // head batch can never grow past the incompatible request
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].request.id, 0);
+    }
+
+    #[test]
+    fn fifo_no_overtaking() {
+        // max_wait 0 so every compatible prefix flushes immediately.
+        let mut b = Batcher::new(vec![1, 4], Duration::ZERO, 100);
+        b.push(req(0, "m", "a"));
+        b.push(req(1, "m", "b"));
+        b.push(req(2, "m", "b"));
+        let first = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(first[0].request.id, 0);
+        let second = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(second[0].request.id, 1);
+    }
+
+    #[test]
+    fn sheds_over_capacity() {
+        let mut b = Batcher::new(vec![1], Duration::from_secs(1), 2);
+        assert!(b.push(req(0, "m", "a")));
+        assert!(b.push(req(1, "m", "a")));
+        assert!(!b.push(req(2, "m", "a")));
+        assert_eq!(b.shed_count(), 1);
+    }
+}

@@ -1,0 +1,271 @@
+//! The generation engine: owns the PJRT runtime + weights, consumes
+//! batches from the router, and executes them through the sampler.
+//!
+//! `Engine` is deliberately single-threaded (see module docs in
+//! `coordinator`); `serve_loop` is the long-running worker the TCP server
+//! spawns, fed over an mpsc channel.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::router::{RouteResult, Router};
+use super::{Request, Response};
+use crate::metrics::Metrics;
+use crate::model::weights;
+use crate::policy;
+use crate::runtime::{discover_models, Runtime};
+use crate::sampler::{self, BatchJob, JobSpec, SampleOpts};
+
+/// One unit of work sent to the engine thread.
+pub struct WorkItem {
+    pub request: Request,
+    pub reply: Sender<Response>,
+    pub enqueued: Instant,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    router: Router,
+    weight_bufs: HashMap<String, Rc<xla::PjRtBuffer>>,
+    pub metrics: Arc<Metrics>,
+    /// internal id -> (reply channel, enqueue time, client-visible id).
+    replies: HashMap<u64, (Sender<Response>, Instant, u64)>,
+    next_internal_id: u64,
+}
+
+impl Engine {
+    /// Load every model found in the artifact directory.
+    pub fn new(
+        artifact_dir: &str,
+        max_wait: Duration,
+        capacity: usize,
+        metrics: Arc<Metrics>,
+    ) -> Result<Engine> {
+        let rt = Runtime::new(artifact_dir)?;
+        let configs = discover_models(artifact_dir)?;
+        if configs.is_empty() {
+            return Err(anyhow!(
+                "no models in {artifact_dir}; run `make artifacts` first"
+            ));
+        }
+        let mut weight_bufs = HashMap::new();
+        for cfg in &configs {
+            let host =
+                weights::load_weights(artifact_dir, &cfg.name, cfg.param_count)?;
+            weight_bufs.insert(cfg.name.clone(), rt.weights_buffer(cfg, &host)?);
+        }
+        Ok(Engine {
+            rt,
+            router: Router::new(configs, max_wait, capacity),
+            weight_bufs,
+            metrics,
+            replies: HashMap::new(),
+            next_internal_id: 1,
+        })
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.router.models().iter().map(|c| c.name.clone()).collect()
+    }
+
+    pub fn config(&self, model: &str) -> Option<&crate::model::ModelConfig> {
+        self.router.config(model)
+    }
+
+    pub fn weights(&self, model: &str) -> Option<Rc<xla::PjRtBuffer>> {
+        self.weight_bufs.get(model).cloned()
+    }
+
+    /// Pre-compile the hot artifacts of one model so first-request latency
+    /// excludes XLA compilation.
+    pub fn warmup(&self, model: &str) -> Result<()> {
+        let cfg = self
+            .router
+            .config(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        for b in &cfg.batch_sizes {
+            for role in ["fwd_b", "head_b", "predict_dct_b", "predict_fft_b",
+                         "predict_plain_b"] {
+                let name = format!("{role}{b}");
+                if cfg.has_artifact(&name) {
+                    self.rt.warmup(cfg, &name)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit one request; replies arrive on `reply` once executed.
+    pub fn submit(&mut self, item: WorkItem) {
+        let mut request = item.request;
+        // Internal id for reply matching (client ids may collide).
+        let internal = self.next_internal_id;
+        self.next_internal_id += 1;
+        let client_id = request.id;
+        request.id = internal;
+        match self.router.route(request) {
+            RouteResult::Queued => {
+                self.replies
+                    .insert(internal, (item.reply, item.enqueued, client_id));
+                self.metrics.bump("requests_admitted", 1);
+            }
+            RouteResult::Shed => {
+                self.metrics.bump("requests_shed", 1);
+                let _ = item.reply.send(Response::err(
+                    client_id,
+                    "queue full (shed)".into(),
+                ));
+            }
+            RouteResult::UnknownModel => {
+                let _ = item
+                    .reply
+                    .send(Response::err(client_id, "unknown model".into()));
+            }
+            RouteResult::Invalid(msg) => {
+                let _ = item.reply.send(Response::err(client_id, msg));
+            }
+        }
+    }
+
+    /// Execute at most one ready batch.  Returns how many requests ran.
+    pub fn pump(&mut self) -> usize {
+        let (model, batch) = match self.router.next_batch() {
+            Some(b) => b,
+            None => return 0,
+        };
+        let n = batch.len();
+        let ids: Vec<u64> = batch.iter().map(|p| p.request.id).collect();
+        let client_ids: Vec<u64> = ids.clone(); // internal ids reported back
+        let result = self.run_batch(&model, &batch);
+        match result {
+            Ok(responses) => {
+                for (id, mut resp) in ids.into_iter().zip(responses) {
+                    if let Some((tx, enq, client_id)) = self.replies.remove(&id)
+                    {
+                        resp.id = client_id;
+                        resp.queue_s = (enq.elapsed().as_secs_f64()
+                            - resp.latency_s)
+                            .max(0.0);
+                        self.metrics.record_request(resp.latency_s);
+                        let _ = tx.send(resp);
+                    }
+                }
+            }
+            Err(e) => {
+                for id in client_ids {
+                    if let Some((tx, _, client_id)) = self.replies.remove(&id) {
+                        let _ = tx.send(Response::err(
+                            client_id,
+                            format!("engine: {e}"),
+                        ));
+                    }
+                }
+                self.metrics.bump("batch_errors", 1);
+            }
+        }
+        n
+    }
+
+    fn run_batch(
+        &mut self,
+        model: &str,
+        batch: &[super::batcher::Pending],
+    ) -> Result<Vec<Response>> {
+        let cfg = self
+            .router
+            .config(model)
+            .ok_or_else(|| anyhow!("model {model} vanished"))?
+            .clone();
+        let weights = self
+            .weight_bufs
+            .get(model)
+            .ok_or_else(|| anyhow!("no weights for {model}"))?
+            .clone();
+        let first = &batch[0].request;
+        let decomp = crate::freq::Decomp::parse(&cfg.decomp)?;
+        let mut pol =
+            policy::parse_policy(&first.policy, decomp, cfg.grid, cfg.k_hist)?;
+        let jobs: Vec<JobSpec> = batch
+            .iter()
+            .map(|p| JobSpec {
+                cond: p.request.cond.clone(),
+                ref_img: p.request.ref_img.clone(),
+                seed: p.request.seed,
+            })
+            .collect();
+        let bj = BatchJob { cfg: &cfg, weights, jobs, n_steps: first.n_steps };
+        let results = sampler::generate_batch(
+            &self.rt,
+            &bj,
+            pol.as_mut(),
+            &SampleOpts::default(),
+        )?;
+        self.metrics.bump("batches_executed", 1);
+        self.metrics.bump("full_steps", results[0].full_steps as u64);
+        self.metrics.bump("cached_steps", results[0].cached_steps as u64);
+        for s in &results[0].steps {
+            self.metrics.record_step(s.wall_s);
+        }
+        Ok(batch
+            .iter()
+            .zip(results)
+            .map(|(p, r)| Response {
+                id: p.request.id,
+                ok: true,
+                error: None,
+                latency_s: r.wall_s,
+                queue_s: 0.0, // filled by pump()
+                full_steps: r.full_steps,
+                cached_steps: r.cached_steps + r.partial_steps,
+                flops: r.flops,
+                cache_peak_bytes: r.cache_peak_bytes,
+                latent: if p.request.return_latent {
+                    Some(r.latent.data.clone())
+                } else {
+                    None
+                },
+            })
+            .collect())
+    }
+
+    /// Long-running worker loop: drain the channel, pump batches, repeat
+    /// until the channel closes and all queues are empty.
+    pub fn serve_loop(&mut self, rx: Receiver<WorkItem>) {
+        loop {
+            // Admit everything currently waiting.
+            let mut closed = false;
+            loop {
+                match rx.try_recv() {
+                    Ok(item) => self.submit(item),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            let ran = self.pump();
+            if ran == 0 {
+                if closed && self.router.queued() == 0 {
+                    return;
+                }
+                // Idle: block briefly for the next request to avoid a
+                // busy spin.
+                match rx.recv_timeout(Duration::from_millis(2)) {
+                    Ok(item) => self.submit(item),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        if self.router.queued() == 0 {
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! The serving coordinator: request types, router, dynamic batcher, and
+//! the generation engine that drives batched sampling through PJRT.
+//!
+//! Threading model: PJRT CPU execution is single-stream and the `xla`
+//! wrapper types are not `Send`, so one **engine thread** owns the
+//! `Runtime` and executes batches; the TCP acceptor threads communicate
+//! with it over `mpsc` channels.  This mirrors the leader/worker split of
+//! production routers (vLLM's router keeps model executors on pinned
+//! workers); here there is exactly one worker because the sandbox has one
+//! core.
+
+pub mod batcher;
+pub mod engine;
+pub mod router;
+
+use crate::util::Json;
+
+/// A client request (one image generation or edit).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    /// Policy description, e.g. "freqca:n=7" (see `policy::parse_policy`).
+    pub policy: String,
+    pub seed: u64,
+    pub n_steps: usize,
+    /// Conditioning vector; padded/truncated to the model's cond_dim.
+    pub cond: Vec<f32>,
+    /// Reference latent for editing models (flattened [S, S, C]).
+    pub ref_img: Option<Vec<f32>>,
+    /// Return the final latent in the response (costs bandwidth).
+    pub return_latent: bool,
+}
+
+impl Request {
+    pub fn from_json(j: &Json) -> anyhow::Result<Request> {
+        let cond = j
+            .get("cond")
+            .and_then(|c| c.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
+            .unwrap_or_default();
+        let ref_img = j.get("ref_img").and_then(|c| c.as_arr()).map(|a| {
+            a.iter()
+                .filter_map(|v| v.as_f64())
+                .map(|v| v as f32)
+                .collect()
+        });
+        Ok(Request {
+            id: j.get("id").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
+            model: j.req_str("model")?.to_string(),
+            policy: j
+                .get("policy")
+                .and_then(|v| v.as_str())
+                .unwrap_or("freqca:n=7")
+                .to_string(),
+            seed: j.get("seed").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
+            n_steps: j.get("steps").and_then(|v| v.as_usize()).unwrap_or(50),
+            cond,
+            ref_img,
+            return_latent: j
+                .get("return_latent")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", Json::num(self.id as f64)),
+            ("model", Json::str(self.model.clone())),
+            ("policy", Json::str(self.policy.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("steps", Json::num(self.n_steps as f64)),
+            ("cond", Json::from_f32s(&self.cond)),
+            ("return_latent", Json::Bool(self.return_latent)),
+        ];
+        if let Some(r) = &self.ref_img {
+            pairs.push(("ref_img", Json::from_f32s(r)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Batching key: requests that may share one device batch.
+    pub fn batch_key(&self) -> String {
+        format!("{}|{}|{}", self.model, self.policy, self.n_steps)
+    }
+}
+
+/// The engine's reply.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+    pub latency_s: f64,
+    pub queue_s: f64,
+    pub full_steps: usize,
+    pub cached_steps: usize,
+    pub flops: f64,
+    pub cache_peak_bytes: usize,
+    pub latent: Option<Vec<f32>>,
+}
+
+impl Response {
+    pub fn err(id: u64, msg: String) -> Response {
+        Response {
+            id,
+            ok: false,
+            error: Some(msg),
+            latency_s: 0.0,
+            queue_s: 0.0,
+            full_steps: 0,
+            cached_steps: 0,
+            flops: 0.0,
+            cache_peak_bytes: 0,
+            latent: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", Json::num(self.id as f64)),
+            ("ok", Json::Bool(self.ok)),
+            ("latency_s", Json::num(self.latency_s)),
+            ("queue_s", Json::num(self.queue_s)),
+            ("full_steps", Json::num(self.full_steps as f64)),
+            ("cached_steps", Json::num(self.cached_steps as f64)),
+            ("flops", Json::num(self.flops)),
+            ("cache_peak_bytes", Json::num(self.cache_peak_bytes as f64)),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e.clone())));
+        }
+        if let Some(l) = &self.latent {
+            pairs.push(("latent", Json::from_f32s(l)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Response {
+        Response {
+            id: j.get("id").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
+            ok: j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false),
+            error: j.get("error").and_then(|v| v.as_str()).map(String::from),
+            latency_s: j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            queue_s: j.get("queue_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            full_steps: j
+                .get("full_steps")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            cached_steps: j
+                .get("cached_steps")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            flops: j.get("flops").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            cache_peak_bytes: j
+                .get("cache_peak_bytes")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            latent: j.get("latent").and_then(|v| v.as_arr()).map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_f64())
+                    .map(|v| v as f32)
+                    .collect()
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrip() {
+        let r = Request {
+            id: 7,
+            model: "flux-sim".into(),
+            policy: "freqca:n=7".into(),
+            seed: 3,
+            n_steps: 50,
+            cond: vec![0.5, -0.25],
+            ref_img: None,
+            return_latent: true,
+        };
+        let j = r.to_json();
+        let back = Request::from_json(&Json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.model, "flux-sim");
+        assert_eq!(back.cond, vec![0.5, -0.25]);
+        assert!(back.return_latent);
+    }
+
+    #[test]
+    fn response_json_roundtrip() {
+        let r = Response {
+            id: 2,
+            ok: true,
+            error: None,
+            latency_s: 1.25,
+            queue_s: 0.5,
+            full_steps: 8,
+            cached_steps: 42,
+            flops: 1e12,
+            cache_peak_bytes: 4096,
+            latent: Some(vec![1.0, -1.0]),
+        };
+        let back = Response::from_json(
+            &Json::parse(&r.to_json().to_string()).unwrap(),
+        );
+        assert!(back.ok);
+        assert_eq!(back.full_steps, 8);
+        assert_eq!(back.latent.unwrap().len(), 2);
+    }
+
+    #[test]
+    fn batch_key_separates_policies() {
+        let mut a = Request {
+            id: 0,
+            model: "m".into(),
+            policy: "fora:n=3".into(),
+            seed: 0,
+            n_steps: 50,
+            cond: vec![],
+            ref_img: None,
+            return_latent: false,
+        };
+        let key_a = a.batch_key();
+        a.policy = "freqca:n=7".into();
+        assert_ne!(key_a, a.batch_key());
+    }
+}

@@ -1,0 +1,193 @@
+//! Request router: validates incoming requests against the discovered
+//! model registry and dispatches them to per-model batchers.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use super::batcher::{Batcher, Pending};
+use super::Request;
+use crate::model::ModelConfig;
+
+/// Routing outcome for one request.
+#[derive(Debug, PartialEq)]
+pub enum RouteResult {
+    Queued,
+    Shed,
+    UnknownModel,
+    Invalid(String),
+}
+
+/// Router over the model registry.
+pub struct Router {
+    batchers: HashMap<String, Batcher>,
+    configs: HashMap<String, ModelConfig>,
+}
+
+impl Router {
+    pub fn new(
+        configs: Vec<ModelConfig>,
+        max_wait: Duration,
+        capacity: usize,
+    ) -> Router {
+        let mut batchers = HashMap::new();
+        let mut map = HashMap::new();
+        for cfg in configs {
+            batchers.insert(
+                cfg.name.clone(),
+                Batcher::new(cfg.batch_sizes.clone(), max_wait, capacity),
+            );
+            map.insert(cfg.name.clone(), cfg);
+        }
+        Router { batchers, configs: map }
+    }
+
+    pub fn config(&self, model: &str) -> Option<&ModelConfig> {
+        self.configs.get(model)
+    }
+
+    pub fn models(&self) -> Vec<&ModelConfig> {
+        let mut v: Vec<&ModelConfig> = self.configs.values().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Validate + enqueue.
+    pub fn route(&mut self, mut request: Request) -> RouteResult {
+        let cfg = match self.configs.get(&request.model) {
+            Some(c) => c,
+            None => return RouteResult::UnknownModel,
+        };
+        if request.n_steps == 0 || request.n_steps > 1000 {
+            return RouteResult::Invalid(format!(
+                "steps {} out of range",
+                request.n_steps
+            ));
+        }
+        if cfg.is_edit && request.ref_img.is_none() {
+            return RouteResult::Invalid(format!(
+                "model {} requires ref_img",
+                cfg.name
+            ));
+        }
+        if let Some(r) = &request.ref_img {
+            if r.len() != cfg.latent_elems() {
+                return RouteResult::Invalid(format!(
+                    "ref_img has {} values, expected {}",
+                    r.len(),
+                    cfg.latent_elems()
+                ));
+            }
+        }
+        // Normalize the conditioning vector to the model width.
+        request.cond.resize(cfg.cond_dim, 0.0);
+        let b = self.batchers.get_mut(&request.model).unwrap();
+        if b.push(request) {
+            RouteResult::Queued
+        } else {
+            RouteResult::Shed
+        }
+    }
+
+    /// Collect the next ready batch across all model queues (round-robin
+    /// by model name order for fairness).
+    pub fn next_batch(&mut self) -> Option<(String, Vec<Pending>)> {
+        let now = std::time::Instant::now();
+        let mut names: Vec<&String> = self.batchers.keys().collect();
+        names.sort();
+        let names: Vec<String> = names.into_iter().cloned().collect();
+        for name in names {
+            let b = self.batchers.get_mut(&name).unwrap();
+            if let Some(batch) = b.next_batch(now) {
+                return Some((name, batch));
+            }
+        }
+        None
+    }
+
+    pub fn queued(&self) -> usize {
+        self.batchers.values().map(Batcher::len).sum()
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.batchers.values().map(Batcher::shed_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    fn cfg(name: &str, is_edit: bool) -> ModelConfig {
+        let meta = Json::parse(&format!(
+            r#"{{"name":"{name}","latent":8,"channels":4,"patch":2,
+            "grid":4,"tokens":{},"dim":64,"depth":2,"heads":2,
+            "cond_dim":16,"mlp_ratio":4,"is_edit":{is_edit},
+            "decomp":"dct","param_count":10,"k_hist":3,
+            "batch_sizes":[1,2],"artifacts":{{}}}}"#,
+            if is_edit { 32 } else { 16 }
+        ))
+        .unwrap();
+        ModelConfig::from_meta(&meta).unwrap()
+    }
+
+    fn req(model: &str) -> Request {
+        Request {
+            id: 1,
+            model: model.into(),
+            policy: "fora:n=3".into(),
+            seed: 0,
+            n_steps: 10,
+            cond: vec![1.0; 4],
+            ref_img: None,
+            return_latent: false,
+        }
+    }
+
+    #[test]
+    fn routes_known_model_and_pads_cond() {
+        let mut r = Router::new(
+            vec![cfg("m", false)],
+            Duration::from_millis(0),
+            10,
+        );
+        assert_eq!(r.route(req("m")), RouteResult::Queued);
+        let (name, batch) = r.next_batch().unwrap();
+        assert_eq!(name, "m");
+        assert_eq!(batch[0].request.cond.len(), 16); // padded to cond_dim
+    }
+
+    #[test]
+    fn rejects_unknown_model() {
+        let mut r = Router::new(vec![cfg("m", false)], Duration::ZERO, 10);
+        assert_eq!(r.route(req("nope")), RouteResult::UnknownModel);
+    }
+
+    #[test]
+    fn edit_model_requires_ref() {
+        let mut r = Router::new(vec![cfg("e", true)], Duration::ZERO, 10);
+        assert!(matches!(r.route(req("e")), RouteResult::Invalid(_)));
+        let mut rq = req("e");
+        rq.ref_img = Some(vec![0.0; 8 * 8 * 4]);
+        assert_eq!(r.route(rq), RouteResult::Queued);
+        let mut bad = req("e");
+        bad.ref_img = Some(vec![0.0; 3]);
+        assert!(matches!(r.route(bad), RouteResult::Invalid(_)));
+    }
+
+    #[test]
+    fn rejects_bad_steps() {
+        let mut r = Router::new(vec![cfg("m", false)], Duration::ZERO, 10);
+        let mut rq = req("m");
+        rq.n_steps = 0;
+        assert!(matches!(r.route(rq), RouteResult::Invalid(_)));
+    }
+
+    #[test]
+    fn sheds_at_capacity() {
+        let mut r = Router::new(vec![cfg("m", false)], Duration::ZERO, 1);
+        assert_eq!(r.route(req("m")), RouteResult::Queued);
+        assert_eq!(r.route(req("m")), RouteResult::Shed);
+        assert_eq!(r.shed(), 1);
+    }
+}

@@ -1,0 +1,123 @@
+//! Orthonormal DCT-II / DCT-III over small planes (matches
+//! `python/compile/kernels/ref.py::dct_matrix` bit-for-bit in structure).
+
+/// Orthonormal DCT-II basis matrix C (row-major n x n): y = C x.
+pub fn dct_matrix(n: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; n * n];
+    for k in 0..n {
+        let a = if k == 0 {
+            (1.0 / n as f64).sqrt()
+        } else {
+            (2.0 / n as f64).sqrt()
+        };
+        for i in 0..n {
+            c[k * n + i] = a
+                * (std::f64::consts::PI * (2 * i + 1) as f64 * k as f64
+                    / (2 * n) as f64)
+                    .cos();
+        }
+    }
+    c
+}
+
+/// The basis as an f32 tensor — the runtime input of the `predict_dct_*`
+/// artifacts (never baked as an HLO constant; xla_extension 0.5.1
+/// mis-executes gridded Pallas calls with constant operands, see the
+/// parity tests).
+pub fn dct_matrix_tensor(n: usize) -> crate::util::Tensor {
+    let c = dct_matrix(n);
+    crate::util::Tensor::new(
+        vec![n, n],
+        c.iter().map(|v| *v as f32).collect(),
+    )
+    .expect("basis shape")
+}
+
+/// Forward 2-D DCT of a real [g, g] plane: Y = C X C^T.
+pub fn dct2(plane: &[f32], g: usize) -> Vec<f32> {
+    let c = dct_matrix(g);
+    apply2(plane, g, &c, false)
+}
+
+/// Inverse 2-D DCT (DCT-III): X = C^T Y C.
+pub fn idct2(coef: &[f32], g: usize) -> Vec<f32> {
+    let c = dct_matrix(g);
+    apply2(coef, g, &c, true)
+}
+
+fn apply2(x: &[f32], g: usize, c: &[f64], inverse: bool) -> Vec<f32> {
+    assert_eq!(x.len(), g * g);
+    let at = |m: &[f64], r: usize, k: usize, t: bool| {
+        if t {
+            m[k * g + r]
+        } else {
+            m[r * g + k]
+        }
+    };
+    // rows: tmp = A x  where A = C (fwd) or C^T (inv)
+    let mut tmp = vec![0.0f64; g * g];
+    for u in 0..g {
+        for v in 0..g {
+            let mut s = 0.0;
+            for k in 0..g {
+                s += at(c, u, k, inverse) * x[k * g + v] as f64;
+            }
+            tmp[u * g + v] = s;
+        }
+    }
+    // cols: out = tmp B where B = C^T (fwd) or C (inv)
+    let mut out = vec![0.0f32; g * g];
+    for u in 0..g {
+        for v in 0..g {
+            let mut s = 0.0;
+            for k in 0..g {
+                s += tmp[u * g + k] * at(c, k, v, !inverse);
+            }
+            out[u * g + v] = s as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn basis_is_orthonormal() {
+        let n = 8;
+        let c = dct_matrix(n);
+        for i in 0..n {
+            for j in 0..n {
+                let dot: f64 =
+                    (0..n).map(|k| c[i * n + k] * c[j * n + k]).sum();
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-12, "({i},{j}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = 12;
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..g * g).map(|_| rng.normal()).collect();
+        let y = dct2(&x, g);
+        let back = idct2(&y, g);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn constant_maps_to_dc_only() {
+        let g = 8;
+        let x = vec![2.0f32; g * g];
+        let y = dct2(&x, g);
+        assert!((y[0] - 2.0 * g as f32).abs() < 1e-4); // DC = g * mean * ...
+        for (i, v) in y.iter().enumerate().skip(1) {
+            assert!(v.abs() < 1e-5, "coef {i} = {v}");
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Iterative radix-2 complex FFT + 2-D helpers (built from scratch; no
+//! external DSP crate exists in the sandbox).
+
+use anyhow::{bail, Result};
+
+/// Minimal complex number (f64 for analysis accuracy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Complex {
+        Complex { re, im }
+    }
+
+    pub fn mul(self, o: Complex) -> Complex {
+        Complex::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    pub fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+
+    pub fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+
+    pub fn scale(self, s: f64) -> Complex {
+        Complex::new(self.re * s, self.im * s)
+    }
+
+    pub fn abs(self) -> f64 {
+        (self.re * self.re + self.im * self.im).sqrt()
+    }
+}
+
+/// Real/imaginary DFT basis matrices (cos / sin of -2*pi*uv/g) as f32
+/// tensors — the runtime inputs of the `predict_fft_*` artifacts (never
+/// HLO constants; same xla_extension 0.5.1 gotcha as the DCT basis).
+pub fn dft_matrices_tensor(g: usize) -> (crate::util::Tensor, crate::util::Tensor) {
+    let mut re = vec![0.0f32; g * g];
+    let mut im = vec![0.0f32; g * g];
+    for u in 0..g {
+        for v in 0..g {
+            let ang = -2.0 * std::f64::consts::PI * (u * v) as f64 / g as f64;
+            re[u * g + v] = ang.cos() as f32;
+            im[u * g + v] = ang.sin() as f32;
+        }
+    }
+    (
+        crate::util::Tensor::new(vec![g, g], re).expect("dft re"),
+        crate::util::Tensor::new(vec![g, g], im).expect("dft im"),
+    )
+}
+
+/// In-place iterative Cooley-Tukey FFT.  `inverse` applies the conjugate
+/// transform *without* the 1/n normalization (callers normalize).
+pub fn fft_inplace(x: &mut [Complex], inverse: bool) -> Result<()> {
+    let n = x.len();
+    if n == 0 || n & (n - 1) != 0 {
+        bail!("FFT length {n} is not a power of two");
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wl = Complex::new(ang.cos(), ang.sin());
+        for start in (0..n).step_by(len) {
+            let mut w = Complex::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = x[start + k];
+                let v = x[start + k + len / 2].mul(w);
+                x[start + k] = u.add(v);
+                x[start + k + len / 2] = u.sub(v);
+                w = w.mul(wl);
+            }
+        }
+        len <<= 1;
+    }
+    Ok(())
+}
+
+/// Forward 2-D FFT of a real [g, g] plane (row-major), returning
+/// complex coefficients.
+pub fn fft2(plane: &[f32], g: usize) -> Result<Vec<Complex>> {
+    if plane.len() != g * g {
+        bail!("fft2 expects {}x{} = {} values, got {}", g, g, g * g, plane.len());
+    }
+    let mut data: Vec<Complex> =
+        plane.iter().map(|v| Complex::new(*v as f64, 0.0)).collect();
+    // Rows.
+    for r in 0..g {
+        fft_inplace(&mut data[r * g..(r + 1) * g], false)?;
+    }
+    // Columns.
+    let mut col = vec![Complex::ZERO; g];
+    for c in 0..g {
+        for r in 0..g {
+            col[r] = data[r * g + c];
+        }
+        fft_inplace(&mut col, false)?;
+        for r in 0..g {
+            data[r * g + c] = col[r];
+        }
+    }
+    Ok(data)
+}
+
+/// Inverse 2-D FFT returning the real part ([g, g] row-major).
+pub fn ifft2(coef: &[Complex], g: usize) -> Result<Vec<f32>> {
+    if coef.len() != g * g {
+        bail!("ifft2 expects {} values, got {}", g * g, coef.len());
+    }
+    let mut data = coef.to_vec();
+    for r in 0..g {
+        fft_inplace(&mut data[r * g..(r + 1) * g], true)?;
+    }
+    let mut col = vec![Complex::ZERO; g];
+    for c in 0..g {
+        for r in 0..g {
+            col[r] = data[r * g + c];
+        }
+        fft_inplace(&mut col, true)?;
+        for r in 0..g {
+            data[r * g + c] = col[r];
+        }
+    }
+    let norm = 1.0 / (g * g) as f64;
+    Ok(data.iter().map(|z| (z.re * norm) as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        let mut x = vec![Complex::ZERO; 3];
+        assert!(fft_inplace(&mut x, false).is_err());
+    }
+
+    #[test]
+    fn delta_has_flat_spectrum() {
+        let mut x = vec![Complex::ZERO; 8];
+        x[0] = Complex::new(1.0, 0.0);
+        fft_inplace(&mut x, false).unwrap();
+        for z in &x {
+            assert!((z.re - 1.0).abs() < 1e-12 && z.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let g = 16;
+        let mut rng = Rng::new(11);
+        let plane: Vec<f32> = (0..g * g).map(|_| rng.normal()).collect();
+        let coef = fft2(&plane, g).unwrap();
+        let back = ifft2(&coef, g).unwrap();
+        for (a, b) in plane.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn parseval_energy() {
+        let g = 8;
+        let mut rng = Rng::new(5);
+        let plane: Vec<f32> = (0..g * g).map(|_| rng.normal()).collect();
+        let coef = fft2(&plane, g).unwrap();
+        let spatial: f64 = plane.iter().map(|v| (*v as f64).powi(2)).sum();
+        let spectral: f64 =
+            coef.iter().map(|z| z.abs().powi(2)).sum::<f64>() / (g * g) as f64;
+        assert!((spatial - spectral).abs() < 1e-6 * spatial.max(1.0));
+    }
+}

@@ -1,0 +1,139 @@
+//! Low-band masks in the transform domain.
+//!
+//! The paper's `P_low` projector keeps the structural low-frequency
+//! coefficients.  For the DCT the natural radial metric is `max(u, v)`
+//! (zig-zag square); for the FFT the frequency index must fold:
+//! `max(min(u, G-u), min(v, G-v))`, which keeps the mask Hermitian-
+//! symmetric so the predicted feature stays real.
+
+use crate::util::Tensor;
+
+/// Which transform the mask lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decomp {
+    Dct,
+    Fft,
+    /// No decomposition ("None" ablation arm): one band holds everything.
+    None,
+}
+
+impl Decomp {
+    pub fn parse(s: &str) -> anyhow::Result<Decomp> {
+        match s {
+            "dct" => Ok(Decomp::Dct),
+            "fft" => Ok(Decomp::Fft),
+            "none" => Ok(Decomp::None),
+            _ => anyhow::bail!("unknown decomposition '{s}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Decomp::Dct => "dct",
+            Decomp::Fft => "fft",
+            Decomp::None => "none",
+        }
+    }
+}
+
+/// A band split: decomposition + low-band radial cutoff (inclusive).
+#[derive(Debug, Clone, Copy)]
+pub struct BandSpec {
+    pub decomp: Decomp,
+    /// Coefficients with radial index <= cutoff are "low".  The paper
+    /// tunes this per model; `default_cutoff` gives G/4 (the setting the
+    /// ablation found robust).
+    pub cutoff: usize,
+}
+
+impl BandSpec {
+    pub fn new(decomp: Decomp, cutoff: usize) -> BandSpec {
+        BandSpec { decomp, cutoff }
+    }
+
+    pub fn default_cutoff(grid: usize) -> usize {
+        (grid / 4).max(1)
+    }
+}
+
+/// Radial frequency index of coefficient (u, v) on a g x g plane.
+pub fn radial_index(decomp: Decomp, g: usize, u: usize, v: usize) -> usize {
+    match decomp {
+        Decomp::Dct => u.max(v),
+        Decomp::Fft => {
+            // FFT bin u has physical frequency min(u, g - u) (fold), so
+            // the mask stays Hermitian-symmetric and predictions real.
+            let fu = u.min(g - u);
+            let fv = v.min(g - v);
+            fu.max(fv)
+        }
+        Decomp::None => 0,
+    }
+}
+
+/// Build the [g, g] low-band mask tensor (1.0 = low band).
+pub fn band_mask(spec: BandSpec, g: usize) -> Tensor {
+    let mut data = vec![0.0f32; g * g];
+    for u in 0..g {
+        for v in 0..g {
+            let r = radial_index(spec.decomp, g, u, v);
+            if r <= spec.cutoff || spec.decomp == Decomp::None {
+                data[u * g + v] = 1.0;
+            }
+        }
+    }
+    Tensor::new(vec![g, g], data).expect("mask shape")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dct_mask_is_corner_square() {
+        let m = band_mask(BandSpec::new(Decomp::Dct, 1), 4);
+        // low band = {u,v <= 1} -> 4 ones in the top-left corner
+        let ones: usize = m.data.iter().filter(|v| **v == 1.0).count();
+        assert_eq!(ones, 4);
+        assert_eq!(m.data[0], 1.0); // (0,0)
+        assert_eq!(m.data[1], 1.0); // (0,1)
+        assert_eq!(m.data[4], 1.0); // (1,0)
+        assert_eq!(m.data[5], 1.0); // (1,1)
+        assert_eq!(m.data[15], 0.0); // (3,3)
+    }
+
+    #[test]
+    fn fft_mask_is_hermitian_symmetric() {
+        let g = 8;
+        let m = band_mask(BandSpec::new(Decomp::Fft, 2), g);
+        for u in 0..g {
+            for v in 0..g {
+                let mu = (g - u) % g;
+                let mv = (g - v) % g;
+                assert_eq!(
+                    m.data[u * g + v],
+                    m.data[mu * g + mv],
+                    "asymmetry at ({u},{v})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn none_mask_is_all_ones() {
+        let m = band_mask(BandSpec::new(Decomp::None, 0), 6);
+        assert!(m.data.iter().all(|v| *v == 1.0));
+    }
+
+    #[test]
+    fn bigger_cutoff_is_superset() {
+        let g = 8;
+        for d in [Decomp::Dct, Decomp::Fft] {
+            let a = band_mask(BandSpec::new(d, 1), g);
+            let b = band_mask(BandSpec::new(d, 3), g);
+            for i in 0..g * g {
+                assert!(b.data[i] >= a.data[i]);
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Host-side frequency tools: radix-2 FFT, DCT-II/III, and the band masks
+//! the coordinator feeds to the `predict_*` artifacts.
+//!
+//! The request path runs the transforms *on device* (L1 kernels); this
+//! module exists for (a) mask construction — cheap, done once per
+//! (cutoff, grid) pair —, (b) the offline analyses (Fig. 2 / Fig. 4),
+//! and (c) the band-weighted perceptual proxy in `imaging/`.
+
+pub mod dct;
+pub mod fft;
+pub mod mask;
+
+pub use dct::{dct2, dct_matrix, idct2};
+pub use fft::{fft2, ifft2, Complex};
+pub use mask::{band_mask, BandSpec, Decomp};

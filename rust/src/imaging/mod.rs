@@ -1,0 +1,244 @@
+//! Image metrics (PSNR / SSIM / band-weighted perceptual distance) and
+//! portable pixmap writers — all from scratch (no image crates in the
+//! sandbox).
+//!
+//! Metrics operate on latents in [-1, 1] (the paper computes PSNR/SSIM on
+//! decoded pixels; our latent IS the image space of the sims — DESIGN.md
+//! §1).  The perceptual proxy replaces LPIPS: a DCT-band-weighted MSE
+//! that, like LPIPS, penalizes structural (low-frequency) error more than
+//! texture error.
+
+use anyhow::{bail, Result};
+
+use crate::freq::dct;
+use crate::util::Tensor;
+
+/// Peak signal-to-noise ratio in dB; data range 2.0 ([-1, 1]).
+pub fn psnr(a: &[f32], b: &[f32]) -> f64 {
+    let mse = crate::util::stats::mse(a, b);
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * ((2.0f64 * 2.0) / mse).log10()
+}
+
+/// Global SSIM over a single channel plane (side x side), window = the
+/// whole plane with the standard C1/C2 stabilizers and L = 2.0.
+fn ssim_plane(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    let mut cov = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let dx = *x as f64 - ma;
+        let dy = *y as f64 - mb;
+        va += dx * dx;
+        vb += dy * dy;
+        cov += dx * dy;
+    }
+    va /= n;
+    vb /= n;
+    cov /= n;
+    let l = 2.0f64; // data range
+    let c1 = (0.01 * l) * (0.01 * l);
+    let c2 = (0.03 * l) * (0.03 * l);
+    ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+        / ((ma * ma + mb * mb + c1) * (va + vb + c2))
+}
+
+/// Mean SSIM over 8x8 windows (stride 4) and channels of [S, S, C]
+/// latents — the structural-similarity analogue of the paper's SSIM
+/// column.
+pub fn ssim(a: &Tensor, b: &Tensor) -> Result<f64> {
+    if a.shape != b.shape {
+        bail!("ssim shape mismatch {:?} vs {:?}", a.shape, b.shape);
+    }
+    let (s, c) = latent_dims(a)?;
+    let win = 8.min(s);
+    let stride = (win / 2).max(1);
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    let mut wa = vec![0.0f32; win * win];
+    let mut wb = vec![0.0f32; win * win];
+    for ch in 0..c {
+        let mut y = 0;
+        while y + win <= s {
+            let mut x = 0;
+            while x + win <= s {
+                for wy in 0..win {
+                    for wx in 0..win {
+                        let idx = ((y + wy) * s + (x + wx)) * c + ch;
+                        wa[wy * win + wx] = a.data[idx];
+                        wb[wy * win + wx] = b.data[idx];
+                    }
+                }
+                acc += ssim_plane(&wa, &wb);
+                count += 1;
+                x += stride;
+            }
+            y += stride;
+        }
+    }
+    Ok(acc / count.max(1) as f64)
+}
+
+/// LPIPS stand-in: DCT-band-weighted relative error, weighting the low
+/// (structural) bands 4x the high (texture) bands.  0 = identical;
+/// grows with perceptual difference.  Documented as "band-LPIPS" wherever
+/// reported (DESIGN.md §1).
+pub fn band_lpips(a: &Tensor, b: &Tensor) -> Result<f64> {
+    if a.shape != b.shape {
+        bail!("band_lpips shape mismatch {:?} vs {:?}", a.shape, b.shape);
+    }
+    let (s, c) = latent_dims(a)?;
+    let mut total = 0.0;
+    let mut norm = 0.0;
+    let mut pa = vec![0.0f32; s * s];
+    let mut pb = vec![0.0f32; s * s];
+    for ch in 0..c {
+        for i in 0..s * s {
+            pa[i] = a.data[i * c + ch];
+            pb[i] = b.data[i * c + ch];
+        }
+        let da = dct::dct2(&pa, s);
+        let db = dct::dct2(&pb, s);
+        for u in 0..s {
+            for v in 0..s {
+                let w = if u.max(v) <= s / 4 { 4.0 } else { 1.0 };
+                let d = (da[u * s + v] - db[u * s + v]) as f64;
+                let m = (da[u * s + v] as f64).abs().max(1e-3);
+                total += w * d * d;
+                norm += w * m * m;
+            }
+        }
+    }
+    Ok((total / norm.max(1e-12)).sqrt().min(2.0))
+}
+
+fn latent_dims(t: &Tensor) -> Result<(usize, usize)> {
+    match t.shape.as_slice() {
+        [s1, s2, c] if s1 == s2 => Ok((*s1, *c)),
+        [1, s1, s2, c] if s1 == s2 => Ok((*s1, *c)),
+        other => bail!("expected [S, S, C] latent, got {other:?}"),
+    }
+}
+
+/// Map a 4-channel latent to RGB bytes (fixed linear decode + x`scale`
+/// nearest-neighbour upsample) and write a binary PPM.
+pub fn write_ppm(path: &str, latent: &Tensor, scale: usize) -> Result<()> {
+    let (s, c) = latent_dims(latent)?;
+    if c < 3 {
+        bail!("need >= 3 channels for PPM, got {c}");
+    }
+    let out = s * scale;
+    let mut buf = Vec::with_capacity(out * out * 3);
+    for y in 0..out {
+        for x in 0..out {
+            let sy = y / scale;
+            let sx = x / scale;
+            for ch in 0..3 {
+                let v = latent.data[(sy * s + sx) * c + ch];
+                buf.push((((v + 1.0) * 0.5).clamp(0.0, 1.0) * 255.0) as u8);
+            }
+        }
+    }
+    let header = format!("P6\n{out} {out}\n255\n");
+    let mut bytes = header.into_bytes();
+    bytes.extend_from_slice(&buf);
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// Write a grayscale PGM of one channel.
+pub fn write_pgm(path: &str, latent: &Tensor, channel: usize, scale: usize) -> Result<()> {
+    let (s, c) = latent_dims(latent)?;
+    if channel >= c {
+        bail!("channel {channel} out of range ({c})");
+    }
+    let out = s * scale;
+    let mut buf = Vec::with_capacity(out * out);
+    for y in 0..out {
+        for x in 0..out {
+            let v = latent.data[((y / scale) * s + x / scale) * c + channel];
+            buf.push((((v + 1.0) * 0.5).clamp(0.0, 1.0) * 255.0) as u8);
+        }
+    }
+    let header = format!("P5\n{out} {out}\n255\n");
+    let mut bytes = header.into_bytes();
+    bytes.extend_from_slice(&buf);
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn latent(seed: u64, s: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(
+            vec![s, s, 4],
+            (0..s * s * 4).map(|_| rng.range(-1.0, 1.0)).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn psnr_identity_is_infinite() {
+        let a = latent(1, 16);
+        assert!(psnr(&a.data, &a.data).is_infinite());
+    }
+
+    #[test]
+    fn psnr_orders_by_noise() {
+        let a = latent(1, 16);
+        let mut rng = Rng::new(2);
+        let mut b_small = a.clone();
+        let mut b_big = a.clone();
+        for i in 0..a.len() {
+            let n = rng.normal();
+            b_small.data[i] += 0.01 * n;
+            b_big.data[i] += 0.3 * n;
+        }
+        assert!(psnr(&a.data, &b_small.data) > psnr(&a.data, &b_big.data));
+    }
+
+    #[test]
+    fn ssim_bounds() {
+        let a = latent(3, 16);
+        assert!((ssim(&a, &a).unwrap() - 1.0).abs() < 1e-9);
+        let b = latent(4, 16);
+        let s = ssim(&a, &b).unwrap();
+        assert!(s < 0.9 && s > -1.0, "ssim = {s}");
+    }
+
+    #[test]
+    fn band_lpips_zero_for_identity_and_monotone() {
+        let a = latent(5, 16);
+        assert!(band_lpips(&a, &a).unwrap() < 1e-9);
+        let mut rng = Rng::new(6);
+        let mut b1 = a.clone();
+        let mut b2 = a.clone();
+        for i in 0..a.len() {
+            let n = rng.normal();
+            b1.data[i] += 0.02 * n;
+            b2.data[i] += 0.4 * n;
+        }
+        assert!(
+            band_lpips(&a, &b1).unwrap() < band_lpips(&a, &b2).unwrap()
+        );
+    }
+
+    #[test]
+    fn ppm_writer_produces_header() {
+        let a = latent(7, 8);
+        let path = std::env::temp_dir().join("freqca_test.ppm");
+        write_ppm(path.to_str().unwrap(), &a, 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n16 16\n255\n"));
+        assert_eq!(bytes.len(), 13 + 16 * 16 * 3);
+    }
+}

@@ -1,0 +1,42 @@
+//! # FreqCa — Frequency-Aware Caching for Diffusion Transformer Serving
+//!
+//! Rust + JAX + Pallas reproduction of *"FreqCa: Accelerating Diffusion
+//! Models via Frequency-Aware Caching"* (Liu, Cai, et al., 2025).
+//!
+//! Three layers (see `DESIGN.md`):
+//! * **L1** — Pallas kernels (attention, 2-D DCT, fused band predictor),
+//!   authored in `python/compile/kernels/`, lowered at build time.
+//! * **L2** — the rectified-flow DiT in JAX (`python/compile/model.py`),
+//!   exported as HLO-text artifacts.
+//! * **L3** — this crate: the serving coordinator.  It owns the event
+//!   loop, request routing, dynamic batching, the **O(1) Cumulative
+//!   Residual Feature cache**, the caching *policy engine* (FreqCa and all
+//!   baselines), the PJRT runtime, metrics, CLI and TCP server.  Python is
+//!   never on the request path.
+//!
+//! The crate is std-only besides the `xla` PJRT bindings: JSON, PRNG,
+//! statistics, property-testing and the bench harness are in-repo
+//! substrates (`util`, `benchkit`) because the sandbox ships no other
+//! crates.
+
+pub mod analysis;
+pub mod benchkit;
+pub mod cache;
+pub mod cli;
+pub mod coordinator;
+pub mod freq;
+pub mod harness;
+pub mod imaging;
+pub mod metrics;
+pub mod model;
+pub mod policy;
+pub mod quality;
+pub mod runtime;
+pub mod sampler;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+/// Repository-level default artifact directory (relative to the CWD the
+/// binaries are launched from, i.e. the repo root).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

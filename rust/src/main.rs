@@ -1,0 +1,160 @@
+//! `freqca` — the leader binary: serve / generate / edit / models /
+//! metrics subcommands.  Python is never on this path; everything runs
+//! from the AOT artifacts in `artifacts/`.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use freqca::cli::{Args, USAGE};
+use freqca::coordinator::Request;
+use freqca::metrics::Metrics;
+use freqca::model::weights;
+use freqca::policy;
+use freqca::runtime::{discover_models, Runtime};
+use freqca::sampler::{self, JobSpec, SampleOpts};
+use freqca::server::{self, client::Client, ServeOpts};
+use freqca::{imaging, DEFAULT_ARTIFACT_DIR};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "serve" => cmd_serve(args),
+        "generate" => cmd_generate(args, false),
+        "edit" => cmd_generate(args, true),
+        "models" => cmd_models(args),
+        "metrics" => cmd_metrics(args),
+        "" | "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = ServeOpts {
+        addr: args.str_or("addr", "127.0.0.1:7463"),
+        batch_wait_ms: args.u64_or("wait-ms", 5)?,
+        queue_capacity: args.usize_or("capacity", 256)?,
+        warmup: args
+            .get("warmup")
+            .map(|w| w.split(',').map(String::from).collect())
+            .unwrap_or_default(),
+    };
+    let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
+    server::serve(&artifacts, opts, Arc::new(AtomicBool::new(false)))
+}
+
+fn cmd_generate(args: &Args, edit: bool) -> Result<()> {
+    let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
+    let default_model = if edit { "kontext-sim" } else { "flux-sim" };
+    let model = args.str_or("model", default_model);
+    let policy_desc = args.str_or("policy", "freqca:n=7");
+    let steps = args.usize_or("steps", 50)?;
+    let seed = args.u64_or("seed", 0)?;
+    let prompt_idx = args.u64_or("prompt", seed)?;
+    let out = args.str_or("out", "out.ppm");
+
+    let rt = Runtime::new(&artifacts)?;
+    let cfg = discover_models(&artifacts)?
+        .into_iter()
+        .find(|c| c.name == model)
+        .ok_or_else(|| anyhow!("model '{model}' not found in {artifacts}"))?;
+    if edit != cfg.is_edit {
+        return Err(anyhow!(
+            "model '{model}' is_edit={} but command expects {}",
+            cfg.is_edit,
+            edit
+        ));
+    }
+    let host = weights::load_weights(&artifacts, &cfg.name, cfg.param_count)?;
+    let wbuf = rt.weights_buffer(&cfg, &host)?;
+
+    // Deterministic "prompt": the scene embedding for `prompt_idx` (same
+    // generator as python/compile/data.py's drawbench set, reseeded).
+    let (cond, ref_img) =
+        freqca::workload::prompt(&cfg, prompt_idx, edit)?;
+
+    let decomp = freqca::freq::Decomp::parse(&cfg.decomp)?;
+    let mut pol = policy::parse_policy(&policy_desc, decomp, cfg.grid, cfg.k_hist)?;
+    let metrics = Metrics::new();
+    let result = sampler::generate(
+        &rt,
+        &cfg,
+        wbuf,
+        JobSpec { cond, ref_img, seed },
+        steps,
+        pol.as_mut(),
+        &SampleOpts::default(),
+    )?;
+    metrics.record_request(result.wall_s);
+    imaging::write_ppm(&out, &result.latent, 8)?;
+    println!(
+        "model={} policy={} steps={} (full {} / cached {} / partial {})",
+        cfg.name,
+        pol.name(),
+        steps,
+        result.full_steps,
+        result.cached_steps,
+        result.partial_steps
+    );
+    println!(
+        "latency {:.3}s  flops {:.3} G  flops-speedup {:.2}x  cache {} B",
+        result.wall_s,
+        result.flops / 1e9,
+        result.flops_speedup(&cfg),
+        result.cache_peak_bytes
+    );
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
+    for cfg in discover_models(&artifacts)? {
+        println!(
+            "{:<16} dim={} depth={} tokens={} decomp={} edit={} params={} \
+             batch_sizes={:?}",
+            cfg.name,
+            cfg.dim,
+            cfg.depth,
+            cfg.tokens,
+            cfg.decomp,
+            cfg.is_edit,
+            cfg.param_count,
+            cfg.batch_sizes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7463");
+    let mut client = Client::connect(&addr)?;
+    println!("{}", client.metrics()?);
+    Ok(())
+}
+
+// Re-export Request so integration code referencing main compiles cleanly.
+#[allow(dead_code)]
+fn _unused(_: Request) {}

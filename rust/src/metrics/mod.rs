@@ -1,0 +1,194 @@
+//! Serving metrics: latency histograms, throughput counters, step traces.
+//!
+//! Thread-safe (the server shares one registry across the acceptor and
+//! the generation worker); exported as JSON for the examples and as a
+//! human table for the CLI.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::{stats, Json};
+
+/// Log-scaled latency histogram (HDR-style): buckets at 100us * 1.5^i.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    samples: Vec<f64>,
+}
+
+const BUCKETS: usize = 48;
+const BASE_S: f64 = 100e-6;
+const GROWTH: f64 = 1.5;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: vec![0; BUCKETS], samples: Vec::new() }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, seconds: f64) {
+        let mut idx = 0usize;
+        let mut edge = BASE_S;
+        while seconds > edge && idx + 1 < BUCKETS {
+            edge *= GROWTH;
+            idx += 1;
+        }
+        self.counts[idx] += 1;
+        self.samples.push(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn summary(&self) -> stats::Summary {
+        stats::Summary::of(&self.samples)
+    }
+
+    /// Bucket upper edge in seconds.
+    pub fn bucket_edge(i: usize) -> f64 {
+        BASE_S * GROWTH.powi(i as i32)
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+/// Global metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    request_latency: Histogram,
+    step_latency: Histogram,
+    counters: BTreeMap<String, u64>,
+    started: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        let m = Metrics::default();
+        m.inner.lock().unwrap().started = Some(Instant::now());
+        m
+    }
+
+    pub fn record_request(&self, seconds: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.request_latency.record(seconds);
+        *g.counters.entry("requests_completed".into()).or_insert(0) += 1;
+    }
+
+    pub fn record_step(&self, seconds: f64) {
+        self.inner.lock().unwrap().step_latency.record(seconds);
+    }
+
+    pub fn bump(&self, counter: &str, by: u64) {
+        *self
+            .inner
+            .lock()
+            .unwrap()
+            .counters
+            .entry(counter.to_string())
+            .or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Requests per second since startup.
+    pub fn throughput(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        let elapsed = g
+            .started
+            .map(|s| s.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
+        g.request_latency.count() as f64 / elapsed
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let req = g.request_latency.summary();
+        let step = g.step_latency.summary();
+        let counters = Json::Obj(
+            g.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            (
+                "request_latency_s",
+                Json::obj(vec![
+                    ("n", Json::num(req.n as f64)),
+                    ("mean", Json::num(req.mean)),
+                    ("p50", Json::num(req.p50)),
+                    ("p90", Json::num(req.p90)),
+                    ("p99", Json::num(req.p99)),
+                    ("max", Json::num(req.max)),
+                ]),
+            ),
+            (
+                "step_latency_s",
+                Json::obj(vec![
+                    ("n", Json::num(step.n as f64)),
+                    ("mean", Json::num(step.mean)),
+                    ("p50", Json::num(step.p50)),
+                    ("p99", Json::num(step.p99)),
+                ]),
+            ),
+            ("counters", counters),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_summary() {
+        let mut h = Histogram::default();
+        for ms in [1.0, 2.0, 4.0, 8.0] {
+            h.record(ms / 1000.0);
+        }
+        assert_eq!(h.count(), 4);
+        let s = h.summary();
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 0.00375).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_edges_grow() {
+        assert!(Histogram::bucket_edge(1) > Histogram::bucket_edge(0));
+    }
+
+    #[test]
+    fn metrics_counters_and_json() {
+        let m = Metrics::new();
+        m.record_request(0.5);
+        m.record_request(1.0);
+        m.bump("cache_hits", 3);
+        assert_eq!(m.counter("requests_completed"), 2);
+        assert_eq!(m.counter("cache_hits"), 3);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("request_latency_s").unwrap().get("n").unwrap().as_usize(),
+            Some(2)
+        );
+        assert!(m.throughput() > 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Analytic FLOPs / MACs accounting for the DiT forward pass and the
+//! FreqCa predictor — powers the "FLOPs (T)" and "MACs (T)" columns of
+//! Tables 1-5.  One MAC = 2 FLOPs; we count dense linear algebra only
+//! (norms/activations are <1% and omitted, matching how the caching
+//! literature reports FLOPs).
+
+use super::ModelConfig;
+
+/// FLOPs of one full DiT forward pass at batch `b`.
+pub fn forward_flops(cfg: &ModelConfig, b: usize) -> f64 {
+    let t = cfg.tokens as f64;
+    let d = cfg.dim as f64;
+    let hid = (cfg.mlp_ratio * cfg.dim) as f64;
+    let pd = (cfg.patch * cfg.patch * cfg.channels) as f64;
+
+    // Per block: qkv (T,D)x(D,3D), attention 2*T^2*D, proj (T,D)x(D,D),
+    // AdaLN modulation (D)x(D,6D), MLP (T,D)x(D,hid) + (T,hid)x(hid,D).
+    let per_block = 2.0 * t * d * (3.0 * d)      // qkv
+        + 2.0 * 2.0 * t * t * d                  // scores + weighted sum
+        + 2.0 * t * d * d                        // out proj
+        + 2.0 * d * 6.0 * d                      // modulation
+        + 2.0 * (t * d * hid + t * hid * d);     // mlp
+    let embed = 2.0 * t * pd * d;                // patch embed
+    let head = 2.0 * d * 2.0 * d + 2.0 * t * d * pd;
+    let edit_embed = if cfg.is_edit { embed } else { 0.0 };
+
+    b as f64 * (cfg.depth as f64 * per_block + embed + edit_embed + head)
+}
+
+/// FLOPs of one FreqCa predictor invocation (band split + combine) plus
+/// the head re-projection that converts the predicted CRF to a velocity.
+pub fn predict_flops(cfg: &ModelConfig, b: usize, decomposed: bool) -> f64 {
+    let t = cfg.tokens as f64;
+    let d = cfg.dim as f64;
+    let g = cfg.grid as f64;
+    let k = cfg.k_hist as f64;
+    let pd = (cfg.patch * cfg.patch * cfg.channels) as f64;
+
+    // History accumulation: K weighted adds per band (2 bands when
+    // decomposed, 1 otherwise).
+    let bands = if decomposed { 2.0 } else { 1.0 };
+    let accum = bands * 2.0 * k * t * d;
+    // DCT: 2 forward + 1 inverse 2-D basis matmuls per plane:
+    // each is 2 * (G * G * G) * D * 2 (rows+cols), planes = T / G^2.
+    let transforms = if decomposed {
+        let planes = t / (g * g);
+        3.0 * planes * 2.0 * 2.0 * g * g * g * d
+    } else {
+        0.0
+    };
+    let head = 2.0 * d * 2.0 * d + 2.0 * t * d * pd;
+    b as f64 * (accum + transforms + head)
+}
+
+/// Total FLOPs of serving one request with `full_steps` real forwards and
+/// `cached_steps` predictor invocations.
+pub fn request_flops(
+    cfg: &ModelConfig,
+    full_steps: usize,
+    cached_steps: usize,
+    decomposed: bool,
+) -> f64 {
+    full_steps as f64 * forward_flops(cfg, 1)
+        + cached_steps as f64 * predict_flops(cfg, 1, decomposed)
+}
+
+/// MACs = FLOPs / 2 (reported in Table 5).
+pub fn to_macs(flops: f64) -> f64 {
+    flops / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    fn cfg() -> ModelConfig {
+        let meta = Json::parse(
+            r#"{"name":"t","latent":16,"channels":4,"patch":2,"grid":8,
+            "tokens":64,"dim":192,"depth":6,"heads":4,"cond_dim":32,
+            "mlp_ratio":4,"is_edit":false,"decomp":"dct",
+            "param_count":100,"k_hist":3,"batch_sizes":[1],
+            "artifacts":{}}"#,
+        )
+        .unwrap();
+        ModelConfig::from_meta(&meta).unwrap()
+    }
+
+    #[test]
+    fn forward_dominates_predict() {
+        let c = cfg();
+        let f = forward_flops(&c, 1);
+        let p = predict_flops(&c, 1, true);
+        // The paper's premise: C_pred << C_full.
+        assert!(p < 0.10 * f, "predict {p} not << forward {f}");
+    }
+
+    #[test]
+    fn flops_scale_with_batch() {
+        let c = cfg();
+        assert!((forward_flops(&c, 4) / forward_flops(&c, 1) - 4.0).abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn request_accounting_matches_parts() {
+        let c = cfg();
+        let total = request_flops(&c, 10, 40, true);
+        let expect =
+            10.0 * forward_flops(&c, 1) + 40.0 * predict_flops(&c, 1, true);
+        assert!((total - expect).abs() < 1.0);
+    }
+}

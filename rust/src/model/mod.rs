@@ -1,0 +1,146 @@
+//! Model configuration (parsed from `artifacts/meta_<cfg>.json`), weight
+//! loading, and analytic FLOPs/MACs accounting.
+
+pub mod flops;
+pub mod weights;
+
+use crate::util::Json;
+use anyhow::Result;
+
+/// A model configuration, mirrored from `python/compile/configs.py` via
+/// the exported metadata so Rust and Python can never drift.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub latent: usize,
+    pub channels: usize,
+    pub patch: usize,
+    pub grid: usize,
+    pub tokens: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub cond_dim: usize,
+    pub mlp_ratio: usize,
+    pub is_edit: bool,
+    /// The paper's per-model decomposition choice (App. B.3):
+    /// "dct" for the FLUX sims, "fft" for the Qwen sims.
+    pub decomp: String,
+    pub param_count: usize,
+    /// Cached-history depth K (3 = second-order prediction, §4.4.1).
+    pub k_hist: usize,
+    pub batch_sizes: Vec<usize>,
+    /// Artifact name -> (file, input shapes).
+    pub artifacts: Vec<(String, String, Vec<Vec<usize>>)>,
+}
+
+impl ModelConfig {
+    pub fn from_meta(meta: &Json) -> Result<ModelConfig> {
+        let mut artifacts = Vec::new();
+        if let Some(Json::Obj(m)) = meta.get("artifacts") {
+            for (name, spec) in m {
+                let file = spec.req_str("file")?.to_string();
+                let inputs = spec
+                    .req("inputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect()
+                    })
+                    .collect();
+                artifacts.push((name.clone(), file, inputs));
+            }
+        }
+        Ok(ModelConfig {
+            name: meta.req_str("name")?.to_string(),
+            latent: meta.req_usize("latent")?,
+            channels: meta.req_usize("channels")?,
+            patch: meta.req_usize("patch")?,
+            grid: meta.req_usize("grid")?,
+            tokens: meta.req_usize("tokens")?,
+            dim: meta.req_usize("dim")?,
+            depth: meta.req_usize("depth")?,
+            heads: meta.req_usize("heads")?,
+            cond_dim: meta.req_usize("cond_dim")?,
+            mlp_ratio: meta.req_usize("mlp_ratio")?,
+            is_edit: meta.req("is_edit")?.as_bool().unwrap_or(false),
+            decomp: meta.req_str("decomp")?.to_string(),
+            param_count: meta.req_usize("param_count")?,
+            k_hist: meta.req_usize("k_hist")?,
+            batch_sizes: meta
+                .req("batch_sizes")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            artifacts,
+        })
+    }
+
+    pub fn load(artifact_dir: &str, name: &str) -> Result<ModelConfig> {
+        let path = format!("{artifact_dir}/meta_{name}.json");
+        let meta = Json::parse_file(&path)?;
+        ModelConfig::from_meta(&meta)
+    }
+
+    /// Latent elements per image [S, S, C].
+    pub fn latent_elems(&self) -> usize {
+        self.latent * self.latent * self.channels
+    }
+
+    /// CRF elements per request [T, D] — the paper's O(1) cache unit.
+    pub fn crf_elems(&self) -> usize {
+        self.tokens * self.dim
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.iter().any(|(n, _, _)| n == name)
+    }
+
+    pub fn artifact_file(&self, name: &str) -> Result<String> {
+        self.artifacts
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, f, _)| f.clone())
+            .ok_or_else(|| {
+                anyhow::anyhow!("model {} has no artifact '{name}'", self.name)
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_meta() -> Json {
+        Json::parse(
+            r#"{
+            "name": "t", "latent": 8, "channels": 4, "patch": 2,
+            "grid": 4, "tokens": 16, "dim": 64, "depth": 2, "heads": 2,
+            "cond_dim": 16, "mlp_ratio": 4, "is_edit": false,
+            "decomp": "dct", "param_count": 1000, "k_hist": 3,
+            "batch_sizes": [1, 2],
+            "artifacts": {"fwd_b1": {"file": "t_fwd_b1.hlo.txt",
+                                      "inputs": [[1000], [1,8,8,4]]}}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_meta() {
+        let cfg = ModelConfig::from_meta(&fake_meta()).unwrap();
+        assert_eq!(cfg.name, "t");
+        assert_eq!(cfg.grid, 4);
+        assert_eq!(cfg.crf_elems(), 16 * 64);
+        assert!(cfg.has_artifact("fwd_b1"));
+        assert_eq!(cfg.artifact_file("fwd_b1").unwrap(), "t_fwd_b1.hlo.txt");
+        assert!(cfg.artifact_file("nope").is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! Flat-parameter weight I/O.
+//!
+//! `python/compile/train.py` writes the trained parameter vector as raw
+//! little-endian f32 (`artifacts/weights_<cfg>.bin`); the layout contract
+//! is the ordered `param_specs` list in `python/compile/model.py`.  Rust
+//! only needs the total length (from the metadata) — the vector is
+//! uploaded to the device once and passed as argument 0 of the `fwd` and
+//! `head` executables.
+
+use anyhow::{bail, Context, Result};
+
+/// Load a raw little-endian f32 file.
+pub fn load_f32(path: &str) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path}: length {} is not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a raw little-endian f32 file.
+pub fn save_f32(path: &str, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+}
+
+/// Load the weights for a model config, validating the element count.
+pub fn load_weights(artifact_dir: &str, name: &str, expect: usize) -> Result<Vec<f32>> {
+    let path = format!("{artifact_dir}/weights_{name}.bin");
+    let w = load_f32(&path)?;
+    if w.len() != expect {
+        bail!(
+            "{path}: expected {expect} params (meta_{name}.json), found {}",
+            w.len()
+        );
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("freqca_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let path = path.to_str().unwrap();
+        let data = vec![1.0f32, -2.5, 3.25e-8, f32::MAX];
+        save_f32(path, &data).unwrap();
+        let back = load_f32(path).unwrap();
+        assert_eq!(data, back);
+    }
+
+    #[test]
+    fn rejects_bad_length() {
+        let dir = std::env::temp_dir().join("freqca_weights_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 7]).unwrap();
+        assert!(load_f32(path.to_str().unwrap()).is_err());
+    }
+}

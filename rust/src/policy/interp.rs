@@ -1,0 +1,247 @@
+//! History-combination weights (paper §3.2-1).
+//!
+//! The key identity the whole predictor rests on: a least-squares
+//! polynomial fit of order `m` through K cached samples (s_k, z_k),
+//! evaluated at the target time s*, is a **linear combination of the
+//! cached tensors**:  ẑ(s*) = Σ_k a_k · z_k, where the scalar weights
+//! a = M (MᵀM)⁻¹ φ(s*) depend only on the cached timesteps.  The Rust
+//! coordinator computes `a` per step (O(K·m²) scalar work) and the
+//! on-device artifact applies the tensor combination — so one artifact
+//! family serves FreqCa, TaylorSeer, FORA and every ablation order.
+//!
+//! The basis is the probabilists' Hermite polynomials He_k (the paper's
+//! "second-order Hermite interpolator", following HiCache): He_0 = 1,
+//! He_1 = s, He_2 = s² - 1, He_3 = s³ - 3s.  With K = m+1 points the fit
+//! is interpolation and algebraically equal to Lagrange regardless of
+//! basis; the Hermite basis keeps the normal equations well-conditioned
+//! on the nearly-uniform timestep grids diffusion samplers use.
+
+use anyhow::{bail, Result};
+
+/// Evaluate He_0..He_m at s (probabilists' Hermite, recurrence
+/// He_{k+1} = s·He_k - k·He_{k-1}).
+pub fn hermite_basis(s: f64, order: usize) -> Vec<f64> {
+    let mut phi = Vec::with_capacity(order + 1);
+    phi.push(1.0);
+    if order >= 1 {
+        phi.push(s);
+    }
+    for k in 1..order {
+        let next = s * phi[k] - k as f64 * phi[k - 1];
+        phi.push(next);
+    }
+    phi
+}
+
+/// Solve the square system A x = b by Gaussian elimination with partial
+/// pivoting (dimensions here are <= 4).
+pub fn solve(a: &mut [f64], b: &mut [f64], n: usize) -> Result<Vec<f64>> {
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            bail!("singular system (column {col})");
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        for r in col + 1..n {
+            let f = a[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut s = b[row];
+        for c in row + 1..n {
+            s -= a[row * n + c] * x[c];
+        }
+        x[row] = s / a[row * n + row];
+    }
+    Ok(x)
+}
+
+/// Least-squares polynomial prediction weights.
+///
+/// `s_hist`: cached (normalized) timesteps, oldest first; `s_target`: the
+/// time to predict at; `order`: polynomial order m (requires
+/// `s_hist.len() > m` distinct values).  Returns `a` with
+/// ẑ(s_target) = Σ_k a_k z_k;  Σ_k a_k == 1 always (constants are in the
+/// basis span).
+pub fn poly_weights(s_hist: &[f64], s_target: f64, order: usize) -> Result<Vec<f64>> {
+    let k = s_hist.len();
+    if k == 0 {
+        bail!("empty history");
+    }
+    if k <= order {
+        bail!("order {order} needs {} points, have {k}", order + 1);
+    }
+    let n = order + 1;
+    // Normal equations: (MᵀM) c = Mᵀ e_k for the weight of each sample —
+    // but we need a = M(MᵀM)⁻¹φ(s*), so solve (MᵀM) y = φ(s*), a = M y.
+    let m: Vec<Vec<f64>> =
+        s_hist.iter().map(|s| hermite_basis(*s, order)).collect();
+    let mut mtm = vec![0.0f64; n * n];
+    for r in 0..n {
+        for c in 0..n {
+            mtm[r * n + c] = (0..k).map(|i| m[i][r] * m[i][c]).sum();
+        }
+    }
+    let mut phi = hermite_basis(s_target, order);
+    let y = solve(&mut mtm, &mut phi, n)?;
+    Ok(m.iter().map(|mi| mi.iter().zip(&y).map(|(a, b)| a * b).sum()).collect())
+}
+
+/// Order-0 "direct reuse" weights: take the newest cached entry (the
+/// paper's low-frequency strategy, ẑ_low(t) = z_low(t_prev)).
+pub fn reuse_weights(k: usize) -> Vec<f64> {
+    let mut w = vec![0.0; k];
+    if k > 0 {
+        w[k - 1] = 1.0;
+    }
+    w
+}
+
+/// Weights over a K-slot history where only the newest `avail` slots are
+/// meaningful: pad with zeros on the old side.
+pub fn pad_left(w: &[f64], k: usize) -> Vec<f64> {
+    let mut out = vec![0.0; k];
+    let off = k - w.len();
+    out[off..].copy_from_slice(w);
+    out
+}
+
+/// Convert to f32 for the device.
+pub fn to_f32(w: &[f64]) -> Vec<f32> {
+    w.iter().map(|v| *v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::Rng;
+
+    #[test]
+    fn hermite_values() {
+        let phi = hermite_basis(2.0, 3);
+        assert_eq!(phi, vec![1.0, 2.0, 3.0, 2.0]); // He2=s^2-1, He3=s^3-3s
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        check(
+            "poly-weights-partition-of-unity",
+            Config::default(),
+            |rng: &mut Rng, _| {
+                let k = 2 + rng.below(3); // 2..4 points
+                let order = rng.below(k);
+                let mut s: Vec<f64> = (0..k)
+                    .map(|i| -1.0 + 0.5 * i as f64 + 0.05 * rng.uniform() as f64)
+                    .collect();
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let target = 1.0 + rng.uniform() as f64;
+                (s, target, order)
+            },
+            |(s, target, order)| {
+                let w = poly_weights(s, *target, *order)
+                    .map_err(|e| e.to_string())?;
+                let sum: f64 = w.iter().sum();
+                if (sum - 1.0).abs() < 1e-8 {
+                    Ok(())
+                } else {
+                    Err(format!("sum = {sum}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn exact_on_polynomials() {
+        // If z_k = p(s_k) for a polynomial of degree <= order, the
+        // prediction must be exact — even extrapolating.
+        check(
+            "poly-weights-exact-on-polys",
+            Config::default(),
+            |rng: &mut Rng, _| {
+                let order = rng.below(3); // 0..2
+                let k = order + 1 + rng.below(2); // up to one extra point
+                let coef: Vec<f64> =
+                    (0..=order).map(|_| rng.range(-2.0, 2.0) as f64).collect();
+                let s: Vec<f64> =
+                    (0..k).map(|i| -1.0 + 0.37 * i as f64).collect();
+                let target = 1.3;
+                (coef, s, target, order)
+            },
+            |(coef, s, target, order)| {
+                let p = |x: f64| {
+                    coef.iter()
+                        .enumerate()
+                        .map(|(i, c)| c * x.powi(i as i32))
+                        .sum::<f64>()
+                };
+                let w = poly_weights(s, *target, *order)
+                    .map_err(|e| e.to_string())?;
+                let pred: f64 =
+                    w.iter().zip(s).map(|(wi, si)| wi * p(*si)).sum();
+                let expect = p(*target);
+                if (pred - expect).abs() < 1e-6 * (1.0 + expect.abs()) {
+                    Ok(())
+                } else {
+                    Err(format!("pred {pred} vs {expect}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn lagrange_equivalence_k3_order2() {
+        // Interpolation case: weights equal classical Lagrange weights.
+        let s = [-1.0, -0.5, 0.0];
+        let t = 0.5;
+        let w = poly_weights(&s, t, 2).unwrap();
+        let lagrange = |j: usize| {
+            let mut num = 1.0;
+            let mut den = 1.0;
+            for i in 0..3 {
+                if i != j {
+                    num *= t - s[i];
+                    den *= s[j] - s[i];
+                }
+            }
+            num / den
+        };
+        for j in 0..3 {
+            assert!((w[j] - lagrange(j)).abs() < 1e-9, "{:?}", w);
+        }
+    }
+
+    #[test]
+    fn order_errors() {
+        assert!(poly_weights(&[], 0.0, 0).is_err());
+        assert!(poly_weights(&[0.0], 1.0, 1).is_err()); // needs 2 points
+        // duplicated timesteps -> singular for order >= 1
+        assert!(poly_weights(&[0.3, 0.3], 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn reuse_and_pad() {
+        assert_eq!(reuse_weights(3), vec![0.0, 0.0, 1.0]);
+        assert_eq!(pad_left(&[0.25, 0.75], 3), vec![0.0, 0.25, 0.75]);
+    }
+}

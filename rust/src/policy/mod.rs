@@ -1,0 +1,652 @@
+//! The caching policy engine: FreqCa (paper §3.2) and every baseline the
+//! evaluation tables compare against (FORA, TaylorSeer, TeaCache,
+//! ToCa-like, DuCa-like), behind one `CachePolicy` trait consumed by the
+//! sampler.
+
+pub mod interp;
+
+use crate::freq::{BandSpec, Decomp};
+use anyhow::Result;
+
+/// What the sampler should do at one denoising step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Run the full DiT forward pass and refresh the CRF cache.
+    Full,
+    /// Skip the transformer: predict the CRF from the cache.
+    Predict(PredictPlan),
+    /// ToCa/DuCa-style step: run the full forward but only *refresh* the
+    /// `refresh_frac` most-stale tokens of the cached CRF, predicting the
+    /// rest (token-wise caching).  FLOPs are accounted at
+    /// `refresh_frac` of a full pass, matching how the token-wise papers
+    /// report compute.
+    PartialRefresh { refresh_frac: f64, plan: PredictPlan },
+}
+
+/// A fully-resolved predictor invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictPlan {
+    /// Which decomposition artifact to run (Decomp::None => predict_plain).
+    pub decomp: Decomp,
+    /// Low-band radial cutoff (ignored for Decomp::None).
+    pub cutoff: usize,
+    /// Low-band weights over the K history slots (oldest first).
+    pub lw: Vec<f32>,
+    /// High-band weights (unused for Decomp::None — the low band carries
+    /// everything there).
+    pub hw: Vec<f32>,
+}
+
+/// Everything a policy may inspect when deciding a step.
+pub struct StepCtx<'a> {
+    /// Step index (0-based) and total sampling steps.
+    pub step: usize,
+    pub n_steps: usize,
+    /// Normalized time s = 2t - 1 in [-1, 1] of this step.
+    pub s: f64,
+    /// Normalized times of the cached history entries (oldest first);
+    /// empty before the first full forward.
+    pub hist_s: &'a [f64],
+    /// Current latent (TeaCache's refresh indicator inspects it).
+    pub x: &'a [f32],
+    /// Latent at the last full forward.
+    pub x_at_last_full: Option<&'a [f32]>,
+}
+
+pub trait CachePolicy {
+    /// Human-readable name used in the table rows.
+    fn name(&self) -> String;
+
+    /// Decide the action for one step.  Policies may keep internal state
+    /// (TeaCache's accumulator); the engine calls this exactly once per
+    /// step in order.
+    fn decide(&mut self, ctx: &StepCtx) -> Result<Action>;
+
+    /// Reset internal state between requests.
+    fn reset(&mut self) {}
+}
+
+// ---------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------
+
+/// Weights for an order-`order` prediction over the newest cached entries,
+/// padded to the full K slots.  Order 0 = direct reuse of the newest.
+fn order_weights(hist_s: &[f64], s: f64, order: usize, k: usize) -> Result<Vec<f32>> {
+    let w = if order == 0 {
+        interp::reuse_weights(1)
+    } else {
+        let use_n = (order + 1).min(hist_s.len());
+        let tail = &hist_s[hist_s.len() - use_n..];
+        let eff_order = order.min(use_n - 1);
+        interp::poly_weights(tail, s, eff_order)?
+    };
+    Ok(interp::to_f32(&interp::pad_left(&w, k)))
+}
+
+// ---------------------------------------------------------------------
+// FreqCa (the paper's method)
+// ---------------------------------------------------------------------
+
+/// FreqCa: full forward every N steps; in between, reuse the low band and
+/// Hermite-predict the high band (paper §3.2, Fig. 3).
+pub struct FreqCa {
+    /// Activation interval N (a full forward every N-th step).
+    pub n: usize,
+    pub spec: BandSpec,
+    /// Prediction order for the low band (paper's optimum: 0 = reuse).
+    pub low_order: usize,
+    /// Prediction order for the high band (paper's optimum: 2).
+    pub high_order: usize,
+    /// History capacity K (from the model metadata; 3 in this repo).
+    pub k: usize,
+}
+
+impl FreqCa {
+    pub fn new(n: usize, spec: BandSpec, k: usize) -> FreqCa {
+        FreqCa { n, spec, low_order: 0, high_order: 2, k }
+    }
+}
+
+impl CachePolicy for FreqCa {
+    fn name(&self) -> String {
+        format!(
+            "FreqCa(N={},{},c={},o={}/{})",
+            self.n,
+            self.spec.decomp.name(),
+            self.spec.cutoff,
+            self.low_order,
+            self.high_order
+        )
+    }
+
+    fn decide(&mut self, ctx: &StepCtx) -> Result<Action> {
+        // Warm up until enough history exists for the high-order fit, and
+        // always finish with a final full step (the last step decides the
+        // sample's fine detail; all baselines share this rule).
+        let need = self.high_order.max(self.low_order) + 1;
+        if ctx.step % self.n == 0
+            || ctx.hist_s.len() < need
+            || ctx.step + 1 == ctx.n_steps
+        {
+            return Ok(Action::Full);
+        }
+        Ok(Action::Predict(PredictPlan {
+            decomp: self.spec.decomp,
+            cutoff: self.spec.cutoff,
+            lw: order_weights(ctx.hist_s, ctx.s, self.low_order, self.k)?,
+            hw: order_weights(ctx.hist_s, ctx.s, self.high_order, self.k)?,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// FORA: cache-then-reuse
+// ---------------------------------------------------------------------
+
+/// FORA (Selvaraju et al., 2024): full forward every N steps, plain reuse
+/// of the newest cached feature otherwise.
+pub struct Fora {
+    pub n: usize,
+    pub k: usize,
+}
+
+impl CachePolicy for Fora {
+    fn name(&self) -> String {
+        format!("FORA(N={})", self.n)
+    }
+
+    fn decide(&mut self, ctx: &StepCtx) -> Result<Action> {
+        if ctx.step % self.n == 0 || ctx.hist_s.is_empty()
+            || ctx.step + 1 == ctx.n_steps
+        {
+            return Ok(Action::Full);
+        }
+        Ok(Action::Predict(PredictPlan {
+            decomp: Decomp::None,
+            cutoff: 0,
+            lw: interp::to_f32(&interp::pad_left(
+                &interp::reuse_weights(1),
+                self.k,
+            )),
+            hw: vec![0.0; self.k],
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// TaylorSeer: cache-then-forecast
+// ---------------------------------------------------------------------
+
+/// TaylorSeer (Liu et al., 2025a): full forward every N steps; order-m
+/// Taylor/polynomial forecast of the whole (undecomposed) feature
+/// otherwise.
+pub struct TaylorSeer {
+    pub n: usize,
+    pub order: usize,
+    pub k: usize,
+}
+
+impl CachePolicy for TaylorSeer {
+    fn name(&self) -> String {
+        format!("TaylorSeer(N={},O={})", self.n, self.order)
+    }
+
+    fn decide(&mut self, ctx: &StepCtx) -> Result<Action> {
+        if ctx.step % self.n == 0
+            || ctx.hist_s.len() < self.order + 1
+            || ctx.step + 1 == ctx.n_steps
+        {
+            return Ok(Action::Full);
+        }
+        Ok(Action::Predict(PredictPlan {
+            decomp: Decomp::None,
+            cutoff: 0,
+            lw: order_weights(ctx.hist_s, ctx.s, self.order, self.k)?,
+            hw: vec![0.0; self.k],
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// TeaCache: indicator-thresholded reuse
+// ---------------------------------------------------------------------
+
+/// TeaCache-style adaptive reuse: accumulate the relative-L1 drift of the
+/// model *input* since the last full forward and refresh when it crosses
+/// the threshold `l`.  (The original uses the timestep-modulated input;
+/// our indicator is the latent itself — the same signal up to the first
+/// AdaLN, documented in DESIGN.md §1.)
+pub struct TeaCache {
+    pub threshold: f64,
+    pub k: usize,
+    acc: f64,
+}
+
+impl TeaCache {
+    pub fn new(threshold: f64, k: usize) -> TeaCache {
+        TeaCache { threshold, k, acc: 0.0 }
+    }
+}
+
+impl CachePolicy for TeaCache {
+    fn name(&self) -> String {
+        format!("TeaCache(l={})", self.threshold)
+    }
+
+    fn decide(&mut self, ctx: &StepCtx) -> Result<Action> {
+        let drift = match ctx.x_at_last_full {
+            Some(prev) => crate::util::stats::rel_l1(ctx.x, prev),
+            None => f64::INFINITY,
+        };
+        self.acc += drift;
+        if self.acc >= self.threshold
+            || ctx.hist_s.is_empty()
+            || ctx.step + 1 == ctx.n_steps
+        {
+            self.acc = 0.0;
+            return Ok(Action::Full);
+        }
+        Ok(Action::Predict(PredictPlan {
+            decomp: Decomp::None,
+            cutoff: 0,
+            lw: interp::to_f32(&interp::pad_left(
+                &interp::reuse_weights(1),
+                self.k,
+            )),
+            hw: vec![0.0; self.k],
+        }))
+    }
+
+    fn reset(&mut self) {
+        self.acc = 0.0;
+    }
+}
+
+// ---------------------------------------------------------------------
+// ToCa / DuCa: token-wise caching
+// ---------------------------------------------------------------------
+
+/// ToCa-like token-wise caching (Zou et al., 2025): full refresh every N
+/// steps; in between, the `1 - ratio` most-stale tokens are recomputed
+/// and the rest reused.  On this dense substrate the partial recompute
+/// runs the full forward and scatters the selected tokens (hence, as in
+/// the paper, its *latency* gain lags its *FLOPs* gain — see Table 1
+/// where ToCa reports 4.5x FLOPs but 1.9x latency).
+pub struct Toca {
+    pub n: usize,
+    /// Fraction of tokens kept from cache at partial steps (paper's R).
+    pub ratio: f64,
+    pub k: usize,
+}
+
+impl CachePolicy for Toca {
+    fn name(&self) -> String {
+        format!("ToCa(N={},R={:.0}%)", self.n, self.ratio * 100.0)
+    }
+
+    fn decide(&mut self, ctx: &StepCtx) -> Result<Action> {
+        if ctx.step % self.n == 0 || ctx.hist_s.is_empty()
+            || ctx.step + 1 == ctx.n_steps
+        {
+            return Ok(Action::Full);
+        }
+        Ok(Action::PartialRefresh {
+            refresh_frac: 1.0 - self.ratio,
+            plan: PredictPlan {
+                decomp: Decomp::None,
+                cutoff: 0,
+                lw: interp::to_f32(&interp::pad_left(
+                    &interp::reuse_weights(1),
+                    self.k,
+                )),
+                hw: vec![0.0; self.k],
+            },
+        })
+    }
+}
+
+/// DuCa-like dual caching (Zou et al., 2024): alternates ToCa-style
+/// partial-refresh steps with fully cached (predictor-only) steps, which
+/// is why it is faster than ToCa at similar quality.
+pub struct Duca {
+    pub n: usize,
+    pub ratio: f64,
+    pub k: usize,
+}
+
+impl CachePolicy for Duca {
+    fn name(&self) -> String {
+        format!("DuCa(N={},R={:.0}%)", self.n, self.ratio * 100.0)
+    }
+
+    fn decide(&mut self, ctx: &StepCtx) -> Result<Action> {
+        if ctx.step % self.n == 0 || ctx.hist_s.is_empty()
+            || ctx.step + 1 == ctx.n_steps
+        {
+            return Ok(Action::Full);
+        }
+        let plan = PredictPlan {
+            decomp: Decomp::None,
+            cutoff: 0,
+            lw: interp::to_f32(&interp::pad_left(
+                &interp::reuse_weights(1),
+                self.k,
+            )),
+            hw: vec![0.0; self.k],
+        };
+        if ctx.step % 2 == 1 {
+            Ok(Action::PartialRefresh {
+                refresh_frac: 1.0 - self.ratio,
+                plan,
+            })
+        } else {
+            Ok(Action::Predict(plan))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Adaptive FreqCa (extension, not in the paper)
+// ---------------------------------------------------------------------
+
+/// Adaptive FreqCa: replaces the fixed interval N with a TeaCache-style
+/// relative-L1 drift accumulator while keeping the frequency-decomposed
+/// predictor — unifying all three paradigms (indicator-driven refresh +
+/// low-band reuse + high-band Hermite forecast).  An extension beyond the
+/// paper, evaluated in EXPERIMENTS.md §Extensions.
+pub struct FreqCaAdaptive {
+    pub threshold: f64,
+    pub spec: BandSpec,
+    pub low_order: usize,
+    pub high_order: usize,
+    pub k: usize,
+    acc: f64,
+}
+
+impl FreqCaAdaptive {
+    pub fn new(threshold: f64, spec: BandSpec, k: usize) -> FreqCaAdaptive {
+        FreqCaAdaptive {
+            threshold,
+            spec,
+            low_order: 0,
+            high_order: 2,
+            k,
+            acc: 0.0,
+        }
+    }
+}
+
+impl CachePolicy for FreqCaAdaptive {
+    fn name(&self) -> String {
+        format!(
+            "FreqCa-A(l={},{},c={})",
+            self.threshold,
+            self.spec.decomp.name(),
+            self.spec.cutoff
+        )
+    }
+
+    fn decide(&mut self, ctx: &StepCtx) -> Result<Action> {
+        let drift = match ctx.x_at_last_full {
+            Some(prev) => crate::util::stats::rel_l1(ctx.x, prev),
+            None => f64::INFINITY,
+        };
+        self.acc += drift;
+        let need = self.high_order.max(self.low_order) + 1;
+        if self.acc >= self.threshold
+            || ctx.hist_s.len() < need
+            || ctx.step + 1 == ctx.n_steps
+        {
+            self.acc = 0.0;
+            return Ok(Action::Full);
+        }
+        Ok(Action::Predict(PredictPlan {
+            decomp: self.spec.decomp,
+            cutoff: self.spec.cutoff,
+            lw: order_weights(ctx.hist_s, ctx.s, self.low_order, self.k)?,
+            hw: order_weights(ctx.hist_s, ctx.s, self.high_order, self.k)?,
+        }))
+    }
+
+    fn reset(&mut self) {
+        self.acc = 0.0;
+    }
+}
+
+// ---------------------------------------------------------------------
+// No caching
+// ---------------------------------------------------------------------
+
+/// The uncached baseline (every step is a full forward).
+pub struct NoCache;
+
+impl CachePolicy for NoCache {
+    fn name(&self) -> String {
+        "baseline".into()
+    }
+
+    fn decide(&mut self, _ctx: &StepCtx) -> Result<Action> {
+        Ok(Action::Full)
+    }
+}
+
+/// Parse a policy description like `freqca:n=7`, `fora:n=3`,
+/// `taylorseer:n=6,o=2`, `teacache:l=1.0`, `toca:n=8,r=0.75`,
+/// `duca:n=8,r=0.7`, `baseline` — the CLI/server surface.
+pub fn parse_policy(
+    desc: &str,
+    decomp: Decomp,
+    grid: usize,
+    k: usize,
+) -> Result<Box<dyn CachePolicy + Send>> {
+    let (kind, rest) = match desc.split_once(':') {
+        Some((a, b)) => (a, b),
+        None => (desc, ""),
+    };
+    let mut n = 3usize;
+    let mut order = 2usize;
+    let mut low_order = 0usize;
+    let mut ratio = 0.75f64;
+    let mut threshold = 1.0f64;
+    let mut cutoff = BandSpec::default_cutoff(grid);
+    let mut decomp = decomp;
+    for part in rest.split(',').filter(|p| !p.is_empty()) {
+        let (key, val) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad policy param '{part}'"))?;
+        match key {
+            "n" => n = val.parse()?,
+            "o" | "high" => order = val.parse()?,
+            "low" => low_order = val.parse()?,
+            "r" => ratio = val.parse()?,
+            "l" => threshold = val.parse()?,
+            "c" | "cutoff" => cutoff = val.parse()?,
+            "d" | "decomp" => decomp = Decomp::parse(val)?,
+            _ => anyhow::bail!("unknown policy param '{key}'"),
+        }
+    }
+    let spec = BandSpec::new(decomp, cutoff);
+    Ok(match kind {
+        "freqca" => Box::new(FreqCa {
+            n,
+            spec,
+            low_order,
+            high_order: order,
+            k,
+        }),
+        "freqca-a" => Box::new(FreqCaAdaptive {
+            threshold,
+            spec,
+            low_order,
+            high_order: order,
+            k,
+            acc: 0.0,
+        }),
+        "fora" => Box::new(Fora { n, k }),
+        "taylorseer" => Box::new(TaylorSeer { n, order, k }),
+        "teacache" => Box::new(TeaCache::new(threshold, k)),
+        "toca" => Box::new(Toca { n, ratio, k }),
+        "duca" => Box::new(Duca { n, ratio, k }),
+        "baseline" | "none" => Box::new(NoCache),
+        _ => anyhow::bail!("unknown policy '{kind}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        step: usize,
+        n_steps: usize,
+        hist_s: &'a [f64],
+        x: &'a [f32],
+    ) -> StepCtx<'a> {
+        StepCtx {
+            step,
+            n_steps,
+            s: 0.0,
+            hist_s,
+            x,
+            x_at_last_full: None,
+        }
+    }
+
+    #[test]
+    fn freqca_schedule() {
+        let mut p = FreqCa::new(3, BandSpec::new(Decomp::Dct, 2), 3);
+        let x = [0.0f32; 4];
+        // no history -> full
+        assert_eq!(p.decide(&ctx(1, 50, &[], &x)).unwrap(), Action::Full);
+        // enough history, off-interval -> predict
+        let hist = [-1.0, -0.9, -0.8];
+        match p.decide(&ctx(4, 50, &hist, &x)).unwrap() {
+            Action::Predict(plan) => {
+                assert_eq!(plan.decomp, Decomp::Dct);
+                assert_eq!(plan.lw, vec![0.0, 0.0, 1.0]); // low reuse
+                let sum: f32 = plan.hw.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5); // high-order weights
+            }
+            a => panic!("expected predict, got {a:?}"),
+        }
+        // interval step -> full
+        assert_eq!(p.decide(&ctx(6, 50, &hist, &x)).unwrap(), Action::Full);
+        // last step -> always full
+        assert_eq!(p.decide(&ctx(49, 50, &hist, &x)).unwrap(), Action::Full);
+    }
+
+    #[test]
+    fn teacache_accumulates() {
+        let mut p = TeaCache::new(0.5, 3);
+        let x0 = [1.0f32, 1.0];
+        let x1 = [1.2f32, 1.2]; // rel_l1 = 0.2 per step
+        let hist = [-1.0];
+        let c = StepCtx {
+            step: 1,
+            n_steps: 50,
+            s: 0.0,
+            hist_s: &hist,
+            x: &x1,
+            x_at_last_full: Some(&x0),
+        };
+        // 0.2 < 0.5 -> predict; accumulates to 0.4 -> predict; 0.6 -> full
+        assert!(matches!(p.decide(&c).unwrap(), Action::Predict(_)));
+        assert!(matches!(p.decide(&c).unwrap(), Action::Predict(_)));
+        assert!(matches!(p.decide(&c).unwrap(), Action::Full));
+        // accumulator reset after full
+        assert!(matches!(p.decide(&c).unwrap(), Action::Predict(_)));
+    }
+
+    #[test]
+    fn toca_partial_refresh() {
+        let mut p = Toca { n: 4, ratio: 0.75, k: 3 };
+        let x = [0.0f32; 4];
+        let hist = [-1.0];
+        match p.decide(&ctx(2, 50, &hist, &x)).unwrap() {
+            Action::PartialRefresh { refresh_frac, .. } => {
+                assert!((refresh_frac - 0.25).abs() < 1e-12)
+            }
+            a => panic!("expected partial refresh, got {a:?}"),
+        }
+    }
+
+    #[test]
+    fn duca_alternates() {
+        let mut p = Duca { n: 4, ratio: 0.8, k: 3 };
+        let x = [0.0f32; 4];
+        let hist = [-1.0];
+        assert!(matches!(
+            p.decide(&ctx(1, 50, &hist, &x)).unwrap(),
+            Action::PartialRefresh { .. }
+        ));
+        assert!(matches!(
+            p.decide(&ctx(2, 50, &hist, &x)).unwrap(),
+            Action::Predict(_)
+        ));
+    }
+
+    #[test]
+    fn parser_roundtrip() {
+        let p = parse_policy("freqca:n=7,low=0,o=2,c=3", Decomp::Dct, 8, 3)
+            .unwrap();
+        assert_eq!(p.name(), "FreqCa(N=7,dct,c=3,o=0/2)");
+        let p = parse_policy("taylorseer:n=6,o=2", Decomp::Dct, 8, 3).unwrap();
+        assert_eq!(p.name(), "TaylorSeer(N=6,O=2)");
+        let p = parse_policy("teacache:l=1.4", Decomp::Fft, 8, 3).unwrap();
+        assert_eq!(p.name(), "TeaCache(l=1.4)");
+        assert!(parse_policy("bogus", Decomp::Dct, 8, 3).is_err());
+        assert!(parse_policy("fora:zz=1", Decomp::Dct, 8, 3).is_err());
+    }
+
+    #[test]
+    fn freqca_adaptive_accumulates_and_predicts_banded() {
+        let mut p =
+            FreqCaAdaptive::new(0.5, BandSpec::new(Decomp::Dct, 2), 3);
+        let x0 = [1.0f32, 1.0];
+        let x1 = [1.2f32, 1.2]; // rel_l1 = 0.2 per step
+        let hist = [-1.0, -0.9, -0.8];
+        let c = StepCtx {
+            step: 4,
+            n_steps: 50,
+            s: -0.7,
+            hist_s: &hist,
+            x: &x1,
+            x_at_last_full: Some(&x0),
+        };
+        // 0.2 -> predict (banded!), 0.4 -> predict, 0.6 -> full + reset
+        match p.decide(&c).unwrap() {
+            Action::Predict(plan) => {
+                assert_eq!(plan.decomp, Decomp::Dct);
+                assert_eq!(plan.lw, vec![0.0, 0.0, 1.0]);
+            }
+            a => panic!("expected banded predict, got {a:?}"),
+        }
+        assert!(matches!(p.decide(&c).unwrap(), Action::Predict(_)));
+        assert!(matches!(p.decide(&c).unwrap(), Action::Full));
+        // warmup rule: too-short history forces Full regardless of drift
+        let short = [-1.0];
+        let c2 = StepCtx { hist_s: &short, ..c };
+        assert!(matches!(p.decide(&c2).unwrap(), Action::Full));
+    }
+
+    #[test]
+    fn parses_adaptive() {
+        let p = parse_policy("freqca-a:l=0.8,c=3", Decomp::Fft, 8, 3).unwrap();
+        assert_eq!(p.name(), "FreqCa-A(l=0.8,fft,c=3)");
+    }
+
+    #[test]
+    fn fora_reuses_newest() {
+        let mut p = Fora { n: 3, k: 3 };
+        let x = [0.0f32; 4];
+        let hist = [-1.0, -0.8];
+        match p.decide(&ctx(4, 50, &hist, &x)).unwrap() {
+            Action::Predict(plan) => {
+                assert_eq!(plan.decomp, Decomp::None);
+                assert_eq!(plan.lw, vec![0.0, 0.0, 1.0]);
+            }
+            a => panic!("{a:?}"),
+        }
+    }
+}

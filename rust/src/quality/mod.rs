@@ -1,0 +1,127 @@
+//! Quality proxies for the paper's reward metrics (DESIGN.md §1).
+//!
+//! The paper reports ImageReward / CLIP (generation) and GEdit Q_SC /
+//! Q_PQ / Q_O (editing), all of which require pretrained reward models
+//! that do not exist in this sandbox.  What those metrics *measure in the
+//! tables* is degradation relative to the uncached 50-step baseline, so
+//! the proxies are built on directly computable fidelity:
+//!
+//! * `proxy_image_reward` — maps latent MSE to the uncached reference
+//!   through a negative exponential calibrated so that (a) the uncached
+//!   baseline scores the paper's baseline value and (b) a fully decohered
+//!   sample scores ~0.  Preserves ordering, which is all the tables use.
+//! * `clip_proxy` — cosine similarity between the generated latent and
+//!   the analytic render of its conditioning (semantic alignment),
+//!   mapped to the paper's CLIP range (~28-36).
+//! * `gedit_scores` — Q_SC from cond-consistency, Q_PQ from SSIM to the
+//!   uncached edit, Q_O as the GEdit-style blend.
+
+use crate::imaging;
+use crate::util::{stats, Tensor};
+use anyhow::Result;
+
+/// Calibration anchors (paper Table 1 baseline values for FLUX.1-dev).
+pub const BASELINE_IMAGE_REWARD: f64 = 0.99;
+pub const BASELINE_CLIP: f64 = 32.64;
+
+/// ImageReward proxy: baseline * exp(-alpha * MSE(latent, reference)).
+/// alpha chosen so an MSE of 0.25 (badly degraded on [-1,1] latents)
+/// costs ~30% of the score — the scale of the paper's worst rows.
+pub fn proxy_image_reward(latent: &Tensor, reference: &Tensor) -> f64 {
+    let mse = stats::mse(&latent.data, &reference.data);
+    BASELINE_IMAGE_REWARD * (-1.43 * mse).exp()
+}
+
+/// CLIP-score proxy from semantic (cond-render) alignment:
+/// cosine in [-1, 1] mapped to the paper's observed CLIP band.
+pub fn clip_proxy(latent: &Tensor, cond_render: &Tensor) -> f64 {
+    let cos = stats::cosine(&latent.data, &cond_render.data);
+    28.0 + 4.0 * ((cos + 1.0) / 2.0) * 2.0 // 28..36
+}
+
+/// GEdit-style triple for editing quality.
+pub struct GeditScores {
+    pub q_sc: f64,
+    pub q_pq: f64,
+    pub q_o: f64,
+}
+
+/// Q_SC: semantic consistency with the *edited* target render;
+/// Q_PQ: perceptual quality = SSIM to the uncached edit of the same
+/// request; Q_O: GEdit's overall aggregation (quality-gated semantic
+/// score, approximated as the geometric blend used in the benchmark).
+pub fn gedit_scores(
+    latent: &Tensor,
+    uncached: &Tensor,
+    target_render: &Tensor,
+) -> Result<GeditScores> {
+    let cos = stats::cosine(&latent.data, &target_render.data);
+    let q_sc = 10.0 * ((cos + 1.0) / 2.0).powf(0.5);
+    let ss = imaging::ssim(latent, uncached)?;
+    let q_pq = 10.0 * ((ss + 1.0) / 2.0).powf(0.75);
+    let q_o = (q_sc * q_pq).sqrt() * 0.95;
+    Ok(GeditScores { q_sc, q_pq, q_o })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn latent(seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(
+            vec![16, 16, 4],
+            (0..16 * 16 * 4).map(|_| rng.range(-1.0, 1.0)).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn image_reward_peaks_at_identity() {
+        let a = latent(1);
+        let r = proxy_image_reward(&a, &a);
+        assert!((r - BASELINE_IMAGE_REWARD).abs() < 1e-12);
+        let mut b = a.clone();
+        for v in b.data.iter_mut() {
+            *v += 0.3;
+        }
+        assert!(proxy_image_reward(&b, &a) < r);
+    }
+
+    #[test]
+    fn image_reward_monotone_in_mse() {
+        let a = latent(2);
+        let mut rng = Rng::new(3);
+        let mut prev = f64::INFINITY;
+        for noise in [0.01f32, 0.1, 0.3, 0.8] {
+            let mut b = a.clone();
+            for v in b.data.iter_mut() {
+                *v += noise * rng.normal();
+            }
+            let r = proxy_image_reward(&b, &a);
+            assert!(r < prev, "noise {noise}: {r} !< {prev}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn clip_proxy_band() {
+        let a = latent(4);
+        let c = clip_proxy(&a, &a);
+        assert!((c - 36.0).abs() < 1e-6);
+        let mut neg = a.clone();
+        for v in neg.data.iter_mut() {
+            *v = -*v;
+        }
+        assert!((clip_proxy(&neg, &a) - 28.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gedit_scores_bounded() {
+        let a = latent(5);
+        let g = gedit_scores(&a, &a, &a).unwrap();
+        assert!(g.q_sc <= 10.0 && g.q_pq <= 10.0 && g.q_o <= 10.0);
+        assert!(g.q_pq > 9.0); // identical to uncached
+    }
+}

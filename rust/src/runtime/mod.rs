@@ -1,0 +1,221 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them once, keeps
+//! model weights resident on the device, and executes from the L3 hot
+//! path.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
+//! >= 0.5 serialized protos carry 64-bit instruction ids which the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).  All artifacts are lowered with
+//! `return_tuple=True`, so every execution returns a tuple literal that is
+//! decomposed here.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::Tensor;
+
+/// A compiled artifact plus bookkeeping.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative host time spent inside `execute` for this artifact.
+    total_exec_s: f64,
+    execs: u64,
+}
+
+/// The PJRT runtime: one CPU client, an executable cache keyed by
+/// artifact file name, and per-model device-resident weight buffers.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: String,
+    compiled: RefCell<HashMap<String, Rc<RefCell<Compiled>>>>,
+    weights: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
+    /// Cumulative compile time (startup cost, reported by metrics).
+    pub compile_s: RefCell<f64>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifact_dir: artifact_dir.to_string(),
+            compiled: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            compile_s: RefCell::new(0.0),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &str {
+        &self.artifact_dir
+    }
+
+    /// Compile (or fetch from cache) the executable for `file`.
+    fn get_compiled(&self, file: &str) -> Result<Rc<RefCell<Compiled>>> {
+        if let Some(c) = self.compiled.borrow().get(file) {
+            return Ok(c.clone());
+        }
+        let path = format!("{}/{}", self.artifact_dir, file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+        *self.compile_s.borrow_mut() += t0.elapsed().as_secs_f64();
+        let c = Rc::new(RefCell::new(Compiled {
+            exe,
+            total_exec_s: 0.0,
+            execs: 0,
+        }));
+        self.compiled.borrow_mut().insert(file.to_string(), c.clone());
+        Ok(c)
+    }
+
+    /// Pre-compile an artifact so first-request latency excludes XLA
+    /// compilation (used by the server warmup path).
+    pub fn warmup(&self, cfg: &ModelConfig, artifact: &str) -> Result<()> {
+        let file = cfg.artifact_file(artifact)?;
+        self.get_compiled(&file).map(|_| ())
+    }
+
+    /// Upload (once) and return the device-resident weight buffer.
+    pub fn weights_buffer(
+        &self,
+        cfg: &ModelConfig,
+        host: &[f32],
+    ) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(b) = self.weights.borrow().get(&cfg.name) {
+            return Ok(b.clone());
+        }
+        let buf = self
+            .client
+            .buffer_from_host_buffer(host, &[host.len()], None)
+            .map_err(|e| anyhow!("uploading weights for {}: {e:?}", cfg.name))?;
+        let rc = Rc::new(buf);
+        self.weights.borrow_mut().insert(cfg.name.clone(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let dims: Vec<usize> = if t.shape.is_empty() {
+            vec![]
+        } else {
+            t.shape.clone()
+        };
+        self.client
+            .buffer_from_host_buffer(&t.data, &dims, None)
+            .map_err(|e| anyhow!("uploading tensor {:?}: {e:?}", t.shape))
+    }
+
+    /// Execute an artifact of `cfg` with device buffers, returning the
+    /// decomposed tuple as host tensors.
+    pub fn exec(
+        &self,
+        cfg: &ModelConfig,
+        artifact: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let file = cfg.artifact_file(artifact)?;
+        let compiled = self.get_compiled(&file)?;
+        let t0 = Instant::now();
+        let outs = compiled
+            .borrow()
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {artifact} of {}: {e:?}", cfg.name))?;
+        let mut c = compiled.borrow_mut();
+        c.total_exec_s += t0.elapsed().as_secs_f64();
+        c.execs += 1;
+        drop(c);
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {artifact}: {e:?}"))?;
+        decompose(lit)
+    }
+
+    /// Convenience: upload host tensors, then exec (weights prepended if
+    /// given).
+    pub fn exec_host(
+        &self,
+        cfg: &ModelConfig,
+        artifact: &str,
+        weights: Option<&Rc<xla::PjRtBuffer>>,
+        args: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for t in args {
+            bufs.push(self.upload(t)?);
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(bufs.len() + 1);
+        if let Some(w) = weights {
+            refs.push(w.as_ref());
+        }
+        refs.extend(bufs.iter());
+        self.exec(cfg, artifact, &refs)
+    }
+
+    /// Per-artifact cumulative execution statistics:
+    /// (artifact file, executions, total seconds).
+    pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        self.compiled
+            .borrow()
+            .iter()
+            .map(|(k, v)| {
+                let c = v.borrow();
+                (k.clone(), c.execs, c.total_exec_s)
+            })
+            .collect()
+    }
+}
+
+/// Decompose a (possibly tuple) literal into host tensors.
+fn decompose(lit: xla::Literal) -> Result<Vec<Tensor>> {
+    let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let parts = match shape {
+        xla::Shape::Tuple(_) => lit
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing tuple: {e:?}"))?,
+        _ => vec![lit],
+    };
+    parts
+        .into_iter()
+        .map(|p| {
+            let ashape = p
+                .array_shape()
+                .map_err(|e| anyhow!("array shape: {e:?}"))?;
+            let dims: Vec<usize> =
+                ashape.dims().iter().map(|d| *d as usize).collect();
+            let data = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+            Tensor::new(dims, data)
+        })
+        .collect()
+}
+
+/// Load every model config present in the artifact directory.
+pub fn discover_models(artifact_dir: &str) -> Result<Vec<ModelConfig>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(artifact_dir)
+        .with_context(|| format!("listing {artifact_dir}"))?
+    {
+        let name = entry?.file_name().to_string_lossy().to_string();
+        if let Some(stem) = name
+            .strip_prefix("meta_")
+            .and_then(|s| s.strip_suffix(".json"))
+        {
+            out.push(ModelConfig::load(artifact_dir, stem)?);
+        }
+    }
+    out.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(out)
+}

@@ -1,0 +1,503 @@
+//! The rectified-flow sampling engine (batched).
+//!
+//! Owns the denoising loop: at every step it asks the `CachePolicy` for
+//! an action, runs the corresponding artifact(s) through the PJRT
+//! runtime, maintains the O(1) CRF cache, and integrates the Euler update
+//! x <- x - dt * v.  Sampling convention (matches `python/compile/`):
+//! x_t = (1 - t) x0 + t eps,  v = eps - x0,  t: 1 -> 0.
+//!
+//! A batch of B compatible requests (same model / policy / step count —
+//! guaranteed by the dynamic batcher) shares one `fwd_b{B}` /
+//! `predict_*_b{B}` execution per step; the CRF cache then holds
+//! [B, T, D] snapshots, still O(1) per request.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cache::CrfCache;
+use crate::freq::{band_mask, BandSpec, Decomp};
+use crate::model::{flops, ModelConfig};
+use crate::policy::{Action, CachePolicy, PredictPlan, StepCtx};
+use crate::runtime::Runtime;
+use crate::util::{Rng, Tensor};
+
+/// One request's inputs within a batch.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Conditioning ("prompt embedding") [cond_dim].
+    pub cond: Vec<f32>,
+    /// Reference latent for editing models [S*S*C].
+    pub ref_img: Option<Vec<f32>>,
+    pub seed: u64,
+}
+
+/// A batch of compatible jobs.
+pub struct BatchJob<'a> {
+    pub cfg: &'a ModelConfig,
+    pub weights: Rc<xla::PjRtBuffer>,
+    pub jobs: Vec<JobSpec>,
+    pub n_steps: usize,
+}
+
+/// Per-step record (drives the analyses and EXPERIMENTS.md figures).
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub t: f32,
+    pub action: StepAction,
+    pub wall_s: f64,
+    /// MSE of predicted vs true CRF — only populated in eval mode.
+    pub pred_mse: Option<f64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepAction {
+    Full,
+    Cached,
+    Partial,
+}
+
+/// Result of serving one request of the batch.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub latent: Tensor,
+    pub full_steps: usize,
+    pub cached_steps: usize,
+    pub partial_steps: usize,
+    /// Wall time of the whole batch (requests complete together).
+    pub wall_s: f64,
+    /// This request's share of the batch FLOPs.
+    pub flops: f64,
+    pub cache_peak_bytes: usize,
+    pub steps: Vec<StepRecord>,
+}
+
+impl RunResult {
+    /// FLOPs speedup vs running every step fully.
+    pub fn flops_speedup(&self, cfg: &ModelConfig) -> f64 {
+        let n = self.full_steps + self.cached_steps + self.partial_steps;
+        n as f64 * flops::forward_flops(cfg, 1) / self.flops
+    }
+}
+
+/// Options controlling the sampler.
+#[derive(Debug, Clone, Default)]
+pub struct SampleOpts {
+    /// Also run the full forward at predicted steps to record the
+    /// prediction error (Fig. 4 harness).  Slower; never used in serving.
+    pub record_pred_error: bool,
+}
+
+/// Serve a batch; returns one `RunResult` per job (same order).
+pub fn generate_batch(
+    rt: &Runtime,
+    batch: &BatchJob,
+    policy: &mut dyn CachePolicy,
+    opts: &SampleOpts,
+) -> Result<Vec<RunResult>> {
+    let cfg = batch.cfg;
+    let b = batch.jobs.len();
+    if b == 0 {
+        bail!("empty batch");
+    }
+    if !cfg.has_artifact(&format!("fwd_b{b}")) {
+        bail!(
+            "model {} has no artifacts for batch size {b} (exported: {:?})",
+            cfg.name,
+            cfg.batch_sizes
+        );
+    }
+    policy.reset();
+
+    // Assemble batched inputs.
+    let mut x_data = Vec::with_capacity(b * cfg.latent_elems());
+    let mut cond_data = Vec::with_capacity(b * cfg.cond_dim);
+    let mut ref_data = Vec::new();
+    for job in &batch.jobs {
+        let mut rng = Rng::new(job.seed);
+        x_data.extend(rng.normal_vec(cfg.latent_elems()));
+        if job.cond.len() != cfg.cond_dim {
+            bail!("cond has {} dims, expected {}", job.cond.len(), cfg.cond_dim);
+        }
+        cond_data.extend_from_slice(&job.cond);
+        match (&job.ref_img, cfg.is_edit) {
+            (Some(r), true) => {
+                if r.len() != cfg.latent_elems() {
+                    bail!("ref_img wrong size");
+                }
+                ref_data.extend_from_slice(r);
+            }
+            (None, true) => bail!("editing model {} needs ref_img", cfg.name),
+            (Some(_), false) => {
+                bail!("ref_img given but {} is not an editing model", cfg.name)
+            }
+            (None, false) => {}
+        }
+    }
+    let mut x = Tensor::new(
+        vec![b, cfg.latent, cfg.latent, cfg.channels],
+        x_data,
+    )?;
+    let cond = Tensor::new(vec![b, cfg.cond_dim], cond_data)?;
+    let ref_t = if cfg.is_edit {
+        Some(Tensor::new(
+            vec![b, cfg.latent, cfg.latent, cfg.channels],
+            ref_data,
+        )?)
+    } else {
+        None
+    };
+
+    let mut cache = CrfCache::new(cfg.k_hist);
+    // Device-resident stack of the cache, re-uploaded only when the cache
+    // mutates (perf-pass fix #2: between refreshes every predicted step
+    // reuses the same [B, K, T, D] buffer).
+    let mut hist_buf: Option<(u64, xla::PjRtBuffer)> = None;
+    let mut token_age = vec![0u32; cfg.tokens];
+    let mut x_at_last_full: Option<Vec<f32>> = None;
+    let mut full_steps = 0;
+    let mut cached_steps = 0;
+    let mut partial_steps = 0;
+    let mut total_flops = 0.0;
+    let mut steps = Vec::with_capacity(batch.n_steps);
+    let n = batch.n_steps;
+    let dt = 1.0f32 / n as f32;
+    let t0 = Instant::now();
+
+    for i in 0..n {
+        let t = 1.0 - i as f32 * dt;
+        let s = 2.0 * t as f64 - 1.0;
+        let hist_s = cache.times();
+        let action = {
+            let ctx = StepCtx {
+                step: i,
+                n_steps: n,
+                s,
+                hist_s: &hist_s,
+                x: &x.data,
+                x_at_last_full: x_at_last_full.as_deref(),
+            };
+            policy.decide(&ctx)?
+        };
+        let st0 = Instant::now();
+        let mut pred_mse = None;
+
+        let (v, step_action) = match action {
+            Action::Full => {
+                let (v, crf) =
+                    run_fwd(rt, batch, b, &x, &cond, ref_t.as_ref(), t)?;
+                cache.push(s, crf);
+                x_at_last_full = Some(x.data.clone());
+                token_age.iter_mut().for_each(|a| *a = 0);
+                full_steps += 1;
+                total_flops += flops::forward_flops(cfg, b);
+                (v, StepAction::Full)
+            }
+            Action::Predict(plan) => {
+                let crf_hat =
+                    run_predict(rt, cfg, b, &cache, &plan, &mut hist_buf)?;
+                if opts.record_pred_error {
+                    let (_, crf_true) =
+                        run_fwd(rt, batch, b, &x, &cond, ref_t.as_ref(), t)?;
+                    pred_mse = Some(crate::util::stats::mse(
+                        &crf_hat.data,
+                        &crf_true.data,
+                    ));
+                }
+                let v = run_head(rt, batch, b, &crf_hat, &cond, t)?;
+                cached_steps += 1;
+                total_flops +=
+                    flops::predict_flops(cfg, b, plan.decomp != Decomp::None);
+                token_age.iter_mut().for_each(|a| *a += 1);
+                (v, StepAction::Cached)
+            }
+            Action::PartialRefresh { refresh_frac, plan } => {
+                // Token-wise caching: compute fresh features, refresh the
+                // most-stale tokens, reuse the rest from the prediction.
+                let (_, crf_fresh) =
+                    run_fwd(rt, batch, b, &x, &cond, ref_t.as_ref(), t)?;
+                let crf_hat =
+                    run_predict(rt, cfg, b, &cache, &plan, &mut hist_buf)?;
+                let blended = blend_tokens(
+                    cfg,
+                    b,
+                    &crf_hat,
+                    &crf_fresh,
+                    &mut token_age,
+                    refresh_frac,
+                )?;
+                cache.replace_newest(s, blended.clone());
+                let v = run_head(rt, batch, b, &blended, &cond, t)?;
+                partial_steps += 1;
+                // Token-wise papers account compute at the refreshed
+                // fraction of a full pass (dense wall-clock differs —
+                // exactly the latency-lags-FLOPs gap Table 1 shows).
+                total_flops += refresh_frac * flops::forward_flops(cfg, b)
+                    + flops::predict_flops(cfg, b, false);
+                (v, StepAction::Partial)
+            }
+        };
+
+        // Euler step: x <- x - dt * v.
+        debug_assert_eq!(v.shape, x.shape);
+        for (xv, vv) in x.data.iter_mut().zip(&v.data) {
+            *xv -= dt * vv;
+        }
+        steps.push(StepRecord {
+            step: i,
+            t,
+            action: step_action,
+            wall_s: st0.elapsed().as_secs_f64(),
+            pred_mse,
+        });
+    }
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    let cache_peak = cache.peak_bytes() / b; // per-request share
+    (0..b)
+        .map(|j| {
+            Ok(RunResult {
+                latent: x.slice0(j, j + 1)?.reshape(vec![
+                    cfg.latent,
+                    cfg.latent,
+                    cfg.channels,
+                ])?,
+                full_steps,
+                cached_steps,
+                partial_steps,
+                wall_s,
+                flops: total_flops / b as f64,
+                cache_peak_bytes: cache_peak,
+                steps: steps.clone(),
+            })
+        })
+        .collect()
+}
+
+/// Single-request convenience wrapper (batch size 1).
+pub fn generate(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    weights: Rc<xla::PjRtBuffer>,
+    job: JobSpec,
+    n_steps: usize,
+    policy: &mut dyn CachePolicy,
+    opts: &SampleOpts,
+) -> Result<RunResult> {
+    let batch = BatchJob { cfg, weights, jobs: vec![job], n_steps };
+    Ok(generate_batch(rt, &batch, policy, opts)?.remove(0))
+}
+
+fn run_fwd(
+    rt: &Runtime,
+    batch: &BatchJob,
+    b: usize,
+    x: &Tensor,
+    cond: &Tensor,
+    ref_t: Option<&Tensor>,
+    t: f32,
+) -> Result<(Tensor, Tensor)> {
+    let tt = Tensor::new(vec![b], vec![t; b])?;
+    let mut args: Vec<&Tensor> = vec![x, cond, &tt];
+    if let Some(r) = ref_t {
+        args.push(r);
+    }
+    let mut out = rt.exec_host(
+        batch.cfg,
+        &format!("fwd_b{b}"),
+        Some(&batch.weights),
+        &args,
+    )?;
+    if out.len() != 2 {
+        return Err(anyhow!("fwd_b{b} returned {} outputs", out.len()));
+    }
+    let crf = out.pop().unwrap();
+    let v = out.pop().unwrap();
+    Ok((v, crf))
+}
+
+fn run_head(
+    rt: &Runtime,
+    batch: &BatchJob,
+    b: usize,
+    crf: &Tensor,
+    cond: &Tensor,
+    t: f32,
+) -> Result<Tensor> {
+    let cfg = batch.cfg;
+    let tt = Tensor::new(vec![b], vec![t; b])?;
+    let crf_b = crf.clone().reshape(vec![b, cfg.tokens, cfg.dim])?;
+    let mut out = rt.exec_host(
+        cfg,
+        &format!("head_b{b}"),
+        Some(&batch.weights),
+        &[&crf_b, cond, &tt],
+    )?;
+    out.pop().ok_or_else(|| anyhow!("head_b{b} returned nothing"))
+}
+
+/// Transpose the cache stack [K, B, T, D] -> [B, K, T, D].
+fn transpose_kb(hist: &Tensor, k: usize, b: usize, row: usize) -> Tensor {
+    let mut data = vec![0.0f32; hist.data.len()];
+    for ki in 0..k {
+        for bi in 0..b {
+            let src = (ki * b + bi) * row;
+            let dst = (bi * k + ki) * row;
+            data[dst..dst + row].copy_from_slice(&hist.data[src..src + row]);
+        }
+    }
+    Tensor { shape: vec![b, k, row], data }
+}
+
+fn run_predict(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    b: usize,
+    cache: &CrfCache,
+    plan: &PredictPlan,
+    hist_buf: &mut Option<(u64, xla::PjRtBuffer)>,
+) -> Result<Tensor> {
+    // Upload the stacked history only when the cache has mutated since
+    // the last predicted step.
+    let need_upload =
+        hist_buf.as_ref().map(|(g, _)| *g != cache.generation()).unwrap_or(true);
+    if need_upload {
+        let hist = cache
+            .stacked() // [K, B, T, D] (each entry is a [B, T, D] snapshot)
+            .ok_or_else(|| anyhow!("predict with empty cache"))?;
+        let row = cfg.tokens * cfg.dim;
+        let hist_b = transpose_kb(&hist, cfg.k_hist, b, row).reshape(vec![
+            b,
+            cfg.k_hist,
+            cfg.tokens,
+            cfg.dim,
+        ])?;
+        *hist_buf = Some((cache.generation(), rt.upload(&hist_b)?));
+    }
+    let hist_dev = &hist_buf.as_ref().unwrap().1;
+    let mut out = match plan.decomp {
+        Decomp::None => {
+            let w = rt.upload(&Tensor::new(vec![cfg.k_hist], plan.lw.clone())?)?;
+            rt.exec(cfg, &format!("predict_plain_b{b}"), &[hist_dev, &w])?
+        }
+        d => {
+            let mask =
+                rt.upload(&band_mask(BandSpec::new(d, plan.cutoff), cfg.grid))?;
+            let lw = rt.upload(&Tensor::new(vec![cfg.k_hist], plan.lw.clone())?)?;
+            let hw = rt.upload(&Tensor::new(vec![cfg.k_hist], plan.hw.clone())?)?;
+            match d {
+                Decomp::Dct => {
+                    // The DCT basis is a runtime input (0.5.1 constant-
+                    // operand gotcha, see freq::dct::dct_matrix_tensor).
+                    let basis = rt
+                        .upload(&crate::freq::dct::dct_matrix_tensor(cfg.grid))?;
+                    rt.exec(
+                        cfg,
+                        &format!("predict_dct_b{b}"),
+                        &[hist_dev, &mask, &lw, &hw, &basis],
+                    )?
+                }
+                Decomp::Fft => {
+                    let (fr, fi) =
+                        crate::freq::fft::dft_matrices_tensor(cfg.grid);
+                    let fr = rt.upload(&fr)?;
+                    let fi = rt.upload(&fi)?;
+                    rt.exec(
+                        cfg,
+                        &format!("predict_fft_b{b}"),
+                        &[hist_dev, &mask, &lw, &hw, &fr, &fi],
+                    )?
+                }
+                Decomp::None => unreachable!(),
+            }
+        }
+    };
+    let crf = out
+        .pop()
+        .ok_or_else(|| anyhow!("predict artifact returned nothing"))?;
+    // Keep the batch-major layout the cache uses: [B, T, D].
+    crf.reshape(vec![b, cfg.tokens, cfg.dim])
+}
+
+/// Refresh the `refresh_frac` most-stale tokens of `crf_hat` from
+/// `crf_fresh` (same token set across the batch); resets their ages.
+fn blend_tokens(
+    cfg: &ModelConfig,
+    b: usize,
+    crf_hat: &Tensor,
+    crf_fresh: &Tensor,
+    token_age: &mut [u32],
+    refresh_frac: f64,
+) -> Result<Tensor> {
+    let t = cfg.tokens;
+    let d = cfg.dim;
+    let n_refresh = ((t as f64 * refresh_frac).round() as usize).clamp(1, t);
+    // Order tokens by staleness (desc), index asc as tiebreak.
+    let mut order: Vec<usize> = (0..t).collect();
+    order.sort_by(|a, bb| token_age[*bb].cmp(&token_age[*a]).then(a.cmp(bb)));
+    let mut out = crf_hat.clone().reshape(vec![b, t, d])?;
+    let fresh = crf_fresh.clone().reshape(vec![b, t, d])?;
+    for bi in 0..b {
+        for &tok in order.iter().take(n_refresh) {
+            let off = (bi * t + tok) * d;
+            out.data[off..off + d]
+                .copy_from_slice(&fresh.data[off..off + d]);
+        }
+    }
+    for &tok in order.iter().take(n_refresh) {
+        token_age[tok] = 0;
+    }
+    for &tok in order.iter().skip(n_refresh) {
+        token_age[tok] += 1;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_cfg() -> ModelConfig {
+        let meta = crate::util::Json::parse(
+            r#"{"name":"t","latent":4,"channels":1,"patch":2,"grid":2,
+            "tokens":4,"dim":2,"depth":1,"heads":1,"cond_dim":4,
+            "mlp_ratio":4,"is_edit":false,"decomp":"dct","param_count":8,
+            "k_hist":3,"batch_sizes":[1],"artifacts":{}}"#,
+        )
+        .unwrap();
+        ModelConfig::from_meta(&meta).unwrap()
+    }
+
+    #[test]
+    fn blend_refreshes_stalest() {
+        let cfg = mini_cfg();
+        let hat = Tensor::new(vec![4, 2], vec![0.0; 8]).unwrap();
+        let fresh = Tensor::new(vec![4, 2], vec![1.0; 8]).unwrap();
+        let mut ages = vec![5, 0, 9, 1];
+        let out = blend_tokens(&cfg, 1, &hat, &fresh, &mut ages, 0.5).unwrap();
+        // tokens 2 and 0 are stalest -> refreshed
+        assert_eq!(out.data, vec![1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(ages, vec![0, 1, 0, 2]);
+    }
+
+    #[test]
+    fn transpose_kb_roundtrip_layout() {
+        // hist [K=2, B=2, row=3]
+        let hist = Tensor::new(
+            vec![2, 2, 3],
+            vec![
+                0., 1., 2., /* k0 b0 */ 3., 4., 5., /* k0 b1 */
+                6., 7., 8., /* k1 b0 */ 9., 10., 11., /* k1 b1 */
+            ],
+        )
+        .unwrap();
+        let t = transpose_kb(&hist, 2, 2, 3);
+        assert_eq!(t.shape, vec![2, 2, 3]);
+        // b0: k0 then k1
+        assert_eq!(&t.data[0..6], &[0., 1., 2., 6., 7., 8.]);
+        // b1: k0 then k1
+        assert_eq!(&t.data[6..12], &[3., 4., 5., 9., 10., 11.]);
+    }
+}

@@ -1,0 +1,60 @@
+//! Blocking TCP client for the line-delimited JSON protocol — used by the
+//! examples and integration tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Request, Response};
+use crate::util::Json;
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Json::parse(&reply)
+    }
+
+    /// Submit one generation/edit request and wait for the response.
+    pub fn generate(&mut self, request: &Request) -> Result<Response> {
+        let j = self.roundtrip(&request.to_json().to_string())?;
+        Ok(Response::from_json(&j))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let j = self.roundtrip(r#"{"cmd":"ping"}"#)?;
+        Ok(j.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.roundtrip(r#"{"cmd":"metrics"}"#)
+    }
+
+    pub fn models(&mut self) -> Result<Vec<String>> {
+        let j = self.roundtrip(r#"{"cmd":"models"}"#)?;
+        Ok(j.get("models")
+            .and_then(|m| m.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default())
+    }
+}

@@ -1,0 +1,206 @@
+//! TCP serving front-end: newline-delimited JSON over TCP.
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"id": 1, "model": "flux-sim", "policy": "freqca:n=7",
+//!              "seed": 42, "steps": 50, "cond": [...],
+//!              "return_latent": true}
+//!   control:  {"cmd": "metrics"} | {"cmd": "models"} | {"cmd": "ping"}
+//!   response: {"id": 1, "ok": true, "latency_s": ..., ...}
+//!
+//! Acceptor threads parse and forward requests to the single engine
+//! thread (see `coordinator::engine`); the per-connection reply channel
+//! preserves ordering per client.
+
+pub mod client;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::{Engine, WorkItem};
+use crate::coordinator::{Request, Response};
+use crate::metrics::Metrics;
+use crate::util::Json;
+
+/// Server options.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub addr: String,
+    pub batch_wait_ms: u64,
+    pub queue_capacity: usize,
+    /// Models to warm up (compile) before accepting traffic.
+    pub warmup: Vec<String>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            addr: "127.0.0.1:7463".into(),
+            batch_wait_ms: 5,
+            queue_capacity: 256,
+            warmup: vec![],
+        }
+    }
+}
+
+/// Run the server until `stop` flips (or forever).  Blocks the calling
+/// thread with the engine loop; acceptor runs on its own thread.
+pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Result<()> {
+    let metrics = Arc::new(Metrics::new());
+    let mut engine = Engine::new(
+        artifact_dir,
+        std::time::Duration::from_millis(opts.batch_wait_ms),
+        opts.queue_capacity,
+        metrics.clone(),
+    )?;
+    for m in &opts.warmup {
+        eprintln!("[server] warming up {m}...");
+        engine.warmup(m)?;
+    }
+    let models = engine.models();
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("binding {}", opts.addr))?;
+    listener.set_nonblocking(true)?;
+    eprintln!(
+        "[server] listening on {} (models: {})",
+        opts.addr,
+        models.join(", ")
+    );
+
+    let (tx, rx) = channel::<WorkItem>();
+    let acceptor_metrics = metrics.clone();
+    let acceptor_stop = stop.clone();
+    let acceptor = std::thread::spawn(move || {
+        accept_loop(listener, tx, acceptor_metrics, models, acceptor_stop);
+    });
+
+    engine.serve_loop(rx);
+    let _ = acceptor.join();
+    Ok(())
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    tx: Sender<WorkItem>,
+    metrics: Arc<Metrics>,
+    models: Vec<String>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns = Vec::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return; // dropping tx ends the engine loop once drained
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = tx.clone();
+                let metrics = metrics.clone();
+                let models = models.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, tx, metrics, models);
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<WorkItem>,
+    metrics: Arc<Metrics>,
+    models: Vec<String>,
+) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                write_json(
+                    &mut writer,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::str(format!("bad json: {e}"))),
+                    ]),
+                )?;
+                continue;
+            }
+        };
+        // Control commands short-circuit without touching the engine.
+        if let Some(cmd) = parsed.get("cmd").and_then(|c| c.as_str()) {
+            let reply = match cmd {
+                "ping" => Json::obj(vec![("ok", Json::Bool(true)),
+                                         ("pong", Json::Bool(true))]),
+                "metrics" => metrics.to_json(),
+                "models" => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "models",
+                        Json::arr(models.iter().map(|m| Json::str(m.clone()))),
+                    ),
+                ]),
+                other => Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(format!("unknown cmd '{other}'"))),
+                ]),
+            };
+            write_json(&mut writer, &reply)?;
+            continue;
+        }
+        let request = match Request::from_json(&parsed) {
+            Ok(r) => r,
+            Err(e) => {
+                write_json(
+                    &mut writer,
+                    &Response::err(0, format!("bad request: {e}")).to_json(),
+                )?;
+                continue;
+            }
+        };
+        let (rtx, rrx) = channel::<Response>();
+        if tx
+            .send(WorkItem { request, reply: rtx, enqueued: Instant::now() })
+            .is_err()
+        {
+            write_json(
+                &mut writer,
+                &Response::err(0, "engine shut down".into()).to_json(),
+            )?;
+            return Ok(());
+        }
+        match rrx.recv() {
+            Ok(resp) => write_json(&mut writer, &resp.to_json())?,
+            Err(_) => {
+                write_json(
+                    &mut writer,
+                    &Response::err(0, "engine dropped request".into())
+                        .to_json(),
+                )?;
+            }
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn write_json(w: &mut impl Write, j: &Json) -> Result<()> {
+    let mut line = j.to_string();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}

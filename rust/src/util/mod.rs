@@ -1,0 +1,15 @@
+//! std-only substrates: JSON, PRNG, statistics, property testing, tensors.
+//!
+//! The sandbox only vendors the `xla` crate's dependency tree, so the
+//! usual serde/rand/proptest stack is unavailable; these modules implement
+//! the minimal, well-tested subset the serving system needs.
+
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use tensor::Tensor;

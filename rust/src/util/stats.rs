@@ -1,0 +1,160 @@
+//! Summary statistics used by the metrics layer and the bench harness.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Percentile with linear interpolation; `q` in [0, 100].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Full summary of a sample (sorts a copy).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: s.len(),
+            mean: mean(&s),
+            stddev: stddev(&s),
+            min: s.first().copied().unwrap_or(0.0),
+            p50: percentile(&s, 50.0),
+            p90: percentile(&s, 90.0),
+            p99: percentile(&s, 99.0),
+            max: s.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+/// Pearson cosine similarity of two equal-length vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        dot += *x as f64 * *y as f64;
+        na += *x as f64 * *x as f64;
+        nb += *y as f64 * *y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Mean squared error.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = *x as f64 - *y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Relative L1 distance ||a - b||_1 / ||b||_1 (TeaCache's indicator).
+pub fn rel_l1(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum();
+    let den: f64 = b.iter().map(|y| y.abs() as f64).sum();
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert!((percentile(&s, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&s, 25.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_properties() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-9);
+        let b = [-1.0f32, -2.0, -3.0];
+        assert!((cosine(&a, &b) + 1.0).abs() < 1e-9);
+        let c = [0.0f32, 0.0, 0.0];
+        assert_eq!(cosine(&a, &c), 0.0);
+    }
+
+    #[test]
+    fn rel_l1_basics() {
+        let a = [1.0f32, 1.0];
+        let b = [1.0f32, 1.0];
+        assert_eq!(rel_l1(&a, &b), 0.0);
+        let c = [2.0f32, 2.0];
+        assert!((rel_l1(&c, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_zero_for_equal() {
+        let a = [1.5f32, -2.0, 0.25];
+        assert_eq!(mse(&a, &a), 0.0);
+    }
+}

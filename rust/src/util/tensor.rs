@@ -1,0 +1,156 @@
+//! A minimal dense f32 tensor (shape + flat data), the host-side currency
+//! between the coordinator and the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} implies {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of bytes this tensor occupies (cache-memory accounting).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {} elements to {:?}", self.data.len(), shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Slice along the leading axis: rows [lo, hi).
+    pub fn slice0(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
+            bail!("slice0 [{lo},{hi}) out of bounds for {:?}", self.shape);
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(Tensor { shape, data: self.data[lo * row..hi * row].to_vec() })
+    }
+
+    /// Concatenate tensors along a new leading axis (all same shape).
+    pub fn stack(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack of zero tensors");
+        }
+        let base = &parts[0].shape;
+        let mut data = Vec::with_capacity(parts[0].len() * parts.len());
+        for p in parts {
+            if &p.shape != base {
+                bail!("stack shape mismatch: {:?} vs {:?}", p.shape, base);
+            }
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(base);
+        Ok(Tensor { shape, data })
+    }
+
+    /// Concatenate along the existing leading axis.
+    pub fn cat0(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("cat of zero tensors");
+        }
+        let tail = &parts[0].shape[1..];
+        let mut rows = 0;
+        let mut data = Vec::new();
+        for p in parts {
+            if &p.shape[1..] != tail {
+                bail!("cat0 tail mismatch: {:?} vs {:?}", p.shape, tail);
+            }
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![rows];
+        shape.extend_from_slice(tail);
+        Ok(Tensor { shape, data })
+    }
+
+    /// In-place AXPY: self += alpha * other (shape-checked).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn stack_and_slice() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        let s = Tensor::stack(&[&a, &b]).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        let row = s.slice0(1, 2).unwrap();
+        assert_eq!(row.data, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn cat0_shapes() {
+        let a = Tensor::zeros(vec![1, 3]);
+        let b = Tensor::zeros(vec![2, 3]);
+        let c = Tensor::cat0(&[&a, &b]).unwrap();
+        assert_eq!(c.shape, vec![3, 3]);
+        let bad = Tensor::zeros(vec![1, 4]);
+        assert!(Tensor::cat0(&[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![10.0, 20.0]).unwrap();
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data, vec![6.0, 12.0]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Workload generation: the "DrawBench" / "GEdit" stand-ins.
+//!
+//! Port of `python/compile/data.py`: a conditioning vector
+//! deterministically encodes a procedural scene; `render` draws it on the
+//! latent grid.  The Rust side needs the renderer for (a) serving-time
+//! prompt construction, (b) the semantic-consistency proxy (Q_SC /
+//! CLIP-proxy compare generated latents against the analytic render), and
+//! (c) editing workloads (source render = reference image).
+//!
+//! The math must stay in lockstep with data.py — the models were trained
+//! on the Python renders (`test_workload_parity` in python/tests pins
+//! this).
+
+use crate::model::ModelConfig;
+use crate::util::{Rng, Tensor};
+use anyhow::Result;
+
+/// Dims of the cond vector that encode the scene (rest is jitter space).
+pub const COND_SCENE_DIMS: usize = 12;
+
+/// A procedural scene (mirror of data.py::scene_from_unit).
+#[derive(Debug, Clone)]
+pub struct Scene {
+    pub kind: usize,
+    pub cx: f32,
+    pub cy: f32,
+    pub r: f32,
+    pub fg: [f32; 3],
+    pub bg: [f32; 3],
+    pub angle: f32,
+    pub grad: f32,
+}
+
+/// Map a unit vector u in [0,1]^12 to scene parameters.
+pub fn scene_from_unit(u: &[f32]) -> Scene {
+    Scene {
+        kind: ((u[0] * 3.0) as usize) % 3,
+        cx: 0.25 + 0.5 * u[1],
+        cy: 0.25 + 0.5 * u[2],
+        r: 0.10 + 0.22 * u[3],
+        fg: [2.0 * u[4] - 1.0, 2.0 * u[5] - 1.0, 2.0 * u[6] - 1.0],
+        bg: [
+            0.6 * (2.0 * u[7] - 1.0),
+            0.6 * (2.0 * u[8] - 1.0),
+            0.6 * (2.0 * u[9] - 1.0),
+        ],
+        angle: std::f32::consts::PI * u[10],
+        grad: 2.0 * u[11] - 1.0,
+    }
+}
+
+/// Anti-aliased coverage of the scene's shape (data.py::_aa_mask).
+fn aa_mask(side: usize, s: &Scene) -> Vec<f32> {
+    let mut m = vec![0.0f32; side * side];
+    let (ca, sa) = (s.angle.cos(), s.angle.sin());
+    let soft = 1.5 / side as f32;
+    for y in 0..side {
+        for x in 0..side {
+            let xs = (x as f32 + 0.5) / side as f32;
+            let ys = (y as f32 + 0.5) / side as f32;
+            let xr = ca * (xs - s.cx) - sa * (ys - s.cy);
+            let yr = sa * (xs - s.cx) + ca * (ys - s.cy);
+            let d = match s.kind {
+                0 => (xr * xr + yr * yr).sqrt() - s.r,
+                1 => xr.abs().max(yr.abs()) - s.r,
+                _ => (xr.abs() - 2.5 * s.r).max(yr.abs() - 0.5 * s.r),
+            };
+            m[y * side + x] = (0.5 - d / soft).clamp(0.0, 1.0);
+        }
+    }
+    m
+}
+
+/// Render a scene to a [side, side, 4] latent in [-1, 1]
+/// (data.py::render).
+pub fn render(side: usize, s: &Scene) -> Tensor {
+    let m = aa_mask(side, s);
+    let mut data = vec![0.0f32; side * side * 4];
+    for y in 0..side {
+        let grad = s.grad * ((y as f32 + 0.5) / side as f32 - 0.5);
+        for x in 0..side {
+            let cov = m[y * side + x];
+            let idx = (y * side + x) * 4;
+            for ch in 0..3 {
+                data[idx + ch] = (s.bg[ch] + grad
+                    + cov * (s.fg[ch] - s.bg[ch]))
+                    .clamp(-1.0, 1.0);
+            }
+            data[idx + 3] = (2.0 * cov - 1.0).clamp(-1.0, 1.0);
+        }
+    }
+    Tensor::new(vec![side, side, 4], data).expect("render shape")
+}
+
+/// Embed a unit scene vector into the model's cond space (jitter dims 0).
+pub fn cond_vector(u: &[f32], cond_dim: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; cond_dim];
+    for (i, v) in u.iter().take(COND_SCENE_DIMS.min(cond_dim)).enumerate() {
+        c[i] = 2.0 * v - 1.0;
+    }
+    c
+}
+
+/// The unit scene vector of "DrawBench prompt" `idx` — deterministic,
+/// stable across runs and policies.
+pub fn prompt_unit(idx: u64) -> Vec<f32> {
+    let mut rng = Rng::with_stream(0x5ce9e_u64.wrapping_add(idx), idx);
+    (0..COND_SCENE_DIMS).map(|_| rng.uniform()).collect()
+}
+
+/// An edit of a scene (recolor / translate / resize), data.py::apply_edit.
+pub fn apply_edit(u: &[f32], rng: &mut Rng) -> Vec<f32> {
+    let mut ue = u.to_vec();
+    match rng.below(3) {
+        0 => {
+            for c in &mut ue[4..7] {
+                *c = rng.uniform();
+            }
+        }
+        1 => {
+            ue[1] = (u[1] + 0.35 * (rng.uniform() - 0.5)).clamp(0.0, 1.0);
+            ue[2] = (u[2] + 0.35 * (rng.uniform() - 0.5)).clamp(0.0, 1.0);
+        }
+        _ => {
+            ue[3] = (u[3] + 0.4 * (rng.uniform() - 0.5)).clamp(0.0, 1.0);
+        }
+    }
+    ue
+}
+
+/// Everything one benchmark prompt needs.
+pub struct Prompt {
+    pub cond: Vec<f32>,
+    pub ref_img: Option<Vec<f32>>,
+    /// Analytic render of the *target* scene (Q_SC / CLIP proxy anchor).
+    pub target_render: Tensor,
+}
+
+/// Build prompt `idx` for a model: generation models get (cond, render);
+/// editing models get (edited cond, source render as reference, edited
+/// render as target).
+pub fn build_prompt(cfg: &ModelConfig, idx: u64) -> Result<Prompt> {
+    let u = prompt_unit(idx);
+    if !cfg.is_edit {
+        let scene = scene_from_unit(&u);
+        Ok(Prompt {
+            cond: cond_vector(&u, cfg.cond_dim),
+            ref_img: None,
+            target_render: render(cfg.latent, &scene),
+        })
+    } else {
+        let mut rng = Rng::with_stream(0xed17_u64.wrapping_add(idx), idx);
+        let ue = apply_edit(&u, &mut rng);
+        let src = render(cfg.latent, &scene_from_unit(&u));
+        let tgt = render(cfg.latent, &scene_from_unit(&ue));
+        Ok(Prompt {
+            cond: cond_vector(&ue, cfg.cond_dim),
+            ref_img: Some(src.data),
+            target_render: tgt,
+        })
+    }
+}
+
+/// CLI-level helper returning just (cond, ref).
+pub fn prompt(cfg: &ModelConfig, idx: u64, _edit: bool) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
+    let p = build_prompt(cfg, idx)?;
+    Ok((p.cond, p.ref_img))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    fn cfg(is_edit: bool) -> ModelConfig {
+        let meta = Json::parse(&format!(
+            r#"{{"name":"t","latent":8,"channels":4,"patch":2,"grid":4,
+            "tokens":{},"dim":64,"depth":2,"heads":2,"cond_dim":16,
+            "mlp_ratio":4,"is_edit":{is_edit},"decomp":"dct",
+            "param_count":10,"k_hist":3,"batch_sizes":[1],
+            "artifacts":{{}}}}"#,
+            if is_edit { 32 } else { 16 }
+        ))
+        .unwrap();
+        ModelConfig::from_meta(&meta).unwrap()
+    }
+
+    #[test]
+    fn prompts_are_deterministic_and_distinct() {
+        assert_eq!(prompt_unit(3), prompt_unit(3));
+        assert_ne!(prompt_unit(3), prompt_unit(4));
+    }
+
+    #[test]
+    fn render_in_range() {
+        let s = scene_from_unit(&prompt_unit(0));
+        let img = render(16, &s);
+        assert_eq!(img.shape, vec![16, 16, 4]);
+        assert!(img.data.iter().all(|v| (-1.0..=1.0).contains(v)));
+        // shape must actually cover some pixels
+        assert!(img.data.iter().skip(3).step_by(4).any(|v| *v > 0.0));
+    }
+
+    #[test]
+    fn gen_prompt_has_no_ref() {
+        let p = build_prompt(&cfg(false), 1).unwrap();
+        assert!(p.ref_img.is_none());
+        assert_eq!(p.cond.len(), 16);
+    }
+
+    #[test]
+    fn edit_prompt_has_ref_and_differs_from_target() {
+        let p = build_prompt(&cfg(true), 1).unwrap();
+        let r = p.ref_img.unwrap();
+        assert_eq!(r.len(), 8 * 8 * 4);
+        // The edit must change the image.
+        let diff: f32 = r
+            .iter()
+            .zip(&p.target_render.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 0.1, "edit produced identical scene");
+    }
+
+    #[test]
+    fn different_kinds_render_differently() {
+        let mut u = prompt_unit(0);
+        u[0] = 0.0;
+        let a = render(16, &scene_from_unit(&u));
+        u[0] = 0.5;
+        let b = render(16, &scene_from_unit(&u));
+        assert_ne!(a.data, b.data);
+    }
+}

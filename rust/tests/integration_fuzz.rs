@@ -1,0 +1,149 @@
+//! Failure-injection / fuzz tests: random and malformed inputs must
+//! produce clean errors (never panics, never wrong-shaped successes)
+//! through the router and the JSON protocol layer.
+
+use std::time::Duration;
+
+use freqca::coordinator::router::{RouteResult, Router};
+use freqca::coordinator::Request;
+use freqca::model::ModelConfig;
+use freqca::util::propcheck::{check, Config};
+use freqca::util::{Json, Rng};
+
+fn cfg() -> ModelConfig {
+    ModelConfig::load("artifacts", "tiny").expect("run `make artifacts`")
+}
+
+#[test]
+fn router_never_panics_on_random_requests() {
+    check(
+        "router-total",
+        Config { cases: 200, seed: 0xf00d },
+        |rng: &mut Rng, size| {
+            let model = match rng.below(3) {
+                0 => "tiny".to_string(),
+                1 => "nope".to_string(),
+                _ => format!("m{}", rng.below(5)),
+            };
+            Request {
+                id: rng.next_u64(),
+                model,
+                policy: ["freqca:n=7", "bogus", "fora:n=0", ""]
+                    [rng.below(4)]
+                .to_string(),
+                seed: rng.next_u64(),
+                n_steps: rng.below(size * 30),
+                cond: (0..rng.below(64)).map(|_| rng.normal()).collect(),
+                ref_img: if rng.below(3) == 0 {
+                    Some((0..rng.below(300)).map(|_| rng.normal()).collect())
+                } else {
+                    None
+                },
+                return_latent: rng.below(2) == 0,
+            }
+        },
+        |req| {
+            let mut router =
+                Router::new(vec![cfg()], Duration::ZERO, 8);
+            match router.route(req.clone()) {
+                RouteResult::Queued => {
+                    // queued requests must be well-formed for the engine
+                    let (_, batch) = router.next_batch().ok_or("no batch")?;
+                    let r = &batch[0].request;
+                    if r.cond.len() != 16 {
+                        return Err(format!(
+                            "queued cond not normalized: {}",
+                            r.cond.len()
+                        ));
+                    }
+                    if r.n_steps == 0 {
+                        return Err("queued zero-step request".into());
+                    }
+                    Ok(())
+                }
+                // every rejection path is acceptable; panics are not
+                RouteResult::Shed
+                | RouteResult::UnknownModel
+                | RouteResult::Invalid(_) => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn json_parser_never_panics_on_mutated_requests() {
+    let base = Request {
+        id: 1,
+        model: "tiny".into(),
+        policy: "freqca:n=7".into(),
+        seed: 2,
+        n_steps: 10,
+        cond: vec![0.5; 4],
+        ref_img: None,
+        return_latent: true,
+    }
+    .to_json()
+    .to_string();
+    check(
+        "json-mutation-total",
+        Config { cases: 300, seed: 42 },
+        |rng: &mut Rng, _| {
+            let mut bytes = base.clone().into_bytes();
+            for _ in 0..1 + rng.below(6) {
+                let i = rng.below(bytes.len());
+                match rng.below(3) {
+                    0 => bytes[i] = rng.next_u32() as u8,
+                    1 => {
+                        bytes.remove(i);
+                    }
+                    _ => bytes.insert(i, b"{}[],:\"0"[rng.below(8)]),
+                }
+            }
+            String::from_utf8_lossy(&bytes).to_string()
+        },
+        |mutated| {
+            // Must either parse (and then Request::from_json must not
+            // panic) or return a clean error.
+            if let Ok(j) = Json::parse(mutated) {
+                let _ = Request::from_json(&j);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn policy_parser_never_panics() {
+    check(
+        "policy-parser-total",
+        Config { cases: 300, seed: 7 },
+        |rng: &mut Rng, _| {
+            let kinds = ["freqca", "fora", "taylorseer", "teacache", "toca",
+                         "duca", "baseline", "junk"];
+            let keys = ["n", "o", "low", "r", "l", "c", "d", "zz"];
+            let mut s = kinds[rng.below(kinds.len())].to_string();
+            if rng.below(2) == 0 {
+                s.push(':');
+                for i in 0..rng.below(4) {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    s.push_str(keys[rng.below(keys.len())]);
+                    s.push('=');
+                    s.push_str(&format!("{}", rng.below(100)));
+                }
+            }
+            s
+        },
+        |desc| {
+            // Ok or Err both fine; panic is the only failure.
+            let _ = freqca::policy::parse_policy(
+                desc,
+                freqca::freq::Decomp::Dct,
+                8,
+                3,
+            );
+            Ok(())
+        },
+    );
+}

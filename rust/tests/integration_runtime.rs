@@ -1,0 +1,203 @@
+//! Integration tests over the PJRT runtime + AOT artifacts (tiny model).
+//!
+//! These tests need `make artifacts` to have run; they are the Rust half
+//! of the cross-language contract (python lowers, rust executes).
+
+use std::rc::Rc;
+
+use freqca::model::{weights, ModelConfig};
+use freqca::runtime::Runtime;
+use freqca::util::{Rng, Tensor};
+
+const DIR: &str = "artifacts";
+
+fn setup() -> (Runtime, ModelConfig, Rc<xla::PjRtBuffer>) {
+    let rt = Runtime::new(DIR).expect("PJRT client");
+    let cfg = ModelConfig::load(DIR, "tiny").expect("tiny metadata");
+    let host = weights::load_weights(DIR, "tiny", cfg.param_count)
+        .expect("tiny weights");
+    let wbuf = rt.weights_buffer(&cfg, &host).expect("upload");
+    (rt, cfg, wbuf)
+}
+
+fn rand_t(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, rng.normal_vec(n)).unwrap()
+}
+
+#[test]
+fn fwd_shapes_and_head_consistency() {
+    let (rt, cfg, w) = setup();
+    let mut rng = Rng::new(1);
+    let x = rand_t(&mut rng, vec![1, cfg.latent, cfg.latent, cfg.channels]);
+    let cond = rand_t(&mut rng, vec![1, cfg.cond_dim]);
+    let t = Tensor::new(vec![1], vec![0.7]).unwrap();
+    let out = rt
+        .exec_host(&cfg, "fwd_b1", Some(&w), &[&x, &cond, &t])
+        .expect("fwd");
+    assert_eq!(out.len(), 2);
+    let (v, crf) = (&out[0], &out[1]);
+    assert_eq!(v.shape, vec![1, cfg.latent, cfg.latent, cfg.channels]);
+    assert_eq!(crf.shape, vec![1, cfg.tokens, cfg.dim]);
+    assert!(v.data.iter().all(|x| x.is_finite()));
+
+    // The head artifact applied to the CRF must reproduce fwd's velocity:
+    // fwd = head(crf_forward(...)) by construction in model.py.
+    let head = rt
+        .exec_host(&cfg, "head_b1", Some(&w), &[crf, &cond, &t])
+        .expect("head");
+    let max_diff = v
+        .data
+        .iter()
+        .zip(&head[0].data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "head(CRF) != fwd velocity: {max_diff}");
+}
+
+#[test]
+fn predict_plain_matches_host_math() {
+    let (rt, cfg, _) = setup();
+    let mut rng = Rng::new(2);
+    let k = cfg.k_hist;
+    let hist =
+        rand_t(&mut rng, vec![1, k, cfg.tokens, cfg.dim]);
+    let w = Tensor::new(vec![k], vec![0.5, -1.0, 1.5]).unwrap();
+    let out = rt
+        .exec_host(&cfg, "predict_plain_b1", None, &[&hist, &w])
+        .expect("predict_plain");
+    let row = cfg.tokens * cfg.dim;
+    for i in 0..row {
+        let expect: f32 = (0..k)
+            .map(|ki| w.data[ki] * hist.data[ki * row + i])
+            .sum();
+        let got = out[0].data[i];
+        assert!(
+            (expect - got).abs() < 1e-4 * (1.0 + expect.abs()),
+            "elem {i}: {expect} vs {got}"
+        );
+    }
+}
+
+#[test]
+fn predict_dct_with_full_mask_equals_plain() {
+    let (rt, cfg, _) = setup();
+    let mut rng = Rng::new(3);
+    let k = cfg.k_hist;
+    let hist = rand_t(&mut rng, vec![1, k, cfg.tokens, cfg.dim]);
+    let lw = Tensor::new(vec![k], vec![0.25, 0.25, 0.5]).unwrap();
+    let hw = Tensor::new(vec![k], vec![9.0, -9.0, 1.0]).unwrap(); // ignored
+    let ones = Tensor::new(
+        vec![cfg.grid, cfg.grid],
+        vec![1.0; cfg.grid * cfg.grid],
+    )
+    .unwrap();
+    let basis = freqca::freq::dct::dct_matrix_tensor(cfg.grid);
+    let dct = rt
+        .exec_host(
+            &cfg,
+            "predict_dct_b1",
+            None,
+            &[&hist, &ones, &lw, &hw, &basis],
+        )
+        .expect("predict_dct");
+    let plain = rt
+        .exec_host(&cfg, "predict_plain_b1", None, &[&hist, &lw])
+        .expect("predict_plain");
+    let max_diff = dct[0]
+        .data
+        .iter()
+        .zip(&plain[0].data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "full-mask DCT != plain: {max_diff}");
+}
+
+#[test]
+fn predict_fft_with_zero_mask_uses_high_band_only() {
+    let (rt, cfg, _) = setup();
+    let mut rng = Rng::new(4);
+    let k = cfg.k_hist;
+    let hist = rand_t(&mut rng, vec![1, k, cfg.tokens, cfg.dim]);
+    let lw = Tensor::new(vec![k], vec![9.0, 9.0, 9.0]).unwrap(); // ignored
+    let hw = Tensor::new(vec![k], vec![0.0, 0.0, 1.0]).unwrap();
+    let zeros = Tensor::new(
+        vec![cfg.grid, cfg.grid],
+        vec![0.0; cfg.grid * cfg.grid],
+    )
+    .unwrap();
+    let (fr, fi) = freqca::freq::fft::dft_matrices_tensor(cfg.grid);
+    let out = rt
+        .exec_host(
+            &cfg,
+            "predict_fft_b1",
+            None,
+            &[&hist, &zeros, &lw, &hw, &fr, &fi],
+        )
+        .expect("predict_fft");
+    // hw reuses the newest entry; zero mask -> everything from high band.
+    let row = cfg.tokens * cfg.dim;
+    let newest = &hist.data[(k - 1) * row..k * row];
+    let max_diff = out[0]
+        .data
+        .iter()
+        .zip(newest)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "zero-mask FFT reuse mismatch: {max_diff}");
+}
+
+#[test]
+fn batch2_fwd_matches_two_singles() {
+    let (rt, cfg, w) = setup();
+    assert!(cfg.batch_sizes.contains(&2), "tiny exports b=2");
+    let mut rng = Rng::new(5);
+    let x0 = rand_t(&mut rng, vec![1, cfg.latent, cfg.latent, cfg.channels]);
+    let x1 = rand_t(&mut rng, vec![1, cfg.latent, cfg.latent, cfg.channels]);
+    let c0 = rand_t(&mut rng, vec![1, cfg.cond_dim]);
+    let c1 = rand_t(&mut rng, vec![1, cfg.cond_dim]);
+    let t1 = Tensor::new(vec![1], vec![0.4]).unwrap();
+    let t2 = Tensor::new(vec![2], vec![0.4, 0.4]).unwrap();
+    let xb = Tensor::cat0(&[&x0, &x1]).unwrap();
+    let cb = Tensor::cat0(&[&c0, &c1]).unwrap();
+    let single0 =
+        rt.exec_host(&cfg, "fwd_b1", Some(&w), &[&x0, &c0, &t1]).unwrap();
+    let single1 =
+        rt.exec_host(&cfg, "fwd_b1", Some(&w), &[&x1, &c1, &t1]).unwrap();
+    let batch =
+        rt.exec_host(&cfg, "fwd_b2", Some(&w), &[&xb, &cb, &t2]).unwrap();
+    let per = cfg.latent_elems();
+    for i in 0..per {
+        assert!((batch[0].data[i] - single0[0].data[i]).abs() < 1e-4);
+        assert!((batch[0].data[per + i] - single1[0].data[i]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn exec_stats_accumulate() {
+    let (rt, cfg, w) = setup();
+    let mut rng = Rng::new(6);
+    let x = rand_t(&mut rng, vec![1, cfg.latent, cfg.latent, cfg.channels]);
+    let cond = rand_t(&mut rng, vec![1, cfg.cond_dim]);
+    let t = Tensor::new(vec![1], vec![0.9]).unwrap();
+    for _ in 0..3 {
+        rt.exec_host(&cfg, "fwd_b1", Some(&w), &[&x, &cond, &t]).unwrap();
+    }
+    let stats = rt.exec_stats();
+    let fwd = stats
+        .iter()
+        .find(|(name, _, _)| name.contains("fwd_b1"))
+        .expect("fwd stats");
+    assert_eq!(fwd.1, 3);
+    assert!(fwd.2 > 0.0);
+}
+
+#[test]
+fn missing_artifact_is_clean_error() {
+    let (rt, cfg, _) = setup();
+    let x = Tensor::zeros(vec![1]);
+    let err = rt.exec_host(&cfg, "nonexistent", None, &[&x]);
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("nonexistent"), "unhelpful error: {msg}");
+}

@@ -1,0 +1,93 @@
+//! End-to-end server tests: TCP front-end -> engine -> PJRT -> response.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use freqca::coordinator::Request;
+use freqca::server::{client::Client, serve, ServeOpts};
+
+fn spawn_server(port: u16) -> Arc<AtomicBool> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let s = stop.clone();
+    std::thread::spawn(move || {
+        let opts = ServeOpts {
+            addr: format!("127.0.0.1:{port}"),
+            batch_wait_ms: 1,
+            queue_capacity: 16,
+            warmup: vec![],
+        };
+        let _ = serve("artifacts", opts, s);
+    });
+    stop
+}
+
+fn connect(port: u16) -> Client {
+    let addr = format!("127.0.0.1:{port}");
+    for _ in 0..100 {
+        if let Ok(c) = Client::connect(&addr) {
+            return c;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("server did not come up on {addr}");
+}
+
+fn req(id: u64, model: &str, policy: &str, steps: usize) -> Request {
+    Request {
+        id,
+        model: model.into(),
+        policy: policy.into(),
+        seed: id,
+        n_steps: steps,
+        cond: vec![0.1; 12],
+        ref_img: None,
+        return_latent: true,
+    }
+}
+
+#[test]
+fn server_end_to_end() {
+    let port = 17463;
+    let stop = spawn_server(port);
+    let mut c = connect(port);
+
+    // Control plane.
+    assert!(c.ping().unwrap());
+    let models = c.models().unwrap();
+    assert!(models.contains(&"tiny".to_string()), "models: {models:?}");
+
+    // Generation through the full coordinator stack.
+    let resp = c.generate(&req(42, "tiny", "freqca:n=3", 8)).unwrap();
+    assert!(resp.ok, "error: {:?}", resp.error);
+    assert_eq!(resp.id, 42);
+    assert!(resp.full_steps >= 3);
+    assert!(resp.cached_steps > 0);
+    let latent = resp.latent.expect("return_latent");
+    assert_eq!(latent.len(), 8 * 8 * 4);
+    assert!(latent.iter().all(|v| v.is_finite()));
+
+    // Determinism through the server path too.
+    let again = c.generate(&req(42, "tiny", "freqca:n=3", 8)).unwrap();
+    assert_eq!(again.latent.unwrap(), latent);
+
+    // Unknown model is a clean error, not a hang.
+    let bad = c.generate(&req(1, "nope", "baseline", 4)).unwrap();
+    assert!(!bad.ok);
+    assert!(bad.error.unwrap().contains("unknown model"));
+
+    // Editing model without ref_img is rejected by the router.
+    let bad_edit = c.generate(&req(2, "kontext-sim", "baseline", 4)).unwrap();
+    assert!(!bad_edit.ok);
+
+    // Metrics reflect the completed work.
+    let m = c.metrics().unwrap();
+    let completed = m
+        .get("counters")
+        .and_then(|c| c.get("requests_completed"))
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    assert!(completed >= 2, "metrics: {m}");
+
+    stop.store(true, Ordering::Relaxed);
+}
