@@ -1,81 +1,393 @@
-//! Coordinator-layer benches: batching efficiency end-to-end (does
-//! batch-4 beat 4x batch-1?), router/batcher throughput, and JSON
-//! protocol framing cost.
+//! Coordinator-layer benches: the continuous step-level scheduler vs
+//! run-to-completion batching on a mixed short/long workload (the
+//! head-of-line-blocking fixture), batching efficiency end-to-end, and
+//! router/batcher/JSON plumbing cost.
 //!
 //!     cargo bench --offline --bench coordinator
+//!
+//! Output: a table on stdout, `results/bench_coordinator.csv`, and
+//! `results/bench_coordinator.json` with time-to-first-step and
+//! p50/p95/p99 completion latency per scheduling discipline, so future
+//! PRs have a tail-latency trajectory to compare against.
+//!
+//! The scheduling comparison replays the engine's actual pick policy
+//! (`coordinator::scheduler::pick_next`) in *virtual time*, so it runs —
+//! deterministically — even where no AOT artifacts or PJRT runtime
+//! exist; the real-model batching benches below self-skip without
+//! artifacts.
 
 use std::rc::Rc;
 use std::time::Duration;
 
 use freqca::benchkit::{bench, BenchOpts, Table};
 use freqca::coordinator::batcher::Batcher;
+use freqca::coordinator::scheduler::{pick_next, SchedState};
 use freqca::coordinator::Request;
 use freqca::freq::Decomp;
 use freqca::model::{weights, ModelConfig};
 use freqca::policy;
 use freqca::runtime::Runtime;
 use freqca::sampler::{generate_batch, BatchJob, JobSpec, SampleOpts};
+use freqca::server::DEFAULT_MAX_IN_FLIGHT;
+use freqca::util::stats::percentile;
 use freqca::util::Json;
 use freqca::workload;
+
+/// Locate the AOT artifact directory.  `cargo bench` runs with cwd =
+/// the package root (`rust/`) while artifacts live at the repo root, so
+/// probe both the cwd-relative and the manifest-relative path.
+fn artifact_dir() -> Option<&'static str> {
+    ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")]
+        .into_iter()
+        .find(|d| std::path::Path::new(d).join("meta_flux-sim.json").exists())
+}
+
+/// Repo-root results directory, regardless of invocation cwd (matches
+/// the documented `results/bench_coordinator.{csv,json}` paths).
+fn results_dir() -> &'static str {
+    if std::path::Path::new("benches").is_dir() {
+        "results" // invoked from the repo root
+    } else {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../results")
+    }
+}
+
+/// One synthetic job of the mixed workload (virtual time, seconds).
+#[derive(Debug, Clone)]
+struct SimJob {
+    arrive_s: f64,
+    n_steps: usize,
+    step_cost_s: f64,
+    short: bool,
+}
+
+/// Per-job outcome of a simulated schedule.
+#[derive(Debug, Clone)]
+struct SimOutcome {
+    /// Arrival -> final step done.
+    completion_s: f64,
+    /// Arrival -> first step done.
+    ttfs_s: f64,
+    short: bool,
+}
+
+/// The fixture: a burst of long jobs occupying the device, with short
+/// jobs trickling in behind them — the exact traffic shape where
+/// run-to-completion batching head-of-line blocks.
+fn mixed_workload() -> Vec<SimJob> {
+    let step = 0.010; // 10 ms virtual step, uniform across jobs
+    let mut jobs = Vec::new();
+    for i in 0..6 {
+        jobs.push(SimJob {
+            arrive_s: i as f64 * 0.005,
+            n_steps: 50,
+            step_cost_s: step,
+            short: false,
+        });
+    }
+    for i in 0..12 {
+        jobs.push(SimJob {
+            arrive_s: 0.040 + i as f64 * 0.050,
+            n_steps: 8,
+            step_cost_s: step,
+            short: true,
+        });
+    }
+    jobs
+}
+
+/// Run-to-completion FIFO: the pre-refactor engine.  Each job holds the
+/// device for all of its steps before the next admission.
+fn simulate_run_to_completion(jobs: &[SimJob]) -> Vec<SimOutcome> {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|a, b| {
+        jobs[*a]
+            .arrive_s
+            .partial_cmp(&jobs[*b].arrive_s)
+            .unwrap()
+            .then(a.cmp(b))
+    });
+    let mut clock = 0.0f64;
+    let mut out = vec![None; jobs.len()];
+    for i in order {
+        let j = &jobs[i];
+        clock = clock.max(j.arrive_s);
+        let ttfs = clock + j.step_cost_s - j.arrive_s;
+        clock += j.n_steps as f64 * j.step_cost_s;
+        out[i] = Some(SimOutcome {
+            completion_s: clock - j.arrive_s,
+            ttfs_s: ttfs,
+            short: j.short,
+        });
+    }
+    out.into_iter().map(Option::unwrap).collect()
+}
+
+/// Continuous step-level scheduling: one step per tick, arrivals
+/// admitted between steps (FIFO, at most `cap` sessions in flight —
+/// pass DEFAULT_MAX_IN_FLIGHT for the engine's default behavior,
+/// usize::MAX for the uncapped scheduling ideal), next session chosen
+/// by the engine's real pick policy.
+fn simulate_continuous(jobs: &[SimJob], cap: usize) -> Vec<SimOutcome> {
+    let mut arrival_order: Vec<usize> = (0..jobs.len()).collect();
+    arrival_order.sort_by(|a, b| {
+        jobs[*a]
+            .arrive_s
+            .partial_cmp(&jobs[*b].arrive_s)
+            .unwrap()
+            .then(a.cmp(b))
+    });
+    let mut clock = 0.0f64;
+    let mut tick = 0u64;
+    let mut remaining: Vec<usize> = jobs.iter().map(|j| j.n_steps).collect();
+    let mut last_ran = vec![0u64; jobs.len()];
+    let mut admitted = vec![false; jobs.len()];
+    let mut ttfs = vec![None; jobs.len()];
+    let mut done = vec![None; jobs.len()];
+    loop {
+        // Admission between steps: arrived jobs enter FIFO while fewer
+        // than DEFAULT_MAX_IN_FLIGHT admitted sessions are unfinished.
+        let mut in_flight = (0..jobs.len())
+            .filter(|i| admitted[*i] && remaining[*i] > 0)
+            .count();
+        for &i in &arrival_order {
+            if in_flight >= cap {
+                break;
+            }
+            if !admitted[i] && remaining[i] > 0 && jobs[i].arrive_s <= clock {
+                admitted[i] = true;
+                in_flight += 1;
+            }
+        }
+        // Sessions in flight *now*.
+        let live: Vec<usize> = arrival_order
+            .iter()
+            .copied()
+            .filter(|i| admitted[*i] && remaining[*i] > 0)
+            .collect();
+        if live.is_empty() {
+            // Idle: jump to the next arrival, or finish.
+            match arrival_order
+                .iter()
+                .copied()
+                .filter(|i| remaining[*i] > 0)
+                .map(|i| jobs[i].arrive_s)
+                .fold(None, |m: Option<f64>, a| {
+                    Some(m.map_or(a, |m| m.min(a)))
+                }) {
+                Some(next) => {
+                    clock = clock.max(next);
+                    continue;
+                }
+                None => break,
+            }
+        }
+        // Deadline surrogate = arrival order (oldest-first), exactly as
+        // the engine passes enqueue Instants.
+        let states: Vec<SchedState<usize>> = live
+            .iter()
+            .map(|i| SchedState {
+                last_ran: last_ran[*i],
+                deadline: arrival_order.iter().position(|a| a == i).unwrap(),
+            })
+            .collect();
+        let i = live[pick_next(&states).unwrap()];
+        tick += 1;
+        last_ran[i] = tick;
+        clock += jobs[i].step_cost_s;
+        remaining[i] -= 1;
+        if ttfs[i].is_none() {
+            ttfs[i] = Some(clock - jobs[i].arrive_s);
+        }
+        if remaining[i] == 0 {
+            done[i] = Some(clock - jobs[i].arrive_s);
+        }
+    }
+    (0..jobs.len())
+        .map(|i| SimOutcome {
+            completion_s: done[i].unwrap(),
+            ttfs_s: ttfs[i].unwrap(),
+            short: jobs[i].short,
+        })
+        .collect()
+}
+
+/// Sorted samples of one metric over one job class.
+fn sorted_samples(
+    outcomes: &[SimOutcome],
+    short_only: bool,
+    metric: fn(&SimOutcome) -> f64,
+) -> Vec<f64> {
+    let mut v: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| !short_only || o.short)
+        .map(metric)
+        .collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v
+}
+
+/// Latency summary of one discipline over one job class.
+fn latency_json(outcomes: &[SimOutcome], short_only: bool) -> Json {
+    let completion = sorted_samples(outcomes, short_only, |o| o.completion_s);
+    let ttfs = sorted_samples(outcomes, short_only, |o| o.ttfs_s);
+    Json::obj(vec![
+        ("n", Json::num(completion.len() as f64)),
+        ("completion_p50_s", Json::num(percentile(&completion, 50.0))),
+        ("completion_p95_s", Json::num(percentile(&completion, 95.0))),
+        ("completion_p99_s", Json::num(percentile(&completion, 99.0))),
+        ("ttfs_p50_s", Json::num(percentile(&ttfs, 50.0))),
+        ("ttfs_p95_s", Json::num(percentile(&ttfs, 95.0))),
+        ("ttfs_p99_s", Json::num(percentile(&ttfs, 99.0))),
+    ])
+}
+
+fn p95_completion(outcomes: &[SimOutcome], short_only: bool) -> f64 {
+    percentile(&sorted_samples(outcomes, short_only, |o| o.completion_s), 95.0)
+}
 
 fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&["bench", "mean ms", "p50 ms", "note"]);
 
-    // --- batched vs sequential generation (flux-sim exports b in {1,4}).
-    let rt = Runtime::new("artifacts")?;
-    let cfg = ModelConfig::load("artifacts", "flux-sim")?;
-    let host = weights::load_weights("artifacts", "flux-sim", cfg.param_count)?;
-    let w: Rc<xla::PjRtBuffer> = rt.weights_buffer(&cfg, &host)?;
-    let steps = 10;
-    let jobs: Vec<JobSpec> = (0..4u64)
-        .map(|i| {
-            let p = workload::build_prompt(&cfg, i).unwrap();
-            JobSpec { cond: p.cond, ref_img: None, seed: i }
-        })
-        .collect();
-    let opts = BenchOpts { warmup_iters: 1, iters: 5 };
-
-    let r = bench("generate batch=4 (freqca:n=5)", &opts, || {
-        let mut pol =
-            policy::parse_policy("freqca:n=5", Decomp::Dct, cfg.grid, 3)
-                .unwrap();
-        let b = BatchJob {
-            cfg: &cfg,
-            weights: w.clone(),
-            jobs: jobs.clone(),
-            n_steps: steps,
-        };
-        generate_batch(&rt, &b, pol.as_mut(), &SampleOpts::default()).unwrap();
-    });
-    let batch4 = r.summary.mean;
+    // --- mixed short/long workload: continuous vs run-to-completion.
+    // "continuous" models the engine's default admission cap; the
+    // uncapped run shows the pure scheduling headroom (what raising
+    // --max-in-flight buys, at the price of more resident sessions).
+    let jobs = mixed_workload();
+    let rtc = simulate_run_to_completion(&jobs);
+    let cont = simulate_continuous(&jobs, DEFAULT_MAX_IN_FLIGHT);
+    let ideal = simulate_continuous(&jobs, usize::MAX);
+    let rtc_p95 = p95_completion(&rtc, true);
+    let cont_p95 = p95_completion(&cont, true);
+    let ideal_p95 = p95_completion(&ideal, true);
+    println!(
+        "mixed workload ({} long x50 steps, {} short x8 steps):",
+        jobs.iter().filter(|j| !j.short).count(),
+        jobs.iter().filter(|j| j.short).count(),
+    );
+    println!(
+        "  short-job completion p95: run-to-completion {:.1} ms, \
+         continuous (cap {DEFAULT_MAX_IN_FLIGHT}) {:.1} ms ({:.2}x better), \
+         uncapped {:.1} ms",
+        rtc_p95 * 1e3,
+        cont_p95 * 1e3,
+        rtc_p95 / cont_p95,
+        ideal_p95 * 1e3,
+    );
     table.row(vec![
-        "batch=4 x 10 steps".into(),
-        format!("{:.2}", r.summary.mean * 1e3),
-        format!("{:.2}", r.summary.p50 * 1e3),
-        "4 requests/iter".into(),
+        "short-job p95 (run-to-completion)".into(),
+        format!("{:.2}", rtc_p95 * 1e3),
+        format!("{:.2}", rtc_p95 * 1e3),
+        "head-of-line blocked".into(),
+    ]);
+    table.row(vec![
+        format!("short-job p95 (continuous, cap {DEFAULT_MAX_IN_FLIGHT})"),
+        format!("{:.2}", cont_p95 * 1e3),
+        format!("{:.2}", cont_p95 * 1e3),
+        format!("{:.2}x better tail", rtc_p95 / cont_p95),
+    ]);
+    table.row(vec![
+        "short-job p95 (continuous, uncapped)".into(),
+        format!("{:.2}", ideal_p95 * 1e3),
+        format!("{:.2}", ideal_p95 * 1e3),
+        format!("{:.2}x better tail", rtc_p95 / ideal_p95),
+    ]);
+    assert!(
+        cont_p95 < rtc_p95,
+        "continuous scheduling must improve short-job p95 \
+         ({cont_p95} vs {rtc_p95})"
+    );
+    let sched_json = Json::obj(vec![
+        (
+            "run_to_completion",
+            Json::obj(vec![
+                ("all", latency_json(&rtc, false)),
+                ("short_jobs", latency_json(&rtc, true)),
+            ]),
+        ),
+        (
+            "continuous",
+            Json::obj(vec![
+                ("max_in_flight", Json::num(DEFAULT_MAX_IN_FLIGHT as f64)),
+                ("all", latency_json(&cont, false)),
+                ("short_jobs", latency_json(&cont, true)),
+            ]),
+        ),
+        (
+            "continuous_uncapped",
+            Json::obj(vec![
+                ("all", latency_json(&ideal, false)),
+                ("short_jobs", latency_json(&ideal, true)),
+            ]),
+        ),
+        (
+            "short_job_p95_speedup",
+            Json::num(rtc_p95 / cont_p95),
+        ),
     ]);
 
-    let r = bench("generate 4 x batch=1 (freqca:n=5)", &opts, || {
-        for j in &jobs {
+    // --- batched vs sequential generation (needs AOT artifacts).
+    if let Some(dir) = artifact_dir() {
+        let rt = Runtime::new(dir)?;
+        let cfg = ModelConfig::load(dir, "flux-sim")?;
+        let host = weights::load_weights(dir, "flux-sim", cfg.param_count)?;
+        let w: Rc<xla::PjRtBuffer> = rt.weights_buffer(&cfg, &host)?;
+        let steps = 10;
+        let jobs: Vec<JobSpec> = (0..4u64)
+            .map(|i| {
+                let p = workload::build_prompt(&cfg, i).unwrap();
+                JobSpec { cond: p.cond, ref_img: None, seed: i }
+            })
+            .collect();
+        let opts = BenchOpts { warmup_iters: 1, iters: 5 };
+
+        let r = bench("generate batch=4 (freqca:n=5)", &opts, || {
             let mut pol =
                 policy::parse_policy("freqca:n=5", Decomp::Dct, cfg.grid, 3)
                     .unwrap();
             let b = BatchJob {
                 cfg: &cfg,
                 weights: w.clone(),
-                jobs: vec![j.clone()],
+                jobs: jobs.clone(),
                 n_steps: steps,
             };
             generate_batch(&rt, &b, pol.as_mut(), &SampleOpts::default())
                 .unwrap();
-        }
-    });
-    table.row(vec![
-        "4 x batch=1 x 10 steps".into(),
-        format!("{:.2}", r.summary.mean * 1e3),
-        format!("{:.2}", r.summary.p50 * 1e3),
-        format!("batching gain {:.2}x", r.summary.mean / batch4),
-    ]);
+        });
+        let batch4 = r.summary.mean;
+        table.row(vec![
+            "batch=4 x 10 steps".into(),
+            format!("{:.2}", r.summary.mean * 1e3),
+            format!("{:.2}", r.summary.p50 * 1e3),
+            "4 requests/iter".into(),
+        ]);
+
+        let r = bench("generate 4 x batch=1 (freqca:n=5)", &opts, || {
+            for j in &jobs {
+                let mut pol =
+                    policy::parse_policy("freqca:n=5", Decomp::Dct, cfg.grid, 3)
+                        .unwrap();
+                let b = BatchJob {
+                    cfg: &cfg,
+                    weights: w.clone(),
+                    jobs: vec![j.clone()],
+                    n_steps: steps,
+                };
+                generate_batch(&rt, &b, pol.as_mut(), &SampleOpts::default())
+                    .unwrap();
+            }
+        });
+        table.row(vec![
+            "4 x batch=1 x 10 steps".into(),
+            format!("{:.2}", r.summary.mean * 1e3),
+            format!("{:.2}", r.summary.p50 * 1e3),
+            format!("batching gain {:.2}x", r.summary.mean / batch4),
+        ]);
+    } else {
+        eprintln!(
+            "[bench] artifacts/ absent — skipping real-model batching bench"
+        );
+    }
 
     // --- batcher throughput (pure queueing, no model).
     let opts = BenchOpts { warmup_iters: 5, iters: 100 };
@@ -116,7 +428,14 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     println!("\n{}", table.render());
-    std::fs::create_dir_all("results")?;
-    table.save_csv("results/bench_coordinator.csv")?;
+    let results = results_dir();
+    std::fs::create_dir_all(results)?;
+    table.save_csv(&format!("{results}/bench_coordinator.csv"))?;
+    let json_path = format!("{results}/bench_coordinator.json");
+    std::fs::write(
+        &json_path,
+        Json::obj(vec![("scheduling", sched_json)]).to_string(),
+    )?;
+    println!("wrote {json_path}");
     Ok(())
 }

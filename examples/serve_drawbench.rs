@@ -38,6 +38,7 @@ fn main() -> Result<()> {
             batch_wait_ms: 30,
             queue_capacity: 512,
             warmup: vec![MODEL.to_string()],
+            ..ServeOpts::default()
         };
         if let Err(e) = serve("artifacts", opts, server_stop) {
             eprintln!("server error: {e:#}");

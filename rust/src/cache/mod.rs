@@ -7,13 +7,18 @@
 //! (Table 5) and the fidelity comparison (Fig. 4); it is never on the
 //! serving path.
 
+use std::collections::VecDeque;
+
 use crate::util::Tensor;
 
 /// Ring buffer of the K most recent activated CRFs (oldest first).
+/// Eviction is a `pop_front` — O(1), not an O(K) shift — which matters
+/// once the continuous scheduler keeps hundreds of per-session caches
+/// live at once.
 #[derive(Debug, Clone)]
 pub struct CrfCache {
     k: usize,
-    entries: Vec<(f64, Tensor)>, // (normalized time s, CRF [T, D])
+    entries: VecDeque<(f64, Tensor)>, // (normalized time s, CRF [T, D])
     /// Peak bytes ever held (for Table 5's VRAM-overhead column).
     peak_bytes: usize,
     /// Total pushes (metrics).
@@ -29,7 +34,7 @@ impl CrfCache {
         assert!(k >= 1);
         CrfCache {
             k,
-            entries: Vec::with_capacity(k),
+            entries: VecDeque::with_capacity(k),
             peak_bytes: 0,
             pushes: 0,
             generation: 0,
@@ -37,12 +42,12 @@ impl CrfCache {
     }
 
     /// Record a freshly computed CRF at normalized time `s`.  Evicts the
-    /// oldest entry beyond capacity K.
+    /// oldest entry beyond capacity K (O(1)).
     pub fn push(&mut self, s: f64, crf: Tensor) {
         if self.entries.len() == self.k {
-            self.entries.remove(0);
+            self.entries.pop_front();
         }
-        self.entries.push((s, crf));
+        self.entries.push_back((s, crf));
         self.pushes += 1;
         self.generation += 1;
         self.peak_bytes = self.peak_bytes.max(self.bytes());
@@ -51,7 +56,7 @@ impl CrfCache {
     /// Replace the newest entry in place (ToCa-style partial token
     /// refresh mutates the newest snapshot rather than appending).
     pub fn replace_newest(&mut self, s: f64, crf: Tensor) {
-        if let Some(last) = self.entries.last_mut() {
+        if let Some(last) = self.entries.back_mut() {
             *last = (s, crf);
             self.generation += 1;
         } else {
@@ -83,7 +88,7 @@ impl CrfCache {
     }
 
     pub fn newest(&self) -> Option<&Tensor> {
-        self.entries.last().map(|(_, t)| t)
+        self.entries.back().map(|(_, t)| t)
     }
 
     /// Stack the history into the device layout [K, T, D], padding the
@@ -210,6 +215,19 @@ mod tests {
         assert_eq!(c.bytes(), 3 * 8 * 4);
         assert_eq!(c.peak_bytes(), 3 * 8 * 4);
         assert_eq!(c.pushes(), 10);
+    }
+
+    #[test]
+    fn generation_counts_every_mutation() {
+        let mut c = CrfCache::new(2);
+        assert_eq!(c.generation(), 0);
+        c.push(0.0, crf(1.0));
+        c.push(1.0, crf(2.0));
+        c.push(2.0, crf(3.0)); // evicts, still one mutation
+        assert_eq!(c.generation(), 3);
+        c.replace_newest(2.5, crf(4.0));
+        assert_eq!(c.generation(), 4);
+        assert_eq!(c.pushes(), 3);
     }
 
     #[test]

@@ -87,7 +87,7 @@ freqca — FreqCa diffusion-serving coordinator
 
 USAGE:
   freqca serve    [--addr 127.0.0.1:7463] [--artifacts DIR] [--wait-ms 5]
-                  [--capacity 256] [--warmup MODEL,...]
+                  [--capacity 256] [--max-in-flight 8] [--warmup MODEL,...]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
                   [--artifacts DIR]

@@ -179,4 +179,49 @@ mod tests {
         assert!(!b.push(req(2, "m", "a")));
         assert_eq!(b.shed_count(), 1);
     }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        // Size-or-timeout: a lone compatible request waits while young,
+        // then flushes (at whatever exported size fits) once its head
+        // has aged past max_wait — simulated by advancing `now`.
+        let wait = Duration::from_millis(50);
+        let mut b = Batcher::new(vec![1, 4], wait, 100);
+        b.push(req(0, "m", "fora:n=3"));
+        b.push(req(1, "m", "fora:n=3"));
+        let now = Instant::now();
+        assert!(b.next_batch(now).is_none(), "young partial batch flushed");
+        let later = now + wait + Duration::from_millis(1);
+        let batch = b.next_batch(later).expect("deadline-hit flush");
+        // 2 compatible, largest exported size <= 2 is 1.
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].request.id, 0);
+    }
+
+    #[test]
+    fn size_trigger_beats_timeout() {
+        // Reaching the largest exported size flushes immediately, even
+        // with a generous deadline remaining.
+        let mut b = Batcher::new(vec![1, 4], Duration::from_secs(3600), 100);
+        for i in 0..4 {
+            b.push(req(i, "m", "fora:n=3"));
+        }
+        let batch = b.next_batch(Instant::now()).expect("size-triggered flush");
+        assert_eq!(batch.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn shed_recovers_after_drain() {
+        // Backpressure is on *queue depth*: once a batch drains, pushes
+        // are accepted again; the shed counter keeps its history.
+        let mut b = Batcher::new(vec![1], Duration::ZERO, 1);
+        assert!(b.push(req(0, "m", "a")));
+        assert!(!b.push(req(1, "m", "a")));
+        assert_eq!(b.shed_count(), 1);
+        assert_eq!(b.next_batch(Instant::now()).unwrap().len(), 1);
+        assert!(b.push(req(2, "m", "a")), "capacity not reclaimed");
+        assert_eq!(b.shed_count(), 1);
+        assert_eq!(b.len(), 1);
+    }
 }

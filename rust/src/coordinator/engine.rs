@@ -1,9 +1,21 @@
-//! The generation engine: owns the PJRT runtime + weights, consumes
-//! batches from the router, and executes them through the sampler.
+//! The continuous generation engine: owns the PJRT runtime + weights and
+//! a set of **in-flight sampling sessions**, and advances them one
+//! denoising step at a time.
+//!
+//! Every [`Engine::tick`]:
+//! 1. drains the router's ready batches into new [`SamplerSession`]s
+//!    (admission happens *between steps*, not only when idle — a new
+//!    request never waits for a running job to finish all its steps);
+//! 2. publishes backpressure/queue gauges and shed accounting;
+//! 3. picks one session (round-robin, oldest-deadline tie-break — see
+//!    [`super::scheduler`]) and runs exactly one step;
+//! 4. completes/replies per-session as each finishes.
 //!
 //! `Engine` is deliberately single-threaded (see module docs in
-//! `coordinator`); `serve_loop` is the long-running worker the TCP server
-//! spawns, fed over an mpsc channel.
+//! `coordinator`); `serve_loop` is the long-running worker the TCP
+//! server spawns, fed over an mpsc channel.  On channel close it
+//! gracefully drains: queued requests are admitted and every in-flight
+//! session runs to completion before the loop returns.
 
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -11,15 +23,17 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Error, Result};
 
+use super::batcher::Pending;
 use super::router::{RouteResult, Router};
+use super::scheduler::{SchedState, Scheduler};
 use super::{Request, Response};
 use crate::metrics::Metrics;
 use crate::model::weights;
 use crate::policy;
 use crate::runtime::{discover_models, Runtime};
-use crate::sampler::{self, BatchJob, JobSpec, SampleOpts};
+use crate::sampler::{BatchJob, JobSpec, SampleOpts, SamplerSession, StepOutcome};
 
 /// One unit of work sent to the engine thread.
 pub struct WorkItem {
@@ -28,14 +42,47 @@ pub struct WorkItem {
     pub enqueued: Instant,
 }
 
+/// A client waiting on one member request of an in-flight session.
+struct Waiter {
+    tx: Sender<Response>,
+    client_id: u64,
+    return_latent: bool,
+    /// Enqueue -> session start, fixed at admission.
+    queue_s: f64,
+    /// Enqueue -> first step completed; filled on the session's first step.
+    ttfs_s: Option<f64>,
+    enqueued: Instant,
+}
+
+/// An admitted batch being sampled step-by-step.
+struct InFlight {
+    session: SamplerSession<'static>,
+    waiters: Vec<Waiter>,
+    /// Session start (admission) time; completion latency = span since.
+    started: Instant,
+    /// Scheduling state: last tick this session ran, and its deadline
+    /// surrogate (enqueue time of its oldest member).
+    sched: SchedState<Instant>,
+}
+
 pub struct Engine {
     pub rt: Runtime,
     router: Router,
     weight_bufs: HashMap<String, Rc<xla::PjRtBuffer>>,
     pub metrics: Arc<Metrics>,
-    /// internal id -> (reply channel, enqueue time, client-visible id).
+    /// internal id -> (reply channel, enqueue time, client-visible id):
+    /// requests routed but not yet admitted into a session.
     replies: HashMap<u64, (Sender<Response>, Instant, u64)>,
     next_internal_id: u64,
+    sessions: Vec<InFlight>,
+    /// Concurrency cap: ready batches stay in their (capacity-bounded,
+    /// shedding) queues once this many sessions are in flight, so
+    /// backpressure still has a surface to push on and per-session
+    /// memory (latents, CRF caches, history buffers) stays bounded.
+    max_in_flight: usize,
+    sched: Scheduler,
+    /// Router shed total already folded into the metrics counter.
+    shed_seen: u64,
 }
 
 impl Engine {
@@ -44,6 +91,7 @@ impl Engine {
         artifact_dir: &str,
         max_wait: Duration,
         capacity: usize,
+        max_in_flight: usize,
         metrics: Arc<Metrics>,
     ) -> Result<Engine> {
         let rt = Runtime::new(artifact_dir)?;
@@ -66,6 +114,10 @@ impl Engine {
             metrics,
             replies: HashMap::new(),
             next_internal_id: 1,
+            sessions: Vec::new(),
+            max_in_flight: max_in_flight.max(1),
+            sched: Scheduler::new(),
+            shed_seen: 0,
         })
     }
 
@@ -79,6 +131,11 @@ impl Engine {
 
     pub fn weights(&self, model: &str) -> Option<Rc<xla::PjRtBuffer>> {
         self.weight_bufs.get(model).cloned()
+    }
+
+    /// In-flight session count (scheduler depth).
+    pub fn in_flight(&self) -> usize {
+        self.sessions.len()
     }
 
     /// Pre-compile the hot artifacts of one model so first-request latency
@@ -100,7 +157,8 @@ impl Engine {
         Ok(())
     }
 
-    /// Admit one request; replies arrive on `reply` once executed.
+    /// Admit one request into the per-model queues; the reply arrives on
+    /// `reply` once the request's session completes (or it is rejected).
     pub fn submit(&mut self, item: WorkItem) {
         let mut request = item.request;
         // Internal id for reply matching (client ids may collide).
@@ -115,7 +173,9 @@ impl Engine {
                 self.metrics.bump("requests_admitted", 1);
             }
             RouteResult::Shed => {
-                self.metrics.bump("requests_shed", 1);
+                // The reply must go out now (the client is blocked on
+                // it); the *accounting* is folded in at the next tick,
+                // with the rest of the backpressure bookkeeping.
                 let _ = item.reply.send(Response::err(
                     client_id,
                     "queue full (shed)".into(),
@@ -132,55 +192,105 @@ impl Engine {
         }
     }
 
-    /// Execute at most one ready batch.  Returns how many requests ran.
-    pub fn pump(&mut self) -> usize {
-        let (model, batch) = match self.router.next_batch() {
-            Some(b) => b,
-            None => return 0,
+    /// One scheduler tick: admit every ready batch, publish queue/shed
+    /// accounting, then run **one** denoising step of the least-recently
+    /// scheduled session.  Returns the number of steps executed (0 or 1);
+    /// 0 means the engine is idle (nothing ready and nothing in flight).
+    pub fn tick(&mut self) -> usize {
+        self.admit_ready();
+        self.account_backpressure();
+        let states: Vec<SchedState<Instant>> =
+            self.sessions.iter().map(|s| s.sched).collect();
+        let Some((idx, tick)) = self.sched.pick(&states) else {
+            return 0;
         };
-        let n = batch.len();
-        let ids: Vec<u64> = batch.iter().map(|p| p.request.id).collect();
-        let client_ids: Vec<u64> = ids.clone(); // internal ids reported back
-        let result = self.run_batch(&model, &batch);
-        match result {
-            Ok(responses) => {
-                for (id, mut resp) in ids.into_iter().zip(responses) {
-                    if let Some((tx, enq, client_id)) = self.replies.remove(&id)
-                    {
-                        resp.id = client_id;
-                        resp.queue_s = (enq.elapsed().as_secs_f64()
-                            - resp.latency_s)
-                            .max(0.0);
-                        self.metrics.record_request(resp.latency_s);
-                        let _ = tx.send(resp);
-                    }
-                }
-            }
-            Err(e) => {
-                for id in client_ids {
-                    if let Some((tx, _, client_id)) = self.replies.remove(&id) {
-                        let _ = tx.send(Response::err(
-                            client_id,
-                            format!("engine: {e}"),
-                        ));
-                    }
-                }
-                self.metrics.bump("batch_errors", 1);
-            }
-        }
-        n
+        self.sessions[idx].sched.last_ran = tick;
+        self.run_one_step(idx);
+        1
     }
 
-    fn run_batch(
-        &mut self,
+    /// Drain the router: batches that are ready *now* become in-flight
+    /// sessions, up to the concurrency cap.  Called at the top of each
+    /// tick, so admission interleaves with long-running jobs instead of
+    /// waiting behind them; past the cap, requests keep queueing in the
+    /// batcher whose bounded capacity sheds (backpressure) on overflow.
+    fn admit_ready(&mut self) {
+        while self.sessions.len() < self.max_in_flight {
+            let Some((model, batch)) = self.router.next_batch() else {
+                return;
+            };
+            self.start_session(&model, batch);
+        }
+    }
+
+    /// Fold the router's shed counter and queue depths into the metrics
+    /// registry (backpressure accounting lives on the scheduler tick).
+    fn account_backpressure(&mut self) {
+        let shed = self.router.shed();
+        if shed > self.shed_seen {
+            self.metrics.bump("requests_shed", shed - self.shed_seen);
+            self.shed_seen = shed;
+        }
+        self.metrics
+            .set_gauge("in_flight_sessions", self.sessions.len() as f64);
+        let in_flight_requests: usize =
+            self.sessions.iter().map(|s| s.waiters.len()).sum();
+        self.metrics
+            .set_gauge("in_flight_requests", in_flight_requests as f64);
+        self.metrics
+            .set_gauge("queued_requests", self.router.queued() as f64);
+    }
+
+    /// Build a `SamplerSession` for one batch and enroll it.
+    fn start_session(&mut self, model: &str, batch: Vec<Pending>) {
+        let now = Instant::now();
+        let mut waiters = Vec::with_capacity(batch.len());
+        let mut oldest = now;
+        for p in &batch {
+            if let Some((tx, enq, client_id)) = self.replies.remove(&p.request.id)
+            {
+                let queue_s = now.duration_since(enq).as_secs_f64();
+                self.metrics.record_queue_wait(queue_s);
+                oldest = oldest.min(enq);
+                waiters.push(Waiter {
+                    tx,
+                    client_id,
+                    return_latent: p.request.return_latent,
+                    queue_s,
+                    ttfs_s: None,
+                    enqueued: enq,
+                });
+            }
+        }
+        match self.build_session(model, &batch) {
+            Ok(session) => {
+                self.sessions.push(InFlight {
+                    session,
+                    waiters,
+                    started: now,
+                    sched: SchedState { last_ran: 0, deadline: oldest },
+                });
+            }
+            Err(e) => {
+                self.metrics.bump("batch_errors", 1);
+                for w in waiters {
+                    let _ = w
+                        .tx
+                        .send(Response::err(w.client_id, format!("engine: {e}")));
+                }
+            }
+        }
+    }
+
+    fn build_session(
+        &self,
         model: &str,
-        batch: &[super::batcher::Pending],
-    ) -> Result<Vec<Response>> {
+        batch: &[Pending],
+    ) -> Result<SamplerSession<'static>> {
         let cfg = self
             .router
             .config(model)
-            .ok_or_else(|| anyhow!("model {model} vanished"))?
-            .clone();
+            .ok_or_else(|| anyhow!("model {model} vanished"))?;
         let weights = self
             .weight_bufs
             .get(model)
@@ -188,7 +298,7 @@ impl Engine {
             .clone();
         let first = &batch[0].request;
         let decomp = crate::freq::Decomp::parse(&cfg.decomp)?;
-        let mut pol =
+        let pol =
             policy::parse_policy(&first.policy, decomp, cfg.grid, cfg.k_hist)?;
         let jobs: Vec<JobSpec> = batch
             .iter()
@@ -198,72 +308,136 @@ impl Engine {
                 seed: p.request.seed,
             })
             .collect();
-        let bj = BatchJob { cfg: &cfg, weights, jobs, n_steps: first.n_steps };
-        let results = sampler::generate_batch(
-            &self.rt,
-            &bj,
-            pol.as_mut(),
-            &SampleOpts::default(),
-        )?;
-        self.metrics.bump("batches_executed", 1);
-        self.metrics.bump("full_steps", results[0].full_steps as u64);
-        self.metrics.bump("cached_steps", results[0].cached_steps as u64);
-        for s in &results[0].steps {
-            self.metrics.record_step(s.wall_s);
+        let bj = BatchJob { cfg, weights, jobs, n_steps: first.n_steps };
+        SamplerSession::new(&bj, pol, SampleOpts::default())
+    }
+
+    /// Advance session `idx` by one step; complete or fail it as needed.
+    fn run_one_step(&mut self, idx: usize) {
+        let outcome = {
+            let inflight = &mut self.sessions[idx];
+            inflight.session.step(&self.rt)
+        };
+        match outcome {
+            Ok(StepOutcome::Ran { record, done }) => {
+                self.metrics.record_step(record.wall_s);
+                if record.step == 0 {
+                    let now = Instant::now();
+                    for w in &mut self.sessions[idx].waiters {
+                        let ttfs = now.duration_since(w.enqueued).as_secs_f64();
+                        w.ttfs_s = Some(ttfs);
+                        self.metrics.record_ttfs(ttfs);
+                    }
+                }
+                if done {
+                    self.complete_session(idx);
+                }
+            }
+            // Defensive: a finished session should have left the set.
+            Ok(StepOutcome::Finished) => self.complete_session(idx),
+            Err(e) => self.fail_session(idx, e),
         }
-        Ok(batch
-            .iter()
-            .zip(results)
-            .map(|(p, r)| Response {
-                id: p.request.id,
+    }
+
+    /// Reply to every member of a finished session and drop it.
+    fn complete_session(&mut self, idx: usize) {
+        let inflight = self.sessions.swap_remove(idx);
+        let latency_s = inflight.started.elapsed().as_secs_f64();
+        let InFlight { session, waiters, .. } = inflight;
+        let results = match session.into_results() {
+            Ok(r) => r,
+            Err(e) => {
+                self.metrics.bump("batch_errors", 1);
+                for w in waiters {
+                    let _ = w
+                        .tx
+                        .send(Response::err(w.client_id, format!("engine: {e}")));
+                }
+                return;
+            }
+        };
+        // Counted on successful completion (not admission), matching the
+        // pre-refactor semantics of one bump per executed batch.
+        self.metrics.bump("batches_executed", 1);
+        if let Some(first) = results.first() {
+            self.metrics.bump("full_steps", first.full_steps as u64);
+            self.metrics.bump("cached_steps", first.cached_steps as u64);
+        }
+        for (w, r) in waiters.into_iter().zip(results) {
+            self.metrics.record_request(latency_s);
+            let resp = Response {
+                id: w.client_id,
                 ok: true,
                 error: None,
-                latency_s: r.wall_s,
-                queue_s: 0.0, // filled by pump()
+                latency_s,
+                queue_s: w.queue_s,
+                ttfs_s: w.ttfs_s.unwrap_or(0.0),
                 full_steps: r.full_steps,
                 cached_steps: r.cached_steps + r.partial_steps,
                 flops: r.flops,
                 cache_peak_bytes: r.cache_peak_bytes,
-                latent: if p.request.return_latent {
-                    Some(r.latent.data.clone())
+                latent: if w.return_latent {
+                    Some(r.latent.data)
                 } else {
                     None
                 },
-            })
-            .collect())
+            };
+            let _ = w.tx.send(resp);
+        }
     }
 
-    /// Long-running worker loop: drain the channel, pump batches, repeat
-    /// until the channel closes and all queues are empty.
+    /// A step errored: the whole batch fails (one device execution
+    /// serves all members, so there is no per-member salvage).
+    fn fail_session(&mut self, idx: usize, e: Error) {
+        let inflight = self.sessions.swap_remove(idx);
+        self.metrics.bump("batch_errors", 1);
+        for w in inflight.waiters {
+            let _ = w
+                .tx
+                .send(Response::err(w.client_id, format!("engine: {e}")));
+        }
+    }
+
+    /// Long-running worker loop: drain the channel, tick the scheduler,
+    /// repeat.  When the channel closes the engine **drains gracefully**:
+    /// already-queued requests are admitted and every in-flight session
+    /// steps to completion before the loop returns.
     pub fn serve_loop(&mut self, rx: Receiver<WorkItem>) {
+        let mut closed = false;
         loop {
             // Admit everything currently waiting.
-            let mut closed = false;
-            loop {
+            while !closed {
                 match rx.try_recv() {
                     Ok(item) => self.submit(item),
                     Err(std::sync::mpsc::TryRecvError::Empty) => break,
                     Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                         closed = true;
-                        break;
                     }
                 }
             }
-            let ran = self.pump();
-            if ran == 0 {
-                if closed && self.router.queued() == 0 {
+            let ran = self.tick();
+            if ran != 0 {
+                continue;
+            }
+            let drained = self.sessions.is_empty() && self.router.queued() == 0;
+            if closed {
+                if drained {
                     return;
                 }
-                // Idle: block briefly for the next request to avoid a
-                // busy spin.
-                match rx.recv_timeout(Duration::from_millis(2)) {
-                    Ok(item) => self.submit(item),
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                        if self.router.queued() == 0 {
-                            return;
-                        }
-                    }
+                // Still draining: requests are parked in a batcher whose
+                // size-or-timeout deadline has not fired yet.  Sleep one
+                // tick so the deadline can pass instead of busy-spinning.
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            // Idle: block briefly for the next request to avoid a busy
+            // spin.  Short timeout so parked batches still flush on
+            // their size-or-timeout deadline.
+            match rx.recv_timeout(Duration::from_millis(2)) {
+                Ok(item) => self.submit(item),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    closed = true;
                 }
             }
         }

@@ -1,17 +1,24 @@
-//! The serving coordinator: request types, router, dynamic batcher, and
-//! the generation engine that drives batched sampling through PJRT.
+//! The serving coordinator: request types, router, dynamic batcher, the
+//! step-level scheduler, and the continuous engine that drives batched
+//! sampling through PJRT.
 //!
 //! Threading model: PJRT CPU execution is single-stream and the `xla`
 //! wrapper types are not `Send`, so one **engine thread** owns the
-//! `Runtime` and executes batches; the TCP acceptor threads communicate
-//! with it over `mpsc` channels.  This mirrors the leader/worker split of
-//! production routers (vLLM's router keeps model executors on pinned
-//! workers); here there is exactly one worker because the sandbox has one
+//! `Runtime` and all in-flight `SamplerSession`s; the TCP acceptor
+//! threads communicate with it over `mpsc` channels.  The engine loop is
+//! **continuous**: every tick it drains newly batched requests into new
+//! sessions and advances exactly one session by one denoising step
+//! (round-robin, oldest-deadline tie-break — see `scheduler`), so short
+//! jobs are never head-of-line blocked behind a long job's remaining
+//! steps.  This mirrors continuous batching in production LLM routers
+//! (vLLM-style token-level admission), applied at diffusion step
+//! granularity; there is exactly one worker because the sandbox has one
 //! core.
 
 pub mod batcher;
 pub mod engine;
 pub mod router;
+pub mod scheduler;
 
 use crate::util::Json;
 
@@ -92,8 +99,13 @@ pub struct Response {
     pub id: u64,
     pub ok: bool,
     pub error: Option<String>,
+    /// Service time: session start -> completion (includes time spent
+    /// interleaved with other sessions on the shared engine).
     pub latency_s: f64,
+    /// Queue wait: enqueue -> session start (batching + scheduling).
     pub queue_s: f64,
+    /// Time-to-first-step: enqueue -> first denoising step completed.
+    pub ttfs_s: f64,
     pub full_steps: usize,
     pub cached_steps: usize,
     pub flops: f64,
@@ -109,6 +121,7 @@ impl Response {
             error: Some(msg),
             latency_s: 0.0,
             queue_s: 0.0,
+            ttfs_s: 0.0,
             full_steps: 0,
             cached_steps: 0,
             flops: 0.0,
@@ -123,6 +136,7 @@ impl Response {
             ("ok", Json::Bool(self.ok)),
             ("latency_s", Json::num(self.latency_s)),
             ("queue_s", Json::num(self.queue_s)),
+            ("ttfs_s", Json::num(self.ttfs_s)),
             ("full_steps", Json::num(self.full_steps as f64)),
             ("cached_steps", Json::num(self.cached_steps as f64)),
             ("flops", Json::num(self.flops)),
@@ -144,6 +158,7 @@ impl Response {
             error: j.get("error").and_then(|v| v.as_str()).map(String::from),
             latency_s: j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
             queue_s: j.get("queue_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            ttfs_s: j.get("ttfs_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
             full_steps: j
                 .get("full_steps")
                 .and_then(|v| v.as_usize())
@@ -200,6 +215,7 @@ mod tests {
             error: None,
             latency_s: 1.25,
             queue_s: 0.5,
+            ttfs_s: 0.75,
             full_steps: 8,
             cached_steps: 42,
             flops: 1e12,
@@ -211,6 +227,7 @@ mod tests {
         );
         assert!(back.ok);
         assert_eq!(back.full_steps, 8);
+        assert!((back.ttfs_s - 0.75).abs() < 1e-12);
         assert_eq!(back.latent.unwrap().len(), 2);
     }
 

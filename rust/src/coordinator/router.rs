@@ -21,6 +21,13 @@ pub enum RouteResult {
 pub struct Router {
     batchers: HashMap<String, Batcher>,
     configs: HashMap<String, ModelConfig>,
+    /// Model names in sorted order, fixed at construction — cached
+    /// because `next_batch` is on the per-denoising-step hot path.
+    names: Vec<String>,
+    /// Rotation cursor into `names`: `next_batch` starts scanning after
+    /// the model it served last, so one busy model cannot starve later
+    /// names under sustained load.
+    rr_next: usize,
 }
 
 impl Router {
@@ -38,7 +45,9 @@ impl Router {
             );
             map.insert(cfg.name.clone(), cfg);
         }
-        Router { batchers, configs: map }
+        let mut names: Vec<String> = map.keys().cloned().collect();
+        names.sort();
+        Router { batchers, configs: map, names, rr_next: 0 }
     }
 
     pub fn config(&self, model: &str) -> Option<&ModelConfig> {
@@ -88,17 +97,20 @@ impl Router {
         }
     }
 
-    /// Collect the next ready batch across all model queues (round-robin
-    /// by model name order for fairness).
+    /// Collect the next ready batch across all model queues: true
+    /// round-robin — the scan starts after the model served last (name
+    /// order, rotating cursor), so every model with ready work is
+    /// reached within one rotation even when an earlier name always has
+    /// a batch ready.
     pub fn next_batch(&mut self) -> Option<(String, Vec<Pending>)> {
         let now = std::time::Instant::now();
-        let mut names: Vec<&String> = self.batchers.keys().collect();
-        names.sort();
-        let names: Vec<String> = names.into_iter().cloned().collect();
-        for name in names {
-            let b = self.batchers.get_mut(&name).unwrap();
+        let n = self.names.len();
+        for k in 0..n {
+            let i = (self.rr_next + k) % n;
+            let b = self.batchers.get_mut(&self.names[i]).unwrap();
             if let Some(batch) = b.next_batch(now) {
-                return Some((name, batch));
+                self.rr_next = (i + 1) % n;
+                return Some((self.names[i].clone(), batch));
             }
         }
         None
@@ -189,5 +201,67 @@ mod tests {
         assert_eq!(r.route(req("m")), RouteResult::Queued);
         assert_eq!(r.route(req("m")), RouteResult::Shed);
         assert_eq!(r.shed(), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range_step_counts() {
+        let mut r = Router::new(vec![cfg("m", false)], Duration::ZERO, 10);
+        let mut rq = req("m");
+        rq.n_steps = 1001;
+        assert!(matches!(r.route(rq), RouteResult::Invalid(_)));
+        let mut ok = req("m");
+        ok.n_steps = 1000;
+        assert_eq!(r.route(ok), RouteResult::Queued);
+    }
+
+    #[test]
+    fn rejections_consume_no_queue_capacity() {
+        // Unknown-model and invalid requests must not count against the
+        // backpressure budget of valid traffic.
+        let mut r = Router::new(vec![cfg("m", false)], Duration::ZERO, 1);
+        assert_eq!(r.route(req("nope")), RouteResult::UnknownModel);
+        let mut bad = req("m");
+        bad.n_steps = 0;
+        assert!(matches!(r.route(bad), RouteResult::Invalid(_)));
+        assert_eq!(r.queued(), 0);
+        assert_eq!(r.route(req("m")), RouteResult::Queued);
+        assert_eq!(r.queued(), 1);
+    }
+
+    #[test]
+    fn ref_img_on_non_edit_model_is_invalid_at_generation_time() {
+        // The router forwards a spurious ref_img only if sized right for
+        // an edit model; a non-edit model rejects it in the sampler.  At
+        // the router layer the wrong-size path must already be caught.
+        let mut r = Router::new(vec![cfg("e", true)], Duration::ZERO, 10);
+        let mut rq = req("e");
+        rq.ref_img = Some(vec![0.0; 7]); // latent_elems is 8*8*4
+        assert!(matches!(r.route(rq), RouteResult::Invalid(_)));
+    }
+
+    #[test]
+    fn next_batch_round_robins_models_under_sustained_load() {
+        // Model "a" always has ready work; the rotating cursor must
+        // still reach "b" on the next call instead of letting the
+        // earlier name starve it.
+        let mut r = Router::new(
+            vec![cfg("a", false), cfg("b", false)],
+            Duration::ZERO,
+            100,
+        );
+        for _ in 0..4 {
+            assert_eq!(r.route(req("a")), RouteResult::Queued);
+        }
+        assert_eq!(r.route(req("b")), RouteResult::Queued);
+        let mut served = Vec::new();
+        while let Some((name, batch)) = r.next_batch() {
+            assert!(!batch.is_empty());
+            served.push(name);
+        }
+        assert_eq!(r.queued(), 0);
+        // "b" is served on the second rotation, not after all of "a".
+        assert_eq!(served[0], "a");
+        assert_eq!(served[1], "b");
+        assert!(served[2..].iter().all(|n| n == "a"));
     }
 }

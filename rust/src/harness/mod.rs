@@ -15,7 +15,7 @@ use crate::model::{flops, weights, ModelConfig};
 use crate::policy;
 use crate::quality;
 use crate::runtime::{discover_models, Runtime};
-use crate::sampler::{generate, JobSpec, RunResult, SampleOpts};
+use crate::sampler::{BatchJob, JobSpec, RunResult, SampleOpts, SamplerSession};
 use crate::util::{stats, Tensor};
 use crate::workload;
 
@@ -66,7 +66,40 @@ impl Session {
         Decomp::parse(&self.cfg.decomp)
     }
 
-    /// Serve prompt `idx` under `policy_desc`.
+    /// Open a resumable [`SamplerSession`] for prompt `idx` under
+    /// `policy_desc` — the step-level API the continuous scheduler
+    /// drives; exposed here so eval code and notebooks can inspect
+    /// mid-flight state (latent trajectory, cache contents) per step.
+    pub fn start_prompt(
+        &self,
+        policy_desc: &str,
+        idx: u64,
+        steps: usize,
+        opts: &SampleOpts,
+    ) -> Result<(SamplerSession<'static>, workload::Prompt)> {
+        let prompt = workload::build_prompt(&self.cfg, idx)?;
+        let pol = policy::parse_policy(
+            policy_desc,
+            self.decomp()?,
+            self.cfg.grid,
+            self.cfg.k_hist,
+        )?;
+        let batch = BatchJob {
+            cfg: &self.cfg,
+            weights: self.weights.clone(),
+            jobs: vec![JobSpec {
+                cond: prompt.cond.clone(),
+                ref_img: prompt.ref_img.clone(),
+                seed: idx,
+            }],
+            n_steps: steps,
+        };
+        let session = SamplerSession::new(&batch, pol, opts.clone())?;
+        Ok((session, prompt))
+    }
+
+    /// Serve prompt `idx` under `policy_desc` to completion (drives
+    /// [`Self::start_prompt`]'s session step-by-step).
     pub fn run_prompt(
         &self,
         policy_desc: &str,
@@ -74,27 +107,10 @@ impl Session {
         steps: usize,
         opts: &SampleOpts,
     ) -> Result<(RunResult, workload::Prompt)> {
-        let prompt = workload::build_prompt(&self.cfg, idx)?;
-        let mut pol = policy::parse_policy(
-            policy_desc,
-            self.decomp()?,
-            self.cfg.grid,
-            self.cfg.k_hist,
-        )?;
-        let r = generate(
-            &self.rt,
-            &self.cfg,
-            self.weights.clone(),
-            JobSpec {
-                cond: prompt.cond.clone(),
-                ref_img: prompt.ref_img.clone(),
-                seed: idx,
-            },
-            steps,
-            pol.as_mut(),
-            opts,
-        )?;
-        Ok((r, prompt))
+        let (mut session, prompt) =
+            self.start_prompt(policy_desc, idx, steps, opts)?;
+        session.run_to_completion(&self.rt)?;
+        Ok((session.into_results()?.remove(0), prompt))
     }
 }
 

@@ -9,15 +9,20 @@
 //! * **L2** — the rectified-flow DiT in JAX (`python/compile/model.py`),
 //!   exported as HLO-text artifacts.
 //! * **L3** — this crate: the serving coordinator.  It owns the event
-//!   loop, request routing, dynamic batching, the **O(1) Cumulative
-//!   Residual Feature cache**, the caching *policy engine* (FreqCa and all
-//!   baselines), the PJRT runtime, metrics, CLI and TCP server.  Python is
-//!   never on the request path.
+//!   loop, request routing, dynamic batching, the **continuous
+//!   step-level scheduler** (resumable `SamplerSession`s, one denoising
+//!   step per tick — see `coordinator`), the **O(1) Cumulative Residual
+//!   Feature cache**, the caching *policy engine* (FreqCa and all
+//!   baselines), the PJRT runtime, metrics, CLI and TCP server.  Python
+//!   is never on the request path.
 //!
 //! The crate is std-only besides the `xla` PJRT bindings: JSON, PRNG,
 //! statistics, property-testing and the bench harness are in-repo
 //! substrates (`util`, `benchkit`) because the sandbox ships no other
-//! crates.
+//! crates.  `anyhow` and `xla` themselves are vendored path
+//! dependencies under `vendor/` — the `xla` one is a stub runtime by
+//! default, with the real PJRT bindings behind the `pjrt` feature (see
+//! DESIGN.md "Runtime backends").
 
 pub mod analysis;
 pub mod benchkit;

@@ -56,6 +56,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         addr: args.str_or("addr", "127.0.0.1:7463"),
         batch_wait_ms: args.u64_or("wait-ms", 5)?,
         queue_capacity: args.usize_or("capacity", 256)?,
+        max_in_flight: args
+            .usize_or("max-in-flight", server::DEFAULT_MAX_IN_FLIGHT)?,
         warmup: args
             .get("warmup")
             .map(|w| w.split(',').map(String::from).collect())

@@ -67,7 +67,14 @@ pub struct Metrics {
 struct Inner {
     request_latency: Histogram,
     step_latency: Histogram,
+    /// Enqueue -> session start (batching + scheduling wait).
+    queue_wait: Histogram,
+    /// Enqueue -> first denoising step completed.
+    ttfs: Histogram,
     counters: BTreeMap<String, u64>,
+    /// Point-in-time values the scheduler tick publishes (in-flight
+    /// session count, queued requests, ...).
+    gauges: BTreeMap<String, f64>,
     started: Option<Instant>,
 }
 
@@ -86,6 +93,33 @@ impl Metrics {
 
     pub fn record_step(&self, seconds: f64) {
         self.inner.lock().unwrap().step_latency.record(seconds);
+    }
+
+    pub fn record_queue_wait(&self, seconds: f64) {
+        self.inner.lock().unwrap().queue_wait.record(seconds);
+    }
+
+    pub fn record_ttfs(&self, seconds: f64) {
+        self.inner.lock().unwrap().ttfs.record(seconds);
+    }
+
+    /// Publish a point-in-time value (overwrites the previous one).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .gauges
+            .insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .gauges
+            .get(name)
+            .copied()
+            .unwrap_or(0.0)
     }
 
     pub fn bump(&self, counter: &str, by: u64) {
@@ -123,10 +157,18 @@ impl Metrics {
         let g = self.inner.lock().unwrap();
         let req = g.request_latency.summary();
         let step = g.step_latency.summary();
+        let queue = g.queue_wait.summary();
+        let ttfs = g.ttfs.summary();
         let counters = Json::Obj(
             g.counters
                 .iter()
                 .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            g.gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v)))
                 .collect(),
         );
         Json::obj(vec![
@@ -150,7 +192,26 @@ impl Metrics {
                     ("p99", Json::num(step.p99)),
                 ]),
             ),
+            (
+                "queue_wait_s",
+                Json::obj(vec![
+                    ("n", Json::num(queue.n as f64)),
+                    ("mean", Json::num(queue.mean)),
+                    ("p50", Json::num(queue.p50)),
+                    ("p99", Json::num(queue.p99)),
+                ]),
+            ),
+            (
+                "ttfs_s",
+                Json::obj(vec![
+                    ("n", Json::num(ttfs.n as f64)),
+                    ("mean", Json::num(ttfs.mean)),
+                    ("p50", Json::num(ttfs.p50)),
+                    ("p99", Json::num(ttfs.p99)),
+                ]),
+            ),
             ("counters", counters),
+            ("gauges", gauges),
         ])
     }
 }
@@ -190,5 +251,33 @@ mod tests {
             Some(2)
         );
         assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn scheduler_metrics_roundtrip() {
+        let m = Metrics::new();
+        m.record_queue_wait(0.010);
+        m.record_ttfs(0.025);
+        m.set_gauge("in_flight_sessions", 3.0);
+        m.set_gauge("in_flight_sessions", 2.0); // overwrite, not sum
+        assert!((m.gauge("in_flight_sessions") - 2.0).abs() < 1e-12);
+        assert!((m.gauge("nonexistent")).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("queue_wait_s").unwrap().get("n").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            j.get("ttfs_s").unwrap().get("n").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            j.get("gauges")
+                .unwrap()
+                .get("in_flight_sessions")
+                .unwrap()
+                .as_f64(),
+            Some(2.0)
+        );
     }
 }

@@ -1,10 +1,19 @@
-//! The rectified-flow sampling engine (batched).
+//! The rectified-flow sampling engine (batched, step-resumable).
 //!
-//! Owns the denoising loop: at every step it asks the `CachePolicy` for
-//! an action, runs the corresponding artifact(s) through the PJRT
-//! runtime, maintains the O(1) CRF cache, and integrates the Euler update
-//! x <- x - dt * v.  Sampling convention (matches `python/compile/`):
-//! x_t = (1 - t) x0 + t eps,  v = eps - x0,  t: 1 -> 0.
+//! The unit of work is **one denoising step**: [`SamplerSession`] holds
+//! all per-batch state (latents, conditioning, the O(1) CRF cache, the
+//! policy, the step index and per-step records) and exposes
+//! [`SamplerSession::step`], so the coordinator can interleave many
+//! in-flight sessions on one runtime — continuous batching instead of
+//! run-to-completion.  [`generate_batch`] remains as the thin
+//! construct-then-loop convenience wrapper, and is bit-identical to
+//! driving `step()` by hand (the parity tests assert this).
+//!
+//! At every step the session asks the `CachePolicy` for an action, runs
+//! the corresponding artifact(s) through the PJRT runtime, maintains the
+//! CRF cache, and integrates the Euler update x <- x - dt * v.  Sampling
+//! convention (matches `python/compile/`): x_t = (1 - t) x0 + t eps,
+//! v = eps - x0, t: 1 -> 0.
 //!
 //! A batch of B compatible requests (same model / policy / step count —
 //! guaranteed by the dynamic batcher) shares one `fwd_b{B}` /
@@ -66,7 +75,10 @@ pub struct RunResult {
     pub full_steps: usize,
     pub cached_steps: usize,
     pub partial_steps: usize,
-    /// Wall time of the whole batch (requests complete together).
+    /// Compute wall time of the whole batch: the sum of its step walls.
+    /// (Under the continuous scheduler a session's *span* also contains
+    /// time spent running other sessions; the coordinator reports that
+    /// separately.)
     pub wall_s: f64,
     /// This request's share of the batch FLOPs.
     pub flops: f64,
@@ -90,190 +102,403 @@ pub struct SampleOpts {
     pub record_pred_error: bool,
 }
 
-/// Serve a batch; returns one `RunResult` per job (same order).
-pub fn generate_batch(
-    rt: &Runtime,
-    batch: &BatchJob,
-    policy: &mut dyn CachePolicy,
-    opts: &SampleOpts,
-) -> Result<Vec<RunResult>> {
-    let cfg = batch.cfg;
-    let b = batch.jobs.len();
-    if b == 0 {
-        bail!("empty batch");
-    }
-    if !cfg.has_artifact(&format!("fwd_b{b}")) {
-        bail!(
-            "model {} has no artifacts for batch size {b} (exported: {:?})",
-            cfg.name,
-            cfg.batch_sizes
-        );
-    }
-    policy.reset();
+/// What one call to [`SamplerSession::step`] did.
+#[derive(Debug, Clone)]
+pub enum StepOutcome {
+    /// One denoising step executed.  `done` is true when it was the
+    /// session's final step (the next call would return `Finished`).
+    Ran { record: StepRecord, done: bool },
+    /// The session had already consumed all its steps; nothing ran.
+    Finished,
+}
 
-    // Assemble batched inputs.
-    let mut x_data = Vec::with_capacity(b * cfg.latent_elems());
-    let mut cond_data = Vec::with_capacity(b * cfg.cond_dim);
-    let mut ref_data = Vec::new();
-    for job in &batch.jobs {
-        let mut rng = Rng::new(job.seed);
-        x_data.extend(rng.normal_vec(cfg.latent_elems()));
-        if job.cond.len() != cfg.cond_dim {
-            bail!("cond has {} dims, expected {}", job.cond.len(), cfg.cond_dim);
+/// A resumable sampling session over one device batch.
+///
+/// Owns every piece of per-batch state the old run-to-completion loop
+/// kept on its stack, so the scheduler can advance it one step at a time
+/// and interleave it with other sessions between steps.  Lifetime `'p`
+/// is the policy borrow — `'static` for engine-owned boxed policies,
+/// shorter for [`generate_batch`]'s borrowed one.
+pub struct SamplerSession<'p> {
+    cfg: ModelConfig,
+    weights: Rc<xla::PjRtBuffer>,
+    n_steps: usize,
+    b: usize,
+    opts: SampleOpts,
+    policy: Box<dyn CachePolicy + 'p>,
+    /// Current latent [B, S, S, C].
+    x: Tensor,
+    cond: Tensor,
+    ref_t: Option<Tensor>,
+    cache: CrfCache,
+    /// Device-resident stack of the cache, re-uploaded only when the
+    /// cache mutates (perf-pass fix #2: between refreshes every predicted
+    /// step reuses the same [B, K, T, D] buffer).
+    hist_buf: Option<(u64, xla::PjRtBuffer)>,
+    token_age: Vec<u32>,
+    x_at_last_full: Option<Vec<f32>>,
+    full_steps: usize,
+    cached_steps: usize,
+    partial_steps: usize,
+    total_flops: f64,
+    steps: Vec<StepRecord>,
+    step_idx: usize,
+    /// Accumulated compute time across executed steps.
+    busy_s: f64,
+}
+
+impl<'p> SamplerSession<'p> {
+    /// Validate the batch, assemble device inputs (seeded noise,
+    /// conditioning, reference latents) and reset the policy.  No model
+    /// execution happens here; the first [`step`](Self::step) does.
+    pub fn new(
+        batch: &BatchJob,
+        mut policy: Box<dyn CachePolicy + 'p>,
+        opts: SampleOpts,
+    ) -> Result<SamplerSession<'p>> {
+        let cfg = batch.cfg;
+        let b = batch.jobs.len();
+        if b == 0 {
+            bail!("empty batch");
         }
-        cond_data.extend_from_slice(&job.cond);
-        match (&job.ref_img, cfg.is_edit) {
-            (Some(r), true) => {
-                if r.len() != cfg.latent_elems() {
-                    bail!("ref_img wrong size");
+        if !cfg.has_artifact(&format!("fwd_b{b}")) {
+            bail!(
+                "model {} has no artifacts for batch size {b} (exported: {:?})",
+                cfg.name,
+                cfg.batch_sizes
+            );
+        }
+        policy.reset();
+
+        // Assemble batched inputs.
+        let mut x_data = Vec::with_capacity(b * cfg.latent_elems());
+        let mut cond_data = Vec::with_capacity(b * cfg.cond_dim);
+        let mut ref_data = Vec::new();
+        for job in &batch.jobs {
+            let mut rng = Rng::new(job.seed);
+            x_data.extend(rng.normal_vec(cfg.latent_elems()));
+            if job.cond.len() != cfg.cond_dim {
+                bail!("cond has {} dims, expected {}", job.cond.len(), cfg.cond_dim);
+            }
+            cond_data.extend_from_slice(&job.cond);
+            match (&job.ref_img, cfg.is_edit) {
+                (Some(r), true) => {
+                    if r.len() != cfg.latent_elems() {
+                        bail!("ref_img wrong size");
+                    }
+                    ref_data.extend_from_slice(r);
                 }
-                ref_data.extend_from_slice(r);
+                (None, true) => bail!("editing model {} needs ref_img", cfg.name),
+                (Some(_), false) => {
+                    bail!("ref_img given but {} is not an editing model", cfg.name)
+                }
+                (None, false) => {}
             }
-            (None, true) => bail!("editing model {} needs ref_img", cfg.name),
-            (Some(_), false) => {
-                bail!("ref_img given but {} is not an editing model", cfg.name)
-            }
-            (None, false) => {}
         }
-    }
-    let mut x = Tensor::new(
-        vec![b, cfg.latent, cfg.latent, cfg.channels],
-        x_data,
-    )?;
-    let cond = Tensor::new(vec![b, cfg.cond_dim], cond_data)?;
-    let ref_t = if cfg.is_edit {
-        Some(Tensor::new(
+        let x = Tensor::new(
             vec![b, cfg.latent, cfg.latent, cfg.channels],
-            ref_data,
-        )?)
-    } else {
-        None
-    };
+            x_data,
+        )?;
+        let cond = Tensor::new(vec![b, cfg.cond_dim], cond_data)?;
+        let ref_t = if cfg.is_edit {
+            Some(Tensor::new(
+                vec![b, cfg.latent, cfg.latent, cfg.channels],
+                ref_data,
+            )?)
+        } else {
+            None
+        };
 
-    let mut cache = CrfCache::new(cfg.k_hist);
-    // Device-resident stack of the cache, re-uploaded only when the cache
-    // mutates (perf-pass fix #2: between refreshes every predicted step
-    // reuses the same [B, K, T, D] buffer).
-    let mut hist_buf: Option<(u64, xla::PjRtBuffer)> = None;
-    let mut token_age = vec![0u32; cfg.tokens];
-    let mut x_at_last_full: Option<Vec<f32>> = None;
-    let mut full_steps = 0;
-    let mut cached_steps = 0;
-    let mut partial_steps = 0;
-    let mut total_flops = 0.0;
-    let mut steps = Vec::with_capacity(batch.n_steps);
-    let n = batch.n_steps;
-    let dt = 1.0f32 / n as f32;
-    let t0 = Instant::now();
+        Ok(SamplerSession {
+            cfg: cfg.clone(),
+            weights: batch.weights.clone(),
+            n_steps: batch.n_steps,
+            b,
+            opts,
+            policy,
+            x,
+            cond,
+            ref_t,
+            cache: CrfCache::new(cfg.k_hist),
+            hist_buf: None,
+            token_age: vec![0u32; cfg.tokens],
+            x_at_last_full: None,
+            full_steps: 0,
+            cached_steps: 0,
+            partial_steps: 0,
+            total_flops: 0.0,
+            steps: Vec::with_capacity(batch.n_steps),
+            step_idx: 0,
+            busy_s: 0.0,
+        })
+    }
 
-    for i in 0..n {
+    /// Next step index to execute (== steps already executed).
+    pub fn step_index(&self) -> usize {
+        self.step_idx
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    /// Steps still to run.
+    pub fn steps_remaining(&self) -> usize {
+        self.n_steps - self.step_idx
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.b
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.step_idx >= self.n_steps
+    }
+
+    /// Per-step records executed so far.
+    pub fn records(&self) -> &[StepRecord] {
+        &self.steps
+    }
+
+    /// Accumulated compute time across executed steps.
+    pub fn busy_s(&self) -> f64 {
+        self.busy_s
+    }
+
+    /// Execute exactly one denoising step (the scheduler's unit of work).
+    pub fn step(&mut self, rt: &Runtime) -> Result<StepOutcome> {
+        if self.is_done() {
+            return Ok(StepOutcome::Finished);
+        }
+        let i = self.step_idx;
+        let n = self.n_steps;
+        let b = self.b;
+        let dt = 1.0f32 / n as f32;
         let t = 1.0 - i as f32 * dt;
         let s = 2.0 * t as f64 - 1.0;
-        let hist_s = cache.times();
+        let hist_s = self.cache.times();
+        // Timer covers the policy decision too: TeaCache/FreqCa-adaptive
+        // scan the latent in `decide`, and that cost belongs to the step
+        // (the old run-to-completion wall included it).
+        let st0 = Instant::now();
         let action = {
             let ctx = StepCtx {
                 step: i,
                 n_steps: n,
                 s,
                 hist_s: &hist_s,
-                x: &x.data,
-                x_at_last_full: x_at_last_full.as_deref(),
+                x: &self.x.data,
+                x_at_last_full: self.x_at_last_full.as_deref(),
             };
-            policy.decide(&ctx)?
+            self.policy.decide(&ctx)?
         };
-        let st0 = Instant::now();
         let mut pred_mse = None;
 
         let (v, step_action) = match action {
             Action::Full => {
-                let (v, crf) =
-                    run_fwd(rt, batch, b, &x, &cond, ref_t.as_ref(), t)?;
-                cache.push(s, crf);
-                x_at_last_full = Some(x.data.clone());
-                token_age.iter_mut().for_each(|a| *a = 0);
-                full_steps += 1;
-                total_flops += flops::forward_flops(cfg, b);
+                let (v, crf) = run_fwd(
+                    rt,
+                    &self.cfg,
+                    &self.weights,
+                    b,
+                    &self.x,
+                    &self.cond,
+                    self.ref_t.as_ref(),
+                    t,
+                )?;
+                self.cache.push(s, crf);
+                self.x_at_last_full = Some(self.x.data.clone());
+                self.token_age.iter_mut().for_each(|a| *a = 0);
+                self.full_steps += 1;
+                self.total_flops += flops::forward_flops(&self.cfg, b);
                 (v, StepAction::Full)
             }
             Action::Predict(plan) => {
-                let crf_hat =
-                    run_predict(rt, cfg, b, &cache, &plan, &mut hist_buf)?;
-                if opts.record_pred_error {
-                    let (_, crf_true) =
-                        run_fwd(rt, batch, b, &x, &cond, ref_t.as_ref(), t)?;
+                let crf_hat = run_predict(
+                    rt,
+                    &self.cfg,
+                    b,
+                    &self.cache,
+                    &plan,
+                    &mut self.hist_buf,
+                )?;
+                if self.opts.record_pred_error {
+                    let (_, crf_true) = run_fwd(
+                        rt,
+                        &self.cfg,
+                        &self.weights,
+                        b,
+                        &self.x,
+                        &self.cond,
+                        self.ref_t.as_ref(),
+                        t,
+                    )?;
                     pred_mse = Some(crate::util::stats::mse(
                         &crf_hat.data,
                         &crf_true.data,
                     ));
                 }
-                let v = run_head(rt, batch, b, &crf_hat, &cond, t)?;
-                cached_steps += 1;
-                total_flops +=
-                    flops::predict_flops(cfg, b, plan.decomp != Decomp::None);
-                token_age.iter_mut().for_each(|a| *a += 1);
+                let v = run_head(
+                    rt,
+                    &self.cfg,
+                    &self.weights,
+                    b,
+                    &crf_hat,
+                    &self.cond,
+                    t,
+                )?;
+                self.cached_steps += 1;
+                self.total_flops +=
+                    flops::predict_flops(&self.cfg, b, plan.decomp != Decomp::None);
+                self.token_age.iter_mut().for_each(|a| *a += 1);
                 (v, StepAction::Cached)
             }
             Action::PartialRefresh { refresh_frac, plan } => {
                 // Token-wise caching: compute fresh features, refresh the
                 // most-stale tokens, reuse the rest from the prediction.
-                let (_, crf_fresh) =
-                    run_fwd(rt, batch, b, &x, &cond, ref_t.as_ref(), t)?;
-                let crf_hat =
-                    run_predict(rt, cfg, b, &cache, &plan, &mut hist_buf)?;
+                let (_, crf_fresh) = run_fwd(
+                    rt,
+                    &self.cfg,
+                    &self.weights,
+                    b,
+                    &self.x,
+                    &self.cond,
+                    self.ref_t.as_ref(),
+                    t,
+                )?;
+                let crf_hat = run_predict(
+                    rt,
+                    &self.cfg,
+                    b,
+                    &self.cache,
+                    &plan,
+                    &mut self.hist_buf,
+                )?;
                 let blended = blend_tokens(
-                    cfg,
+                    &self.cfg,
                     b,
                     &crf_hat,
                     &crf_fresh,
-                    &mut token_age,
+                    &mut self.token_age,
                     refresh_frac,
                 )?;
-                cache.replace_newest(s, blended.clone());
-                let v = run_head(rt, batch, b, &blended, &cond, t)?;
-                partial_steps += 1;
+                self.cache.replace_newest(s, blended.clone());
+                let v = run_head(
+                    rt,
+                    &self.cfg,
+                    &self.weights,
+                    b,
+                    &blended,
+                    &self.cond,
+                    t,
+                )?;
+                self.partial_steps += 1;
                 // Token-wise papers account compute at the refreshed
                 // fraction of a full pass (dense wall-clock differs —
                 // exactly the latency-lags-FLOPs gap Table 1 shows).
-                total_flops += refresh_frac * flops::forward_flops(cfg, b)
-                    + flops::predict_flops(cfg, b, false);
+                self.total_flops += refresh_frac
+                    * flops::forward_flops(&self.cfg, b)
+                    + flops::predict_flops(&self.cfg, b, false);
                 (v, StepAction::Partial)
             }
         };
 
         // Euler step: x <- x - dt * v.
-        debug_assert_eq!(v.shape, x.shape);
-        for (xv, vv) in x.data.iter_mut().zip(&v.data) {
+        debug_assert_eq!(v.shape, self.x.shape);
+        for (xv, vv) in self.x.data.iter_mut().zip(&v.data) {
             *xv -= dt * vv;
         }
-        steps.push(StepRecord {
+        let wall_s = st0.elapsed().as_secs_f64();
+        self.busy_s += wall_s;
+        let record = StepRecord {
             step: i,
             t,
             action: step_action,
-            wall_s: st0.elapsed().as_secs_f64(),
+            wall_s,
             pred_mse,
-        });
+        };
+        self.steps.push(record.clone());
+        self.step_idx += 1;
+        Ok(StepOutcome::Ran { record, done: self.step_idx == n })
     }
 
-    let wall_s = t0.elapsed().as_secs_f64();
-    let cache_peak = cache.peak_bytes() / b; // per-request share
-    (0..b)
-        .map(|j| {
-            Ok(RunResult {
-                latent: x.slice0(j, j + 1)?.reshape(vec![
-                    cfg.latent,
-                    cfg.latent,
-                    cfg.channels,
-                ])?,
-                full_steps,
-                cached_steps,
-                partial_steps,
-                wall_s,
-                flops: total_flops / b as f64,
-                cache_peak_bytes: cache_peak,
-                steps: steps.clone(),
+    /// Drive the session until its final step (the run-to-completion
+    /// schedule; the continuous engine calls `step` directly instead).
+    pub fn run_to_completion(&mut self, rt: &Runtime) -> Result<()> {
+        loop {
+            match self.step(rt)? {
+                StepOutcome::Ran { done: false, .. } => {}
+                StepOutcome::Ran { done: true, .. } | StepOutcome::Finished => {
+                    return Ok(())
+                }
+            }
+        }
+    }
+
+    /// Consume the finished session; one `RunResult` per job (batch
+    /// order).  Errors if steps remain — the scheduler must drive the
+    /// session to completion (or drop it) first.
+    pub fn into_results(self) -> Result<Vec<RunResult>> {
+        if !self.is_done() {
+            bail!(
+                "session incomplete: {}/{} steps executed",
+                self.step_idx,
+                self.n_steps
+            );
+        }
+        let cfg = &self.cfg;
+        let b = self.b;
+        let cache_peak = self.cache.peak_bytes() / b; // per-request share
+        (0..b)
+            .map(|j| {
+                Ok(RunResult {
+                    latent: self.x.slice0(j, j + 1)?.reshape(vec![
+                        cfg.latent,
+                        cfg.latent,
+                        cfg.channels,
+                    ])?,
+                    full_steps: self.full_steps,
+                    cached_steps: self.cached_steps,
+                    partial_steps: self.partial_steps,
+                    wall_s: self.busy_s,
+                    flops: self.total_flops / b as f64,
+                    cache_peak_bytes: cache_peak,
+                    steps: self.steps.clone(),
+                })
             })
-        })
-        .collect()
+            .collect()
+    }
+}
+
+/// Forward a `&mut dyn CachePolicy` as an owned boxed policy, so the
+/// borrowing [`generate_batch`] API can construct a [`SamplerSession`].
+struct PolicyRef<'a>(&'a mut dyn CachePolicy);
+
+impl CachePolicy for PolicyRef<'_> {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn decide(&mut self, ctx: &StepCtx) -> Result<Action> {
+        self.0.decide(ctx)
+    }
+    fn reset(&mut self) {
+        self.0.reset()
+    }
+}
+
+/// Serve a batch to completion; returns one `RunResult` per job (same
+/// order).  Convenience wrapper over [`SamplerSession`]: construct, loop
+/// `step()`, collect.
+pub fn generate_batch(
+    rt: &Runtime,
+    batch: &BatchJob,
+    policy: &mut dyn CachePolicy,
+    opts: &SampleOpts,
+) -> Result<Vec<RunResult>> {
+    let mut session =
+        SamplerSession::new(batch, Box::new(PolicyRef(policy)), opts.clone())?;
+    session.run_to_completion(rt)?;
+    session.into_results()
 }
 
 /// Single-request convenience wrapper (batch size 1).
@@ -290,9 +515,11 @@ pub fn generate(
     Ok(generate_batch(rt, &batch, policy, opts)?.remove(0))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_fwd(
     rt: &Runtime,
-    batch: &BatchJob,
+    cfg: &ModelConfig,
+    weights: &Rc<xla::PjRtBuffer>,
     b: usize,
     x: &Tensor,
     cond: &Tensor,
@@ -304,12 +531,8 @@ fn run_fwd(
     if let Some(r) = ref_t {
         args.push(r);
     }
-    let mut out = rt.exec_host(
-        batch.cfg,
-        &format!("fwd_b{b}"),
-        Some(&batch.weights),
-        &args,
-    )?;
+    let mut out =
+        rt.exec_host(cfg, &format!("fwd_b{b}"), Some(weights), &args)?;
     if out.len() != 2 {
         return Err(anyhow!("fwd_b{b} returned {} outputs", out.len()));
     }
@@ -320,19 +543,19 @@ fn run_fwd(
 
 fn run_head(
     rt: &Runtime,
-    batch: &BatchJob,
+    cfg: &ModelConfig,
+    weights: &Rc<xla::PjRtBuffer>,
     b: usize,
     crf: &Tensor,
     cond: &Tensor,
     t: f32,
 ) -> Result<Tensor> {
-    let cfg = batch.cfg;
     let tt = Tensor::new(vec![b], vec![t; b])?;
     let crf_b = crf.clone().reshape(vec![b, cfg.tokens, cfg.dim])?;
     let mut out = rt.exec_host(
         cfg,
         &format!("head_b{b}"),
-        Some(&batch.weights),
+        Some(weights),
         &[&crf_b, cond, &tt],
     )?;
     out.pop().ok_or_else(|| anyhow!("head_b{b} returned nothing"))
@@ -499,5 +722,43 @@ mod tests {
         assert_eq!(&t.data[0..6], &[0., 1., 2., 6., 7., 8.]);
         // b1: k0 then k1
         assert_eq!(&t.data[6..12], &[3., 4., 5., 9., 10., 11.]);
+    }
+
+    #[test]
+    fn session_rejects_empty_and_unexported_batches() {
+        let cfg = mini_cfg(); // exports no artifacts at all
+        let rt_weights = Rc::new(
+            xla::PjRtClient::cpu()
+                .unwrap()
+                .buffer_from_host_buffer(&[0.0f32; 8], &[8], None)
+                .unwrap(),
+        );
+        let mut pol = crate::policy::parse_policy(
+            "baseline",
+            Decomp::Dct,
+            cfg.grid,
+            cfg.k_hist,
+        )
+        .unwrap();
+        let empty = BatchJob {
+            cfg: &cfg,
+            weights: rt_weights.clone(),
+            jobs: vec![],
+            n_steps: 4,
+        };
+        assert!(
+            SamplerSession::new(&empty, Box::new(PolicyRef(pol.as_mut())), SampleOpts::default())
+                .is_err()
+        );
+        let unexported = BatchJob {
+            cfg: &cfg,
+            weights: rt_weights,
+            jobs: vec![JobSpec { cond: vec![0.0; 4], ref_img: None, seed: 1 }],
+            n_steps: 4,
+        };
+        assert!(
+            SamplerSession::new(&unexported, Box::new(PolicyRef(pol.as_mut())), SampleOpts::default())
+                .is_err()
+        );
     }
 }

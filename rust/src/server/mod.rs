@@ -10,6 +10,11 @@
 //! Acceptor threads parse and forward requests to the single engine
 //! thread (see `coordinator::engine`); the per-connection reply channel
 //! preserves ordering per client.
+//!
+//! Lifecycle: flipping `stop` ends the acceptor, which drops the work
+//! channel; the continuous engine then **drains gracefully** — every
+//! queued request is admitted and every in-flight session steps to
+//! completion (each client still gets its reply) before `serve` returns.
 
 pub mod client;
 
@@ -33,9 +38,17 @@ pub struct ServeOpts {
     pub addr: String,
     pub batch_wait_ms: u64,
     pub queue_capacity: usize,
+    /// Cap on concurrently stepping sessions; ready batches queue (and
+    /// eventually shed) past it.  0 = use the default.
+    pub max_in_flight: usize,
     /// Models to warm up (compile) before accepting traffic.
     pub warmup: Vec<String>,
 }
+
+/// Default concurrency cap: enough sessions to keep short jobs
+/// interleaving with long ones, few enough that per-session state
+/// (latents + CRF caches) stays bounded on one worker.
+pub const DEFAULT_MAX_IN_FLIGHT: usize = 8;
 
 impl Default for ServeOpts {
     fn default() -> Self {
@@ -43,6 +56,7 @@ impl Default for ServeOpts {
             addr: "127.0.0.1:7463".into(),
             batch_wait_ms: 5,
             queue_capacity: 256,
+            max_in_flight: DEFAULT_MAX_IN_FLIGHT,
             warmup: vec![],
         }
     }
@@ -56,6 +70,11 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         artifact_dir,
         std::time::Duration::from_millis(opts.batch_wait_ms),
         opts.queue_capacity,
+        if opts.max_in_flight == 0 {
+            DEFAULT_MAX_IN_FLIGHT
+        } else {
+            opts.max_in_flight
+        },
         metrics.clone(),
     )?;
     for m in &opts.warmup {
@@ -79,8 +98,12 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         accept_loop(listener, tx, acceptor_metrics, models, acceptor_stop);
     });
 
-    engine.serve_loop(rx);
+    engine.serve_loop(rx); // returns once shut down AND fully drained
     let _ = acceptor.join();
+    eprintln!(
+        "[server] drained: {} requests completed",
+        metrics.counter("requests_completed")
+    );
     Ok(())
 }
 

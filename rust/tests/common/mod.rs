@@ -1,0 +1,15 @@
+//! Shared helpers for the integration test binaries.
+
+/// Locate the AOT artifact directory (`make artifacts`, python AOT
+/// export).  Cargo runs test binaries with cwd = the package root
+/// (`rust/`), while artifacts are generated at the *repository* root,
+/// so probe both the cwd-relative path and the manifest-relative one.
+/// `None` => artifacts absent; artifact-dependent integration tests
+/// skip instead of failing.
+pub fn artifact_dir() -> Option<&'static str> {
+    const CANDIDATES: [&str; 2] =
+        ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")];
+    CANDIDATES.into_iter().find(|d| {
+        std::path::Path::new(d).join("meta_tiny.json").exists()
+    })
+}

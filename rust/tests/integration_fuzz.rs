@@ -10,12 +10,19 @@ use freqca::model::ModelConfig;
 use freqca::util::propcheck::{check, Config};
 use freqca::util::{Json, Rng};
 
-fn cfg() -> ModelConfig {
-    ModelConfig::load("artifacts", "tiny").expect("run `make artifacts`")
+mod common;
+use common::artifact_dir;
+
+fn cfg(dir: &str) -> ModelConfig {
+    ModelConfig::load(dir, "tiny").expect("run `make artifacts`")
 }
 
 #[test]
 fn router_never_panics_on_random_requests() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
     check(
         "router-total",
         Config { cases: 200, seed: 0xf00d },
@@ -44,7 +51,7 @@ fn router_never_panics_on_random_requests() {
         },
         |req| {
             let mut router =
-                Router::new(vec![cfg()], Duration::ZERO, 8);
+                Router::new(vec![cfg(dir)], Duration::ZERO, 8);
             match router.route(req.clone()) {
                 RouteResult::Queued => {
                     // queued requests must be well-formed for the engine

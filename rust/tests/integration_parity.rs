@@ -11,8 +11,11 @@ use freqca::model::{weights, ModelConfig};
 use freqca::runtime::Runtime;
 use freqca::util::Tensor;
 
-fn load(name: &str, shape: Vec<usize>) -> Tensor {
-    let d = weights::load_f32(&format!("artifacts/fixtures/tiny_{name}.bin"))
+mod common;
+use common::artifact_dir;
+
+fn load(dir: &str, name: &str, shape: Vec<usize>) -> Tensor {
+    let d = weights::load_f32(&format!("{dir}/fixtures/tiny_{name}.bin"))
         .expect("fixture (run `make artifacts`)");
     Tensor::new(shape, d).unwrap()
 }
@@ -23,19 +26,23 @@ fn maxdiff(a: &[f32], b: &[f32]) -> f32 {
 
 #[test]
 fn fwd_matches_python() {
-    let rt = Runtime::new("artifacts").unwrap();
-    let cfg = ModelConfig::load("artifacts", "tiny").unwrap();
-    let host = weights::load_weights("artifacts", "tiny", cfg.param_count)
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::new(dir).unwrap();
+    let cfg = ModelConfig::load(dir, "tiny").unwrap();
+    let host = weights::load_weights(dir, "tiny", cfg.param_count)
         .unwrap();
     let w = rt.weights_buffer(&cfg, &host).unwrap();
-    let x = load("x", vec![1, cfg.latent, cfg.latent, cfg.channels]);
-    let cond = load("cond", vec![1, cfg.cond_dim]);
-    let t = load("t", vec![1]);
+    let x = load(dir, "x", vec![1, cfg.latent, cfg.latent, cfg.channels]);
+    let cond = load(dir, "cond", vec![1, cfg.cond_dim]);
+    let t = load(dir, "t", vec![1]);
     let out = rt.exec_host(&cfg, "fwd_b1", Some(&w), &[&x, &cond, &t]).unwrap();
-    let dv = maxdiff(&out[0].data, &load("v", x.shape.clone()).data);
+    let dv = maxdiff(&out[0].data, &load(dir, "v", x.shape.clone()).data);
     let dc = maxdiff(
         &out[1].data,
-        &load("crf", vec![1, cfg.tokens, cfg.dim]).data,
+        &load(dir, "crf", vec![1, cfg.tokens, cfg.dim]).data,
     );
     assert!(dv < 1e-4, "fwd velocity diverged from jax: {dv}");
     assert!(dc < 1e-4, "fwd CRF diverged from jax: {dc}");
@@ -43,13 +50,17 @@ fn fwd_matches_python() {
 
 #[test]
 fn predictors_match_python() {
-    let rt = Runtime::new("artifacts").unwrap();
-    let cfg = ModelConfig::load("artifacts", "tiny").unwrap();
-    let hist = load("hist", vec![1, cfg.k_hist, cfg.tokens, cfg.dim]);
-    let mask = load("mask", vec![cfg.grid, cfg.grid]);
-    let lw = load("lw", vec![cfg.k_hist]);
-    let hw = load("hw", vec![cfg.k_hist]);
-    let basis = load("basis", vec![cfg.grid, cfg.grid]);
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::new(dir).unwrap();
+    let cfg = ModelConfig::load(dir, "tiny").unwrap();
+    let hist = load(dir, "hist", vec![1, cfg.k_hist, cfg.tokens, cfg.dim]);
+    let mask = load(dir, "mask", vec![cfg.grid, cfg.grid]);
+    let lw = load(dir, "lw", vec![cfg.k_hist]);
+    let hw = load(dir, "hw", vec![cfg.k_hist]);
+    let basis = load(dir, "basis", vec![cfg.grid, cfg.grid]);
     let pd = rt
         .exec_host(
             &cfg,
@@ -60,7 +71,7 @@ fn predictors_match_python() {
         .unwrap();
     let dd = maxdiff(
         &pd[0].data,
-        &load("pred_dct", vec![1, cfg.tokens, cfg.dim]).data,
+        &load(dir, "pred_dct", vec![1, cfg.tokens, cfg.dim]).data,
     );
     assert!(dd < 1e-4, "predict_dct diverged from jax: {dd}");
     let (fr, fi) = freqca::freq::fft::dft_matrices_tensor(cfg.grid);
@@ -74,15 +85,19 @@ fn predictors_match_python() {
         .unwrap();
     let df = maxdiff(
         &pf[0].data,
-        &load("pred_fft", vec![1, cfg.tokens, cfg.dim]).data,
+        &load(dir, "pred_fft", vec![1, cfg.tokens, cfg.dim]).data,
     );
     assert!(df < 1e-4, "predict_fft diverged from jax: {df}");
 }
 
 #[test]
 fn rust_dct_basis_matches_python_fixture() {
-    let cfg = ModelConfig::load("artifacts", "tiny").unwrap();
-    let py = load("basis", vec![cfg.grid, cfg.grid]);
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let cfg = ModelConfig::load(dir, "tiny").unwrap();
+    let py = load(dir, "basis", vec![cfg.grid, cfg.grid]);
     let rs = freqca::freq::dct::dct_matrix_tensor(cfg.grid);
     assert!(maxdiff(&py.data, &rs.data) < 1e-6);
 }

@@ -9,15 +9,20 @@ use freqca::model::{weights, ModelConfig};
 use freqca::runtime::Runtime;
 use freqca::util::{Rng, Tensor};
 
-const DIR: &str = "artifacts";
+mod common;
+use common::artifact_dir;
 
-fn setup() -> (Runtime, ModelConfig, Rc<xla::PjRtBuffer>) {
-    let rt = Runtime::new(DIR).expect("PJRT client");
-    let cfg = ModelConfig::load(DIR, "tiny").expect("tiny metadata");
-    let host = weights::load_weights(DIR, "tiny", cfg.param_count)
+fn setup() -> Option<(Runtime, ModelConfig, Rc<xla::PjRtBuffer>)> {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return None;
+    };
+    let rt = Runtime::new(dir).expect("PJRT client");
+    let cfg = ModelConfig::load(dir, "tiny").expect("tiny metadata");
+    let host = weights::load_weights(dir, "tiny", cfg.param_count)
         .expect("tiny weights");
     let wbuf = rt.weights_buffer(&cfg, &host).expect("upload");
-    (rt, cfg, wbuf)
+    Some((rt, cfg, wbuf))
 }
 
 fn rand_t(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
@@ -27,7 +32,7 @@ fn rand_t(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
 
 #[test]
 fn fwd_shapes_and_head_consistency() {
-    let (rt, cfg, w) = setup();
+    let Some((rt, cfg, w)) = setup() else { return };
     let mut rng = Rng::new(1);
     let x = rand_t(&mut rng, vec![1, cfg.latent, cfg.latent, cfg.channels]);
     let cond = rand_t(&mut rng, vec![1, cfg.cond_dim]);
@@ -57,7 +62,7 @@ fn fwd_shapes_and_head_consistency() {
 
 #[test]
 fn predict_plain_matches_host_math() {
-    let (rt, cfg, _) = setup();
+    let Some((rt, cfg, _)) = setup() else { return };
     let mut rng = Rng::new(2);
     let k = cfg.k_hist;
     let hist =
@@ -81,7 +86,7 @@ fn predict_plain_matches_host_math() {
 
 #[test]
 fn predict_dct_with_full_mask_equals_plain() {
-    let (rt, cfg, _) = setup();
+    let Some((rt, cfg, _)) = setup() else { return };
     let mut rng = Rng::new(3);
     let k = cfg.k_hist;
     let hist = rand_t(&mut rng, vec![1, k, cfg.tokens, cfg.dim]);
@@ -115,7 +120,7 @@ fn predict_dct_with_full_mask_equals_plain() {
 
 #[test]
 fn predict_fft_with_zero_mask_uses_high_band_only() {
-    let (rt, cfg, _) = setup();
+    let Some((rt, cfg, _)) = setup() else { return };
     let mut rng = Rng::new(4);
     let k = cfg.k_hist;
     let hist = rand_t(&mut rng, vec![1, k, cfg.tokens, cfg.dim]);
@@ -149,7 +154,7 @@ fn predict_fft_with_zero_mask_uses_high_band_only() {
 
 #[test]
 fn batch2_fwd_matches_two_singles() {
-    let (rt, cfg, w) = setup();
+    let Some((rt, cfg, w)) = setup() else { return };
     assert!(cfg.batch_sizes.contains(&2), "tiny exports b=2");
     let mut rng = Rng::new(5);
     let x0 = rand_t(&mut rng, vec![1, cfg.latent, cfg.latent, cfg.channels]);
@@ -175,7 +180,7 @@ fn batch2_fwd_matches_two_singles() {
 
 #[test]
 fn exec_stats_accumulate() {
-    let (rt, cfg, w) = setup();
+    let Some((rt, cfg, w)) = setup() else { return };
     let mut rng = Rng::new(6);
     let x = rand_t(&mut rng, vec![1, cfg.latent, cfg.latent, cfg.channels]);
     let cond = rand_t(&mut rng, vec![1, cfg.cond_dim]);
@@ -194,7 +199,7 @@ fn exec_stats_accumulate() {
 
 #[test]
 fn missing_artifact_is_clean_error() {
-    let (rt, cfg, _) = setup();
+    let Some((rt, cfg, _)) = setup() else { return };
     let x = Tensor::zeros(vec![1]);
     let err = rt.exec_host(&cfg, "nonexistent", None, &[&x]);
     assert!(err.is_err());

@@ -8,12 +8,14 @@ use freqca::model::{weights, ModelConfig};
 use freqca::policy::{self, CachePolicy};
 use freqca::runtime::Runtime;
 use freqca::sampler::{
-    generate, generate_batch, BatchJob, JobSpec, SampleOpts, StepAction,
+    generate, generate_batch, BatchJob, JobSpec, SampleOpts, SamplerSession,
+    StepAction, StepOutcome,
 };
 use freqca::util::stats;
 use freqca::workload;
 
-const DIR: &str = "artifacts";
+mod common;
+use common::artifact_dir;
 
 struct Ctx {
     rt: Runtime,
@@ -21,12 +23,16 @@ struct Ctx {
     w: Rc<xla::PjRtBuffer>,
 }
 
-fn setup() -> Ctx {
-    let rt = Runtime::new(DIR).expect("PJRT client");
-    let cfg = ModelConfig::load(DIR, "tiny").expect("tiny metadata");
-    let host = weights::load_weights(DIR, "tiny", cfg.param_count).unwrap();
+fn setup() -> Option<Ctx> {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return None;
+    };
+    let rt = Runtime::new(dir).expect("PJRT client");
+    let cfg = ModelConfig::load(dir, "tiny").expect("tiny metadata");
+    let host = weights::load_weights(dir, "tiny", cfg.param_count).unwrap();
     let w = rt.weights_buffer(&cfg, &host).unwrap();
-    Ctx { rt, cfg, w }
+    Some(Ctx { rt, cfg, w })
 }
 
 fn job(ctx: &Ctx, seed: u64) -> JobSpec {
@@ -56,7 +62,7 @@ fn run(ctx: &Ctx, policy_desc: &str, seed: u64, steps: usize) -> freqca::sampler
 
 #[test]
 fn deterministic_across_runs() {
-    let ctx = setup();
+    let Some(ctx) = setup() else { return };
     let a = run(&ctx, "freqca:n=3", 7, 12);
     let b = run(&ctx, "freqca:n=3", 7, 12);
     assert_eq!(a.latent.data, b.latent.data);
@@ -65,7 +71,7 @@ fn deterministic_across_runs() {
 
 #[test]
 fn policies_skip_compute_and_track_flops() {
-    let ctx = setup();
+    let Some(ctx) = setup() else { return };
     let base = run(&ctx, "baseline", 3, 12);
     assert_eq!(base.full_steps, 12);
     assert_eq!(base.cached_steps, 0);
@@ -77,7 +83,7 @@ fn policies_skip_compute_and_track_flops() {
 
 #[test]
 fn cached_latents_stay_close_to_baseline() {
-    let ctx = setup();
+    let Some(ctx) = setup() else { return };
     let steps = 16;
     let base = run(&ctx, "baseline", 11, steps);
     let f = run(&ctx, "freqca:n=4", 11, steps);
@@ -92,7 +98,7 @@ fn cached_latents_stay_close_to_baseline() {
 
 #[test]
 fn toca_partial_steps_present() {
-    let ctx = setup();
+    let Some(ctx) = setup() else { return };
     let r = run(&ctx, "toca:n=4,r=0.75", 5, 12);
     assert!(r.partial_steps > 0, "ToCa produced no partial steps");
     assert!(r.full_steps >= 3);
@@ -100,7 +106,7 @@ fn toca_partial_steps_present() {
 
 #[test]
 fn batch_matches_singles_for_interval_policy() {
-    let ctx = setup();
+    let Some(ctx) = setup() else { return };
     assert!(ctx.cfg.batch_sizes.contains(&2));
     let steps = 10;
     let jobs = vec![job(&ctx, 21), job(&ctx, 22)];
@@ -129,7 +135,7 @@ fn batch_matches_singles_for_interval_policy() {
 
 #[test]
 fn record_pred_error_populates_mse() {
-    let ctx = setup();
+    let Some(ctx) = setup() else { return };
     let mut pol =
         policy::parse_policy("freqca:n=3", Decomp::Dct, ctx.cfg.grid, 3)
             .unwrap();
@@ -154,9 +160,13 @@ fn record_pred_error_populates_mse() {
 
 #[test]
 fn editing_model_roundtrip() {
-    let rt = Runtime::new(DIR).unwrap();
-    let cfg = ModelConfig::load(DIR, "kontext-sim").unwrap();
-    let host = weights::load_weights(DIR, "kontext-sim", cfg.param_count)
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::new(dir).unwrap();
+    let cfg = ModelConfig::load(dir, "kontext-sim").unwrap();
+    let host = weights::load_weights(dir, "kontext-sim", cfg.param_count)
         .unwrap();
     let w = rt.weights_buffer(&cfg, &host).unwrap();
     let p = workload::build_prompt(&cfg, 2).unwrap();
@@ -181,7 +191,7 @@ fn editing_model_roundtrip() {
 
 #[test]
 fn missing_batch_size_is_clean_error() {
-    let ctx = setup();
+    let Some(ctx) = setup() else { return };
     let jobs = vec![job(&ctx, 1), job(&ctx, 2), job(&ctx, 3)];
     let mut pol =
         policy::parse_policy("baseline", Decomp::Dct, ctx.cfg.grid, 3).unwrap();
@@ -194,4 +204,72 @@ fn missing_batch_size_is_clean_error() {
     let err =
         generate_batch(&ctx.rt, &batch, pol.as_mut(), &SampleOpts::default());
     assert!(err.is_err()); // tiny exports b in {1, 2}, not 3
+}
+
+/// The continuous-scheduling refactor's parity contract: driving a
+/// `SamplerSession` step-by-step (as the engine does, with arbitrary
+/// pauses between steps) round-trips identically to the old
+/// run-to-completion `generate_batch` — same seeds, same latents, bit
+/// for bit.
+#[test]
+fn session_steps_match_generate_batch() {
+    let Some(ctx) = setup() else { return };
+    let steps = 12;
+    let jobs = vec![job(&ctx, 31), job(&ctx, 32)];
+    let mk_policy = || {
+        policy::parse_policy(
+            "freqca:n=3",
+            Decomp::Dct,
+            ctx.cfg.grid,
+            ctx.cfg.k_hist,
+        )
+        .unwrap()
+    };
+    let batch = BatchJob {
+        cfg: &ctx.cfg,
+        weights: ctx.w.clone(),
+        jobs: jobs.clone(),
+        n_steps: steps,
+    };
+    let mut pol = mk_policy();
+    let wrapped =
+        generate_batch(&ctx.rt, &batch, pol.as_mut(), &SampleOpts::default())
+            .unwrap();
+
+    let mut session =
+        SamplerSession::new(&batch, mk_policy(), SampleOpts::default()).unwrap();
+    let mut executed = 0;
+    loop {
+        assert_eq!(session.step_index(), executed);
+        match session.step(&ctx.rt).unwrap() {
+            StepOutcome::Ran { record, done } => {
+                executed += 1;
+                assert_eq!(record.step, executed - 1);
+                assert_eq!(done, executed == steps);
+                if done {
+                    break;
+                }
+            }
+            StepOutcome::Finished => panic!("finished before {steps} steps"),
+        }
+    }
+    assert!(session.is_done());
+    // Stepping a finished session is a clean no-op.
+    assert!(matches!(
+        session.step(&ctx.rt).unwrap(),
+        StepOutcome::Finished
+    ));
+    let stepped = session.into_results().unwrap();
+
+    assert_eq!(wrapped.len(), stepped.len());
+    for (a, b) in wrapped.iter().zip(&stepped) {
+        assert_eq!(
+            a.latent.data, b.latent.data,
+            "session stepping diverged from generate_batch"
+        );
+        assert_eq!(a.full_steps, b.full_steps);
+        assert_eq!(a.cached_steps, b.cached_steps);
+        assert_eq!(a.partial_steps, b.partial_steps);
+        assert_eq!(a.steps.len(), b.steps.len());
+    }
 }

@@ -7,7 +7,10 @@ use std::time::Duration;
 use freqca::coordinator::Request;
 use freqca::server::{client::Client, serve, ServeOpts};
 
-fn spawn_server(port: u16) -> Arc<AtomicBool> {
+mod common;
+use common::artifact_dir;
+
+fn spawn_server(port: u16, dir: &'static str) -> Arc<AtomicBool> {
     let stop = Arc::new(AtomicBool::new(false));
     let s = stop.clone();
     std::thread::spawn(move || {
@@ -15,9 +18,9 @@ fn spawn_server(port: u16) -> Arc<AtomicBool> {
             addr: format!("127.0.0.1:{port}"),
             batch_wait_ms: 1,
             queue_capacity: 16,
-            warmup: vec![],
+            ..ServeOpts::default()
         };
-        let _ = serve("artifacts", opts, s);
+        let _ = serve(dir, opts, s);
     });
     stop
 }
@@ -48,8 +51,12 @@ fn req(id: u64, model: &str, policy: &str, steps: usize) -> Request {
 
 #[test]
 fn server_end_to_end() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
     let port = 17463;
-    let stop = spawn_server(port);
+    let stop = spawn_server(port, dir);
     let mut c = connect(port);
 
     // Control plane.

@@ -1,0 +1,199 @@
+//! Minimal, API-compatible subset of the `anyhow` crate (vendored; see
+//! Cargo.toml).  Covers exactly what this workspace uses:
+//!
+//! * [`Error`] — a string-chain error with context layers,
+//! * [`Result<T>`] — `Result<T, Error>`,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — construction macros,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * `{}` prints the outermost message, `{:#}` the full `a: b: c` chain
+//!   (matching real anyhow's Display semantics).
+
+use std::fmt;
+
+/// A chain of error messages, outermost context first.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recently attached) message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (what `{}` prints).
+    pub fn to_message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Iterate the chain, outermost first (mirrors `Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost message (mirrors `Error::root_cause`).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("non-empty chain")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts via `?` (the real crate's blanket impl).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context layers.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = anyhow!("inner {}", 7).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        assert_eq!(e.root_cause(), "inner 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading x: gone");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "flag was {ok}");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+    }
+}

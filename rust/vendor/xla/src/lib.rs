@@ -1,0 +1,276 @@
+//! Stub PJRT bindings (see Cargo.toml).  The API mirrors the subset of
+//! the `xla` crate (xla_extension 0.5.1 wrapper) that `freqca` uses:
+//!
+//! * `PjRtClient::cpu`, `compile`, `buffer_from_host_buffer`
+//! * `PjRtLoadedExecutable::execute_b`
+//! * `PjRtBuffer::to_literal_sync`
+//! * `HloModuleProto::from_text_file`, `XlaComputation::from_proto`
+//! * `Literal::{shape, to_tuple, array_shape, to_vec}`
+//!
+//! Host-side buffer plumbing is real (uploads keep their data, so weight
+//! loading and cache-stack bookkeeping behave normally); anything that
+//! would need the native XLA compiler/executor returns
+//! [`Error::Unavailable`] so callers fail with an actionable message
+//! instead of a missing-symbol crash.
+//!
+//! Like the real wrapper types, none of these are `Send`: the serving
+//! coordinator's single-engine-thread design must hold under both
+//! backends, so the stub pins buffers to one thread the same way PJRT
+//! does (via a `PhantomData<Rc<()>>` marker).
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+/// Marker making a type `!Send + !Sync`, matching the native wrappers.
+type NotSend = PhantomData<Rc<()>>;
+
+/// Errors surfaced by the stub.
+pub enum Error {
+    /// The operation needs the real PJRT runtime (`pjrt` feature +
+    /// native bindings).
+    Unavailable(String),
+    /// Malformed call (shape/type mismatch) — host-side, detectable even
+    /// in the stub.
+    Invalid(String),
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(m) => write!(
+                f,
+                "PJRT stub: {m} (build with the real xla bindings — \
+                 feature `pjrt` — to execute artifacts)"
+            ),
+            Error::Invalid(m) => write!(f, "invalid PJRT call: {m}"),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types transferable to/from device buffers (f32 is the only
+/// dtype this repo moves across the boundary).
+pub trait NativeType: Copy + 'static {
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// An HLO module handle.  The stub only records where it came from.
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact.  The stub verifies the file exists so
+    /// "artifact missing" and "runtime unavailable" stay distinguishable,
+    /// then defers with `Unavailable` — it cannot execute HLO.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).is_file() {
+            return Err(Error::Invalid(format!("no such HLO file: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// A "device"-resident buffer: host data + dims in the stub.
+pub struct PjRtBuffer {
+    data: Vec<f32>,
+    dims: Vec<usize>,
+    _not_send: NotSend,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal::Array { data: self.data.clone(), dims: self.dims.clone() })
+    }
+}
+
+/// A compiled executable.  Construction already fails in the stub, but
+/// the type must exist for signatures; execution defers too.
+pub struct PjRtLoadedExecutable {
+    path: String,
+    _not_send: NotSend,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable(format!("cannot execute {}", self.path)))
+    }
+}
+
+/// The PJRT client.  `cpu()` succeeds so host-only paths (buffer upload,
+/// weight residency, scheduler plumbing) work without the native library.
+pub struct PjRtClient {
+    _not_send: NotSend,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _not_send: PhantomData })
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable(format!("cannot compile {}", comp.path)))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::Invalid(format!(
+                "dims {dims:?} imply {n} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(PjRtBuffer {
+            data: data.iter().map(|v| v.to_f32()).collect(),
+            dims: dims.to_vec(),
+            _not_send: PhantomData,
+        })
+    }
+}
+
+/// Array metadata of a literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Literal shapes: arrays or tuples (all artifacts return tuples).
+pub enum Shape {
+    Array(Vec<i64>),
+    Tuple(Vec<Shape>),
+}
+
+/// A host literal.
+pub enum Literal {
+    Array { data: Vec<f32>, dims: Vec<usize> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(match self {
+            Literal::Array { dims, .. } => {
+                Shape::Array(dims.iter().map(|d| *d as i64).collect())
+            }
+            Literal::Tuple(parts) => Shape::Tuple(
+                parts
+                    .iter()
+                    .map(|p| p.shape())
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+        })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            Literal::Array { .. } => {
+                Err(Error::Invalid("to_tuple on array literal".into()))
+            }
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, .. } => Ok(ArrayShape {
+                dims: dims.iter().map(|d| *d as i64).collect(),
+            }),
+            Literal::Tuple(_) => {
+                Err(Error::Invalid("array_shape on tuple literal".into()))
+            }
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => {
+                Ok(data.iter().map(|v| T::from_f32(*v)).collect())
+            }
+            Literal::Tuple(_) => {
+                Err(Error::Invalid("to_vec on tuple literal".into()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_buffers_roundtrip() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c
+            .buffer_from_host_buffer(&[1.0f32, 2.0, 3.0, 4.0], &[2, 2], None)
+            .unwrap();
+        let lit = b.to_literal_sync().unwrap();
+        assert!(matches!(lit.shape().unwrap(), Shape::Array(_)));
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_is_invalid() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.buffer_from_host_buffer(&[1.0f32], &[2], None).is_err());
+    }
+
+    #[test]
+    fn execution_is_unavailable_with_clear_message() {
+        let missing = HloModuleProto::from_text_file("/no/such/file.hlo");
+        assert!(format!("{:?}", missing.unwrap_err()).contains("no such"));
+    }
+
+    #[test]
+    fn tuple_literals_decompose() {
+        let lit = Literal::Tuple(vec![
+            Literal::Array { data: vec![1.0], dims: vec![1] },
+            Literal::Array { data: vec![2.0, 3.0], dims: vec![2] },
+        ]);
+        assert!(matches!(lit.shape().unwrap(), Shape::Tuple(_)));
+        let parts = lit.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![2.0, 3.0]);
+    }
+}
