@@ -4,6 +4,12 @@
 //! through router -> dynamic batcher -> engine -> PJRT, and reports
 //! latency percentiles + throughput per policy.
 //!
+//! Multi-client rows label their traffic with the wire `priority` field
+//! (client 0 = interactive, the last = batch, the rest standard), so
+//! the run demonstrates QoS classes end to end: the engine's weighted
+//! quotas apply, and the final metrics snapshot shows the per-class
+//! queue-wait/TTFS/completion histograms.
+//!
 //!     cargo run --release --offline --example serve_drawbench
 //!     FREQCA_PROMPTS=200 cargo run ... (paper-scale prompt count)
 
@@ -14,7 +20,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use freqca::benchkit::Table;
-use freqca::coordinator::Request;
+use freqca::coordinator::{Priority, Request};
 use freqca::server::{client::Client, serve, ServeOpts};
 use freqca::util::stats::Summary;
 use freqca::workload;
@@ -65,6 +71,16 @@ fn main() -> Result<()> {
         for c in 0..clients {
             let policy = policy.to_string();
             let cond_dim = cfg.cond_dim;
+            // QoS demo: one interactive client, one batch backfill
+            // client, standard in between (single-client rows are all
+            // standard).
+            let priority = if clients > 1 && c == 0 {
+                Priority::Interactive
+            } else if clients > 1 && c == clients - 1 {
+                Priority::Batch
+            } else {
+                Priority::Standard
+            };
             handles.push(std::thread::spawn(move || -> Result<Vec<(f64, f64)>> {
                 let mut cli = Client::connect(ADDR)?;
                 let mut out = Vec::new();
@@ -75,6 +91,7 @@ fn main() -> Result<()> {
                         id: idx,
                         model: MODEL.into(),
                         policy: policy.clone(),
+                        priority,
                         seed: idx,
                         n_steps: steps,
                         cond: workload::cond_vector(&u, cond_dim),

@@ -96,8 +96,7 @@ impl CrfCache {
     /// entries exist (their weights are zero by construction — see
     /// `policy::interp::pad_left`).
     pub fn stacked(&self) -> Option<Tensor> {
-        let newestless = self.entries.is_empty();
-        if newestless {
+        if self.entries.is_empty() {
             return None;
         }
         let mut refs: Vec<&Tensor> = Vec::with_capacity(self.k);
@@ -132,13 +131,21 @@ impl CrfCache {
 pub struct LayerwiseCache {
     depth: usize,
     history: usize,
-    entries: Vec<(f64, Vec<Tensor>)>,
+    /// Ring of history entries, oldest first; eviction is an O(1)
+    /// `pop_front` (same fix as `CrfCache`: the memory ablation churns
+    /// deep-model caches, where an O(n) front shift adds up).
+    entries: VecDeque<(f64, Vec<Tensor>)>,
     peak_bytes: usize,
 }
 
 impl LayerwiseCache {
     pub fn new(depth: usize, history: usize) -> LayerwiseCache {
-        LayerwiseCache { depth, history, entries: Vec::new(), peak_bytes: 0 }
+        LayerwiseCache {
+            depth,
+            history,
+            entries: VecDeque::new(),
+            peak_bytes: 0,
+        }
     }
 
     /// Push the per-layer features of one activated step.  `features`
@@ -146,9 +153,9 @@ impl LayerwiseCache {
     pub fn push(&mut self, s: f64, features: Vec<Tensor>) {
         assert_eq!(features.len(), 2 * self.depth, "2 features per block");
         if self.entries.len() == self.history {
-            self.entries.remove(0);
+            self.entries.pop_front();
         }
-        self.entries.push((s, features));
+        self.entries.push_back((s, features));
         self.peak_bytes = self.peak_bytes.max(self.bytes());
     }
 
@@ -204,6 +211,36 @@ mod tests {
         assert_eq!(s.shape, vec![3, 4, 2]);
         // all three slots filled with the only entry
         assert!(s.data.iter().all(|v| *v == 7.0));
+    }
+
+    #[test]
+    fn stacked_full_cache_needs_no_padding() {
+        // k == len: every slot holds its own entry, in age order.
+        let mut c = CrfCache::new(3);
+        for (i, v) in [1.0f32, 2.0, 3.0].iter().enumerate() {
+            c.push(i as f64, crf(*v));
+        }
+        let s = c.stacked().unwrap();
+        assert_eq!(s.shape, vec![3, 4, 2]);
+        for (slot, v) in [1.0f32, 2.0, 3.0].iter().enumerate() {
+            assert!(
+                s.data[slot * 8..(slot + 1) * 8].iter().all(|x| x == v),
+                "slot {slot} not entry {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn layerwise_evicts_oldest_entry() {
+        // Ring semantics across the VecDeque switch: history 2 keeps
+        // the two newest steps, units/bytes stay bounded.
+        let mut lw = LayerwiseCache::new(1, 2);
+        for h in 0..4 {
+            lw.push(h as f64, vec![Tensor::zeros(vec![2, 2]); 2]);
+        }
+        assert_eq!(lw.units(), 2 * 2);
+        assert_eq!(lw.bytes(), 2 * 2 * 4 * 4);
+        assert_eq!(lw.peak_bytes(), lw.bytes());
     }
 
     #[test]

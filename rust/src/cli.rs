@@ -88,11 +88,16 @@ freqca — FreqCa diffusion-serving coordinator
 USAGE:
   freqca serve    [--addr 127.0.0.1:7463] [--artifacts DIR] [--wait-ms 5]
                   [--capacity 256] [--max-in-flight 8] [--warmup MODEL,...]
+                  [--qos-weights 8,4,1] [--aging-bound 64]
+                  [--refresh-concurrency 2] [--dephase-window 8]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
                   [--artifacts DIR]
   freqca edit     [--model kontext-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
+  freqca request  [--addr 127.0.0.1:7463] [--model flux-sim]
+                  [--policy freqca:n=7] [--priority standard] [--seed 0]
+                  [--steps 50] [--prompt IDX] [--cond-dim 64]
   freqca models   [--artifacts DIR]
   freqca metrics  [--addr 127.0.0.1:7463]
   freqca help
@@ -100,6 +105,10 @@ USAGE:
 Policies: freqca:n=7[,low=0,o=2,c=2,d=dct|fft|none]  freqca-a:l=0.8
           fora:n=3  taylorseer:n=6,o=2  teacache:l=1.0  toca:n=8,r=0.75
           duca:n=8,r=0.7  baseline
+Priorities (QoS class of a served request): interactive | standard | batch
+  serve QoS knobs: --qos-weights I,S,B step credits per scheduling round;
+  --aging-bound max ticks a session may go unscheduled; at most
+  --refresh-concurrency full-compute steps per --dephase-window ticks.
 ";
 
 #[cfg(test)]

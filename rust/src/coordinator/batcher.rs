@@ -1,17 +1,29 @@
 //! Dynamic batcher: groups compatible queued requests into one device
-//! batch.
+//! batch, with one FIFO queue per QoS class.
 //!
-//! Requests are compatible when they share `(model, policy, n_steps)` —
-//! interval policies are step-index-driven, so every request in the batch
-//! follows the same full/predict schedule and one `fwd_b{B}` /
-//! `predict_*_b{B}` execution serves them all.  The batcher picks the
-//! largest exported batch size that the queue can fill, waiting up to
-//! `max_wait` for stragglers (classic size-or-timeout batching).
+//! Requests are compatible when they share `(model, policy, n_steps,
+//! priority)` — interval policies are step-index-driven, so every
+//! request in the batch follows the same full/predict schedule and one
+//! `fwd_b{B}` / `predict_*_b{B}` execution serves them all; the class is
+//! part of the key so a whole batch (and hence its engine session) has
+//! exactly one QoS class.  The batcher picks the largest exported batch
+//! size that the queue can fill, waiting up to `max_wait` for
+//! stragglers (classic size-or-timeout batching).
+//!
+//! QoS semantics (see `coordinator::scheduler` for the step-level half):
+//!
+//! * **admission prefers higher classes** — `next_batch` serves the
+//!   interactive queue before standard before batch;
+//! * **shedding evicts lowest-class-first** — when the (shared)
+//!   capacity is full, an arriving request evicts the *newest* queued
+//!   request of the lowest class strictly below its own instead of
+//!   being rejected blindly; only when nothing outranks does the
+//!   newcomer itself shed.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::Request;
+use super::{Priority, Request};
 
 /// A request waiting in the batcher with its enqueue time.
 #[derive(Debug)]
@@ -20,13 +32,26 @@ pub struct Pending {
     pub enqueued: Instant,
 }
 
-/// Size-or-timeout dynamic batcher over one logical queue.
+/// Outcome of one [`Batcher::push`].
+#[derive(Debug)]
+pub enum PushOutcome {
+    Queued,
+    /// Queued by evicting a lower-class request (returned): the caller
+    /// owes the victim a shed reply.
+    QueuedEvicting(Box<Request>),
+    /// Rejected: capacity full and nothing of a lower class to evict.
+    Shed,
+}
+
+/// Size-or-timeout dynamic batcher over one per-class set of queues.
 pub struct Batcher {
-    queue: VecDeque<Pending>,
+    /// One FIFO per class, indexed by [`Priority::slot`].
+    queues: [VecDeque<Pending>; 3],
     /// Batch sizes the artifacts were exported at, descending.
     sizes: Vec<usize>,
     pub max_wait: Duration,
-    /// Queue capacity; past it, new requests are shed (backpressure).
+    /// Total queue capacity across classes; past it, pushes evict
+    /// lower-class entries or shed (backpressure).
     pub capacity: usize,
     shed: u64,
 }
@@ -37,41 +62,72 @@ impl Batcher {
         if sizes.is_empty() {
             sizes.push(1);
         }
-        Batcher { queue: VecDeque::new(), sizes, max_wait, capacity, shed: 0 }
+        Batcher {
+            queues: std::array::from_fn(|_| VecDeque::new()),
+            sizes,
+            max_wait,
+            capacity,
+            shed: 0,
+        }
     }
 
-    /// Try to enqueue; false = shed due to backpressure.
-    pub fn push(&mut self, request: Request) -> bool {
-        if self.queue.len() >= self.capacity {
+    /// Enqueue into the request's class queue; at capacity, the newest
+    /// queued request of the lowest class *strictly below* the incoming
+    /// one is evicted to make room (the victim is returned so the
+    /// caller can reply).  Evictions and direct rejections both count
+    /// into `shed_count`.
+    pub fn push(&mut self, request: Request) -> PushOutcome {
+        let slot = request.priority.slot();
+        if self.len() >= self.capacity {
+            // Lowest class first == highest slot first; stop above the
+            // incoming class's own slot.
+            let victim_slot = (slot + 1..Priority::ALL.len())
+                .rev()
+                .find(|s| !self.queues[*s].is_empty());
+            let Some(vs) = victim_slot else {
+                self.shed += 1;
+                return PushOutcome::Shed;
+            };
+            let victim = self.queues[vs].pop_back().expect("non-empty");
             self.shed += 1;
-            return false;
+            self.queues[slot]
+                .push_back(Pending { request, enqueued: Instant::now() });
+            return PushOutcome::QueuedEvicting(Box::new(victim.request));
         }
-        self.queue.push_back(Pending { request, enqueued: Instant::now() });
-        true
+        self.queues[slot]
+            .push_back(Pending { request, enqueued: Instant::now() });
+        PushOutcome::Queued
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(VecDeque::len).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.queues.iter().all(VecDeque::is_empty)
+    }
+
+    /// Queue depth per class (`[interactive, standard, batch]`).
+    pub fn len_by_class(&self) -> [usize; 3] {
+        std::array::from_fn(|s| self.queues[s].len())
     }
 
     pub fn shed_count(&self) -> u64 {
         self.shed
     }
 
-    /// Pop the next batch: the longest *compatible prefix* of the queue
-    /// (FIFO — no request overtakes an earlier incompatible one, so no
+    /// Size of the batch `queue[slot]` would release now, or `None`
+    /// when that queue should keep waiting for stragglers: the longest
+    /// *compatible prefix* (FIFO within a class — no request overtakes
+    /// an earlier incompatible one of its own class, so no intra-class
     /// starvation), cut to the largest exported batch size it can fill.
-    /// Returns `None` when the queue should keep waiting for stragglers.
-    pub fn next_batch(&mut self, now: Instant) -> Option<Vec<Pending>> {
-        let first = self.queue.front()?;
+    fn ready_len(&self, slot: usize, now: Instant) -> Option<usize> {
+        let q = &self.queues[slot];
+        let first = q.front()?;
         let key = first.request.batch_key();
         let deadline_hit = now.duration_since(first.enqueued) >= self.max_wait;
         let mut prefix = 0;
-        for p in &self.queue {
+        for p in q {
             if p.request.batch_key() == key {
                 prefix += 1;
             } else {
@@ -83,19 +139,45 @@ impl Batcher {
             // Wait for more compatible requests unless the queue already
             // contains an incompatible one (then waiting cannot help the
             // *head* batch grow).
-            if prefix == self.queue.len() {
+            if prefix == q.len() {
                 return None;
             }
         }
         // Largest exported size <= prefix.
-        let size = self
-            .sizes
-            .iter()
-            .copied()
-            .find(|s| *s <= prefix)
-            .unwrap_or(1)
-            .min(prefix);
-        Some(self.queue.drain(..size).collect())
+        Some(
+            self.sizes
+                .iter()
+                .copied()
+                .find(|s| *s <= prefix)
+                .unwrap_or(1)
+                .min(prefix),
+        )
+    }
+
+    /// Highest class with a batch ready *now* (non-draining lookahead —
+    /// the engine's preemption decision peeks here before popping).
+    pub fn ready_class(&self, now: Instant) -> Option<Priority> {
+        (0..Priority::ALL.len())
+            .find(|s| self.ready_len(*s, now).is_some())
+            .and_then(Priority::from_slot)
+    }
+
+    /// Pop the next ready batch of one specific class.
+    pub fn next_batch_for(
+        &mut self,
+        class: Priority,
+        now: Instant,
+    ) -> Option<Vec<Pending>> {
+        let slot = class.slot();
+        let size = self.ready_len(slot, now)?;
+        Some(self.queues[slot].drain(..size).collect())
+    }
+
+    /// Pop the next ready batch, scanning classes most-urgent first.
+    pub fn next_batch(&mut self, now: Instant) -> Option<Vec<Pending>> {
+        Priority::ALL
+            .into_iter()
+            .find_map(|c| self.next_batch_for(c, now))
     }
 }
 
@@ -104,10 +186,20 @@ mod tests {
     use super::*;
 
     fn req(id: u64, model: &str, policy: &str) -> Request {
+        req_class(id, model, policy, Priority::Standard)
+    }
+
+    fn req_class(
+        id: u64,
+        model: &str,
+        policy: &str,
+        priority: Priority,
+    ) -> Request {
         Request {
             id,
             model: model.into(),
             policy: policy.into(),
+            priority,
             seed: id,
             n_steps: 50,
             cond: vec![],
@@ -116,11 +208,15 @@ mod tests {
         }
     }
 
+    fn queued(outcome: PushOutcome) -> bool {
+        matches!(outcome, PushOutcome::Queued)
+    }
+
     #[test]
     fn batches_compatible_prefix() {
         let mut b = Batcher::new(vec![1, 4], Duration::from_millis(0), 100);
         for i in 0..3 {
-            assert!(b.push(req(i, "m", "fora:n=3")));
+            assert!(queued(b.push(req(i, "m", "fora:n=3"))));
         }
         // timeout 0 -> batch immediately; 3 compatible but largest
         // exported size <= 3 is 1... sizes are {4, 1}; expect size 1.
@@ -159,7 +255,7 @@ mod tests {
     }
 
     #[test]
-    fn fifo_no_overtaking() {
+    fn fifo_no_overtaking_within_class() {
         // max_wait 0 so every compatible prefix flushes immediately.
         let mut b = Batcher::new(vec![1, 4], Duration::ZERO, 100);
         b.push(req(0, "m", "a"));
@@ -172,12 +268,71 @@ mod tests {
     }
 
     #[test]
-    fn sheds_over_capacity() {
+    fn higher_class_served_first() {
+        let mut b = Batcher::new(vec![1], Duration::ZERO, 100);
+        b.push(req_class(0, "m", "a", Priority::Batch));
+        b.push(req_class(1, "m", "a", Priority::Standard));
+        b.push(req_class(2, "m", "a", Priority::Interactive));
+        let order: Vec<u64> = std::iter::from_fn(|| {
+            b.next_batch(Instant::now()).map(|v| v[0].request.id)
+        })
+        .collect();
+        assert_eq!(order, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn sheds_over_capacity_same_class() {
         let mut b = Batcher::new(vec![1], Duration::from_secs(1), 2);
-        assert!(b.push(req(0, "m", "a")));
-        assert!(b.push(req(1, "m", "a")));
-        assert!(!b.push(req(2, "m", "a")));
+        assert!(queued(b.push(req(0, "m", "a"))));
+        assert!(queued(b.push(req(1, "m", "a"))));
+        assert!(matches!(b.push(req(2, "m", "a")), PushOutcome::Shed));
         assert_eq!(b.shed_count(), 1);
+    }
+
+    #[test]
+    fn evicts_lowest_class_newest_first() {
+        let mut b = Batcher::new(vec![1], Duration::from_secs(1), 3);
+        b.push(req_class(0, "m", "a", Priority::Batch));
+        b.push(req_class(1, "m", "a", Priority::Batch));
+        b.push(req_class(2, "m", "a", Priority::Standard));
+        // Interactive arrival at capacity: the *newest batch-class*
+        // request (id 1) is evicted, not the standard one and not the
+        // oldest batch one.
+        match b.push(req_class(3, "m", "a", Priority::Interactive)) {
+            PushOutcome::QueuedEvicting(victim) => assert_eq!(victim.id, 1),
+            o => panic!("expected eviction, got {o:?}"),
+        }
+        assert_eq!(b.shed_count(), 1);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.len_by_class(), [1, 1, 1]);
+        // A standard arrival can still displace the remaining batch one.
+        match b.push(req_class(4, "m", "a", Priority::Standard)) {
+            PushOutcome::QueuedEvicting(victim) => assert_eq!(victim.id, 0),
+            o => panic!("expected eviction, got {o:?}"),
+        }
+        // Nothing below standard left: the next standard arrival sheds.
+        assert!(matches!(
+            b.push(req_class(5, "m", "a", Priority::Standard)),
+            PushOutcome::Shed
+        ));
+        // ...but an interactive one can displace a standard entry.
+        match b.push(req_class(6, "m", "a", Priority::Interactive)) {
+            PushOutcome::QueuedEvicting(victim) => assert_eq!(victim.id, 4),
+            o => panic!("expected eviction, got {o:?}"),
+        }
+        assert_eq!(b.shed_count(), 3);
+    }
+
+    #[test]
+    fn interactive_never_evicted_by_anyone() {
+        let mut b = Batcher::new(vec![1], Duration::from_secs(1), 1);
+        b.push(req_class(0, "m", "a", Priority::Interactive));
+        for class in Priority::ALL {
+            assert!(matches!(
+                b.push(req_class(1, "m", "a", class)),
+                PushOutcome::Shed
+            ));
+        }
     }
 
     #[test]
@@ -212,15 +367,35 @@ mod tests {
     }
 
     #[test]
+    fn waiting_head_class_does_not_block_ready_lower_class() {
+        // An interactive straggler that is still waiting for batchmates
+        // must not hold up a ready standard batch behind it.
+        let wait = Duration::from_secs(10);
+        let mut b = Batcher::new(vec![1, 4], wait, 100);
+        let now = Instant::now();
+        b.push(req_class(0, "m", "a", Priority::Interactive));
+        b.push(req_class(1, "m", "a", Priority::Standard));
+        b.push(req_class(2, "m", "b", Priority::Standard));
+        // Interactive queue: young lone prefix -> waits.  Standard
+        // queue: incompatible tail -> head flushes.
+        let batch = b.next_batch(now).unwrap();
+        assert_eq!(batch[0].request.id, 1);
+        // Once the interactive head ages past the deadline it is the
+        // ready class again (the peek the engine's preemption uses).
+        let later = now + wait + Duration::from_millis(1);
+        assert_eq!(b.ready_class(later), Some(Priority::Interactive));
+    }
+
+    #[test]
     fn shed_recovers_after_drain() {
         // Backpressure is on *queue depth*: once a batch drains, pushes
         // are accepted again; the shed counter keeps its history.
         let mut b = Batcher::new(vec![1], Duration::ZERO, 1);
-        assert!(b.push(req(0, "m", "a")));
-        assert!(!b.push(req(1, "m", "a")));
+        assert!(queued(b.push(req(0, "m", "a"))));
+        assert!(matches!(b.push(req(1, "m", "a")), PushOutcome::Shed));
         assert_eq!(b.shed_count(), 1);
         assert_eq!(b.next_batch(Instant::now()).unwrap().len(), 1);
-        assert!(b.push(req(2, "m", "a")), "capacity not reclaimed");
+        assert!(queued(b.push(req(2, "m", "a"))), "capacity not reclaimed");
         assert_eq!(b.shed_count(), 1);
         assert_eq!(b.len(), 1);
     }

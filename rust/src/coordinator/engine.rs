@@ -3,11 +3,17 @@
 //! denoising step at a time.
 //!
 //! Every [`Engine::tick`]:
-//! 1. drains the router's ready batches into new [`SamplerSession`]s
-//!    (admission happens *between steps*, not only when idle — a new
-//!    request never waits for a running job to finish all its steps);
+//! 1. fills free capacity from the parking lot and the router's ready
+//!    batches (admission happens *between steps*, not only when idle —
+//!    a new request never waits for a running job to finish all its
+//!    steps), **preempting** under overload: when the in-flight set is
+//!    at cap and a strictly higher-class batch is ready, the
+//!    lowest-class in-flight session is *parked* — its [`InFlight`]
+//!    struct moves to a bounded parking lot, latents and CRF cache
+//!    intact — and resumed when capacity frees;
 //! 2. publishes backpressure/queue gauges and shed accounting;
-//! 3. picks one session (round-robin, oldest-deadline tie-break — see
+//! 3. picks one session by the QoS policy (weighted class quotas,
+//!    anti-starvation aging, cache-aware refresh de-phasing — see
 //!    [`super::scheduler`]) and runs exactly one step;
 //! 4. completes/replies per-session as each finishes.
 //!
@@ -15,7 +21,7 @@
 //! `coordinator`); `serve_loop` is the long-running worker the TCP
 //! server spawns, fed over an mpsc channel.  On channel close it
 //! gracefully drains: queued requests are admitted and every in-flight
-//! session runs to completion before the loop returns.
+//! **and parked** session runs to completion before the loop returns.
 
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -27,8 +33,8 @@ use anyhow::{anyhow, Error, Result};
 
 use super::batcher::Pending;
 use super::router::{RouteResult, Router};
-use super::scheduler::{SchedState, Scheduler};
-use super::{Request, Response};
+use super::scheduler::{QosConfig, SchedState, Scheduler, StepKind};
+use super::{Priority, Request, Response};
 use crate::metrics::Metrics;
 use crate::model::weights;
 use crate::policy;
@@ -54,14 +60,20 @@ struct Waiter {
     enqueued: Instant,
 }
 
-/// An admitted batch being sampled step-by-step.
+/// An admitted batch being sampled step-by-step.  Self-contained: when
+/// preempted, the whole struct (latents, CRF cache, policy state,
+/// scheduling state, waiters) moves to the parking lot and back without
+/// touching any of it — which is what makes park/resume bit-identical
+/// to an uninterrupted run (the parity test in `integration_server`).
 struct InFlight {
     session: SamplerSession<'static>,
     waiters: Vec<Waiter>,
+    /// QoS class of the whole batch (classes never share a batch).
+    class: Priority,
     /// Session start (admission) time; completion latency = span since.
     started: Instant,
-    /// Scheduling state: last tick this session ran, and its deadline
-    /// surrogate (enqueue time of its oldest member).
+    /// Scheduling state: class, credits, last tick run, deadline
+    /// surrogate (enqueue time of the oldest member), cache phase.
     sched: SchedState<Instant>,
 }
 
@@ -75,11 +87,17 @@ pub struct Engine {
     replies: HashMap<u64, (Sender<Response>, Instant, u64)>,
     next_internal_id: u64,
     sessions: Vec<InFlight>,
+    /// Preempted sessions, state intact, waiting for capacity.  Bounded
+    /// by `max_parked` so preemption cannot hoard per-session memory.
+    parked: Vec<InFlight>,
     /// Concurrency cap: ready batches stay in their (capacity-bounded,
     /// shedding) queues once this many sessions are in flight, so
     /// backpressure still has a surface to push on and per-session
     /// memory (latents, CRF caches, history buffers) stays bounded.
     max_in_flight: usize,
+    /// Parking-lot bound (== `max_in_flight`): at most one parked
+    /// session per in-flight slot.
+    max_parked: usize,
     sched: Scheduler,
     /// Router shed total already folded into the metrics counter.
     shed_seen: u64,
@@ -92,6 +110,7 @@ impl Engine {
         max_wait: Duration,
         capacity: usize,
         max_in_flight: usize,
+        qos: QosConfig,
         metrics: Arc<Metrics>,
     ) -> Result<Engine> {
         let rt = Runtime::new(artifact_dir)?;
@@ -107,6 +126,7 @@ impl Engine {
                 weights::load_weights(artifact_dir, &cfg.name, cfg.param_count)?;
             weight_bufs.insert(cfg.name.clone(), rt.weights_buffer(cfg, &host)?);
         }
+        let max_in_flight = max_in_flight.max(1);
         Ok(Engine {
             rt,
             router: Router::new(configs, max_wait, capacity),
@@ -115,8 +135,10 @@ impl Engine {
             replies: HashMap::new(),
             next_internal_id: 1,
             sessions: Vec::new(),
-            max_in_flight: max_in_flight.max(1),
-            sched: Scheduler::new(),
+            parked: Vec::new(),
+            max_in_flight,
+            max_parked: max_in_flight,
+            sched: Scheduler::new(qos),
             shed_seen: 0,
         })
     }
@@ -133,9 +155,14 @@ impl Engine {
         self.weight_bufs.get(model).cloned()
     }
 
-    /// In-flight session count (scheduler depth).
+    /// In-flight session count (scheduler depth), parked excluded.
     pub fn in_flight(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Preempted sessions currently in the parking lot.
+    pub fn parked(&self) -> usize {
+        self.parked.len()
     }
 
     /// Pre-compile the hot artifacts of one model so first-request latency
@@ -172,6 +199,20 @@ impl Engine {
                     .insert(internal, (item.reply, item.enqueued, client_id));
                 self.metrics.bump("requests_admitted", 1);
             }
+            RouteResult::QueuedEvicting(victim) => {
+                self.replies
+                    .insert(internal, (item.reply, item.enqueued, client_id));
+                self.metrics.bump("requests_admitted", 1);
+                self.metrics.bump("requests_evicted", 1);
+                // The victim was queued, never admitted to a session, so
+                // its reply channel is still in the map.
+                if let Some((tx, _enq, cid)) = self.replies.remove(&victim) {
+                    let _ = tx.send(Response::err(
+                        cid,
+                        "evicted by higher-priority request (shed)".into(),
+                    ));
+                }
+            }
             RouteResult::Shed => {
                 // The reply must go out now (the client is blocked on
                 // it); the *accounting* is folded in at the next tick,
@@ -192,35 +233,165 @@ impl Engine {
         }
     }
 
-    /// One scheduler tick: admit every ready batch, publish queue/shed
-    /// accounting, then run **one** denoising step of the least-recently
-    /// scheduled session.  Returns the number of steps executed (0 or 1);
-    /// 0 means the engine is idle (nothing ready and nothing in flight).
+    /// One scheduler tick: fill capacity (resume/admit/preempt), publish
+    /// queue/shed accounting, then run **one** denoising step of the
+    /// session the QoS policy picks.  Returns the number of steps
+    /// executed (0 or 1); 0 means the engine is idle (nothing ready and
+    /// nothing in flight).
     pub fn tick(&mut self) -> usize {
         self.admit_ready();
         self.account_backpressure();
-        let states: Vec<SchedState<Instant>> =
-            self.sessions.iter().map(|s| s.sched).collect();
-        let Some((idx, tick)) = self.sched.pick(&states) else {
+        // Refresh each session's cache phase (pure lookahead) and hand
+        // the scheduler a scratch copy of the states; everything it
+        // mutates (credits, round refills, last_ran) is written back.
+        let mut states: Vec<SchedState<Instant>> = self
+            .sessions
+            .iter()
+            .map(|s| {
+                let mut st = s.sched;
+                st.next_kind = s
+                    .session
+                    .next_step_kind()
+                    .unwrap_or(StepKind::Unknown);
+                st
+            })
+            .collect();
+        let Some(pick) = self.sched.pick(&mut states) else {
             return 0;
         };
-        self.sessions[idx].sched.last_ran = tick;
-        self.run_one_step(idx);
+        for (sess, st) in self.sessions.iter_mut().zip(states) {
+            sess.sched = st;
+        }
+        if pick.dephased {
+            self.metrics.bump("steps_dephased", 1);
+        }
+        if pick.forced_full {
+            self.metrics.bump("steps_full_forced", 1);
+        }
+        self.run_one_step(pick.index);
         1
     }
 
-    /// Drain the router: batches that are ready *now* become in-flight
-    /// sessions, up to the concurrency cap.  Called at the top of each
-    /// tick, so admission interleaves with long-running jobs instead of
-    /// waiting behind them; past the cap, requests keep queueing in the
-    /// batcher whose bounded capacity sheds (backpressure) on overflow.
+    /// Fill free capacity and handle overload, in preference order:
+    ///
+    /// 1. below the cap, the best parked session (highest class, oldest
+    ///    park) is resumed *unless* a strictly higher-class batch is
+    ///    ready — preempted work finishes before new same-or-lower
+    ///    class work starts;
+    /// 2. below the cap, ready batches become sessions (class-major,
+    ///    see `Router::next_batch`);
+    /// 3. at the cap, a ready batch of a strictly higher class preempts
+    ///    the lowest-class in-flight session into the parking lot
+    ///    (bounded; when full, the batch keeps queueing).
+    ///
+    /// Past the cap+lot, requests queue in the batcher whose bounded
+    /// capacity evicts lowest-class-first and then sheds (backpressure).
     fn admit_ready(&mut self) {
-        while self.sessions.len() < self.max_in_flight {
+        loop {
+            if self.sessions.len() < self.max_in_flight {
+                let ready = self.router.ready_class();
+                let parked = self.best_parked();
+                match (ready, parked) {
+                    (None, None) => return,
+                    (None, Some(p)) => self.resume(p),
+                    (Some(_), None) => {
+                        let Some((model, batch)) = self.router.next_batch()
+                        else {
+                            return;
+                        };
+                        self.start_session(&model, batch);
+                    }
+                    (Some(r), Some(p)) => {
+                        // Starved parked sessions outrank any ready
+                        // class: the scheduler's aging override only
+                        // scans in-flight sessions, so the engine must
+                        // extend the starvation guarantee across the
+                        // parking lot or sustained higher-class
+                        // arrivals would strand parked work forever.
+                        if self.parked[p].class >= r
+                            || self.starved(&self.parked[p].sched)
+                        {
+                            self.resume(p);
+                        } else {
+                            let Some((model, batch)) =
+                                self.router.next_batch()
+                            else {
+                                return;
+                            };
+                            self.start_session(&model, batch);
+                        }
+                    }
+                }
+                continue;
+            }
+            // At capacity: preempt only for strictly higher-class work,
+            // and only while the parking lot has room.
+            if self.parked.len() >= self.max_parked {
+                return;
+            }
+            let Some(ready) = self.router.ready_class() else { return };
+            let Some(victim) = self.preemption_victim() else { return };
+            if self.sessions[victim].class >= ready {
+                return;
+            }
             let Some((model, batch)) = self.router.next_batch() else {
                 return;
             };
+            let parked = self.sessions.swap_remove(victim);
+            self.metrics.bump("sessions_parked", 1);
+            self.parked.push(parked);
             self.start_session(&model, batch);
         }
+    }
+
+    /// Best parked session to resume.  A *starved* parked session (most
+    /// starved first) takes precedence regardless of class — the aging
+    /// guarantee extends across the whole lot, so a starved batch
+    /// session cannot be bypassed behind a fresher higher-class one —
+    /// otherwise highest class, then longest parked (FIFO — `parked`
+    /// is in park order).
+    fn best_parked(&self) -> Option<usize> {
+        (0..self.parked.len())
+            .filter(|i| self.starved(&self.parked[*i].sched))
+            .min_by_key(|i| self.parked[*i].sched.freshness())
+            .or_else(|| {
+                (0..self.parked.len()).max_by_key(|i| {
+                    (self.parked[*i].class, std::cmp::Reverse(*i))
+                })
+            })
+    }
+
+    /// Has this session's aging bound elapsed without a step?  Mirrors
+    /// the scheduler's override test (one tick more conservative: the
+    /// scheduler compares against the tick about to be issued) and
+    /// extends it to sessions the scheduler cannot see (parked ones).
+    fn starved(&self, st: &SchedState<Instant>) -> bool {
+        let aging = self.sched.config().aging_bound.max(1);
+        self.sched.tick().saturating_sub(st.freshness()) >= aging
+    }
+
+    /// Which in-flight session to preempt: lowest class; among equals,
+    /// the one with the most steps remaining (least progress lost to
+    /// waiting, soonest completions keep running).  Starved sessions
+    /// are not preemptable — otherwise a just-force-resumed session
+    /// could be parked again in the same `admit_ready` pass and the
+    /// aging guarantee would never be honoured.
+    fn preemption_victim(&self) -> Option<usize> {
+        (0..self.sessions.len())
+            .filter(|i| !self.starved(&self.sessions[*i].sched))
+            .min_by_key(|i| {
+                let s = &self.sessions[*i];
+                (s.class, std::cmp::Reverse(s.session.steps_remaining()))
+            })
+    }
+
+    fn resume(&mut self, idx: usize) {
+        // Scheduling state rides along: a long-parked session's stale
+        // `last_ran` makes the QoS policy (or its aging bound) run it
+        // promptly, compensating the parked time.
+        let inflight = self.parked.remove(idx);
+        self.metrics.bump("sessions_resumed", 1);
+        self.sessions.push(inflight);
     }
 
     /// Fold the router's shed counter and queue depths into the metrics
@@ -233,17 +404,29 @@ impl Engine {
         }
         self.metrics
             .set_gauge("in_flight_sessions", self.sessions.len() as f64);
+        self.metrics
+            .set_gauge("parked_sessions", self.parked.len() as f64);
         let in_flight_requests: usize =
             self.sessions.iter().map(|s| s.waiters.len()).sum();
         self.metrics
             .set_gauge("in_flight_requests", in_flight_requests as f64);
         self.metrics
             .set_gauge("queued_requests", self.router.queued() as f64);
+        let by_class = self.router.queued_by_class();
+        for (class, depth) in Priority::ALL.iter().zip(by_class) {
+            self.metrics.set_gauge(
+                &format!("queued_requests_{}", class.name()),
+                depth as f64,
+            );
+        }
     }
 
     /// Build a `SamplerSession` for one batch and enroll it.
     fn start_session(&mut self, model: &str, batch: Vec<Pending>) {
         let now = Instant::now();
+        // Per-class batcher queues keep batches class-homogeneous; the
+        // batch key pins it.
+        let class = batch[0].request.priority;
         let mut waiters = Vec::with_capacity(batch.len());
         let mut oldest = now;
         for p in &batch {
@@ -251,6 +434,7 @@ impl Engine {
             {
                 let queue_s = now.duration_since(enq).as_secs_f64();
                 self.metrics.record_queue_wait(queue_s);
+                self.metrics.record_class("queue_wait_s", class.name(), queue_s);
                 oldest = oldest.min(enq);
                 waiters.push(Waiter {
                     tx,
@@ -267,8 +451,9 @@ impl Engine {
                 self.sessions.push(InFlight {
                     session,
                     waiters,
+                    class,
                     started: now,
-                    sched: SchedState { last_ran: 0, deadline: oldest },
+                    sched: self.sched.admit(class, oldest),
                 });
             }
             Err(e) => {
@@ -323,10 +508,12 @@ impl Engine {
                 self.metrics.record_step(record.wall_s);
                 if record.step == 0 {
                     let now = Instant::now();
+                    let class = self.sessions[idx].class;
                     for w in &mut self.sessions[idx].waiters {
                         let ttfs = now.duration_since(w.enqueued).as_secs_f64();
                         w.ttfs_s = Some(ttfs);
                         self.metrics.record_ttfs(ttfs);
+                        self.metrics.record_class("ttfs_s", class.name(), ttfs);
                     }
                 }
                 if done {
@@ -343,7 +530,7 @@ impl Engine {
     fn complete_session(&mut self, idx: usize) {
         let inflight = self.sessions.swap_remove(idx);
         let latency_s = inflight.started.elapsed().as_secs_f64();
-        let InFlight { session, waiters, .. } = inflight;
+        let InFlight { session, waiters, class, .. } = inflight;
         let results = match session.into_results() {
             Ok(r) => r,
             Err(e) => {
@@ -365,6 +552,8 @@ impl Engine {
         }
         for (w, r) in waiters.into_iter().zip(results) {
             self.metrics.record_request(latency_s);
+            self.metrics
+                .record_class("completion_s", class.name(), latency_s);
             let resp = Response {
                 id: w.client_id,
                 ok: true,
@@ -400,8 +589,10 @@ impl Engine {
 
     /// Long-running worker loop: drain the channel, tick the scheduler,
     /// repeat.  When the channel closes the engine **drains gracefully**:
-    /// already-queued requests are admitted and every in-flight session
-    /// steps to completion before the loop returns.
+    /// already-queued requests are admitted and every in-flight *and
+    /// parked* session steps to completion before the loop returns
+    /// (`admit_ready` resumes parked sessions as completions free
+    /// capacity, so the lot empties itself).
     pub fn serve_loop(&mut self, rx: Receiver<WorkItem>) {
         let mut closed = false;
         loop {
@@ -419,7 +610,9 @@ impl Engine {
             if ran != 0 {
                 continue;
             }
-            let drained = self.sessions.is_empty() && self.router.queued() == 0;
+            let drained = self.sessions.is_empty()
+                && self.parked.is_empty()
+                && self.router.queued() == 0;
             if closed {
                 if drained {
                     return;

@@ -7,20 +7,86 @@
 //! `Runtime` and all in-flight `SamplerSession`s; the TCP acceptor
 //! threads communicate with it over `mpsc` channels.  The engine loop is
 //! **continuous**: every tick it drains newly batched requests into new
-//! sessions and advances exactly one session by one denoising step
-//! (round-robin, oldest-deadline tie-break — see `scheduler`), so short
-//! jobs are never head-of-line blocked behind a long job's remaining
-//! steps.  This mirrors continuous batching in production LLM routers
-//! (vLLM-style token-level admission), applied at diffusion step
-//! granularity; there is exactly one worker because the sandbox has one
-//! core.
+//! sessions (preempting lower-class sessions into a parking lot under
+//! overload) and advances exactly one session by one denoising step
+//! (QoS policy: weighted class quotas, round-robin within a class,
+//! oldest-deadline tie-break, aging bound, refresh de-phasing — see
+//! `scheduler`), so short jobs are never head-of-line blocked behind a
+//! long job's remaining steps and interactive traffic is never starved
+//! by batch backfills.  This mirrors continuous batching in production
+//! LLM routers (vLLM-style token-level admission), applied at diffusion
+//! step granularity; there is exactly one worker because the sandbox
+//! has one core.
 
 pub mod batcher;
 pub mod engine;
 pub mod router;
 pub mod scheduler;
 
+use anyhow::bail;
+
 use crate::util::Json;
+
+/// QoS class of a request.  Ordering is by urgency: `Batch` <
+/// `Standard` < `Interactive`, so `a > b` means "a outranks b" for
+/// admission, scheduling quota, and preemption (see `scheduler`).
+#[derive(
+    Debug, Default, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash,
+)]
+pub enum Priority {
+    /// Throughput traffic (backfills, dataset sweeps): largest queueing
+    /// tolerance, first to be shed/preempted, smallest step quota.
+    Batch,
+    /// The default class for unlabelled requests.
+    #[default]
+    Standard,
+    /// Latency-sensitive traffic (a user is watching): preferred
+    /// admission, largest step quota, never evicted for another class.
+    Interactive,
+}
+
+impl Priority {
+    /// All classes, most-urgent first (the scan order of every
+    /// class-major loop in the coordinator).
+    pub const ALL: [Priority; 3] =
+        [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    /// Dense index with 0 = most urgent (`Interactive`), matching the
+    /// `[Interactive, Standard, Batch]` layout of per-class arrays
+    /// (queue slots, quota weights, gauges).
+    pub fn slot(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    pub fn from_slot(slot: usize) -> Option<Priority> {
+        Priority::ALL.get(slot).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse the wire/CLI spelling (case-sensitive, full words).
+    pub fn parse(s: &str) -> anyhow::Result<Priority> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "standard" => Ok(Priority::Standard),
+            "batch" => Ok(Priority::Batch),
+            other => bail!(
+                "unknown priority '{other}' \
+                 (expected interactive|standard|batch)"
+            ),
+        }
+    }
+}
 
 /// A client request (one image generation or edit).
 #[derive(Debug, Clone)]
@@ -29,6 +95,8 @@ pub struct Request {
     pub model: String,
     /// Policy description, e.g. "freqca:n=7" (see `policy::parse_policy`).
     pub policy: String,
+    /// QoS class (wire field `priority`; absent = `standard`).
+    pub priority: Priority,
     pub seed: u64,
     pub n_steps: usize,
     /// Conditioning vector; padded/truncated to the model's cond_dim.
@@ -52,6 +120,10 @@ impl Request {
                 .map(|v| v as f32)
                 .collect()
         });
+        let priority = match j.get("priority").and_then(|v| v.as_str()) {
+            Some(p) => Priority::parse(p)?,
+            None => Priority::default(),
+        };
         Ok(Request {
             id: j.get("id").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
             model: j.req_str("model")?.to_string(),
@@ -60,6 +132,7 @@ impl Request {
                 .and_then(|v| v.as_str())
                 .unwrap_or("freqca:n=7")
                 .to_string(),
+            priority,
             seed: j.get("seed").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
             n_steps: j.get("steps").and_then(|v| v.as_usize()).unwrap_or(50),
             cond,
@@ -76,6 +149,7 @@ impl Request {
             ("id", Json::num(self.id as f64)),
             ("model", Json::str(self.model.clone())),
             ("policy", Json::str(self.policy.clone())),
+            ("priority", Json::str(self.priority.name().to_string())),
             ("seed", Json::num(self.seed as f64)),
             ("steps", Json::num(self.n_steps as f64)),
             ("cond", Json::from_f32s(&self.cond)),
@@ -87,9 +161,18 @@ impl Request {
         Json::obj(pairs)
     }
 
-    /// Batching key: requests that may share one device batch.
+    /// Batching key: requests that may share one device batch.  The
+    /// priority class is part of the key (defensively — the per-class
+    /// batcher queues already separate classes) so a session's QoS
+    /// class is always well-defined as the class of its whole batch.
     pub fn batch_key(&self) -> String {
-        format!("{}|{}|{}", self.model, self.policy, self.n_steps)
+        format!(
+            "{}|{}|{}|{}",
+            self.model,
+            self.policy,
+            self.n_steps,
+            self.priority.name()
+        )
     }
 }
 
@@ -192,6 +275,7 @@ mod tests {
             id: 7,
             model: "flux-sim".into(),
             policy: "freqca:n=7".into(),
+            priority: Priority::Interactive,
             seed: 3,
             n_steps: 50,
             cond: vec![0.5, -0.25],
@@ -203,8 +287,40 @@ mod tests {
             .unwrap();
         assert_eq!(back.id, 7);
         assert_eq!(back.model, "flux-sim");
+        assert_eq!(back.priority, Priority::Interactive);
         assert_eq!(back.cond, vec![0.5, -0.25]);
         assert!(back.return_latent);
+    }
+
+    #[test]
+    fn priority_defaults_and_rejects() {
+        // Absent field -> standard (back-compatible wire format).
+        let j = Json::parse(r#"{"model":"m"}"#).unwrap();
+        assert_eq!(
+            Request::from_json(&j).unwrap().priority,
+            Priority::Standard
+        );
+        // Bad spelling is a clean parse error, not a silent default.
+        let j = Json::parse(r#"{"model":"m","priority":"urgent"}"#).unwrap();
+        assert!(Request::from_json(&j).is_err());
+        // A non-string value is ignored like any other malformed field.
+        let j = Json::parse(r#"{"model":"m","priority":3}"#).unwrap();
+        assert_eq!(
+            Request::from_json(&j).unwrap().priority,
+            Priority::Standard
+        );
+    }
+
+    #[test]
+    fn priority_orders_by_urgency() {
+        assert!(Priority::Interactive > Priority::Standard);
+        assert!(Priority::Standard > Priority::Batch);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.slot(), i);
+            assert_eq!(Priority::from_slot(i), Some(*p));
+            assert_eq!(Priority::parse(p.name()).unwrap(), *p);
+        }
+        assert_eq!(Priority::from_slot(3), None);
     }
 
     #[test]
@@ -232,11 +348,12 @@ mod tests {
     }
 
     #[test]
-    fn batch_key_separates_policies() {
+    fn batch_key_separates_policies_and_classes() {
         let mut a = Request {
             id: 0,
             model: "m".into(),
             policy: "fora:n=3".into(),
+            priority: Priority::Standard,
             seed: 0,
             n_steps: 50,
             cond: vec![],
@@ -246,5 +363,8 @@ mod tests {
         let key_a = a.batch_key();
         a.policy = "freqca:n=7".into();
         assert_ne!(key_a, a.batch_key());
+        let key_b = a.batch_key();
+        a.priority = Priority::Batch;
+        assert_ne!(key_b, a.batch_key());
     }
 }

@@ -4,14 +4,17 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
-use super::batcher::{Batcher, Pending};
-use super::Request;
+use super::batcher::{Batcher, Pending, PushOutcome};
+use super::{Priority, Request};
 use crate::model::ModelConfig;
 
 /// Routing outcome for one request.
 #[derive(Debug, PartialEq)]
 pub enum RouteResult {
     Queued,
+    /// Queued by evicting the queued lower-class request with this
+    /// (engine-internal) id: the caller owes the victim a shed reply.
+    QueuedEvicting(u64),
     Shed,
     UnknownModel,
     Invalid(String),
@@ -90,34 +93,69 @@ impl Router {
         // Normalize the conditioning vector to the model width.
         request.cond.resize(cfg.cond_dim, 0.0);
         let b = self.batchers.get_mut(&request.model).unwrap();
-        if b.push(request) {
-            RouteResult::Queued
-        } else {
-            RouteResult::Shed
+        match b.push(request) {
+            PushOutcome::Queued => RouteResult::Queued,
+            PushOutcome::QueuedEvicting(victim) => {
+                RouteResult::QueuedEvicting(victim.id)
+            }
+            PushOutcome::Shed => RouteResult::Shed,
         }
     }
 
-    /// Collect the next ready batch across all model queues: true
-    /// round-robin — the scan starts after the model served last (name
-    /// order, rotating cursor), so every model with ready work is
+    /// Collect the next ready batch across all queues, **class-major**:
+    /// every model's interactive queue outranks every standard queue,
+    /// and so on — so the class of the batch this returns always equals
+    /// [`Router::ready_class`] (or better), which the engine's
+    /// preemption decision relies on.  Within a class the scan is true
+    /// round-robin over models — it starts after the model served last
+    /// (name order, rotating cursor), so every model with ready work is
     /// reached within one rotation even when an earlier name always has
     /// a batch ready.
     pub fn next_batch(&mut self) -> Option<(String, Vec<Pending>)> {
         let now = std::time::Instant::now();
         let n = self.names.len();
-        for k in 0..n {
-            let i = (self.rr_next + k) % n;
-            let b = self.batchers.get_mut(&self.names[i]).unwrap();
-            if let Some(batch) = b.next_batch(now) {
-                self.rr_next = (i + 1) % n;
-                return Some((self.names[i].clone(), batch));
+        for class in Priority::ALL {
+            for k in 0..n {
+                let i = (self.rr_next + k) % n;
+                let b = self.batchers.get_mut(&self.names[i]).unwrap();
+                if let Some(batch) = b.next_batch_for(class, now) {
+                    self.rr_next = (i + 1) % n;
+                    return Some((self.names[i].clone(), batch));
+                }
             }
         }
         None
     }
 
+    /// Highest class with a batch ready *now*, without popping anything
+    /// (the engine peeks here to decide whether preempting a lower
+    /// class in-flight session is worth it).  Readiness is monotonic in
+    /// time (size thresholds only fill up, deadlines only age), so a
+    /// class reported ready here is still ready — or outranked by a
+    /// newly ready higher class — when `next_batch` pops.
+    pub fn ready_class(&self) -> Option<Priority> {
+        let now = std::time::Instant::now();
+        self.batchers
+            .values()
+            .filter_map(|b| b.ready_class(now))
+            .max()
+    }
+
     pub fn queued(&self) -> usize {
         self.batchers.values().map(Batcher::len).sum()
+    }
+
+    /// Queue depth per class across all models
+    /// (`[interactive, standard, batch]`).
+    pub fn queued_by_class(&self) -> [usize; 3] {
+        let mut out = [0usize; 3];
+        for b in self.batchers.values() {
+            let per = b.len_by_class();
+            for (o, p) in out.iter_mut().zip(per) {
+                *o += p;
+            }
+        }
+        out
     }
 
     pub fn shed(&self) -> u64 {
@@ -148,6 +186,7 @@ mod tests {
             id: 1,
             model: model.into(),
             policy: "fora:n=3".into(),
+            priority: Priority::Standard,
             seed: 0,
             n_steps: 10,
             cond: vec![1.0; 4],
@@ -237,6 +276,49 @@ mod tests {
         let mut rq = req("e");
         rq.ref_img = Some(vec![0.0; 7]); // latent_elems is 8*8*4
         assert!(matches!(r.route(rq), RouteResult::Invalid(_)));
+    }
+
+    #[test]
+    fn eviction_surfaces_the_victim_id() {
+        let mut r = Router::new(vec![cfg("m", false)], Duration::ZERO, 1);
+        let mut low = req("m");
+        low.id = 7;
+        low.priority = Priority::Batch;
+        assert_eq!(r.route(low), RouteResult::Queued);
+        let mut high = req("m");
+        high.id = 8;
+        high.priority = Priority::Interactive;
+        assert_eq!(r.route(high), RouteResult::QueuedEvicting(7));
+        assert_eq!(r.shed(), 1);
+        assert_eq!(r.queued(), 1);
+        assert_eq!(r.queued_by_class(), [1, 0, 0]);
+        // The surviving queued request is the interactive one.
+        let (_, batch) = r.next_batch().unwrap();
+        assert_eq!(batch[0].request.id, 8);
+    }
+
+    #[test]
+    fn ready_class_and_class_major_pop_agree() {
+        let mut r = Router::new(
+            vec![cfg("a", false), cfg("b", false)],
+            Duration::ZERO,
+            100,
+        );
+        let mut batch_req = req("a");
+        batch_req.priority = Priority::Batch;
+        assert_eq!(r.route(batch_req), RouteResult::Queued);
+        let mut inter = req("b");
+        inter.priority = Priority::Interactive;
+        assert_eq!(r.route(inter), RouteResult::Queued);
+        // The interactive batch outranks the batch-class one even
+        // though model "a" sorts first.
+        assert_eq!(r.ready_class(), Some(Priority::Interactive));
+        let (name, popped) = r.next_batch().unwrap();
+        assert_eq!(name, "b");
+        assert_eq!(popped[0].request.priority, Priority::Interactive);
+        assert_eq!(r.ready_class(), Some(Priority::Batch));
+        assert_eq!(r.next_batch().unwrap().0, "a");
+        assert_eq!(r.ready_class(), None);
     }
 
     #[test]

@@ -8,7 +8,8 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use freqca::cli::{Args, USAGE};
-use freqca::coordinator::Request;
+use freqca::coordinator::scheduler::{parse_weights, QosConfig};
+use freqca::coordinator::{Priority, Request};
 use freqca::metrics::Metrics;
 use freqca::model::weights;
 use freqca::policy;
@@ -41,6 +42,7 @@ fn run(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "generate" => cmd_generate(args, false),
         "edit" => cmd_generate(args, true),
+        "request" => cmd_request(args),
         "models" => cmd_models(args),
         "metrics" => cmd_metrics(args),
         "" | "help" | "--help" | "-h" => {
@@ -52,12 +54,25 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let defaults = QosConfig::default();
+    let qos = QosConfig {
+        weights: match args.get("qos-weights") {
+            Some(w) => parse_weights(w)?,
+            None => defaults.weights,
+        },
+        aging_bound: args.u64_or("aging-bound", defaults.aging_bound)?,
+        max_full_per_window: args
+            .usize_or("refresh-concurrency", defaults.max_full_per_window)?,
+        dephase_window: args
+            .u64_or("dephase-window", defaults.dephase_window)?,
+    };
     let opts = ServeOpts {
         addr: args.str_or("addr", "127.0.0.1:7463"),
         batch_wait_ms: args.u64_or("wait-ms", 5)?,
         queue_capacity: args.usize_or("capacity", 256)?,
         max_in_flight: args
             .usize_or("max-in-flight", server::DEFAULT_MAX_IN_FLIGHT)?,
+        qos,
         warmup: args
             .get("warmup")
             .map(|w| w.split(',').map(String::from).collect())
@@ -65,6 +80,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
     server::serve(&artifacts, opts, Arc::new(AtomicBool::new(false)))
+}
+
+/// Client-side: submit one generation request to a running server with
+/// an explicit QoS class, and print the reply's latency breakdown.  The
+/// conditioning vector is the same deterministic prompt embedding the
+/// local `generate` path uses; the router pads/truncates it to the
+/// model's width, so no artifacts are needed on the client.
+fn cmd_request(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7463");
+    let seed = args.u64_or("seed", 0)?;
+    let prompt_idx = args.u64_or("prompt", seed)?;
+    let cond_dim = args.usize_or("cond-dim", 64)?;
+    let unit = freqca::workload::prompt_unit(prompt_idx);
+    let request = Request {
+        id: prompt_idx,
+        model: args.str_or("model", "flux-sim"),
+        policy: args.str_or("policy", "freqca:n=7"),
+        priority: Priority::parse(&args.str_or("priority", "standard"))?,
+        seed,
+        n_steps: args.usize_or("steps", 50)?,
+        cond: freqca::workload::cond_vector(&unit, cond_dim),
+        ref_img: None,
+        return_latent: false,
+    };
+    let mut client = Client::connect(&addr)?;
+    let resp = client.generate(&request)?;
+    if !resp.ok {
+        return Err(anyhow!(
+            "request failed: {}",
+            resp.error.unwrap_or_else(|| "unknown error".into())
+        ));
+    }
+    println!(
+        "model={} policy={} priority={} steps full {} / cached {}",
+        request.model,
+        request.policy,
+        request.priority.name(),
+        resp.full_steps,
+        resp.cached_steps,
+    );
+    println!(
+        "queue {:.3}s  ttfs {:.3}s  latency {:.3}s  flops {:.3} G",
+        resp.queue_s,
+        resp.ttfs_s,
+        resp.latency_s,
+        resp.flops / 1e9
+    );
+    Ok(())
 }
 
 fn cmd_generate(args: &Args, edit: bool) -> Result<()> {

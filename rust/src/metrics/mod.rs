@@ -71,6 +71,11 @@ struct Inner {
     queue_wait: Histogram,
     /// Enqueue -> first denoising step completed.
     ttfs: Histogram,
+    /// Per-QoS-class histograms, keyed `"{metric}:{class}"` (e.g.
+    /// `"ttfs_s:interactive"`) — the engine records queue-wait, TTFS
+    /// and completion per class so SLO dashboards can tell whether the
+    /// scheduler's weighted quotas actually hold under load.
+    by_class: BTreeMap<String, Histogram>,
     counters: BTreeMap<String, u64>,
     /// Point-in-time values the scheduler tick publishes (in-flight
     /// session count, queued requests, ...).
@@ -101,6 +106,32 @@ impl Metrics {
 
     pub fn record_ttfs(&self, seconds: f64) {
         self.inner.lock().unwrap().ttfs.record(seconds);
+    }
+
+    /// Record one sample of a per-class latency metric (`metric` is the
+    /// series name, `class` the QoS class name).
+    pub fn record_class(&self, metric: &str, class: &str, seconds: f64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .by_class
+            .entry(format!("{metric}:{class}"))
+            .or_default()
+            .record(seconds);
+    }
+
+    /// Summary of one per-class series (`None` when never recorded).
+    pub fn class_summary(
+        &self,
+        metric: &str,
+        class: &str,
+    ) -> Option<stats::Summary> {
+        self.inner
+            .lock()
+            .unwrap()
+            .by_class
+            .get(&format!("{metric}:{class}"))
+            .map(Histogram::summary)
     }
 
     /// Publish a point-in-time value (overwrites the previous one).
@@ -171,6 +202,24 @@ impl Metrics {
                 .map(|(k, v)| (k.clone(), Json::num(*v)))
                 .collect(),
         );
+        let per_class = Json::Obj(
+            g.by_class
+                .iter()
+                .map(|(k, h)| {
+                    let s = h.summary();
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("n", Json::num(s.n as f64)),
+                            ("mean", Json::num(s.mean)),
+                            ("p50", Json::num(s.p50)),
+                            ("p90", Json::num(s.p90)),
+                            ("p99", Json::num(s.p99)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         Json::obj(vec![
             (
                 "request_latency_s",
@@ -210,6 +259,7 @@ impl Metrics {
                     ("p99", Json::num(ttfs.p99)),
                 ]),
             ),
+            ("per_class", per_class),
             ("counters", counters),
             ("gauges", gauges),
         ])
@@ -251,6 +301,40 @@ mod tests {
             Some(2)
         );
         assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn per_class_histograms_roundtrip() {
+        let m = Metrics::new();
+        m.record_class("ttfs_s", "interactive", 0.010);
+        m.record_class("ttfs_s", "interactive", 0.020);
+        m.record_class("ttfs_s", "batch", 1.5);
+        m.record_class("completion_s", "batch", 3.0);
+        let s = m.class_summary("ttfs_s", "interactive").unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.015).abs() < 1e-9);
+        assert!(m.class_summary("ttfs_s", "standard").is_none());
+        let j = m.to_json();
+        assert_eq!(
+            j.get("per_class")
+                .unwrap()
+                .get("ttfs_s:interactive")
+                .unwrap()
+                .get("n")
+                .unwrap()
+                .as_usize(),
+            Some(2)
+        );
+        assert_eq!(
+            j.get("per_class")
+                .unwrap()
+                .get("completion_s:batch")
+                .unwrap()
+                .get("n")
+                .unwrap()
+                .as_usize(),
+            Some(1)
+        );
     }
 
     #[test]

@@ -53,6 +53,24 @@ pub struct StepCtx<'a> {
     pub x_at_last_full: Option<&'a [f32]>,
 }
 
+/// Coarse device-cost class of one denoising step, knowable *ahead of
+/// execution* for deterministic (step-index-driven) schedules.  The QoS
+/// scheduler uses it to de-phase full-compute refreshes across
+/// concurrent sessions (`coordinator::scheduler`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// The full DiT forward runs.  Token-wise partial refreshes
+    /// (ToCa/DuCa) count as `Full`: on this dense substrate they run
+    /// the whole forward and scatter tokens, so their *device* cost is
+    /// a full pass regardless of how FLOPs are accounted.
+    Full,
+    /// Predictor-only step (cache hit): head + band predictor.
+    Cached,
+    /// Not knowable without the latent (adaptive, indicator-driven
+    /// policies); the scheduler treats these as exempt from de-phasing.
+    Unknown,
+}
+
 pub trait CachePolicy {
     /// Human-readable name used in the table rows.
     fn name(&self) -> String;
@@ -61,6 +79,18 @@ pub trait CachePolicy {
     /// (TeaCache's accumulator); the engine calls this exactly once per
     /// step in order.
     fn decide(&mut self, ctx: &StepCtx) -> Result<Action>;
+
+    /// Classify — without consuming the step or mutating any state —
+    /// the action `decide` would return at step `step` with `hist_len`
+    /// cached history entries.  Interval policies are deterministic in
+    /// `(step, hist_len)`, so this is pure lookahead; latent-driven
+    /// policies return [`StepKind::Unknown`].  Must agree with `decide`
+    /// whenever it returns `Full`/`Cached` (asserted by the peek
+    /// agreement tests and, end to end, by `integration_sampler`).
+    fn peek(&self, step: usize, n_steps: usize, hist_len: usize) -> StepKind {
+        let _ = (step, n_steps, hist_len);
+        StepKind::Unknown
+    }
 
     /// Reset internal state between requests.
     fn reset(&mut self) {}
@@ -138,6 +168,15 @@ impl CachePolicy for FreqCa {
             hw: order_weights(ctx.hist_s, ctx.s, self.high_order, self.k)?,
         }))
     }
+
+    fn peek(&self, step: usize, n_steps: usize, hist_len: usize) -> StepKind {
+        let need = self.high_order.max(self.low_order) + 1;
+        if step % self.n == 0 || hist_len < need || step + 1 == n_steps {
+            StepKind::Full
+        } else {
+            StepKind::Cached
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -172,6 +211,14 @@ impl CachePolicy for Fora {
             hw: vec![0.0; self.k],
         }))
     }
+
+    fn peek(&self, step: usize, n_steps: usize, hist_len: usize) -> StepKind {
+        if step % self.n == 0 || hist_len == 0 || step + 1 == n_steps {
+            StepKind::Full
+        } else {
+            StepKind::Cached
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -205,6 +252,15 @@ impl CachePolicy for TaylorSeer {
             lw: order_weights(ctx.hist_s, ctx.s, self.order, self.k)?,
             hw: vec![0.0; self.k],
         }))
+    }
+
+    fn peek(&self, step: usize, n_steps: usize, hist_len: usize) -> StepKind {
+        if step % self.n == 0 || hist_len < self.order + 1 || step + 1 == n_steps
+        {
+            StepKind::Full
+        } else {
+            StepKind::Cached
+        }
     }
 }
 
@@ -258,6 +314,16 @@ impl CachePolicy for TeaCache {
         }))
     }
 
+    fn peek(&self, step: usize, n_steps: usize, hist_len: usize) -> StepKind {
+        // The warm-up and final-step rules hold regardless of drift;
+        // everything in between depends on the latent.
+        if hist_len == 0 || step + 1 == n_steps {
+            StepKind::Full
+        } else {
+            StepKind::Unknown
+        }
+    }
+
     fn reset(&mut self) {
         self.acc = 0.0;
     }
@@ -304,6 +370,12 @@ impl CachePolicy for Toca {
             },
         })
     }
+
+    fn peek(&self, _step: usize, _n_steps: usize, _hist_len: usize) -> StepKind {
+        // Every ToCa step runs the full forward on this substrate
+        // (partial refresh = full pass + token scatter).
+        StepKind::Full
+    }
 }
 
 /// DuCa-like dual caching (Zou et al., 2024): alternates ToCa-style
@@ -342,6 +414,18 @@ impl CachePolicy for Duca {
             })
         } else {
             Ok(Action::Predict(plan))
+        }
+    }
+
+    fn peek(&self, step: usize, n_steps: usize, hist_len: usize) -> StepKind {
+        if step % self.n == 0
+            || hist_len == 0
+            || step + 1 == n_steps
+            || step % 2 == 1
+        {
+            StepKind::Full // interval/warm-up/final full or partial step
+        } else {
+            StepKind::Cached // predictor-only step of the alternation
         }
     }
 }
@@ -409,6 +493,15 @@ impl CachePolicy for FreqCaAdaptive {
         }))
     }
 
+    fn peek(&self, step: usize, n_steps: usize, hist_len: usize) -> StepKind {
+        let need = self.high_order.max(self.low_order) + 1;
+        if hist_len < need || step + 1 == n_steps {
+            StepKind::Full
+        } else {
+            StepKind::Unknown
+        }
+    }
+
     fn reset(&mut self) {
         self.acc = 0.0;
     }
@@ -428,6 +521,10 @@ impl CachePolicy for NoCache {
 
     fn decide(&mut self, _ctx: &StepCtx) -> Result<Action> {
         Ok(Action::Full)
+    }
+
+    fn peek(&self, _step: usize, _n_steps: usize, _hist_len: usize) -> StepKind {
+        StepKind::Full
     }
 }
 
@@ -634,6 +731,61 @@ mod tests {
     fn parses_adaptive() {
         let p = parse_policy("freqca-a:l=0.8,c=3", Decomp::Fft, 8, 3).unwrap();
         assert_eq!(p.name(), "FreqCa-A(l=0.8,fft,c=3)");
+    }
+
+    /// Replay a policy over a simulated schedule, asserting `peek`
+    /// agrees with the class of the action `decide` then returns.
+    /// History-length dynamics mirror the sampler: a full forward (and
+    /// only a full forward) appends a cache entry, capped at `k`.
+    fn assert_peek_agrees(p: &mut dyn CachePolicy, n_steps: usize, k: usize) {
+        let x = [0.1f32; 4];
+        let mut hist: Vec<f64> = Vec::new();
+        for step in 0..n_steps {
+            let kind = p.peek(step, n_steps, hist.len());
+            let s = -(step as f64) / n_steps as f64;
+            let c = StepCtx {
+                step,
+                n_steps,
+                s,
+                hist_s: &hist,
+                x: &x,
+                x_at_last_full: None,
+            };
+            let action = p.decide(&c).unwrap();
+            match (&action, kind) {
+                (Action::Full, StepKind::Full)
+                | (Action::PartialRefresh { .. }, StepKind::Full)
+                | (Action::Predict(_), StepKind::Cached) => {}
+                (_, StepKind::Unknown) => {}
+                (a, k) => panic!("step {step}: peek {k:?} but decide {a:?}"),
+            }
+            if matches!(action, Action::Full) {
+                if hist.len() == k {
+                    hist.remove(0);
+                }
+                hist.push(s);
+            }
+        }
+    }
+
+    #[test]
+    fn peek_agrees_with_decide_for_deterministic_policies() {
+        let k = 3;
+        let spec = BandSpec::new(Decomp::Dct, 2);
+        assert_peek_agrees(&mut FreqCa::new(7, spec, k), 50, k);
+        assert_peek_agrees(&mut FreqCa::new(3, spec, k), 8, k);
+        assert_peek_agrees(&mut Fora { n: 3, k }, 50, k);
+        assert_peek_agrees(&mut TaylorSeer { n: 6, order: 2, k }, 50, k);
+        assert_peek_agrees(&mut Toca { n: 4, ratio: 0.75, k }, 50, k);
+        assert_peek_agrees(&mut Duca { n: 4, ratio: 0.8, k }, 50, k);
+        assert_peek_agrees(&mut NoCache, 50, k);
+        // Adaptive policies stay Unknown mid-schedule but still commit
+        // to the warm-up and final-step Full rules.
+        assert_peek_agrees(&mut TeaCache::new(0.5, k), 50, k);
+        assert_peek_agrees(&mut FreqCaAdaptive::new(0.5, spec, k), 50, k);
+        assert_eq!(TeaCache::new(0.5, k).peek(0, 50, 0), StepKind::Full);
+        assert_eq!(TeaCache::new(0.5, k).peek(5, 50, 2), StepKind::Unknown);
+        assert_eq!(TeaCache::new(0.5, k).peek(49, 50, 2), StepKind::Full);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::cache::CrfCache;
 use crate::freq::{band_mask, BandSpec, Decomp};
 use crate::model::{flops, ModelConfig};
-use crate::policy::{Action, CachePolicy, PredictPlan, StepCtx};
+use crate::policy::{Action, CachePolicy, PredictPlan, StepCtx, StepKind};
 use crate::runtime::Runtime;
 use crate::util::{Rng, Tensor};
 
@@ -265,6 +265,20 @@ impl<'p> SamplerSession<'p> {
         self.busy_s
     }
 
+    /// Cache phase: the device-cost class of the *next* step, or `None`
+    /// once the session is done.  Pure lookahead via
+    /// [`CachePolicy::peek`] — deterministic policies know their
+    /// full/cached schedule from the step index and history depth, so
+    /// this never executes anything and never perturbs policy state.
+    /// The QoS scheduler uses it to de-phase full-compute refreshes of
+    /// concurrent sessions (`coordinator::scheduler`).
+    pub fn next_step_kind(&self) -> Option<StepKind> {
+        if self.is_done() {
+            return None;
+        }
+        Some(self.policy.peek(self.step_idx, self.n_steps, self.cache.len()))
+    }
+
     /// Execute exactly one denoising step (the scheduler's unit of work).
     pub fn step(&mut self, rt: &Runtime) -> Result<StepOutcome> {
         if self.is_done() {
@@ -480,6 +494,9 @@ impl CachePolicy for PolicyRef<'_> {
     }
     fn decide(&mut self, ctx: &StepCtx) -> Result<Action> {
         self.0.decide(ctx)
+    }
+    fn peek(&self, step: usize, n_steps: usize, hist_len: usize) -> StepKind {
+        self.0.peek(step, n_steps, hist_len)
     }
     fn reset(&mut self) {
         self.0.reset()

@@ -28,6 +28,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::engine::{Engine, WorkItem};
+use crate::coordinator::scheduler::QosConfig;
 use crate::coordinator::{Request, Response};
 use crate::metrics::Metrics;
 use crate::util::Json;
@@ -41,6 +42,9 @@ pub struct ServeOpts {
     /// Cap on concurrently stepping sessions; ready batches queue (and
     /// eventually shed) past it.  0 = use the default.
     pub max_in_flight: usize,
+    /// QoS policy: per-class step quotas, anti-starvation aging bound,
+    /// refresh de-phasing budget (see `coordinator::scheduler`).
+    pub qos: QosConfig,
     /// Models to warm up (compile) before accepting traffic.
     pub warmup: Vec<String>,
 }
@@ -57,6 +61,7 @@ impl Default for ServeOpts {
             batch_wait_ms: 5,
             queue_capacity: 256,
             max_in_flight: DEFAULT_MAX_IN_FLIGHT,
+            qos: QosConfig::default(),
             warmup: vec![],
         }
     }
@@ -75,6 +80,7 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         } else {
             opts.max_in_flight
         },
+        opts.qos,
         metrics.clone(),
     )?;
     for m in &opts.warmup {

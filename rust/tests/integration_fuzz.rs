@@ -5,7 +5,7 @@
 use std::time::Duration;
 
 use freqca::coordinator::router::{RouteResult, Router};
-use freqca::coordinator::Request;
+use freqca::coordinator::{Priority, Request};
 use freqca::model::ModelConfig;
 use freqca::util::propcheck::{check, Config};
 use freqca::util::{Json, Rng};
@@ -38,6 +38,7 @@ fn router_never_panics_on_random_requests() {
                 policy: ["freqca:n=7", "bogus", "fora:n=0", ""]
                     [rng.below(4)]
                 .to_string(),
+                priority: Priority::ALL[rng.below(3)],
                 seed: rng.next_u64(),
                 n_steps: rng.below(size * 30),
                 cond: (0..rng.below(64)).map(|_| rng.normal()).collect(),
@@ -68,8 +69,11 @@ fn router_never_panics_on_random_requests() {
                     }
                     Ok(())
                 }
-                // every rejection path is acceptable; panics are not
-                RouteResult::Shed
+                // every rejection/eviction path is acceptable; panics
+                // are not (an eviction cannot happen here — each case
+                // uses a fresh router — but totality is the property)
+                RouteResult::QueuedEvicting(_)
+                | RouteResult::Shed
                 | RouteResult::UnknownModel
                 | RouteResult::Invalid(_) => Ok(()),
             }
@@ -83,6 +87,7 @@ fn json_parser_never_panics_on_mutated_requests() {
         id: 1,
         model: "tiny".into(),
         policy: "freqca:n=7".into(),
+        priority: Priority::Standard,
         seed: 2,
         n_steps: 10,
         cond: vec![0.5; 4],

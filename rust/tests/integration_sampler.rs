@@ -5,7 +5,7 @@ use std::rc::Rc;
 
 use freqca::freq::Decomp;
 use freqca::model::{weights, ModelConfig};
-use freqca::policy::{self, CachePolicy};
+use freqca::policy::{self, CachePolicy, StepKind};
 use freqca::runtime::Runtime;
 use freqca::sampler::{
     generate, generate_batch, BatchJob, JobSpec, SampleOpts, SamplerSession,
@@ -241,8 +241,21 @@ fn session_steps_match_generate_batch() {
     let mut executed = 0;
     loop {
         assert_eq!(session.step_index(), executed);
+        // The QoS scheduler's lookahead contract: the advertised cache
+        // phase matches what the step then actually does (freqca is a
+        // deterministic schedule, so `Unknown` would be a bug here).
+        let predicted = session.next_step_kind().expect("session not done");
         match session.step(&ctx.rt).unwrap() {
             StepOutcome::Ran { record, done } => {
+                let expected = match record.action {
+                    StepAction::Full | StepAction::Partial => StepKind::Full,
+                    StepAction::Cached => StepKind::Cached,
+                };
+                assert_eq!(
+                    predicted, expected,
+                    "next_step_kind lied at step {}",
+                    record.step
+                );
                 executed += 1;
                 assert_eq!(record.step, executed - 1);
                 assert_eq!(done, executed == steps);
@@ -254,6 +267,7 @@ fn session_steps_match_generate_batch() {
         }
     }
     assert!(session.is_done());
+    assert_eq!(session.next_step_kind(), None);
     // Stepping a finished session is a clean no-op.
     assert!(matches!(
         session.step(&ctx.rt).unwrap(),

@@ -1,10 +1,16 @@
-//! End-to-end server tests: TCP front-end -> engine -> PJRT -> response.
+//! End-to-end server tests: TCP front-end -> engine -> PJRT -> response,
+//! plus engine-level QoS preemption coverage (parking-lot drain and
+//! park/resume parity) that needs the real runtime but no TCP.
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use freqca::coordinator::Request;
+use freqca::coordinator::engine::{Engine, WorkItem};
+use freqca::coordinator::scheduler::QosConfig;
+use freqca::coordinator::{Priority, Request, Response};
+use freqca::metrics::Metrics;
 use freqca::server::{client::Client, serve, ServeOpts};
 
 mod common;
@@ -41,6 +47,7 @@ fn req(id: u64, model: &str, policy: &str, steps: usize) -> Request {
         id,
         model: model.into(),
         policy: policy.into(),
+        priority: Priority::Standard,
         seed: id,
         n_steps: steps,
         cond: vec![0.1; 12],
@@ -87,6 +94,13 @@ fn server_end_to_end() {
     let bad_edit = c.generate(&req(2, "kontext-sim", "baseline", 4)).unwrap();
     assert!(!bad_edit.ok);
 
+    // A labelled request flows through the wire format and shows up in
+    // the per-class histograms.
+    let mut inter = req(77, "tiny", "freqca:n=3", 8);
+    inter.priority = Priority::Interactive;
+    let resp = c.generate(&inter).unwrap();
+    assert!(resp.ok, "error: {:?}", resp.error);
+
     // Metrics reflect the completed work.
     let m = c.metrics().unwrap();
     let completed = m
@@ -94,7 +108,150 @@ fn server_end_to_end() {
         .and_then(|c| c.get("requests_completed"))
         .and_then(|v| v.as_usize())
         .unwrap_or(0);
-    assert!(completed >= 2, "metrics: {m}");
+    assert!(completed >= 3, "metrics: {m}");
+    let inter_completions = m
+        .get("per_class")
+        .and_then(|p| p.get("completion_s:interactive"))
+        .and_then(|s| s.get("n"))
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    assert!(inter_completions >= 1, "per-class metrics: {m}");
 
     stop.store(true, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Engine-level QoS preemption coverage (real runtime, no TCP).
+// ---------------------------------------------------------------------
+
+/// Engine with one in-flight slot (so any higher-class arrival must
+/// preempt) and zero batch wait (batches flush immediately).
+fn mini_engine(dir: &str) -> Engine {
+    Engine::new(
+        dir,
+        Duration::ZERO,
+        16,
+        1,
+        QosConfig::default(),
+        Arc::new(Metrics::new()),
+    )
+    .expect("engine boots from artifacts")
+}
+
+/// Submit one request; returns the receiver for its eventual response.
+fn submit(engine: &mut Engine, request: Request) -> Receiver<Response> {
+    let (tx, rx) = channel();
+    engine.submit(WorkItem { request, reply: tx, enqueued: Instant::now() });
+    rx
+}
+
+fn class_req(
+    id: u64,
+    priority: Priority,
+    steps: usize,
+    seed: u64,
+) -> Request {
+    Request {
+        id,
+        model: "tiny".into(),
+        policy: "freqca:n=3".into(),
+        priority,
+        seed,
+        n_steps: steps,
+        cond: vec![0.1; 12],
+        ref_img: None,
+        return_latent: true,
+    }
+}
+
+/// Drive ticks until `rx` yields a response (or the cap trips).
+fn run_until_reply(engine: &mut Engine, rx: &Receiver<Response>) -> Response {
+    for _ in 0..100_000 {
+        engine.tick();
+        if let Ok(resp) = rx.try_recv() {
+            return resp;
+        }
+    }
+    panic!("engine never replied");
+}
+
+/// An interactive arrival at the in-flight cap parks the batch-class
+/// session mid-step; the parked session resumes when capacity frees and
+/// its latent is **bit-identical** to an uninterrupted run of the same
+/// request (the park/resume parity acceptance criterion).
+#[test]
+fn preempted_session_resumes_with_identical_latent() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+
+    // Reference: the same batch-class request, uncontended.
+    let mut engine = mini_engine(dir);
+    let rx = submit(&mut engine, class_req(1, Priority::Batch, 12, 7));
+    let uninterrupted = run_until_reply(&mut engine, &rx);
+    assert!(uninterrupted.ok, "error: {:?}", uninterrupted.error);
+    assert_eq!(engine.metrics.counter("sessions_parked"), 0);
+
+    // Preempted run: batch request starts, makes some progress, then an
+    // interactive request forces it into the parking lot.
+    let mut engine = mini_engine(dir);
+    let rx_batch = submit(&mut engine, class_req(1, Priority::Batch, 12, 7));
+    for _ in 0..3 {
+        assert_eq!(engine.tick(), 1, "batch session should be stepping");
+    }
+    let rx_inter = submit(&mut engine, class_req(2, Priority::Interactive, 6, 9));
+    engine.tick();
+    assert_eq!(engine.parked(), 1, "batch session should be parked");
+    assert_eq!(engine.in_flight(), 1);
+    assert_eq!(engine.metrics.counter("sessions_parked"), 1);
+
+    let inter = run_until_reply(&mut engine, &rx_inter);
+    assert!(inter.ok, "error: {:?}", inter.error);
+    let batch = run_until_reply(&mut engine, &rx_batch);
+    assert!(batch.ok, "error: {:?}", batch.error);
+    assert_eq!(engine.metrics.counter("sessions_resumed"), 1);
+    assert_eq!(engine.parked(), 0);
+
+    assert_eq!(
+        uninterrupted.latent.unwrap(),
+        batch.latent.unwrap(),
+        "park/resume must not perturb the latent"
+    );
+    assert_eq!(uninterrupted.full_steps, batch.full_steps);
+    assert_eq!(uninterrupted.cached_steps, batch.cached_steps);
+}
+
+/// Graceful-drain regression (satellite): when the work channel closes
+/// while a session sits in the parking lot, `serve_loop` must resume
+/// and finish it — not just the in-flight set — before returning, and
+/// every waiter still gets its reply.
+#[test]
+fn shutdown_drains_parked_sessions_to_completion() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let mut engine = mini_engine(dir);
+    let rx_batch = submit(&mut engine, class_req(1, Priority::Batch, 10, 3));
+    for _ in 0..2 {
+        engine.tick();
+    }
+    let rx_inter = submit(&mut engine, class_req(2, Priority::Interactive, 6, 4));
+    engine.tick();
+    assert_eq!(engine.parked(), 1, "batch session should be parked");
+
+    // Close the channel with one session parked and one in flight:
+    // serve_loop must drain both to completion before returning.
+    let (tx, rx) = channel::<WorkItem>();
+    drop(tx);
+    engine.serve_loop(rx);
+
+    let inter = rx_inter.try_recv().expect("interactive reply after drain");
+    assert!(inter.ok, "error: {:?}", inter.error);
+    let batch = rx_batch.try_recv().expect("parked batch reply after drain");
+    assert!(batch.ok, "error: {:?}", batch.error);
+    assert_eq!(engine.parked(), 0);
+    assert_eq!(engine.in_flight(), 0);
+    assert_eq!(engine.metrics.counter("requests_completed"), 2);
 }
