@@ -1,0 +1,33 @@
+# FreqCa build entry points.
+#
+#   make artifacts              train + AOT-export every model config
+#   make artifacts CONFIG=tiny  just the test-scale model (what CI uses)
+#   make test                   tier-1: cargo build --release && test
+#   make bench                  coordinator bench -> results/*.json
+#   make check-bench            gate bench results vs committed baseline
+#
+# `artifacts` is the build-time python pass (L1 kernels + L2 model ->
+# HLO text + weights + parity fixtures under artifacts/); the Rust
+# serving side never imports python at request time.  The AOT export
+# skips files that already exist, so re-running is cheap; FORCE=--force
+# re-lowers everything.
+
+PY ?= python3
+CONFIG ?= all
+FORCE ?=
+
+.PHONY: artifacts test bench check-bench
+
+artifacts:
+	cd python && $(PY) -m compile.train --config $(CONFIG) --out ../artifacts
+	cd python && $(PY) -m compile.aot --config $(CONFIG) --out ../artifacts $(FORCE)
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --offline --bench coordinator
+
+check-bench:
+	$(PY) scripts/check_bench.py results/bench_coordinator.json \
+		benches/baseline_coordinator.json

@@ -7,9 +7,12 @@
 //!
 //! Output: a table on stdout, `results/bench_coordinator.csv`, and
 //! `results/bench_coordinator.json` with time-to-first-step and
-//! p50/p95/p99 completion latency per scheduling discipline and per QoS
-//! class, so future PRs have a tail-latency trajectory to compare
-//! against.
+//! p50/p95/p99 completion latency per scheduling discipline, per QoS
+//! class, and per pool size (the `multi_worker` key: the real placement
+//! layer + per-worker schedulers sharing one de-phasing ledger), so
+//! future PRs have a tail-latency trajectory to compare against.  CI
+//! runs this bench and gates on the interactive TTFS tail against
+//! `benches/baseline_coordinator.json` (scripts/check_bench.py).
 //!
 //! The scheduling comparisons replay the engine's actual policy
 //! (`coordinator::scheduler::Scheduler`) in *virtual time* — including
@@ -25,7 +28,10 @@ use std::time::Duration;
 
 use freqca::benchkit::{bench, BenchOpts, Table};
 use freqca::coordinator::batcher::Batcher;
-use freqca::coordinator::scheduler::{QosConfig, SchedState, Scheduler, StepKind};
+use freqca::coordinator::placement::{Placement, WorkerLoad};
+use freqca::coordinator::scheduler::{
+    DephaseLedger, QosConfig, SchedState, Scheduler, StepKind,
+};
 use freqca::coordinator::{Priority, Request};
 use freqca::freq::{BandSpec, Decomp};
 use freqca::policy::{self, CachePolicy, FreqCa};
@@ -37,13 +43,11 @@ use freqca::util::stats::percentile;
 use freqca::util::Json;
 use freqca::workload;
 
-/// Locate the AOT artifact directory.  `cargo bench` runs with cwd =
-/// the package root (`rust/`) while artifacts live at the repo root, so
-/// probe both the cwd-relative and the manifest-relative path.
+/// Locate the AOT artifact directory (shared resolution:
+/// `FREQCA_ARTIFACTS_DIR` override → cwd-relative → manifest-relative;
+/// this bench's sentinel is the flux-sim model it drives).
 fn artifact_dir() -> Option<&'static str> {
-    ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")]
-        .into_iter()
-        .find(|d| std::path::Path::new(d).join("meta_flux-sim.json").exists())
+    freqca::util::artifact_dir_with("meta_flux-sim.json")
 }
 
 /// Repo-root results directory, regardless of invocation cwd (matches
@@ -150,6 +154,224 @@ fn qos_workload() -> Vec<SimJob> {
         });
     }
     jobs
+}
+
+/// The multi-worker fixture: a few long standard jobs plus a stream of
+/// short ones — enough independent work that adding workers should cut
+/// the short-job tail near-linearly.  Jobs map onto
+/// `POOL_KEY_STREAMS` distinct batch keys so the placement layer has
+/// real affinity streams to spread (one key == one model/policy
+/// stream, as in `Request::batch_key`).
+fn pool_workload() -> Vec<SimJob> {
+    let step = 0.010;
+    let mut jobs = Vec::new();
+    for i in 0..4 {
+        jobs.push(SimJob {
+            arrive_s: i as f64 * 0.002,
+            n_steps: 50,
+            step_cost_s: step,
+            class: Priority::Standard,
+            short: false,
+        });
+    }
+    for i in 0..24 {
+        jobs.push(SimJob {
+            arrive_s: 0.020 + i as f64 * 0.015,
+            n_steps: 8,
+            step_cost_s: step,
+            class: Priority::Standard,
+            short: true,
+        });
+    }
+    jobs
+}
+
+/// Distinct batch-key streams the pool fixture spreads over.
+const POOL_KEY_STREAMS: usize = 6;
+
+/// Aggregates of one simulated pool run.
+struct PoolSim {
+    outcomes: Vec<SimOutcome>,
+    /// Non-forced full steps issued while the *shared* trailing window
+    /// was over budget — must be zero pool-wide.
+    dephase_violations: usize,
+    dephased: usize,
+    forced_full: usize,
+    /// Virtual time at which the last job completed.
+    makespan_s: f64,
+}
+
+/// N-worker pool in virtual time: arrivals are placed by the engine's
+/// **real** `Placement` (batch-key affinity + class-aware least load)
+/// onto per-worker FIFO queues; each worker admits up to `cap`
+/// sessions and steps them with its own **real** `Scheduler`, and all
+/// schedulers share one `DephaseLedger` — so the refresh-concurrency
+/// budget is pool-global, exactly as in `WorkerPool`.  Each placement
+/// decision happens at the pool-wide "now" (the minimum worker clock,
+/// which is the clock of the worker acting), mirroring the dispatcher
+/// placing requests as they arrive.
+fn simulate_pool(
+    jobs: &[SimJob],
+    cfg: QosConfig,
+    n_workers: usize,
+    cap: usize,
+    phase_policy: Option<&FreqCa>,
+) -> PoolSim {
+    let mut arrival_order: Vec<usize> = (0..jobs.len()).collect();
+    arrival_order.sort_by(|a, b| {
+        jobs[*a]
+            .arrive_s
+            .partial_cmp(&jobs[*b].arrive_s)
+            .unwrap()
+            .then(a.cmp(b))
+    });
+    // Deadline surrogate = arrival rank, as the engine uses enqueue
+    // order of the oldest batch member.
+    let mut rank = vec![0usize; jobs.len()];
+    for (r, &i) in arrival_order.iter().enumerate() {
+        rank[i] = r;
+    }
+
+    let ledger = DephaseLedger::from_config(&cfg);
+    let mut scheds: Vec<Scheduler> = (0..n_workers)
+        .map(|_| Scheduler::with_ledger(cfg, ledger.clone()))
+        .collect();
+    let mut placement = Placement::new(n_workers);
+    let mut clock = vec![0.0f64; n_workers];
+    let mut queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_workers];
+    let mut in_flight: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+    let mut state: Vec<Option<SchedState<usize>>> = vec![None; jobs.len()];
+    let mut remaining: Vec<usize> = jobs.iter().map(|j| j.n_steps).collect();
+    let mut hist = vec![0usize; jobs.len()];
+    let mut ttfs = vec![None; jobs.len()];
+    let mut done: Vec<Option<f64>> = vec![None; jobs.len()];
+    let mut next_unplaced = 0usize;
+    let mut violations = 0usize;
+    let mut dephased = 0usize;
+    let mut forced_full = 0usize;
+    let mut makespan = 0.0f64;
+
+    loop {
+        let more_arrivals = next_unplaced < arrival_order.len();
+        // The worker acting now: minimum clock among workers with local
+        // work (any worker may also wake to place future arrivals).
+        let Some(w) = (0..n_workers)
+            .filter(|w| {
+                more_arrivals
+                    || !queue[*w].is_empty()
+                    || !in_flight[*w].is_empty()
+            })
+            .min_by(|a, b| clock[*a].partial_cmp(&clock[*b]).unwrap())
+        else {
+            break;
+        };
+        // Place everything that has arrived by the pool-wide "now".
+        while next_unplaced < arrival_order.len() {
+            let j = arrival_order[next_unplaced];
+            if jobs[j].arrive_s > clock[w] {
+                break;
+            }
+            let loads: Vec<WorkerLoad> = (0..n_workers)
+                .map(|v| {
+                    let mut l = WorkerLoad {
+                        max_in_flight: cap,
+                        max_parked: cap,
+                        ..WorkerLoad::default()
+                    };
+                    for &i in &in_flight[v] {
+                        l.in_flight_by_class[jobs[i].class.slot()] += 1;
+                    }
+                    for &i in &queue[v] {
+                        l.queued_by_class[jobs[i].class.slot()] += 1;
+                    }
+                    l
+                })
+                .collect();
+            let key = format!("m{}", j % POOL_KEY_STREAMS);
+            let target = placement.place(&key, jobs[j].class, &loads);
+            queue[target].push_back(j);
+            next_unplaced += 1;
+        }
+        // Admit from this worker's queue into its in-flight set.
+        while in_flight[w].len() < cap {
+            let Some(&j) = queue[w].front() else { break };
+            queue[w].pop_front();
+            state[j] = Some(scheds[w].admit(jobs[j].class, rank[j]));
+            in_flight[w].push(j);
+        }
+        if in_flight[w].is_empty() {
+            // Idle: jump to the next arrival (strictly ahead — anything
+            // at or before this clock was placed above).  Workers with
+            // neither local work nor pending arrivals fall out of the
+            // candidate filter.
+            if let Some(&j) = arrival_order.get(next_unplaced) {
+                clock[w] = clock[w].max(jobs[j].arrive_s);
+            }
+            continue;
+        }
+        // One step of this worker, by the real scheduler.
+        let live = in_flight[w].clone();
+        let mut states: Vec<SchedState<usize>> = live
+            .iter()
+            .map(|&i| {
+                let mut st = state[i].unwrap();
+                st.next_kind = match phase_policy {
+                    Some(p) => p.peek(
+                        jobs[i].n_steps - remaining[i],
+                        jobs[i].n_steps,
+                        hist[i],
+                    ),
+                    None => StepKind::Unknown,
+                };
+                st
+            })
+            .collect();
+        // Shared-budget audit: peek the pool-wide window right before
+        // the pick, exactly at the global tick the pick will issue.
+        let over_budget = ledger.over_budget();
+        let pick = scheds[w].pick(&mut states).unwrap();
+        for (vi, &i) in live.iter().enumerate() {
+            state[i] = Some(states[vi]);
+        }
+        let i = live[pick.index];
+        if pick.kind == StepKind::Full {
+            if over_budget && !pick.forced_full {
+                violations += 1;
+            }
+            hist[i] = (hist[i] + 1).min(3);
+        }
+        if pick.dephased {
+            dephased += 1;
+        }
+        if pick.forced_full {
+            forced_full += 1;
+        }
+        clock[w] += jobs[i].step_cost_s;
+        remaining[i] -= 1;
+        if ttfs[i].is_none() {
+            ttfs[i] = Some(clock[w] - jobs[i].arrive_s);
+        }
+        if remaining[i] == 0 {
+            done[i] = Some(clock[w] - jobs[i].arrive_s);
+            makespan = makespan.max(clock[w]);
+            state[i] = None;
+            in_flight[w].retain(|&x| x != i);
+        }
+    }
+    PoolSim {
+        outcomes: (0..jobs.len())
+            .map(|i| SimOutcome {
+                completion_s: done[i].unwrap(),
+                ttfs_s: ttfs[i].unwrap(),
+                class: jobs[i].class,
+                short: jobs[i].short,
+            })
+            .collect(),
+        dephase_violations: violations,
+        dephased,
+        forced_full,
+        makespan_s: makespan,
+    }
 }
 
 /// Run-to-completion FIFO: the pre-PR-1 engine.  Each job holds the
@@ -595,6 +817,114 @@ fn main() -> anyhow::Result<()> {
         ),
     ]);
 
+    // --- multi-worker pool: the same engine policy fanned out over N
+    // workers through the real placement layer, every scheduler sharing
+    // ONE de-phasing ledger.  Acceptance: the short-job completion tail
+    // improves monotonically 1 -> 2 -> 4 workers, total work scales
+    // near-linearly, and the pool-wide refresh budget is never exceeded
+    // unforced.
+    let pjobs = pool_workload();
+    let pool_sizes = [1usize, 2, 4];
+    let mut pool_entries: Vec<(String, Json)> = vec![(
+        "config".to_string(),
+        Json::obj(vec![
+            ("cap_per_worker", Json::num(DEFAULT_MAX_IN_FLIGHT as f64)),
+            ("key_streams", Json::num(POOL_KEY_STREAMS as f64)),
+            (
+                "max_full_per_window",
+                Json::num(qcfg.max_full_per_window as f64),
+            ),
+            ("dephase_window", Json::num(qcfg.dephase_window as f64)),
+        ]),
+    )];
+    let mut pool_p95 = Vec::new();
+    let mut pool_makespan = Vec::new();
+    println!(
+        "\nmulti-worker pool (4 long x50 + 24 short x8 steps, \
+         freqca:n=5 phases, shared de-phase ledger):"
+    );
+    for &n in &pool_sizes {
+        let sim = simulate_pool(
+            &pjobs,
+            QosConfig::default(),
+            n,
+            DEFAULT_MAX_IN_FLIGHT,
+            Some(&phase),
+        );
+        let short_p95 = p95(&sim.outcomes, &is_short, completion);
+        let short_ttfs = p95(&sim.outcomes, &is_short, ttfs_of);
+        println!(
+            "  {n} worker(s): short-job completion p95 {:.1} ms, \
+             TTFS p95 {:.1} ms, makespan {:.1} ms \
+             ({} deferred / {} forced / {} violations)",
+            short_p95 * 1e3,
+            short_ttfs * 1e3,
+            sim.makespan_s * 1e3,
+            sim.dephased,
+            sim.forced_full,
+            sim.dephase_violations,
+        );
+        table.row(vec![
+            format!("pool short-job p95 ({n} worker(s))"),
+            format!("{:.2}", short_p95 * 1e3),
+            format!("{:.2}", short_p95 * 1e3),
+            format!("makespan {:.0} ms", sim.makespan_s * 1e3),
+        ]);
+        assert_eq!(
+            sim.dephase_violations, 0,
+            "{n}-worker pool exceeded the shared refresh budget unforced"
+        );
+        pool_entries.push((
+            format!("workers_{n}"),
+            Json::obj(vec![
+                ("all", latency_json(&sim.outcomes, &|_| true)),
+                ("short_jobs", latency_json(&sim.outcomes, &is_short)),
+                ("makespan_s", Json::num(sim.makespan_s)),
+                (
+                    "dephasing",
+                    Json::obj(vec![
+                        ("deferred", Json::num(sim.dephased as f64)),
+                        ("forced_full", Json::num(sim.forced_full as f64)),
+                        (
+                            "violations",
+                            Json::num(sim.dephase_violations as f64),
+                        ),
+                    ]),
+                ),
+            ]),
+        ));
+        pool_p95.push(short_p95);
+        pool_makespan.push(sim.makespan_s);
+    }
+    // Acceptance: monotone tail win and near-linear work scaling.
+    for i in 1..pool_sizes.len() {
+        assert!(
+            pool_p95[i] < pool_p95[i - 1],
+            "short-job p95 must improve monotonically with workers \
+             ({} workers: {}, {} workers: {})",
+            pool_sizes[i - 1],
+            pool_p95[i - 1],
+            pool_sizes[i],
+            pool_p95[i],
+        );
+    }
+    assert!(
+        pool_makespan[2] < pool_makespan[0] / 2.0,
+        "4 workers must at least halve the 1-worker makespan \
+         ({} vs {})",
+        pool_makespan[2],
+        pool_makespan[0],
+    );
+    pool_entries.push((
+        "short_p95_speedup_1_to_4".to_string(),
+        Json::num(pool_p95[0] / pool_p95[2]),
+    ));
+    pool_entries.push((
+        "makespan_speedup_1_to_4".to_string(),
+        Json::num(pool_makespan[0] / pool_makespan[2]),
+    ));
+    let multi_worker_json = Json::Obj(pool_entries);
+
     // --- batched vs sequential generation (needs AOT artifacts).
     if let Some(dir) = artifact_dir() {
         let rt = Runtime::new(dir)?;
@@ -704,8 +1034,12 @@ fn main() -> anyhow::Result<()> {
     let json_path = format!("{results}/bench_coordinator.json");
     std::fs::write(
         &json_path,
-        Json::obj(vec![("scheduling", sched_json), ("qos", qos_json)])
-            .to_string(),
+        Json::obj(vec![
+            ("scheduling", sched_json),
+            ("qos", qos_json),
+            ("multi_worker", multi_worker_json),
+        ])
+        .to_string(),
     )?;
     println!("wrote {json_path}");
     Ok(())

@@ -88,7 +88,7 @@ freqca — FreqCa diffusion-serving coordinator
 USAGE:
   freqca serve    [--addr 127.0.0.1:7463] [--artifacts DIR] [--wait-ms 5]
                   [--capacity 256] [--max-in-flight 8] [--warmup MODEL,...]
-                  [--qos-weights 8,4,1] [--aging-bound 64]
+                  [--workers 0] [--qos-weights 8,4,1] [--aging-bound 64]
                   [--refresh-concurrency 2] [--dephase-window 8]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
@@ -108,7 +108,11 @@ Policies: freqca:n=7[,low=0,o=2,c=2,d=dct|fft|none]  freqca-a:l=0.8
 Priorities (QoS class of a served request): interactive | standard | batch
   serve QoS knobs: --qos-weights I,S,B step credits per scheduling round;
   --aging-bound max ticks a session may go unscheduled; at most
-  --refresh-concurrency full-compute steps per --dephase-window ticks.
+  --refresh-concurrency full-compute steps per --dephase-window ticks
+  (a pool-wide budget shared by all workers).
+  --workers N engine workers, one runtime/PJRT client each; 0 = one per
+  logical core.  Sessions are placed by batch-key affinity + class-aware
+  least load (see coordinator::placement).
 ";
 
 #[cfg(test)]

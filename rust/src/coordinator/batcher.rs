@@ -71,12 +71,24 @@ impl Batcher {
         }
     }
 
-    /// Enqueue into the request's class queue; at capacity, the newest
-    /// queued request of the lowest class *strictly below* the incoming
-    /// one is evicted to make room (the victim is returned so the
-    /// caller can reply).  Evictions and direct rejections both count
-    /// into `shed_count`.
+    /// Enqueue with enqueue time "now" (tests and synthetic load).
     pub fn push(&mut self, request: Request) -> PushOutcome {
+        self.push_at(request, Instant::now())
+    }
+
+    /// Enqueue into the request's class queue, stamping the pending
+    /// entry with the request's true arrival time (the engine hands
+    /// down `WorkItem::enqueued`, so the size-or-timeout deadline ages
+    /// from client arrival rather than from this hop); at capacity, the
+    /// newest queued request of the lowest class *strictly below* the
+    /// incoming one is evicted to make room (the victim is returned so
+    /// the caller can reply).  Evictions and direct rejections both
+    /// count into `shed_count`.
+    pub fn push_at(
+        &mut self,
+        request: Request,
+        enqueued: Instant,
+    ) -> PushOutcome {
         let slot = request.priority.slot();
         if self.len() >= self.capacity {
             // Lowest class first == highest slot first; stop above the
@@ -90,12 +102,10 @@ impl Batcher {
             };
             let victim = self.queues[vs].pop_back().expect("non-empty");
             self.shed += 1;
-            self.queues[slot]
-                .push_back(Pending { request, enqueued: Instant::now() });
+            self.queues[slot].push_back(Pending { request, enqueued });
             return PushOutcome::QueuedEvicting(Box::new(victim.request));
         }
-        self.queues[slot]
-            .push_back(Pending { request, enqueued: Instant::now() });
+        self.queues[slot].push_back(Pending { request, enqueued });
         PushOutcome::Queued
     }
 

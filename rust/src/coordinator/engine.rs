@@ -17,23 +17,33 @@
 //!    [`super::scheduler`]) and runs exactly one step;
 //! 4. completes/replies per-session as each finishes.
 //!
-//! `Engine` is deliberately single-threaded (see module docs in
-//! `coordinator`); `serve_loop` is the long-running worker the TCP
-//! server spawns, fed over an mpsc channel.  On channel close it
-//! gracefully drains: queued requests are admitted and every in-flight
-//! **and parked** session runs to completion before the loop returns.
+//! Each `Engine` is single-threaded (see module docs in `coordinator`);
+//! `serve_loop` is the long-running worker loop, fed over an mpsc
+//! channel.  On channel close it gracefully drains: queued requests are
+//! admitted and every in-flight **and parked** session runs to
+//! completion before the loop returns.
+//!
+//! [`WorkerPool`] is the multi-worker face: it spawns one engine per
+//! worker thread (each with its own PJRT client — one per device; one
+//! per logical core on the stub/CPU backend), connects them all to one
+//! shared de-phasing ledger, and feeds them from the server's shared
+//! admission queue through [`super::placement`].
 
 use std::collections::HashMap;
 use std::rc::Rc;
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Error, Result};
 
 use super::batcher::Pending;
+use super::placement::{Placement, WorkerLoad};
 use super::router::{RouteResult, Router};
-use super::scheduler::{QosConfig, SchedState, Scheduler, StepKind};
+use super::scheduler::{
+    DephaseLedger, QosConfig, SchedState, Scheduler, StepKind,
+};
 use super::{Priority, Request, Response};
 use crate::metrics::Metrics;
 use crate::model::weights;
@@ -46,6 +56,41 @@ pub struct WorkItem {
     pub request: Request,
     pub reply: Sender<Response>,
     pub enqueued: Instant,
+}
+
+/// The placement load board: one [`WorkerLoad`] slot per worker,
+/// shared between every engine (each overwrites its own slot per tick)
+/// and the pool's admission loop (reads all slots, bumps the chosen
+/// worker's queued count optimistically).
+pub type LoadBoard = Arc<Vec<Mutex<WorkerLoad>>>;
+
+/// Identity and pool-shared state of one engine worker.
+pub struct WorkerContext {
+    /// Index of this worker in its pool (per-worker gauges use the
+    /// `_w{id}` suffix; also this worker's slot on the board).
+    pub id: usize,
+    /// The pool-wide refresh de-phasing token ledger (shared by every
+    /// worker's scheduler).
+    pub ledger: Arc<DephaseLedger>,
+    /// The whole pool's load board (`board.len()` = pool width; 1 =
+    /// standalone engine, which keeps the plain pre-pool gauge names).
+    pub board: LoadBoard,
+}
+
+impl WorkerContext {
+    /// Context for a standalone (single-worker) engine: private ledger,
+    /// single-slot board.
+    pub fn standalone(qos: &QosConfig) -> WorkerContext {
+        WorkerContext {
+            id: 0,
+            ledger: DephaseLedger::from_config(qos),
+            board: Arc::new(vec![Mutex::new(WorkerLoad::default())]),
+        }
+    }
+
+    fn pool_size(&self) -> usize {
+        self.board.len()
+    }
 }
 
 /// A client waiting on one member request of an in-flight session.
@@ -101,10 +146,14 @@ pub struct Engine {
     sched: Scheduler,
     /// Router shed total already folded into the metrics counter.
     shed_seen: u64,
+    /// Who this engine is within its pool (standalone engines get a
+    /// private context from [`WorkerContext::standalone`]).
+    worker: WorkerContext,
 }
 
 impl Engine {
-    /// Load every model found in the artifact directory.
+    /// Load every model found in the artifact directory (standalone,
+    /// single-worker engine).
     pub fn new(
         artifact_dir: &str,
         max_wait: Duration,
@@ -112,6 +161,31 @@ impl Engine {
         max_in_flight: usize,
         qos: QosConfig,
         metrics: Arc<Metrics>,
+    ) -> Result<Engine> {
+        let worker = WorkerContext::standalone(&qos);
+        Engine::with_worker(
+            artifact_dir,
+            max_wait,
+            capacity,
+            max_in_flight,
+            qos,
+            metrics,
+            worker,
+        )
+    }
+
+    /// Load every model found in the artifact directory, as worker
+    /// `worker.id` of a pool: the scheduler accounts full steps against
+    /// the pool's shared de-phasing ledger and the engine publishes its
+    /// load to the shared placement board every tick.
+    pub fn with_worker(
+        artifact_dir: &str,
+        max_wait: Duration,
+        capacity: usize,
+        max_in_flight: usize,
+        qos: QosConfig,
+        metrics: Arc<Metrics>,
+        worker: WorkerContext,
     ) -> Result<Engine> {
         let rt = Runtime::new(artifact_dir)?;
         let configs = discover_models(artifact_dir)?;
@@ -127,6 +201,14 @@ impl Engine {
             weight_bufs.insert(cfg.name.clone(), rt.weights_buffer(cfg, &host)?);
         }
         let max_in_flight = max_in_flight.max(1);
+        // Seed this worker's board slot before the first tick so
+        // placement sees real capacities from the start.
+        *worker.board[worker.id].lock().unwrap() = WorkerLoad {
+            max_in_flight,
+            max_parked: max_in_flight,
+            ..WorkerLoad::default()
+        };
+        let sched = Scheduler::with_ledger(qos, worker.ledger.clone());
         Ok(Engine {
             rt,
             router: Router::new(configs, max_wait, capacity),
@@ -138,8 +220,9 @@ impl Engine {
             parked: Vec::new(),
             max_in_flight,
             max_parked: max_in_flight,
-            sched: Scheduler::new(qos),
+            sched,
             shed_seen: 0,
+            worker,
         })
     }
 
@@ -193,7 +276,10 @@ impl Engine {
         self.next_internal_id += 1;
         let client_id = request.id;
         request.id = internal;
-        match self.router.route(request) {
+        // The true enqueue time rides along so batching deadlines and
+        // queue-wait metrics measure from client arrival, not from the
+        // placement/admission hop.
+        match self.router.route_at(request, item.enqueued) {
             RouteResult::Queued => {
                 self.replies
                     .insert(internal, (item.reply, item.enqueued, client_id));
@@ -395,29 +481,87 @@ impl Engine {
     }
 
     /// Fold the router's shed counter and queue depths into the metrics
-    /// registry (backpressure accounting lives on the scheduler tick).
+    /// registry and publish this worker's truth to the placement load
+    /// board (backpressure accounting lives on the scheduler tick).
     fn account_backpressure(&mut self) {
         let shed = self.router.shed();
         if shed > self.shed_seen {
             self.metrics.bump("requests_shed", shed - self.shed_seen);
             self.shed_seen = shed;
         }
-        self.metrics
-            .set_gauge("in_flight_sessions", self.sessions.len() as f64);
-        self.metrics
-            .set_gauge("parked_sessions", self.parked.len() as f64);
+        let mut in_flight_by_class = [0usize; 3];
+        for s in &self.sessions {
+            in_flight_by_class[s.class.slot()] += 1;
+        }
+        let queued_by_class = self.router.queued_by_class();
         let in_flight_requests: usize =
             self.sessions.iter().map(|s| s.waiters.len()).sum();
-        self.metrics
-            .set_gauge("in_flight_requests", in_flight_requests as f64);
-        self.metrics
-            .set_gauge("queued_requests", self.router.queued() as f64);
-        let by_class = self.router.queued_by_class();
-        for (class, depth) in Priority::ALL.iter().zip(by_class) {
-            self.metrics.set_gauge(
+        // Overwrites the pool's optimistic queued bumps with real
+        // depths — the board self-corrects every tick.
+        *self.worker.board[self.worker.id].lock().unwrap() = WorkerLoad {
+            in_flight_by_class,
+            queued_by_class,
+            parked: self.parked.len(),
+            in_flight_requests,
+            max_in_flight: self.max_in_flight,
+            max_parked: self.max_parked,
+        };
+        self.gauge("in_flight_sessions", self.sessions.len() as f64);
+        self.gauge("parked_sessions", self.parked.len() as f64);
+        self.gauge("in_flight_requests", in_flight_requests as f64);
+        self.gauge("queued_requests", self.router.queued() as f64);
+        for (class, depth) in Priority::ALL.iter().zip(queued_by_class) {
+            self.gauge(
                 &format!("queued_requests_{}", class.name()),
                 depth as f64,
             );
+        }
+        // In a pool, every worker also refreshes the plain-name
+        // aggregates from the whole board (last writer wins; workers
+        // tick even when idle, so the aggregates track drain instead of
+        // freezing at the last admission's snapshot).  Every plain
+        // gauge that existed pre-pool keeps its meaning.
+        if self.worker.pool_size() > 1 {
+            let mut total = WorkerLoad::default();
+            let mut queued_per_class = [0usize; 3];
+            for slot in self.worker.board.iter() {
+                let l = *slot.lock().unwrap();
+                total.parked += l.parked;
+                total.in_flight_requests += l.in_flight_requests;
+                for s in 0..3 {
+                    total.in_flight_by_class[s] += l.in_flight_by_class[s];
+                    queued_per_class[s] += l.queued_by_class[s];
+                }
+            }
+            self.metrics
+                .set_gauge("in_flight_sessions", total.in_flight() as f64);
+            self.metrics.set_gauge("parked_sessions", total.parked as f64);
+            self.metrics.set_gauge(
+                "in_flight_requests",
+                total.in_flight_requests as f64,
+            );
+            let queued: usize = queued_per_class.iter().sum();
+            self.metrics.set_gauge("queued_requests", queued as f64);
+            for (class, depth) in
+                Priority::ALL.iter().zip(queued_per_class)
+            {
+                self.metrics.set_gauge(
+                    &format!("queued_requests_{}", class.name()),
+                    depth as f64,
+                );
+            }
+        }
+    }
+
+    /// Publish one gauge under this worker's name: plain for standalone
+    /// engines (pre-pool dashboards unchanged), `_w{id}`-suffixed per
+    /// worker in a pool (the plain aggregates are summed from the load
+    /// board each tick).
+    fn gauge(&self, name: &str, value: f64) {
+        if self.worker.pool_size() > 1 {
+            self.metrics.set_worker_gauge(self.worker.id, name, value);
+        } else {
+            self.metrics.set_gauge(name, value);
         }
     }
 
@@ -633,6 +777,193 @@ impl Engine {
                     closed = true;
                 }
             }
+        }
+    }
+}
+
+/// A pool of engine workers, one per device/PJRT client (one per
+/// logical core on the stub/CPU backend), fed from a shared admission
+/// queue by the placement layer.
+///
+/// Worker lifecycle: `new` spawns one OS thread per worker; each thread
+/// builds its own [`Engine`] (own `Runtime`, own resident weights, own
+/// `QosState`/scheduler — the `xla` types are not `Send`, so nothing
+/// runtime-owned ever crosses threads), warms its models, signals
+/// readiness, then runs [`Engine::serve_loop`] on its private channel.
+/// Any worker failing to boot aborts pool construction.  The only
+/// cross-worker state is the shared [`DephaseLedger`] (pool-wide
+/// refresh budget) and the [`WorkerLoad`] board placement reads.
+///
+/// [`WorkerPool::submit`] is the shared-admission-queue consumer: it
+/// asks [`Placement`] for a worker (sticky batch-key affinity →
+/// class-aware least load → globally-lowest preemption victim) and
+/// forwards the request on that worker's channel.  Preemption itself
+/// stays inside each engine, but because placement targets the worker
+/// holding the globally lowest-class in-flight session, the victim that
+/// worker parks *is* the pool-wide victim.
+///
+/// [`WorkerPool::shutdown`] drops every worker's sender and joins the
+/// threads: each engine drains (queued, in-flight *and* parked sessions
+/// run to completion) before its thread exits.
+pub struct WorkerPool {
+    senders: Vec<Sender<WorkItem>>,
+    threads: Vec<JoinHandle<()>>,
+    placement: Placement,
+    board: LoadBoard,
+    metrics: Arc<Metrics>,
+    models: Vec<String>,
+}
+
+impl WorkerPool {
+    #[allow(clippy::too_many_arguments)] // mirrors Engine::new + pool shape
+    pub fn new(
+        artifact_dir: &str,
+        max_wait: Duration,
+        capacity: usize,
+        max_in_flight: usize,
+        qos: QosConfig,
+        metrics: Arc<Metrics>,
+        workers: usize,
+        warmup: &[String],
+    ) -> Result<WorkerPool> {
+        let n = workers.max(1);
+        let ledger = DephaseLedger::from_config(&qos);
+        let board: LoadBoard = Arc::new(
+            (0..n).map(|_| Mutex::new(WorkerLoad::default())).collect(),
+        );
+        let (ready_tx, ready_rx) = channel::<Result<Vec<String>>>();
+        let mut senders = Vec::with_capacity(n);
+        let mut threads = Vec::with_capacity(n);
+        for id in 0..n {
+            let (tx, rx) = channel::<WorkItem>();
+            let ctx = WorkerContext {
+                id,
+                ledger: ledger.clone(),
+                board: board.clone(),
+            };
+            let dir = artifact_dir.to_string();
+            let worker_metrics = metrics.clone();
+            let warm: Vec<String> = warmup.to_vec();
+            let ready = ready_tx.clone();
+            let thread = std::thread::Builder::new()
+                .name(format!("freqca-worker-{id}"))
+                .spawn(move || {
+                    let boot = Engine::with_worker(
+                        &dir,
+                        max_wait,
+                        capacity,
+                        max_in_flight,
+                        qos,
+                        worker_metrics,
+                        ctx,
+                    )
+                    .and_then(|engine| {
+                        for m in &warm {
+                            engine.warmup(m)?;
+                        }
+                        Ok(engine)
+                    });
+                    match boot {
+                        Ok(mut engine) => {
+                            let _ = ready.send(Ok(engine.models()));
+                            // Release the readiness channel before the
+                            // long-lived loop: if a *sibling* worker
+                            // panics without reporting, the pool's
+                            // recv() must see disconnection, not hang
+                            // on this worker's live clone.
+                            drop(ready);
+                            engine.serve_loop(rx);
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                        }
+                    }
+                })
+                .map_err(|e| anyhow!("spawning worker {id}: {e}"))?;
+            threads.push(thread);
+            senders.push(tx);
+        }
+        drop(ready_tx);
+        let mut models = Vec::new();
+        let mut first_err = None;
+        for _ in 0..n {
+            match ready_rx.recv() {
+                Ok(Ok(m)) => models = m,
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow!(
+                        "a worker thread died during startup"
+                    ));
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            // Unwind: close every channel, let booted workers drain out.
+            drop(senders);
+            for t in threads {
+                let _ = t.join();
+            }
+            return Err(e);
+        }
+        metrics.set_gauge("pool_workers", n as f64);
+        Ok(WorkerPool {
+            senders,
+            threads,
+            placement: Placement::new(n),
+            board,
+            metrics,
+            models,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Model names served (identical on every worker: all workers load
+    /// the same artifact directory).
+    pub fn models(&self) -> &[String] {
+        &self.models
+    }
+
+    /// Admit one request from the shared queue: place it, account it,
+    /// forward it.  The chosen worker's queued count is bumped
+    /// optimistically so a burst arriving between engine ticks spreads
+    /// across workers instead of dogpiling the first choice (each
+    /// engine overwrites its slot with the truth every tick).
+    pub fn submit(&mut self, item: WorkItem) {
+        let class = item.request.priority;
+        let key = item.request.batch_key();
+        let snapshot: Vec<WorkerLoad> =
+            self.board.iter().map(|l| *l.lock().unwrap()).collect();
+        let w = self.placement.place(&key, class, &snapshot);
+        self.board[w].lock().unwrap().queued_by_class[class.slot()] += 1;
+        self.metrics.bump(&format!("placed_w{w}"), 1);
+        if let Err(send_err) = self.senders[w].send(item) {
+            // The worker thread is gone (panic); fail fast rather than
+            // hang the client, and deaden its board slot — no headroom,
+            // no in-flight preemption candidates, no parking room — so
+            // placement stops choosing it for everything but the
+            // nothing-else-left fallback (its slot is never overwritten
+            // again: only the dead worker's own tick did that).
+            *self.board[w].lock().unwrap() = WorkerLoad::default();
+            let item = send_err.0;
+            let _ = item.reply.send(Response::err(
+                item.request.id,
+                format!("worker {w} unavailable"),
+            ));
+            self.metrics.bump("worker_send_failures", 1);
+        }
+    }
+
+    /// Close admission and block until every worker has drained its
+    /// queued, in-flight and parked sessions, then reap the threads.
+    pub fn shutdown(self) {
+        drop(self.senders);
+        for t in self.threads {
+            let _ = t.join();
         }
     }
 }

@@ -2,10 +2,15 @@
 //! step-level scheduler, and the continuous engine that drives batched
 //! sampling through PJRT.
 //!
-//! Threading model: PJRT CPU execution is single-stream and the `xla`
-//! wrapper types are not `Send`, so one **engine thread** owns the
-//! `Runtime` and all in-flight `SamplerSession`s; the TCP acceptor
-//! threads communicate with it over `mpsc` channels.  The engine loop is
+//! Threading model: PJRT execution is single-stream per device and the
+//! `xla` wrapper types are not `Send`, so each **worker thread** owns
+//! one `Runtime` (its own PJRT client), its resident weights, and its
+//! in-flight `SamplerSession`s.  The TCP acceptor threads feed a single
+//! **shared admission queue**; the pool's placement layer
+//! (`placement`) drains it and assigns each request to a worker by
+//! sticky batch-key affinity + class-aware least load (preferring, when
+//! the pool saturates, the worker whose preemption victim is the
+//! globally lowest class).  Each worker's engine loop is
 //! **continuous**: every tick it drains newly batched requests into new
 //! sessions (preempting lower-class sessions into a parking lot under
 //! overload) and advances exactly one session by one denoising step
@@ -15,11 +20,16 @@
 //! long job's remaining steps and interactive traffic is never starved
 //! by batch backfills.  This mirrors continuous batching in production
 //! LLM routers (vLLM-style token-level admission), applied at diffusion
-//! step granularity; there is exactly one worker because the sandbox
-//! has one core.
+//! step granularity.  Cross-worker coupling is deliberately minimal —
+//! FreqCa sessions are self-contained (latents + one CRF tensor), so
+//! the only shared mutable state is the de-phasing token ledger
+//! (`scheduler::DephaseLedger`: the refresh-concurrency budget is
+//! pool-wide, so workers can't all run full-compute steps on the same
+//! tick) and the placement load board (`placement::WorkerLoad`).
 
 pub mod batcher;
 pub mod engine;
+pub mod placement;
 pub mod router;
 pub mod scheduler;
 

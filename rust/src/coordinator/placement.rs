@@ -1,0 +1,331 @@
+//! Session→worker placement for the multi-worker engine.
+//!
+//! FreqCa makes sampler sessions cheap to place: all per-session state
+//! is the latents plus **one** cumulative-residual tensor (the paper's
+//! ~99% cache-memory reduction over layerwise caches), so a session can
+//! live on any worker and the interesting question is *which* — weights
+//! and compile caches are per-worker, batch-mates must meet on the same
+//! worker to share a device batch, and preemption should sacrifice the
+//! globally cheapest victim, not a per-worker accident.
+//!
+//! The placement layer is pure data (no threads, no I/O): the pool
+//! feeds it a [`WorkerLoad`] snapshot per worker — published by each
+//! engine on its scheduler tick and bumped optimistically at admission
+//! — and [`Placement::place`] answers with a worker index.  Decision
+//! order:
+//!
+//! 1. **affinity** — a batch key that was placed before returns to its
+//!    home worker while that worker has admission headroom.  This keeps
+//!    compatible requests batching together, keeps a model's traffic
+//!    where its weights and XLA executables are warm, and sends the
+//!    follow-up traffic of a parked/resumed session back to the worker
+//!    that still holds its state;
+//! 2. **class-aware least load** — otherwise the worker with the least
+//!    queued + in-flight work *at or above* the request's class wins
+//!    (lower-class work yields via the QoS quotas and preemption, so it
+//!    does not count against a candidate), ties broken by total
+//!    outstanding work then worker id.  Because saturated workers are
+//!    skipped in favour of any worker with headroom, a skewed class mix
+//!    can never strand one worker idle while another queues — affinity
+//!    re-homes to the chosen worker;
+//! 3. **pool-wide preemption** — when every worker is saturated, the
+//!    request goes to the worker whose lowest in-flight class is the
+//!    *globally* lowest strictly below the request's class (and whose
+//!    parking lot has room).  That worker's engine will park exactly
+//!    that session (its local victim choice and this global one agree:
+//!    both pick the lowest class), so the preemption victim is chosen
+//!    across the whole pool even though parking stays worker-local.
+
+use std::collections::HashMap;
+
+use super::Priority;
+
+/// Point-in-time load of one worker, as placement sees it.  Engines
+/// overwrite their slot every scheduler tick; [`super::engine::WorkerPool`]
+/// bumps the queued count optimistically when it forwards a request so
+/// a same-tick burst does not dogpile one worker.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerLoad {
+    /// In-flight sessions by [`Priority::slot`].
+    pub in_flight_by_class: [usize; 3],
+    /// Batcher queue depth by [`Priority::slot`] (requests, not batches).
+    pub queued_by_class: [usize; 3],
+    /// Sessions parked by preemption (they will re-occupy capacity).
+    pub parked: usize,
+    /// Client requests inside in-flight sessions (a session batches
+    /// several).  Not a placement input — carried so pool aggregates
+    /// (`in_flight_requests`) can be summed from the board.
+    pub in_flight_requests: usize,
+    /// The worker's in-flight session cap.
+    pub max_in_flight: usize,
+    /// The worker's parking-lot bound.
+    pub max_parked: usize,
+}
+
+impl WorkerLoad {
+    pub fn in_flight(&self) -> usize {
+        self.in_flight_by_class.iter().sum()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queued_by_class.iter().sum()
+    }
+
+    /// Everything that holds or will hold a session slot.
+    pub fn outstanding(&self) -> usize {
+        self.in_flight() + self.queued() + self.parked
+    }
+
+    /// Can this worker take one more request without displacing
+    /// anything?  (Queued and parked work is counted against the cap:
+    /// it will occupy a slot before a newcomer routed behind it.)
+    pub fn has_headroom(&self) -> bool {
+        self.outstanding() < self.max_in_flight
+    }
+
+    /// Work competing with an incoming request of `class`: in-flight +
+    /// queued entries of the same or a higher class.
+    pub fn load_at_or_above(&self, class: Priority) -> usize {
+        (0..=class.slot())
+            .map(|s| self.in_flight_by_class[s] + self.queued_by_class[s])
+            .sum()
+    }
+
+    /// Lowest class currently in flight — the class the worker's engine
+    /// would sacrifice if preempted (`None` when nothing is in flight).
+    pub fn lowest_in_flight(&self) -> Option<Priority> {
+        (0..Priority::ALL.len())
+            .rev()
+            .find(|s| self.in_flight_by_class[*s] > 0)
+            .and_then(Priority::from_slot)
+    }
+
+    /// Is there room to park one more preempted session?
+    pub fn can_park(&self) -> bool {
+        self.parked < self.max_parked
+    }
+}
+
+/// Affinity keys retained before the map resets (batch keys are
+/// low-cardinality in practice — model × policy × steps × class — but
+/// client-controlled, so the map must not grow without bound).
+const MAX_AFFINITY_KEYS: usize = 4096;
+
+/// The placement state: pool width plus the batch-key→worker affinity
+/// map.  Owned by the pool's admission loop; pure and deterministic so
+/// the bench can replay it in virtual time and tests need no threads.
+#[derive(Debug)]
+pub struct Placement {
+    workers: usize,
+    affinity: HashMap<String, usize>,
+}
+
+impl Placement {
+    pub fn new(workers: usize) -> Placement {
+        Placement { workers: workers.max(1), affinity: HashMap::new() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Current home worker of a batch key, if any.
+    pub fn home(&self, key: &str) -> Option<usize> {
+        self.affinity.get(key).copied()
+    }
+
+    /// Choose the worker for one request with batch key `key` and class
+    /// `class`, given a load snapshot per worker (`loads.len()` must be
+    /// the pool width).  Updates the key's affinity to the choice.
+    pub fn place(
+        &mut self,
+        key: &str,
+        class: Priority,
+        loads: &[WorkerLoad],
+    ) -> usize {
+        debug_assert_eq!(loads.len(), self.workers);
+        // 1. Sticky affinity while the home worker has headroom.
+        if let Some(&home) = self.affinity.get(key) {
+            if home < loads.len() && loads[home].has_headroom() {
+                return home;
+            }
+        }
+        // 2. Class-aware least load among workers with headroom.
+        let chosen = (0..loads.len())
+            .filter(|w| loads[*w].has_headroom())
+            .min_by_key(|w| {
+                (
+                    loads[*w].load_at_or_above(class),
+                    loads[*w].outstanding(),
+                    *w,
+                )
+            })
+            // 3. Saturated pool: place where preemption sacrifices the
+            // globally lowest class (strictly below the incoming one,
+            // parking room required)...
+            .or_else(|| {
+                (0..loads.len())
+                    .filter(|w| loads[*w].can_park())
+                    .filter_map(|w| {
+                        loads[w].lowest_in_flight().map(|c| (w, c))
+                    })
+                    .filter(|(_, c)| *c < class)
+                    .min_by_key(|(w, c)| {
+                        (*c, loads[*w].outstanding(), *w)
+                    })
+                    .map(|(w, _)| w)
+            })
+            // ...or, with nothing preemptable anywhere, queue behind the
+            // least outstanding worker (the batcher's bounded queues
+            // shed from there as usual).
+            .unwrap_or_else(|| {
+                (0..loads.len())
+                    .min_by_key(|w| (loads[*w].outstanding(), *w))
+                    .expect("pool has at least one worker")
+            });
+        if self.affinity.len() >= MAX_AFFINITY_KEYS
+            && !self.affinity.contains_key(key)
+        {
+            // Rare full reset beats per-entry LRU bookkeeping on a map
+            // this small; homes rebuild from live traffic immediately.
+            self.affinity.clear();
+        }
+        self.affinity.insert(key.to_string(), chosen);
+        chosen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(max_in_flight: usize) -> WorkerLoad {
+        WorkerLoad {
+            max_in_flight,
+            max_parked: max_in_flight,
+            ..WorkerLoad::default()
+        }
+    }
+
+    fn with_in_flight(
+        max_in_flight: usize,
+        per_class: [usize; 3],
+    ) -> WorkerLoad {
+        WorkerLoad { in_flight_by_class: per_class, ..idle(max_in_flight) }
+    }
+
+    #[test]
+    fn least_load_spreads_distinct_keys() {
+        let mut p = Placement::new(2);
+        let mut loads = vec![idle(4), idle(4)];
+        assert_eq!(p.place("a", Priority::Standard, &loads), 0);
+        loads[0].queued_by_class[Priority::Standard.slot()] += 1;
+        assert_eq!(p.place("b", Priority::Standard, &loads), 1);
+        loads[1].queued_by_class[Priority::Standard.slot()] += 1;
+        // Third key ties on load -> lowest id.
+        assert_eq!(p.place("c", Priority::Standard, &loads), 0);
+    }
+
+    #[test]
+    fn affinity_returns_home_despite_emptier_peer() {
+        let mut p = Placement::new(2);
+        let mut loads = vec![idle(4), idle(4)];
+        assert_eq!(p.place("k", Priority::Standard, &loads), 0);
+        // Worker 0 is busier than worker 1 now, but still has headroom:
+        // the key goes home (weights + CRF residency, batch-mates).
+        loads[0].in_flight_by_class[Priority::Standard.slot()] = 3;
+        assert_eq!(p.place("k", Priority::Standard, &loads), 0);
+        assert_eq!(p.home("k"), Some(0));
+    }
+
+    #[test]
+    fn saturated_home_rehomes_to_idle_worker() {
+        // The "skewed class mix" regression: all traffic keyed to worker
+        // 0 must not strand worker 1 idle once worker 0 saturates.
+        let mut p = Placement::new(2);
+        let mut loads = vec![idle(2), idle(2)];
+        assert_eq!(p.place("k", Priority::Batch, &loads), 0);
+        loads[0].in_flight_by_class[Priority::Batch.slot()] = 2; // full
+        assert_eq!(p.place("k", Priority::Batch, &loads), 1);
+        // Affinity re-homed: with headroom back on both, the key stays
+        // on its new home rather than flapping.
+        assert_eq!(p.home("k"), Some(1));
+        loads[0].in_flight_by_class[Priority::Batch.slot()] = 0;
+        assert_eq!(p.place("k", Priority::Batch, &loads), 1);
+    }
+
+    #[test]
+    fn lower_class_load_does_not_repel_higher_class() {
+        // Worker 0 carries three batch sessions, worker 1 one
+        // interactive: an incoming interactive request sees 0 competing
+        // entries on worker 0 (batch yields via quotas/preemption) and
+        // goes there, instead of naively picking the shorter queue.
+        let mut p = Placement::new(2);
+        let loads = vec![
+            with_in_flight(8, [0, 0, 3]),
+            with_in_flight(8, [1, 0, 0]),
+        ];
+        assert_eq!(p.place("x", Priority::Interactive, &loads), 0);
+        // A batch request sees the opposite ordering (3 vs 1 at or
+        // above batch) and picks worker 1.
+        assert_eq!(p.place("y", Priority::Batch, &loads), 1);
+    }
+
+    #[test]
+    fn saturated_pool_picks_global_preemption_victim() {
+        // Both workers full; worker 0 holds standard sessions, worker 1
+        // holds one batch among standard.  An interactive arrival must
+        // target worker 1 — the globally lowest victim — not whichever
+        // worker its key or id would suggest.
+        let mut p = Placement::new(2);
+        let loads = vec![
+            with_in_flight(2, [0, 2, 0]),
+            with_in_flight(2, [0, 1, 1]),
+        ];
+        assert!(!loads[0].has_headroom() && !loads[1].has_headroom());
+        assert_eq!(p.place("k", Priority::Interactive, &loads), 1);
+
+        // With worker 1's parking lot full, worker 0 (standard victim,
+        // still strictly below interactive) is the best remaining.
+        let mut full_lot = loads.clone();
+        full_lot[1].parked = full_lot[1].max_parked;
+        assert_eq!(p.place("k2", Priority::Interactive, &full_lot), 0);
+
+        // A standard arrival outranks only the batch session: worker 1.
+        assert_eq!(p.place("k3", Priority::Standard, &loads), 1);
+
+        // Nothing strictly below a batch arrival exists: it queues
+        // behind the least outstanding worker instead of preempting.
+        assert_eq!(p.place("k4", Priority::Batch, &loads), 0);
+    }
+
+    #[test]
+    fn affinity_ignored_when_home_is_saturated_even_mid_preemption() {
+        // A key homed on worker 0 must still follow the global victim
+        // rule once the pool saturates.
+        let mut p = Placement::new(2);
+        let mut loads = vec![idle(2), idle(2)];
+        assert_eq!(p.place("k", Priority::Interactive, &loads), 0);
+        loads[0] = with_in_flight(2, [2, 0, 0]); // interactive, no victim
+        loads[1] = with_in_flight(2, [0, 0, 2]); // batch victims
+        assert_eq!(p.place("k", Priority::Interactive, &loads), 1);
+    }
+
+    #[test]
+    fn single_worker_pool_degenerates_cleanly() {
+        let mut p = Placement::new(1);
+        let loads = vec![with_in_flight(1, [1, 0, 0])];
+        assert_eq!(p.place("k", Priority::Batch, &loads), 0);
+        assert_eq!(p.workers(), 1);
+    }
+
+    #[test]
+    fn affinity_map_is_bounded() {
+        let mut p = Placement::new(2);
+        let loads = vec![idle(64), idle(64)];
+        for i in 0..(MAX_AFFINITY_KEYS + 10) {
+            p.place(&format!("key-{i}"), Priority::Standard, &loads);
+        }
+        assert!(p.affinity.len() <= MAX_AFFINITY_KEYS);
+    }
+}

@@ -2,7 +2,7 @@
 //! model registry and dispatches them to per-model batchers.
 
 use std::collections::HashMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::batcher::{Batcher, Pending, PushOutcome};
 use super::{Priority, Request};
@@ -63,8 +63,20 @@ impl Router {
         v
     }
 
-    /// Validate + enqueue.
-    pub fn route(&mut self, mut request: Request) -> RouteResult {
+    /// Validate + enqueue, stamping the pending entry with "now".
+    pub fn route(&mut self, request: Request) -> RouteResult {
+        self.route_at(request, Instant::now())
+    }
+
+    /// Validate + enqueue with an explicit enqueue time: the engine
+    /// passes the client's arrival time (`WorkItem::enqueued`) so
+    /// batching deadlines and queue-wait age from arrival, not from the
+    /// placement/admission hop.
+    pub fn route_at(
+        &mut self,
+        mut request: Request,
+        enqueued: Instant,
+    ) -> RouteResult {
         let cfg = match self.configs.get(&request.model) {
             Some(c) => c,
             None => return RouteResult::UnknownModel,
@@ -93,7 +105,7 @@ impl Router {
         // Normalize the conditioning vector to the model width.
         request.cond.resize(cfg.cond_dim, 0.0);
         let b = self.batchers.get_mut(&request.model).unwrap();
-        match b.push(request) {
+        match b.push_at(request, enqueued) {
             PushOutcome::Queued => RouteResult::Queued,
             PushOutcome::QueuedEvicting(victim) => {
                 RouteResult::QueuedEvicting(victim.id)

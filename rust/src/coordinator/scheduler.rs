@@ -35,12 +35,117 @@
 
 use std::cmp::Reverse;
 use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{anyhow, Result};
 
 pub use crate::policy::StepKind;
 
 use super::Priority;
+
+/// The de-phasing budget as a **shared token ledger**: ticks within the
+/// trailing window at which full-compute steps ran, over a global tick
+/// counter.  A standalone engine owns one privately ([`Scheduler::new`]
+/// allocates it), while the worker pool hands every worker's scheduler
+/// the *same* `Arc` ([`Scheduler::with_ledger`]) — so "at most
+/// `--refresh-concurrency` fulls per `--dephase-window` ticks" is a
+/// pool-wide invariant, not a per-worker one, and concurrent workers
+/// cannot all refresh on the same tick.  Ticks here are *pool* ticks
+/// (steps issued by any worker); each scheduler keeps its own local
+/// tick for credits and aging.
+#[derive(Debug)]
+pub struct DephaseLedger {
+    max_full: usize,
+    window: u64,
+    state: Mutex<LedgerState>,
+}
+
+#[derive(Debug, Default)]
+struct LedgerState {
+    /// Global ticks issued so far (== steps scheduled across sharers).
+    tick: u64,
+    /// Global ticks within the trailing window at which fulls ran.
+    recent_full: VecDeque<u64>,
+}
+
+impl DephaseLedger {
+    pub fn new(max_full: usize, window: u64) -> DephaseLedger {
+        DephaseLedger {
+            max_full,
+            window: window.max(1),
+            state: Mutex::new(LedgerState::default()),
+        }
+    }
+
+    pub fn from_config(cfg: &QosConfig) -> Arc<DephaseLedger> {
+        Arc::new(DephaseLedger::new(
+            cfg.max_full_per_window,
+            cfg.dephase_window,
+        ))
+    }
+
+    /// Open a one-tick transaction: issues the next global tick and
+    /// holds the ledger lock until the guard drops, so a concurrent
+    /// worker cannot read the budget between this scheduler's check
+    /// and its spend ([`LedgerTxn::note_full`]).  The critical section
+    /// spans only the pure pick decision (microseconds), never a
+    /// device step.
+    fn begin_tick(&self) -> LedgerTxn<'_> {
+        let mut state = self.state.lock().unwrap();
+        state.tick += 1;
+        let tick = state.tick;
+        Self::slide(&mut state, self.window, tick);
+        LedgerTxn { max_full: self.max_full, tick, state }
+    }
+
+    /// Non-advancing peek: would a pick at the next global tick find the
+    /// budget spent?  (Benches assert the budget is never exceeded
+    /// unforced by peeking right before each pick.)
+    pub fn over_budget(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let next = s.tick + 1;
+        Self::slide(&mut s, self.window, next);
+        s.recent_full.len() >= self.max_full
+    }
+
+    /// Full steps recorded in the trailing window as of the last tick.
+    pub fn window_fulls(&self) -> usize {
+        self.state.lock().unwrap().recent_full.len()
+    }
+
+    fn slide(s: &mut LedgerState, window: u64, now: u64) {
+        while let Some(&t) = s.recent_full.front() {
+            if t.saturating_add(window) <= now {
+                s.recent_full.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+/// An open ledger tick: the global tick was issued and the ledger lock
+/// is held until this drops, making check-budget → spend atomic across
+/// pool workers.
+struct LedgerTxn<'a> {
+    max_full: usize,
+    tick: u64,
+    state: MutexGuard<'a, LedgerState>,
+}
+
+impl LedgerTxn<'_> {
+    /// Is the trailing window's full-step budget already spent at this
+    /// tick?
+    fn over_budget(&self) -> bool {
+        self.state.recent_full.len() >= self.max_full
+    }
+
+    /// Spend a token: this tick issued a full-compute step.
+    fn note_full(mut self) {
+        let t = self.tick;
+        self.state.recent_full.push_back(t);
+    }
+}
 
 /// Tunables of the QoS policy (CLI: `--qos-weights`, `--aging-bound`,
 /// `--refresh-concurrency`, `--dephase-window`).
@@ -168,8 +273,10 @@ pub struct Pick {
 pub struct Scheduler {
     tick: u64,
     cfg: QosConfig,
-    /// Ticks within the trailing window at which full steps ran.
-    recent_full: VecDeque<u64>,
+    /// Trailing-window ledger of full-compute steps — private to this
+    /// scheduler ([`Scheduler::new`]) or shared across a worker pool
+    /// ([`Scheduler::with_ledger`]).
+    ledger: Arc<DephaseLedger>,
     /// Credit refills performed (diagnostic).
     rounds: u64,
 }
@@ -182,7 +289,14 @@ impl Default for Scheduler {
 
 impl Scheduler {
     pub fn new(cfg: QosConfig) -> Scheduler {
-        Scheduler { tick: 0, cfg, recent_full: VecDeque::new(), rounds: 0 }
+        let ledger = DephaseLedger::from_config(&cfg);
+        Scheduler::with_ledger(cfg, ledger)
+    }
+
+    /// A scheduler that accounts its full steps against a shared
+    /// de-phasing ledger (the worker pool's global refresh budget).
+    pub fn with_ledger(cfg: QosConfig, ledger: Arc<DephaseLedger>) -> Scheduler {
+        Scheduler { tick: 0, cfg, ledger, rounds: 0 }
     }
 
     /// Current tick (== steps scheduled so far).
@@ -197,6 +311,12 @@ impl Scheduler {
     /// Credit refills performed so far.
     pub fn rounds(&self) -> u64 {
         self.rounds
+    }
+
+    /// The de-phasing ledger this scheduler accounts against (shared
+    /// across every worker of a pool).
+    pub fn ledger(&self) -> &Arc<DephaseLedger> {
+        &self.ledger
     }
 
     /// Initial scheduling state for a session admitted now: full credit
@@ -239,17 +359,11 @@ impl Scheduler {
             self.rounds += 1;
         }
 
-        // Slide the de-phasing window up to the tick being issued.
-        let window = self.cfg.dephase_window.max(1);
-        while let Some(&t) = self.recent_full.front() {
-            if t.saturating_add(window) <= next_tick {
-                self.recent_full.pop_front();
-            } else {
-                break;
-            }
-        }
-        let over_budget =
-            self.recent_full.len() >= self.cfg.max_full_per_window;
+        // Open the (possibly pool-shared) de-phasing ledger tick; the
+        // transaction holds the ledger lock through the decision so the
+        // budget cannot be double-spent by a concurrent worker.
+        let txn = self.ledger.begin_tick();
+        let over_budget = txn.over_budget();
 
         // 1. Anti-starvation override: most-starved first, class then
         // deadline then index breaking ties.  Bypasses credits and
@@ -305,7 +419,9 @@ impl Scheduler {
         s.last_ran = next_tick;
         s.credits = s.credits.saturating_sub(1);
         if s.next_kind == StepKind::Full {
-            self.recent_full.push_back(next_tick);
+            txn.note_full();
+        } else {
+            drop(txn);
         }
         Some(Pick {
             index: idx,
@@ -496,6 +612,85 @@ mod tests {
         // Adaptive (Unknown) sessions are never deferred.
         let p = sched.pick(&mut states).unwrap();
         assert_eq!((p.index, p.dephased), (0, false));
+    }
+
+    /// Two schedulers (two pool workers) sharing one ledger: worker A's
+    /// full step spends the *global* budget, so worker B — which never
+    /// issued a full itself — defers its full-next pick to a cached-next
+    /// session.  This is the cross-worker half of refresh de-phasing.
+    #[test]
+    fn shared_ledger_dephases_across_schedulers() {
+        let cfg = QosConfig {
+            weights: [1, 1, 1],
+            aging_bound: u64::MAX,
+            max_full_per_window: 1,
+            dephase_window: 8,
+        };
+        let ledger = DephaseLedger::from_config(&cfg);
+        let mut a = Scheduler::with_ledger(cfg, ledger.clone());
+        let mut b = Scheduler::with_ledger(cfg, ledger.clone());
+
+        // Worker A runs a full step: the one-token budget is now spent.
+        let mut sa = vec![st(Priority::Standard, 0, 0, 1)];
+        sa[0].next_kind = StepKind::Full;
+        let pa = a.pick(&mut sa).unwrap();
+        assert_eq!(pa.kind, StepKind::Full);
+        assert!(!pa.forced_full);
+        assert_eq!(ledger.window_fulls(), 1);
+
+        // Worker B would pick its full-next session (older deadline)
+        // but the shared window is over budget: the tick is redirected
+        // to B's cached-next session instead.
+        let mut sb = vec![
+            st(Priority::Standard, 0, 0, 1),
+            st(Priority::Standard, 0, 1, 1),
+        ];
+        sb[0].next_kind = StepKind::Full;
+        sb[1].next_kind = StepKind::Cached;
+        let pb = b.pick(&mut sb).unwrap();
+        assert_eq!((pb.index, pb.kind), (1, StepKind::Cached));
+        assert!(pb.dephased);
+
+        // With only the full-next session holding credits, B's full is
+        // forced — the shared budget never idles a worker.
+        sb[1].credits = 0;
+        let pb2 = b.pick(&mut sb).unwrap();
+        assert_eq!((pb2.index, pb2.kind), (0, StepKind::Full));
+        assert!(pb2.forced_full);
+    }
+
+    /// The ledger's global tick advances on every sharer's pick, so the
+    /// window slides by pool-wide progress: after `dephase_window` total
+    /// ticks (across both schedulers) the budget frees again.
+    #[test]
+    fn shared_ledger_window_slides_on_global_ticks() {
+        let cfg = QosConfig {
+            weights: [1, 1, 1],
+            aging_bound: u64::MAX,
+            max_full_per_window: 1,
+            dephase_window: 3,
+        };
+        let ledger = DephaseLedger::from_config(&cfg);
+        let mut a = Scheduler::with_ledger(cfg, ledger.clone());
+        let mut b = Scheduler::with_ledger(cfg, ledger.clone());
+
+        let mut sa = vec![st(Priority::Standard, 0, 0, 100)];
+        sa[0].next_kind = StepKind::Full;
+        assert_eq!(a.pick(&mut sa).unwrap().kind, StepKind::Full); // gt 1
+        assert!(ledger.over_budget());
+
+        // Two cached B ticks (global ticks 2, 3) age the full out of the
+        // trailing window (1 + 3 <= 4).
+        let mut sb = vec![st(Priority::Standard, 0, 0, 100)];
+        sb[0].next_kind = StepKind::Cached;
+        b.pick(&mut sb).unwrap();
+        assert!(ledger.over_budget(), "full still inside the window");
+        b.pick(&mut sb).unwrap();
+        assert!(!ledger.over_budget(), "window slid past the full");
+        sa[0].next_kind = StepKind::Full;
+        let p = a.pick(&mut sa).unwrap();
+        assert_eq!(p.kind, StepKind::Full);
+        assert!(!p.forced_full && !p.dephased);
     }
 
     #[test]

@@ -8,16 +8,20 @@
 //!   authored in `python/compile/kernels/`, lowered at build time.
 //! * **L2** — the rectified-flow DiT in JAX (`python/compile/model.py`),
 //!   exported as HLO-text artifacts.
-//! * **L3** — this crate: the serving coordinator.  It owns the event
-//!   loop, request routing, dynamic batching (per-QoS-class queues with
+//! * **L3** — this crate: the serving coordinator.  It owns the
+//!   **multi-worker engine pool** (one engine thread + PJRT client per
+//!   device/core, fed from a shared admission queue by affinity +
+//!   class-aware least-load placement — see `coordinator::placement`),
+//!   request routing, dynamic batching (per-QoS-class queues with
 //!   lowest-class-first eviction), the **QoS step-level scheduler**
 //!   (resumable `SamplerSession`s, one denoising step per tick;
-//!   weighted class quotas, anti-starvation aging, cache-aware refresh
-//!   de-phasing, session preemption into a parking lot — see
-//!   `coordinator`), the **O(1) Cumulative Residual Feature cache**,
-//!   the caching *policy engine* (FreqCa and all baselines), the PJRT
-//!   runtime, metrics, CLI and TCP server.  Python is never on the
-//!   request path.
+//!   weighted class quotas, anti-starvation aging, pool-wide
+//!   cache-aware refresh de-phasing, session preemption into a parking
+//!   lot — see `coordinator`), the **O(1) Cumulative Residual Feature
+//!   cache**, the caching *policy engine* (FreqCa and all baselines),
+//!   the PJRT runtime, metrics, CLI and TCP server.  Python is never on
+//!   the request path (the stub backend's optional HLO-executor helper
+//!   is a dev/CI device, not a serving dependency).
 //!
 //! The crate is std-only besides the `xla` PJRT bindings: JSON, PRNG,
 //! statistics, property-testing and the bench harness are in-repo

@@ -77,6 +77,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .get("warmup")
             .map(|w| w.split(',').map(String::from).collect())
             .unwrap_or_default(),
+        // 0 = auto: one engine worker (own PJRT client + resident
+        // weights) per logical core.
+        workers: args.usize_or("workers", 0)?,
     };
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
     server::serve(&artifacts, opts, Arc::new(AtomicBool::new(false)))

@@ -134,6 +134,14 @@ impl Metrics {
             .map(Histogram::summary)
     }
 
+    /// Publish a per-worker gauge as `{name}_w{worker}`: each engine
+    /// worker of a pool owns one series (in-flight sessions, queue
+    /// depths, ...) so dashboards can spot a hot or stalled worker;
+    /// the pool publishes the plain-name aggregates.
+    pub fn set_worker_gauge(&self, worker: usize, name: &str, value: f64) {
+        self.set_gauge(&format!("{name}_w{worker}"), value);
+    }
+
     /// Publish a point-in-time value (overwrites the previous one).
     pub fn set_gauge(&self, name: &str, value: f64) {
         self.inner
@@ -335,6 +343,17 @@ mod tests {
                 .as_usize(),
             Some(1)
         );
+    }
+
+    #[test]
+    fn per_worker_gauges_get_their_own_series() {
+        let m = Metrics::new();
+        m.set_worker_gauge(0, "in_flight_sessions", 3.0);
+        m.set_worker_gauge(1, "in_flight_sessions", 5.0);
+        m.set_gauge("in_flight_sessions", 8.0); // pool aggregate
+        assert!((m.gauge("in_flight_sessions_w0") - 3.0).abs() < 1e-12);
+        assert!((m.gauge("in_flight_sessions_w1") - 5.0).abs() < 1e-12);
+        assert!((m.gauge("in_flight_sessions") - 8.0).abs() < 1e-12);
     }
 
     #[test]

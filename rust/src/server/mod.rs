@@ -7,14 +7,17 @@
 //!   control:  {"cmd": "metrics"} | {"cmd": "models"} | {"cmd": "ping"}
 //!   response: {"id": 1, "ok": true, "latency_s": ..., ...}
 //!
-//! Acceptor threads parse and forward requests to the single engine
-//! thread (see `coordinator::engine`); the per-connection reply channel
-//! preserves ordering per client.
+//! Acceptor threads parse requests into the **shared admission queue**;
+//! the serve thread drains it through the placement layer into the
+//! worker pool — one engine thread per device/PJRT client (see
+//! `coordinator::engine::WorkerPool`).  The per-connection reply
+//! channel preserves ordering per client.
 //!
 //! Lifecycle: flipping `stop` ends the acceptor, which drops the work
-//! channel; the continuous engine then **drains gracefully** — every
-//! queued request is admitted and every in-flight session steps to
-//! completion (each client still gets its reply) before `serve` returns.
+//! channel; the admission loop then shuts the pool down and every
+//! worker **drains gracefully** — queued requests are admitted and
+//! every in-flight and parked session steps to completion (each client
+//! still gets its reply) before `serve` returns.
 
 pub mod client;
 
@@ -27,7 +30,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::engine::{Engine, WorkItem};
+use crate::coordinator::engine::{WorkItem, WorkerPool};
 use crate::coordinator::scheduler::QosConfig;
 use crate::coordinator::{Request, Response};
 use crate::metrics::Metrics;
@@ -39,14 +42,20 @@ pub struct ServeOpts {
     pub addr: String,
     pub batch_wait_ms: u64,
     pub queue_capacity: usize,
-    /// Cap on concurrently stepping sessions; ready batches queue (and
-    /// eventually shed) past it.  0 = use the default.
+    /// Cap on concurrently stepping sessions **per worker**; ready
+    /// batches queue (and eventually shed) past it.  0 = use the
+    /// default.
     pub max_in_flight: usize,
     /// QoS policy: per-class step quotas, anti-starvation aging bound,
-    /// refresh de-phasing budget (see `coordinator::scheduler`).
+    /// refresh de-phasing budget (see `coordinator::scheduler`; the
+    /// de-phasing budget is shared pool-wide).
     pub qos: QosConfig,
     /// Models to warm up (compile) before accepting traffic.
     pub warmup: Vec<String>,
+    /// Engine workers (one runtime/PJRT client each).  0 = one per
+    /// logical core; the library default is 1 (single-worker, the
+    /// pre-pool behaviour).
+    pub workers: usize,
 }
 
 /// Default concurrency cap: enough sessions to keep short jobs
@@ -63,15 +72,29 @@ impl Default for ServeOpts {
             max_in_flight: DEFAULT_MAX_IN_FLIGHT,
             qos: QosConfig::default(),
             warmup: vec![],
+            workers: 1,
         }
     }
 }
 
 /// Run the server until `stop` flips (or forever).  Blocks the calling
-/// thread with the engine loop; acceptor runs on its own thread.
+/// thread with the admission/placement loop; the acceptor and every
+/// engine worker run on their own threads.
 pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Result<()> {
     let metrics = Arc::new(Metrics::new());
-    let mut engine = Engine::new(
+    let workers = match opts.workers {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    };
+    if !opts.warmup.is_empty() {
+        eprintln!(
+            "[server] warming up {} on {workers} worker(s)...",
+            opts.warmup.join(", ")
+        );
+    }
+    let mut pool = WorkerPool::new(
         artifact_dir,
         std::time::Duration::from_millis(opts.batch_wait_ms),
         opts.queue_capacity,
@@ -82,18 +105,17 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         },
         opts.qos,
         metrics.clone(),
+        workers,
+        &opts.warmup,
     )?;
-    for m in &opts.warmup {
-        eprintln!("[server] warming up {m}...");
-        engine.warmup(m)?;
-    }
-    let models = engine.models();
+    let models = pool.models().to_vec();
     let listener = TcpListener::bind(&opts.addr)
         .with_context(|| format!("binding {}", opts.addr))?;
     listener.set_nonblocking(true)?;
     eprintln!(
-        "[server] listening on {} (models: {})",
+        "[server] listening on {} ({} workers; models: {})",
         opts.addr,
+        pool.workers(),
         models.join(", ")
     );
 
@@ -104,7 +126,12 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         accept_loop(listener, tx, acceptor_metrics, models, acceptor_stop);
     });
 
-    engine.serve_loop(rx); // returns once shut down AND fully drained
+    // Shared admission queue -> placement -> per-worker channels.  Ends
+    // when the acceptor drops its sender.
+    for item in rx {
+        pool.submit(item);
+    }
+    pool.shutdown(); // returns once every worker is fully drained
     let _ = acceptor.join();
     eprintln!(
         "[server] drained: {} requests completed",

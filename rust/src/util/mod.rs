@@ -13,3 +13,28 @@ pub mod tensor;
 pub use json::Json;
 pub use rng::Rng;
 pub use tensor::Tensor;
+
+/// Resolve the AOT artifact directory (`make artifacts`), shared by the
+/// integration tests and the benches so the search contract cannot
+/// drift between them.  `sentinel` is a file that must exist inside a
+/// candidate for it to count (e.g. `meta_tiny.json`).
+///
+/// Resolution order:
+/// 1. `FREQCA_ARTIFACTS_DIR` — explicit override for CI's cached
+///    artifacts job and out-of-tree builds;
+/// 2. `artifacts` relative to the cwd (cargo runs test/bench binaries
+///    with cwd = the package root, `rust/`);
+/// 3. `<manifest>/../artifacts` (artifacts are generated at the
+///    *repository* root).
+///
+/// Returns `&'static str` (the env value is leaked once per process)
+/// so call sites can hold it across threads without lifetime plumbing.
+pub fn artifact_dir_with(sentinel: &str) -> Option<&'static str> {
+    std::env::var("FREQCA_ARTIFACTS_DIR")
+        .ok()
+        .filter(|d| !d.is_empty())
+        .map(|d| &*Box::leak(d.into_boxed_str()))
+        .into_iter()
+        .chain(["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")])
+        .find(|d| std::path::Path::new(d).join(sentinel).exists())
+}

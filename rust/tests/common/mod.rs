@@ -1,15 +1,24 @@
 //! Shared helpers for the integration test binaries.
 
 /// Locate the AOT artifact directory (`make artifacts`, python AOT
-/// export).  Cargo runs test binaries with cwd = the package root
-/// (`rust/`), while artifacts are generated at the *repository* root,
-/// so probe both the cwd-relative path and the manifest-relative one.
+/// export) via [`freqca::util::artifact_dir_with`]
+/// (`FREQCA_ARTIFACTS_DIR` override → cwd-relative → manifest-relative;
+/// sentinel: the tiny model's metadata).
+///
 /// `None` => artifacts absent; artifact-dependent integration tests
-/// skip instead of failing.
+/// skip instead of failing — unless `FREQCA_REQUIRE_ARTIFACTS` is set
+/// (CI's artifacts job), in which case a missing directory is a test
+/// failure: a CI run that silently skipped every integration test must
+/// not be green.
 pub fn artifact_dir() -> Option<&'static str> {
-    const CANDIDATES: [&str; 2] =
-        ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")];
-    CANDIDATES.into_iter().find(|d| {
-        std::path::Path::new(d).join("meta_tiny.json").exists()
-    })
+    let found = freqca::util::artifact_dir_with("meta_tiny.json");
+    if found.is_none() && std::env::var_os("FREQCA_REQUIRE_ARTIFACTS").is_some()
+    {
+        panic!(
+            "FREQCA_REQUIRE_ARTIFACTS is set but no artifact directory was \
+             found (FREQCA_ARTIFACTS_DIR / ./artifacts / ../artifacts): \
+             artifact-gated tests would all self-skip"
+        );
+    }
+    found
 }

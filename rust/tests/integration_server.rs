@@ -33,7 +33,8 @@ fn spawn_server(port: u16, dir: &'static str) -> Arc<AtomicBool> {
 
 fn connect(port: u16) -> Client {
     let addr = format!("127.0.0.1:{port}");
-    for _ in 0..100 {
+    // Generous: a pool boots one runtime per worker before listening.
+    for _ in 0..300 {
         if let Ok(c) = Client::connect(&addr) {
             return c;
         }
@@ -117,6 +118,79 @@ fn server_end_to_end() {
         .unwrap_or(0);
     assert!(inter_completions >= 1, "per-class metrics: {m}");
 
+    stop.store(true, Ordering::Relaxed);
+}
+
+/// Multi-worker pool through the full TCP stack: every request
+/// completes correctly, placement accounts each one to some worker
+/// (`placed_w*` counters), and both workers are alive and publishing
+/// their per-worker gauges.
+#[test]
+fn pool_serves_and_places_across_workers() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let port = 17493;
+    let stop = Arc::new(AtomicBool::new(false));
+    let s = stop.clone();
+    std::thread::spawn(move || {
+        let opts = ServeOpts {
+            addr: format!("127.0.0.1:{port}"),
+            batch_wait_ms: 1,
+            queue_capacity: 32,
+            workers: 2,
+            ..ServeOpts::default()
+        };
+        let _ = serve(dir, opts, s);
+    });
+
+    let n_requests = 4u64;
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = connect(port);
+                // Two distinct batch keys so the placement layer has
+                // separate affinity streams to spread.
+                let policy =
+                    if i % 2 == 0 { "freqca:n=3" } else { "fora:n=3" };
+                let resp = c
+                    .generate(&req(100 + i, "tiny", policy, 6))
+                    .unwrap();
+                assert!(resp.ok, "error: {:?}", resp.error);
+                assert_eq!(resp.id, 100 + i);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mut c = connect(port);
+    let m = c.metrics().unwrap();
+    let counters = m.get("counters").expect("counters in metrics");
+    let placed: usize = (0..2)
+        .map(|w| {
+            counters
+                .get(&format!("placed_w{w}"))
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0)
+        })
+        .sum();
+    assert_eq!(placed as u64, n_requests, "metrics: {m}");
+    let gauges = m.get("gauges").expect("gauges in metrics");
+    assert_eq!(
+        gauges.get("pool_workers").and_then(|v| v.as_f64()),
+        Some(2.0),
+        "metrics: {m}"
+    );
+    // Both workers tick and publish their own gauge series.
+    for w in 0..2 {
+        assert!(
+            gauges.get(&format!("in_flight_sessions_w{w}")).is_some(),
+            "worker {w} never published gauges: {m}"
+        );
+    }
     stop.store(true, Ordering::Relaxed);
 }
 

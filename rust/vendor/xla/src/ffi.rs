@@ -1,0 +1,120 @@
+//! Raw C declarations of the `xla_extension` 0.5.1 wrapper library —
+//! the real-backend wiring point behind the `pjrt` feature.
+//!
+//! Nothing here is called yet: linking happens only when a build step
+//! provides `libxla_extension` (see DESIGN.md "Runtime backends").  The
+//! declarations exist so `cargo check --features pjrt` type-checks the
+//! native surface the wrapper types will bind to — CI's feature-matrix
+//! leg compiles this module on every push, so the real-backend path
+//! cannot silently rot while the default build uses the stub.
+//!
+//! The subset mirrors what `freqca` needs from the wrapper: client
+//! construction, host->device transfer, HLO-proto parsing, compilation,
+//! execution, and literal decomposition.  Status handling follows the
+//! wrapper's convention: functions return a `Status*` (null = OK) and
+//! write results through out-pointers.
+
+#![allow(non_camel_case_types)]
+
+use std::os::raw::{c_char, c_int};
+
+/// Opaque `xla::Status` handle (null pointer = success).
+#[repr(C)]
+pub struct status {
+    _unused: [u8; 0],
+}
+/// Opaque `xla::PjRtClient` handle.
+#[repr(C)]
+pub struct pjrt_client {
+    _unused: [u8; 0],
+}
+/// Opaque `xla::PjRtLoadedExecutable` handle.
+#[repr(C)]
+pub struct pjrt_loaded_executable {
+    _unused: [u8; 0],
+}
+/// Opaque `xla::PjRtBuffer` handle.
+#[repr(C)]
+pub struct pjrt_buffer {
+    _unused: [u8; 0],
+}
+/// Opaque `xla::HloModuleProto` handle.
+#[repr(C)]
+pub struct hlo_module_proto {
+    _unused: [u8; 0],
+}
+/// Opaque `xla::XlaComputation` handle.
+#[repr(C)]
+pub struct xla_computation {
+    _unused: [u8; 0],
+}
+/// Opaque `xla::Literal` handle.
+#[repr(C)]
+pub struct literal {
+    _unused: [u8; 0],
+}
+
+extern "C" {
+    pub fn pjrt_cpu_client_create(out: *mut *mut pjrt_client) -> *mut status;
+    pub fn pjrt_client_free(client: *mut pjrt_client);
+    pub fn pjrt_client_device_count(client: *mut pjrt_client) -> c_int;
+
+    pub fn pjrt_buffer_from_host_buffer(
+        client: *const pjrt_client,
+        device: c_int,
+        data: *const f32,
+        prim_type: c_int,
+        num_dims: c_int,
+        dims: *const i64,
+        out: *mut *mut pjrt_buffer,
+    ) -> *mut status;
+    pub fn pjrt_buffer_to_literal_sync(
+        buffer: *mut pjrt_buffer,
+        out: *mut *mut literal,
+    ) -> *mut status;
+    pub fn pjrt_buffer_free(buffer: *mut pjrt_buffer);
+
+    pub fn hlo_module_proto_parse_and_return_unverified_module(
+        text: *const c_char,
+        out: *mut *mut hlo_module_proto,
+    ) -> *mut status;
+    pub fn xla_computation_from_hlo_module_proto(
+        proto: *const hlo_module_proto,
+        out: *mut *mut xla_computation,
+    ) -> *mut status;
+    pub fn hlo_module_proto_free(proto: *mut hlo_module_proto);
+    pub fn xla_computation_free(computation: *mut xla_computation);
+
+    pub fn compile(
+        client: *const pjrt_client,
+        computation: *const xla_computation,
+        out: *mut *mut pjrt_loaded_executable,
+    ) -> *mut status;
+    pub fn execute_b(
+        executable: *const pjrt_loaded_executable,
+        args: *const *mut pjrt_buffer,
+        num_args: c_int,
+        out: *mut *mut *mut *mut pjrt_buffer,
+    ) -> *mut status;
+    pub fn pjrt_loaded_executable_free(executable: *mut pjrt_loaded_executable);
+
+    pub fn literal_shape_dimensions(
+        lit: *const literal,
+        index: c_int,
+    ) -> i64;
+    pub fn literal_element_count(lit: *const literal) -> i64;
+    pub fn literal_decompose_tuple(
+        lit: *mut literal,
+        out: *mut *mut literal,
+        num_elements: c_int,
+    ) -> *mut status;
+    pub fn literal_copy_to(
+        lit: *const literal,
+        dst: *mut f32,
+        element_count: i64,
+    ) -> *mut status;
+    pub fn literal_free(lit: *mut literal);
+
+    pub fn status_error_message(s: *const status) -> *const c_char;
+    pub fn status_free(s: *mut status);
+}

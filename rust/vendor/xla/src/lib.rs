@@ -8,19 +8,36 @@
 //! * `Literal::{shape, to_tuple, array_shape, to_vec}`
 //!
 //! Host-side buffer plumbing is real (uploads keep their data, so weight
-//! loading and cache-stack bookkeeping behave normally); anything that
-//! would need the native XLA compiler/executor returns
-//! [`Error::Unavailable`] so callers fail with an actionable message
-//! instead of a missing-symbol crash.
+//! loading and cache-stack bookkeeping behave normally).  Compilation
+//! and execution have two modes:
+//!
+//! * **pure stub** (default): anything that would need the native XLA
+//!   compiler/executor returns [`Error::Unavailable`] so callers fail
+//!   with an actionable message instead of a missing-symbol crash;
+//! * **delegated** (`FREQCA_HLO_RUNNER=<path to hlo_runner.py>`): each
+//!   client spawns a persistent python helper that parses, compiles and
+//!   executes the HLO-text artifacts through jax's bundled XLA CPU
+//!   client (see [`runner`]).  This is how CI and dev boxes — the
+//!   environments that ran `make artifacts` and therefore have
+//!   python + jax — exercise the real artifact path without the native
+//!   `xla_extension` library.  One helper process per client, so the
+//!   engine's one-client-per-worker layout maps to one executor (and
+//!   compile cache) per worker.
 //!
 //! Like the real wrapper types, none of these are `Send`: the serving
-//! coordinator's single-engine-thread design must hold under both
-//! backends, so the stub pins buffers to one thread the same way PJRT
-//! does (via a `PhantomData<Rc<()>>` marker).
+//! coordinator's one-runtime-per-worker-thread design must hold under
+//! both backends, so the stub pins buffers to one thread the same way
+//! PJRT does (via a `PhantomData<Rc<()>>` marker).
+
+#[cfg(feature = "pjrt")]
+pub mod ffi;
+mod runner;
 
 use std::fmt;
 use std::marker::PhantomData;
 use std::rc::Rc;
+
+use runner::SharedRunner;
 
 /// Marker making a type `!Send + !Sync`, matching the native wrappers.
 type NotSend = PhantomData<Rc<()>>;
@@ -102,45 +119,97 @@ impl XlaComputation {
     }
 }
 
-/// A "device"-resident buffer: host data + dims in the stub.
+/// A "device"-resident buffer: a host literal in the stub.  Inputs are
+/// always arrays; execution results may be tuples (all artifacts are
+/// lowered with `return_tuple=True`).
 pub struct PjRtBuffer {
-    data: Vec<f32>,
-    dims: Vec<usize>,
+    lit: Literal,
     _not_send: NotSend,
 }
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Ok(Literal::Array { data: self.data.clone(), dims: self.dims.clone() })
+        Ok(self.lit.clone())
+    }
+
+    /// Borrow as a dense array (argument marshalling for the runner).
+    fn as_array(&self) -> Result<(&[f32], &[usize])> {
+        match &self.lit {
+            Literal::Array { data, dims } => {
+                Ok((data.as_slice(), dims.as_slice()))
+            }
+            Literal::Tuple(_) => Err(Error::Invalid(
+                "tuple buffer passed as an execution argument".into(),
+            )),
+        }
     }
 }
 
-/// A compiled executable.  Construction already fails in the stub, but
-/// the type must exist for signatures; execution defers too.
+/// A compiled executable.  In pure-stub mode construction already
+/// fails, but the type must exist for signatures; with a runner it
+/// holds the artifact path (compiled and cached helper-side by
+/// [`PjRtClient::compile`]) and the shared transport.
 pub struct PjRtLoadedExecutable {
     path: String,
+    runner: Option<SharedRunner>,
     _not_send: NotSend,
 }
 
 impl PjRtLoadedExecutable {
-    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(Error::Unavailable(format!("cannot execute {}", self.path)))
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let Some(runner) = &self.runner else {
+            return Err(Error::Unavailable(format!(
+                "cannot execute {}",
+                self.path
+            )));
+        };
+        let mut arrs = Vec::with_capacity(args.len());
+        for a in args {
+            arrs.push(a.as_array()?);
+        }
+        let outs = runner.borrow_mut().execute(&self.path, &arrs)?;
+        // Mirror the native calling convention: one result buffer whose
+        // literal is the (possibly single-element) output tuple.
+        let lit = match outs.len() {
+            1 => outs.into_iter().next().expect("one output"),
+            _ => Literal::Tuple(outs),
+        };
+        Ok(vec![vec![PjRtBuffer { lit, _not_send: PhantomData }]])
     }
 }
 
 /// The PJRT client.  `cpu()` succeeds so host-only paths (buffer upload,
-/// weight residency, scheduler plumbing) work without the native library.
+/// weight residency, scheduler plumbing) work without the native
+/// library; with `FREQCA_HLO_RUNNER` set it also owns the executor
+/// subprocess that makes `compile`/`execute_b` real.
 pub struct PjRtClient {
+    runner: Option<SharedRunner>,
     _not_send: NotSend,
 }
 
 impl PjRtClient {
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient { _not_send: PhantomData })
+        Ok(PjRtClient { runner: runner::Runner::from_env()?, _not_send: PhantomData })
     }
 
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
-        Err(Error::Unavailable(format!("cannot compile {}", comp.path)))
+        match &self.runner {
+            Some(r) => {
+                // Eager: the helper compiles and caches now, so warmup
+                // really pre-compiles and compile errors surface here
+                // rather than inside the first sampling step.
+                r.borrow_mut().compile(&comp.path)?;
+                Ok(PjRtLoadedExecutable {
+                    path: comp.path.clone(),
+                    runner: Some(r.clone()),
+                    _not_send: PhantomData,
+                })
+            }
+            None => Err(Error::Unavailable(format!(
+                "cannot compile {}",
+                comp.path
+            ))),
+        }
     }
 
     pub fn buffer_from_host_buffer<T: NativeType>(
@@ -157,8 +226,10 @@ impl PjRtClient {
             )));
         }
         Ok(PjRtBuffer {
-            data: data.iter().map(|v| v.to_f32()).collect(),
-            dims: dims.to_vec(),
+            lit: Literal::Array {
+                data: data.iter().map(|v| v.to_f32()).collect(),
+                dims: dims.to_vec(),
+            },
             _not_send: PhantomData,
         })
     }
@@ -182,6 +253,7 @@ pub enum Shape {
 }
 
 /// A host literal.
+#[derive(Clone)]
 pub enum Literal {
     Array { data: Vec<f32>, dims: Vec<usize> },
     Tuple(Vec<Literal>),

@@ -1,0 +1,183 @@
+//! Subprocess transport to the python HLO executor
+//! (`python/compile/hlo_runner.py`).
+//!
+//! When the `FREQCA_HLO_RUNNER` environment variable names the helper
+//! script, every [`crate::PjRtClient`] spawns one long-lived python
+//! process (jax's CPU client) and delegates artifact execution to it
+//! over a length-prefixed binary protocol on stdin/stdout.  One child
+//! per client matches the engine's worker model: each worker owns a
+//! client, so each worker gets its own executor process and compile
+//! cache — the stub-backend analogue of one PJRT device per worker.
+//!
+//! Wire format (little-endian; mirrored in `hlo_runner.py`):
+//!
+//! ```text
+//! request:   u32 path_len, path, u32 n_args, args...
+//!            n_args == u32::MAX => compile-only, no args follow
+//! tensor:    u32 n_dims, u32 dims[n_dims], f32 data[prod(dims)]
+//! response:  u32 status; ok  -> u32 n_outs, outs...
+//!                        err -> u32 msg_len, msg
+//! ```
+//!
+//! Transport failures (child died, malformed frame) surface as
+//! [`Error::Unavailable`] with context; helper-reported execution errors
+//! keep the child alive and serving.
+
+use std::cell::RefCell;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::rc::Rc;
+
+use crate::{Error, Literal, Result};
+
+pub(crate) type SharedRunner = Rc<RefCell<Runner>>;
+
+pub(crate) struct Runner {
+    child: Child,
+    /// `Option` so `Drop` can close the pipe (EOF = clean shutdown)
+    /// before waiting on the child.
+    stdin: Option<BufWriter<ChildStdin>>,
+    stdout: BufReader<ChildStdout>,
+    script: String,
+}
+
+impl Runner {
+    /// Spawn the helper named by `FREQCA_HLO_RUNNER`, or `None` when the
+    /// variable is unset/empty (pure-stub mode).  `FREQCA_PYTHON`
+    /// overrides the interpreter (default `python3`).
+    pub(crate) fn from_env() -> Result<Option<SharedRunner>> {
+        let script = match std::env::var("FREQCA_HLO_RUNNER") {
+            Ok(s) if !s.is_empty() => s,
+            _ => return Ok(None),
+        };
+        if !std::path::Path::new(&script).is_file() {
+            return Err(Error::Invalid(format!(
+                "FREQCA_HLO_RUNNER names no file: {script}"
+            )));
+        }
+        let python = std::env::var("FREQCA_PYTHON")
+            .unwrap_or_else(|_| "python3".to_string());
+        let mut child = Command::new(&python)
+            .arg(&script)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .map_err(|e| {
+                Error::Unavailable(format!(
+                    "spawning HLO runner `{python} {script}`: {e}"
+                ))
+            })?;
+        let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
+        let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+        Ok(Some(Rc::new(RefCell::new(Runner {
+            child,
+            stdin: Some(stdin),
+            stdout,
+            script,
+        }))))
+    }
+
+    /// Ask the helper to compile (and cache) the artifact at `path`
+    /// without executing it — the warmup path.
+    pub(crate) fn compile(&mut self, path: &str) -> Result<()> {
+        self.request(path, None).map(|_| ())
+    }
+
+    /// Execute the artifact at `path` with host arrays `(data, dims)`,
+    /// returning the flattened tuple outputs.
+    pub(crate) fn execute(
+        &mut self,
+        path: &str,
+        args: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Literal>> {
+        self.request(path, Some(args))
+    }
+
+    /// One protocol round-trip; `args: None` is the compile-only op.
+    fn request(
+        &mut self,
+        path: &str,
+        args: Option<&[(&[f32], &[usize])]>,
+    ) -> Result<Vec<Literal>> {
+        let fail = |stage: &str, e: std::io::Error| {
+            Error::Unavailable(format!(
+                "HLO runner ({}) {stage}: {e}",
+                self.script
+            ))
+        };
+        {
+            let w = self.stdin.as_mut().expect("runner stdin open");
+            (|| -> std::io::Result<()> {
+                put_u32(w, path.len() as u32)?;
+                w.write_all(path.as_bytes())?;
+                let Some(args) = args else {
+                    put_u32(w, u32::MAX)?; // compile-only sentinel
+                    return w.flush();
+                };
+                put_u32(w, args.len() as u32)?;
+                for (data, dims) in args {
+                    put_u32(w, dims.len() as u32)?;
+                    for d in *dims {
+                        put_u32(w, *d as u32)?;
+                    }
+                    for v in *data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                w.flush()
+            })()
+            .map_err(|e| fail("request", e))?;
+        }
+        let r = &mut self.stdout;
+        let status = get_u32(r).map_err(|e| fail("response", e))?;
+        if status != 0 {
+            let len = get_u32(r).map_err(|e| fail("response", e))? as usize;
+            let mut msg = vec![0u8; len];
+            r.read_exact(&mut msg).map_err(|e| fail("response", e))?;
+            return Err(Error::Unavailable(format!(
+                "HLO runner failed on {path}: {}",
+                String::from_utf8_lossy(&msg)
+            )));
+        }
+        let n_outs = get_u32(r).map_err(|e| fail("response", e))?;
+        let mut outs = Vec::with_capacity(n_outs as usize);
+        for _ in 0..n_outs {
+            outs.push(get_tensor(r).map_err(|e| fail("response", e))?);
+        }
+        Ok(outs)
+    }
+}
+
+impl Drop for Runner {
+    fn drop(&mut self) {
+        // Closing stdin is the shutdown signal; reap so no zombie stays.
+        drop(self.stdin.take());
+        let _ = self.child.wait();
+    }
+}
+
+fn put_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn get_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn get_tensor(r: &mut impl Read) -> std::io::Result<Literal> {
+    let ndims = get_u32(r)? as usize;
+    let mut dims = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        dims.push(get_u32(r)? as usize);
+    }
+    let n: usize = dims.iter().product();
+    let mut bytes = vec![0u8; 4 * n];
+    r.read_exact(&mut bytes)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Literal::Array { data, dims })
+}

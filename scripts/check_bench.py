@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Gate the coordinator bench against the committed baseline.
+
+Usage: check_bench.py results/bench_coordinator.json \
+                      benches/baseline_coordinator.json
+
+The bench runs in deterministic virtual time, so a drift in the
+interactive-class TTFS tail is a real scheduling change, not noise; CI
+fails the run when it regresses more than `tolerance` (default 20%)
+over the committed baseline.  Also sanity-checks the multi-worker
+section so a malformed results file cannot pass silently (the bench
+binary asserts the same invariants before writing it).
+"""
+
+import json
+import sys
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        results = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+
+    measured = results["qos"]["qos"]["interactive"]["ttfs_p95_s"]
+    base = baseline["interactive_ttfs_p95_s"]
+    tol = baseline.get("tolerance", 0.2)
+    limit = base * (1 + tol)
+    print(
+        f"interactive TTFS p95: measured {measured * 1e3:.1f} ms, "
+        f"baseline {base * 1e3:.1f} ms, limit {limit * 1e3:.1f} ms"
+    )
+    if measured > limit:
+        print(f"FAIL: interactive TTFS p95 regressed > {tol * 100:.0f}%")
+        return 1
+
+    mw = results["multi_worker"]
+    prev = None
+    for k in ("workers_1", "workers_2", "workers_4"):
+        if mw[k]["dephasing"]["violations"] != 0:
+            print(f"FAIL: {k} exceeded the shared de-phase budget unforced")
+            return 1
+        p95 = mw[k]["short_jobs"]["completion_p95_s"]
+        if prev is not None and p95 >= prev:
+            print(f"FAIL: short-job p95 not monotone at {k}")
+            return 1
+        prev = p95
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
