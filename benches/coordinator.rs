@@ -9,10 +9,13 @@
 //! `results/bench_coordinator.json` with time-to-first-step and
 //! p50/p95/p99 completion latency per scheduling discipline, per QoS
 //! class, and per pool size (the `multi_worker` key: the real placement
-//! layer + per-worker schedulers sharing one de-phasing ledger), so
-//! future PRs have a tail-latency trajectory to compare against.  CI
-//! runs this bench and gates on the interactive TTFS tail against
-//! `benches/baseline_coordinator.json` (scripts/check_bench.py).
+//! layer + per-worker schedulers sharing one de-phasing ledger), plus
+//! the `feedback` key (error-feedback controller vs static de-phasing
+//! in virtual time) and — with artifacts present — the `live` key (the
+//! qos fixture through a real `Engine`), so future PRs have a
+//! tail-latency trajectory to compare against.  CI runs this bench and
+//! gates the interactive TTFS tail and the feedback full-compute count
+//! against `benches/baseline_coordinator.json` (scripts/check_bench.py).
 //!
 //! The scheduling comparisons replay the engine's actual policy
 //! (`coordinator::scheduler::Scheduler`) in *virtual time* — including
@@ -24,18 +27,23 @@
 
 use std::collections::VecDeque;
 use std::rc::Rc;
-use std::time::Duration;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use freqca::benchkit::{bench, BenchOpts, Table};
 use freqca::coordinator::batcher::Batcher;
+use freqca::coordinator::engine::{Engine, WorkItem};
 use freqca::coordinator::placement::{Placement, WorkerLoad};
 use freqca::coordinator::scheduler::{
     DephaseLedger, QosConfig, SchedState, Scheduler, StepKind,
 };
-use freqca::coordinator::{Priority, Request};
+use freqca::coordinator::{Priority, Request, Response};
+use freqca::feedback::{ErrorBudgetController, FeedbackConfig};
 use freqca::freq::{BandSpec, Decomp};
-use freqca::policy::{self, CachePolicy, FreqCa};
+use freqca::metrics::Metrics;
 use freqca::model::{weights, ModelConfig};
+use freqca::policy::{self, CachePolicy, FreqCa};
 use freqca::runtime::Runtime;
 use freqca::sampler::{generate_batch, BatchJob, JobSpec, SampleOpts};
 use freqca::server::DEFAULT_MAX_IN_FLIGHT;
@@ -372,6 +380,352 @@ fn simulate_pool(
         forced_full,
         makespan_s: makespan,
     }
+}
+
+// ---------------------------------------------------------------------
+// Error-feedback control plane in virtual time
+// ---------------------------------------------------------------------
+
+/// The feedback fixture: 8 concurrent standard sessions of 60 steps
+/// whose per-step prediction-error rate is heterogeneous (each session
+/// has a different base rate, mildly drifting over its trajectory) —
+/// exactly the shape where one fixed refresh interval is wrong in both
+/// directions: it overshoots the error budget on the hot sessions and
+/// wastes refreshes on the cold ones.
+const FEEDBACK_JOBS: usize = 8;
+const FEEDBACK_STEPS: usize = 60;
+const FEEDBACK_BASE_N: usize = 5;
+const FEEDBACK_BUDGET: f64 = 0.10;
+/// De-phasing budget of the feedback fixture (its own, *not* the qos
+/// scenario's — the recorded config must describe what actually ran).
+const FEEDBACK_MAX_FULL: usize = 2;
+const FEEDBACK_WINDOW: u64 = 8;
+
+/// Synthetic per-step prediction-error rate of job `job` at `step`:
+/// a per-job base rate (0.003 .. 0.025) modulated ±25% by a slow
+/// triangular drift with a per-job phase.
+fn feedback_error_rate(job: usize, step: usize) -> f64 {
+    let (lo, hi) = (0.003, 0.025);
+    let base = lo + (hi - lo) * job as f64 / (FEEDBACK_JOBS - 1) as f64;
+    let x = (step as f64 / FEEDBACK_STEPS as f64
+        + job as f64 / FEEDBACK_JOBS as f64)
+        % 1.0;
+    let tri = 1.0 - (2.0 * x - 1.0).abs();
+    base * (1.0 + 0.25 * (2.0 * tri - 1.0))
+}
+
+/// Aggregates of one feedback-arm run.
+struct FeedbackSim {
+    /// Full-compute steps issued (the cost to beat).
+    fulls: usize,
+    cached: usize,
+    /// Worst accumulated true proxy error any session carried into a
+    /// cached step (the quality bound the budget is supposed to hold).
+    peak_acc: f64,
+    /// Σ over cached steps of the accumulated proxy error at that step.
+    total_cost: f64,
+    /// Cached steps executed with the *true* accumulated proxy error
+    /// already over the budget (estimation lag; informational).
+    proxy_overshoots: usize,
+    /// Controller-side breaches of the *predicted* budget — unforced
+    /// breaches, asserted zero (the refresh override fires first).
+    unforced_breaches: u64,
+    dephased: usize,
+    forced_full: usize,
+    error_prioritized: usize,
+}
+
+/// Replay the error-feedback control plane in virtual time: the real
+/// `Scheduler` + `DephaseLedger`, the real per-session `FreqCa`
+/// policies, and (feedback arm) the real `ErrorBudgetController`s — on
+/// the synthetic error-rate model above.
+///
+/// * `with_feedback = false`: static de-phasing — every session runs
+///   the fixed `freqca:n=5` schedule, refresh tokens are assigned by
+///   the phase-only round-robin order (every error score is 0).
+/// * `with_feedback = true`: at every refresh the session probes
+///   (measured residual = accumulated true proxy error + this step's
+///   drift, exactly what `SamplerSession::step` measures host-side),
+///   the controller rescales the policy's interval, a pending budget
+///   breach forces a refresh (`next_step_kind`'s override), and the
+///   accumulated predicted error is the session's token priority.
+fn simulate_feedback(with_feedback: bool) -> FeedbackSim {
+    let cfg = QosConfig {
+        weights: [1, 1, 1],
+        aging_bound: 64,
+        max_full_per_window: FEEDBACK_MAX_FULL,
+        dephase_window: FEEDBACK_WINDOW,
+    };
+    let mut sched = Scheduler::new(cfg);
+    let spec = BandSpec::new(Decomp::Dct, 2);
+    let mut policies: Vec<FreqCa> = (0..FEEDBACK_JOBS)
+        .map(|_| FreqCa::new(FEEDBACK_BASE_N, spec, 3))
+        .collect();
+    let mut ctrls: Vec<ErrorBudgetController> = (0..FEEDBACK_JOBS)
+        .map(|_| {
+            ErrorBudgetController::new(FeedbackConfig {
+                error_budget: FEEDBACK_BUDGET,
+                ..FeedbackConfig::default()
+            })
+        })
+        .collect();
+    let mut state: Vec<SchedState<usize>> = (0..FEEDBACK_JOBS)
+        .map(|j| sched.admit(Priority::Standard, j))
+        .collect();
+    let mut step_idx = [0usize; FEEDBACK_JOBS];
+    let mut hist = [0usize; FEEDBACK_JOBS];
+    let mut acc_true = [0.0f64; FEEDBACK_JOBS];
+    let mut gap = [0usize; FEEDBACK_JOBS];
+    let mut live: Vec<usize> = (0..FEEDBACK_JOBS).collect();
+    let mut out = FeedbackSim {
+        fulls: 0,
+        cached: 0,
+        peak_acc: 0.0,
+        total_cost: 0.0,
+        proxy_overshoots: 0,
+        unforced_breaches: 0,
+        dephased: 0,
+        forced_full: 0,
+        error_prioritized: 0,
+    };
+    while !live.is_empty() {
+        // Refresh cache phase + error score, as `Engine::tick` does
+        // from `next_step_kind()` / `error_score_fp()`.
+        let mut view: Vec<SchedState<usize>> = live
+            .iter()
+            .map(|&j| {
+                let mut st = state[j];
+                st.next_kind = if with_feedback
+                    && hist[j] > 0
+                    && ctrls[j].would_breach_next()
+                {
+                    StepKind::Full
+                } else {
+                    policies[j].peek(step_idx[j], FEEDBACK_STEPS, hist[j])
+                };
+                st.err_score = if with_feedback {
+                    ctrls[j].err_score_fp()
+                } else {
+                    0
+                };
+                st
+            })
+            .collect();
+        let pick = sched.pick(&mut view).unwrap();
+        for (vi, &j) in live.iter().enumerate() {
+            state[j] = view[vi];
+        }
+        let j = live[pick.index];
+        let i = step_idx[j];
+        let rate = feedback_error_rate(j, i);
+        if pick.kind == StepKind::Full {
+            out.fulls += 1;
+            if with_feedback {
+                // Was this full the budget override's doing?  (Captured
+                // before the probe rescales the interval.)
+                let policy_said =
+                    policies[j].peek(i, FEEDBACK_STEPS, hist[j]);
+                if hist[j] > 0 {
+                    // The probe measures the residual the predictor
+                    // would have made *now*.
+                    ctrls[j].observe_probe(acc_true[j] + rate, gap[j]);
+                    let scale = ctrls[j].scale();
+                    policies[j].set_feedback_scale(scale);
+                }
+                ctrls[j].note_full();
+                if policy_said == StepKind::Cached {
+                    // Mirror `SamplerSession::step`: a forced refresh
+                    // re-anchors the policy's interval phase.
+                    policies[j].note_forced_refresh(i);
+                }
+            }
+            acc_true[j] = 0.0;
+            gap[j] = 0;
+            hist[j] = (hist[j] + 1).min(3);
+        } else {
+            out.cached += 1;
+            acc_true[j] += rate;
+            gap[j] += 1;
+            out.total_cost += acc_true[j];
+            out.peak_acc = out.peak_acc.max(acc_true[j]);
+            if acc_true[j] > FEEDBACK_BUDGET {
+                out.proxy_overshoots += 1;
+            }
+            if with_feedback {
+                ctrls[j].note_cached();
+            }
+        }
+        if pick.dephased {
+            out.dephased += 1;
+        }
+        if pick.forced_full {
+            out.forced_full += 1;
+        }
+        if pick.error_prioritized {
+            out.error_prioritized += 1;
+        }
+        step_idx[j] += 1;
+        if step_idx[j] == FEEDBACK_STEPS {
+            live.retain(|&x| x != j);
+        }
+    }
+    out.unforced_breaches = ctrls.iter().map(|c| c.breaches()).sum();
+    out
+}
+
+fn feedback_arm_json(sim: &FeedbackSim) -> Json {
+    Json::obj(vec![
+        ("full_steps", Json::num(sim.fulls as f64)),
+        ("cached_steps", Json::num(sim.cached as f64)),
+        ("peak_accumulated_error", Json::num(sim.peak_acc)),
+        ("total_error_cost", Json::num(sim.total_cost)),
+        ("proxy_overshoots", Json::num(sim.proxy_overshoots as f64)),
+        (
+            "unforced_budget_breaches",
+            Json::num(sim.unforced_breaches as f64),
+        ),
+        ("dephased", Json::num(sim.dephased as f64)),
+        ("forced_full", Json::num(sim.forced_full as f64)),
+        (
+            "error_prioritized",
+            Json::num(sim.error_prioritized as f64),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------------
+// Live-engine replay of the qos fixture (needs AOT artifacts)
+// ---------------------------------------------------------------------
+
+/// Artifact directory for the live-engine scenario: any model will do
+/// (CI's artifacts job builds only `tiny`, which the flux-sim-keyed
+/// [`artifact_dir`] misses; a full `make artifacts` has both).
+fn live_artifact_dir() -> Option<&'static str> {
+    artifact_dir().or_else(|| freqca::util::artifact_dir_with("meta_tiny.json"))
+}
+
+/// Drive the mixed-priority qos fixture through a **real `Engine`**
+/// (real runtime, real sessions, the same scheduler the virtual-time
+/// section replays) with wall-clock arrivals, and summarize per-class
+/// completion/TTFS from the actual responses — the ROADMAP's
+/// "real-runtime mixed-workload bench" item.
+fn run_live_qos(dir: &str) -> anyhow::Result<Json> {
+    let metrics = Arc::new(Metrics::new());
+    let mut engine = Engine::new(
+        dir,
+        Duration::from_millis(1),
+        256,
+        16,
+        QosConfig::default(),
+        metrics.clone(),
+    )?;
+    let model = engine
+        .models()
+        .into_iter()
+        .find(|m| engine.config(m).map(|c| !c.is_edit).unwrap_or(false))
+        .ok_or_else(|| anyhow::anyhow!("no generation model in {dir}"))?;
+    engine.warmup(&model)?; // compile outside the measured window
+    let cfg = engine
+        .config(&model)
+        .ok_or_else(|| anyhow::anyhow!("model {model} vanished"))?
+        .clone();
+
+    let mut jobs = qos_workload();
+    jobs.sort_by(|a, b| a.arrive_s.partial_cmp(&b.arrive_s).unwrap());
+    let mut receivers: Vec<(Receiver<Response>, Priority, bool)> =
+        Vec::with_capacity(jobs.len());
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    let mut outcomes: Vec<SimOutcome> = Vec::with_capacity(jobs.len());
+    while outcomes.len() < jobs.len() {
+        while next < jobs.len()
+            && jobs[next].arrive_s <= t0.elapsed().as_secs_f64()
+        {
+            let job = &jobs[next];
+            let prompt = workload::build_prompt(&cfg, next as u64)?;
+            let (tx, rx) = channel::<Response>();
+            engine.submit(WorkItem {
+                request: Request {
+                    id: next as u64,
+                    model: model.clone(),
+                    policy: "freqca:n=5".into(),
+                    priority: job.class,
+                    seed: next as u64,
+                    n_steps: job.n_steps,
+                    cond: prompt.cond,
+                    ref_img: None,
+                    return_latent: false,
+                    error_budget: None,
+                },
+                reply: tx,
+                enqueued: Instant::now(),
+            });
+            receivers.push((rx, job.class, job.short));
+            next += 1;
+        }
+        let ran = engine.tick();
+        for (rx, class, short) in &receivers {
+            while let Ok(resp) = rx.try_recv() {
+                anyhow::ensure!(
+                    resp.ok,
+                    "live request failed: {:?}",
+                    resp.error
+                );
+                outcomes.push(SimOutcome {
+                    // Arrival -> completion == queue wait + service.
+                    completion_s: resp.queue_s + resp.latency_s,
+                    ttfs_s: resp.ttfs_s,
+                    class: *class,
+                    short: *short,
+                });
+            }
+        }
+        if ran == 0 && next < jobs.len() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let by_class = |class: Priority| move |o: &SimOutcome| o.class == class;
+    let inter_p95 =
+        p95(&outcomes, &by_class(Priority::Interactive), |o| o.completion_s);
+    let batch_p95 =
+        p95(&outcomes, &by_class(Priority::Batch), |o| o.completion_s);
+    println!(
+        "\nlive engine ({model}): interactive completion p95 {:.1} ms vs \
+         batch {:.1} ms ({} dephased / {} forced)",
+        inter_p95 * 1e3,
+        batch_p95 * 1e3,
+        metrics.counter("steps_dephased"),
+        metrics.counter("steps_full_forced"),
+    );
+    // The class win must survive contact with the real runtime.
+    assert!(
+        inter_p95 < batch_p95,
+        "live interactive completion p95 must beat batch \
+         ({inter_p95} vs {batch_p95})"
+    );
+    Ok(Json::obj(vec![
+        ("model", Json::str(model)),
+        ("per_class", per_class_json(&outcomes)),
+        (
+            "counters",
+            Json::obj(vec![
+                (
+                    "steps_dephased",
+                    Json::num(metrics.counter("steps_dephased") as f64),
+                ),
+                (
+                    "steps_full_forced",
+                    Json::num(metrics.counter("steps_full_forced") as f64),
+                ),
+                (
+                    "requests_completed",
+                    Json::num(
+                        metrics.counter("requests_completed") as f64
+                    ),
+                ),
+            ]),
+        ),
+    ]))
 }
 
 /// Run-to-completion FIFO: the pre-PR-1 engine.  Each job holds the
@@ -923,7 +1277,104 @@ fn main() -> anyhow::Result<()> {
         "makespan_speedup_1_to_4".to_string(),
         Json::num(pool_makespan[0] / pool_makespan[2]),
     ));
-    let multi_worker_json = Json::Obj(pool_entries);
+    let multi_worker_json = Json::Obj(pool_entries.into_iter().collect());
+
+    // --- error-feedback control plane: the real controller + scheduler
+    // + ledger in virtual time, against static phase-only de-phasing on
+    // the same heterogeneous-error workload.  Acceptance: the feedback
+    // arm spends FEWER full computes, at an equal-or-lower worst-case
+    // accumulated proxy error, with zero unforced budget breaches —
+    // and the contended refresh tokens actually flow by error priority.
+    let fb_static = simulate_feedback(false);
+    let fb_live = simulate_feedback(true);
+    println!(
+        "\nerror-feedback workload ({FEEDBACK_JOBS} jobs x {FEEDBACK_STEPS} \
+         steps, base freqca:n={FEEDBACK_BASE_N}, budget {FEEDBACK_BUDGET}):"
+    );
+    println!(
+        "  static de-phasing : {} fulls, peak accumulated error {:.4}, \
+         {} over-budget cached steps",
+        fb_static.fulls, fb_static.peak_acc, fb_static.proxy_overshoots,
+    );
+    println!(
+        "  error feedback    : {} fulls ({:.1}% fewer), peak {:.4}, \
+         {} unforced breaches, {} error-prioritized tokens",
+        fb_live.fulls,
+        100.0 * fb_static.fulls.saturating_sub(fb_live.fulls) as f64
+            / fb_static.fulls as f64,
+        fb_live.peak_acc,
+        fb_live.unforced_breaches,
+        fb_live.error_prioritized,
+    );
+    table.row(vec![
+        "feedback fulls (static / controller)".into(),
+        format!("{}", fb_static.fulls),
+        format!("{}", fb_live.fulls),
+        format!(
+            "peak err {:.3} -> {:.3}",
+            fb_static.peak_acc, fb_live.peak_acc
+        ),
+    ]);
+    assert!(
+        fb_live.fulls < fb_static.fulls,
+        "the error-feedback controller must spend fewer full computes \
+         than static de-phasing ({} vs {})",
+        fb_live.fulls,
+        fb_static.fulls
+    );
+    assert!(
+        fb_live.peak_acc <= fb_static.peak_acc,
+        "feedback must not worsen the worst-case accumulated error \
+         ({} vs {})",
+        fb_live.peak_acc,
+        fb_static.peak_acc
+    );
+    assert_eq!(
+        fb_live.unforced_breaches, 0,
+        "the controller let the predicted error budget breach unforced"
+    );
+    assert!(
+        fb_live.error_prioritized > 0,
+        "contended refresh tokens never flowed by error priority"
+    );
+    let feedback_json = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("jobs", Json::num(FEEDBACK_JOBS as f64)),
+                ("steps", Json::num(FEEDBACK_STEPS as f64)),
+                ("base_n", Json::num(FEEDBACK_BASE_N as f64)),
+                ("error_budget", Json::num(FEEDBACK_BUDGET)),
+                (
+                    "max_full_per_window",
+                    Json::num(FEEDBACK_MAX_FULL as f64),
+                ),
+                ("dephase_window", Json::num(FEEDBACK_WINDOW as f64)),
+            ]),
+        ),
+        ("static", feedback_arm_json(&fb_static)),
+        ("feedback", feedback_arm_json(&fb_live)),
+        (
+            "full_steps_saved_frac",
+            Json::num(
+                fb_static.fulls.saturating_sub(fb_live.fulls) as f64
+                    / fb_static.fulls as f64,
+            ),
+        ),
+    ]);
+
+    // --- the same qos fixture through the LIVE engine, when artifacts
+    // exist (CI's artifacts job; any box after `make artifacts`).
+    let live_json = match live_artifact_dir() {
+        Some(dir) => Some(run_live_qos(dir)?),
+        None => {
+            eprintln!(
+                "[bench] artifacts/ absent — skipping live-engine qos \
+                 scenario"
+            );
+            None
+        }
+    };
 
     // --- batched vs sequential generation (needs AOT artifacts).
     if let Some(dir) = artifact_dir() {
@@ -1000,6 +1451,7 @@ fn main() -> anyhow::Result<()> {
         cond: vec![0.0; 32],
         ref_img: None,
         return_latent: false,
+        error_budget: None,
     };
     let r = bench("batcher push+drain 256 reqs", &opts, || {
         let mut b = Batcher::new(vec![1, 4], Duration::ZERO, 512);
@@ -1032,15 +1484,16 @@ fn main() -> anyhow::Result<()> {
     std::fs::create_dir_all(results)?;
     table.save_csv(&format!("{results}/bench_coordinator.csv"))?;
     let json_path = format!("{results}/bench_coordinator.json");
-    std::fs::write(
-        &json_path,
-        Json::obj(vec![
-            ("scheduling", sched_json),
-            ("qos", qos_json),
-            ("multi_worker", multi_worker_json),
-        ])
-        .to_string(),
-    )?;
+    let mut sections = vec![
+        ("scheduling".to_string(), sched_json),
+        ("qos".to_string(), qos_json),
+        ("multi_worker".to_string(), multi_worker_json),
+        ("feedback".to_string(), feedback_json),
+    ];
+    if let Some(live) = live_json {
+        sections.push(("live".to_string(), live));
+    }
+    std::fs::write(&json_path, Json::Obj(sections.into_iter().collect()).to_string())?;
     println!("wrote {json_path}");
     Ok(())
 }

@@ -97,6 +97,7 @@ fn main() -> Result<()> {
                         cond: workload::cond_vector(&u, cond_dim),
                         ref_img: None,
                         return_latent: false,
+                        error_budget: None,
                     };
                     let t = Instant::now();
                     let resp = cli.generate(&req)?;

@@ -87,6 +87,12 @@ impl CrfCache {
         self.entries.iter().map(|(s, _)| *s).collect()
     }
 
+    /// Iterate `(time, CRF)` pairs, oldest first (the error-feedback
+    /// probes combine the raw history host-side).
+    pub fn iter(&self) -> impl Iterator<Item = (f64, &Tensor)> + '_ {
+        self.entries.iter().map(|(s, t)| (*s, t))
+    }
+
     pub fn newest(&self) -> Option<&Tensor> {
         self.entries.back().map(|(_, t)| t)
     }

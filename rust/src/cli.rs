@@ -90,6 +90,7 @@ USAGE:
                   [--capacity 256] [--max-in-flight 8] [--warmup MODEL,...]
                   [--workers 0] [--qos-weights 8,4,1] [--aging-bound 64]
                   [--refresh-concurrency 2] [--dephase-window 8]
+                  [--feedback] [--error-budget 0.1]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
                   [--artifacts DIR]
@@ -98,6 +99,7 @@ USAGE:
   freqca request  [--addr 127.0.0.1:7463] [--model flux-sim]
                   [--policy freqca:n=7] [--priority standard] [--seed 0]
                   [--steps 50] [--prompt IDX] [--cond-dim 64]
+                  [--error-budget 0.1]
   freqca models   [--artifacts DIR]
   freqca metrics  [--addr 127.0.0.1:7463]
   freqca help
@@ -113,6 +115,13 @@ Priorities (QoS class of a served request): interactive | standard | batch
   --workers N engine workers, one runtime/PJRT client each; 0 = one per
   logical core.  Sessions are placed by batch-key affinity + class-aware
   least load (see coordinator::placement).
+Error feedback (serve --feedback / --error-budget E): per-band
+  prediction-error probes at every full step drive a per-session PI
+  controller that adapts each policy's caching aggressiveness (interval
+  stretch/shrink for freqca:n, threshold scaling for freqca-a/teacache),
+  forces a refresh before the accumulated predicted error exceeds E,
+  and hands contended refresh tokens to the highest-error session.
+  `request --error-budget E` opts a single request in over the wire.
 ";
 
 #[cfg(test)]

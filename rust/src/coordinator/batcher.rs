@@ -215,6 +215,7 @@ mod tests {
             cond: vec![],
             ref_img: None,
             return_latent: false,
+            error_budget: None,
         }
     }
 

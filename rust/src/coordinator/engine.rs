@@ -45,6 +45,7 @@ use super::scheduler::{
     DephaseLedger, QosConfig, SchedState, Scheduler, StepKind,
 };
 use super::{Priority, Request, Response};
+use crate::feedback::FeedbackConfig;
 use crate::metrics::Metrics;
 use crate::model::weights;
 use crate::policy;
@@ -146,6 +147,12 @@ pub struct Engine {
     sched: Scheduler,
     /// Router shed total already folded into the metrics counter.
     shed_seen: u64,
+    /// Error-feedback control plane for new sessions (None = off);
+    /// per-request `error_budget` overrides the budget (and opts a
+    /// request in even when the serve-level default is off).
+    feedback: Option<FeedbackConfig>,
+    /// Running peak of the CRF bytes held by this worker's sessions.
+    crf_peak_bytes: usize,
     /// Who this engine is within its pool (standalone engines get a
     /// private context from [`WorkerContext::standalone`]).
     worker: WorkerContext,
@@ -169,6 +176,7 @@ impl Engine {
             capacity,
             max_in_flight,
             qos,
+            None,
             metrics,
             worker,
         )
@@ -177,13 +185,17 @@ impl Engine {
     /// Load every model found in the artifact directory, as worker
     /// `worker.id` of a pool: the scheduler accounts full steps against
     /// the pool's shared de-phasing ledger and the engine publishes its
-    /// load to the shared placement board every tick.
+    /// load to the shared placement board every tick.  `feedback` turns
+    /// the error-feedback control plane on for every session this
+    /// worker starts.
+    #[allow(clippy::too_many_arguments)] // mirrors the serve surface
     pub fn with_worker(
         artifact_dir: &str,
         max_wait: Duration,
         capacity: usize,
         max_in_flight: usize,
         qos: QosConfig,
+        feedback: Option<FeedbackConfig>,
         metrics: Arc<Metrics>,
         worker: WorkerContext,
     ) -> Result<Engine> {
@@ -222,6 +234,8 @@ impl Engine {
             max_parked: max_in_flight,
             sched,
             shed_seen: 0,
+            feedback,
+            crf_peak_bytes: 0,
             worker,
         })
     }
@@ -339,6 +353,7 @@ impl Engine {
                     .session
                     .next_step_kind()
                     .unwrap_or(StepKind::Unknown);
+                st.err_score = s.session.error_score_fp();
                 st
             })
             .collect();
@@ -353,6 +368,9 @@ impl Engine {
         }
         if pick.forced_full {
             self.metrics.bump("steps_full_forced", 1);
+        }
+        if pick.error_prioritized {
+            self.metrics.bump("steps_error_prioritized", 1);
         }
         self.run_one_step(pick.index);
         1
@@ -496,6 +514,16 @@ impl Engine {
         let queued_by_class = self.router.queued_by_class();
         let in_flight_requests: usize =
             self.sessions.iter().map(|s| s.waiters.len()).sum();
+        // CRF cache memory held by every resident session (in-flight
+        // and parked both occupy device/host memory) — the serving
+        // observability of the paper's O(1)-per-session cache claim.
+        let crf_bytes: usize = self
+            .sessions
+            .iter()
+            .map(|s| s.session.cache_bytes())
+            .chain(self.parked.iter().map(|s| s.session.cache_bytes()))
+            .sum();
+        self.crf_peak_bytes = self.crf_peak_bytes.max(crf_bytes);
         // Overwrites the pool's optimistic queued bumps with real
         // depths — the board self-corrects every tick.
         *self.worker.board[self.worker.id].lock().unwrap() = WorkerLoad {
@@ -505,11 +533,15 @@ impl Engine {
             in_flight_requests,
             max_in_flight: self.max_in_flight,
             max_parked: self.max_parked,
+            crf_bytes,
+            crf_peak_bytes: self.crf_peak_bytes,
         };
         self.gauge("in_flight_sessions", self.sessions.len() as f64);
         self.gauge("parked_sessions", self.parked.len() as f64);
         self.gauge("in_flight_requests", in_flight_requests as f64);
         self.gauge("queued_requests", self.router.queued() as f64);
+        self.gauge("crf_bytes", crf_bytes as f64);
+        self.gauge("crf_peak_bytes", self.crf_peak_bytes as f64);
         for (class, depth) in Priority::ALL.iter().zip(queued_by_class) {
             self.gauge(
                 &format!("queued_requests_{}", class.name()),
@@ -528,6 +560,8 @@ impl Engine {
                 let l = *slot.lock().unwrap();
                 total.parked += l.parked;
                 total.in_flight_requests += l.in_flight_requests;
+                total.crf_bytes += l.crf_bytes;
+                total.crf_peak_bytes += l.crf_peak_bytes;
                 for s in 0..3 {
                     total.in_flight_by_class[s] += l.in_flight_by_class[s];
                     queued_per_class[s] += l.queued_by_class[s];
@@ -540,6 +574,11 @@ impl Engine {
                 "in_flight_requests",
                 total.in_flight_requests as f64,
             );
+            self.metrics.set_gauge("crf_bytes", total.crf_bytes as f64);
+            // Sum of per-worker peaks: an upper bound on the pool's
+            // simultaneous CRF footprint (the peaks need not align).
+            self.metrics
+                .set_gauge("crf_peak_bytes", total.crf_peak_bytes as f64);
             let queued: usize = queued_per_class.iter().sum();
             self.metrics.set_gauge("queued_requests", queued as f64);
             for (class, depth) in
@@ -638,7 +677,25 @@ impl Engine {
             })
             .collect();
         let bj = BatchJob { cfg, weights, jobs, n_steps: first.n_steps };
-        SamplerSession::new(&bj, pol, SampleOpts::default())
+        // Per-request error budget overrides the serve-level default
+        // (and opts the batch in even when the default is off; the
+        // batch key includes the budget, so it is batch-uniform).
+        let feedback = match (self.feedback, first.error_budget) {
+            (Some(fb), Some(budget)) => {
+                Some(FeedbackConfig { error_budget: budget, ..fb })
+            }
+            (Some(fb), None) => Some(fb),
+            (None, Some(budget)) => Some(FeedbackConfig {
+                error_budget: budget,
+                ..FeedbackConfig::default()
+            }),
+            (None, None) => None,
+        };
+        SamplerSession::new(
+            &bj,
+            pol,
+            SampleOpts { feedback, ..SampleOpts::default() },
+        )
     }
 
     /// Advance session `idx` by one step; complete or fail it as needed.
@@ -650,6 +707,27 @@ impl Engine {
         match outcome {
             Ok(StepOutcome::Ran { record, done }) => {
                 self.metrics.record_step(record.wall_s);
+                if let Some(p) = &record.probe {
+                    self.metrics.bump("feedback_probes", 1);
+                    // A zero-mass band yields an infinite relative
+                    // residual; keep it out of the histograms (one inf
+                    // sample would pin the series' mean forever).
+                    for (band, v) in
+                        [("low", p.low), ("high", p.high), ("all", p.overall)]
+                    {
+                        if v.is_finite() {
+                            self.metrics.record_band("probe_rel_l1", band, v);
+                        }
+                    }
+                    if let Some(scale) =
+                        self.sessions[idx].session.feedback_scale()
+                    {
+                        self.gauge("feedback_scale", scale);
+                    }
+                }
+                if record.feedback_forced {
+                    self.metrics.bump("feedback_forced_refresh", 1);
+                }
                 if record.step == 0 {
                     let now = Instant::now();
                     let class = self.sessions[idx].class;
@@ -675,6 +753,12 @@ impl Engine {
         let inflight = self.sessions.swap_remove(idx);
         let latency_s = inflight.started.elapsed().as_secs_f64();
         let InFlight { session, waiters, class, .. } = inflight;
+        // Defense-in-depth counter: stays 0 while the controller's
+        // refresh override is intact (see feedback::controller).
+        let breaches = session.feedback_breaches();
+        if breaches > 0 {
+            self.metrics.bump("error_budget_breaches", breaches);
+        }
         let results = match session.into_results() {
             Ok(r) => r,
             Err(e) => {
@@ -822,6 +906,7 @@ impl WorkerPool {
         capacity: usize,
         max_in_flight: usize,
         qos: QosConfig,
+        feedback: Option<FeedbackConfig>,
         metrics: Arc<Metrics>,
         workers: usize,
         warmup: &[String],
@@ -854,6 +939,7 @@ impl WorkerPool {
                         capacity,
                         max_in_flight,
                         qos,
+                        feedback,
                         worker_metrics,
                         ctx,
                     )

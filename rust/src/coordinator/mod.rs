@@ -115,6 +115,11 @@ pub struct Request {
     pub ref_img: Option<Vec<f32>>,
     /// Return the final latent in the response (costs bandwidth).
     pub return_latent: bool,
+    /// Per-request quality-error budget for the error-feedback control
+    /// plane (wire field `error_budget`; absent = the serve-level
+    /// default).  Setting it opts the request in even when the server
+    /// runs without `--feedback`.
+    pub error_budget: Option<f64>,
 }
 
 impl Request {
@@ -134,6 +139,10 @@ impl Request {
             Some(p) => Priority::parse(p)?,
             None => Priority::default(),
         };
+        let error_budget = j.get("error_budget").and_then(|v| v.as_f64());
+        if let Some(b) = error_budget {
+            crate::feedback::validate_error_budget(b)?;
+        }
         Ok(Request {
             id: j.get("id").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
             model: j.req_str("model")?.to_string(),
@@ -151,6 +160,7 @@ impl Request {
                 .get("return_latent")
                 .and_then(|v| v.as_bool())
                 .unwrap_or(false),
+            error_budget,
         })
     }
 
@@ -168,20 +178,28 @@ impl Request {
         if let Some(r) = &self.ref_img {
             pairs.push(("ref_img", Json::from_f32s(r)));
         }
+        if let Some(b) = self.error_budget {
+            pairs.push(("error_budget", Json::num(b)));
+        }
         Json::obj(pairs)
     }
 
     /// Batching key: requests that may share one device batch.  The
     /// priority class is part of the key (defensively — the per-class
     /// batcher queues already separate classes) so a session's QoS
-    /// class is always well-defined as the class of its whole batch.
+    /// class is always well-defined as the class of its whole batch;
+    /// the error budget is part of it because one controller serves the
+    /// whole batch.
     pub fn batch_key(&self) -> String {
         format!(
-            "{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}",
             self.model,
             self.policy,
             self.n_steps,
-            self.priority.name()
+            self.priority.name(),
+            self.error_budget
+                .map(|b| b.to_string())
+                .unwrap_or_default()
         )
     }
 }
@@ -291,6 +309,7 @@ mod tests {
             cond: vec![0.5, -0.25],
             ref_img: None,
             return_latent: true,
+            error_budget: None,
         };
         let j = r.to_json();
         let back = Request::from_json(&Json::parse(&j.to_string()).unwrap())
@@ -369,6 +388,7 @@ mod tests {
             cond: vec![],
             ref_img: None,
             return_latent: false,
+            error_budget: None,
         };
         let key_a = a.batch_key();
         a.policy = "freqca:n=7".into();
@@ -376,5 +396,36 @@ mod tests {
         let key_b = a.batch_key();
         a.priority = Priority::Batch;
         assert_ne!(key_b, a.batch_key());
+        let key_c = a.batch_key();
+        a.error_budget = Some(0.08);
+        assert_ne!(key_c, a.batch_key());
+    }
+
+    #[test]
+    fn error_budget_rides_the_wire() {
+        // Absent -> None (back-compatible wire format).
+        let j = Json::parse(r#"{"model":"m"}"#).unwrap();
+        assert_eq!(Request::from_json(&j).unwrap().error_budget, None);
+        // Present -> parsed and round-tripped.
+        let j =
+            Json::parse(r#"{"model":"m","error_budget":0.125}"#).unwrap();
+        let r = Request::from_json(&j).unwrap();
+        assert_eq!(r.error_budget, Some(0.125));
+        let back =
+            Request::from_json(&Json::parse(&r.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.error_budget, Some(0.125));
+        // A degenerate budget is a clean parse error, not a NaN time
+        // bomb in the controller.
+        for bad in ["0", "-0.5", "1e999"] {
+            let j = Json::parse(&format!(
+                r#"{{"model":"m","error_budget":{bad}}}"#
+            ))
+            .unwrap();
+            assert!(
+                Request::from_json(&j).is_err(),
+                "error_budget {bad} accepted"
+            );
+        }
     }
 }

@@ -60,6 +60,13 @@ pub struct WorkerLoad {
     pub max_in_flight: usize,
     /// The worker's parking-lot bound.
     pub max_parked: usize,
+    /// CRF cache bytes currently held by the worker's sessions
+    /// (in-flight + parked) and the worker's running peak.  Not a
+    /// placement input — carried so the pool can publish
+    /// `crf_bytes` / `crf_peak_bytes` aggregates from the board (the
+    /// paper's ~99% cache-memory claim, observable in serving).
+    pub crf_bytes: usize,
+    pub crf_peak_bytes: usize,
 }
 
 impl WorkerLoad {

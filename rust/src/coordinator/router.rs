@@ -204,6 +204,7 @@ mod tests {
             cond: vec![1.0; 4],
             ref_img: None,
             return_latent: false,
+            error_budget: None,
         }
     }
 

@@ -140,6 +140,12 @@ impl LedgerTxn<'_> {
         self.state.recent_full.len() >= self.max_full
     }
 
+    /// Full-step tokens still unspent in the trailing window at this
+    /// tick (the contention signal of error-priority assignment).
+    fn room(&self) -> usize {
+        self.max_full.saturating_sub(self.state.recent_full.len())
+    }
+
     /// Spend a token: this tick issued a full-compute step.
     fn note_full(mut self) {
         let t = self.tick;
@@ -233,6 +239,13 @@ pub struct SchedState<D: Ord + Copy> {
     pub credits: u32,
     /// Cache phase: device-cost class of the session's next step.
     pub next_kind: StepKind,
+    /// Accumulated predicted prediction error since the session's last
+    /// refresh, fixed-point 1e-6 (`SamplerSession::error_score_fp`,
+    /// fed by the error-feedback control plane; 0 when feedback is
+    /// off).  When the trailing window's remaining full-step budget
+    /// cannot cover every full-next credit holder, the token goes to
+    /// the highest score instead of the round-robin order.
+    pub err_score: u64,
 }
 
 impl<D: Ord + Copy> SchedState<D> {
@@ -262,6 +275,10 @@ pub struct Pick {
     /// (no cached-next credit holder existed, or the anti-starvation
     /// override fired) — the scheduler never idles the device.
     pub forced_full: bool,
+    /// A contended refresh token was redirected from the round-robin
+    /// order to the session with the highest accumulated predicted
+    /// error (the error-feedback ledger priority).
+    pub error_prioritized: bool,
 }
 
 /// The QoS scheduler: a monotonically increasing tick counter, the
@@ -334,6 +351,7 @@ impl Scheduler {
             deadline,
             credits: self.cfg.weights[class.slot()].max(1),
             next_kind: StepKind::Unknown,
+            err_score: 0,
         }
     }
 
@@ -380,8 +398,15 @@ impl Scheduler {
             })
             .map(|(i, _)| i);
 
-        let (idx, dephased, forced_full) = if let Some(i) = starved {
-            (i, false, over_budget && states[i].next_kind == StepKind::Full)
+        let (idx, dephased, forced_full, error_prioritized) = if let Some(i) =
+            starved
+        {
+            (
+                i,
+                false,
+                over_budget && states[i].next_kind == StepKind::Full,
+                false,
+            )
         } else {
             // 2. Class-major weighted order among credit holders.
             let key = |i: usize, s: &SchedState<D>| {
@@ -406,11 +431,48 @@ impl Scheduler {
                     .min_by_key(|(i, s)| key(*i, *s))
                     .map(|(i, _)| i)
                 {
-                    Some(alt) => (alt, true, false),
-                    None => (best, false, true),
+                    Some(alt) => (alt, true, false, false),
+                    None => (best, false, true, false),
+                }
+            } else if states[best].next_kind == StepKind::Full {
+                // 4. Error-priority token assignment: the window has
+                // room, but when fewer tokens remain than full-next
+                // credit holders of the leading class, the scarce
+                // refresh goes to the session with the highest
+                // accumulated predicted error (FoCa-style), not the
+                // round-robin order.  Ties — in particular the
+                // no-telemetry case where every score is 0 — fall back
+                // to the round-robin key, leaving the phase-only
+                // behaviour bit-identical.  Restricted to `best`'s
+                // class so QoS class-major ordering is untouched.
+                let room = txn.room();
+                let cls = states[best].class;
+                let contenders = states
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| {
+                        s.credits > 0
+                            && s.class == cls
+                            && s.next_kind == StepKind::Full
+                    })
+                    .map(|(i, _)| i)
+                    .collect::<Vec<_>>();
+                if contenders.len() > room {
+                    let win = contenders
+                        .into_iter()
+                        .min_by_key(|&i| {
+                            (
+                                Reverse(states[i].err_score),
+                                key(i, &states[i]),
+                            )
+                        })
+                        .expect("contenders contains best");
+                    (win, false, false, win != best)
+                } else {
+                    (best, false, false, false)
                 }
             } else {
-                (best, false, false)
+                (best, false, false, false)
             }
         };
 
@@ -429,6 +491,7 @@ impl Scheduler {
             kind: s.next_kind,
             dephased,
             forced_full,
+            error_prioritized,
         })
     }
 }
@@ -452,6 +515,7 @@ mod tests {
             deadline,
             credits,
             next_kind: StepKind::Unknown,
+            err_score: 0,
         }
     }
 
@@ -691,6 +755,221 @@ mod tests {
         let p = a.pick(&mut sa).unwrap();
         assert_eq!(p.kind, StepKind::Full);
         assert!(!p.forced_full && !p.dephased);
+    }
+
+    /// Error-priority token assignment: three full-next sessions, one
+    /// token left in the window — the highest accumulated-error session
+    /// gets it, not the round-robin head.
+    #[test]
+    fn contended_token_goes_to_the_highest_error_session() {
+        let cfg = QosConfig {
+            weights: [1, 1, 1],
+            aging_bound: u64::MAX,
+            max_full_per_window: 1,
+            dephase_window: 8,
+        };
+        let mut sched = Scheduler::new(cfg);
+        let mut states = vec![
+            st(Priority::Standard, 0, 0, 1),
+            st(Priority::Standard, 0, 1, 1),
+            st(Priority::Standard, 0, 2, 1),
+        ];
+        for s in states.iter_mut() {
+            s.next_kind = StepKind::Full;
+        }
+        states[0].err_score = 40_000;
+        states[1].err_score = 90_000;
+        states[2].err_score = 10_000;
+        // 3 full-next contenders, 1 token: session 1 (highest error)
+        // wins over session 0 (round-robin head by deadline).
+        let p = sched.pick(&mut states).unwrap();
+        assert_eq!((p.index, p.kind), (1, StepKind::Full));
+        assert!(p.error_prioritized && !p.dephased && !p.forced_full);
+        // The window is now spent: the next full-next pick defers as
+        // phase-only de-phasing always did.
+        states[2].next_kind = StepKind::Cached;
+        let p2 = sched.pick(&mut states).unwrap();
+        assert_eq!((p2.index, p2.kind), (2, StepKind::Cached));
+        assert!(p2.dephased && !p2.error_prioritized);
+    }
+
+    /// With no error telemetry (every score 0), the error-priority
+    /// branch degenerates to the pre-existing round-robin pick.
+    #[test]
+    fn zero_scores_leave_the_phase_only_order_unchanged() {
+        let cfg = QosConfig {
+            weights: [1, 1, 1],
+            aging_bound: u64::MAX,
+            max_full_per_window: 1,
+            dephase_window: 8,
+        };
+        let mut sched = Scheduler::new(cfg);
+        let mut states = vec![
+            st(Priority::Standard, 0, 1, 1),
+            st(Priority::Standard, 0, 0, 1),
+        ];
+        states[0].next_kind = StepKind::Full;
+        states[1].next_kind = StepKind::Full;
+        let p = sched.pick(&mut states).unwrap();
+        // Oldest deadline (session 1) wins, exactly as before.
+        assert_eq!(p.index, 1);
+        assert!(!p.error_prioritized);
+    }
+
+    /// Error priority never crosses class lines: a batch session with a
+    /// huge error score cannot steal the token from an interactive
+    /// full-next session.
+    #[test]
+    fn error_priority_respects_class_major_order() {
+        let cfg = QosConfig {
+            weights: [1, 1, 1],
+            aging_bound: u64::MAX,
+            max_full_per_window: 1,
+            dephase_window: 8,
+        };
+        let mut sched = Scheduler::new(cfg);
+        let mut states = vec![
+            st(Priority::Interactive, 0, 5, 1),
+            st(Priority::Batch, 0, 0, 1),
+        ];
+        states[0].next_kind = StepKind::Full;
+        states[1].next_kind = StepKind::Full;
+        states[1].err_score = 1_000_000;
+        let p = sched.pick(&mut states).unwrap();
+        assert_eq!(p.index, 0);
+        assert!(!p.error_prioritized);
+    }
+
+    /// Property (satellite): under random contention the token always
+    /// goes to a maximal-error session among the leading class's
+    /// full-next credit holders, and the winner ties back to the
+    /// round-robin head when scores are equal.
+    #[test]
+    fn contended_token_always_prefers_maximal_error() {
+        check(
+            "scheduler-error-priority",
+            Config { cases: 80, seed: 0x3e11 },
+            |rng: &mut Rng, _| {
+                let n = 2 + rng.below(6);
+                (0..n)
+                    .map(|_| {
+                        (
+                            rng.below(4) != 0, // 3/4 full-next
+                            rng.below(5) as u64 * 25_000, // err score
+                        )
+                    })
+                    .collect::<Vec<(bool, u64)>>()
+            },
+            |sessions| {
+                let cfg = QosConfig {
+                    weights: [1, 1, 1],
+                    aging_bound: u64::MAX,
+                    max_full_per_window: 1,
+                    dephase_window: 64,
+                };
+                let mut sched = Scheduler::new(cfg);
+                let mut states: Vec<SchedState<u64>> = sessions
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (full, err))| {
+                        let mut s =
+                            st(Priority::Standard, 0, i as u64, 1);
+                        s.next_kind = if *full {
+                            StepKind::Full
+                        } else {
+                            StepKind::Cached
+                        };
+                        s.err_score = *err;
+                        s
+                    })
+                    .collect();
+                let fulls: Vec<usize> = sessions
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (f, _))| *f)
+                    .map(|(i, _)| i)
+                    .collect();
+                let p = sched.pick(&mut states).unwrap();
+                // The round-robin head is session 0 (equal class,
+                // last_ran and credits; oldest deadline).  Error
+                // priority only engages when the head itself is
+                // full-next and more full-next contenders exist than
+                // the one remaining token.
+                if sessions[0].0 && fulls.len() > 1 {
+                    let max_err = fulls
+                        .iter()
+                        .map(|i| sessions[*i].1)
+                        .max()
+                        .unwrap();
+                    if sessions[p.index].1 != max_err
+                        || !fulls.contains(&p.index)
+                    {
+                        return Err(format!(
+                            "token to session {} (err {}), max err {max_err}",
+                            p.index, sessions[p.index].1
+                        ));
+                    }
+                } else if p.index != 0 {
+                    // Everywhere else the pre-existing order holds.
+                    return Err(format!(
+                        "uncontended pick {} != round-robin head 0",
+                        p.index
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Cross-scheduler invariant (satellite): with error priority live
+    /// on both sharers of one ledger, the pool-wide
+    /// `max_full_per_window` budget still holds — every full issued
+    /// while the shared window was spent is marked `forced_full`.
+    #[test]
+    fn shared_ledger_budget_holds_with_error_priority() {
+        let cfg = QosConfig {
+            weights: [1, 1, 1],
+            aging_bound: u64::MAX,
+            max_full_per_window: 2,
+            dephase_window: 6,
+        };
+        let ledger = DephaseLedger::from_config(&cfg);
+        let mut a = Scheduler::with_ledger(cfg, ledger.clone());
+        let mut b = Scheduler::with_ledger(cfg, ledger.clone());
+        let mut sa = vec![
+            st(Priority::Standard, 0, 0, 100),
+            st(Priority::Standard, 0, 1, 100),
+        ];
+        let mut sb = vec![
+            st(Priority::Standard, 0, 0, 100),
+            st(Priority::Standard, 0, 1, 100),
+        ];
+        let mut rng = Rng::new(0xfeed);
+        let mut unforced_over_budget = 0usize;
+        for t in 0..400 {
+            let (sched, states) = if t % 2 == 0 {
+                (&mut a, &mut sa)
+            } else {
+                (&mut b, &mut sb)
+            };
+            for s in states.iter_mut() {
+                s.next_kind = if rng.below(2) == 0 {
+                    StepKind::Full
+                } else {
+                    StepKind::Cached
+                };
+                s.err_score = rng.below(1_000_000) as u64;
+            }
+            let over = ledger.over_budget();
+            let p = sched.pick(states).unwrap();
+            if p.kind == StepKind::Full && over && !p.forced_full {
+                unforced_over_budget += 1;
+            }
+        }
+        assert_eq!(
+            unforced_over_budget, 0,
+            "error priority broke the pool-wide refresh budget"
+        );
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! The per-session error-budget controller (PI-style).
+//!
+//! One controller rides along with each sampling session.  Its input is
+//! the probe residual measured at every full step (the relative-L1
+//! error the predictor *would have* made, see [`super::probe`]); its
+//! outputs are
+//!
+//! * an **aggressiveness scale** for the session's policy
+//!   (`CachePolicy::set_feedback_scale`) — a multiplicative PI update
+//!   steering the measured residual-at-refresh toward the configured
+//!   budget: residual below budget → scale grows (stretch the interval
+//!   / raise the threshold, cache more), above → shrinks;
+//! * the **accumulated predicted error** of the cached steps since the
+//!   last refresh, estimated from the last measured per-step rate.  The
+//!   sampler forces a refresh before one more cached step would push it
+//!   past the budget ([`ErrorBudgetController::would_breach_next`]), and
+//!   the scheduler uses it as the session's refresh-token priority on
+//!   the shared de-phasing ledger ([`ErrorBudgetController::err_score_fp`]).
+
+/// Tunables of the error-feedback control plane (CLI: `--feedback`,
+/// `--error-budget`; wire: per-request `error_budget` override).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FeedbackConfig {
+    /// Accumulated relative-L1 prediction error allowed per refresh
+    /// interval — the quality-error budget E the controller steers to
+    /// and the session never exceeds unforced.
+    pub error_budget: f64,
+    /// Proportional gain on the normalized budget error
+    /// `(E - residual) / E`.
+    pub kp: f64,
+    /// Integral gain (the integral is clamped to ±[`INTEGRAL_CLAMP`]
+    /// for anti-windup).
+    pub ki: f64,
+    /// Clamp on the aggressiveness scale (and therefore on how far the
+    /// controller can stretch an interval policy's N).
+    pub min_scale: f64,
+    pub max_scale: f64,
+}
+
+/// Anti-windup clamp on the PI integral term.
+pub const INTEGRAL_CLAMP: f64 = 5.0;
+
+/// Clamp on the per-probe multiplicative update `1 + kp*e + ki*I`.
+const UPDATE_CLAMP: f64 = 0.5;
+
+/// Clamp on the normalized budget error, so a pathological probe (e.g.
+/// an infinite relative residual against a zero-norm band) cannot poison
+/// the integral.
+const ERROR_CLAMP: f64 = 8.0;
+
+/// Clamp on the raw probe residual: a zero-mass band makes the
+/// relative residual infinite (`probe::ratio`'s `rel_l1` convention);
+/// clamping keeps the rate estimate finite — the session still
+/// refreshes aggressively, but recovers as soon as finite probes
+/// return instead of pinning `rate = inf` forever.
+const RESIDUAL_CLAMP: f64 = 1e6;
+
+impl Default for FeedbackConfig {
+    fn default() -> FeedbackConfig {
+        FeedbackConfig {
+            error_budget: 0.10,
+            kp: 0.4,
+            ki: 0.08,
+            min_scale: 0.25,
+            max_scale: 4.0,
+        }
+    }
+}
+
+/// Per-session PI controller over probe residuals.  Pure data — the
+/// bench replays it in virtual time against synthetic error rates, the
+/// sampler feeds it real probe measurements.
+#[derive(Debug, Clone)]
+pub struct ErrorBudgetController {
+    cfg: FeedbackConfig,
+    /// Estimated per-cached-step error rate, from the last probe.
+    rate: f64,
+    /// Accumulated *predicted* error since the last full step.
+    accumulated: f64,
+    /// PI integral of the normalized budget error.
+    integral: f64,
+    scale: f64,
+    probes: u64,
+    breaches: u64,
+}
+
+impl ErrorBudgetController {
+    pub fn new(mut cfg: FeedbackConfig) -> ErrorBudgetController {
+        // Defense-in-depth behind the wire/CLI validation: a
+        // non-finite or non-positive budget would turn the PI update
+        // into NaN and poison the scale permanently.
+        if !cfg.error_budget.is_finite() || cfg.error_budget <= 0.0 {
+            cfg.error_budget = FeedbackConfig::default().error_budget;
+        }
+        ErrorBudgetController {
+            cfg,
+            rate: 0.0,
+            accumulated: 0.0,
+            integral: 0.0,
+            scale: 1.0,
+            probes: 0,
+            breaches: 0,
+        }
+    }
+
+    pub fn config(&self) -> &FeedbackConfig {
+        &self.cfg
+    }
+
+    /// A full-step probe measured `residual` (the relative-L1 error the
+    /// predictor would have made now) after `gap` cached steps since the
+    /// last refresh.  Updates the rate estimate (`gap` cached steps plus
+    /// the refreshed step itself carried the drift, hence `gap + 1`) and
+    /// the PI scale.
+    pub fn observe_probe(&mut self, residual: f64, gap: usize) {
+        self.probes += 1;
+        // `min` maps both inf and NaN onto the clamp (f64::min returns
+        // the non-NaN operand), so no probe can poison the rate.
+        let residual = residual.min(RESIDUAL_CLAMP);
+        self.rate = residual / (gap + 1) as f64;
+        let e = ((self.cfg.error_budget - residual)
+            / self.cfg.error_budget.max(1e-9))
+        .clamp(-ERROR_CLAMP, ERROR_CLAMP);
+        self.integral =
+            (self.integral + e).clamp(-INTEGRAL_CLAMP, INTEGRAL_CLAMP);
+        let u = (self.cfg.kp * e + self.cfg.ki * self.integral)
+            .clamp(-UPDATE_CLAMP, UPDATE_CLAMP);
+        self.scale = (self.scale * (1.0 + u))
+            .clamp(self.cfg.min_scale, self.cfg.max_scale);
+    }
+
+    /// A full step ran: the cache is fresh, predicted error resets.
+    pub fn note_full(&mut self) {
+        self.accumulated = 0.0;
+    }
+
+    /// A cached (predictor-only) step ran: accrue the estimated rate.
+    /// Counts a breach when the accumulated prediction exceeds the
+    /// budget — with the [`would_breach_next`](Self::would_breach_next)
+    /// refresh override in place this is defense-in-depth and stays 0.
+    pub fn note_cached(&mut self) {
+        self.accumulated += self.rate;
+        if self.accumulated > self.cfg.error_budget {
+            self.breaches += 1;
+        }
+    }
+
+    /// Would one more cached step push the accumulated predicted error
+    /// past the budget?  (False until the first probe establishes a
+    /// rate — warm-up refreshes are the policy's job.)
+    pub fn would_breach_next(&self) -> bool {
+        self.rate > 0.0
+            && self.accumulated + self.rate > self.cfg.error_budget
+    }
+
+    /// Accumulated predicted error since the last full step.
+    pub fn accumulated(&self) -> f64 {
+        self.accumulated
+    }
+
+    /// The current aggressiveness scale for the policy hook.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Estimated per-cached-step error rate.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    pub fn probes(&self) -> u64 {
+        self.probes
+    }
+
+    /// Predicted-error budget breaches observed (see
+    /// [`note_cached`](Self::note_cached)).
+    pub fn breaches(&self) -> u64 {
+        self.breaches
+    }
+
+    /// Fixed-point (1e-6) accumulated predicted error — the session's
+    /// refresh-token priority on the de-phasing ledger
+    /// (`SchedState::err_score`).
+    pub fn err_score_fp(&self) -> u64 {
+        (self.accumulated * 1e6 + 0.5).floor().max(0.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> ErrorBudgetController {
+        ErrorBudgetController::new(FeedbackConfig::default())
+    }
+
+    #[test]
+    fn scale_grows_under_budget_and_shrinks_over() {
+        let mut c = ctl();
+        // Residual well under the 0.10 budget -> cache more.
+        c.observe_probe(0.01, 4);
+        assert!(c.scale() > 1.0, "scale {}", c.scale());
+        let grown = c.scale();
+        // Residual over the budget -> refresh more.
+        for _ in 0..6 {
+            c.observe_probe(0.30, 4);
+        }
+        assert!(c.scale() < grown);
+        assert!(c.scale() < 1.0);
+    }
+
+    #[test]
+    fn scale_clamps_to_configured_range() {
+        let cfg = FeedbackConfig::default();
+        let mut c = ErrorBudgetController::new(cfg);
+        for _ in 0..100 {
+            c.observe_probe(0.0, 9); // maximal headroom every probe
+        }
+        assert!((c.scale() - cfg.max_scale).abs() < 1e-12);
+        for _ in 0..100 {
+            c.observe_probe(10.0, 0); // massively over budget
+        }
+        assert!((c.scale() - cfg.min_scale).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulation_and_breach_protection() {
+        let mut c = ctl();
+        // No probe yet: no rate, never predicts a breach.
+        assert!(!c.would_breach_next());
+        c.note_cached();
+        assert_eq!(c.accumulated(), 0.0);
+        // Probe: residual 0.09 over gap 2 -> rate 0.03.
+        c.observe_probe(0.09, 2);
+        assert!((c.rate() - 0.03).abs() < 1e-12);
+        c.note_full();
+        c.note_cached(); // 0.03
+        c.note_cached(); // 0.06
+        assert!(!c.would_breach_next()); // 0.09 <= 0.10
+        c.note_cached(); // 0.09
+        assert!(c.would_breach_next()); // 0.12 > 0.10
+        assert_eq!(c.breaches(), 0);
+        c.note_full();
+        assert_eq!(c.accumulated(), 0.0);
+        assert!(!c.would_breach_next());
+    }
+
+    #[test]
+    fn breach_counter_is_defense_in_depth() {
+        let mut c = ctl();
+        c.observe_probe(0.08, 0); // rate 0.08
+        c.note_full();
+        c.note_cached(); // 0.08 <= 0.10
+        assert_eq!(c.breaches(), 0);
+        c.note_cached(); // 0.16 > 0.10 (caller ignored would_breach_next)
+        assert_eq!(c.breaches(), 1);
+    }
+
+    #[test]
+    fn err_score_is_monotone_fixed_point() {
+        let mut c = ctl();
+        assert_eq!(c.err_score_fp(), 0);
+        c.observe_probe(0.05, 0);
+        c.note_full();
+        let mut prev = c.err_score_fp();
+        for _ in 0..3 {
+            c.note_cached();
+            let now = c.err_score_fp();
+            assert!(now > prev);
+            prev = now;
+        }
+        assert_eq!(prev, 150_000); // 3 * 0.05 * 1e6
+    }
+
+    #[test]
+    fn pathological_probe_cannot_poison_the_integral() {
+        let mut c = ctl();
+        c.observe_probe(f64::INFINITY, 0);
+        assert!(c.scale().is_finite());
+        assert!(c.scale() >= c.config().min_scale);
+        // The rate estimate is clamped finite (refresh aggressively,
+        // but recoverably), same for a NaN probe.
+        assert!(c.rate().is_finite());
+        c.observe_probe(f64::NAN, 0);
+        assert!(c.rate().is_finite() && c.scale().is_finite());
+        // Recovers once sane probes return.
+        for _ in 0..50 {
+            c.observe_probe(0.05, 4);
+        }
+        assert!(c.scale().is_finite());
+        assert!(c.scale() > c.config().min_scale);
+        assert!((c.rate() - 0.01).abs() < 1e-12);
+    }
+}

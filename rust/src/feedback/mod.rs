@@ -1,0 +1,84 @@
+//! The error-feedback control plane: per-band prediction-error probes,
+//! a per-session error-budget controller, and the session-side glue.
+//!
+//! FreqCa's serving layers schedule cache refreshes by *phase* (the
+//! fixed interval N, or a latent-drift threshold) — open loop.  The
+//! signal that actually bounds quality is the **prediction error**: how
+//! far the Hermite/reuse predictor's CRF would have been from the
+//! freshly computed one.  FoCa ("Forecast then Calibrate",
+//! arXiv:2508.16211) shows forecast residuals are the right trigger for
+//! recomputation; error-feedback event-driven caching closes the loop
+//! on *measured* error instead of a precomputed schedule.  This module
+//! is that loop, in three pieces:
+//!
+//! * [`probe`] — **per-band error probes**: at every full step the
+//!   sampler already holds both the CRF history and the freshly
+//!   computed CRF, so the counterfactual "what would the predictor have
+//!   produced right now?" is a pure host-side computation
+//!   (`policy::interp` weights + the same band split the `predict_*`
+//!   artifacts apply).  The probe reports relative-L1 residuals split
+//!   into the low and high frequency band ([`BandResiduals`]) —
+//!   unit-testable without artifacts, no extra device execution.
+//! * [`controller`] — a per-session PI-style
+//!   [`ErrorBudgetController`]: integrates probe residuals against a
+//!   configurable quality-error budget and adapts the session's caching
+//!   aggressiveness online through the policy's feedback hook
+//!   (`CachePolicy::set_feedback_scale`: threshold scaling for the
+//!   adaptive policies, interval stretch/shrink for fixed-N FreqCa).
+//!   Between probes it *predicts* the accumulated error of each cached
+//!   step from the last measured per-step rate; the session forces a
+//!   refresh before the prediction crosses the budget, so the budget is
+//!   never exceeded unforced.
+//! * **ledger priority** — the accumulated predicted error doubles as
+//!   the session's refresh priority on the shared de-phasing ledger:
+//!   when the pool-wide full-step budget is contended, tokens go to the
+//!   highest-error session, not the round-robin order
+//!   (`coordinator::scheduler`, `SchedState::err_score`).
+//!
+//! Data flow (`probe → controller → policy / ledger`):
+//!
+//! ```text
+//! full step ──▶ probe (CRF history vs fresh CRF, per band)
+//!                 │ residual, gap
+//!                 ▼
+//!           ErrorBudgetController ──scale──▶ CachePolicy hook (N / l)
+//!                 │ accumulated predicted error
+//!                 ├──▶ SamplerSession::next_step_kind (forced refresh
+//!                 │    when one more cached step would breach)
+//!                 └──▶ SchedState::err_score (ledger token priority)
+//! ```
+
+pub mod controller;
+pub mod probe;
+
+pub use controller::{ErrorBudgetController, FeedbackConfig};
+pub use probe::BandResiduals;
+
+use crate::policy::ProbeSpec;
+
+/// Validate a quality-error budget arriving from an external surface
+/// (wire field `error_budget`, CLI `--error-budget`): it must be finite
+/// and positive, or the PI controller's normalized update would go NaN
+/// and poison the scale.  One definition, shared by every entry point.
+pub fn validate_error_budget(budget: f64) -> anyhow::Result<()> {
+    if !budget.is_finite() || budget <= 0.0 {
+        anyhow::bail!(
+            "error budget must be a finite positive number, got {budget}"
+        );
+    }
+    Ok(())
+}
+
+/// Per-session feedback state the sampler carries: the controller plus
+/// the probe plan resolved from the session's policy.
+#[derive(Debug, Clone)]
+pub struct SessionFeedback {
+    pub controller: ErrorBudgetController,
+    pub probe: ProbeSpec,
+}
+
+impl SessionFeedback {
+    pub fn new(cfg: FeedbackConfig, probe: ProbeSpec) -> SessionFeedback {
+        SessionFeedback { controller: ErrorBudgetController::new(cfg), probe }
+    }
+}

@@ -1,0 +1,468 @@
+//! Per-band prediction-error probes.
+//!
+//! At a full step the sampler holds both the CRF history (what the
+//! predictor would have worked from) and the freshly computed CRF (the
+//! truth), so the counterfactual question — *how wrong would the
+//! cached-step predictor have been right now?* — is answerable with
+//! pure host math: the same `policy::interp` history weights the
+//! `predict_*` artifacts apply, and the same band split
+//! (`freq::radial_index`) the device kernels mask by.  No extra device
+//! execution, no artifacts needed — everything here is unit-tested on
+//! synthetic tensors.
+//!
+//! The residual is reported **per band** as relative L1 in the
+//! transform domain: `low = Σ_low |Δ̂_low| / Σ_low |truth|` where
+//! `Δ̂_low` is the low-band part of (low-predictor output − truth), and
+//! symmetrically for the high band with the high-order weights.  The
+//! per-band split matters because the paper's whole premise is that the
+//! two bands drift differently (low: slow/consistent → reuse, high:
+//! fast/oscillatory → Hermite forecast); the per-band telemetry shows
+//! which half of that premise is failing when quality drifts.
+
+use anyhow::{bail, Result};
+
+use crate::freq::{dct, fft, mask, Decomp};
+use crate::policy::ProbeSpec;
+use crate::util::Tensor;
+
+/// Relative-L1 residuals of the counterfactual prediction, split by
+/// frequency band (transform domain).  `overall` pools both bands'
+/// numerators/denominators (== plain relative L1 for `Decomp::None`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BandResiduals {
+    pub low: f64,
+    pub high: f64,
+    pub overall: f64,
+}
+
+/// Prediction weights over a `hist_s.len()`-slot history for one band:
+/// order 0 = reuse of the newest entry, order m = least-squares Hermite
+/// fit through the newest `m + 1` entries (degraded gracefully when the
+/// history is shorter), zero-padded on the old side.  Delegates to the
+/// same `policy::order_weights_f64` the real predictor uses — the
+/// probe's counterfactual cannot drift from the deployed weights.
+pub fn prediction_weights(
+    hist_s: &[f64],
+    s_target: f64,
+    order: usize,
+) -> Result<Vec<f64>> {
+    if hist_s.is_empty() {
+        bail!("empty history");
+    }
+    crate::policy::order_weights_f64(hist_s, s_target, order, hist_s.len())
+}
+
+/// The probe: counterfactual per-band residuals of predicting `truth`
+/// (the freshly computed CRF at normalized time `s_target`) from the
+/// cached history.  `hist` is oldest-first and element-aligned with
+/// `truth`; `grid` is the token grid side (`tokens = grid * grid`) and
+/// `dim` the feature width — the element count must factor into
+/// `[B, grid*grid, dim]` planes (editing models carry 2 planes per
+/// batch element: generated + reference tokens, both `grid`-square).
+pub fn probe_residuals(
+    hist_s: &[f64],
+    hist: &[&Tensor],
+    s_target: f64,
+    probe: &ProbeSpec,
+    grid: usize,
+    dim: usize,
+    truth: &Tensor,
+) -> Result<BandResiduals> {
+    if hist.is_empty() || hist.len() != hist_s.len() {
+        bail!(
+            "probe history mismatch: {} tensors, {} timesteps",
+            hist.len(),
+            hist_s.len()
+        );
+    }
+    let len = truth.data.len();
+    for h in hist {
+        if h.data.len() != len {
+            bail!("probe history entry shape differs from the fresh CRF");
+        }
+    }
+
+    let lw = prediction_weights(hist_s, s_target, probe.low_order)?;
+    // Low-predictor residual per element.
+    let dl = combine_minus(hist, &lw, &truth.data);
+
+    if probe.spec.decomp == Decomp::None {
+        // One band carries everything: plain relative L1.
+        let num: f64 = dl.iter().map(|v| v.abs()).sum();
+        let den: f64 = truth.data.iter().map(|v| v.abs() as f64).sum();
+        let r = ratio(num, den);
+        return Ok(BandResiduals { low: r, high: 0.0, overall: r });
+    }
+
+    let hw = prediction_weights(hist_s, s_target, probe.high_order)?;
+    let dh = combine_minus(hist, &hw, &truth.data);
+
+    let t = grid * grid;
+    if dim == 0 || t == 0 || len % (t * dim) != 0 {
+        bail!(
+            "CRF of {len} elements does not factor into [B, {t}, {dim}] \
+             (grid {grid})"
+        );
+    }
+    let b = len / (t * dim);
+
+    let mut num_low = 0.0f64;
+    let mut den_low = 0.0f64;
+    let mut num_high = 0.0f64;
+    let mut den_high = 0.0f64;
+    let mut plane = vec![0.0f32; t];
+    let mut band_low = vec![false; t];
+    for u in 0..grid {
+        for v in 0..grid {
+            band_low[u * grid + v] = mask::radial_index(
+                probe.spec.decomp,
+                grid,
+                u,
+                v,
+            ) <= probe.spec.cutoff;
+        }
+    }
+    // DFT matrices for the FFT decomposition (dense: works on any grid
+    // side, matching the device kernels' runtime-input basis).
+    let dft = if probe.spec.decomp == Decomp::Fft {
+        let (fr, fi) = fft::dft_matrices_tensor(grid);
+        Some((to_f64(&fr.data), to_f64(&fi.data)))
+    } else {
+        None
+    };
+    // Per-band mass discarded when a plane only feeds one band's sum.
+    let mut sink = 0.0f64;
+    for bi in 0..b {
+        for d in 0..dim {
+            // Truth plane -> both denominators.
+            for tok in 0..t {
+                plane[tok] = truth.data[(bi * t + tok) * dim + d];
+            }
+            accumulate_bands(
+                &plane,
+                grid,
+                &band_low,
+                dft.as_ref(),
+                &mut den_low,
+                &mut den_high,
+            );
+            // Low-predictor residual plane -> low numerator.
+            for tok in 0..t {
+                plane[tok] = dl[(bi * t + tok) * dim + d] as f32;
+            }
+            accumulate_bands(
+                &plane,
+                grid,
+                &band_low,
+                dft.as_ref(),
+                &mut num_low,
+                &mut sink,
+            );
+            // High-predictor residual plane -> high numerator.
+            for tok in 0..t {
+                plane[tok] = dh[(bi * t + tok) * dim + d] as f32;
+            }
+            accumulate_bands(
+                &plane,
+                grid,
+                &band_low,
+                dft.as_ref(),
+                &mut sink,
+                &mut num_high,
+            );
+        }
+    }
+    Ok(BandResiduals {
+        low: ratio(num_low, den_low),
+        high: ratio(num_high, den_high),
+        overall: ratio(num_low + num_high, den_low + den_high),
+    })
+}
+
+/// `Σ_k w[k] * hist[k] - truth`, in f64.
+fn combine_minus(hist: &[&Tensor], w: &[f64], truth: &[f32]) -> Vec<f64> {
+    let mut out = vec![0.0f64; truth.len()];
+    for (wk, h) in w.iter().zip(hist) {
+        if *wk == 0.0 {
+            continue;
+        }
+        for (o, v) in out.iter_mut().zip(&h.data) {
+            *o += wk * *v as f64;
+        }
+    }
+    for (o, tv) in out.iter_mut().zip(truth) {
+        *o -= *tv as f64;
+    }
+    out
+}
+
+/// Transform one [g, g] plane and add its per-band absolute coefficient
+/// mass into `low` / `high`.
+fn accumulate_bands(
+    plane: &[f32],
+    g: usize,
+    band_low: &[bool],
+    dft: Option<&(Vec<f64>, Vec<f64>)>,
+    low: &mut f64,
+    high: &mut f64,
+) {
+    match dft {
+        None => {
+            let coef = dct::dct2(plane, g);
+            for (c, is_low) in coef.iter().zip(band_low) {
+                if *is_low {
+                    *low += c.abs() as f64;
+                } else {
+                    *high += c.abs() as f64;
+                }
+            }
+        }
+        Some((fr, fi)) => {
+            // Y = F X F^T over complex F = Fr + i Fi, X real:
+            // A = Fr X, B = Fi X; Re Y = A Fr^T - B Fi^T,
+            // Im Y = A Fi^T + B Fr^T.
+            let x: Vec<f64> = plane.iter().map(|v| *v as f64).collect();
+            let a = matmul(fr, &x, g);
+            let bm = matmul(fi, &x, g);
+            let re = sub(&matmul_t(&a, fr, g), &matmul_t(&bm, fi, g));
+            let im = add(&matmul_t(&a, fi, g), &matmul_t(&bm, fr, g));
+            for i in 0..g * g {
+                let mag = (re[i] * re[i] + im[i] * im[i]).sqrt();
+                if band_low[i] {
+                    *low += mag;
+                } else {
+                    *high += mag;
+                }
+            }
+        }
+    }
+}
+
+fn to_f64(v: &[f32]) -> Vec<f64> {
+    v.iter().map(|x| *x as f64).collect()
+}
+
+/// C = A * B for row-major [g, g] matrices.
+fn matmul(a: &[f64], b: &[f64], g: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; g * g];
+    for i in 0..g {
+        for k in 0..g {
+            let aik = a[i * g + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..g {
+                c[i * g + j] += aik * b[k * g + j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A * B^T.
+fn matmul_t(a: &[f64], b: &[f64], g: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; g * g];
+    for i in 0..g {
+        for j in 0..g {
+            let mut s = 0.0;
+            for k in 0..g {
+                s += a[i * g + k] * b[j * g + k];
+            }
+            c[i * g + j] = s;
+        }
+    }
+    c
+}
+
+fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// num / den with the `rel_l1` zero conventions.
+fn ratio(num: f64, den: f64) -> f64 {
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::freq::BandSpec;
+
+    fn spec(decomp: Decomp, cutoff: usize) -> ProbeSpec {
+        ProbeSpec {
+            spec: BandSpec::new(decomp, cutoff),
+            low_order: 0,
+            high_order: 2,
+        }
+    }
+
+    /// A [1, g*g, dim] CRF whose planes are filled by `f(tok, d)`.
+    fn crf(g: usize, dim: usize, f: impl Fn(usize, usize) -> f32) -> Tensor {
+        let t = g * g;
+        let mut data = vec![0.0f32; t * dim];
+        for tok in 0..t {
+            for d in 0..dim {
+                data[tok * dim + d] = f(tok, d);
+            }
+        }
+        Tensor::new(vec![1, t, dim], data).unwrap()
+    }
+
+    #[test]
+    fn weights_match_policy_semantics() {
+        // Order 0 = reuse of the newest.
+        assert_eq!(
+            prediction_weights(&[-1.0, -0.9, -0.8], 0.0, 0).unwrap(),
+            vec![0.0, 0.0, 1.0]
+        );
+        // Order 2 over 3 points: partition of unity, padded to K.
+        let w = prediction_weights(&[-1.0, -0.5, 0.0], 0.5, 2).unwrap();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // Short history degrades the order instead of erroring.
+        let w = prediction_weights(&[-1.0], 0.5, 2).unwrap();
+        assert_eq!(w, vec![1.0]);
+    }
+
+    #[test]
+    fn perfect_history_probes_zero() {
+        // If every history entry equals the truth, both predictors are
+        // exact (their weights are a partition of unity): every band
+        // residual is zero.
+        let g = 4;
+        let truth = crf(g, 2, |tok, d| (tok * 2 + d) as f32 * 0.25 - 1.0);
+        let hist = [&truth, &truth];
+        for d in [Decomp::Dct, Decomp::Fft, Decomp::None] {
+            let r = probe_residuals(
+                &[-1.0, -0.9],
+                &hist,
+                -0.8,
+                &spec(d, 1),
+                g,
+                2,
+                &truth,
+            )
+            .unwrap();
+            assert!(r.low.abs() < 1e-6, "{d:?} low {}", r.low);
+            assert!(r.high.abs() < 1e-6, "{d:?} high {}", r.high);
+            assert!(r.overall.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn high_band_error_stays_out_of_the_low_band() {
+        // History = truth + a pure high-frequency DCT component: the
+        // (reused) low band is exact, all residual lands in the high
+        // band.
+        let g = 4;
+        let dim = 1;
+        let truth = crf(g, dim, |tok, _| 1.0 + 0.1 * tok as f32);
+        // Add the highest DCT basis function (u = v = g-1) in space.
+        let basis = dct::dct_matrix(g);
+        let hi = |tok: usize| {
+            let (u, v) = (tok / g, tok % g);
+            (basis[(g - 1) * g + u] * basis[(g - 1) * g + v]) as f32
+        };
+        let newest =
+            crf(g, dim, |tok, _| 1.0 + 0.1 * tok as f32 + 0.5 * hi(tok));
+        let hist = [&newest];
+        let r = probe_residuals(
+            &[-1.0],
+            &hist,
+            -0.9,
+            &spec(Decomp::Dct, 1),
+            g,
+            dim,
+            &truth,
+        )
+        .unwrap();
+        assert!(r.low.abs() < 1e-5, "low leaked: {}", r.low);
+        assert!(r.high > 0.1, "high missed: {}", r.high);
+        assert!(r.overall > 0.0 && r.overall < r.high);
+    }
+
+    #[test]
+    fn hermite_high_order_is_exact_on_linear_drift() {
+        // Entries linear in s: an order-2 (>= 1) Hermite fit predicts
+        // the target exactly, even extrapolating; the order-0 low band
+        // reuses the newest entry and is off by the drift.
+        let g = 2;
+        let mk = |s: f64| crf(g, 2, move |tok, d| (s * 2.0) as f32 + (tok + d) as f32);
+        let (za, zb, zc) = (mk(-1.0), mk(-0.9), mk(-0.8));
+        let truth = mk(-0.6);
+        let hist = [&za, &zb, &zc];
+        let r = probe_residuals(
+            &[-1.0, -0.9, -0.8],
+            &hist,
+            -0.6,
+            &spec(Decomp::Dct, 0),
+            g,
+            2,
+            &truth,
+        )
+        .unwrap();
+        assert!(r.high.abs() < 1e-4, "hermite not exact: {}", r.high);
+        assert!(r.low > 0.0, "reuse should miss the drift");
+    }
+
+    #[test]
+    fn none_decomp_is_plain_rel_l1() {
+        let g = 2;
+        let truth = crf(g, 1, |_, _| 1.0);
+        let newest = crf(g, 1, |_, _| 1.2);
+        let hist = [&newest];
+        let r = probe_residuals(
+            &[-1.0],
+            &hist,
+            -0.9,
+            &spec(Decomp::None, 0),
+            g,
+            1,
+            &truth,
+        )
+        .unwrap();
+        assert!((r.low - 0.2).abs() < 1e-6);
+        assert_eq!(r.high, 0.0);
+        assert!((r.overall - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_mismatched_history() {
+        let g = 2;
+        let truth = crf(g, 1, |_, _| 1.0);
+        let small = Tensor::new(vec![1, 2, 1], vec![0.0, 0.0]).unwrap();
+        let hist = [&small];
+        assert!(probe_residuals(
+            &[-1.0],
+            &hist,
+            -0.9,
+            &spec(Decomp::Dct, 1),
+            g,
+            1,
+            &truth
+        )
+        .is_err());
+        let empty: [&Tensor; 0] = [];
+        assert!(probe_residuals(
+            &[],
+            &empty,
+            -0.9,
+            &spec(Decomp::Dct, 1),
+            g,
+            1,
+            &truth
+        )
+        .is_err());
+    }
+}

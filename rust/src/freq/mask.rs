@@ -37,7 +37,7 @@ impl Decomp {
 }
 
 /// A band split: decomposition + low-band radial cutoff (inclusive).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BandSpec {
     pub decomp: Decomp,
     /// Coefficients with radial index <= cutoff are "low".  The paper

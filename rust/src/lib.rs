@@ -36,6 +36,7 @@ pub mod benchkit;
 pub mod cache;
 pub mod cli;
 pub mod coordinator;
+pub mod feedback;
 pub mod freq;
 pub mod harness;
 pub mod imaging;

@@ -10,6 +10,7 @@ use anyhow::{anyhow, Result};
 use freqca::cli::{Args, USAGE};
 use freqca::coordinator::scheduler::{parse_weights, QosConfig};
 use freqca::coordinator::{Priority, Request};
+use freqca::feedback::FeedbackConfig;
 use freqca::metrics::Metrics;
 use freqca::model::weights;
 use freqca::policy;
@@ -66,6 +67,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         dephase_window: args
             .u64_or("dephase-window", defaults.dephase_window)?,
     };
+    // `--feedback` turns the error-feedback control plane on with the
+    // default gains; `--error-budget E` implies it and sets the budget.
+    let feedback = if args.bool("feedback") || args.get("error-budget").is_some()
+    {
+        let fb = FeedbackConfig::default();
+        let budget = args.f64_or("error-budget", fb.error_budget)?;
+        freqca::feedback::validate_error_budget(budget)?;
+        Some(FeedbackConfig { error_budget: budget, ..fb })
+    } else {
+        None
+    };
     let opts = ServeOpts {
         addr: args.str_or("addr", "127.0.0.1:7463"),
         batch_wait_ms: args.u64_or("wait-ms", 5)?,
@@ -80,6 +92,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // 0 = auto: one engine worker (own PJRT client + resident
         // weights) per logical core.
         workers: args.usize_or("workers", 0)?,
+        feedback,
     };
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
     server::serve(&artifacts, opts, Arc::new(AtomicBool::new(false)))
@@ -106,6 +119,16 @@ fn cmd_request(args: &Args) -> Result<()> {
         cond: freqca::workload::cond_vector(&unit, cond_dim),
         ref_img: None,
         return_latent: false,
+        // Per-request error budget (opts the request into the
+        // error-feedback control plane; overrides the serve default).
+        error_budget: match args.get("error-budget") {
+            Some(_) => {
+                let b = args.f64_or("error-budget", 0.0)?;
+                freqca::feedback::validate_error_budget(b)?;
+                Some(b)
+            }
+            None => None,
+        },
     };
     let mut client = Client::connect(&addr)?;
     let resp = client.generate(&request)?;

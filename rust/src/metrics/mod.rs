@@ -120,6 +120,15 @@ impl Metrics {
             .record(seconds);
     }
 
+    /// Record one sample of a per-band series (probe residuals from the
+    /// error-feedback control plane).  Bands share the keyed-histogram
+    /// store with the per-class series (`"{metric}:{band}"`), so they
+    /// surface under `per_class` in the metrics JSON alongside the
+    /// class latencies.
+    pub fn record_band(&self, metric: &str, band: &str, value: f64) {
+        self.record_class(metric, band, value);
+    }
+
     /// Summary of one per-class series (`None` when never recorded).
     pub fn class_summary(
         &self,
@@ -337,6 +346,28 @@ mod tests {
             j.get("per_class")
                 .unwrap()
                 .get("completion_s:batch")
+                .unwrap()
+                .get("n")
+                .unwrap()
+                .as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn per_band_residual_histograms_roundtrip() {
+        let m = Metrics::new();
+        m.record_band("probe_rel_l1", "low", 0.01);
+        m.record_band("probe_rel_l1", "low", 0.03);
+        m.record_band("probe_rel_l1", "high", 0.20);
+        let s = m.class_summary("probe_rel_l1", "low").unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.02).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("per_class")
+                .unwrap()
+                .get("probe_rel_l1:high")
                 .unwrap()
                 .get("n")
                 .unwrap()

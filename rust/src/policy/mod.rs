@@ -71,6 +71,17 @@ pub enum StepKind {
     Unknown,
 }
 
+/// How the error-feedback probe should counterfactually predict at a
+/// full step: the policy's band split plus its per-band prediction
+/// orders (`feedback::probe` combines the cached history with exactly
+/// these weights, host-side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeSpec {
+    pub spec: BandSpec,
+    pub low_order: usize,
+    pub high_order: usize,
+}
+
 pub trait CachePolicy {
     /// Human-readable name used in the table rows.
     fn name(&self) -> String;
@@ -94,15 +105,60 @@ pub trait CachePolicy {
 
     /// Reset internal state between requests.
     fn reset(&mut self) {}
+
+    // --- the FeedbackHook surface (error-feedback control plane) -----
+
+    /// Feedback hook: scale this policy's caching aggressiveness online
+    /// (`feedback::ErrorBudgetController` calls this between steps).
+    /// `scale > 1` caches more — stretch the interval / raise the
+    /// threshold — `scale < 1` refreshes more.  Both `decide` and
+    /// `peek` must honour the scale (it only changes at step
+    /// boundaries, so peek/decide agreement is preserved).  Default:
+    /// no-op — the policy does not support feedback.
+    fn set_feedback_scale(&mut self, scale: f64) {
+        let _ = scale;
+    }
+
+    /// The scale currently applied (1.0 = neutral / unsupported).
+    fn feedback_scale(&self) -> f64 {
+        1.0
+    }
+
+    /// A full forward ran at `step` *outside* this policy's own
+    /// decision (the error-budget override forced a refresh after
+    /// `decide` had chosen a predicted step).  The cache is fresh now:
+    /// interval policies re-anchor their phase here and threshold
+    /// policies drop the drift they accumulated, so the forced refresh
+    /// is not immediately followed by a redundant scheduled one.
+    /// Default: no-op.
+    fn note_forced_refresh(&mut self, step: usize) {
+        let _ = step;
+    }
+
+    /// The probe plan for this policy's predictor, or `None` when there
+    /// is nothing to probe (the uncached baseline).
+    fn probe_spec(&self) -> Option<ProbeSpec> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------
 // Shared helpers
 // ---------------------------------------------------------------------
 
-/// Weights for an order-`order` prediction over the newest cached entries,
-/// padded to the full K slots.  Order 0 = direct reuse of the newest.
-fn order_weights(hist_s: &[f64], s: f64, order: usize, k: usize) -> Result<Vec<f32>> {
+/// Weights for an order-`order` prediction over the newest cached
+/// entries, zero-padded to `k` slots (f64).  Order 0 = direct reuse of
+/// the newest; higher orders fit the newest `order + 1` entries,
+/// degrading the order gracefully on short histories.  Shared by the
+/// policies (converted to f32 for the device) and the error probes
+/// (`feedback::probe`), so the counterfactual probe can never drift
+/// from the weights the real predictor applies.
+pub(crate) fn order_weights_f64(
+    hist_s: &[f64],
+    s: f64,
+    order: usize,
+    k: usize,
+) -> Result<Vec<f64>> {
     let w = if order == 0 {
         interp::reuse_weights(1)
     } else {
@@ -111,7 +167,13 @@ fn order_weights(hist_s: &[f64], s: f64, order: usize, k: usize) -> Result<Vec<f
         let eff_order = order.min(use_n - 1);
         interp::poly_weights(tail, s, eff_order)?
     };
-    Ok(interp::to_f32(&interp::pad_left(&w, k)))
+    Ok(interp::pad_left(&w, k))
+}
+
+/// Device-facing f32 view of [`order_weights_f64`] over the full K
+/// history slots.
+fn order_weights(hist_s: &[f64], s: f64, order: usize, k: usize) -> Result<Vec<f32>> {
+    Ok(interp::to_f32(&order_weights_f64(hist_s, s, order, k)?))
 }
 
 // ---------------------------------------------------------------------
@@ -130,11 +192,38 @@ pub struct FreqCa {
     pub high_order: usize,
     /// History capacity K (from the model metadata; 3 in this repo).
     pub k: usize,
+    /// Error-feedback aggressiveness (1.0 = the configured N; the
+    /// control plane stretches/shrinks the effective interval online).
+    feedback_scale: f64,
+    /// Phase anchor: interval fulls fire at `(step - anchor) % n_eff`.
+    /// 0 until a budget-forced refresh re-anchors the schedule there
+    /// (otherwise the next `step % n == 0` would run a redundant full
+    /// right after the forced one).
+    anchor: usize,
 }
 
 impl FreqCa {
     pub fn new(n: usize, spec: BandSpec, k: usize) -> FreqCa {
-        FreqCa { n, spec, low_order: 0, high_order: 2, k }
+        FreqCa {
+            n,
+            spec,
+            low_order: 0,
+            high_order: 2,
+            k,
+            feedback_scale: 1.0,
+            anchor: 0,
+        }
+    }
+
+    /// The interval actually applied: N stretched/shrunk by the
+    /// feedback scale (half-up rounding, floor 1).
+    fn effective_n(&self) -> usize {
+        ((self.n as f64 * self.feedback_scale).round() as usize).max(1)
+    }
+
+    /// Is `step` on the (anchored) interval phase?
+    fn on_interval(&self, step: usize) -> bool {
+        step.saturating_sub(self.anchor) % self.effective_n() == 0
     }
 }
 
@@ -155,7 +244,7 @@ impl CachePolicy for FreqCa {
         // always finish with a final full step (the last step decides the
         // sample's fine detail; all baselines share this rule).
         let need = self.high_order.max(self.low_order) + 1;
-        if ctx.step % self.n == 0
+        if self.on_interval(ctx.step)
             || ctx.hist_s.len() < need
             || ctx.step + 1 == ctx.n_steps
         {
@@ -171,11 +260,36 @@ impl CachePolicy for FreqCa {
 
     fn peek(&self, step: usize, n_steps: usize, hist_len: usize) -> StepKind {
         let need = self.high_order.max(self.low_order) + 1;
-        if step % self.n == 0 || hist_len < need || step + 1 == n_steps {
+        if self.on_interval(step) || hist_len < need || step + 1 == n_steps {
             StepKind::Full
         } else {
             StepKind::Cached
         }
+    }
+
+    fn reset(&mut self) {
+        self.anchor = 0;
+        self.feedback_scale = 1.0;
+    }
+
+    fn set_feedback_scale(&mut self, scale: f64) {
+        self.feedback_scale = scale;
+    }
+
+    fn feedback_scale(&self) -> f64 {
+        self.feedback_scale
+    }
+
+    fn note_forced_refresh(&mut self, step: usize) {
+        self.anchor = step;
+    }
+
+    fn probe_spec(&self) -> Option<ProbeSpec> {
+        Some(ProbeSpec {
+            spec: self.spec,
+            low_order: self.low_order,
+            high_order: self.high_order,
+        })
     }
 }
 
@@ -218,6 +332,15 @@ impl CachePolicy for Fora {
         } else {
             StepKind::Cached
         }
+    }
+
+    fn probe_spec(&self) -> Option<ProbeSpec> {
+        // Whole-feature reuse: one band carries everything.
+        Some(ProbeSpec {
+            spec: BandSpec::new(Decomp::None, 0),
+            low_order: 0,
+            high_order: 0,
+        })
     }
 }
 
@@ -262,6 +385,15 @@ impl CachePolicy for TaylorSeer {
             StepKind::Cached
         }
     }
+
+    fn probe_spec(&self) -> Option<ProbeSpec> {
+        // Whole-feature polynomial forecast: probe with the same order.
+        Some(ProbeSpec {
+            spec: BandSpec::new(Decomp::None, 0),
+            low_order: self.order,
+            high_order: self.order,
+        })
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -277,11 +409,13 @@ pub struct TeaCache {
     pub threshold: f64,
     pub k: usize,
     acc: f64,
+    /// Error-feedback aggressiveness (scales the effective threshold).
+    feedback_scale: f64,
 }
 
 impl TeaCache {
     pub fn new(threshold: f64, k: usize) -> TeaCache {
-        TeaCache { threshold, k, acc: 0.0 }
+        TeaCache { threshold, k, acc: 0.0, feedback_scale: 1.0 }
     }
 }
 
@@ -296,7 +430,7 @@ impl CachePolicy for TeaCache {
             None => f64::INFINITY,
         };
         self.acc += drift;
-        if self.acc >= self.threshold
+        if self.acc >= self.threshold * self.feedback_scale
             || ctx.hist_s.is_empty()
             || ctx.step + 1 == ctx.n_steps
         {
@@ -326,6 +460,29 @@ impl CachePolicy for TeaCache {
 
     fn reset(&mut self) {
         self.acc = 0.0;
+        self.feedback_scale = 1.0;
+    }
+
+    fn set_feedback_scale(&mut self, scale: f64) {
+        self.feedback_scale = scale;
+    }
+
+    fn feedback_scale(&self) -> f64 {
+        self.feedback_scale
+    }
+
+    fn note_forced_refresh(&mut self, _step: usize) {
+        // The forced full re-anchored the drift reference: drop the
+        // accumulated indicator as if the policy had refreshed itself.
+        self.acc = 0.0;
+    }
+
+    fn probe_spec(&self) -> Option<ProbeSpec> {
+        Some(ProbeSpec {
+            spec: BandSpec::new(Decomp::None, 0),
+            low_order: 0,
+            high_order: 0,
+        })
     }
 }
 
@@ -375,6 +532,14 @@ impl CachePolicy for Toca {
         // Every ToCa step runs the full forward on this substrate
         // (partial refresh = full pass + token scatter).
         StepKind::Full
+    }
+
+    fn probe_spec(&self) -> Option<ProbeSpec> {
+        Some(ProbeSpec {
+            spec: BandSpec::new(Decomp::None, 0),
+            low_order: 0,
+            high_order: 0,
+        })
     }
 }
 
@@ -428,6 +593,14 @@ impl CachePolicy for Duca {
             StepKind::Cached // predictor-only step of the alternation
         }
     }
+
+    fn probe_spec(&self) -> Option<ProbeSpec> {
+        Some(ProbeSpec {
+            spec: BandSpec::new(Decomp::None, 0),
+            low_order: 0,
+            high_order: 0,
+        })
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -446,6 +619,8 @@ pub struct FreqCaAdaptive {
     pub high_order: usize,
     pub k: usize,
     acc: f64,
+    /// Error-feedback aggressiveness (scales the effective threshold).
+    feedback_scale: f64,
 }
 
 impl FreqCaAdaptive {
@@ -457,6 +632,7 @@ impl FreqCaAdaptive {
             high_order: 2,
             k,
             acc: 0.0,
+            feedback_scale: 1.0,
         }
     }
 }
@@ -478,7 +654,7 @@ impl CachePolicy for FreqCaAdaptive {
         };
         self.acc += drift;
         let need = self.high_order.max(self.low_order) + 1;
-        if self.acc >= self.threshold
+        if self.acc >= self.threshold * self.feedback_scale
             || ctx.hist_s.len() < need
             || ctx.step + 1 == ctx.n_steps
         {
@@ -504,6 +680,29 @@ impl CachePolicy for FreqCaAdaptive {
 
     fn reset(&mut self) {
         self.acc = 0.0;
+        self.feedback_scale = 1.0;
+    }
+
+    fn set_feedback_scale(&mut self, scale: f64) {
+        self.feedback_scale = scale;
+    }
+
+    fn feedback_scale(&self) -> f64 {
+        self.feedback_scale
+    }
+
+    fn note_forced_refresh(&mut self, _step: usize) {
+        // As in `decide`'s own Full arm: the refresh resets the drift
+        // accumulator (the forced full re-anchored `x_at_last_full`).
+        self.acc = 0.0;
+    }
+
+    fn probe_spec(&self) -> Option<ProbeSpec> {
+        Some(ProbeSpec {
+            spec: self.spec,
+            low_order: self.low_order,
+            high_order: self.high_order,
+        })
     }
 }
 
@@ -571,6 +770,8 @@ pub fn parse_policy(
             low_order,
             high_order: order,
             k,
+            feedback_scale: 1.0,
+            anchor: 0,
         }),
         "freqca-a" => Box::new(FreqCaAdaptive {
             threshold,
@@ -579,6 +780,7 @@ pub fn parse_policy(
             high_order: order,
             k,
             acc: 0.0,
+            feedback_scale: 1.0,
         }),
         "fora" => Box::new(Fora { n, k }),
         "taylorseer" => Box::new(TaylorSeer { n, order, k }),
@@ -786,6 +988,109 @@ mod tests {
         assert_eq!(TeaCache::new(0.5, k).peek(0, 50, 0), StepKind::Full);
         assert_eq!(TeaCache::new(0.5, k).peek(5, 50, 2), StepKind::Unknown);
         assert_eq!(TeaCache::new(0.5, k).peek(49, 50, 2), StepKind::Full);
+    }
+
+    #[test]
+    fn feedback_scale_stretches_freqca_interval() {
+        let spec = BandSpec::new(Decomp::Dct, 2);
+        let mut p = FreqCa::new(5, spec, 3);
+        let hist = [-1.0, -0.9, -0.8];
+        let x = [0.0f32; 4];
+        // Neutral: step 5 is an interval full, step 6 is cached.
+        assert_eq!(p.peek(5, 50, 3), StepKind::Full);
+        assert_eq!(p.peek(6, 50, 3), StepKind::Cached);
+        // Stretched 2x: the interval becomes 10.
+        p.set_feedback_scale(2.0);
+        assert!((p.feedback_scale() - 2.0).abs() < 1e-12);
+        assert_eq!(p.peek(5, 50, 3), StepKind::Cached);
+        assert_eq!(p.peek(10, 50, 3), StepKind::Full);
+        assert!(matches!(
+            p.decide(&ctx(5, 50, &hist, &x)).unwrap(),
+            Action::Predict(_)
+        ));
+        // Shrunk to the floor: every step refreshes.
+        p.set_feedback_scale(0.01);
+        assert_eq!(p.peek(7, 50, 3), StepKind::Full);
+        // Scaled schedules keep peek/decide agreement.
+        let mut scaled = FreqCa::new(5, spec, 3);
+        scaled.set_feedback_scale(1.6);
+        assert_peek_agrees(&mut scaled, 50, 3);
+    }
+
+    #[test]
+    fn feedback_scale_raises_teacache_threshold() {
+        let mut p = TeaCache::new(0.5, 3);
+        p.set_feedback_scale(2.0); // effective threshold 1.0
+        let x0 = [1.0f32, 1.0];
+        let x1 = [1.2f32, 1.2]; // rel_l1 = 0.2 per step
+        let hist = [-1.0];
+        let c = StepCtx {
+            step: 1,
+            n_steps: 50,
+            s: 0.0,
+            hist_s: &hist,
+            x: &x1,
+            x_at_last_full: Some(&x0),
+        };
+        // 0.2, 0.4 would already refresh at l=0.5; scaled to 1.0 the
+        // fourth step (0.8 -> 1.0) is the first refresh.
+        for _ in 0..4 {
+            assert!(matches!(p.decide(&c).unwrap(), Action::Predict(_)));
+        }
+        assert!(matches!(p.decide(&c).unwrap(), Action::Full));
+    }
+
+    #[test]
+    fn forced_refresh_reanchors_schedules_and_drops_drift() {
+        // FreqCa: scheduled fulls at 0, 5, 10...; a forced refresh at
+        // step 4 re-anchors the phase so step 5 is NOT a redundant
+        // full — the next interval full is step 9.
+        let mut p = FreqCa::new(5, BandSpec::new(Decomp::Dct, 2), 3);
+        p.note_forced_refresh(4);
+        assert_eq!(p.peek(5, 50, 3), StepKind::Cached);
+        assert_eq!(p.peek(8, 50, 3), StepKind::Cached);
+        assert_eq!(p.peek(9, 50, 3), StepKind::Full);
+        // reset() clears the anchor between requests.
+        p.reset();
+        assert_eq!(p.peek(5, 50, 3), StepKind::Full);
+
+        // TeaCache: the forced refresh drops the accumulated drift, as
+        // the policy's own Full arm would have.
+        let mut tc = TeaCache::new(0.5, 3);
+        let x0 = [1.0f32, 1.0];
+        let x1 = [1.4f32, 1.4]; // rel_l1 = 0.4 per decide
+        let hist = [-1.0];
+        let c = StepCtx {
+            step: 1,
+            n_steps: 50,
+            s: 0.0,
+            hist_s: &hist,
+            x: &x1,
+            x_at_last_full: Some(&x0),
+        };
+        assert!(matches!(tc.decide(&c).unwrap(), Action::Predict(_)));
+        tc.note_forced_refresh(1); // acc 0.4 -> 0
+        // Without the re-anchor this would hit 0.8 >= 0.5 and refresh.
+        assert!(matches!(tc.decide(&c).unwrap(), Action::Predict(_)));
+    }
+
+    #[test]
+    fn probe_specs_mirror_the_predictors() {
+        let spec = BandSpec::new(Decomp::Dct, 2);
+        let p = FreqCa::new(5, spec, 3).probe_spec().unwrap();
+        assert_eq!(p.spec, spec);
+        assert_eq!((p.low_order, p.high_order), (0, 2));
+        let p = TaylorSeer { n: 6, order: 2, k: 3 }.probe_spec().unwrap();
+        assert_eq!(p.spec.decomp, Decomp::None);
+        assert_eq!((p.low_order, p.high_order), (2, 2));
+        let p = TeaCache::new(0.5, 3).probe_spec().unwrap();
+        assert_eq!(p.spec.decomp, Decomp::None);
+        assert_eq!((p.low_order, p.high_order), (0, 0));
+        assert!(NoCache.probe_spec().is_none());
+        // The hook is a no-op for policies without feedback support.
+        let mut f = Fora { n: 3, k: 3 };
+        f.set_feedback_scale(3.0);
+        assert!((CachePolicy::feedback_scale(&f) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::cache::CrfCache;
+use crate::feedback::{probe, BandResiduals, FeedbackConfig, SessionFeedback};
 use crate::freq::{band_mask, BandSpec, Decomp};
 use crate::model::{flops, ModelConfig};
 use crate::policy::{Action, CachePolicy, PredictPlan, StepCtx, StepKind};
@@ -59,6 +60,12 @@ pub struct StepRecord {
     pub wall_s: f64,
     /// MSE of predicted vs true CRF — only populated in eval mode.
     pub pred_mse: Option<f64>,
+    /// Per-band counterfactual prediction residuals, measured at full
+    /// steps when the error-feedback control plane is on.
+    pub probe: Option<BandResiduals>,
+    /// This step was forced to a full forward by the error-budget
+    /// controller (the policy alone would have predicted).
+    pub feedback_forced: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,6 +107,12 @@ pub struct SampleOpts {
     /// Also run the full forward at predicted steps to record the
     /// prediction error (Fig. 4 harness).  Slower; never used in serving.
     pub record_pred_error: bool,
+    /// Error-feedback control plane (None = off): per-band probes at
+    /// every full step feed a per-session `ErrorBudgetController` that
+    /// adapts the policy's caching aggressiveness online and forces a
+    /// refresh before the accumulated predicted error would exceed the
+    /// budget.  Ignored for policies with nothing to probe (baseline).
+    pub feedback: Option<FeedbackConfig>,
 }
 
 /// What one call to [`SamplerSession::step`] did.
@@ -145,6 +158,12 @@ pub struct SamplerSession<'p> {
     step_idx: usize,
     /// Accumulated compute time across executed steps.
     busy_s: f64,
+    /// Error-feedback state (probe plan + budget controller), when the
+    /// control plane is on and the policy has a predictor to probe.
+    feedback: Option<SessionFeedback>,
+    /// Cached/partial steps executed since the last full forward (the
+    /// probe's gap, feeding the controller's rate estimate).
+    steps_since_full: usize,
 }
 
 impl<'p> SamplerSession<'p> {
@@ -169,6 +188,10 @@ impl<'p> SamplerSession<'p> {
             );
         }
         policy.reset();
+        let feedback = match (&opts.feedback, policy.probe_spec()) {
+            (Some(fb), Some(probe)) => Some(SessionFeedback::new(*fb, probe)),
+            _ => None,
+        };
 
         // Assemble batched inputs.
         let mut x_data = Vec::with_capacity(b * cfg.latent_elems());
@@ -230,6 +253,8 @@ impl<'p> SamplerSession<'p> {
             steps: Vec::with_capacity(batch.n_steps),
             step_idx: 0,
             busy_s: 0.0,
+            feedback,
+            steps_since_full: 0,
         })
     }
 
@@ -271,12 +296,57 @@ impl<'p> SamplerSession<'p> {
     /// full/cached schedule from the step index and history depth, so
     /// this never executes anything and never perturbs policy state.
     /// The QoS scheduler uses it to de-phase full-compute refreshes of
-    /// concurrent sessions (`coordinator::scheduler`).
+    /// concurrent sessions (`coordinator::scheduler`).  With the
+    /// error-feedback control plane on, a pending budget-forced refresh
+    /// (`ErrorBudgetController::would_breach_next`) reports `Full`
+    /// regardless of the policy's phase — the controller state only
+    /// changes at step boundaries, so this stays consistent with what
+    /// [`step`](Self::step) will execute.
     pub fn next_step_kind(&self) -> Option<StepKind> {
         if self.is_done() {
             return None;
         }
+        if let Some(fb) = &self.feedback {
+            if !self.cache.is_empty() && fb.controller.would_breach_next() {
+                return Some(StepKind::Full);
+            }
+        }
         Some(self.policy.peek(self.step_idx, self.n_steps, self.cache.len()))
+    }
+
+    /// Accumulated predicted error since the last refresh, as the
+    /// fixed-point priority score the scheduler's de-phasing ledger
+    /// orders refresh tokens by (0 when feedback is off).
+    pub fn error_score_fp(&self) -> u64 {
+        self.feedback
+            .as_ref()
+            .map(|fb| fb.controller.err_score_fp())
+            .unwrap_or(0)
+    }
+
+    /// The controller's current aggressiveness scale (None = feedback
+    /// off).
+    pub fn feedback_scale(&self) -> Option<f64> {
+        self.feedback.as_ref().map(|fb| fb.controller.scale())
+    }
+
+    /// Predicted-error budget breaches observed by the controller
+    /// (defense-in-depth; stays 0 with the refresh override intact).
+    pub fn feedback_breaches(&self) -> u64 {
+        self.feedback
+            .as_ref()
+            .map(|fb| fb.controller.breaches())
+            .unwrap_or(0)
+    }
+
+    /// Bytes currently held by this session's CRF cache.
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.bytes()
+    }
+
+    /// Peak bytes ever held by this session's CRF cache.
+    pub fn cache_peak_bytes(&self) -> usize {
+        self.cache.peak_bytes()
     }
 
     /// Execute exactly one denoising step (the scheduler's unit of work).
@@ -295,7 +365,7 @@ impl<'p> SamplerSession<'p> {
         // scan the latent in `decide`, and that cost belongs to the step
         // (the old run-to-completion wall included it).
         let st0 = Instant::now();
-        let action = {
+        let mut action = {
             let ctx = StepCtx {
                 step: i,
                 n_steps: n,
@@ -306,7 +376,26 @@ impl<'p> SamplerSession<'p> {
             };
             self.policy.decide(&ctx)?
         };
+        // Error-budget override: refresh before one more predicted step
+        // would push the accumulated prediction error past the budget
+        // (agrees with what `next_step_kind` advertised for this step).
+        let mut feedback_forced = false;
+        if let Some(fb) = &self.feedback {
+            if !self.cache.is_empty()
+                && fb.controller.would_breach_next()
+                && !matches!(action, Action::Full)
+            {
+                action = Action::Full;
+                feedback_forced = true;
+                // Tell the policy its schedule was overridden, so the
+                // forced refresh is not immediately followed by a
+                // redundant scheduled one (interval policies re-anchor
+                // their phase, threshold policies drop their drift).
+                self.policy.note_forced_refresh(i);
+            }
+        }
         let mut pred_mse = None;
+        let mut probe_res = None;
 
         let (v, step_action) = match action {
             Action::Full => {
@@ -320,6 +409,30 @@ impl<'p> SamplerSession<'p> {
                     self.ref_t.as_ref(),
                     t,
                 )?;
+                // Probe before the push: the cache still holds exactly
+                // what the predictor would have worked from.
+                if let Some(fb) = &mut self.feedback {
+                    if !self.cache.is_empty() {
+                        let hist: Vec<&Tensor> =
+                            self.cache.iter().map(|(_, t)| t).collect();
+                        let r = probe::probe_residuals(
+                            &hist_s,
+                            &hist,
+                            s,
+                            &fb.probe,
+                            self.cfg.grid,
+                            self.cfg.dim,
+                            &crf,
+                        )?;
+                        fb.controller
+                            .observe_probe(r.overall, self.steps_since_full);
+                        self.policy
+                            .set_feedback_scale(fb.controller.scale());
+                        probe_res = Some(r);
+                    }
+                    fb.controller.note_full();
+                }
+                self.steps_since_full = 0;
                 self.cache.push(s, crf);
                 self.x_at_last_full = Some(self.x.data.clone());
                 self.token_age.iter_mut().for_each(|a| *a = 0);
@@ -365,6 +478,10 @@ impl<'p> SamplerSession<'p> {
                 self.total_flops +=
                     flops::predict_flops(&self.cfg, b, plan.decomp != Decomp::None);
                 self.token_age.iter_mut().for_each(|a| *a += 1);
+                if let Some(fb) = &mut self.feedback {
+                    fb.controller.note_cached();
+                }
+                self.steps_since_full += 1;
                 (v, StepAction::Cached)
             }
             Action::PartialRefresh { refresh_frac, plan } => {
@@ -413,6 +530,13 @@ impl<'p> SamplerSession<'p> {
                 self.total_flops += refresh_frac
                     * flops::forward_flops(&self.cfg, b)
                     + flops::predict_flops(&self.cfg, b, false);
+                // A partial refresh recomputes the whole forward and
+                // rewrites the newest cache entry: error-wise it counts
+                // as a refresh (conservative for the stale tokens).
+                if let Some(fb) = &mut self.feedback {
+                    fb.controller.note_full();
+                }
+                self.steps_since_full = 0;
                 (v, StepAction::Partial)
             }
         };
@@ -430,6 +554,8 @@ impl<'p> SamplerSession<'p> {
             action: step_action,
             wall_s,
             pred_mse,
+            probe: probe_res,
+            feedback_forced,
         };
         self.steps.push(record.clone());
         self.step_idx += 1;
@@ -500,6 +626,18 @@ impl CachePolicy for PolicyRef<'_> {
     }
     fn reset(&mut self) {
         self.0.reset()
+    }
+    fn set_feedback_scale(&mut self, scale: f64) {
+        self.0.set_feedback_scale(scale)
+    }
+    fn feedback_scale(&self) -> f64 {
+        self.0.feedback_scale()
+    }
+    fn note_forced_refresh(&mut self, step: usize) {
+        self.0.note_forced_refresh(step)
+    }
+    fn probe_spec(&self) -> Option<crate::policy::ProbeSpec> {
+        self.0.probe_spec()
     }
 }
 

@@ -33,6 +33,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::engine::{WorkItem, WorkerPool};
 use crate::coordinator::scheduler::QosConfig;
 use crate::coordinator::{Request, Response};
+use crate::feedback::FeedbackConfig;
 use crate::metrics::Metrics;
 use crate::util::Json;
 
@@ -56,6 +57,11 @@ pub struct ServeOpts {
     /// logical core; the library default is 1 (single-worker, the
     /// pre-pool behaviour).
     pub workers: usize,
+    /// Error-feedback control plane (`--feedback`, `--error-budget`):
+    /// per-band probes at full steps drive a per-session error-budget
+    /// controller and error-priority refresh tokens.  None = off;
+    /// requests can still opt in per-request via `error_budget`.
+    pub feedback: Option<FeedbackConfig>,
 }
 
 /// Default concurrency cap: enough sessions to keep short jobs
@@ -73,6 +79,7 @@ impl Default for ServeOpts {
             qos: QosConfig::default(),
             warmup: vec![],
             workers: 1,
+            feedback: None,
         }
     }
 }
@@ -104,6 +111,7 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
             opts.max_in_flight
         },
         opts.qos,
+        opts.feedback,
         metrics.clone(),
         workers,
         &opts.warmup,

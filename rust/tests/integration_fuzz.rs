@@ -48,6 +48,7 @@ fn router_never_panics_on_random_requests() {
                     None
                 },
                 return_latent: rng.below(2) == 0,
+                error_budget: None,
             }
         },
         |req| {
@@ -93,6 +94,7 @@ fn json_parser_never_panics_on_mutated_requests() {
         cond: vec![0.5; 4],
         ref_img: None,
         return_latent: true,
+        error_budget: None,
     }
     .to_json()
     .to_string();

@@ -146,7 +146,7 @@ fn record_pred_error_populates_mse() {
         job(&ctx, 1),
         10,
         pol.as_mut(),
-        &SampleOpts { record_pred_error: true },
+        &SampleOpts { record_pred_error: true, ..SampleOpts::default() },
     )
     .unwrap();
     let with_mse: Vec<_> =
@@ -156,6 +156,59 @@ fn record_pred_error_populates_mse() {
         assert!(s.pred_mse.unwrap().is_finite());
         assert_eq!(s.action, StepAction::Cached);
     }
+}
+
+/// Error-feedback control plane, end to end on real artifacts: probes
+/// populate per-band residuals at refresh steps, the controller keeps
+/// the predicted-error budget unbreached, and a very tight budget
+/// forces more refreshes than a loose one.
+#[test]
+fn feedback_probes_and_budget_on_real_artifacts() {
+    let Some(ctx) = setup() else { return };
+    let run = |budget: f64| {
+        // n=8 so even the min-scale floored interval (8 * 0.25 = 2)
+        // leaves predicted steps for the budget override to force.
+        let mut pol =
+            policy::parse_policy("freqca:n=8", Decomp::Dct, ctx.cfg.grid, 3)
+                .unwrap();
+        generate(
+            &ctx.rt,
+            &ctx.cfg,
+            ctx.w.clone(),
+            job(&ctx, 2),
+            16,
+            pol.as_mut(),
+            &SampleOpts {
+                feedback: Some(freqca::feedback::FeedbackConfig {
+                    error_budget: budget,
+                    ..freqca::feedback::FeedbackConfig::default()
+                }),
+                ..SampleOpts::default()
+            },
+        )
+        .unwrap()
+    };
+    let loose = run(10.0); // budget far above any real residual
+    let probed: Vec<_> =
+        loose.steps.iter().filter(|s| s.probe.is_some()).collect();
+    assert!(!probed.is_empty(), "full steps after warm-up must probe");
+    for s in &probed {
+        let p = s.probe.unwrap();
+        assert_eq!(s.action, StepAction::Full);
+        assert!(p.low.is_finite() && p.low >= 0.0);
+        assert!(p.high.is_finite() && p.high >= 0.0);
+        assert!(p.overall.is_finite());
+    }
+    // A near-zero budget forces a refresh after every predicted step's
+    // worth of error: strictly more full steps than the loose run.
+    let tight = run(1e-9);
+    assert!(
+        tight.full_steps > loose.full_steps,
+        "tight budget {} fulls vs loose {}",
+        tight.full_steps,
+        loose.full_steps
+    );
+    assert!(tight.steps.iter().any(|s| s.feedback_forced));
 }
 
 #[test]

@@ -54,6 +54,7 @@ fn req(id: u64, model: &str, policy: &str, steps: usize) -> Request {
         cond: vec![0.1; 12],
         ref_img: None,
         return_latent: true,
+        error_budget: None,
     }
 }
 
@@ -190,7 +191,31 @@ fn pool_serves_and_places_across_workers() {
             gauges.get(&format!("in_flight_sessions_w{w}")).is_some(),
             "worker {w} never published gauges: {m}"
         );
+        assert!(
+            gauges.get(&format!("crf_peak_bytes_w{w}")).is_some(),
+            "worker {w} never published CRF memory: {m}"
+        );
     }
+    // Satellite: the paper's cache-memory footprint is a serving
+    // metric — at least one worker's peak saw a session's CRF, and the
+    // pool aggregate reflects it.
+    let crf_peak: f64 = (0..2)
+        .map(|w| {
+            gauges
+                .get(&format!("crf_peak_bytes_w{w}"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        })
+        .sum();
+    assert!(crf_peak > 0.0, "no worker held CRF bytes: {m}");
+    assert!(
+        gauges
+            .get("crf_peak_bytes")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            > 0.0,
+        "pool aggregate crf_peak_bytes missing: {m}"
+    );
     stop.store(true, Ordering::Relaxed);
 }
 
@@ -235,6 +260,7 @@ fn class_req(
         cond: vec![0.1; 12],
         ref_img: None,
         return_latent: true,
+        error_budget: None,
     }
 }
 
@@ -294,6 +320,33 @@ fn preempted_session_resumes_with_identical_latent() {
     );
     assert_eq!(uninterrupted.full_steps, batch.full_steps);
     assert_eq!(uninterrupted.cached_steps, batch.cached_steps);
+}
+
+/// CRF cache memory is a serving metric (satellite), and a per-request
+/// `error_budget` opts the session into the error-feedback control
+/// plane without any serve-level flag: probes fire at refresh steps and
+/// the predicted-error budget is never breached.
+#[test]
+fn crf_gauges_and_per_request_error_budget() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let mut engine = mini_engine(dir);
+    let mut request = class_req(1, Priority::Standard, 10, 5);
+    request.error_budget = Some(10.0); // loose: adapts, never forces
+    let rx = submit(&mut engine, request);
+    let resp = run_until_reply(&mut engine, &rx);
+    assert!(resp.ok, "error: {:?}", resp.error);
+    assert!(
+        engine.metrics.counter("feedback_probes") > 0,
+        "full steps after warm-up must probe"
+    );
+    assert_eq!(engine.metrics.counter("error_budget_breaches"), 0);
+    assert!(engine.metrics.gauge("feedback_scale") > 0.0);
+    // The CRF footprint gauges (standalone engine: plain names) saw the
+    // session's cache.
+    assert!(engine.metrics.gauge("crf_peak_bytes") > 0.0);
 }
 
 /// Graceful-drain regression (satellite): when the work channel closes

@@ -48,6 +48,72 @@ def main():
             print(f"FAIL: short-job p95 not monotone at {k}")
             return 1
         prev = p95
+
+    # Error-feedback control plane (virtual time, deterministic): the
+    # controller must spend fewer full computes than static de-phasing
+    # at an equal-or-lower worst-case accumulated proxy error, never
+    # breach the predicted error budget unforced, and stay within
+    # tolerance of the committed full-compute count.
+    fb = results["feedback"]
+    static_fulls = fb["static"]["full_steps"]
+    feedback_fulls = fb["feedback"]["full_steps"]
+    print(
+        f"feedback fulls: static {static_fulls}, controller "
+        f"{feedback_fulls} (peak err {fb['static']['peak_accumulated_error']:.4f}"
+        f" -> {fb['feedback']['peak_accumulated_error']:.4f})"
+    )
+    if feedback_fulls >= static_fulls:
+        print("FAIL: error feedback did not reduce full computes")
+        return 1
+    if (fb["feedback"]["peak_accumulated_error"]
+            > fb["static"]["peak_accumulated_error"]):
+        print("FAIL: error feedback worsened the worst-case accumulated error")
+        return 1
+    if fb["feedback"]["unforced_budget_breaches"] != 0:
+        print("FAIL: unforced error-budget breaches in the feedback arm")
+        return 1
+    fb_base = baseline.get("feedback", {})
+    if "feedback_full_steps" in fb_base:
+        fb_tol = fb_base.get("tolerance", 0.15)
+        limit = fb_base["feedback_full_steps"] * (1 + fb_tol)
+        if feedback_fulls > limit:
+            print(
+                f"FAIL: feedback full computes regressed: {feedback_fulls} "
+                f"> limit {limit:.1f} "
+                f"(baseline {fb_base['feedback_full_steps']})"
+            )
+            return 1
+    if "static_full_steps" in fb_base:
+        # The static arm is fully deterministic (fixed interval, fixed
+        # fixture): any drift means the fixture or scheduler changed and
+        # the baseline must be regenerated intentionally.
+        if static_fulls != fb_base["static_full_steps"]:
+            print(
+                f"FAIL: static de-phasing full computes changed: "
+                f"{static_fulls} != baseline "
+                f"{fb_base['static_full_steps']}"
+            )
+            return 1
+
+    # Live-engine replay (present only when artifacts exist): every
+    # class completed and the interactive tail beat batch for real.
+    # Wall-clock numbers are noisy, so no latency-level gating here.
+    if "live" in results:
+        live = results["live"]["per_class"]
+        for cls in ("interactive", "standard", "batch"):
+            if live[cls]["n"] == 0:
+                print(f"FAIL: live scenario completed no {cls} requests")
+                return 1
+        if (live["interactive"]["completion_p95_s"]
+                >= live["batch"]["completion_p95_s"]):
+            print("FAIL: live interactive completion p95 did not beat batch")
+            return 1
+        print(
+            "live: interactive completion p95 "
+            f"{live['interactive']['completion_p95_s'] * 1e3:.1f} ms vs "
+            f"batch {live['batch']['completion_p95_s'] * 1e3:.1f} ms"
+        )
+
     print("OK")
     return 0
 
