@@ -1,7 +1,11 @@
 # FreqCa build entry points.
 #
 #   make artifacts              train + AOT-export every model config
-#   make artifacts CONFIG=tiny  just the test-scale model (what CI uses)
+#   make artifacts CONFIG=tiny  just the test-scale model
+#   make artifacts CONFIG=tiny,tiny-fft  comma list (what CI uses: two
+#                               models so the multi-model serving paths
+#                               — lazy residency, placement, stealing —
+#                               run for real)
 #   make test                   tier-1: cargo build --release && test
 #   make bench                  coordinator bench -> results/*.json
 #   make check-bench            gate bench results vs committed baseline

@@ -202,7 +202,13 @@ def main():
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
-    names = list(CONFIGS) if args.config == "all" else [args.config]
+    # --config accepts "all", one name, or a comma-separated list
+    # (CI builds "tiny,tiny-fft" for the multi-model serving tests).
+    names = (
+        list(CONFIGS)
+        if args.config == "all"
+        else [n.strip() for n in args.config.split(",") if n.strip()]
+    )
     for name in names:
         print(f"[aot] {name}")
         export_config(CONFIGS[name], args.out, force=args.force)

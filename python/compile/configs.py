@@ -47,6 +47,15 @@ CONFIGS = {
         heads=2, cond_dim=16, decomp="dct", train_steps=120,
         batch_sizes=(1, 2),
     ),
+    # second test-scale model (FFT decomposition): gives CI a 2-model
+    # artifact set so the multi-model serving paths — lazy weight
+    # residency, placement's cold-load scoring, work-stealing — run for
+    # real in the integration tests
+    "tiny-fft": ModelConfig(
+        name="tiny-fft", latent=8, channels=4, patch=2, dim=64, depth=2,
+        heads=2, cond_dim=16, decomp="fft", train_steps=100,
+        batch_sizes=(1, 2),
+    ),
     # FLUX.1-dev analogue (paper: DCT decomposition, A100)
     "flux-sim": ModelConfig(
         name="flux-sim", latent=16, channels=4, patch=2, dim=192, depth=6,

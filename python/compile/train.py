@@ -94,7 +94,13 @@ def main():
                     help="override per-config train_steps")
     ap.add_argument("--batch", type=int, default=16)
     args = ap.parse_args()
-    names = list(CONFIGS) if args.config == "all" else [args.config]
+    # --config accepts "all", one name, or a comma-separated list
+    # (CI builds "tiny,tiny-fft" for the multi-model serving tests).
+    names = (
+        list(CONFIGS)
+        if args.config == "all"
+        else [n.strip() for n in args.config.split(",") if n.strip()]
+    )
     for name in names:
         train(name, args.out, steps=args.steps, batch=args.batch)
 

@@ -91,6 +91,7 @@ USAGE:
                   [--workers 0] [--qos-weights 8,4,1] [--aging-bound 64]
                   [--refresh-concurrency 2] [--dephase-window 8]
                   [--feedback] [--error-budget 0.1]
+                  [--max-resident-models 0] [--steal-after 16]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
                   [--artifacts DIR]
@@ -113,8 +114,13 @@ Priorities (QoS class of a served request): interactive | standard | batch
   --refresh-concurrency full-compute steps per --dephase-window ticks
   (a pool-wide budget shared by all workers).
   --workers N engine workers, one runtime/PJRT client each; 0 = one per
-  logical core.  Sessions are placed by batch-key affinity + class-aware
-  least load (see coordinator::placement).
+  logical core.  Sessions are placed by batch-key affinity +
+  residency/class-aware least load (see coordinator::placement).
+Placement v2: workers load weights lazily on first placed session;
+  --max-resident-models N bounds resident models per worker (LRU
+  eviction, never a model with live sessions; 0 = unbounded), and a
+  worker idle for --steal-after ticks steals the pool's oldest queued
+  request — preferring one whose model it already holds (0 = off).
 Error feedback (serve --feedback / --error-budget E): per-band
   prediction-error probes at every full step drive a per-session PI
   controller that adapts each policy's caching aggressiveness (interval

@@ -189,6 +189,25 @@ impl Batcher {
             .into_iter()
             .find_map(|c| self.next_batch_for(c, now))
     }
+
+    /// Enqueue time of the oldest queued request across all classes
+    /// (each class queue is FIFO, so only the fronts need comparing).
+    pub fn oldest_enqueued(&self) -> Option<Instant> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|p| p.enqueued))
+            .min()
+    }
+
+    /// Remove and return the oldest queued request (work-stealing
+    /// donation).  Taking a queue *front* preserves FIFO order for the
+    /// requests left behind.
+    pub fn steal_oldest(&mut self) -> Option<Pending> {
+        let slot = (0..self.queues.len())
+            .filter(|s| !self.queues[*s].is_empty())
+            .min_by_key(|s| self.queues[*s].front().unwrap().enqueued)?;
+        self.queues[slot].pop_front()
+    }
 }
 
 #[cfg(test)]
@@ -395,6 +414,34 @@ mod tests {
         // ready class again (the peek the engine's preemption uses).
         let later = now + wait + Duration::from_millis(1);
         assert_eq!(b.ready_class(later), Some(Priority::Interactive));
+    }
+
+    #[test]
+    fn steal_takes_the_oldest_across_classes() {
+        // Oldest-first regardless of class: an old batch-class entry is
+        // stolen before a fresher interactive one, and FIFO order of
+        // what remains is untouched.
+        let mut b = Batcher::new(vec![1, 4], Duration::from_secs(10), 100);
+        let t0 = Instant::now();
+        b.push_at(req_class(0, "m", "a", Priority::Batch), t0);
+        b.push_at(
+            req_class(1, "m", "a", Priority::Interactive),
+            t0 + Duration::from_millis(5),
+        );
+        b.push_at(
+            req_class(2, "m", "a", Priority::Batch),
+            t0 + Duration::from_millis(10),
+        );
+        assert_eq!(b.oldest_enqueued(), Some(t0));
+        let stolen = b.steal_oldest().unwrap();
+        assert_eq!(stolen.request.id, 0);
+        assert_eq!(b.len_by_class(), [1, 0, 1]);
+        let next = b.steal_oldest().unwrap();
+        assert_eq!(next.request.id, 1);
+        let last = b.steal_oldest().unwrap();
+        assert_eq!(last.request.id, 2);
+        assert!(b.steal_oldest().is_none());
+        assert!(b.oldest_enqueued().is_none());
     }
 
     #[test]

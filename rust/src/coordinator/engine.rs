@@ -28,8 +28,22 @@
 //! per logical core on the stub/CPU backend), connects them all to one
 //! shared de-phasing ledger, and feeds them from the server's shared
 //! admission queue through [`super::placement`].
+//!
+//! **Weight residency is lazy and bounded** (Placement v2): a worker
+//! starts with no models resident and loads a model's weights on the
+//! first session placed for it, LRU-evicting past
+//! `--max-resident-models` — but never a model with in-flight or
+//! parked sessions; a batch whose model cannot become resident right
+//! now stays queued ([`super::residency`]).  Idle workers **steal**:
+//! after `--steal-after` idle ticks a worker advertises its residency
+//! mask on the pool's [`StealBoard`], and a sibling with queued work
+//! behind a full in-flight set donates its oldest queued request —
+//! preferring one whose model the thief already holds — directly into
+//! the thief's mailbox.  Stolen requests re-enter through the normal
+//! admission path, so batching, preemption, and the shared de-phase
+//! ledger invariants all hold unchanged.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -39,7 +53,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Error, Result};
 
 use super::batcher::Pending;
-use super::placement::{Placement, WorkerLoad};
+use super::placement::{PlaceInput, Placement, WorkerLoad};
+use super::residency::Residency;
 use super::router::{RouteResult, Router};
 use super::scheduler::{
     DephaseLedger, QosConfig, SchedState, Scheduler, StepKind,
@@ -51,6 +66,10 @@ use crate::model::weights;
 use crate::policy;
 use crate::runtime::{discover_models, Runtime};
 use crate::sampler::{BatchJob, JobSpec, SampleOpts, SamplerSession, StepOutcome};
+
+/// Default idle ticks before a pool worker advertises hunger on the
+/// steal board (`--steal-after`; 0 disables stealing).
+pub const DEFAULT_STEAL_AFTER: u64 = 16;
 
 /// One unit of work sent to the engine thread.
 pub struct WorkItem {
@@ -65,6 +84,103 @@ pub struct WorkItem {
 /// worker's queued count optimistically).
 pub type LoadBoard = Arc<Vec<Mutex<WorkerLoad>>>;
 
+/// Per-worker slot of the [`StealBoard`]: the hunger advertisement and
+/// the donation mailbox.
+struct StealSlot {
+    /// `Some(resident_mask)` while the worker is idle past the
+    /// threshold and wants work (the mask tells donors which models it
+    /// can start without a cold load).
+    hungry: Option<u64>,
+    /// Donated work awaiting the worker's next loop iteration; `None`
+    /// once the worker's serve loop has exited (donations bounce back
+    /// to the donor, which requeues them locally).
+    mail: Option<VecDeque<WorkItem>>,
+}
+
+/// Pool-wide work-stealing rendezvous: idle workers advertise hunger,
+/// busy workers (queued work behind a full in-flight set) donate their
+/// oldest queued request into the thief's mailbox.  All operations are
+/// short critical sections on one per-worker mutex; no channel senders
+/// are shared, so pool shutdown semantics (drop senders → workers
+/// drain) are untouched.
+pub struct StealBoard {
+    /// Idle ticks before a worker advertises hunger; 0 disables.
+    steal_after: u64,
+    slots: Vec<Mutex<StealSlot>>,
+}
+
+impl StealBoard {
+    pub fn new(workers: usize, steal_after: u64) -> Arc<StealBoard> {
+        Arc::new(StealBoard {
+            steal_after,
+            slots: (0..workers.max(1))
+                .map(|_| {
+                    Mutex::new(StealSlot {
+                        hungry: None,
+                        mail: Some(VecDeque::new()),
+                    })
+                })
+                .collect(),
+        })
+    }
+
+    /// Is stealing live for this pool?  (Needs a threshold and a
+    /// sibling to steal from.)
+    pub fn enabled(&self) -> bool {
+        self.steal_after > 0 && self.slots.len() > 1
+    }
+
+    pub fn steal_after(&self) -> u64 {
+        self.steal_after
+    }
+
+    /// Advertise (or withdraw, with `None`) worker `w`'s hunger.
+    fn set_hungry(&self, w: usize, mask: Option<u64>) {
+        self.slots[w].lock().unwrap().hungry = mask;
+    }
+
+    /// First hungry worker other than `me`, with its residency mask.
+    fn hungry_sibling(&self, me: usize) -> Option<(usize, u64)> {
+        (0..self.slots.len()).filter(|w| *w != me).find_map(|w| {
+            self.slots[w].lock().unwrap().hungry.map(|m| (w, m))
+        })
+    }
+
+    /// Donate one work item to `to`.  Fails (returning the item) when
+    /// the target's serve loop already exited; clears the target's
+    /// hunger on success so donors don't dogpile it.
+    fn donate(&self, to: usize, item: WorkItem) -> Result<(), WorkItem> {
+        let mut slot = self.slots[to].lock().unwrap();
+        match slot.mail.as_mut() {
+            Some(mail) => {
+                mail.push_back(item);
+                slot.hungry = None;
+                Ok(())
+            }
+            None => Err(item),
+        }
+    }
+
+    /// Drain worker `w`'s mailbox (each serve-loop iteration).
+    fn take_mail(&self, w: usize) -> Vec<WorkItem> {
+        match self.slots[w].lock().unwrap().mail.as_mut() {
+            Some(mail) => mail.drain(..).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Close worker `w`'s mailbox (serve-loop exit), returning whatever
+    /// raced in; once closed, donations are refused atomically.
+    fn close_mail(&self, w: usize) -> Vec<WorkItem> {
+        let mut slot = self.slots[w].lock().unwrap();
+        slot.hungry = None;
+        match slot.mail.take() {
+            Some(mail) => mail.into_iter().collect(),
+            None => Vec::new(),
+        }
+    }
+}
+
 /// Identity and pool-shared state of one engine worker.
 pub struct WorkerContext {
     /// Index of this worker in its pool (per-worker gauges use the
@@ -76,16 +192,20 @@ pub struct WorkerContext {
     /// The whole pool's load board (`board.len()` = pool width; 1 =
     /// standalone engine, which keeps the plain pre-pool gauge names).
     pub board: LoadBoard,
+    /// The pool's work-stealing board (disabled for standalone
+    /// engines).
+    pub steal: Arc<StealBoard>,
 }
 
 impl WorkerContext {
     /// Context for a standalone (single-worker) engine: private ledger,
-    /// single-slot board.
+    /// single-slot board, stealing off.
     pub fn standalone(qos: &QosConfig) -> WorkerContext {
         WorkerContext {
             id: 0,
             ledger: DephaseLedger::from_config(qos),
             board: Arc::new(vec![Mutex::new(WorkerLoad::default())]),
+            steal: StealBoard::new(1, 0),
         }
     }
 
@@ -116,6 +236,9 @@ struct InFlight {
     waiters: Vec<Waiter>,
     /// QoS class of the whole batch (classes never share a batch).
     class: Priority,
+    /// Which model the session runs — pins that model's weights
+    /// resident until the session (in-flight or parked) completes.
+    model: String,
     /// Session start (admission) time; completion latency = span since.
     started: Instant,
     /// Scheduling state: class, credits, last tick run, deadline
@@ -123,10 +246,24 @@ struct InFlight {
     sched: SchedState<Instant>,
 }
 
+/// Is `model` pinned by any in-flight or parked session?  (The
+/// residency eviction guard; free function so `Residency` calls can
+/// borrow it disjointly from `&mut self.residency`.)
+fn model_in_use(sessions: &[InFlight], parked: &[InFlight], model: &str) -> bool {
+    sessions.iter().any(|s| s.model == model)
+        || parked.iter().any(|s| s.model == model)
+}
+
 pub struct Engine {
     pub rt: Runtime,
     router: Router,
-    weight_bufs: HashMap<String, Rc<xla::PjRtBuffer>>,
+    /// Lazily loaded device weight buffers, LRU-bounded by
+    /// `--max-resident-models` (0 = unbounded); models with live
+    /// sessions are pinned (see [`super::residency`]).
+    residency: Residency<Rc<xla::PjRtBuffer>>,
+    /// Model names in the pool's sorted order — the bit order of
+    /// `WorkerLoad::resident_mask` and the steal board's hunger masks.
+    model_order: Vec<String>,
     pub metrics: Arc<Metrics>,
     /// internal id -> (reply channel, enqueue time, client-visible id):
     /// requests routed but not yet admitted into a session.
@@ -153,14 +290,22 @@ pub struct Engine {
     feedback: Option<FeedbackConfig>,
     /// Running peak of the CRF bytes held by this worker's sessions.
     crf_peak_bytes: usize,
+    /// Anti-starvation for residency-deferred admission: the model
+    /// whose ready work the residency bound is currently blocking, and
+    /// the tick the blockage was first seen.  Once it has waited
+    /// `aging_bound` ticks, admission stops starting sessions for
+    /// *other* models (drain mode) so the pinned sessions complete and
+    /// the eviction slot frees — without this, sustained traffic for a
+    /// resident model could pin it forever.
+    deferral: Option<(String, u64)>,
     /// Who this engine is within its pool (standalone engines get a
     /// private context from [`WorkerContext::standalone`]).
     worker: WorkerContext,
 }
 
 impl Engine {
-    /// Load every model found in the artifact directory (standalone,
-    /// single-worker engine).
+    /// Discover every model in the artifact directory (standalone,
+    /// single-worker engine; weights load lazily, residency unbounded).
     pub fn new(
         artifact_dir: &str,
         max_wait: Duration,
@@ -179,15 +324,18 @@ impl Engine {
             None,
             metrics,
             worker,
+            0,
         )
     }
 
-    /// Load every model found in the artifact directory, as worker
+    /// Discover every model in the artifact directory, as worker
     /// `worker.id` of a pool: the scheduler accounts full steps against
     /// the pool's shared de-phasing ledger and the engine publishes its
     /// load to the shared placement board every tick.  `feedback` turns
     /// the error-feedback control plane on for every session this
-    /// worker starts.
+    /// worker starts.  Weights are **not** loaded here — residency is
+    /// lazy (first placed session loads), bounded by
+    /// `max_resident_models` (0 = unbounded).
     #[allow(clippy::too_many_arguments)] // mirrors the serve surface
     pub fn with_worker(
         artifact_dir: &str,
@@ -198,6 +346,7 @@ impl Engine {
         feedback: Option<FeedbackConfig>,
         metrics: Arc<Metrics>,
         worker: WorkerContext,
+        max_resident_models: usize,
     ) -> Result<Engine> {
         let rt = Runtime::new(artifact_dir)?;
         let configs = discover_models(artifact_dir)?;
@@ -206,12 +355,19 @@ impl Engine {
                 "no models in {artifact_dir}; run `make artifacts` first"
             ));
         }
-        let mut weight_bufs = HashMap::new();
+        // Weights load lazily, but their *files* are validated now
+        // (presence + exact size, a cheap stat) so a partial artifact
+        // build still fails at boot, not at first request.
         for cfg in &configs {
-            let host =
-                weights::load_weights(artifact_dir, &cfg.name, cfg.param_count)?;
-            weight_bufs.insert(cfg.name.clone(), rt.weights_buffer(cfg, &host)?);
+            weights::validate_weights(
+                artifact_dir,
+                &cfg.name,
+                cfg.param_count,
+            )?;
         }
+        let mut model_order: Vec<String> =
+            configs.iter().map(|c| c.name.clone()).collect();
+        model_order.sort();
         let max_in_flight = max_in_flight.max(1);
         // Seed this worker's board slot before the first tick so
         // placement sees real capacities from the start.
@@ -220,11 +376,13 @@ impl Engine {
             max_parked: max_in_flight,
             ..WorkerLoad::default()
         };
-        let sched = Scheduler::with_ledger(qos, worker.ledger.clone());
+        let sched =
+            Scheduler::for_worker(qos, worker.ledger.clone(), worker.id);
         Ok(Engine {
             rt,
             router: Router::new(configs, max_wait, capacity),
-            weight_bufs,
+            residency: Residency::new(max_resident_models),
+            model_order,
             metrics,
             replies: HashMap::new(),
             next_internal_id: 1,
@@ -236,6 +394,7 @@ impl Engine {
             shed_seen: 0,
             feedback,
             crf_peak_bytes: 0,
+            deferral: None,
             worker,
         })
     }
@@ -248,8 +407,15 @@ impl Engine {
         self.router.config(model)
     }
 
+    /// The model's resident weight buffer, if currently loaded (does
+    /// not touch the LRU order and never triggers a load).
     pub fn weights(&self, model: &str) -> Option<Rc<xla::PjRtBuffer>> {
-        self.weight_bufs.get(model).cloned()
+        self.residency.peek(model).cloned()
+    }
+
+    /// Resident model count (observability/tests).
+    pub fn resident_models(&self) -> usize {
+        self.residency.count()
     }
 
     /// In-flight session count (scheduler depth), parked excluded.
@@ -262,9 +428,12 @@ impl Engine {
         self.parked.len()
     }
 
-    /// Pre-compile the hot artifacts of one model so first-request latency
-    /// excludes XLA compilation.
-    pub fn warmup(&self, model: &str) -> Result<()> {
+    /// Pre-compile the hot artifacts of one model — and make its
+    /// weights resident — so first-request latency excludes XLA
+    /// compilation and the cold weight load.  (Warmed models still
+    /// participate in LRU eviction once traffic moves elsewhere.)
+    pub fn warmup(&mut self, model: &str) -> Result<()> {
+        self.ensure_resident(model)?;
         let cfg = self
             .router
             .config(model)
@@ -284,6 +453,21 @@ impl Engine {
     /// Admit one request into the per-model queues; the reply arrives on
     /// `reply` once the request's session completes (or it is rejected).
     pub fn submit(&mut self, item: WorkItem) {
+        self.submit_counted(item, true);
+    }
+
+    /// [`Engine::submit`] with explicit admission accounting: `fresh`
+    /// is false when the item was already counted into the pool-wide
+    /// `requests_admitted` on another worker and merely *moved* here by
+    /// work-stealing — re-routing must not double-count it.
+    ///
+    /// A donated item re-routes like any other and can in principle
+    /// still shed, but only if this worker's whole queue capacity
+    /// filled in the window between advertising hunger (queue empty by
+    /// definition) and draining the mailbox — and hunger clears on the
+    /// first donation, so at most one stolen request rides each such
+    /// flood.  That is ordinary backpressure, not a stealing leak.
+    fn submit_counted(&mut self, item: WorkItem, fresh: bool) {
         let mut request = item.request;
         // Internal id for reply matching (client ids may collide).
         let internal = self.next_internal_id;
@@ -297,12 +481,16 @@ impl Engine {
             RouteResult::Queued => {
                 self.replies
                     .insert(internal, (item.reply, item.enqueued, client_id));
-                self.metrics.bump("requests_admitted", 1);
+                if fresh {
+                    self.metrics.bump("requests_admitted", 1);
+                }
             }
             RouteResult::QueuedEvicting(victim) => {
                 self.replies
                     .insert(internal, (item.reply, item.enqueued, client_id));
-                self.metrics.bump("requests_admitted", 1);
+                if fresh {
+                    self.metrics.bump("requests_admitted", 1);
+                }
                 self.metrics.bump("requests_evicted", 1);
                 // The victim was queued, never admitted to a session, so
                 // its reply channel is still in the map.
@@ -341,6 +529,7 @@ impl Engine {
     pub fn tick(&mut self) -> usize {
         self.admit_ready();
         self.account_backpressure();
+        self.donate_surplus();
         // Refresh each session's cache phase (pure lookahead) and hand
         // the scheduler a scratch copy of the states; everything it
         // mutates (credits, round refills, last_ran) is written back.
@@ -376,6 +565,79 @@ impl Engine {
         1
     }
 
+    /// Track residency-deferred work: the first (name-sorted) model
+    /// with a ready batch that admission cannot start under the
+    /// residency bound, and since when.  Feeds the drain-mode
+    /// anti-starvation below.
+    fn note_deferrals(&mut self) {
+        // Unbounded residency (the default) can never defer: skip the
+        // per-tick ready-model scan entirely.
+        if self.residency.max_models() == 0 {
+            self.deferral = None;
+            return;
+        }
+        let deferred = {
+            let (residency, sessions, parked) =
+                (&self.residency, &self.sessions, &self.parked);
+            self.router.ready_models().into_iter().find(|m| {
+                !residency
+                    .admissible(m, &|u| model_in_use(sessions, parked, u))
+            })
+        };
+        // Keep the original `since` tick while the same model stays
+        // deferred; otherwise (new model or no deferral) restart/clear.
+        let unchanged = matches!(
+            (&self.deferral, &deferred),
+            (Some((cur, _)), Some(m)) if cur == m
+        );
+        if !unchanged {
+            self.deferral = deferred.map(|m| (m, self.sched.tick()));
+        }
+    }
+
+    /// Drain mode: a residency-deferred model has waited at least the
+    /// QoS aging bound, so admission must stop feeding *other* models
+    /// (their sessions keep the eviction slot pinned) until it can
+    /// load.  Returns the model the next admission is reserved for.
+    fn overdue_deferral(&self) -> Option<String> {
+        let aging = self.sched.config().aging_bound.max(1);
+        self.deferral.as_ref().and_then(|(m, since)| {
+            (self.sched.tick().saturating_sub(*since) >= aging)
+                .then(|| m.clone())
+        })
+    }
+
+    /// Highest class with a ready batch whose model can become
+    /// resident right now (the preemption decision and the admission
+    /// pop must agree on what is actually startable under the
+    /// residency bound), honouring drain mode.
+    fn ready_admissible_class(&self) -> Option<Priority> {
+        let drain_for = self.overdue_deferral();
+        let (residency, sessions, parked) =
+            (&self.residency, &self.sessions, &self.parked);
+        self.router.ready_class_where(&|m| {
+            drain_for.as_deref().is_none_or(|d| d == m)
+                && residency
+                    .admissible(m, &|u| model_in_use(sessions, parked, u))
+        })
+    }
+
+    /// Pop the next ready batch among residency-admissible models; an
+    /// inadmissible model's batches stay queued until a pinned model's
+    /// sessions complete and free an eviction slot (drain mode keeps
+    /// that wait bounded by the aging bound plus the pinned sessions'
+    /// remaining steps).
+    fn pop_admissible_batch(&mut self) -> Option<(String, Vec<Pending>)> {
+        let drain_for = self.overdue_deferral();
+        let (residency, sessions, parked) =
+            (&self.residency, &self.sessions, &self.parked);
+        self.router.next_batch_where(&|m| {
+            drain_for.as_deref().is_none_or(|d| d == m)
+                && residency
+                    .admissible(m, &|u| model_in_use(sessions, parked, u))
+        })
+    }
+
     /// Fill free capacity and handle overload, in preference order:
     ///
     /// 1. below the cap, the best parked session (highest class, oldest
@@ -383,7 +645,10 @@ impl Engine {
     ///    ready — preempted work finishes before new same-or-lower
     ///    class work starts;
     /// 2. below the cap, ready batches become sessions (class-major,
-    ///    see `Router::next_batch`);
+    ///    see `Router::next_batch`), residency permitting: a batch
+    ///    whose model cannot become resident (the LRU bound is full of
+    ///    pinned models) defers, bounded by the pinned sessions'
+    ///    remaining steps;
     /// 3. at the cap, a ready batch of a strictly higher class preempts
     ///    the lowest-class in-flight session into the parking lot
     ///    (bounded; when full, the batch keeps queueing).
@@ -391,15 +656,17 @@ impl Engine {
     /// Past the cap+lot, requests queue in the batcher whose bounded
     /// capacity evicts lowest-class-first and then sheds (backpressure).
     fn admit_ready(&mut self) {
+        self.note_deferrals();
         loop {
             if self.sessions.len() < self.max_in_flight {
-                let ready = self.router.ready_class();
+                let ready = self.ready_admissible_class();
                 let parked = self.best_parked();
                 match (ready, parked) {
                     (None, None) => return,
                     (None, Some(p)) => self.resume(p),
                     (Some(_), None) => {
-                        let Some((model, batch)) = self.router.next_batch()
+                        let Some((model, batch)) =
+                            self.pop_admissible_batch()
                         else {
                             return;
                         };
@@ -417,12 +684,15 @@ impl Engine {
                         {
                             self.resume(p);
                         } else {
-                            let Some((model, batch)) =
-                                self.router.next_batch()
-                            else {
-                                return;
-                            };
-                            self.start_session(&model, batch);
+                            match self.pop_admissible_batch() {
+                                Some((model, batch)) => {
+                                    self.start_session(&model, batch)
+                                }
+                                // Defensive (readiness only moves
+                                // forward): fall back to the parked
+                                // session rather than stalling.
+                                None => self.resume(p),
+                            }
                         }
                     }
                 }
@@ -433,12 +703,12 @@ impl Engine {
             if self.parked.len() >= self.max_parked {
                 return;
             }
-            let Some(ready) = self.router.ready_class() else { return };
+            let Some(ready) = self.ready_admissible_class() else { return };
             let Some(victim) = self.preemption_victim() else { return };
             if self.sessions[victim].class >= ready {
                 return;
             }
-            let Some((model, batch)) = self.router.next_batch() else {
+            let Some((model, batch)) = self.pop_admissible_batch() else {
                 return;
             };
             let parked = self.sessions.swap_remove(victim);
@@ -524,6 +794,17 @@ impl Engine {
             .chain(self.parked.iter().map(|s| s.session.cache_bytes()))
             .sum();
         self.crf_peak_bytes = self.crf_peak_bytes.max(crf_bytes);
+        // Weight residency + de-phase ledger share, for placement's
+        // residency-aware scoring and error steering.
+        let resident_mask = self.residency.mask(&self.model_order);
+        let resident_models = self.residency.count();
+        let resident_bytes = self.residency.bytes();
+        let ledger_share_pm = self.sched.ledger_share_pm();
+        let err_score_fp: u64 = self
+            .sessions
+            .iter()
+            .map(|s| s.session.error_score_fp())
+            .sum();
         // Overwrites the pool's optimistic queued bumps with real
         // depths — the board self-corrects every tick.
         *self.worker.board[self.worker.id].lock().unwrap() = WorkerLoad {
@@ -535,6 +816,11 @@ impl Engine {
             max_parked: self.max_parked,
             crf_bytes,
             crf_peak_bytes: self.crf_peak_bytes,
+            resident_mask,
+            resident_models,
+            resident_bytes,
+            ledger_share_pm,
+            err_score_fp,
         };
         self.gauge("in_flight_sessions", self.sessions.len() as f64);
         self.gauge("parked_sessions", self.parked.len() as f64);
@@ -542,6 +828,10 @@ impl Engine {
         self.gauge("queued_requests", self.router.queued() as f64);
         self.gauge("crf_bytes", crf_bytes as f64);
         self.gauge("crf_peak_bytes", self.crf_peak_bytes as f64);
+        self.gauge("resident_models", resident_models as f64);
+        self.gauge("weight_bytes", resident_bytes as f64);
+        self.gauge("ledger_share_pm", ledger_share_pm as f64);
+        self.gauge("err_score_fp", err_score_fp as f64);
         for (class, depth) in Priority::ALL.iter().zip(queued_by_class) {
             self.gauge(
                 &format!("queued_requests_{}", class.name()),
@@ -562,6 +852,8 @@ impl Engine {
                 total.in_flight_requests += l.in_flight_requests;
                 total.crf_bytes += l.crf_bytes;
                 total.crf_peak_bytes += l.crf_peak_bytes;
+                total.resident_models += l.resident_models;
+                total.resident_bytes += l.resident_bytes;
                 for s in 0..3 {
                     total.in_flight_by_class[s] += l.in_flight_by_class[s];
                     queued_per_class[s] += l.queued_by_class[s];
@@ -579,6 +871,14 @@ impl Engine {
             // simultaneous CRF footprint (the peaks need not align).
             self.metrics
                 .set_gauge("crf_peak_bytes", total.crf_peak_bytes as f64);
+            // Pool-wide weight residency: resident (model, worker)
+            // pairs and the total device bytes pinned by weights —
+            // bounded by workers × --max-resident-models instead of
+            // workers × models now that residency is lazy.
+            self.metrics
+                .set_gauge("resident_models", total.resident_models as f64);
+            self.metrics
+                .set_gauge("weight_bytes", total.resident_bytes as f64);
             let queued: usize = queued_per_class.iter().sum();
             self.metrics.set_gauge("queued_requests", queued as f64);
             for (class, depth) in
@@ -588,6 +888,81 @@ impl Engine {
                     &format!("queued_requests_{}", class.name()),
                     depth as f64,
                 );
+            }
+        }
+    }
+
+    /// Work-stealing donor: when this worker has queued work stuck
+    /// behind a full in-flight set and a sibling is advertising hunger
+    /// on the steal board, hand over the oldest queued request —
+    /// preferring one whose model the thief already has resident (no
+    /// cold load on arrival), falling back to the globally oldest.
+    /// The stolen request keeps its true enqueue time and client
+    /// identity and re-enters through the thief's normal admission
+    /// path, so batching, preemption, and ledger invariants are
+    /// untouched.
+    fn donate_surplus(&mut self) {
+        if !self.worker.steal.enabled() {
+            return;
+        }
+        // Cheap gates first: no queued work, or no hungry sibling (the
+        // steady state under load — one mutex peek per sibling), skip
+        // before any batcher scan.
+        if self.router.queued() == 0 {
+            return;
+        }
+        let Some((thief, mask)) =
+            self.worker.steal.hungry_sibling(self.worker.id)
+        else {
+            return;
+        };
+        // Only clear surplus is donated: queued requests that cannot
+        // start here before a completion (in-flight set full, or the
+        // only ready batches are residency-deferred — `admit_ready`
+        // just ran, so anything admissible was already admitted) but
+        // can start immediately on an idle sibling.
+        let stuck_behind_cap = self.sessions.len() >= self.max_in_flight;
+        let stuck_on_residency = !stuck_behind_cap
+            && self.router.ready_class().is_some()
+            && self.ready_admissible_class().is_none();
+        if !stuck_behind_cap && !stuck_on_residency {
+            return;
+        }
+        let order = &self.model_order;
+        let on_thief = |m: &str| {
+            order
+                .iter()
+                .position(|n| n == m)
+                .is_some_and(|i| i < 64 && mask & (1u64 << i) != 0)
+        };
+        let Some(pending) = self
+            .router
+            .steal_oldest(&on_thief)
+            .or_else(|| self.router.steal_oldest(&|_| true))
+        else {
+            return;
+        };
+        // Reunite the request with its reply channel and client id
+        // (the thief's submit() assigns its own internal id).
+        let Some((tx, enqueued, client_id)) =
+            self.replies.remove(&pending.request.id)
+        else {
+            // Queued entries always have a reply slot; defensive.
+            return;
+        };
+        let mut request = pending.request;
+        request.id = client_id;
+        let item = WorkItem { request, reply: tx, enqueued };
+        match self.worker.steal.donate(thief, item) {
+            Ok(()) => {
+                self.metrics.bump("steals", 1);
+                self.metrics.bump(&format!("steals_w{thief}"), 1);
+            }
+            Err(item) => {
+                // The thief exited between the hunger read and the
+                // donation: requeue locally, state unchanged (and
+                // already counted as admitted once).
+                self.submit_counted(item, false);
             }
         }
     }
@@ -629,12 +1004,16 @@ impl Engine {
                 });
             }
         }
-        match self.build_session(model, &batch) {
+        let built = self
+            .ensure_resident(model)
+            .and_then(|weights| self.build_session(model, &batch, weights));
+        match built {
             Ok(session) => {
                 self.sessions.push(InFlight {
                     session,
                     waiters,
                     class,
+                    model: model.to_string(),
                     started: now,
                     sched: self.sched.admit(class, oldest),
                 });
@@ -650,20 +1029,67 @@ impl Engine {
         }
     }
 
+    /// Make `model`'s weights resident (cold-loading them on first
+    /// use), LRU-evicting past the bound — never a model pinned by an
+    /// in-flight or parked session.  The admission path only reaches
+    /// this for models `Residency::admissible` accepted, so the
+    /// in-use-deadlock error is defensive.
+    fn ensure_resident(
+        &mut self,
+        model: &str,
+    ) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(buf) = self.residency.touch(model) {
+            return Ok(buf.clone());
+        }
+        let (name, param_count) = {
+            let cfg = self
+                .router
+                .config(model)
+                .ok_or_else(|| anyhow!("unknown model {model}"))?;
+            (cfg.name.clone(), cfg.param_count)
+        };
+        let host =
+            weights::load_weights(self.rt.artifact_dir(), &name, param_count)?;
+        let bytes = host.len() * std::mem::size_of::<f32>();
+        let buf = {
+            let cfg = self.router.config(model).expect("checked above");
+            self.rt.weights_buffer(cfg, &host)?
+        };
+        let evicted = {
+            let (sessions, parked) = (&self.sessions, &self.parked);
+            self.residency.insert(model, bytes, buf.clone(), &|u| {
+                model_in_use(sessions, parked, u)
+            })
+        }
+        .ok_or_else(|| {
+            anyhow!(
+                "residency bound ({}) full of in-use models; cannot load \
+                 {model}",
+                self.residency.max_models()
+            )
+        })?;
+        for gone in &evicted {
+            // Drop the runtime's cached copy too, or the device memory
+            // would survive the eviction.
+            self.rt.release_weights(gone);
+        }
+        self.metrics.bump("weight_loads", 1);
+        if !evicted.is_empty() {
+            self.metrics.bump("weight_evictions", evicted.len() as u64);
+        }
+        Ok(buf)
+    }
+
     fn build_session(
         &self,
         model: &str,
         batch: &[Pending],
+        weights: Rc<xla::PjRtBuffer>,
     ) -> Result<SamplerSession<'static>> {
         let cfg = self
             .router
             .config(model)
             .ok_or_else(|| anyhow!("model {model} vanished"))?;
-        let weights = self
-            .weight_bufs
-            .get(model)
-            .ok_or_else(|| anyhow!("no weights for {model}"))?
-            .clone();
         let first = &batch[0].request;
         let decomp = crate::freq::Decomp::parse(&cfg.decomp)?;
         let pol =
@@ -815,15 +1241,27 @@ impl Engine {
         }
     }
 
-    /// Long-running worker loop: drain the channel, tick the scheduler,
-    /// repeat.  When the channel closes the engine **drains gracefully**:
-    /// already-queued requests are admitted and every in-flight *and
-    /// parked* session steps to completion before the loop returns
-    /// (`admit_ready` resumes parked sessions as completions free
-    /// capacity, so the lot empties itself).
+    /// Long-running worker loop: drain the channel (and the steal
+    /// board's donation mailbox), tick the scheduler, repeat.  After
+    /// `steal_after` consecutive idle ticks the worker advertises its
+    /// hunger (with its residency mask) on the steal board; any
+    /// donation arrives in the mailbox and re-enters through
+    /// [`Engine::submit`].  When the channel closes the engine
+    /// **drains gracefully**: already-queued requests are admitted and
+    /// every in-flight *and parked* session steps to completion before
+    /// the loop returns (`admit_ready` resumes parked sessions as
+    /// completions free capacity, so the lot empties itself); the
+    /// mailbox is closed atomically at the end so no donation can race
+    /// past the exit and be lost.
     pub fn serve_loop(&mut self, rx: Receiver<WorkItem>) {
         let mut closed = false;
+        let mut idle_ticks: u64 = 0;
         loop {
+            // Work donated by busier siblings (work stealing; the
+            // donor already counted these into `requests_admitted`).
+            for item in self.worker.steal.take_mail(self.worker.id) {
+                self.submit_counted(item, false);
+            }
             // Admit everything currently waiting.
             while !closed {
                 match rx.try_recv() {
@@ -836,14 +1274,27 @@ impl Engine {
             }
             let ran = self.tick();
             if ran != 0 {
+                idle_ticks = 0;
+                self.worker.steal.set_hungry(self.worker.id, None);
                 continue;
             }
             let drained = self.sessions.is_empty()
                 && self.parked.is_empty()
                 && self.router.queued() == 0;
             if closed {
+                self.worker.steal.set_hungry(self.worker.id, None);
                 if drained {
-                    return;
+                    // Close the mailbox; a donation that raced in is
+                    // processed before exiting (after close_mail no
+                    // more can arrive).
+                    let late = self.worker.steal.close_mail(self.worker.id);
+                    if late.is_empty() {
+                        return;
+                    }
+                    for item in late {
+                        self.submit_counted(item, false);
+                    }
+                    continue;
                 }
                 // Still draining: requests are parked in a batcher whose
                 // size-or-timeout deadline has not fired yet.  Sleep one
@@ -851,11 +1302,24 @@ impl Engine {
                 std::thread::sleep(Duration::from_millis(1));
                 continue;
             }
+            if drained && self.worker.steal.enabled() {
+                // Truly idle (nothing queued, in flight, or parked):
+                // count down to a hunger advertisement.
+                idle_ticks += 1;
+                if idle_ticks >= self.worker.steal.steal_after() {
+                    let mask = self.residency.mask(&self.model_order);
+                    self.worker.steal.set_hungry(self.worker.id, Some(mask));
+                }
+            }
             // Idle: block briefly for the next request to avoid a busy
             // spin.  Short timeout so parked batches still flush on
             // their size-or-timeout deadline.
             match rx.recv_timeout(Duration::from_millis(2)) {
-                Ok(item) => self.submit(item),
+                Ok(item) => {
+                    idle_ticks = 0;
+                    self.worker.steal.set_hungry(self.worker.id, None);
+                    self.submit(item);
+                }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                     closed = true;
@@ -896,6 +1360,12 @@ pub struct WorkerPool {
     board: LoadBoard,
     metrics: Arc<Metrics>,
     models: Vec<String>,
+    /// Model name → bit index in the pool's sorted model order (the
+    /// `WorkerLoad::resident_mask` bit layout placement scores with).
+    model_slots: HashMap<String, usize>,
+    /// Serve-level error feedback is on: every request is
+    /// refresh-hungry for placement steering.
+    hot_default: bool,
 }
 
 impl WorkerPool {
@@ -909,6 +1379,8 @@ impl WorkerPool {
         feedback: Option<FeedbackConfig>,
         metrics: Arc<Metrics>,
         workers: usize,
+        max_resident_models: usize,
+        steal_after: u64,
         warmup: &[String],
     ) -> Result<WorkerPool> {
         let n = workers.max(1);
@@ -916,6 +1388,7 @@ impl WorkerPool {
         let board: LoadBoard = Arc::new(
             (0..n).map(|_| Mutex::new(WorkerLoad::default())).collect(),
         );
+        let steal = StealBoard::new(n, steal_after);
         let (ready_tx, ready_rx) = channel::<Result<Vec<String>>>();
         let mut senders = Vec::with_capacity(n);
         let mut threads = Vec::with_capacity(n);
@@ -925,6 +1398,7 @@ impl WorkerPool {
                 id,
                 ledger: ledger.clone(),
                 board: board.clone(),
+                steal: steal.clone(),
             };
             let dir = artifact_dir.to_string();
             let worker_metrics = metrics.clone();
@@ -942,8 +1416,9 @@ impl WorkerPool {
                         feedback,
                         worker_metrics,
                         ctx,
+                        max_resident_models,
                     )
-                    .and_then(|engine| {
+                    .and_then(|mut engine| {
                         for m in &warm {
                             engine.warmup(m)?;
                         }
@@ -994,6 +1469,14 @@ impl WorkerPool {
             return Err(e);
         }
         metrics.set_gauge("pool_workers", n as f64);
+        // Engine::models() is sorted (router name order), so bit `i` of
+        // every worker's resident_mask is models[i] — the same layout
+        // each engine publishes via `Residency::mask(&model_order)`.
+        let model_slots = models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.clone(), i))
+            .collect();
         Ok(WorkerPool {
             senders,
             threads,
@@ -1001,6 +1484,8 @@ impl WorkerPool {
             board,
             metrics,
             models,
+            model_slots,
+            hot_default: feedback.is_some(),
         })
     }
 
@@ -1024,7 +1509,15 @@ impl WorkerPool {
         let key = item.request.batch_key();
         let snapshot: Vec<WorkerLoad> =
             self.board.iter().map(|l| *l.lock().unwrap()).collect();
-        let w = self.placement.place(&key, class, &snapshot);
+        let input = PlaceInput {
+            key: &key,
+            class,
+            model_slot: self.model_slots.get(&item.request.model).copied(),
+            // Refresh-hungry: this request's session will contend for
+            // de-phase window tokens (error-feedback control plane).
+            hot: self.hot_default || item.request.error_budget.is_some(),
+        };
+        let w = self.placement.place(&input, &snapshot);
         self.board[w].lock().unwrap().queued_by_class[class.slot()] += 1;
         self.metrics.bump(&format!("placed_w{w}"), 1);
         if let Err(send_err) = self.senders[w].send(item) {
@@ -1051,5 +1544,82 @@ impl WorkerPool {
         for t in self.threads {
             let _ = t.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(id: u64) -> (WorkItem, Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            WorkItem {
+                request: Request {
+                    id,
+                    model: "m".into(),
+                    policy: "fora:n=3".into(),
+                    priority: Priority::Standard,
+                    seed: 0,
+                    n_steps: 4,
+                    cond: vec![],
+                    ref_img: None,
+                    return_latent: false,
+                    error_budget: None,
+                },
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn steal_board_donation_round_trip() {
+        let board = StealBoard::new(2, 4);
+        assert!(board.enabled());
+        assert_eq!(board.hungry_sibling(0), None);
+        board.set_hungry(1, Some(0b10));
+        assert_eq!(board.hungry_sibling(0), Some((1, 0b10)));
+        // A worker never sees itself as a donation target.
+        assert_eq!(board.hungry_sibling(1), None);
+        let (it, _rx) = item(7);
+        assert!(board.donate(1, it).is_ok(), "open mailbox accepts");
+        // Donation clears the hunger flag so donors don't dogpile.
+        assert_eq!(board.hungry_sibling(0), None);
+        let mail = board.take_mail(1);
+        assert_eq!(mail.len(), 1);
+        assert_eq!(mail[0].request.id, 7);
+        assert!(board.take_mail(1).is_empty());
+    }
+
+    #[test]
+    fn closed_mailbox_refuses_donations() {
+        let board = StealBoard::new(2, 4);
+        board.set_hungry(0, Some(0));
+        let (racing, _rx) = item(1);
+        assert!(board.donate(0, racing).is_ok(), "open before close");
+        // close_mail returns what raced in and flips the slot closed
+        // atomically — later donations bounce back to the donor.
+        let late = board.close_mail(0);
+        assert_eq!(late.len(), 1);
+        assert_eq!(board.hungry_sibling(1), None, "close clears hunger");
+        let (bounced, _rx2) = item(2);
+        let back = match board.donate(0, bounced) {
+            Err(it) => it,
+            Ok(()) => panic!("closed mailbox accepted a donation"),
+        };
+        assert_eq!(back.request.id, 2);
+        assert!(board.take_mail(0).is_empty());
+        assert!(board.close_mail(0).is_empty());
+    }
+
+    #[test]
+    fn standalone_board_disables_stealing() {
+        let solo = StealBoard::new(1, 16);
+        assert!(!solo.enabled(), "one worker has no one to steal from");
+        let off = StealBoard::new(4, 0);
+        assert!(!off.enabled(), "--steal-after 0 disables stealing");
+        assert!(StealBoard::new(4, 1).enabled());
     }
 }

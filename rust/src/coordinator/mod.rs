@@ -30,6 +30,7 @@
 pub mod batcher;
 pub mod engine;
 pub mod placement;
+pub mod residency;
 pub mod router;
 pub mod scheduler;
 

@@ -15,19 +15,31 @@
 //! order:
 //!
 //! 1. **affinity** — a batch key that was placed before returns to its
-//!    home worker while that worker has admission headroom.  This keeps
-//!    compatible requests batching together, keeps a model's traffic
-//!    where its weights and XLA executables are warm, and sends the
-//!    follow-up traffic of a parked/resumed session back to the worker
-//!    that still holds its state;
-//! 2. **class-aware least load** — otherwise the worker with the least
-//!    queued + in-flight work *at or above* the request's class wins
-//!    (lower-class work yields via the QoS quotas and preemption, so it
-//!    does not count against a candidate), ties broken by total
-//!    outstanding work then worker id.  Because saturated workers are
-//!    skipped in favour of any worker with headroom, a skewed class mix
-//!    can never strand one worker idle while another queues — affinity
-//!    re-homes to the chosen worker;
+//!    home worker while that worker has admission headroom *and still
+//!    holds the model's weights* (residency is lazy and bounded, so a
+//!    home can lose them to eviction; a key whose home went cold is
+//!    re-scored rather than forced into a reload).  Affinity keeps
+//!    compatible requests batching together and sends the follow-up
+//!    traffic of a parked/resumed session back to the worker that
+//!    still holds its state;
+//! 2. **residency- and class-aware least load** — otherwise workers
+//!    with headroom are scored by the queued + in-flight work *at or
+//!    above* the request's class (lower-class work yields via the QoS
+//!    quotas and preemption), plus two explicit placement costs:
+//!    [`COLD_LOAD_COST`] when the request's model is not resident on
+//!    the candidate (a cold weight load stalls the first step and may
+//!    force an eviction), and [`LEDGER_STEER_COST`] when the request is
+//!    refresh-hungry (error-feedback enabled) and the candidate already
+//!    spent at least [`LEDGER_SATURATED_PM`]‰ of the pool's de-phase
+//!    window budget — heavy-error sessions are steered toward workers
+//!    with unspent refresh share.  A resident worker with headroom
+//!    therefore beats an affinity miss, and cold loads concentrate a
+//!    model's traffic instead of smearing copies across the pool.
+//!    Ties break by hot-request ledger share, total outstanding work,
+//!    then worker id.  Because saturated workers are skipped in favour
+//!    of any worker with headroom, a skewed class mix can never strand
+//!    one worker idle while another queues — affinity re-homes to the
+//!    chosen worker;
 //! 3. **pool-wide preemption** — when every worker is saturated, the
 //!    request goes to the worker whose lowest in-flight class is the
 //!    *globally* lowest strictly below the request's class (and whose
@@ -39,6 +51,20 @@
 use std::collections::HashMap;
 
 use super::Priority;
+
+/// Extra load units charged to a candidate that would have to
+/// cold-load the request's model (weight upload + possible eviction
+/// before the first step can run).
+pub const COLD_LOAD_COST: usize = 2;
+
+/// Extra load units charged, for refresh-hungry requests only, to a
+/// candidate whose share of the pool's de-phase window budget is
+/// saturated (≥ [`LEDGER_SATURATED_PM`]).
+pub const LEDGER_STEER_COST: usize = 2;
+
+/// Ledger share (per-mille of the window's full-step budget) at or
+/// above which a worker counts as refresh-saturated.
+pub const LEDGER_SATURATED_PM: u32 = 500;
 
 /// Point-in-time load of one worker, as placement sees it.  Engines
 /// overwrite their slot every scheduler tick; [`super::engine::WorkerPool`]
@@ -67,9 +93,44 @@ pub struct WorkerLoad {
     /// paper's ~99% cache-memory claim, observable in serving).
     pub crf_bytes: usize,
     pub crf_peak_bytes: usize,
+    /// Which models this worker holds resident, as a bitmask over the
+    /// pool's sorted model order (bit `i` = model `i` resident; models
+    /// past 64 are treated as never-resident, which only costs them the
+    /// cold-load charge).  Residency is lazy (`--max-resident-models`),
+    /// so this varies per worker over time.
+    pub resident_mask: u64,
+    /// Resident model count / resident weight bytes (for the
+    /// `resident_models` / `weight_bytes` pool aggregates; the mask is
+    /// the placement input).
+    pub resident_models: usize,
+    pub resident_bytes: usize,
+    /// This worker's share of the pool's de-phase window budget, in
+    /// per-mille of `max_full_per_window`
+    /// (`Scheduler::ledger_share_pm`).
+    pub ledger_share_pm: u32,
+    /// Sum of the accumulated predicted error (`err_score_fp`, 1e-6
+    /// fixed point) across this worker's in-flight sessions.  Carried
+    /// for observability (`err_score_fp` gauges); placement steers by
+    /// the ledger share, which is the budget actually contended.
+    pub err_score_fp: u64,
 }
 
 impl WorkerLoad {
+    /// Start building a snapshot with the given session cap (parking
+    /// lot sized to match, as the engine does).  One builder serves the
+    /// unit tests, the bench's virtual-time pools, and anything else
+    /// that fabricates boards — so new fields cannot silently default
+    /// to different values in different fixtures.
+    pub fn builder(max_in_flight: usize) -> WorkerLoadBuilder {
+        WorkerLoadBuilder {
+            load: WorkerLoad {
+                max_in_flight,
+                max_parked: max_in_flight,
+                ..WorkerLoad::default()
+            },
+        }
+    }
+
     pub fn in_flight(&self) -> usize {
         self.in_flight_by_class.iter().sum()
     }
@@ -111,6 +172,93 @@ impl WorkerLoad {
     pub fn can_park(&self) -> bool {
         self.parked < self.max_parked
     }
+
+    /// Does this worker hold model `slot` resident?  `None` (model
+    /// tracking off — single-model pools, legacy callers) counts as
+    /// resident everywhere, which disables the cold-load charge.
+    pub fn holds(&self, model_slot: Option<usize>) -> bool {
+        match model_slot {
+            Some(s) if s < 64 => self.resident_mask & (1u64 << s) != 0,
+            Some(_) => false,
+            None => true,
+        }
+    }
+}
+
+/// Fluent constructor for [`WorkerLoad`] snapshots (see
+/// [`WorkerLoad::builder`]).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerLoadBuilder {
+    load: WorkerLoad,
+}
+
+impl WorkerLoadBuilder {
+    /// In-flight sessions per class (`[interactive, standard, batch]`).
+    pub fn in_flight(mut self, per_class: [usize; 3]) -> Self {
+        self.load.in_flight_by_class = per_class;
+        self
+    }
+
+    /// Queued requests per class.
+    pub fn queued(mut self, per_class: [usize; 3]) -> Self {
+        self.load.queued_by_class = per_class;
+        self
+    }
+
+    /// Parked (preempted) session count.
+    pub fn parked(mut self, parked: usize) -> Self {
+        self.load.parked = parked;
+        self
+    }
+
+    /// Mark the given model slots resident (sets mask, count, and a
+    /// nominal byte figure so aggregate plumbing is exercised too).
+    pub fn resident(mut self, slots: &[usize]) -> Self {
+        for &s in slots {
+            if s < 64 {
+                self.load.resident_mask |= 1u64 << s;
+            }
+        }
+        self.load.resident_models = slots.len();
+        self.load.resident_bytes = slots.len() * 4096;
+        self
+    }
+
+    /// De-phase window share in per-mille.
+    pub fn ledger_share_pm(mut self, pm: u32) -> Self {
+        self.load.ledger_share_pm = pm;
+        self
+    }
+
+    pub fn build(self) -> WorkerLoad {
+        self.load
+    }
+}
+
+/// One placement decision's inputs (what the pool knows about a
+/// request before any worker does).
+#[derive(Debug, Clone, Copy)]
+pub struct PlaceInput<'a> {
+    /// The request's batch key (affinity stream).
+    pub key: &'a str,
+    /// QoS class.
+    pub class: Priority,
+    /// Index of the request's model in the pool's sorted model order
+    /// (`None` = model tracking off: no residency scoring).
+    pub model_slot: Option<usize>,
+    /// Refresh-hungry: the request runs under the error-feedback
+    /// control plane (serve `--feedback` or a per-request
+    /// `error_budget`), so its sessions contend for de-phase window
+    /// tokens — steer it away from workers whose share is saturated.
+    pub hot: bool,
+}
+
+impl PlaceInput<'_> {
+    /// Class-and-key-only input (legacy behaviour: no residency or
+    /// ledger terms in the score).
+    pub fn basic(key: &str, class: Priority) -> PlaceInput<'_> {
+        PlaceInput { key, class, model_slot: None, hot: false }
+    }
 }
 
 /// Affinity keys retained before the map resets (batch keys are
@@ -141,28 +289,46 @@ impl Placement {
         self.affinity.get(key).copied()
     }
 
-    /// Choose the worker for one request with batch key `key` and class
-    /// `class`, given a load snapshot per worker (`loads.len()` must be
-    /// the pool width).  Updates the key's affinity to the choice.
-    pub fn place(
-        &mut self,
-        key: &str,
-        class: Priority,
-        loads: &[WorkerLoad],
-    ) -> usize {
+    /// Residency-aware least-load score of candidate `w` for `req`
+    /// (lower wins): competing load at or above the class, plus the
+    /// cold-load charge when the model is not resident, plus the
+    /// ledger-steer charge for hot requests on refresh-saturated
+    /// workers.
+    fn score(req: &PlaceInput, load: &WorkerLoad) -> usize {
+        let mut cost = load.load_at_or_above(req.class);
+        if !load.holds(req.model_slot) {
+            cost += COLD_LOAD_COST;
+        }
+        if req.hot && load.ledger_share_pm >= LEDGER_SATURATED_PM {
+            cost += LEDGER_STEER_COST;
+        }
+        cost
+    }
+
+    /// Choose the worker for one request, given a load snapshot per
+    /// worker (`loads.len()` must be the pool width).  Updates the
+    /// key's affinity to the choice.
+    pub fn place(&mut self, req: &PlaceInput, loads: &[WorkerLoad]) -> usize {
         debug_assert_eq!(loads.len(), self.workers);
-        // 1. Sticky affinity while the home worker has headroom.
-        if let Some(&home) = self.affinity.get(key) {
-            if home < loads.len() && loads[home].has_headroom() {
+        // 1. Sticky affinity while the home worker has headroom and
+        // still holds the model's weights (a cold home is re-scored:
+        // resident-and-headroom elsewhere beats reloading at home).
+        if let Some(&home) = self.affinity.get(req.key) {
+            if home < loads.len()
+                && loads[home].has_headroom()
+                && loads[home].holds(req.model_slot)
+            {
                 return home;
             }
         }
-        // 2. Class-aware least load among workers with headroom.
+        // 2. Residency/class-aware least load among workers with
+        // headroom.
         let chosen = (0..loads.len())
             .filter(|w| loads[*w].has_headroom())
             .min_by_key(|w| {
                 (
-                    loads[*w].load_at_or_above(class),
+                    Self::score(req, &loads[*w]),
+                    if req.hot { loads[*w].ledger_share_pm } else { 0 },
                     loads[*w].outstanding(),
                     *w,
                 )
@@ -176,7 +342,7 @@ impl Placement {
                     .filter_map(|w| {
                         loads[w].lowest_in_flight().map(|c| (w, c))
                     })
-                    .filter(|(_, c)| *c < class)
+                    .filter(|(_, c)| *c < req.class)
                     .min_by_key(|(w, c)| {
                         (*c, loads[*w].outstanding(), *w)
                     })
@@ -191,13 +357,13 @@ impl Placement {
                     .expect("pool has at least one worker")
             });
         if self.affinity.len() >= MAX_AFFINITY_KEYS
-            && !self.affinity.contains_key(key)
+            && !self.affinity.contains_key(req.key)
         {
             // Rare full reset beats per-entry LRU bookkeeping on a map
             // this small; homes rebuild from live traffic immediately.
             self.affinity.clear();
         }
-        self.affinity.insert(key.to_string(), chosen);
+        self.affinity.insert(req.key.to_string(), chosen);
         chosen
     }
 }
@@ -207,41 +373,46 @@ mod tests {
     use super::*;
 
     fn idle(max_in_flight: usize) -> WorkerLoad {
-        WorkerLoad {
-            max_in_flight,
-            max_parked: max_in_flight,
-            ..WorkerLoad::default()
-        }
+        WorkerLoad::builder(max_in_flight).build()
     }
 
     fn with_in_flight(
         max_in_flight: usize,
         per_class: [usize; 3],
     ) -> WorkerLoad {
-        WorkerLoad { in_flight_by_class: per_class, ..idle(max_in_flight) }
+        WorkerLoad::builder(max_in_flight).in_flight(per_class).build()
+    }
+
+    fn place(
+        p: &mut Placement,
+        key: &str,
+        class: Priority,
+        loads: &[WorkerLoad],
+    ) -> usize {
+        p.place(&PlaceInput::basic(key, class), loads)
     }
 
     #[test]
     fn least_load_spreads_distinct_keys() {
         let mut p = Placement::new(2);
         let mut loads = vec![idle(4), idle(4)];
-        assert_eq!(p.place("a", Priority::Standard, &loads), 0);
+        assert_eq!(place(&mut p, "a", Priority::Standard, &loads), 0);
         loads[0].queued_by_class[Priority::Standard.slot()] += 1;
-        assert_eq!(p.place("b", Priority::Standard, &loads), 1);
+        assert_eq!(place(&mut p, "b", Priority::Standard, &loads), 1);
         loads[1].queued_by_class[Priority::Standard.slot()] += 1;
         // Third key ties on load -> lowest id.
-        assert_eq!(p.place("c", Priority::Standard, &loads), 0);
+        assert_eq!(place(&mut p, "c", Priority::Standard, &loads), 0);
     }
 
     #[test]
     fn affinity_returns_home_despite_emptier_peer() {
         let mut p = Placement::new(2);
         let mut loads = vec![idle(4), idle(4)];
-        assert_eq!(p.place("k", Priority::Standard, &loads), 0);
+        assert_eq!(place(&mut p, "k", Priority::Standard, &loads), 0);
         // Worker 0 is busier than worker 1 now, but still has headroom:
         // the key goes home (weights + CRF residency, batch-mates).
         loads[0].in_flight_by_class[Priority::Standard.slot()] = 3;
-        assert_eq!(p.place("k", Priority::Standard, &loads), 0);
+        assert_eq!(place(&mut p, "k", Priority::Standard, &loads), 0);
         assert_eq!(p.home("k"), Some(0));
     }
 
@@ -251,14 +422,14 @@ mod tests {
         // 0 must not strand worker 1 idle once worker 0 saturates.
         let mut p = Placement::new(2);
         let mut loads = vec![idle(2), idle(2)];
-        assert_eq!(p.place("k", Priority::Batch, &loads), 0);
+        assert_eq!(place(&mut p, "k", Priority::Batch, &loads), 0);
         loads[0].in_flight_by_class[Priority::Batch.slot()] = 2; // full
-        assert_eq!(p.place("k", Priority::Batch, &loads), 1);
+        assert_eq!(place(&mut p, "k", Priority::Batch, &loads), 1);
         // Affinity re-homed: with headroom back on both, the key stays
         // on its new home rather than flapping.
         assert_eq!(p.home("k"), Some(1));
         loads[0].in_flight_by_class[Priority::Batch.slot()] = 0;
-        assert_eq!(p.place("k", Priority::Batch, &loads), 1);
+        assert_eq!(place(&mut p, "k", Priority::Batch, &loads), 1);
     }
 
     #[test]
@@ -272,10 +443,10 @@ mod tests {
             with_in_flight(8, [0, 0, 3]),
             with_in_flight(8, [1, 0, 0]),
         ];
-        assert_eq!(p.place("x", Priority::Interactive, &loads), 0);
+        assert_eq!(place(&mut p, "x", Priority::Interactive, &loads), 0);
         // A batch request sees the opposite ordering (3 vs 1 at or
         // above batch) and picks worker 1.
-        assert_eq!(p.place("y", Priority::Batch, &loads), 1);
+        assert_eq!(place(&mut p, "y", Priority::Batch, &loads), 1);
     }
 
     #[test]
@@ -290,20 +461,23 @@ mod tests {
             with_in_flight(2, [0, 1, 1]),
         ];
         assert!(!loads[0].has_headroom() && !loads[1].has_headroom());
-        assert_eq!(p.place("k", Priority::Interactive, &loads), 1);
+        assert_eq!(place(&mut p, "k", Priority::Interactive, &loads), 1);
 
         // With worker 1's parking lot full, worker 0 (standard victim,
         // still strictly below interactive) is the best remaining.
         let mut full_lot = loads.clone();
         full_lot[1].parked = full_lot[1].max_parked;
-        assert_eq!(p.place("k2", Priority::Interactive, &full_lot), 0);
+        assert_eq!(
+            place(&mut p, "k2", Priority::Interactive, &full_lot),
+            0
+        );
 
         // A standard arrival outranks only the batch session: worker 1.
-        assert_eq!(p.place("k3", Priority::Standard, &loads), 1);
+        assert_eq!(place(&mut p, "k3", Priority::Standard, &loads), 1);
 
         // Nothing strictly below a batch arrival exists: it queues
         // behind the least outstanding worker instead of preempting.
-        assert_eq!(p.place("k4", Priority::Batch, &loads), 0);
+        assert_eq!(place(&mut p, "k4", Priority::Batch, &loads), 0);
     }
 
     #[test]
@@ -312,17 +486,17 @@ mod tests {
         // rule once the pool saturates.
         let mut p = Placement::new(2);
         let mut loads = vec![idle(2), idle(2)];
-        assert_eq!(p.place("k", Priority::Interactive, &loads), 0);
+        assert_eq!(place(&mut p, "k", Priority::Interactive, &loads), 0);
         loads[0] = with_in_flight(2, [2, 0, 0]); // interactive, no victim
         loads[1] = with_in_flight(2, [0, 0, 2]); // batch victims
-        assert_eq!(p.place("k", Priority::Interactive, &loads), 1);
+        assert_eq!(place(&mut p, "k", Priority::Interactive, &loads), 1);
     }
 
     #[test]
     fn single_worker_pool_degenerates_cleanly() {
         let mut p = Placement::new(1);
         let loads = vec![with_in_flight(1, [1, 0, 0])];
-        assert_eq!(p.place("k", Priority::Batch, &loads), 0);
+        assert_eq!(place(&mut p, "k", Priority::Batch, &loads), 0);
         assert_eq!(p.workers(), 1);
     }
 
@@ -331,8 +505,137 @@ mod tests {
         let mut p = Placement::new(2);
         let loads = vec![idle(64), idle(64)];
         for i in 0..(MAX_AFFINITY_KEYS + 10) {
-            p.place(&format!("key-{i}"), Priority::Standard, &loads);
+            place(&mut p, &format!("key-{i}"), Priority::Standard, &loads);
         }
         assert!(p.affinity.len() <= MAX_AFFINITY_KEYS);
+    }
+
+    // ---------------- placement v2: residency + ledger share ---------
+
+    fn input<'a>(
+        key: &'a str,
+        class: Priority,
+        model_slot: usize,
+    ) -> PlaceInput<'a> {
+        PlaceInput { key, class, model_slot: Some(model_slot), hot: false }
+    }
+
+    #[test]
+    fn resident_worker_beats_emptier_cold_worker() {
+        // Worker 0 holds the model but is one request busier; worker 1
+        // is idle but cold.  The cold-load charge (2) outweighs the one
+        // extra queued request, so the resident worker wins — and the
+        // score flips once the load gap exceeds the charge.
+        let mut p = Placement::new(2);
+        let mut loads = vec![
+            WorkerLoad::builder(8).queued([0, 1, 0]).resident(&[0]).build(),
+            WorkerLoad::builder(8).build(),
+        ];
+        assert_eq!(
+            p.place(&input("a", Priority::Standard, 0), &loads),
+            0,
+            "one queued request must not outweigh a cold load"
+        );
+        loads[0].queued_by_class[Priority::Standard.slot()] = 3;
+        assert_eq!(
+            p.place(&input("b", Priority::Standard, 0), &loads),
+            1,
+            "a deep queue must eventually justify loading elsewhere"
+        );
+    }
+
+    #[test]
+    fn cold_home_rehomes_to_the_resident_worker() {
+        // Key "k" was homed on worker 0, but worker 0 evicted the model
+        // and worker 1 now holds it: affinity must not force a reload —
+        // resident-and-headroom beats the stale home.
+        let mut p = Placement::new(2);
+        let warm0 = vec![
+            WorkerLoad::builder(4).resident(&[0]).build(),
+            WorkerLoad::builder(4).build(),
+        ];
+        assert_eq!(p.place(&input("k", Priority::Standard, 0), &warm0), 0);
+        assert_eq!(p.home("k"), Some(0));
+        let cold0 = vec![
+            WorkerLoad::builder(4).resident(&[1]).build(),
+            WorkerLoad::builder(4).resident(&[0]).build(),
+        ];
+        assert_eq!(p.place(&input("k", Priority::Standard, 0), &cold0), 1);
+        assert_eq!(p.home("k"), Some(1));
+    }
+
+    #[test]
+    fn model_tracking_off_never_charges_cold_loads() {
+        // `model_slot: None` (legacy callers, single-model pools) keeps
+        // the original least-load behaviour bit-for-bit: residency
+        // masks are ignored.
+        let mut p = Placement::new(2);
+        let loads = vec![
+            WorkerLoad::builder(4).resident(&[3]).build(),
+            WorkerLoad::builder(4).build(),
+        ];
+        assert_eq!(place(&mut p, "a", Priority::Standard, &loads), 0);
+    }
+
+    #[test]
+    fn hot_requests_steer_away_from_saturated_ledger_share() {
+        // Both workers resident + equally loaded, but worker 0 spent
+        // the whole de-phase window budget: a refresh-hungry request
+        // goes to worker 1; a cold (non-feedback) one still ties to 0.
+        let mut p = Placement::new(2);
+        let loads = vec![
+            WorkerLoad::builder(8)
+                .resident(&[0])
+                .ledger_share_pm(1000)
+                .build(),
+            WorkerLoad::builder(8).resident(&[0]).build(),
+        ];
+        let hot = PlaceInput {
+            key: "h",
+            class: Priority::Standard,
+            model_slot: Some(0),
+            hot: true,
+        };
+        assert_eq!(p.place(&hot, &loads), 1);
+        assert_eq!(p.place(&input("c", Priority::Standard, 0), &loads), 0);
+    }
+
+    #[test]
+    fn cold_load_charge_does_not_override_saturation_rules() {
+        // Residency charges only reorder workers *with headroom*; a
+        // saturated resident worker still loses to a cold idle one.
+        let mut p = Placement::new(2);
+        let loads = vec![
+            WorkerLoad::builder(1)
+                .in_flight([0, 1, 0])
+                .resident(&[0])
+                .build(),
+            WorkerLoad::builder(1).build(),
+        ];
+        assert_eq!(p.place(&input("k", Priority::Standard, 0), &loads), 1);
+    }
+
+    #[test]
+    fn hot_tie_breaks_toward_lower_share_below_saturation() {
+        // Neither worker is saturated, but shares differ: the hot
+        // request prefers the lower share on an otherwise equal score.
+        let mut p = Placement::new(2);
+        let loads = vec![
+            WorkerLoad::builder(8)
+                .resident(&[0])
+                .ledger_share_pm(400)
+                .build(),
+            WorkerLoad::builder(8)
+                .resident(&[0])
+                .ledger_share_pm(100)
+                .build(),
+        ];
+        let hot = PlaceInput {
+            key: "h",
+            class: Priority::Standard,
+            model_slot: Some(0),
+            hot: true,
+        };
+        assert_eq!(p.place(&hot, &loads), 1);
     }
 }

@@ -1,0 +1,250 @@
+//! Lazy, bounded per-worker weight residency.
+//!
+//! PR 3's pool made every worker load every model at startup, which
+//! made weight memory scale as `workers × models` and placement blind
+//! to it.  [`Residency`] inverts that: a worker starts **empty** and a
+//! model's payload (the device weight buffer, in the engine) becomes
+//! resident on first placement, bounded by `--max-resident-models`
+//! with LRU eviction.  Two invariants:
+//!
+//! * **pinned while in use** — a model with any in-flight or parked
+//!   session is never evicted (the caller supplies the in-use test, so
+//!   this layer stays pure data and unit-testable without a runtime);
+//! * **bound respected** — when the set is full and nothing is
+//!   evictable, admission of the would-be load is *deferred* (the
+//!   engine leaves the batch queued) rather than exceeding the bound.
+//!
+//! Generic over the payload so tests exercise the LRU/pinning logic
+//! with `()` while the engine stores `Rc<xla::PjRtBuffer>`s.
+
+use std::collections::HashMap;
+
+/// One resident model's payload and bookkeeping.
+#[derive(Debug)]
+struct Slot<T> {
+    value: T,
+    bytes: usize,
+    /// Logical use clock at last touch (monotone per map).
+    last_used: u64,
+}
+
+/// The residency map: model name → payload, LRU-bounded.
+#[derive(Debug)]
+pub struct Residency<T> {
+    /// Max resident models; 0 = unbounded (lazy load, never evict).
+    max_models: usize,
+    clock: u64,
+    resident: HashMap<String, Slot<T>>,
+    loads: u64,
+    evictions: u64,
+}
+
+impl<T> Residency<T> {
+    pub fn new(max_models: usize) -> Residency<T> {
+        Residency {
+            max_models,
+            clock: 0,
+            resident: HashMap::new(),
+            loads: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn max_models(&self) -> usize {
+        self.max_models
+    }
+
+    pub fn count(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Total bytes of resident payloads.
+    pub fn bytes(&self) -> usize {
+        self.resident.values().map(|s| s.bytes).sum()
+    }
+
+    /// Loads performed so far (== cold starts; the `weight_loads`
+    /// counter).
+    pub fn loads(&self) -> u64 {
+        self.loads
+    }
+
+    /// Evictions performed so far (the `weight_evictions` counter).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn contains(&self, model: &str) -> bool {
+        self.resident.contains_key(model)
+    }
+
+    /// Fetch a resident payload, marking it most-recently-used.
+    pub fn touch(&mut self, model: &str) -> Option<&T> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.resident.get_mut(model).map(|s| {
+            s.last_used = clock;
+            &s.value
+        })
+    }
+
+    /// Fetch without touching the LRU order (observability reads).
+    pub fn peek(&self, model: &str) -> Option<&T> {
+        self.resident.get(model).map(|s| &s.value)
+    }
+
+    /// Residency bitmask over `order` (the pool's sorted model list):
+    /// bit `i` set iff `order[i]` is resident.  Models past bit 63 are
+    /// reported cold, which only costs them placement's cold charge.
+    pub fn mask(&self, order: &[String]) -> u64 {
+        let mut mask = 0u64;
+        for (i, name) in order.iter().take(64).enumerate() {
+            if self.resident.contains_key(name) {
+                mask |= 1u64 << i;
+            }
+        }
+        mask
+    }
+
+    /// Could `model` become resident right now?  True when it already
+    /// is, the bound has room, or some resident model passes neither
+    /// `in_use` nor equals `model`.  The engine gates batch admission
+    /// on this so a full, fully-pinned set defers new models instead of
+    /// overshooting the bound.
+    pub fn admissible(
+        &self,
+        model: &str,
+        in_use: &dyn Fn(&str) -> bool,
+    ) -> bool {
+        if self.contains(model) {
+            return true;
+        }
+        if self.max_models == 0 || self.resident.len() < self.max_models {
+            return true;
+        }
+        self.resident.keys().any(|m| !in_use(m))
+    }
+
+    /// Make `model` resident with `value`, evicting least-recently-used
+    /// not-in-use residents while over the bound.  Returns the evicted
+    /// names (so the engine can release runtime-side caches), or `None`
+    /// when the bound is full of in-use models — the caller must defer
+    /// (it should have checked [`Residency::admissible`] first).
+    ///
+    /// No-op (empty vec) when already resident.
+    pub fn insert(
+        &mut self,
+        model: &str,
+        bytes: usize,
+        value: T,
+        in_use: &dyn Fn(&str) -> bool,
+    ) -> Option<Vec<String>> {
+        self.clock += 1;
+        if let Some(slot) = self.resident.get_mut(model) {
+            slot.last_used = self.clock;
+            return Some(Vec::new());
+        }
+        let mut evicted = Vec::new();
+        while self.max_models != 0 && self.resident.len() >= self.max_models
+        {
+            let victim = self
+                .resident
+                .iter()
+                .filter(|(m, _)| !in_use(m.as_str()))
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(m, _)| m.clone());
+            let Some(victim) = victim else {
+                // Every resident model is pinned by a live session:
+                // undo nothing, report the deferral.
+                return None;
+            };
+            self.resident.remove(&victim);
+            self.evictions += 1;
+            evicted.push(victim);
+        }
+        self.loads += 1;
+        self.resident.insert(
+            model.to_string(),
+            Slot { value, bytes, last_used: self.clock },
+        );
+        Some(evicted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn none_in_use(_: &str) -> bool {
+        false
+    }
+
+    #[test]
+    fn lazy_start_and_unbounded_default() {
+        let mut r: Residency<u32> = Residency::new(0);
+        assert_eq!(r.count(), 0);
+        assert!(r.admissible("a", &none_in_use));
+        for (i, m) in ["a", "b", "c"].iter().enumerate() {
+            assert!(r.insert(m, 8, i as u32, &none_in_use).is_some());
+        }
+        assert_eq!((r.count(), r.loads(), r.evictions()), (3, 3, 0));
+        assert_eq!(r.bytes(), 24);
+        assert_eq!(r.touch("b"), Some(&1));
+        assert_eq!(r.peek("z"), None);
+    }
+
+    #[test]
+    fn lru_eviction_respects_the_bound() {
+        let mut r: Residency<()> = Residency::new(2);
+        r.insert("a", 4, (), &none_in_use).unwrap();
+        r.insert("b", 4, (), &none_in_use).unwrap();
+        // Touch "a" so "b" is the LRU.
+        r.touch("a");
+        let evicted = r.insert("c", 4, (), &none_in_use).unwrap();
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert_eq!(r.count(), 2);
+        assert!(r.contains("a") && r.contains("c"));
+        assert_eq!((r.loads(), r.evictions()), (3, 1));
+    }
+
+    #[test]
+    fn never_evicts_a_model_with_in_flight_sessions() {
+        let mut r: Residency<()> = Residency::new(1);
+        r.insert("a", 4, (), &none_in_use).unwrap();
+        let a_busy = |m: &str| m == "a";
+        // Pinned: "b" cannot displace "a" — the load is deferred, the
+        // bound holds, and nothing was evicted.
+        assert!(!r.admissible("b", &a_busy));
+        assert_eq!(r.insert("b", 4, (), &a_busy), None);
+        assert_eq!((r.count(), r.evictions()), (1, 0));
+        assert!(r.contains("a"));
+        // Once the pin lifts, the same load succeeds by evicting "a".
+        assert!(r.admissible("b", &none_in_use));
+        let evicted = r.insert("b", 4, (), &none_in_use).unwrap();
+        assert_eq!(evicted, vec!["a".to_string()]);
+        assert_eq!(r.count(), 1);
+    }
+
+    #[test]
+    fn reinsert_is_a_touch_not_a_load() {
+        let mut r: Residency<()> = Residency::new(2);
+        r.insert("a", 4, (), &none_in_use).unwrap();
+        r.insert("b", 4, (), &none_in_use).unwrap();
+        // Re-inserting "a" refreshes its recency instead of reloading.
+        assert_eq!(r.insert("a", 4, (), &none_in_use), Some(Vec::new()));
+        assert_eq!(r.loads(), 2);
+        let evicted = r.insert("c", 4, (), &none_in_use).unwrap();
+        assert_eq!(evicted, vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn mask_follows_the_pool_model_order() {
+        let order: Vec<String> =
+            ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+        let mut r: Residency<()> = Residency::new(0);
+        assert_eq!(r.mask(&order), 0);
+        r.insert("c", 4, (), &none_in_use).unwrap();
+        r.insert("a", 4, (), &none_in_use).unwrap();
+        assert_eq!(r.mask(&order), 0b101);
+    }
+}

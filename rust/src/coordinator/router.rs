@@ -124,11 +124,26 @@ impl Router {
     /// reached within one rotation even when an earlier name always has
     /// a batch ready.
     pub fn next_batch(&mut self) -> Option<(String, Vec<Pending>)> {
+        self.next_batch_where(&|_| true)
+    }
+
+    /// [`Router::next_batch`] restricted to models `admissible` accepts
+    /// — the engine's lazy-residency gate: a model that cannot become
+    /// resident right now (the LRU bound is full of pinned models)
+    /// stays queued and the scan moves on, instead of popping a batch
+    /// the engine cannot start.
+    pub fn next_batch_where(
+        &mut self,
+        admissible: &dyn Fn(&str) -> bool,
+    ) -> Option<(String, Vec<Pending>)> {
         let now = std::time::Instant::now();
         let n = self.names.len();
         for class in Priority::ALL {
             for k in 0..n {
                 let i = (self.rr_next + k) % n;
+                if !admissible(&self.names[i]) {
+                    continue;
+                }
                 let b = self.batchers.get_mut(&self.names[i]).unwrap();
                 if let Some(batch) = b.next_batch_for(class, now) {
                     self.rr_next = (i + 1) % n;
@@ -146,11 +161,60 @@ impl Router {
     /// class reported ready here is still ready — or outranked by a
     /// newly ready higher class — when `next_batch` pops.
     pub fn ready_class(&self) -> Option<Priority> {
+        self.ready_class_where(&|_| true)
+    }
+
+    /// [`Router::ready_class`] restricted to `admissible` models, so
+    /// the engine's preemption decision and its admission pop agree on
+    /// which class is actually startable under the residency bound.
+    pub fn ready_class_where(
+        &self,
+        admissible: &dyn Fn(&str) -> bool,
+    ) -> Option<Priority> {
         let now = std::time::Instant::now();
         self.batchers
-            .values()
-            .filter_map(|b| b.ready_class(now))
+            .iter()
+            .filter(|(name, _)| admissible(name.as_str()))
+            .filter_map(|(_, b)| b.ready_class(now))
             .max()
+    }
+
+    /// Models with a batch ready *now* (any class), sorted by name —
+    /// the engine scans these for residency-deferred work (ready but
+    /// not startable under the weight-residency bound).
+    pub fn ready_models(&self) -> Vec<String> {
+        let now = std::time::Instant::now();
+        let mut ready: Vec<String> = self
+            .batchers
+            .iter()
+            .filter(|(_, b)| b.ready_class(now).is_some())
+            .map(|(n, _)| n.clone())
+            .collect();
+        ready.sort();
+        ready
+    }
+
+    /// Remove and return the single oldest queued request among models
+    /// `matches` accepts (work-stealing donation: the pool's oldest
+    /// waiting work moves to an idle worker).  Oldest is by true
+    /// enqueue time across every class queue; removing a queue head
+    /// never reorders the survivors, so batching FIFO invariants hold.
+    pub fn steal_oldest(
+        &mut self,
+        matches: &dyn Fn(&str) -> bool,
+    ) -> Option<Pending> {
+        let model = self
+            .names
+            .iter()
+            .filter(|n| matches(n.as_str()))
+            .filter_map(|n| {
+                self.batchers[n.as_str()]
+                    .oldest_enqueued()
+                    .map(|t| (n.clone(), t))
+            })
+            .min_by_key(|(_, t)| *t)
+            .map(|(n, _)| n)?;
+        self.batchers.get_mut(&model).unwrap().steal_oldest()
     }
 
     pub fn queued(&self) -> usize {
@@ -332,6 +396,57 @@ mod tests {
         assert_eq!(r.ready_class(), Some(Priority::Batch));
         assert_eq!(r.next_batch().unwrap().0, "a");
         assert_eq!(r.ready_class(), None);
+    }
+
+    #[test]
+    fn filtered_pop_and_peek_skip_inadmissible_models() {
+        // The lazy-residency gate: a model whose weights cannot become
+        // resident is invisible to both the readiness peek and the pop,
+        // but its requests stay queued for later.
+        let mut r = Router::new(
+            vec![cfg("a", false), cfg("b", false)],
+            Duration::ZERO,
+            100,
+        );
+        assert_eq!(r.route(req("a")), RouteResult::Queued);
+        assert_eq!(r.route(req("b")), RouteResult::Queued);
+        let not_a = |m: &str| m != "a";
+        assert_eq!(r.ready_class_where(&not_a), Some(Priority::Standard));
+        let (name, _) = r.next_batch_where(&not_a).unwrap();
+        assert_eq!(name, "b");
+        assert_eq!(r.ready_class_where(&not_a), None);
+        // "a" was deferred, not dropped: the unfiltered pop still
+        // serves it.
+        assert_eq!(r.queued(), 1);
+        assert_eq!(r.next_batch().unwrap().0, "a");
+    }
+
+    #[test]
+    fn steal_takes_oldest_matching_then_any() {
+        let mut r = Router::new(
+            vec![cfg("a", false), cfg("b", false)],
+            Duration::from_secs(10),
+            100,
+        );
+        let t0 = Instant::now();
+        let mut a1 = req("a");
+        a1.id = 1;
+        r.route_at(a1, t0);
+        let mut b2 = req("b");
+        b2.id = 2;
+        r.route_at(b2, t0 + Duration::from_millis(5));
+        let mut a3 = req("a");
+        a3.id = 3;
+        r.route_at(a3, t0 + Duration::from_millis(10));
+        // Thief holds only "b": the match filter yields b's oldest even
+        // though an older "a" request exists...
+        let p = r.steal_oldest(&|m| m == "b").unwrap();
+        assert_eq!(p.request.id, 2);
+        // ...and the unfiltered fallback takes the globally oldest.
+        let p = r.steal_oldest(&|_| true).unwrap();
+        assert_eq!(p.request.id, 1);
+        assert_eq!(r.queued(), 1);
+        assert!(r.steal_oldest(&|m| m == "b").is_none());
     }
 
     #[test]

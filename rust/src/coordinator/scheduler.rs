@@ -64,8 +64,11 @@ pub struct DephaseLedger {
 struct LedgerState {
     /// Global ticks issued so far (== steps scheduled across sharers).
     tick: u64,
-    /// Global ticks within the trailing window at which fulls ran.
-    recent_full: VecDeque<u64>,
+    /// Global ticks within the trailing window at which fulls ran, and
+    /// which worker ran each — the per-worker attribution is what makes
+    /// a worker's *share* of the pool budget observable (placement
+    /// steers refresh-hungry sessions away from saturated shares).
+    recent_full: VecDeque<(u64, usize)>,
 }
 
 impl DephaseLedger {
@@ -113,8 +116,30 @@ impl DephaseLedger {
         self.state.lock().unwrap().recent_full.len()
     }
 
+    /// Full steps worker `worker` spent from the trailing window.
+    pub fn window_fulls_by(&self, worker: usize) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .recent_full
+            .iter()
+            .filter(|(_, w)| *w == worker)
+            .count()
+    }
+
+    /// Worker `worker`'s share of the window's full-step budget, in
+    /// per-mille of `max_full` (clamped to 1000).  A worker near 1000
+    /// has been spending the whole pool's refresh budget by itself —
+    /// the saturation signal `coordinator::placement` steers
+    /// refresh-hungry (error-feedback) sessions away from.
+    pub fn share_pm(&self, worker: usize) -> u32 {
+        let fulls = self.window_fulls_by(worker) as u64;
+        let pm = fulls.saturating_mul(1000) / self.max_full.max(1) as u64;
+        pm.min(1000) as u32
+    }
+
     fn slide(s: &mut LedgerState, window: u64, now: u64) {
-        while let Some(&t) = s.recent_full.front() {
+        while let Some(&(t, _)) = s.recent_full.front() {
             if t.saturating_add(window) <= now {
                 s.recent_full.pop_front();
             } else {
@@ -146,10 +171,10 @@ impl LedgerTxn<'_> {
         self.max_full.saturating_sub(self.state.recent_full.len())
     }
 
-    /// Spend a token: this tick issued a full-compute step.
-    fn note_full(mut self) {
+    /// Spend a token: this tick issued a full-compute step on `worker`.
+    fn note_full(mut self, worker: usize) {
         let t = self.tick;
-        self.state.recent_full.push_back(t);
+        self.state.recent_full.push_back((t, worker));
     }
 }
 
@@ -292,8 +317,11 @@ pub struct Scheduler {
     cfg: QosConfig,
     /// Trailing-window ledger of full-compute steps — private to this
     /// scheduler ([`Scheduler::new`]) or shared across a worker pool
-    /// ([`Scheduler::with_ledger`]).
+    /// ([`Scheduler::with_ledger`] / [`Scheduler::for_worker`]).
     ledger: Arc<DephaseLedger>,
+    /// Which pool worker this scheduler accounts its fulls to on the
+    /// shared ledger (0 for standalone engines).
+    worker: usize,
     /// Credit refills performed (diagnostic).
     rounds: u64,
 }
@@ -311,9 +339,27 @@ impl Scheduler {
     }
 
     /// A scheduler that accounts its full steps against a shared
-    /// de-phasing ledger (the worker pool's global refresh budget).
+    /// de-phasing ledger (the worker pool's global refresh budget), as
+    /// worker 0.
     pub fn with_ledger(cfg: QosConfig, ledger: Arc<DephaseLedger>) -> Scheduler {
-        Scheduler { tick: 0, cfg, ledger, rounds: 0 }
+        Scheduler::for_worker(cfg, ledger, 0)
+    }
+
+    /// A pool worker's scheduler: shares `ledger` and attributes every
+    /// full step it issues to `worker`, so the ledger can answer "whose
+    /// share of the refresh budget is saturated" for placement.
+    pub fn for_worker(
+        cfg: QosConfig,
+        ledger: Arc<DephaseLedger>,
+        worker: usize,
+    ) -> Scheduler {
+        Scheduler { tick: 0, cfg, ledger, worker, rounds: 0 }
+    }
+
+    /// This worker's share of the shared window's full-step budget, in
+    /// per-mille (the `WorkerLoad::ledger_share_pm` placement input).
+    pub fn ledger_share_pm(&self) -> u32 {
+        self.ledger.share_pm(self.worker)
     }
 
     /// Current tick (== steps scheduled so far).
@@ -481,7 +527,7 @@ impl Scheduler {
         s.last_ran = next_tick;
         s.credits = s.credits.saturating_sub(1);
         if s.next_kind == StepKind::Full {
-            txn.note_full();
+            txn.note_full(self.worker);
         } else {
             drop(txn);
         }
@@ -755,6 +801,45 @@ mod tests {
         let p = a.pick(&mut sa).unwrap();
         assert_eq!(p.kind, StepKind::Full);
         assert!(!p.forced_full && !p.dephased);
+    }
+
+    /// The ledger attributes window fulls to the worker that issued
+    /// them, and `share_pm` reports each worker's slice of the budget —
+    /// the placement steering input.
+    #[test]
+    fn ledger_attributes_fulls_per_worker() {
+        let cfg = QosConfig {
+            weights: [1, 1, 1],
+            aging_bound: u64::MAX,
+            max_full_per_window: 2,
+            dephase_window: 16,
+        };
+        let ledger = DephaseLedger::from_config(&cfg);
+        let mut a = Scheduler::for_worker(cfg, ledger.clone(), 0);
+        let mut b = Scheduler::for_worker(cfg, ledger.clone(), 1);
+
+        let mut sa = vec![st(Priority::Standard, 0, 0, 100)];
+        sa[0].next_kind = StepKind::Full;
+        a.pick(&mut sa).unwrap();
+        assert_eq!(ledger.window_fulls_by(0), 1);
+        assert_eq!(ledger.window_fulls_by(1), 0);
+        // Worker 0 spent 1 of the 2 window tokens: 500 per-mille.
+        assert_eq!(a.ledger_share_pm(), 500);
+        assert_eq!(b.ledger_share_pm(), 0);
+
+        let mut sb = vec![st(Priority::Standard, 0, 0, 100)];
+        sb[0].next_kind = StepKind::Full;
+        b.pick(&mut sb).unwrap();
+        assert_eq!(ledger.window_fulls(), 2);
+        assert_eq!(b.ledger_share_pm(), 500);
+
+        // Cached ticks slide the window; both shares decay back to 0.
+        sb[0].next_kind = StepKind::Cached;
+        for _ in 0..16 {
+            b.pick(&mut sb).unwrap();
+        }
+        assert_eq!(a.ledger_share_pm(), 0);
+        assert_eq!(b.ledger_share_pm(), 0);
     }
 
     /// Error-priority token assignment: three full-next sessions, one

@@ -93,6 +93,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // weights) per logical core.
         workers: args.usize_or("workers", 0)?,
         feedback,
+        // Placement v2: lazy weight residency bound (0 = unbounded)
+        // and the idle-tick threshold for pool work-stealing (0 = off).
+        max_resident_models: args.usize_or("max-resident-models", 0)?,
+        steal_after: args.u64_or(
+            "steal-after",
+            freqca::coordinator::engine::DEFAULT_STEAL_AFTER,
+        )?,
     };
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
     server::serve(&artifacts, opts, Arc::new(AtomicBool::new(false)))

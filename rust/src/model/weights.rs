@@ -43,6 +43,31 @@ pub fn load_weights(artifact_dir: &str, name: &str, expect: usize) -> Result<Vec
     Ok(w)
 }
 
+/// Check that a model's weight file exists with exactly `expect`
+/// parameters, without reading its contents.  Lazy residency loads
+/// weights on first placement, so engine startup uses this to keep the
+/// old fail-fast behaviour: a missing or truncated file (a partial
+/// `make artifacts`) aborts boot instead of surfacing as per-request
+/// errors from a server that reported healthy.
+pub fn validate_weights(
+    artifact_dir: &str,
+    name: &str,
+    expect: usize,
+) -> Result<()> {
+    let path = format!("{artifact_dir}/weights_{name}.bin");
+    let meta = std::fs::metadata(&path)
+        .with_context(|| format!("missing weights: {path}"))?;
+    let want = expect as u64 * 4;
+    if meta.len() != want {
+        bail!(
+            "{path}: expected {expect} params ({want} bytes, \
+             meta_{name}.json), found {} bytes",
+            meta.len()
+        );
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -57,6 +82,17 @@ mod tests {
         save_f32(path, &data).unwrap();
         let back = load_f32(path).unwrap();
         assert_eq!(data, back);
+    }
+
+    #[test]
+    fn validate_checks_presence_and_size_without_reading() {
+        let dir = std::env::temp_dir().join("freqca_weights_validate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir = dir.to_str().unwrap();
+        save_f32(&format!("{dir}/weights_m.bin"), &[1.0, 2.0, 3.0]).unwrap();
+        assert!(validate_weights(dir, "m", 3).is_ok());
+        assert!(validate_weights(dir, "m", 4).is_err(), "size mismatch");
+        assert!(validate_weights(dir, "absent", 3).is_err(), "missing file");
     }
 
     #[test]

@@ -104,6 +104,14 @@ impl Runtime {
         Ok(rc)
     }
 
+    /// Drop the cached weight buffer of one model (lazy-residency
+    /// eviction).  The device memory is released once the last session
+    /// holding the `Rc` finishes; a later `weights_buffer` call
+    /// re-uploads from the host file.
+    pub fn release_weights(&self, model: &str) {
+        self.weights.borrow_mut().remove(model);
+    }
+
     /// Upload a host tensor to the device.
     pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
         let dims: Vec<usize> = if t.shape.is_empty() {

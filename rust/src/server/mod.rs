@@ -62,6 +62,14 @@ pub struct ServeOpts {
     /// controller and error-priority refresh tokens.  None = off;
     /// requests can still opt in per-request via `error_budget`.
     pub feedback: Option<FeedbackConfig>,
+    /// Per-worker bound on lazily resident models
+    /// (`--max-resident-models`; 0 = unbounded).  Workers start with
+    /// no weights loaded and LRU-evict past the bound — never a model
+    /// with live sessions.
+    pub max_resident_models: usize,
+    /// Idle engine ticks before a pool worker advertises hunger on the
+    /// work-stealing board (`--steal-after`; 0 disables stealing).
+    pub steal_after: u64,
 }
 
 /// Default concurrency cap: enough sessions to keep short jobs
@@ -80,6 +88,8 @@ impl Default for ServeOpts {
             warmup: vec![],
             workers: 1,
             feedback: None,
+            max_resident_models: 0,
+            steal_after: crate::coordinator::engine::DEFAULT_STEAL_AFTER,
         }
     }
 }
@@ -114,6 +124,8 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         opts.feedback,
         metrics.clone(),
         workers,
+        opts.max_resident_models,
+        opts.steal_after,
         &opts.warmup,
     )?;
     let models = pool.models().to_vec();

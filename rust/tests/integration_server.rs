@@ -219,6 +219,99 @@ fn pool_serves_and_places_across_workers() {
     stop.store(true, Ordering::Relaxed);
 }
 
+/// Placement v2 end-to-end: a 2-worker pool serving 2 models under
+/// `--max-resident-models 1` completes every request with weights
+/// loading lazily — the `weight_loads` counter moves, weight bytes are
+/// a live gauge, and no worker ever reports more than one resident
+/// model (the LRU bound holds even while both models have traffic).
+/// Needs the second test-scale model (`make artifacts
+/// CONFIG=tiny,tiny-fft`, what CI builds).
+#[test]
+fn residency_bounded_pool_serves_two_models() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    if !std::path::Path::new(&format!("{dir}/meta_tiny-fft.json")).exists() {
+        // The artifacts job builds both tiny configs, so a CI skip here
+        // would mean the multi-model path silently stopped running.
+        assert!(
+            std::env::var_os("FREQCA_REQUIRE_ARTIFACTS").is_none(),
+            "FREQCA_REQUIRE_ARTIFACTS is set but tiny-fft artifacts are \
+             missing (run `make artifacts CONFIG=tiny,tiny-fft`)"
+        );
+        eprintln!("skipping: tiny-fft artifacts absent");
+        return;
+    }
+    let port = 17513;
+    let stop = Arc::new(AtomicBool::new(false));
+    let s = stop.clone();
+    std::thread::spawn(move || {
+        let opts = ServeOpts {
+            addr: format!("127.0.0.1:{port}"),
+            batch_wait_ms: 1,
+            queue_capacity: 32,
+            workers: 2,
+            max_resident_models: 1,
+            steal_after: 2,
+            ..ServeOpts::default()
+        };
+        let _ = serve(dir, opts, s);
+    });
+
+    let n_requests = 6u64;
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = connect(port);
+                let model = if i % 2 == 0 { "tiny" } else { "tiny-fft" };
+                let resp = c
+                    .generate(&req(200 + i, model, "freqca:n=3", 6))
+                    .unwrap();
+                assert!(resp.ok, "{model}: {:?}", resp.error);
+                assert_eq!(resp.id, 200 + i);
+                let latent = resp.latent.expect("return_latent");
+                assert!(latent.iter().all(|v| v.is_finite()));
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mut c = connect(port);
+    let m = c.metrics().unwrap();
+    let counters = m.get("counters").expect("counters in metrics");
+    // Lazy residency: nothing was preloaded, so serving two models took
+    // at least two cold weight loads (one per model, possibly more if
+    // the bound forced churn).
+    let loads = counters
+        .get("weight_loads")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    assert!(loads >= 2, "expected >= 2 lazy weight loads: {m}");
+    let gauges = m.get("gauges").expect("gauges in metrics");
+    for w in 0..2 {
+        let resident = gauges
+            .get(&format!("resident_models_w{w}"))
+            .and_then(|v| v.as_f64())
+            .expect("per-worker resident_models gauge");
+        assert!(
+            resident <= 1.0,
+            "worker {w} exceeded --max-resident-models 1: {m}"
+        );
+    }
+    assert!(
+        gauges
+            .get("weight_bytes")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            > 0.0,
+        "pool aggregate weight_bytes missing: {m}"
+    );
+    stop.store(true, Ordering::Relaxed);
+}
+
 // ---------------------------------------------------------------------
 // Engine-level QoS preemption coverage (real runtime, no TCP).
 // ---------------------------------------------------------------------

@@ -7,13 +7,41 @@ Usage: check_bench.py results/bench_coordinator.json \
 The bench runs in deterministic virtual time, so a drift in the
 interactive-class TTFS tail is a real scheduling change, not noise; CI
 fails the run when it regresses more than `tolerance` (default 20%)
-over the committed baseline.  Also sanity-checks the multi-worker
-section so a malformed results file cannot pass silently (the bench
-binary asserts the same invariants before writing it).
+over the committed baseline.  Also sanity-checks the multi-worker,
+placement-v2 and feedback sections so a malformed results file cannot
+pass silently (the bench binary asserts the same invariants before
+writing it).
+
+Missing baseline keys are a **hard failure**, not a silent pass: a new
+scenario whose baseline was never committed (or a typo in the baseline
+file) must turn the gate red, otherwise the gate quietly stops gating.
 """
 
 import json
 import sys
+
+
+class Gate:
+    def __init__(self):
+        self.failed = False
+
+    def fail(self, msg):
+        print(f"FAIL: {msg}")
+        self.failed = True
+
+
+def need(tree, path, what):
+    """Fetch a dotted key path or die loudly (never silently skip)."""
+    node = tree
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            print(
+                f"FAIL: {what} is missing key '{path}' (at '{part}') — "
+                "regenerate or fix it; the gate refuses to pass silently"
+            )
+            sys.exit(1)
+        node = node[part]
+    return node
 
 
 def main():
@@ -24,9 +52,12 @@ def main():
         results = json.load(f)
     with open(sys.argv[2]) as f:
         baseline = json.load(f)
+    gate = Gate()
 
-    measured = results["qos"]["qos"]["interactive"]["ttfs_p95_s"]
-    base = baseline["interactive_ttfs_p95_s"]
+    measured = need(
+        results, "qos.qos.interactive.ttfs_p95_s", "bench results"
+    )
+    base = need(baseline, "interactive_ttfs_p95_s", "baseline")
     tol = baseline.get("tolerance", 0.2)
     limit = base * (1 + tol)
     print(
@@ -34,86 +65,136 @@ def main():
         f"baseline {base * 1e3:.1f} ms, limit {limit * 1e3:.1f} ms"
     )
     if measured > limit:
-        print(f"FAIL: interactive TTFS p95 regressed > {tol * 100:.0f}%")
-        return 1
+        gate.fail(f"interactive TTFS p95 regressed > {tol * 100:.0f}%")
 
-    mw = results["multi_worker"]
+    mw = need(results, "multi_worker", "bench results")
     prev = None
     for k in ("workers_1", "workers_2", "workers_4"):
-        if mw[k]["dephasing"]["violations"] != 0:
-            print(f"FAIL: {k} exceeded the shared de-phase budget unforced")
-            return 1
-        p95 = mw[k]["short_jobs"]["completion_p95_s"]
+        if need(mw, f"{k}.dephasing.violations", "bench results") != 0:
+            gate.fail(f"{k} exceeded the shared de-phase budget unforced")
+        p95 = need(mw, f"{k}.short_jobs.completion_p95_s", "bench results")
         if prev is not None and p95 >= prev:
-            print(f"FAIL: short-job p95 not monotone at {k}")
-            return 1
+            gate.fail(f"short-job p95 not monotone at {k}")
         prev = p95
+
+    # Placement v2 (virtual time, deterministic): lazy residency must
+    # bound cold loads under the skewed multi-model fixture (and never
+    # exceed the residency-blind arm), work-stealing must actually fire
+    # and must not worsen the short-job completion tail (>20% over the
+    # committed steal-on baseline fails), and the pool-wide de-phase
+    # budget must hold unforced in every arm.
+    pv2 = need(results, "placement_v2", "bench results")
+    pv2_base = need(baseline, "placement_v2", "baseline")
+    cold = need(pv2, "v2.cold_loads", "bench results")
+    cold_limit = need(pv2_base, "max_cold_loads", "baseline")
+    blind_cold = need(pv2, "blind.cold_loads", "bench results")
+    steal_p95 = need(pv2, "v2.short_jobs.completion_p95_s", "bench results")
+    no_steal_p95 = need(
+        pv2, "no_steal.short_jobs.completion_p95_s", "bench results"
+    )
+    pv2_tol = pv2_base.get("tolerance", 0.2)
+    p95_base = need(pv2_base, "steal_on_short_p95_s", "baseline")
+    p95_limit = p95_base * (1 + pv2_tol)
+    print(
+        f"placement v2: cold loads {cold} (limit {cold_limit}, blind "
+        f"{blind_cold}); steal-on short p95 {steal_p95 * 1e3:.1f} ms "
+        f"(limit {p95_limit * 1e3:.1f} ms, steal-off "
+        f"{no_steal_p95 * 1e3:.1f} ms)"
+    )
+    if cold > cold_limit:
+        gate.fail(
+            f"placement v2 cold loads {cold} exceed the baseline bound "
+            f"{cold_limit}"
+        )
+    if cold > blind_cold:
+        gate.fail(
+            "residency-aware placement cold-loads more than the "
+            f"residency-blind score ({cold} vs {blind_cold})"
+        )
+    if steal_p95 > no_steal_p95:
+        gate.fail(
+            "work-stealing worsened the short-job completion tail "
+            f"({steal_p95} vs {no_steal_p95})"
+        )
+    if steal_p95 > p95_limit:
+        gate.fail(
+            f"steal-on short-job p95 regressed > {pv2_tol * 100:.0f}% "
+            f"({steal_p95} > {p95_limit:.4f})"
+        )
+    if need(pv2, "v2.steals", "bench results") == 0:
+        gate.fail("placement v2 fixture never exercised work-stealing")
+    for arm in ("v2", "no_steal", "blind"):
+        if need(pv2, f"{arm}.violations", "bench results") != 0:
+            gate.fail(
+                f"placement v2 arm {arm}: unforced de-phase budget breach"
+            )
 
     # Error-feedback control plane (virtual time, deterministic): the
     # controller must spend fewer full computes than static de-phasing
     # at an equal-or-lower worst-case accumulated proxy error, never
     # breach the predicted error budget unforced, and stay within
     # tolerance of the committed full-compute count.
-    fb = results["feedback"]
-    static_fulls = fb["static"]["full_steps"]
-    feedback_fulls = fb["feedback"]["full_steps"]
+    fb = need(results, "feedback", "bench results")
+    static_fulls = need(fb, "static.full_steps", "bench results")
+    feedback_fulls = need(fb, "feedback.full_steps", "bench results")
+    static_peak = need(
+        fb, "static.peak_accumulated_error", "bench results"
+    )
+    feedback_peak = need(
+        fb, "feedback.peak_accumulated_error", "bench results"
+    )
     print(
         f"feedback fulls: static {static_fulls}, controller "
-        f"{feedback_fulls} (peak err {fb['static']['peak_accumulated_error']:.4f}"
-        f" -> {fb['feedback']['peak_accumulated_error']:.4f})"
+        f"{feedback_fulls} (peak err {static_peak:.4f}"
+        f" -> {feedback_peak:.4f})"
     )
     if feedback_fulls >= static_fulls:
-        print("FAIL: error feedback did not reduce full computes")
-        return 1
-    if (fb["feedback"]["peak_accumulated_error"]
-            > fb["static"]["peak_accumulated_error"]):
-        print("FAIL: error feedback worsened the worst-case accumulated error")
-        return 1
-    if fb["feedback"]["unforced_budget_breaches"] != 0:
-        print("FAIL: unforced error-budget breaches in the feedback arm")
-        return 1
-    fb_base = baseline.get("feedback", {})
-    if "feedback_full_steps" in fb_base:
-        fb_tol = fb_base.get("tolerance", 0.15)
-        limit = fb_base["feedback_full_steps"] * (1 + fb_tol)
-        if feedback_fulls > limit:
-            print(
-                f"FAIL: feedback full computes regressed: {feedback_fulls} "
-                f"> limit {limit:.1f} "
-                f"(baseline {fb_base['feedback_full_steps']})"
-            )
-            return 1
-    if "static_full_steps" in fb_base:
-        # The static arm is fully deterministic (fixed interval, fixed
-        # fixture): any drift means the fixture or scheduler changed and
-        # the baseline must be regenerated intentionally.
-        if static_fulls != fb_base["static_full_steps"]:
-            print(
-                f"FAIL: static de-phasing full computes changed: "
-                f"{static_fulls} != baseline "
-                f"{fb_base['static_full_steps']}"
-            )
-            return 1
+        gate.fail("error feedback did not reduce full computes")
+    if feedback_peak > static_peak:
+        gate.fail("error feedback worsened the worst-case accumulated error")
+    if need(fb, "feedback.unforced_budget_breaches", "bench results") != 0:
+        gate.fail("unforced error-budget breaches in the feedback arm")
+    fb_base = need(baseline, "feedback", "baseline")
+    fb_tol = fb_base.get("tolerance", 0.15)
+    fb_limit = need(fb_base, "feedback_full_steps", "baseline") * (1 + fb_tol)
+    if feedback_fulls > fb_limit:
+        gate.fail(
+            f"feedback full computes regressed: {feedback_fulls} "
+            f"> limit {fb_limit:.1f} "
+            f"(baseline {fb_base['feedback_full_steps']})"
+        )
+    # The static arm is fully deterministic (fixed interval, fixed
+    # fixture): any drift means the fixture or scheduler changed and
+    # the baseline must be regenerated intentionally.
+    if static_fulls != need(fb_base, "static_full_steps", "baseline"):
+        gate.fail(
+            f"static de-phasing full computes changed: "
+            f"{static_fulls} != baseline {fb_base['static_full_steps']}"
+        )
 
     # Live-engine replay (present only when artifacts exist): every
     # class completed and the interactive tail beat batch for real.
     # Wall-clock numbers are noisy, so no latency-level gating here.
     if "live" in results:
-        live = results["live"]["per_class"]
+        live = need(results, "live.per_class", "bench results")
         for cls in ("interactive", "standard", "batch"):
-            if live[cls]["n"] == 0:
-                print(f"FAIL: live scenario completed no {cls} requests")
-                return 1
-        if (live["interactive"]["completion_p95_s"]
-                >= live["batch"]["completion_p95_s"]):
-            print("FAIL: live interactive completion p95 did not beat batch")
-            return 1
-        print(
-            "live: interactive completion p95 "
-            f"{live['interactive']['completion_p95_s'] * 1e3:.1f} ms vs "
-            f"batch {live['batch']['completion_p95_s'] * 1e3:.1f} ms"
+            if need(live, f"{cls}.n", "bench results") == 0:
+                gate.fail(f"live scenario completed no {cls} requests")
+        live_inter = need(
+            live, "interactive.completion_p95_s", "bench results"
         )
+        live_batch = need(live, "batch.completion_p95_s", "bench results")
+        if live_inter >= live_batch:
+            gate.fail("live interactive completion p95 did not beat batch")
+        else:
+            print(
+                "live: interactive completion p95 "
+                f"{live_inter * 1e3:.1f} ms vs "
+                f"batch {live_batch * 1e3:.1f} ms"
+            )
 
+    if gate.failed:
+        return 1
     print("OK")
     return 0
 
