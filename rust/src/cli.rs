@@ -90,7 +90,7 @@ USAGE:
                   [--capacity 256] [--max-in-flight 8] [--warmup MODEL,...]
                   [--workers 0] [--qos-weights 8,4,1] [--aging-bound 64]
                   [--refresh-concurrency 2] [--dephase-window 8]
-                  [--feedback] [--error-budget 0.1]
+                  [--feedback] [--error-budget 0.1] [--probe-sample 1]
                   [--max-resident-models 0] [--steal-after 16]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
@@ -128,6 +128,10 @@ Error feedback (serve --feedback / --error-budget E): per-band
   forces a refresh before the accumulated predicted error exceeds E,
   and hands contended refresh tokens to the highest-error session.
   `request --error-budget E` opts a single request in over the wire.
+  --probe-sample S probes every S-th channel plane (1 = full
+  resolution); when the subsampled estimate's confidence bound
+  straddles the budget, the step re-probes at full resolution so
+  refresh decisions never ride on sampling noise.
 ";
 
 #[cfg(test)]

@@ -66,6 +66,7 @@ use crate::model::weights;
 use crate::policy;
 use crate::runtime::{discover_models, Runtime};
 use crate::sampler::{BatchJob, JobSpec, SampleOpts, SamplerSession, StepOutcome};
+use crate::util::Arena;
 
 /// Default idle ticks before a pool worker advertises hunger on the
 /// steal board (`--steal-after`; 0 disables stealing).
@@ -290,6 +291,10 @@ pub struct Engine {
     feedback: Option<FeedbackConfig>,
     /// Running peak of the CRF bytes held by this worker's sessions.
     crf_peak_bytes: usize,
+    /// Worker-wide host-buffer arena every session draws step scratch
+    /// from (probe planes, history-transpose staging): sessions come
+    /// and go, the pool of size-classed buffers stays warm.
+    arena: Rc<Arena>,
     /// Anti-starvation for residency-deferred admission: the model
     /// whose ready work the residency bound is currently blocking, and
     /// the tick the blockage was first seen.  Once it has waited
@@ -394,6 +399,7 @@ impl Engine {
             shed_seen: 0,
             feedback,
             crf_peak_bytes: 0,
+            arena: Rc::new(Arena::new()),
             deferral: None,
             worker,
         })
@@ -832,6 +838,8 @@ impl Engine {
         self.gauge("weight_bytes", resident_bytes as f64);
         self.gauge("ledger_share_pm", ledger_share_pm as f64);
         self.gauge("err_score_fp", err_score_fp as f64);
+        self.gauge("arena_bytes", self.arena.bytes() as f64);
+        self.gauge("arena_hit_rate", self.arena.hit_rate());
         for (class, depth) in Priority::ALL.iter().zip(queued_by_class) {
             self.gauge(
                 &format!("queued_requests_{}", class.name()),
@@ -881,6 +889,18 @@ impl Engine {
                 .set_gauge("weight_bytes", total.resident_bytes as f64);
             let queued: usize = queued_per_class.iter().sum();
             self.metrics.set_gauge("queued_requests", queued as f64);
+            // Pool-wide arena telemetry from the per-worker gauges
+            // (absent workers read 0.0): bytes sum, mean hit rate.
+            let n = self.worker.pool_size();
+            let (mut arena_bytes, mut arena_rate) = (0.0, 0.0);
+            for w in 0..n {
+                arena_bytes +=
+                    self.metrics.gauge(&format!("arena_bytes_w{w}"));
+                arena_rate +=
+                    self.metrics.gauge(&format!("arena_hit_rate_w{w}"));
+            }
+            self.metrics.set_gauge("arena_bytes", arena_bytes);
+            self.metrics.set_gauge("arena_hit_rate", arena_rate / n as f64);
             for (class, depth) in
                 Priority::ALL.iter().zip(queued_per_class)
             {
@@ -1120,7 +1140,11 @@ impl Engine {
         SamplerSession::new(
             &bj,
             pol,
-            SampleOpts { feedback, ..SampleOpts::default() },
+            SampleOpts {
+                feedback,
+                arena: Some(self.arena.clone()),
+                ..SampleOpts::default()
+            },
         )
     }
 
@@ -1135,6 +1159,15 @@ impl Engine {
                 self.metrics.record_step(record.wall_s);
                 if let Some(p) = &record.probe {
                     self.metrics.bump("feedback_probes", 1);
+                    // Which resolution the probe ran at: subsampled and
+                    // trusted, or re-measured at full resolution after
+                    // its bound straddled the budget.  (Stride-1 probes
+                    // bump neither — they are full by construction.)
+                    if record.probe_full_fallback {
+                        self.metrics.bump("probe_full_fallback", 1);
+                    } else if record.probe_sampled {
+                        self.metrics.bump("probe_sampled", 1);
+                    }
                     // A zero-mass band yields an infinite relative
                     // residual; keep it out of the histograms (one inf
                     // sample would pin the series' mean forever).

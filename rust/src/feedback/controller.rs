@@ -35,6 +35,15 @@ pub struct FeedbackConfig {
     /// controller can stretch an interval policy's N).
     pub min_scale: f64,
     pub max_scale: f64,
+    /// Probe subsample stride (`--probe-sample`): the probe reads
+    /// every `probe_sample`-th (token-row, channel) plane of the CRF
+    /// instead of all of them.  1 (the default) = full resolution;
+    /// values are clamped to >= 1.  Subsampled estimates carry a
+    /// confidence bound, and [`ErrorBudgetController::needs_full_probe`]
+    /// forces a full-resolution re-probe whenever that bound straddles
+    /// the error budget — `would_breach_next` never fires on a noisy
+    /// estimate.
+    pub probe_sample: usize,
 }
 
 /// Anti-windup clamp on the PI integral term.
@@ -63,6 +72,7 @@ impl Default for FeedbackConfig {
             ki: 0.08,
             min_scale: 0.25,
             max_scale: 4.0,
+            probe_sample: 1,
         }
     }
 }
@@ -151,6 +161,27 @@ impl ErrorBudgetController {
     pub fn would_breach_next(&self) -> bool {
         self.rate > 0.0
             && self.accumulated + self.rate > self.cfg.error_budget
+    }
+
+    /// Should a subsampled probe estimate (`residual` with symmetric
+    /// confidence half-width `half_width`) be discarded for a
+    /// full-resolution re-probe?  Yes exactly when the interval
+    /// `[residual - half_width, residual + half_width]` straddles the
+    /// error budget — on either side of the budget the control
+    /// decision is the same for every value in the interval, so the
+    /// noisy estimate is safe to act on; straddling it, the estimate
+    /// could flip `would_breach_next`, and the controller refuses to
+    /// fire (or skip) a forced refresh on noise.  Degenerate bounds
+    /// (non-finite residual or half-width) always re-probe.
+    pub fn needs_full_probe(&self, residual: f64, half_width: f64) -> bool {
+        if !residual.is_finite() || !half_width.is_finite() {
+            return true;
+        }
+        if half_width <= 0.0 {
+            return false; // exact estimate
+        }
+        let budget = self.cfg.error_budget;
+        residual - half_width < budget && budget < residual + half_width
     }
 
     /// Accumulated predicted error since the last full step.
@@ -270,6 +301,24 @@ mod tests {
             prev = now;
         }
         assert_eq!(prev, 150_000); // 3 * 0.05 * 1e6
+    }
+
+    #[test]
+    fn full_probe_needed_only_when_bound_straddles_budget() {
+        let c = ctl(); // budget 0.10
+        // Clearly under budget even at the top of the interval: safe.
+        assert!(!c.needs_full_probe(0.05, 0.02));
+        // Clearly over budget even at the bottom: safe (same decision).
+        assert!(!c.needs_full_probe(0.30, 0.05));
+        // Interval [0.06, 0.14] straddles 0.10: must re-probe.
+        assert!(c.needs_full_probe(0.10, 0.04));
+        assert!(c.needs_full_probe(0.08, 0.04));
+        // Exact estimates (full probes report half_width 0) never do.
+        assert!(!c.needs_full_probe(0.10, 0.0));
+        // Degenerate bounds always do.
+        assert!(c.needs_full_probe(f64::INFINITY, 0.01));
+        assert!(c.needs_full_probe(0.05, f64::INFINITY));
+        assert!(c.needs_full_probe(f64::NAN, 0.01));
     }
 
     #[test]

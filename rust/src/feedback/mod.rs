@@ -52,7 +52,7 @@ pub mod controller;
 pub mod probe;
 
 pub use controller::{ErrorBudgetController, FeedbackConfig};
-pub use probe::BandResiduals;
+pub use probe::{BandResiduals, ProbeEstimate};
 
 use crate::policy::ProbeSpec;
 

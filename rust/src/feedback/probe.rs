@@ -18,12 +18,21 @@
 //! two bands drift differently (low: slow/consistent → reuse, high:
 //! fast/oscillatory → Hermite forecast); the per-band telemetry shows
 //! which half of that premise is failing when quality drifts.
+//!
+//! Hot-path layout (DESIGN.md "Host-math hot path"): the probe runs
+//! plane-by-plane — one `[grid, grid]` plane per (batch, channel) — on
+//! the `freq::simd` kernels with all scratch drawn from the worker's
+//! buffer arena, and can **subsample** the channel planes with a
+//! deterministic seeded stride ([`probe_residuals_sampled`]).  A
+//! subsampled estimate comes back as a [`ProbeEstimate`] carrying a
+//! variance-style confidence half-width; the controller re-probes at
+//! full resolution when that bound straddles the error budget.
 
 use anyhow::{bail, Result};
 
-use crate::freq::{dct, fft, mask, Decomp};
+use crate::freq::{dct, fft, mask, simd, Decomp};
 use crate::policy::ProbeSpec;
-use crate::util::Tensor;
+use crate::util::{Arena, Rng, Tensor};
 
 /// Relative-L1 residuals of the counterfactual prediction, split by
 /// frequency band (transform domain).  `overall` pools both bands'
@@ -33,6 +42,29 @@ pub struct BandResiduals {
     pub low: f64,
     pub high: f64,
     pub overall: f64,
+}
+
+/// A (possibly subsampled) probe measurement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeEstimate {
+    pub residuals: BandResiduals,
+    /// Channel planes actually read / in the full CRF.
+    pub sampled_planes: usize,
+    pub total_planes: usize,
+    /// Symmetric confidence half-width on `residuals.overall`: a
+    /// delta-method bound on the plane-sampled ratio estimator (sigma
+    /// multiplier inflated at small sample counts) plus a 15% relative
+    /// floor guarding heavy-tailed planes the variance underrates — see
+    /// `confidence_half_width` for the calibration.  0 for
+    /// full-resolution probes; infinite when the sample is too small to
+    /// estimate a variance.
+    pub half_width: f64,
+}
+
+impl ProbeEstimate {
+    pub fn is_subsampled(&self) -> bool {
+        self.sampled_planes < self.total_planes
+    }
 }
 
 /// Prediction weights over a `hist_s.len()`-slot history for one band:
@@ -52,6 +84,12 @@ pub fn prediction_weights(
     crate::policy::order_weights_f64(hist_s, s_target, order, hist_s.len())
 }
 
+thread_local! {
+    // Scratch arena for the compat wrapper (callers without a worker
+    // arena: tests, offline analyses).
+    static LOCAL_ARENA: Arena = Arena::new();
+}
+
 /// The probe: counterfactual per-band residuals of predicting `truth`
 /// (the freshly computed CRF at normalized time `s_target`) from the
 /// cached history.  `hist` is oldest-first and element-aligned with
@@ -59,6 +97,9 @@ pub fn prediction_weights(
 /// `dim` the feature width — the element count must factor into
 /// `[B, grid*grid, dim]` planes (editing models carry 2 planes per
 /// batch element: generated + reference tokens, both `grid`-square).
+///
+/// Always full resolution (`sample_stride` ignored); the sampler's hot
+/// path uses [`probe_residuals_sampled`] with the worker arena instead.
 pub fn probe_residuals(
     hist_s: &[f64],
     hist: &[&Tensor],
@@ -68,6 +109,70 @@ pub fn probe_residuals(
     dim: usize,
     truth: &Tensor,
 ) -> Result<BandResiduals> {
+    LOCAL_ARENA.with(|arena| {
+        probe_with_stride(hist_s, hist, s_target, probe, grid, dim, truth, 1, arena)
+    })
+    .map(|e| e.residuals)
+}
+
+/// Full-resolution probe drawing scratch from `arena` (the controller's
+/// fallback when a subsampled bound straddles the budget).
+#[allow(clippy::too_many_arguments)]
+pub fn probe_residuals_full(
+    hist_s: &[f64],
+    hist: &[&Tensor],
+    s_target: f64,
+    probe: &ProbeSpec,
+    grid: usize,
+    dim: usize,
+    truth: &Tensor,
+    arena: &Arena,
+) -> Result<BandResiduals> {
+    probe_with_stride(hist_s, hist, s_target, probe, grid, dim, truth, 1, arena)
+        .map(|e| e.residuals)
+}
+
+/// Subsampled probe: reads every `probe.sample_stride`-th channel plane
+/// of the CRF (deterministic offset seeded from `s_target`, so
+/// successive probes cover different cosets) and reports the estimate
+/// with its confidence half-width.  Stride 1 degenerates to the full
+/// probe with `half_width == 0`.
+#[allow(clippy::too_many_arguments)]
+pub fn probe_residuals_sampled(
+    hist_s: &[f64],
+    hist: &[&Tensor],
+    s_target: f64,
+    probe: &ProbeSpec,
+    grid: usize,
+    dim: usize,
+    truth: &Tensor,
+    arena: &Arena,
+) -> Result<ProbeEstimate> {
+    probe_with_stride(
+        hist_s,
+        hist,
+        s_target,
+        probe,
+        grid,
+        dim,
+        truth,
+        probe.sample_stride.max(1),
+        arena,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn probe_with_stride(
+    hist_s: &[f64],
+    hist: &[&Tensor],
+    s_target: f64,
+    probe: &ProbeSpec,
+    grid: usize,
+    dim: usize,
+    truth: &Tensor,
+    stride: usize,
+    arena: &Arena,
+) -> Result<ProbeEstimate> {
     if hist.is_empty() || hist.len() != hist_s.len() {
         bail!(
             "probe history mismatch: {} tensors, {} timesteps",
@@ -83,103 +188,251 @@ pub fn probe_residuals(
     }
 
     let lw = prediction_weights(hist_s, s_target, probe.low_order)?;
-    // Low-predictor residual per element.
-    let dl = combine_minus(hist, &lw, &truth.data);
+    let t = grid * grid;
+    let factors = dim > 0 && t > 0 && len > 0 && len % (t * dim) == 0;
 
-    if probe.spec.decomp == Decomp::None {
-        // One band carries everything: plain relative L1.
+    if probe.spec.decomp == Decomp::None && (stride <= 1 || !factors) {
+        // One band carries everything and no transform is involved, so
+        // the flat path works on *any* CRF shape (it predates the
+        // plane factorization).  Sampling needs planes; when the shape
+        // does not factor, fall back to reading everything.
+        let dl = combine_minus(hist, &lw, &truth.data);
         let num: f64 = dl.iter().map(|v| v.abs()).sum();
-        let den: f64 = truth.data.iter().map(|v| v.abs() as f64).sum();
+        let den = simd::abs_sum_f32(&truth.data);
         let r = ratio(num, den);
-        return Ok(BandResiduals { low: r, high: 0.0, overall: r });
+        let residuals = BandResiduals { low: r, high: 0.0, overall: r };
+        return Ok(ProbeEstimate {
+            residuals,
+            sampled_planes: 1,
+            total_planes: 1,
+            half_width: 0.0,
+        });
     }
 
-    let hw = prediction_weights(hist_s, s_target, probe.high_order)?;
-    let dh = combine_minus(hist, &hw, &truth.data);
-
-    let t = grid * grid;
-    if dim == 0 || t == 0 || len % (t * dim) != 0 {
+    if !factors {
         bail!(
             "CRF of {len} elements does not factor into [B, {t}, {dim}] \
              (grid {grid})"
         );
     }
     let b = len / (t * dim);
+    let total_planes = b * dim;
+    let stride = stride.clamp(1, total_planes);
+    let offset = if stride == 1 {
+        0
+    } else {
+        // Deterministic per (step time, shape); varies across steps so
+        // successive probes walk different plane cosets.
+        let mut r = Rng::new(
+            s_target.to_bits()
+                ^ ((total_planes as u64) << 32)
+                ^ 0x9e37_79b9_7f4a_7c15,
+        );
+        r.below(stride)
+    };
 
-    let mut num_low = 0.0f64;
-    let mut den_low = 0.0f64;
-    let mut num_high = 0.0f64;
-    let mut den_high = 0.0f64;
-    let mut plane = vec![0.0f32; t];
-    let mut band_low = vec![false; t];
-    for u in 0..grid {
-        for v in 0..grid {
-            band_low[u * grid + v] = mask::radial_index(
-                probe.spec.decomp,
-                grid,
-                u,
-                v,
-            ) <= probe.spec.cutoff;
-        }
-    }
-    // DFT matrices for the FFT decomposition (dense: works on any grid
-    // side, matching the device kernels' runtime-input basis).
+    let hw = if probe.spec.decomp == Decomp::None {
+        None
+    } else {
+        Some(prediction_weights(hist_s, s_target, probe.high_order)?)
+    };
+    let mask_t = mask::band_mask_cached(probe.spec, grid);
     let dft = if probe.spec.decomp == Decomp::Fft {
-        let (fr, fi) = fft::dft_matrices_tensor(grid);
-        Some((to_f64(&fr.data), to_f64(&fi.data)))
+        Some(fft::dft_basis_cached(grid))
     } else {
         None
     };
-    // Per-band mass discarded when a plane only feeds one band's sum.
-    let mut sink = 0.0f64;
-    for bi in 0..b {
-        for d in 0..dim {
-            // Truth plane -> both denominators.
-            for tok in 0..t {
-                plane[tok] = truth.data[(bi * t + tok) * dim + d];
+
+    // All scratch from the worker arena: steady state allocates nothing.
+    let m_expect = (total_planes - offset).div_ceil(stride);
+    let mut nums = arena.take_f64(m_expect);
+    let mut dens = arena.take_f64(m_expect);
+    let mut tp = arena.take_f32(t); // truth plane
+    let mut dlp = arena.take_f32(t); // low-predictor residual plane
+    let mut dhp = arena.take_f32(t); // high-predictor residual plane
+    let mut cb = arena.take_f64(t); // f64 combine accumulator
+    let mut coef =
+        arena.take_f32(if probe.spec.decomp == Decomp::Dct { t } else { 0 });
+    let mut scratch = arena
+        .take_f64(if probe.spec.decomp == Decomp::Dct { 3 * t } else { 0 });
+    let mut fft_buf = arena.take_f64(if dft.is_some() { 6 * t } else { 0 });
+
+    let band_mass = |plane: &[f32],
+                         coef: &mut [f32],
+                         scratch: &mut Vec<f64>,
+                         fft_buf: &mut [f64]|
+     -> (f64, f64) {
+        match probe.spec.decomp {
+            Decomp::None => (simd::abs_sum_f32(plane), 0.0),
+            Decomp::Dct => {
+                dct::dct2_with(plane, grid, coef, scratch);
+                simd::abs_band_sums_f32(coef, &mask_t.data)
             }
-            accumulate_bands(
-                &plane,
-                grid,
-                &band_low,
-                dft.as_ref(),
-                &mut den_low,
-                &mut den_high,
-            );
-            // Low-predictor residual plane -> low numerator.
-            for tok in 0..t {
-                plane[tok] = dl[(bi * t + tok) * dim + d] as f32;
+            Decomp::Fft => {
+                // Y = F X F^T over complex F = Fr + i Fi, X real:
+                // A = Fr X, B = Fi X; Re Y = A Fr^T - B Fi^T,
+                // Im Y = A Fi^T + B Fr^T.
+                let basis = dft.as_ref().expect("fft basis");
+                let (x64, rest) = fft_buf.split_at_mut(t);
+                let (a, rest) = rest.split_at_mut(t);
+                let (bm, rest) = rest.split_at_mut(t);
+                let (re, rest) = rest.split_at_mut(t);
+                let (im, tmp) = rest.split_at_mut(t);
+                for (o, v) in x64.iter_mut().zip(plane) {
+                    *o = *v as f64;
+                }
+                simd::matmul(&basis.re64, x64, grid, a);
+                simd::matmul(&basis.im64, x64, grid, bm);
+                simd::matmul_t(a, &basis.re64, grid, re);
+                simd::matmul_t(bm, &basis.im64, grid, tmp);
+                for (r, s) in re.iter_mut().zip(tmp.iter()) {
+                    *r -= s;
+                }
+                simd::matmul_t(a, &basis.im64, grid, im);
+                simd::matmul_t(bm, &basis.re64, grid, tmp);
+                for (i, s) in im.iter_mut().zip(tmp.iter()) {
+                    *i += s;
+                }
+                simd::mag_band_sums(re, im, &mask_t.data)
             }
-            accumulate_bands(
-                &plane,
-                grid,
-                &band_low,
-                dft.as_ref(),
-                &mut num_low,
-                &mut sink,
-            );
-            // High-predictor residual plane -> high numerator.
-            for tok in 0..t {
-                plane[tok] = dh[(bi * t + tok) * dim + d] as f32;
-            }
-            accumulate_bands(
-                &plane,
-                grid,
-                &band_low,
-                dft.as_ref(),
-                &mut sink,
-                &mut num_high,
-            );
         }
+    };
+
+    let (mut num_low, mut den_low) = (0.0f64, 0.0f64);
+    let (mut num_high, mut den_high) = (0.0f64, 0.0f64);
+    let mut m = 0usize;
+    let mut p = offset;
+    while p < total_planes {
+        let (bi, d) = (p / dim, p % dim);
+        gather_plane(&truth.data, bi, d, t, dim, &mut tp);
+        let (dlo, dhi) = band_mass(&tp, &mut coef, &mut scratch, &mut fft_buf);
+        den_low += dlo;
+        den_high += dhi;
+
+        // Low-predictor residual plane -> low numerator (its high-band
+        // mass belongs to the high predictor's plane, and vice versa).
+        combine_minus_plane(hist, &lw, &tp, bi, d, t, dim, &mut cb, &mut dlp);
+        let (nlo, _) =
+            band_mass(&dlp, &mut coef, &mut scratch, &mut fft_buf);
+        num_low += nlo;
+        let mut nhi = 0.0;
+        if let Some(hw) = &hw {
+            combine_minus_plane(hist, hw, &tp, bi, d, t, dim, &mut cb, &mut dhp);
+            let (_, h) =
+                band_mass(&dhp, &mut coef, &mut scratch, &mut fft_buf);
+            num_high += h;
+            nhi = h;
+        }
+        nums[m] = nlo + nhi;
+        dens[m] = dlo + dhi;
+        m += 1;
+        p += stride;
     }
-    Ok(BandResiduals {
+
+    let residuals = BandResiduals {
         low: ratio(num_low, den_low),
         high: ratio(num_high, den_high),
         overall: ratio(num_low + num_high, den_low + den_high),
+    };
+    let half_width = if stride == 1 {
+        0.0
+    } else {
+        confidence_half_width(&nums[..m], &dens[..m], residuals.overall)
+    };
+
+    arena.put_f64(nums);
+    arena.put_f64(dens);
+    arena.put_f32(tp);
+    arena.put_f32(dlp);
+    arena.put_f32(dhp);
+    arena.put_f64(cb);
+    arena.put_f32(coef);
+    arena.put_f64(scratch);
+    arena.put_f64(fft_buf);
+
+    Ok(ProbeEstimate {
+        residuals,
+        sampled_planes: m,
+        total_planes,
+        half_width,
     })
 }
 
-/// `Σ_k w[k] * hist[k] - truth`, in f64.
+/// Delta-method confidence half-width on the plane-sampled ratio
+/// estimator `r = Σ nums / Σ dens`: a multiple of the standard error of
+/// the per-plane residuals `e_i = num_i - r * den_i` (the first-order
+/// variance of a ratio of sample means), plus a 15% relative floor so a
+/// deceptively-uniform sample cannot report near-zero uncertainty.  The
+/// multiplier inflates as `8 / (m - 1)` at small sample counts, where
+/// the two-to-four-plane variance estimate is itself so noisy that a
+/// plain 3-sigma band under-covers (t-distribution territory).  The
+/// constants were calibrated over ~6.6k synthetic CRF cases in
+/// scripts/probe_bound_check.py (worst observed case used 78% of its
+/// bound; the in-repo propcheck replays the default-seed slice).
+/// Infinite when the sample cannot support a variance estimate.
+fn confidence_half_width(nums: &[f64], dens: &[f64], r: f64) -> f64 {
+    let m = nums.len();
+    let dsum: f64 = dens.iter().sum();
+    if m < 2 || dsum <= 0.0 || !r.is_finite() {
+        return f64::INFINITY;
+    }
+    let dbar = dsum / m as f64;
+    let mut var = 0.0;
+    for (n, d) in nums.iter().zip(dens) {
+        let e = n - r * d;
+        var += e * e;
+    }
+    var /= (m - 1) as f64;
+    let se = (var / m as f64).sqrt() / dbar;
+    let mult = 3.0 + 8.0 / (m - 1) as f64;
+    (mult * se + 0.15 * r).max(1e-12)
+}
+
+/// `out[tok] = src[(bi * t + tok) * dim + d]` — one channel plane.
+fn gather_plane(
+    src: &[f32],
+    bi: usize,
+    d: usize,
+    t: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    for (tok, o) in out.iter_mut().enumerate() {
+        *o = src[(bi * t + tok) * dim + d];
+    }
+}
+
+/// Per-plane `Σ_k w[k] * hist[k] - truth_plane`, accumulated in f64
+/// (`cb`) and written as f32 into `out` — reads only the sampled plane
+/// of each history tensor.
+#[allow(clippy::too_many_arguments)]
+fn combine_minus_plane(
+    hist: &[&Tensor],
+    w: &[f64],
+    truth_plane: &[f32],
+    bi: usize,
+    d: usize,
+    t: usize,
+    dim: usize,
+    cb: &mut [f64],
+    out: &mut [f32],
+) {
+    cb[..t].fill(0.0);
+    for (wk, h) in w.iter().zip(hist) {
+        if *wk == 0.0 {
+            continue;
+        }
+        let hd = &h.data;
+        for (tok, c) in cb[..t].iter_mut().enumerate() {
+            *c += wk * hd[(bi * t + tok) * dim + d] as f64;
+        }
+    }
+    for ((o, c), tv) in out.iter_mut().zip(cb.iter()).zip(truth_plane) {
+        *o = (c - *tv as f64) as f32;
+    }
+}
+
+/// `Σ_k w[k] * hist[k] - truth`, in f64 (flat None-decomp path).
 fn combine_minus(hist: &[&Tensor], w: &[f64], truth: &[f32]) -> Vec<f64> {
     let mut out = vec![0.0f64; truth.len()];
     for (wk, h) in w.iter().zip(hist) {
@@ -194,92 +447,6 @@ fn combine_minus(hist: &[&Tensor], w: &[f64], truth: &[f32]) -> Vec<f64> {
         *o -= *tv as f64;
     }
     out
-}
-
-/// Transform one [g, g] plane and add its per-band absolute coefficient
-/// mass into `low` / `high`.
-fn accumulate_bands(
-    plane: &[f32],
-    g: usize,
-    band_low: &[bool],
-    dft: Option<&(Vec<f64>, Vec<f64>)>,
-    low: &mut f64,
-    high: &mut f64,
-) {
-    match dft {
-        None => {
-            let coef = dct::dct2(plane, g);
-            for (c, is_low) in coef.iter().zip(band_low) {
-                if *is_low {
-                    *low += c.abs() as f64;
-                } else {
-                    *high += c.abs() as f64;
-                }
-            }
-        }
-        Some((fr, fi)) => {
-            // Y = F X F^T over complex F = Fr + i Fi, X real:
-            // A = Fr X, B = Fi X; Re Y = A Fr^T - B Fi^T,
-            // Im Y = A Fi^T + B Fr^T.
-            let x: Vec<f64> = plane.iter().map(|v| *v as f64).collect();
-            let a = matmul(fr, &x, g);
-            let bm = matmul(fi, &x, g);
-            let re = sub(&matmul_t(&a, fr, g), &matmul_t(&bm, fi, g));
-            let im = add(&matmul_t(&a, fi, g), &matmul_t(&bm, fr, g));
-            for i in 0..g * g {
-                let mag = (re[i] * re[i] + im[i] * im[i]).sqrt();
-                if band_low[i] {
-                    *low += mag;
-                } else {
-                    *high += mag;
-                }
-            }
-        }
-    }
-}
-
-fn to_f64(v: &[f32]) -> Vec<f64> {
-    v.iter().map(|x| *x as f64).collect()
-}
-
-/// C = A * B for row-major [g, g] matrices.
-fn matmul(a: &[f64], b: &[f64], g: usize) -> Vec<f64> {
-    let mut c = vec![0.0f64; g * g];
-    for i in 0..g {
-        for k in 0..g {
-            let aik = a[i * g + k];
-            if aik == 0.0 {
-                continue;
-            }
-            for j in 0..g {
-                c[i * g + j] += aik * b[k * g + j];
-            }
-        }
-    }
-    c
-}
-
-/// C = A * B^T.
-fn matmul_t(a: &[f64], b: &[f64], g: usize) -> Vec<f64> {
-    let mut c = vec![0.0f64; g * g];
-    for i in 0..g {
-        for j in 0..g {
-            let mut s = 0.0;
-            for k in 0..g {
-                s += a[i * g + k] * b[j * g + k];
-            }
-            c[i * g + j] = s;
-        }
-    }
-    c
-}
-
-fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
-    a.iter().zip(b).map(|(x, y)| x + y).collect()
-}
-
-fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
-    a.iter().zip(b).map(|(x, y)| x - y).collect()
 }
 
 /// num / den with the `rel_l1` zero conventions.
@@ -298,14 +465,12 @@ fn ratio(num: f64, den: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::freq::simd::{with_backend, Backend};
     use crate::freq::BandSpec;
+    use crate::util::propcheck::{check, Config};
 
     fn spec(decomp: Decomp, cutoff: usize) -> ProbeSpec {
-        ProbeSpec {
-            spec: BandSpec::new(decomp, cutoff),
-            low_order: 0,
-            high_order: 2,
-        }
+        ProbeSpec::new(BandSpec::new(decomp, cutoff), 0, 2)
     }
 
     /// A [1, g*g, dim] CRF whose planes are filled by `f(tok, d)`.
@@ -464,5 +629,183 @@ mod tests {
             &truth
         )
         .is_err());
+    }
+
+    #[test]
+    fn subsampled_probe_matches_full_on_homogeneous_planes() {
+        // Every channel plane identical -> any plane subset yields the
+        // exact population ratio, whatever the offset.
+        let g = 4;
+        let dim = 8;
+        let truth = crf(g, dim, |tok, _| 1.0 + 0.1 * tok as f32);
+        let newest = crf(g, dim, |tok, _| 1.3 + 0.1 * tok as f32);
+        let hist = [&newest];
+        let full = probe_residuals(
+            &[-1.0],
+            &hist,
+            -0.9,
+            &spec(Decomp::Dct, 1),
+            g,
+            dim,
+            &truth,
+        )
+        .unwrap();
+        let arena = Arena::new();
+        let mut sub = spec(Decomp::Dct, 1);
+        sub.sample_stride = 4;
+        let est = probe_residuals_sampled(
+            &[-1.0],
+            &hist,
+            -0.9,
+            &sub,
+            g,
+            dim,
+            &truth,
+            &arena,
+        )
+        .unwrap();
+        assert_eq!(est.total_planes, dim);
+        assert_eq!(est.sampled_planes, 2);
+        assert!(est.is_subsampled());
+        assert!(
+            (est.residuals.overall - full.overall).abs() <= est.half_width,
+            "estimate {} vs full {} outside bound {}",
+            est.residuals.overall,
+            full.overall,
+            est.half_width
+        );
+        // Identical planes: the ratio is exact, the bound is the floor.
+        assert!((est.residuals.overall - full.overall).abs() < 1e-12);
+        assert!(est.half_width.is_finite());
+
+        // Stride 1 through the sampled API degenerates to full.
+        let e1 = probe_residuals_sampled(
+            &[-1.0],
+            &hist,
+            -0.9,
+            &spec(Decomp::Dct, 1),
+            g,
+            dim,
+            &truth,
+            &arena,
+        )
+        .unwrap();
+        assert!(!e1.is_subsampled());
+        assert_eq!(e1.half_width, 0.0);
+        assert_eq!(e1.residuals, full);
+    }
+
+    #[test]
+    fn subsampled_estimate_stays_within_its_confidence_bound() {
+        // Synthetic CRFs with integer-valued planes (exact in f32):
+        // the subsampled overall residual must sit within its reported
+        // half-width of the full-resolution residual.  The generator's
+        // noise is i.i.d. per element, the regime the delta-method
+        // bound models; margins were verified case-by-case offline
+        // (scripts/probe_bound_check.py mirrors this exact test).
+        check(
+            "subsampled probe within confidence bound",
+            Config::default(),
+            |rng, size| {
+                let g = 4;
+                let dim = 8 + size % 9; // 8..=16 planes
+                let stride = 2 + rng.below(3); // 2..=4
+                let t = g * g;
+                let truth: Vec<f32> = (0..t * dim)
+                    .map(|_| rng.below(9) as f32 - 4.0)
+                    .collect();
+                let newest: Vec<f32> = truth
+                    .iter()
+                    .map(|v| v + rng.below(5) as f32 - 2.0)
+                    .collect();
+                (dim, stride, truth, newest)
+            },
+            |(dim, stride, truth, newest)| {
+                let g = 4;
+                let t = g * g;
+                let truth =
+                    Tensor::new(vec![1, t, *dim], truth.clone()).unwrap();
+                let newest =
+                    Tensor::new(vec![1, t, *dim], newest.clone()).unwrap();
+                let hist = [&newest];
+                let sp = ProbeSpec::new(BandSpec::new(Decomp::Dct, 1), 0, 0);
+                let full = probe_residuals(
+                    &[-1.0], &hist, -0.9, &sp, g, *dim, &truth,
+                )
+                .map_err(|e| e.to_string())?;
+                let mut sub = sp;
+                sub.sample_stride = *stride;
+                let arena = Arena::new();
+                let est = probe_residuals_sampled(
+                    &[-1.0], &hist, -0.9, &sub, g, *dim, &truth, &arena,
+                )
+                .map_err(|e| e.to_string())?;
+                let diff = (est.residuals.overall - full.overall).abs();
+                if diff > est.half_width {
+                    return Err(format!(
+                        "estimate {} vs full {}: diff {diff} > bound {}",
+                        est.residuals.overall, full.overall, est.half_width
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn probe_lanes_match_scalar_for_both_decomps() {
+        let g = 4;
+        let dim = 3;
+        let truth = crf(g, dim, |tok, d| ((tok * 7 + d * 3) % 11) as f32 - 5.0);
+        let newest = crf(g, dim, |tok, d| {
+            ((tok * 5 + d * 2) % 13) as f32 - 6.0
+        });
+        let hist = [&newest];
+        for d in [Decomp::Dct, Decomp::Fft] {
+            let s = with_backend(Backend::Scalar, || {
+                probe_residuals(
+                    &[-1.0], &hist, -0.9, &spec(d, 1), g, dim, &truth,
+                )
+                .unwrap()
+            });
+            let l = with_backend(Backend::Lanes, || {
+                probe_residuals(
+                    &[-1.0], &hist, -0.9, &spec(d, 1), g, dim, &truth,
+                )
+                .unwrap()
+            });
+            for (a, b) in [(s.low, l.low), (s.high, l.high), (s.overall, l.overall)]
+            {
+                assert!(
+                    (a - b).abs() <= 1e-6 * (1.0 + a.abs().max(b.abs())),
+                    "{d:?}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn probe_scratch_is_arena_recycled() {
+        let g = 4;
+        let dim = 4;
+        let truth = crf(g, dim, |tok, d| (tok + d) as f32 * 0.1);
+        let newest = crf(g, dim, |tok, d| (tok + d) as f32 * 0.11);
+        let hist = [&newest];
+        let arena = Arena::new();
+        let mut sub = spec(Decomp::Dct, 1);
+        sub.sample_stride = 2;
+        let run = |arena: &Arena| {
+            probe_residuals_sampled(
+                &[-1.0], &hist, -0.9, &sub, g, dim, &truth, arena,
+            )
+            .unwrap()
+        };
+        run(&arena); // warmup allocates
+        let misses = arena.misses();
+        for _ in 0..10 {
+            run(&arena);
+        }
+        assert_eq!(arena.misses(), misses, "steady-state probe allocated");
+        assert!(arena.hits() > 0);
     }
 }

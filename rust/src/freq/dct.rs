@@ -1,8 +1,24 @@
 //! Orthonormal DCT-II / DCT-III over small planes (matches
 //! `python/compile/kernels/ref.py::dct_matrix` bit-for-bit in structure).
+//!
+//! Hot-path layout (see DESIGN.md "Host-math hot path"): the basis
+//! matrix is memoized per grid size — probes and predictors hit the
+//! same handful of `g` values for a process lifetime, so the trig runs
+//! once — and the 2-D transform runs on the `freq::simd` kernels with
+//! caller-provided (or thread-local) f64 scratch instead of per-call
+//! allocations.
 
-/// Orthonormal DCT-II basis matrix C (row-major n x n): y = C x.
-pub fn dct_matrix(n: usize) -> Vec<f64> {
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::freq::simd;
+use crate::util::Tensor;
+
+/// Build the orthonormal DCT-II basis matrix C (row-major n x n) from
+/// scratch, no memo — the reference constructor (and the "what the old
+/// per-call path cost" arm of the step-latency bench).
+pub fn dct_matrix_fresh(n: usize) -> Vec<f64> {
     let mut c = vec![0.0f64; n * n];
     for k in 0..n {
         let a = if k == 0 {
@@ -20,68 +36,122 @@ pub fn dct_matrix(n: usize) -> Vec<f64> {
     c
 }
 
+fn f64_memo() -> &'static Mutex<HashMap<usize, Arc<Vec<f64>>>> {
+    static M: OnceLock<Mutex<HashMap<usize, Arc<Vec<f64>>>>> = OnceLock::new();
+    M.get_or_init(Default::default)
+}
+
+fn tensor_memo() -> &'static Mutex<HashMap<usize, Arc<Tensor>>> {
+    static M: OnceLock<Mutex<HashMap<usize, Arc<Tensor>>>> = OnceLock::new();
+    M.get_or_init(Default::default)
+}
+
+/// The basis matrix for grid size `n`, computed once per process.
+pub fn dct_matrix_cached(n: usize) -> Arc<Vec<f64>> {
+    f64_memo()
+        .lock()
+        .unwrap()
+        .entry(n)
+        .or_insert_with(|| Arc::new(dct_matrix_fresh(n)))
+        .clone()
+}
+
+/// Orthonormal DCT-II basis matrix C (row-major n x n): y = C x.
+/// Owned-copy compat wrapper over [`dct_matrix_cached`].
+pub fn dct_matrix(n: usize) -> Vec<f64> {
+    dct_matrix_cached(n).as_ref().clone()
+}
+
+/// The basis as a memoized f32 tensor — shared by the upload path so
+/// `run_predict` does not rebuild it per predicted step.
+pub fn dct_basis_cached(n: usize) -> Arc<Tensor> {
+    tensor_memo()
+        .lock()
+        .unwrap()
+        .entry(n)
+        .or_insert_with(|| {
+            let c = dct_matrix_cached(n);
+            Arc::new(
+                Tensor::new(vec![n, n], c.iter().map(|v| *v as f32).collect())
+                    .expect("basis shape"),
+            )
+        })
+        .clone()
+}
+
 /// The basis as an f32 tensor — the runtime input of the `predict_dct_*`
 /// artifacts (never baked as an HLO constant; xla_extension 0.5.1
 /// mis-executes gridded Pallas calls with constant operands, see the
 /// parity tests).
-pub fn dct_matrix_tensor(n: usize) -> crate::util::Tensor {
-    let c = dct_matrix(n);
-    crate::util::Tensor::new(
-        vec![n, n],
-        c.iter().map(|v| *v as f32).collect(),
-    )
-    .expect("basis shape")
+pub fn dct_matrix_tensor(n: usize) -> Tensor {
+    dct_basis_cached(n).as_ref().clone()
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
 }
 
 /// Forward 2-D DCT of a real [g, g] plane: Y = C X C^T.
 pub fn dct2(plane: &[f32], g: usize) -> Vec<f32> {
-    let c = dct_matrix(g);
-    apply2(plane, g, &c, false)
+    let mut out = vec![0.0f32; g * g];
+    SCRATCH.with(|s| dct2_with(plane, g, &mut out, &mut s.borrow_mut()));
+    out
 }
 
 /// Inverse 2-D DCT (DCT-III): X = C^T Y C.
 pub fn idct2(coef: &[f32], g: usize) -> Vec<f32> {
-    let c = dct_matrix(g);
-    apply2(coef, g, &c, true)
+    let mut out = vec![0.0f32; g * g];
+    SCRATCH.with(|s| idct2_with(coef, g, &mut out, &mut s.borrow_mut()));
+    out
 }
 
-fn apply2(x: &[f32], g: usize, c: &[f64], inverse: bool) -> Vec<f32> {
+/// Forward 2-D DCT into `out` with caller-provided f64 scratch
+/// (resized to `3*g*g`) — the allocation-free path; the probe threads
+/// its per-worker arena buffer here.
+pub fn dct2_with(plane: &[f32], g: usize, out: &mut [f32], scratch: &mut Vec<f64>) {
+    apply2_with(plane, g, &dct_matrix_cached(g), false, out, scratch)
+}
+
+/// Inverse counterpart of [`dct2_with`].
+pub fn idct2_with(coef: &[f32], g: usize, out: &mut [f32], scratch: &mut Vec<f64>) {
+    apply2_with(coef, g, &dct_matrix_cached(g), true, out, scratch)
+}
+
+fn apply2_with(
+    x: &[f32],
+    g: usize,
+    c: &[f64],
+    inverse: bool,
+    out: &mut [f32],
+    scratch: &mut Vec<f64>,
+) {
     assert_eq!(x.len(), g * g);
-    let at = |m: &[f64], r: usize, k: usize, t: bool| {
-        if t {
-            m[k * g + r]
-        } else {
-            m[r * g + k]
-        }
-    };
-    // rows: tmp = A x  where A = C (fwd) or C^T (inv)
-    let mut tmp = vec![0.0f64; g * g];
-    for u in 0..g {
-        for v in 0..g {
-            let mut s = 0.0;
-            for k in 0..g {
-                s += at(c, u, k, inverse) * x[k * g + v] as f64;
-            }
-            tmp[u * g + v] = s;
-        }
+    assert_eq!(out.len(), g * g);
+    scratch.resize(3 * g * g, 0.0);
+    let (x64, rest) = scratch.split_at_mut(g * g);
+    let (tmp, out64) = rest.split_at_mut(g * g);
+    for (d, s) in x64.iter_mut().zip(x) {
+        *d = *s as f64;
     }
-    // cols: out = tmp B where B = C^T (fwd) or C (inv)
-    let mut out = vec![0.0f32; g * g];
-    for u in 0..g {
-        for v in 0..g {
-            let mut s = 0.0;
-            for k in 0..g {
-                s += tmp[u * g + k] * at(c, k, v, !inverse);
-            }
-            out[u * g + v] = s as f32;
-        }
+    if inverse {
+        // X = C^T Y C
+        simd::matmul_at(c, x64, g, tmp);
+        simd::matmul(tmp, c, g, out64);
+    } else {
+        // Y = C X C^T
+        simd::matmul(c, x64, g, tmp);
+        simd::matmul_t(tmp, c, g, out64);
     }
-    out
+    for (d, s) in out.iter_mut().zip(out64.iter()) {
+        *d = *s as f32;
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::freq::simd::{with_backend, Backend};
+    use crate::util::propcheck::{assert_close, check, Config};
     use crate::util::Rng;
 
     #[test]
@@ -119,5 +189,35 @@ mod tests {
         for (i, v) in y.iter().enumerate().skip(1) {
             assert!(v.abs() < 1e-5, "coef {i} = {v}");
         }
+    }
+
+    #[test]
+    fn memo_matches_fresh_and_is_shared() {
+        let cached = dct_matrix_cached(10);
+        assert_eq!(cached.as_ref(), &dct_matrix_fresh(10));
+        assert!(Arc::ptr_eq(&cached, &dct_matrix_cached(10)));
+        assert!(Arc::ptr_eq(&dct_basis_cached(10), &dct_basis_cached(10)));
+    }
+
+    #[test]
+    fn lanes_match_scalar_on_random_planes() {
+        check(
+            "dct2/idct2 lanes == scalar",
+            Config::default(),
+            |rng, size| {
+                let g = 1 + size % 24;
+                let plane: Vec<f32> =
+                    (0..g * g).map(|_| rng.range(-3.0, 3.0)).collect();
+                (g, plane)
+            },
+            |(g, plane)| {
+                let fwd_s = with_backend(Backend::Scalar, || dct2(plane, *g));
+                let fwd_l = with_backend(Backend::Lanes, || dct2(plane, *g));
+                assert_close(&fwd_s, &fwd_l, 1e-6)?;
+                let inv_s = with_backend(Backend::Scalar, || idct2(&fwd_s, *g));
+                let inv_l = with_backend(Backend::Lanes, || idct2(&fwd_s, *g));
+                assert_close(&inv_s, &inv_l, 1e-6)
+            },
+        );
     }
 }

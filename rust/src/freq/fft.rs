@@ -1,7 +1,19 @@
 //! Iterative radix-2 complex FFT + 2-D helpers (built from scratch; no
 //! external DSP crate exists in the sandbox).
+//!
+//! Hot-path layout mirrors `freq::dct`: the DFT basis matrices are
+//! memoized per grid size (f32 tensors for the device upload path and
+//! an f64 copy for the host probe), and the 2-D transforms reuse
+//! thread-local complex scratch instead of allocating working copies
+//! per call.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Result};
+
+use crate::util::Tensor;
 
 /// Minimal complex number (f64 for analysis accuracy).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,10 +53,19 @@ impl Complex {
     }
 }
 
-/// Real/imaginary DFT basis matrices (cos / sin of -2*pi*uv/g) as f32
-/// tensors — the runtime inputs of the `predict_fft_*` artifacts (never
-/// HLO constants; same xla_extension 0.5.1 gotcha as the DCT basis).
-pub fn dft_matrices_tensor(g: usize) -> (crate::util::Tensor, crate::util::Tensor) {
+/// Memoized DFT basis for one grid size: the f32 tensors the
+/// `predict_fft_*` artifacts take as runtime inputs, plus f64 copies
+/// for the host probe's dense transform.
+pub struct DftBasis {
+    pub re: Tensor,
+    pub im: Tensor,
+    pub re64: Vec<f64>,
+    pub im64: Vec<f64>,
+}
+
+/// Build the basis from scratch, no memo (the reference constructor;
+/// also the "per-call cost" arm of the step-latency bench).
+pub fn dft_matrices_fresh(g: usize) -> (Tensor, Tensor) {
     let mut re = vec![0.0f32; g * g];
     let mut im = vec![0.0f32; g * g];
     for u in 0..g {
@@ -55,9 +76,34 @@ pub fn dft_matrices_tensor(g: usize) -> (crate::util::Tensor, crate::util::Tenso
         }
     }
     (
-        crate::util::Tensor::new(vec![g, g], re).expect("dft re"),
-        crate::util::Tensor::new(vec![g, g], im).expect("dft im"),
+        Tensor::new(vec![g, g], re).expect("dft re"),
+        Tensor::new(vec![g, g], im).expect("dft im"),
     )
+}
+
+/// The DFT basis for grid size `g`, computed once per process.
+pub fn dft_basis_cached(g: usize) -> Arc<DftBasis> {
+    static M: OnceLock<Mutex<HashMap<usize, Arc<DftBasis>>>> = OnceLock::new();
+    M.get_or_init(Default::default)
+        .lock()
+        .unwrap()
+        .entry(g)
+        .or_insert_with(|| {
+            let (re, im) = dft_matrices_fresh(g);
+            let re64 = re.data.iter().map(|v| *v as f64).collect();
+            let im64 = im.data.iter().map(|v| *v as f64).collect();
+            Arc::new(DftBasis { re, im, re64, im64 })
+        })
+        .clone()
+}
+
+/// Real/imaginary DFT basis matrices (cos / sin of -2*pi*uv/g) as f32
+/// tensors — the runtime inputs of the `predict_fft_*` artifacts (never
+/// HLO constants; same xla_extension 0.5.1 gotcha as the DCT basis).
+/// Owned-copy compat wrapper over [`dft_basis_cached`].
+pub fn dft_matrices_tensor(g: usize) -> (Tensor, Tensor) {
+    let b = dft_basis_cached(g);
+    (b.re.clone(), b.im.clone())
 }
 
 /// In-place iterative Cooley-Tukey FFT.  `inverse` applies the conjugate
@@ -100,6 +146,32 @@ pub fn fft_inplace(x: &mut [Complex], inverse: bool) -> Result<()> {
     Ok(())
 }
 
+thread_local! {
+    // (working plane, column buffer): the per-call `coef.to_vec()` /
+    // `vec![Complex::ZERO; g]` allocations, hoisted to the thread.
+    static SCRATCH: RefCell<(Vec<Complex>, Vec<Complex>)> =
+        RefCell::new((Vec::new(), Vec::new()));
+}
+
+/// Both passes of a separable 2-D FFT over `data` in place.
+fn fft2_inplace(data: &mut [Complex], col: &mut Vec<Complex>, g: usize, inverse: bool) -> Result<()> {
+    for r in 0..g {
+        fft_inplace(&mut data[r * g..(r + 1) * g], inverse)?;
+    }
+    col.clear();
+    col.resize(g, Complex::ZERO);
+    for c in 0..g {
+        for r in 0..g {
+            col[r] = data[r * g + c];
+        }
+        fft_inplace(col, inverse)?;
+        for r in 0..g {
+            data[r * g + c] = col[r];
+        }
+    }
+    Ok(())
+}
+
 /// Forward 2-D FFT of a real [g, g] plane (row-major), returning
 /// complex coefficients.
 pub fn fft2(plane: &[f32], g: usize) -> Result<Vec<Complex>> {
@@ -108,21 +180,7 @@ pub fn fft2(plane: &[f32], g: usize) -> Result<Vec<Complex>> {
     }
     let mut data: Vec<Complex> =
         plane.iter().map(|v| Complex::new(*v as f64, 0.0)).collect();
-    // Rows.
-    for r in 0..g {
-        fft_inplace(&mut data[r * g..(r + 1) * g], false)?;
-    }
-    // Columns.
-    let mut col = vec![Complex::ZERO; g];
-    for c in 0..g {
-        for r in 0..g {
-            col[r] = data[r * g + c];
-        }
-        fft_inplace(&mut col, false)?;
-        for r in 0..g {
-            data[r * g + c] = col[r];
-        }
-    }
+    SCRATCH.with(|s| fft2_inplace(&mut data, &mut s.borrow_mut().1, g, false))?;
     Ok(data)
 }
 
@@ -131,22 +189,14 @@ pub fn ifft2(coef: &[Complex], g: usize) -> Result<Vec<f32>> {
     if coef.len() != g * g {
         bail!("ifft2 expects {} values, got {}", g * g, coef.len());
     }
-    let mut data = coef.to_vec();
-    for r in 0..g {
-        fft_inplace(&mut data[r * g..(r + 1) * g], true)?;
-    }
-    let mut col = vec![Complex::ZERO; g];
-    for c in 0..g {
-        for r in 0..g {
-            col[r] = data[r * g + c];
-        }
-        fft_inplace(&mut col, true)?;
-        for r in 0..g {
-            data[r * g + c] = col[r];
-        }
-    }
-    let norm = 1.0 / (g * g) as f64;
-    Ok(data.iter().map(|z| (z.re * norm) as f32).collect())
+    SCRATCH.with(|s| {
+        let (data, col) = &mut *s.borrow_mut();
+        data.clear();
+        data.extend_from_slice(coef);
+        fft2_inplace(data, col, g, true)?;
+        let norm = 1.0 / (g * g) as f64;
+        Ok(data.iter().map(|z| (z.re * norm) as f32).collect())
+    })
 }
 
 #[cfg(test)]
@@ -180,6 +230,16 @@ mod tests {
         for (a, b) in plane.iter().zip(&back) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn basis_memo_matches_fresh() {
+        let (re, im) = dft_matrices_fresh(8);
+        let b = dft_basis_cached(8);
+        assert_eq!(b.re.data, re.data);
+        assert_eq!(b.im.data, im.data);
+        assert!(Arc::ptr_eq(&b, &dft_basis_cached(8)));
+        assert_eq!(b.re64[5], b.re.data[5] as f64);
     }
 
     #[test]

@@ -6,10 +6,13 @@
 //! `max(min(u, G-u), min(v, G-v))`, which keeps the mask Hermitian-
 //! symmetric so the predicted feature stays real.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
 use crate::util::Tensor;
 
 /// Which transform the mask lives in.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Decomp {
     Dct,
     Fft,
@@ -37,7 +40,7 @@ impl Decomp {
 }
 
 /// A band split: decomposition + low-band radial cutoff (inclusive).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BandSpec {
     pub decomp: Decomp,
     /// Coefficients with radial index <= cutoff are "low".  The paper
@@ -71,8 +74,25 @@ pub fn radial_index(decomp: Decomp, g: usize, u: usize, v: usize) -> usize {
     }
 }
 
+/// The [g, g] low-band mask for `spec`, built once per (spec, grid)
+/// pair — probes hit this every full step of every session.
+pub fn band_mask_cached(spec: BandSpec, g: usize) -> Arc<Tensor> {
+    static M: OnceLock<Mutex<HashMap<(BandSpec, usize), Arc<Tensor>>>> =
+        OnceLock::new();
+    M.get_or_init(Default::default)
+        .lock()
+        .unwrap()
+        .entry((spec, g))
+        .or_insert_with(|| Arc::new(band_mask_fresh(spec, g)))
+        .clone()
+}
+
 /// Build the [g, g] low-band mask tensor (1.0 = low band).
 pub fn band_mask(spec: BandSpec, g: usize) -> Tensor {
+    band_mask_cached(spec, g).as_ref().clone()
+}
+
+fn band_mask_fresh(spec: BandSpec, g: usize) -> Tensor {
     let mut data = vec![0.0f32; g * g];
     for u in 0..g {
         for v in 0..g {
@@ -123,6 +143,19 @@ mod tests {
     fn none_mask_is_all_ones() {
         let m = band_mask(BandSpec::new(Decomp::None, 0), 6);
         assert!(m.data.iter().all(|v| *v == 1.0));
+    }
+
+    #[test]
+    fn mask_memo_is_shared_per_spec() {
+        let spec = BandSpec::new(Decomp::Dct, 2);
+        let a = band_mask_cached(spec, 8);
+        assert!(Arc::ptr_eq(&a, &band_mask_cached(spec, 8)));
+        assert_eq!(a.data, band_mask_fresh(spec, 8).data);
+        // Different cutoff -> different entry.
+        assert!(!Arc::ptr_eq(
+            &a,
+            &band_mask_cached(BandSpec::new(Decomp::Dct, 3), 8)
+        ));
     }
 
     #[test]

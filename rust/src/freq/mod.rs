@@ -4,11 +4,15 @@
 //! The request path runs the transforms *on device* (L1 kernels); this
 //! module exists for (a) mask construction — cheap, done once per
 //! (cutoff, grid) pair —, (b) the offline analyses (Fig. 2 / Fig. 4),
-//! and (c) the band-weighted perceptual proxy in `imaging/`.
+//! (c) the band-weighted perceptual proxy in `imaging/`, and (d) the
+//! error-feedback probe's host-side transforms, which run at every
+//! full step of every session and therefore go through the memoized
+//! bases and the `simd` lane kernels (DESIGN.md "Host-math hot path").
 
 pub mod dct;
 pub mod fft;
 pub mod mask;
+pub mod simd;
 
 pub use dct::{dct2, dct_matrix, idct2};
 pub use fft::{fft2, ifft2, Complex};

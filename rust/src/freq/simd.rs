@@ -1,0 +1,556 @@
+//! Explicit 8-lane chunked kernels for the host-math hot path.
+//!
+//! Every hot inner loop in the band transforms (`freq::dct`,
+//! `freq::fft`) and the probe's rel-L1 band accumulation
+//! (`feedback::probe`) lands on one of the kernels here.  Each kernel
+//! has two implementations that are **always both compiled**:
+//!
+//! * `*_scalar` — the straight-line reference loop; semantics are
+//!   defined by it.
+//! * `*_lanes` — the same computation restructured into
+//!   [`LANES`]-wide chunks with per-lane accumulators, the shape LLVM
+//!   reliably turns into packed SIMD.  Reductions accumulate in `f64`
+//!   (even over `f32` data) so the lane-reassociated sum stays within
+//!   a tight bound of the scalar one — the property tests below pin
+//!   lanes-vs-scalar relative error ≤ 1e-6, far looser than the
+//!   ~1e-13 reassociation error f64 actually exhibits, and far
+//!   tighter than f32 accumulation could promise.
+//!
+//! Which variant the un-suffixed entry points dispatch to is decided
+//! at runtime: a thread-local [`Backend`] override (for benches and
+//! the parity tests, via [`with_backend`]) falls back to the `simd`
+//! cargo feature.  A runtime flag rather than `#[cfg]`-compiled-out
+//! code means `cargo test` exercises both paths in every
+//! configuration.
+
+use std::cell::Cell;
+
+/// Chunk width of the lane kernels.  Eight f32 lanes is one AVX2
+/// register / two NEON registers; for the f64 accumulators it is two
+/// AVX2 registers, which also hides FMA latency.
+pub const LANES: usize = 8;
+
+/// Which kernel family the un-suffixed entry points run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Follow the `simd` cargo feature (the production default).
+    Auto,
+    /// Force the scalar reference loops.
+    Scalar,
+    /// Force the 8-lane chunked loops.
+    Lanes,
+}
+
+thread_local! {
+    static OVERRIDE: Cell<Backend> = Cell::new(Backend::Auto);
+}
+
+/// Set this thread's backend override (sticky; prefer
+/// [`with_backend`]).
+pub fn set_backend(b: Backend) {
+    OVERRIDE.with(|c| c.set(b));
+}
+
+/// This thread's current backend override.
+pub fn backend() -> Backend {
+    OVERRIDE.with(|c| c.get())
+}
+
+/// Whether the un-suffixed kernels run the lane variants right now.
+pub fn lanes_active() -> bool {
+    match backend() {
+        Backend::Scalar => false,
+        Backend::Lanes => true,
+        Backend::Auto => cfg!(feature = "simd"),
+    }
+}
+
+/// Run `f` with the backend forced to `b`, restoring the previous
+/// override afterwards (panic-safe; thread-local, so concurrent tests
+/// cannot race each other).
+pub fn with_backend<R>(b: Backend, f: impl FnOnce() -> R) -> R {
+    struct Restore(Backend);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_backend(self.0);
+        }
+    }
+    let _restore = Restore(backend());
+    set_backend(b);
+    f()
+}
+
+// ---------------------------------------------------------------- axpy
+
+/// `y[i] += a * x[i]` over f32 (history-combine inner loop).
+pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    if lanes_active() {
+        axpy_f32_lanes(a, x, y)
+    } else {
+        axpy_f32_scalar(a, x, y)
+    }
+}
+
+pub fn axpy_f32_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+pub fn axpy_f32_lanes(a: f32, x: &[f32], y: &mut [f32]) {
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yk, xk) in (&mut yc).zip(&mut xc) {
+        for l in 0..LANES {
+            yk[l] += a * xk[l];
+        }
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi += a * xi;
+    }
+}
+
+// ------------------------------------------------------------- abs sum
+
+/// `Σ |x[i]|` accumulated in f64 (None-decomp rel-L1 numerators).
+pub fn abs_sum_f32(x: &[f32]) -> f64 {
+    if lanes_active() {
+        abs_sum_f32_lanes(x)
+    } else {
+        abs_sum_f32_scalar(x)
+    }
+}
+
+pub fn abs_sum_f32_scalar(x: &[f32]) -> f64 {
+    x.iter().map(|v| v.abs() as f64).sum()
+}
+
+pub fn abs_sum_f32_lanes(x: &[f32]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    for xk in &mut xc {
+        for l in 0..LANES {
+            acc[l] += xk[l].abs() as f64;
+        }
+    }
+    let mut s: f64 = acc.iter().sum();
+    for v in xc.remainder() {
+        s += v.abs() as f64;
+    }
+    s
+}
+
+// ------------------------------------------------------------- matmuls
+//
+// Square g×g row-major f64 matmuls — the 2-D separable transform is
+// two of these per plane.  `g` is the patch grid (8–32), so the
+// matrices live comfortably in L1 and the kernels skip blocking.
+
+/// `C = A · B` (overwrites `c`).
+pub fn matmul(a: &[f64], b: &[f64], g: usize, c: &mut [f64]) {
+    if lanes_active() {
+        matmul_lanes(a, b, g, c)
+    } else {
+        matmul_scalar(a, b, g, c)
+    }
+}
+
+pub fn matmul_scalar(a: &[f64], b: &[f64], g: usize, c: &mut [f64]) {
+    for i in 0..g {
+        for j in 0..g {
+            let mut s = 0.0;
+            for k in 0..g {
+                s += a[i * g + k] * b[k * g + j];
+            }
+            c[i * g + j] = s;
+        }
+    }
+}
+
+pub fn matmul_lanes(a: &[f64], b: &[f64], g: usize, c: &mut [f64]) {
+    c[..g * g].fill(0.0);
+    for i in 0..g {
+        let crow = &mut c[i * g..(i + 1) * g];
+        for k in 0..g {
+            let aik = a[i * g + k];
+            if aik == 0.0 {
+                continue;
+            }
+            broadcast_axpy(aik, &b[k * g..(k + 1) * g], crow);
+        }
+    }
+}
+
+/// `C = A · Bᵀ` (row-by-row dot products; overwrites `c`).
+pub fn matmul_t(a: &[f64], b: &[f64], g: usize, c: &mut [f64]) {
+    if lanes_active() {
+        matmul_t_lanes(a, b, g, c)
+    } else {
+        matmul_t_scalar(a, b, g, c)
+    }
+}
+
+pub fn matmul_t_scalar(a: &[f64], b: &[f64], g: usize, c: &mut [f64]) {
+    for i in 0..g {
+        for j in 0..g {
+            let mut s = 0.0;
+            for k in 0..g {
+                s += a[i * g + k] * b[j * g + k];
+            }
+            c[i * g + j] = s;
+        }
+    }
+}
+
+pub fn matmul_t_lanes(a: &[f64], b: &[f64], g: usize, c: &mut [f64]) {
+    for i in 0..g {
+        let arow = &a[i * g..(i + 1) * g];
+        for j in 0..g {
+            c[i * g + j] = dot_lanes(arow, &b[j * g..(j + 1) * g]);
+        }
+    }
+}
+
+/// `C = Aᵀ · B` (overwrites `c`; the inverse-transform first stage).
+pub fn matmul_at(a: &[f64], b: &[f64], g: usize, c: &mut [f64]) {
+    if lanes_active() {
+        matmul_at_lanes(a, b, g, c)
+    } else {
+        matmul_at_scalar(a, b, g, c)
+    }
+}
+
+pub fn matmul_at_scalar(a: &[f64], b: &[f64], g: usize, c: &mut [f64]) {
+    for i in 0..g {
+        for j in 0..g {
+            let mut s = 0.0;
+            for k in 0..g {
+                s += a[k * g + i] * b[k * g + j];
+            }
+            c[i * g + j] = s;
+        }
+    }
+}
+
+pub fn matmul_at_lanes(a: &[f64], b: &[f64], g: usize, c: &mut [f64]) {
+    c[..g * g].fill(0.0);
+    for k in 0..g {
+        let brow = &b[k * g..(k + 1) * g];
+        for i in 0..g {
+            let aki = a[k * g + i];
+            if aki == 0.0 {
+                continue;
+            }
+            broadcast_axpy(aki, brow, &mut c[i * g..(i + 1) * g]);
+        }
+    }
+}
+
+fn broadcast_axpy(w: f64, x: &[f64], acc: &mut [f64]) {
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (ak, xk) in (&mut ac).zip(&mut xc) {
+        for l in 0..LANES {
+            ak[l] += w * xk[l];
+        }
+    }
+    for (ai, xi) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *ai += w * xi;
+    }
+}
+
+fn dot_lanes(x: &[f64], y: &[f64]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xk, yk) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            acc[l] += xk[l] * yk[l];
+        }
+    }
+    let mut s: f64 = acc.iter().sum();
+    for (xi, yi) in xc.remainder().iter().zip(yc.remainder()) {
+        s += xi * yi;
+    }
+    s
+}
+
+// ----------------------------------------------------------- band sums
+
+/// Split `Σ |coef[i]|` by the radial band mask (`mask[i]` is 1.0 for
+/// the low band, 0.0 for the high band) — returns `(low, high)`.
+pub fn abs_band_sums(coef: &[f64], mask: &[f32]) -> (f64, f64) {
+    if lanes_active() {
+        abs_band_sums_lanes(coef, mask)
+    } else {
+        abs_band_sums_scalar(coef, mask)
+    }
+}
+
+pub fn abs_band_sums_scalar(coef: &[f64], mask: &[f32]) -> (f64, f64) {
+    let (mut low, mut high) = (0.0, 0.0);
+    for (c, m) in coef.iter().zip(mask) {
+        if *m != 0.0 {
+            low += c.abs();
+        } else {
+            high += c.abs();
+        }
+    }
+    (low, high)
+}
+
+pub fn abs_band_sums_lanes(coef: &[f64], mask: &[f32]) -> (f64, f64) {
+    // Branch-free masked accumulate: with m ∈ {0, 1} exactly, the
+    // products match the scalar branch bit-for-bit per element.
+    let mut lo = [0.0f64; LANES];
+    let mut hi = [0.0f64; LANES];
+    let mut cc = coef.chunks_exact(LANES);
+    let mut mc = mask.chunks_exact(LANES);
+    for (ck, mk) in (&mut cc).zip(&mut mc) {
+        for l in 0..LANES {
+            let a = ck[l].abs();
+            let m = mk[l] as f64;
+            lo[l] += a * m;
+            hi[l] += a * (1.0 - m);
+        }
+    }
+    let (mut low, mut high) = (lo.iter().sum::<f64>(), hi.iter().sum::<f64>());
+    for (c, m) in cc.remainder().iter().zip(mc.remainder()) {
+        let a = c.abs();
+        low += a * *m as f64;
+        high += a * (1.0 - *m as f64);
+    }
+    (low, high)
+}
+
+/// [`abs_band_sums`] over f32 coefficients (the DCT probe path, whose
+/// transform output is f32), still accumulating in f64.
+pub fn abs_band_sums_f32(coef: &[f32], mask: &[f32]) -> (f64, f64) {
+    if lanes_active() {
+        abs_band_sums_f32_lanes(coef, mask)
+    } else {
+        abs_band_sums_f32_scalar(coef, mask)
+    }
+}
+
+pub fn abs_band_sums_f32_scalar(coef: &[f32], mask: &[f32]) -> (f64, f64) {
+    let (mut low, mut high) = (0.0, 0.0);
+    for (c, m) in coef.iter().zip(mask) {
+        if *m != 0.0 {
+            low += c.abs() as f64;
+        } else {
+            high += c.abs() as f64;
+        }
+    }
+    (low, high)
+}
+
+pub fn abs_band_sums_f32_lanes(coef: &[f32], mask: &[f32]) -> (f64, f64) {
+    let mut lo = [0.0f64; LANES];
+    let mut hi = [0.0f64; LANES];
+    let mut cc = coef.chunks_exact(LANES);
+    let mut mc = mask.chunks_exact(LANES);
+    for (ck, mk) in (&mut cc).zip(&mut mc) {
+        for l in 0..LANES {
+            let a = ck[l].abs() as f64;
+            let m = mk[l] as f64;
+            lo[l] += a * m;
+            hi[l] += a * (1.0 - m);
+        }
+    }
+    let (mut low, mut high) = (lo.iter().sum::<f64>(), hi.iter().sum::<f64>());
+    for (c, m) in cc.remainder().iter().zip(mc.remainder()) {
+        let a = c.abs() as f64;
+        low += a * *m as f64;
+        high += a * (1.0 - *m as f64);
+    }
+    (low, high)
+}
+
+/// Split `Σ sqrt(re[i]² + im[i]²)` by the band mask — the FFT
+/// magnitude analogue of [`abs_band_sums`].
+pub fn mag_band_sums(re: &[f64], im: &[f64], mask: &[f32]) -> (f64, f64) {
+    if lanes_active() {
+        mag_band_sums_lanes(re, im, mask)
+    } else {
+        mag_band_sums_scalar(re, im, mask)
+    }
+}
+
+pub fn mag_band_sums_scalar(re: &[f64], im: &[f64], mask: &[f32]) -> (f64, f64) {
+    let (mut low, mut high) = (0.0, 0.0);
+    for ((r, i), m) in re.iter().zip(im).zip(mask) {
+        let mag = (r * r + i * i).sqrt();
+        if *m != 0.0 {
+            low += mag;
+        } else {
+            high += mag;
+        }
+    }
+    (low, high)
+}
+
+pub fn mag_band_sums_lanes(re: &[f64], im: &[f64], mask: &[f32]) -> (f64, f64) {
+    let mut lo = [0.0f64; LANES];
+    let mut hi = [0.0f64; LANES];
+    let mut rc = re.chunks_exact(LANES);
+    let mut ic = im.chunks_exact(LANES);
+    let mut mc = mask.chunks_exact(LANES);
+    for ((rk, ik), mk) in (&mut rc).zip(&mut ic).zip(&mut mc) {
+        for l in 0..LANES {
+            let mag = (rk[l] * rk[l] + ik[l] * ik[l]).sqrt();
+            let m = mk[l] as f64;
+            lo[l] += mag * m;
+            hi[l] += mag * (1.0 - m);
+        }
+    }
+    let (mut low, mut high) = (lo.iter().sum::<f64>(), hi.iter().sum::<f64>());
+    for ((r, i), m) in rc
+        .remainder()
+        .iter()
+        .zip(ic.remainder())
+        .zip(mc.remainder())
+    {
+        let mag = (r * r + i * i).sqrt();
+        low += mag * *m as f64;
+        high += mag * (1.0 - *m as f64);
+    }
+    (low, high)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::Rng;
+
+    fn close64(a: f64, b: f64, tol: f64) -> Result<(), String> {
+        if (a - b).abs() > tol * (1.0 + a.abs().max(b.abs())) {
+            Err(format!("{a} vs {b} (tol {tol})"))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn mat(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.range(-2.0, 2.0) as f64).collect()
+    }
+
+    #[test]
+    fn backend_override_is_scoped_and_restored() {
+        let before = backend();
+        let inner = with_backend(Backend::Lanes, || {
+            assert!(lanes_active());
+            with_backend(Backend::Scalar, lanes_active)
+        });
+        assert!(!inner);
+        assert_eq!(backend(), before);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        check(
+            "matmul lanes == scalar",
+            Config::default(),
+            |rng, size| {
+                let g = 1 + size % 24;
+                (g, mat(rng, g * g), mat(rng, g * g))
+            },
+            |(g, a, b)| {
+                let mut cs = vec![0.0; g * g];
+                let mut cl = vec![0.0; g * g];
+                matmul_scalar(a, b, *g, &mut cs);
+                matmul_lanes(a, b, *g, &mut cl);
+                for (x, y) in cs.iter().zip(&cl) {
+                    close64(*x, *y, 1e-9)?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn transposed_matmul_variants_agree() {
+        check(
+            "matmul_t/matmul_at lanes == scalar",
+            Config::default(),
+            |rng, size| {
+                let g = 1 + size % 24;
+                (g, mat(rng, g * g), mat(rng, g * g))
+            },
+            |(g, a, b)| {
+                let mut cs = vec![0.0; g * g];
+                let mut cl = vec![0.0; g * g];
+                matmul_t_scalar(a, b, *g, &mut cs);
+                matmul_t_lanes(a, b, *g, &mut cl);
+                for (x, y) in cs.iter().zip(&cl) {
+                    close64(*x, *y, 1e-9)?;
+                }
+                matmul_at_scalar(a, b, *g, &mut cs);
+                matmul_at_lanes(a, b, *g, &mut cl);
+                for (x, y) in cs.iter().zip(&cl) {
+                    close64(*x, *y, 1e-9)?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn band_sum_variants_agree() {
+        check(
+            "radial band sums lanes == scalar",
+            Config::default(),
+            |rng, size| {
+                let n = size * 3 + 1;
+                let re = mat(rng, n);
+                let im = mat(rng, n);
+                let mask: Vec<f32> =
+                    (0..n).map(|_| (rng.below(2)) as f32).collect();
+                (re, im, mask)
+            },
+            |(re, im, mask)| {
+                let s = abs_band_sums_scalar(re, mask);
+                let l = abs_band_sums_lanes(re, mask);
+                close64(s.0, l.0, 1e-9)?;
+                close64(s.1, l.1, 1e-9)?;
+                let re32: Vec<f32> = re.iter().map(|v| *v as f32).collect();
+                let s = abs_band_sums_f32_scalar(&re32, mask);
+                let l = abs_band_sums_f32_lanes(&re32, mask);
+                close64(s.0, l.0, 1e-9)?;
+                close64(s.1, l.1, 1e-9)?;
+                let s = mag_band_sums_scalar(re, im, mask);
+                let l = mag_band_sums_lanes(re, im, mask);
+                close64(s.0, l.0, 1e-9)?;
+                close64(s.1, l.1, 1e-9)?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn axpy_and_abs_sum_variants_agree() {
+        check(
+            "axpy/abs_sum lanes == scalar",
+            Config::default(),
+            |rng, size| {
+                let n = size * 2 + 1;
+                let a = rng.range(-1.5, 1.5);
+                let x: Vec<f32> = (0..n).map(|_| rng.range(-2.0, 2.0)).collect();
+                let y: Vec<f32> = (0..n).map(|_| rng.range(-2.0, 2.0)).collect();
+                (a, x, y)
+            },
+            |(a, x, y)| {
+                let mut ys = y.clone();
+                let mut yl = y.clone();
+                axpy_f32_scalar(*a, x, &mut ys);
+                axpy_f32_lanes(*a, x, &mut yl);
+                // Same per-element op, no reduction: exactly equal.
+                if ys != yl {
+                    return Err("axpy lanes diverged".into());
+                }
+                close64(abs_sum_f32_scalar(x), abs_sum_f32_lanes(x), 1e-9)
+            },
+        );
+    }
+}

@@ -68,13 +68,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .u64_or("dephase-window", defaults.dephase_window)?,
     };
     // `--feedback` turns the error-feedback control plane on with the
-    // default gains; `--error-budget E` implies it and sets the budget.
-    let feedback = if args.bool("feedback") || args.get("error-budget").is_some()
+    // default gains; `--error-budget E` implies it and sets the budget;
+    // `--probe-sample S` (also implying it) probes every S-th channel
+    // plane, falling back to full resolution when the subsampled
+    // estimate's confidence bound straddles the budget.
+    let feedback = if args.bool("feedback")
+        || args.get("error-budget").is_some()
+        || args.get("probe-sample").is_some()
     {
         let fb = FeedbackConfig::default();
         let budget = args.f64_or("error-budget", fb.error_budget)?;
         freqca::feedback::validate_error_budget(budget)?;
-        Some(FeedbackConfig { error_budget: budget, ..fb })
+        let probe_sample = args.usize_or("probe-sample", fb.probe_sample)?;
+        if probe_sample < 1 {
+            return Err(anyhow!(
+                "--probe-sample must be >= 1 (1 = full resolution), got \
+                 {probe_sample}"
+            ));
+        }
+        Some(FeedbackConfig { error_budget: budget, probe_sample, ..fb })
     } else {
         None
     };

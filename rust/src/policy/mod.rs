@@ -80,6 +80,21 @@ pub struct ProbeSpec {
     pub spec: BandSpec,
     pub low_order: usize,
     pub high_order: usize,
+    /// Deterministic probe subsampling: read every `sample_stride`-th
+    /// (token-row, channel) plane of the CRF instead of all of them
+    /// (1 = full resolution).  Policies always ask for full
+    /// resolution; the session overrides this from
+    /// `FeedbackConfig::probe_sample` (`--probe-sample`), and the
+    /// controller falls back to a full probe when the subsampled
+    /// estimate's confidence bound straddles the error budget.
+    pub sample_stride: usize,
+}
+
+impl ProbeSpec {
+    /// Full-resolution spec (the only form policies construct).
+    pub fn new(spec: BandSpec, low_order: usize, high_order: usize) -> ProbeSpec {
+        ProbeSpec { spec, low_order, high_order, sample_stride: 1 }
+    }
 }
 
 pub trait CachePolicy {
@@ -285,11 +300,7 @@ impl CachePolicy for FreqCa {
     }
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
-        Some(ProbeSpec {
-            spec: self.spec,
-            low_order: self.low_order,
-            high_order: self.high_order,
-        })
+        Some(ProbeSpec::new(self.spec, self.low_order, self.high_order))
     }
 }
 
@@ -336,11 +347,7 @@ impl CachePolicy for Fora {
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
         // Whole-feature reuse: one band carries everything.
-        Some(ProbeSpec {
-            spec: BandSpec::new(Decomp::None, 0),
-            low_order: 0,
-            high_order: 0,
-        })
+        Some(ProbeSpec::new(BandSpec::new(Decomp::None, 0), 0, 0))
     }
 }
 
@@ -388,11 +395,11 @@ impl CachePolicy for TaylorSeer {
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
         // Whole-feature polynomial forecast: probe with the same order.
-        Some(ProbeSpec {
-            spec: BandSpec::new(Decomp::None, 0),
-            low_order: self.order,
-            high_order: self.order,
-        })
+        Some(ProbeSpec::new(
+            BandSpec::new(Decomp::None, 0),
+            self.order,
+            self.order,
+        ))
     }
 }
 
@@ -478,11 +485,7 @@ impl CachePolicy for TeaCache {
     }
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
-        Some(ProbeSpec {
-            spec: BandSpec::new(Decomp::None, 0),
-            low_order: 0,
-            high_order: 0,
-        })
+        Some(ProbeSpec::new(BandSpec::new(Decomp::None, 0), 0, 0))
     }
 }
 
@@ -535,11 +538,7 @@ impl CachePolicy for Toca {
     }
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
-        Some(ProbeSpec {
-            spec: BandSpec::new(Decomp::None, 0),
-            low_order: 0,
-            high_order: 0,
-        })
+        Some(ProbeSpec::new(BandSpec::new(Decomp::None, 0), 0, 0))
     }
 }
 
@@ -595,11 +594,7 @@ impl CachePolicy for Duca {
     }
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
-        Some(ProbeSpec {
-            spec: BandSpec::new(Decomp::None, 0),
-            low_order: 0,
-            high_order: 0,
-        })
+        Some(ProbeSpec::new(BandSpec::new(Decomp::None, 0), 0, 0))
     }
 }
 
@@ -698,11 +693,7 @@ impl CachePolicy for FreqCaAdaptive {
     }
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
-        Some(ProbeSpec {
-            spec: self.spec,
-            low_order: self.low_order,
-            high_order: self.high_order,
-        })
+        Some(ProbeSpec::new(self.spec, self.low_order, self.high_order))
     }
 }
 
@@ -1080,6 +1071,9 @@ mod tests {
         let p = FreqCa::new(5, spec, 3).probe_spec().unwrap();
         assert_eq!(p.spec, spec);
         assert_eq!((p.low_order, p.high_order), (0, 2));
+        // Policies always request full resolution; subsampling is a
+        // session-level override (FeedbackConfig::probe_sample).
+        assert_eq!(p.sample_stride, 1);
         let p = TaylorSeer { n: 6, order: 2, k: 3 }.probe_spec().unwrap();
         assert_eq!(p.spec.decomp, Decomp::None);
         assert_eq!((p.low_order, p.high_order), (2, 2));

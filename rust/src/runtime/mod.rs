@@ -34,6 +34,11 @@ pub struct Runtime {
     artifact_dir: String,
     compiled: RefCell<HashMap<String, Rc<RefCell<Compiled>>>>,
     weights: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
+    /// Reusable staging vector for `exec_host` uploads, so the per-step
+    /// hot path does not allocate a fresh Vec per execution (DESIGN.md
+    /// "Host-math hot path").  The device buffers themselves are still
+    /// per-call; only the container is recycled.
+    staging: RefCell<Vec<xla::PjRtBuffer>>,
     /// Cumulative compile time (startup cost, reported by metrics).
     pub compile_s: RefCell<f64>,
 }
@@ -47,6 +52,7 @@ impl Runtime {
             artifact_dir: artifact_dir.to_string(),
             compiled: RefCell::new(HashMap::new()),
             weights: RefCell::new(HashMap::new()),
+            staging: RefCell::new(Vec::new()),
             compile_s: RefCell::new(0.0),
         })
     }
@@ -114,14 +120,20 @@ impl Runtime {
 
     /// Upload a host tensor to the device.
     pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        let dims: Vec<usize> = if t.shape.is_empty() {
-            vec![]
-        } else {
-            t.shape.clone()
-        };
+        self.upload_shaped(&t.data, &t.shape)
+    }
+
+    /// Upload a raw host slice under an explicit shape — lets hot-path
+    /// callers reinterpret a buffer (e.g. a flat CRF as [B, T, D])
+    /// without cloning it into a reshaped `Tensor` first.
+    pub fn upload_shaped(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
         self.client
-            .buffer_from_host_buffer(&t.data, &dims, None)
-            .map_err(|e| anyhow!("uploading tensor {:?}: {e:?}", t.shape))
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("uploading tensor {dims:?}: {e:?}"))
     }
 
     /// Execute an artifact of `cfg` with device buffers, returning the
@@ -159,16 +171,23 @@ impl Runtime {
         weights: Option<&Rc<xla::PjRtBuffer>>,
         args: &[&Tensor],
     ) -> Result<Vec<Tensor>> {
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
-        for t in args {
-            bufs.push(self.upload(t)?);
-        }
-        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(bufs.len() + 1);
-        if let Some(w) = weights {
-            refs.push(w.as_ref());
-        }
-        refs.extend(bufs.iter());
-        self.exec(cfg, artifact, &refs)
+        let mut bufs = std::mem::take(&mut *self.staging.borrow_mut());
+        bufs.clear();
+        let result = (|| {
+            for t in args {
+                bufs.push(self.upload(t)?);
+            }
+            let mut refs: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(bufs.len() + 1);
+            if let Some(w) = weights {
+                refs.push(w.as_ref());
+            }
+            refs.extend(bufs.iter());
+            self.exec(cfg, artifact, &refs)
+        })();
+        bufs.clear(); // drop the device buffers, keep the container
+        *self.staging.borrow_mut() = bufs;
+        result
     }
 
     /// Per-artifact cumulative execution statistics:

@@ -27,11 +27,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::cache::CrfCache;
 use crate::feedback::{probe, BandResiduals, FeedbackConfig, SessionFeedback};
-use crate::freq::{band_mask, BandSpec, Decomp};
+use crate::freq::{dct, fft, mask, BandSpec, Decomp};
 use crate::model::{flops, ModelConfig};
 use crate::policy::{Action, CachePolicy, PredictPlan, StepCtx, StepKind};
 use crate::runtime::Runtime;
-use crate::util::{Rng, Tensor};
+use crate::util::{Arena, Rng, Tensor};
 
 /// One request's inputs within a batch.
 #[derive(Debug, Clone)]
@@ -66,6 +66,12 @@ pub struct StepRecord {
     /// This step was forced to a full forward by the error-budget
     /// controller (the policy alone would have predicted).
     pub feedback_forced: bool,
+    /// The probe ran on a subsampled plane set and its confidence bound
+    /// cleared the budget (the cheap path; `--probe-sample` > 1).
+    pub probe_sampled: bool,
+    /// The subsampled probe's bound straddled the budget, so the step
+    /// re-probed at full resolution before feeding the controller.
+    pub probe_full_fallback: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -113,6 +119,11 @@ pub struct SampleOpts {
     /// refresh before the accumulated predicted error would exceed the
     /// budget.  Ignored for policies with nothing to probe (baseline).
     pub feedback: Option<FeedbackConfig>,
+    /// Reusable host-buffer arena the session draws step scratch from
+    /// (probe planes, history-transpose staging).  Engine workers pass
+    /// their per-worker arena so every session on a worker shares one
+    /// pool; `None` gives the session a private arena.
+    pub arena: Option<Rc<Arena>>,
 }
 
 /// What one call to [`SamplerSession::step`] did.
@@ -161,6 +172,9 @@ pub struct SamplerSession<'p> {
     /// Error-feedback state (probe plan + budget controller), when the
     /// control plane is on and the policy has a predictor to probe.
     feedback: Option<SessionFeedback>,
+    /// Host-buffer arena for step scratch (shared per worker, or private
+    /// when the session was built without one).
+    arena: Rc<Arena>,
     /// Cached/partial steps executed since the last full forward (the
     /// probe's gap, feeding the controller's rate estimate).
     steps_since_full: usize,
@@ -189,9 +203,15 @@ impl<'p> SamplerSession<'p> {
         }
         policy.reset();
         let feedback = match (&opts.feedback, policy.probe_spec()) {
-            (Some(fb), Some(probe)) => Some(SessionFeedback::new(*fb, probe)),
+            (Some(fb), Some(mut probe)) => {
+                // The serve-level sampling knob rides the probe plan.
+                probe.sample_stride = fb.probe_sample.max(1);
+                Some(SessionFeedback::new(*fb, probe))
+            }
             _ => None,
         };
+        let arena =
+            opts.arena.clone().unwrap_or_else(|| Rc::new(Arena::new()));
 
         // Assemble batched inputs.
         let mut x_data = Vec::with_capacity(b * cfg.latent_elems());
@@ -254,6 +274,7 @@ impl<'p> SamplerSession<'p> {
             step_idx: 0,
             busy_s: 0.0,
             feedback,
+            arena,
             steps_since_full: 0,
         })
     }
@@ -396,6 +417,8 @@ impl<'p> SamplerSession<'p> {
         }
         let mut pred_mse = None;
         let mut probe_res = None;
+        let mut probe_sampled = false;
+        let mut probe_full_fallback = false;
 
         let (v, step_action) = match action {
             Action::Full => {
@@ -415,7 +438,7 @@ impl<'p> SamplerSession<'p> {
                     if !self.cache.is_empty() {
                         let hist: Vec<&Tensor> =
                             self.cache.iter().map(|(_, t)| t).collect();
-                        let r = probe::probe_residuals(
+                        let est = probe::probe_residuals_sampled(
                             &hist_s,
                             &hist,
                             s,
@@ -423,7 +446,35 @@ impl<'p> SamplerSession<'p> {
                             self.cfg.grid,
                             self.cfg.dim,
                             &crf,
+                            &self.arena,
                         )?;
+                        let r = if est.is_subsampled() {
+                            if fb.controller.needs_full_probe(
+                                est.residuals.overall,
+                                est.half_width,
+                            ) {
+                                // The subsampled bound straddles the
+                                // budget: a breach decision on this
+                                // probe would be noise.  Re-measure at
+                                // full resolution.
+                                probe_full_fallback = true;
+                                probe::probe_residuals_full(
+                                    &hist_s,
+                                    &hist,
+                                    s,
+                                    &fb.probe,
+                                    self.cfg.grid,
+                                    self.cfg.dim,
+                                    &crf,
+                                    &self.arena,
+                                )?
+                            } else {
+                                probe_sampled = true;
+                                est.residuals
+                            }
+                        } else {
+                            est.residuals
+                        };
                         fb.controller
                             .observe_probe(r.overall, self.steps_since_full);
                         self.policy
@@ -448,6 +499,7 @@ impl<'p> SamplerSession<'p> {
                     &self.cache,
                     &plan,
                     &mut self.hist_buf,
+                    &self.arena,
                 )?;
                 if self.opts.record_pred_error {
                     let (_, crf_true) = run_fwd(
@@ -504,6 +556,7 @@ impl<'p> SamplerSession<'p> {
                     &self.cache,
                     &plan,
                     &mut self.hist_buf,
+                    &self.arena,
                 )?;
                 let blended = blend_tokens(
                     &self.cfg,
@@ -556,6 +609,8 @@ impl<'p> SamplerSession<'p> {
             pred_mse,
             probe: probe_res,
             feedback_forced,
+            probe_sampled,
+            probe_full_fallback,
         };
         self.steps.push(record.clone());
         self.step_idx += 1;
@@ -705,28 +760,35 @@ fn run_head(
     cond: &Tensor,
     t: f32,
 ) -> Result<Tensor> {
-    let tt = Tensor::new(vec![b], vec![t; b])?;
-    let crf_b = crf.clone().reshape(vec![b, cfg.tokens, cfg.dim])?;
-    let mut out = rt.exec_host(
+    // The CRF is uploaded under the [B, T, D] artifact shape directly —
+    // reshaping a clone would copy the whole feature tensor per step.
+    let crf_buf =
+        rt.upload_shaped(&crf.data, &[b, cfg.tokens, cfg.dim])?;
+    let cond_buf = rt.upload(cond)?;
+    let tt_buf = rt.upload_shaped(&vec![t; b], &[b])?;
+    let mut out = rt.exec(
         cfg,
         &format!("head_b{b}"),
-        Some(weights),
-        &[&crf_b, cond, &tt],
+        &[weights.as_ref(), &crf_buf, &cond_buf, &tt_buf],
     )?;
     out.pop().ok_or_else(|| anyhow!("head_b{b} returned nothing"))
 }
 
-/// Transpose the cache stack [K, B, T, D] -> [B, K, T, D].
-fn transpose_kb(hist: &Tensor, k: usize, b: usize, row: usize) -> Tensor {
-    let mut data = vec![0.0f32; hist.data.len()];
+/// Transpose the cache stack [K, B, T, D] -> [B, K, T, D] into `out`.
+fn transpose_kb_into(
+    hist: &Tensor,
+    k: usize,
+    b: usize,
+    row: usize,
+    out: &mut [f32],
+) {
     for ki in 0..k {
         for bi in 0..b {
             let src = (ki * b + bi) * row;
             let dst = (bi * k + ki) * row;
-            data[dst..dst + row].copy_from_slice(&hist.data[src..src + row]);
+            out[dst..dst + row].copy_from_slice(&hist.data[src..src + row]);
         }
     }
-    Tensor { shape: vec![b, k, row], data }
 }
 
 fn run_predict(
@@ -736,6 +798,7 @@ fn run_predict(
     cache: &CrfCache,
     plan: &PredictPlan,
     hist_buf: &mut Option<(u64, xla::PjRtBuffer)>,
+    arena: &Arena,
 ) -> Result<Tensor> {
     // Upload the stacked history only when the cache has mutated since
     // the last predicted step.
@@ -746,31 +809,37 @@ fn run_predict(
             .stacked() // [K, B, T, D] (each entry is a [B, T, D] snapshot)
             .ok_or_else(|| anyhow!("predict with empty cache"))?;
         let row = cfg.tokens * cfg.dim;
-        let hist_b = transpose_kb(&hist, cfg.k_hist, b, row).reshape(vec![
-            b,
-            cfg.k_hist,
-            cfg.tokens,
-            cfg.dim,
-        ])?;
-        *hist_buf = Some((cache.generation(), rt.upload(&hist_b)?));
+        // Transpose staging comes from the arena: the [B, K, T, D]
+        // scratch is the largest per-refresh host allocation on the
+        // predicted path, and its size is stable per session.
+        let mut staged = arena.take_f32(hist.data.len());
+        transpose_kb_into(&hist, cfg.k_hist, b, row, &mut staged);
+        let buf = rt.upload_shaped(
+            &staged,
+            &[b, cfg.k_hist, cfg.tokens, cfg.dim],
+        );
+        arena.put_f32(staged);
+        *hist_buf = Some((cache.generation(), buf?));
     }
     let hist_dev = &hist_buf.as_ref().unwrap().1;
     let mut out = match plan.decomp {
         Decomp::None => {
-            let w = rt.upload(&Tensor::new(vec![cfg.k_hist], plan.lw.clone())?)?;
+            let w = rt.upload_shaped(&plan.lw, &[cfg.k_hist])?;
             rt.exec(cfg, &format!("predict_plain_b{b}"), &[hist_dev, &w])?
         }
         d => {
-            let mask =
-                rt.upload(&band_mask(BandSpec::new(d, plan.cutoff), cfg.grid))?;
-            let lw = rt.upload(&Tensor::new(vec![cfg.k_hist], plan.lw.clone())?)?;
-            let hw = rt.upload(&Tensor::new(vec![cfg.k_hist], plan.hw.clone())?)?;
+            let mask = rt.upload(&mask::band_mask_cached(
+                BandSpec::new(d, plan.cutoff),
+                cfg.grid,
+            ))?;
+            let lw = rt.upload_shaped(&plan.lw, &[cfg.k_hist])?;
+            let hw = rt.upload_shaped(&plan.hw, &[cfg.k_hist])?;
             match d {
                 Decomp::Dct => {
                     // The DCT basis is a runtime input (0.5.1 constant-
-                    // operand gotcha, see freq::dct::dct_matrix_tensor).
-                    let basis = rt
-                        .upload(&crate::freq::dct::dct_matrix_tensor(cfg.grid))?;
+                    // operand gotcha, see freq::dct::dct_matrix_tensor);
+                    // memoized per grid size.
+                    let basis = rt.upload(&dct::dct_basis_cached(cfg.grid))?;
                     rt.exec(
                         cfg,
                         &format!("predict_dct_b{b}"),
@@ -778,10 +847,9 @@ fn run_predict(
                     )?
                 }
                 Decomp::Fft => {
-                    let (fr, fi) =
-                        crate::freq::fft::dft_matrices_tensor(cfg.grid);
-                    let fr = rt.upload(&fr)?;
-                    let fi = rt.upload(&fi)?;
+                    let dft = fft::dft_basis_cached(cfg.grid);
+                    let fr = rt.upload(&dft.re)?;
+                    let fi = rt.upload(&dft.im)?;
                     rt.exec(
                         cfg,
                         &format!("predict_fft_b{b}"),
@@ -871,12 +939,12 @@ mod tests {
             ],
         )
         .unwrap();
-        let t = transpose_kb(&hist, 2, 2, 3);
-        assert_eq!(t.shape, vec![2, 2, 3]);
+        let mut data = vec![0.0f32; hist.data.len()];
+        transpose_kb_into(&hist, 2, 2, 3, &mut data);
         // b0: k0 then k1
-        assert_eq!(&t.data[0..6], &[0., 1., 2., 6., 7., 8.]);
+        assert_eq!(&data[0..6], &[0., 1., 2., 6., 7., 8.]);
         // b1: k0 then k1
-        assert_eq!(&t.data[6..12], &[3., 4., 5., 9., 10., 11.]);
+        assert_eq!(&data[6..12], &[3., 4., 5., 9., 10., 11.]);
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Size-classed reusable host-buffer arena.
+//!
+//! The steady-state step path (probe scratch, predictor staging,
+//! transpose buffers) used to allocate fresh `Vec`s every step of every
+//! session — pure allocator traffic that scales with in-flight
+//! sessions.  Each engine worker owns one `Arena` (shared into its
+//! sessions via `Rc`); `take_*` hands out a zeroed buffer from the
+//! matching power-of-two size class and `put_*` returns it, so after a
+//! warmup step the hot path recycles the same few buffers and the miss
+//! counter stops moving.  Hit/miss/bytes feed the `arena_hit_rate` and
+//! `arena_bytes{,_w*}` gauges.
+//!
+//! Single-threaded by design (one arena per worker thread, interior
+//! mutability via `RefCell`/`Cell`); nothing here is `Sync`.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+
+/// Buffers smaller than this round up to one minimum class — pooling
+/// sub-cacheline vectors separately would just fragment the free lists.
+const MIN_CLASS: usize = 64;
+
+/// Free-list depth per size class.  Deep enough for every distinct
+/// buffer a step holds live at once (probe planes + transform scratch +
+/// staging), shallow enough that a burst of odd sizes cannot hoard
+/// memory forever.
+const MAX_PER_CLASS: usize = 16;
+
+/// Round a requested length up to its size class.
+fn class_of(len: usize) -> usize {
+    len.next_power_of_two().max(MIN_CLASS)
+}
+
+/// The class a returned buffer files under: the largest class its
+/// capacity can serve in full (floor power of two).
+fn class_of_cap(cap: usize) -> usize {
+    debug_assert!(cap > 0);
+    1 << (usize::BITS - 1 - cap.leading_zeros())
+}
+
+#[derive(Default)]
+struct Pool<T> {
+    classes: BTreeMap<usize, Vec<Vec<T>>>,
+}
+
+impl<T: Copy + Default> Pool<T> {
+    fn take(&mut self, len: usize) -> Option<Vec<T>> {
+        let class = class_of(len);
+        let list = self.classes.get_mut(&class)?;
+        let mut buf = list.pop()?;
+        debug_assert!(buf.capacity() >= len);
+        buf.clear();
+        buf.resize(len, T::default());
+        Some(buf)
+    }
+
+    fn put(&mut self, buf: Vec<T>) -> bool {
+        if buf.capacity() < MIN_CLASS {
+            return false; // not worth pooling
+        }
+        let class = class_of_cap(buf.capacity());
+        let list = self.classes.entry(class).or_default();
+        if list.len() >= MAX_PER_CLASS {
+            return false;
+        }
+        list.push(buf);
+        true
+    }
+
+    fn bytes(&self) -> usize {
+        self.classes
+            .values()
+            .flatten()
+            .map(|b| b.capacity() * std::mem::size_of::<T>())
+            .sum()
+    }
+}
+
+/// Per-worker pool of reusable `f32`/`f64` buffers.
+pub struct Arena {
+    f32s: RefCell<Pool<f32>>,
+    f64s: RefCell<Pool<f64>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena {
+            f32s: RefCell::new(Pool::default()),
+            f64s: RefCell::new(Pool::default()),
+            hits: Cell::new(0),
+            misses: Cell::new(0),
+        }
+    }
+
+    /// A zero-filled `f32` buffer of exactly `len`; reuses a pooled
+    /// buffer of the matching size class when one is free.
+    pub fn take_f32(&self, len: usize) -> Vec<f32> {
+        match self.f32s.borrow_mut().take(len) {
+            Some(buf) => {
+                self.hits.set(self.hits.get() + 1);
+                buf
+            }
+            None => {
+                self.misses.set(self.misses.get() + 1);
+                let mut buf = Vec::with_capacity(class_of(len));
+                buf.resize(len, 0.0);
+                buf
+            }
+        }
+    }
+
+    /// Return a buffer taken with [`take_f32`](Self::take_f32).
+    pub fn put_f32(&self, buf: Vec<f32>) {
+        self.f32s.borrow_mut().put(buf);
+    }
+
+    /// A zero-filled `f64` buffer of exactly `len` (transform scratch).
+    pub fn take_f64(&self, len: usize) -> Vec<f64> {
+        match self.f64s.borrow_mut().take(len) {
+            Some(buf) => {
+                self.hits.set(self.hits.get() + 1);
+                buf
+            }
+            None => {
+                self.misses.set(self.misses.get() + 1);
+                let mut buf = Vec::with_capacity(class_of(len));
+                buf.resize(len, 0.0);
+                buf
+            }
+        }
+    }
+
+    /// Return a buffer taken with [`take_f64`](Self::take_f64).
+    pub fn put_f64(&self, buf: Vec<f64>) {
+        self.f64s.borrow_mut().put(buf);
+    }
+
+    /// Requests served from a free list.
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Requests that had to allocate.  Flat after warmup is the
+    /// "steady-state step path is allocation-free" invariant the
+    /// step-latency bench gates.
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    /// Fraction of requests served without allocating (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits.get() + self.misses.get();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits.get() as f64 / total as f64
+        }
+    }
+
+    /// Bytes currently parked in the free lists (retained capacity,
+    /// not outstanding buffers).
+    pub fn bytes(&self) -> usize {
+        self.f32s.borrow().bytes() + self.f64s.borrow().bytes()
+    }
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Arena::new()
+    }
+}
+
+impl std::fmt::Debug for Arena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Arena")
+            .field("hits", &self.hits.get())
+            .field("misses", &self.misses.get())
+            .field("bytes", &self.bytes())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_buffers_within_a_size_class() {
+        let a = Arena::new();
+        let buf = a.take_f32(100);
+        assert_eq!(buf.len(), 100);
+        assert_eq!(a.misses(), 1);
+        a.put_f32(buf);
+        assert!(a.bytes() > 0);
+        // Same class (128) even though the length differs.
+        let again = a.take_f32(120);
+        assert_eq!(again.len(), 120);
+        assert_eq!(a.hits(), 1);
+        assert_eq!(a.misses(), 1, "reuse must not allocate");
+    }
+
+    #[test]
+    fn returned_buffers_come_back_zeroed() {
+        let a = Arena::new();
+        let mut buf = a.take_f32(64);
+        buf.iter_mut().for_each(|v| *v = 7.0);
+        a.put_f32(buf);
+        let buf = a.take_f32(64);
+        assert!(buf.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn f64_pool_is_independent_and_counted() {
+        let a = Arena::new();
+        let b64 = a.take_f64(256);
+        a.put_f64(b64);
+        let b64 = a.take_f64(200); // class 256 again
+        assert_eq!(a.hits(), 1);
+        a.put_f64(b64);
+        assert_eq!(a.bytes(), 256 * 8);
+        assert!((a.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_depth_is_bounded() {
+        let a = Arena::new();
+        let bufs: Vec<_> = (0..MAX_PER_CLASS + 4).map(|_| a.take_f32(64)).collect();
+        for b in bufs {
+            a.put_f32(b);
+        }
+        assert_eq!(a.bytes(), MAX_PER_CLASS * 64 * 4);
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let a = Arena::new();
+        // Warmup: one pass allocates.
+        let x = a.take_f32(512);
+        let y = a.take_f64(64);
+        a.put_f32(x);
+        a.put_f64(y);
+        let misses_after_warmup = a.misses();
+        for _ in 0..100 {
+            let x = a.take_f32(512);
+            let y = a.take_f64(64);
+            a.put_f32(x);
+            a.put_f64(y);
+        }
+        assert_eq!(a.misses(), misses_after_warmup);
+        assert!(a.hit_rate() > 0.9);
+    }
+}

@@ -4,12 +4,14 @@
 //! usual serde/rand/proptest stack is unavailable; these modules implement
 //! the minimal, well-tested subset the serving system needs.
 
+pub mod arena;
 pub mod json;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
 pub mod tensor;
 
+pub use arena::Arena;
 pub use json::Json;
 pub use rng::Rng;
 pub use tensor::Tensor;

@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 use freqca::coordinator::engine::{Engine, WorkItem};
 use freqca::coordinator::scheduler::QosConfig;
 use freqca::coordinator::{Priority, Request, Response};
+use freqca::feedback::FeedbackConfig;
 use freqca::metrics::Metrics;
 use freqca::server::{client::Client, serve, ServeOpts};
 
@@ -141,6 +142,14 @@ fn pool_serves_and_places_across_workers() {
             batch_wait_ms: 1,
             queue_capacity: 32,
             workers: 2,
+            // Error feedback with a stride-2 subsampled probe (loose
+            // budget: adapts, never forces) so the pool exercises the
+            // host-math hot path — sampled probes + worker arenas.
+            feedback: Some(FeedbackConfig {
+                error_budget: 10.0,
+                probe_sample: 2,
+                ..FeedbackConfig::default()
+            }),
             ..ServeOpts::default()
         };
         let _ = serve(dir, opts, s);
@@ -215,6 +224,56 @@ fn pool_serves_and_places_across_workers() {
             .unwrap_or(0.0)
             > 0.0,
         "pool aggregate crf_peak_bytes missing: {m}"
+    );
+    // Host-math hot path: every probe this pool ran was either served
+    // from the stride-2 subsample or escalated to a full-resolution
+    // fallback — the two counters partition `feedback_probes`.
+    let probes = counters
+        .get("feedback_probes")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    let sampled = counters
+        .get("probe_sampled")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    let fallback = counters
+        .get("probe_full_fallback")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    assert!(probes > 0, "feedback pool never probed: {m}");
+    assert_eq!(
+        sampled + fallback,
+        probes,
+        "probe_sampled + probe_full_fallback must partition \
+         feedback_probes: {m}"
+    );
+    // Worker arenas: each worker publishes its buffer-arena gauges, and
+    // the pool aggregate saw recycled hot-path bytes.
+    for w in 0..2 {
+        assert!(
+            gauges.get(&format!("arena_bytes_w{w}")).is_some(),
+            "worker {w} never published arena_bytes: {m}"
+        );
+        assert!(
+            gauges.get(&format!("arena_hit_rate_w{w}")).is_some(),
+            "worker {w} never published arena_hit_rate: {m}"
+        );
+    }
+    assert!(
+        gauges
+            .get("arena_bytes")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            > 0.0,
+        "pool aggregate arena_bytes missing or zero: {m}"
+    );
+    let hit_rate = gauges
+        .get("arena_hit_rate")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(-1.0);
+    assert!(
+        (0.0..=1.0).contains(&hit_rate),
+        "pool aggregate arena_hit_rate out of range: {m}"
     );
     stop.store(true, Ordering::Relaxed);
 }

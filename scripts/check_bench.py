@@ -44,6 +44,48 @@ def need(tree, path, what):
     return node
 
 
+def gate_step_latency(results, baseline):
+    """Gate the step_latency bench: the host-math hot path (SIMD band
+    kernels + probe subsampling + buffer arena) must beat the scalar
+    full-resolution baseline by the committed factors, and the arena
+    must serve every steady-state take from its free lists."""
+    gate = Gate()
+    host = need(results, "host_math", "bench results")
+    probe_speedup = need(host, "probe.speedup", "bench results")
+    combined = need(host, "combined_speedup", "bench results")
+    misses = need(host, "arena.steady_state_misses", "bench results")
+    min_probe = need(baseline, "min_probe_speedup", "baseline")
+    min_combined = need(baseline, "min_combined_speedup", "baseline")
+    max_misses = need(baseline, "max_steady_state_arena_misses", "baseline")
+    print(
+        f"host math: probe speedup {probe_speedup:.2f}x "
+        f"(stride {need(host, 'probe.stride', 'bench results')}), "
+        f"predict speedup "
+        f"{need(host, 'predict.speedup', 'bench results'):.2f}x, "
+        f"combined {combined:.2f}x, "
+        f"steady-state arena misses {misses}"
+    )
+    if probe_speedup < min_probe:
+        gate.fail(
+            f"probe hot path speedup {probe_speedup:.2f}x below the "
+            f"committed floor {min_probe}x"
+        )
+    if combined < min_combined:
+        gate.fail(
+            f"combined host-math speedup {combined:.2f}x below the "
+            f"committed floor {min_combined}x"
+        )
+    if misses > max_misses:
+        gate.fail(
+            f"arena missed {misses} steady-state takes "
+            f"(limit {max_misses}) — a hot-path buffer is not recycled"
+        )
+    if gate.failed:
+        return 1
+    print("OK")
+    return 0
+
+
 def main():
     if len(sys.argv) != 3:
         print(__doc__)
@@ -52,6 +94,8 @@ def main():
         results = json.load(f)
     with open(sys.argv[2]) as f:
         baseline = json.load(f)
+    if results.get("bench") == "step_latency":
+        return gate_step_latency(results, baseline)
     gate = Gate()
 
     measured = need(
