@@ -36,6 +36,7 @@ use std::time::{Duration, Instant};
 
 use freqca::benchkit::{bench, BenchOpts, Table};
 use freqca::coordinator::batcher::Batcher;
+use freqca::coordinator::crfstore::{CrfStore, StoredCrf};
 use freqca::coordinator::engine::{Engine, WorkItem};
 use freqca::coordinator::placement::{PlaceInput, Placement, WorkerLoad};
 use freqca::coordinator::residency::Residency;
@@ -939,6 +940,336 @@ fn live_artifact_dir() -> Option<&'static str> {
     artifact_dir().or_else(|| freqca::util::artifact_dir_with("meta_tiny.json"))
 }
 
+// ---------------------------------------------------------------------
+// Cross-request CRF reuse: multi-turn edit chains in virtual time.
+//
+// Deterministic integer-microsecond sim over the REAL placement layer
+// (`Placement` with `parent_home` warm steering), the REAL warm-start
+// store (`CrfStore` insert/checkout/release lifecycle), and the REAL
+// FreqCa schedule (`CachePolicy::peek` decides full vs cached per
+// step).  Two arms share the chain structure: `cold` treats every turn
+// as an independent request (the pre-reuse serving behaviour), `warm`
+// seeds each child turn's Hermite history from its parent's stored CRF
+// — saving the history-warmup fulls — with the eager validation probe
+// demoting drifted parents back to a cold start.  All quantities are
+// integer schedule sums, so the committed baseline keys are exact.
+// ---------------------------------------------------------------------
+
+const MT_CHAINS: usize = 8;
+const MT_TURNS: usize = 3;
+const MT_STEPS: usize = 30;
+const MT_WORKERS: usize = 2;
+const MT_CAP: usize = 3;
+/// Virtual step costs (µs).  Fulls dominate, so the two warmup fulls a
+/// warm start saves per turn translate into shorter queues pool-wide.
+const MT_FULL_US: u64 = 10_000;
+const MT_CACHED_US: u64 = 2_000;
+/// User think time between a turn completing and its child arriving.
+const MT_THINK_US: u64 = 5_000;
+/// Turn-0 arrival stagger across chains.
+const MT_STAGGER_US: u64 = 8_000;
+/// Warm-start validation budget (the serve default error budget).
+const MT_WARM_BUDGET: f64 = 0.10;
+/// Prediction error accumulated per cached step, probed at each full.
+const MT_STEP_ERR: f64 = 0.004;
+
+/// Parent drift the eager validation probe measures when chain
+/// `chain`'s turns warm-start: small for most chains (accepted, and
+/// below the interval-accumulation peak so accepted warm starts never
+/// raise the worst probed error), far over budget for the last chain —
+/// its warm turns demote to cold starts (the never-silently-wrong
+/// path).
+fn mt_drift(chain: usize) -> f64 {
+    if chain == MT_CHAINS - 1 {
+        0.25
+    } else {
+        0.002 * (chain + 1) as f64
+    }
+}
+
+/// A small stand-in CRF history (K=3 Hermite slots + the final CRF),
+/// enough to give the store real byte/handle accounting without
+/// hauling model-sized tensors through the sim.
+fn mt_entries() -> Vec<(f64, Vec<f32>)> {
+    (0..4).map(|i| (-0.8 - 0.04 * i as f64, vec![0.0f32; 256])).collect()
+}
+
+/// One turn of one edit chain, as the sim tracks it.
+struct MtTurn {
+    chain: usize,
+    turn: usize,
+    arrive_us: u64,
+    /// Warm arm only: the parent's store handle.
+    parent: Option<u64>,
+}
+
+#[derive(Default)]
+struct MtSim {
+    fulls: usize,
+    cached: usize,
+    /// Worst prediction error any full-step probe observed (accepted
+    /// warm-validation probes included; demoted ones recompute cold, so
+    /// their drift is never carried).
+    peak_probed: f64,
+    warm_starts: usize,
+    warm_demotions: usize,
+    /// Warm turns the placement layer landed on their parent's home.
+    steered_home: usize,
+    ttfs_s: Vec<f64>,
+    completion_s: Vec<f64>,
+    makespan_us: u64,
+    store_entries_end: usize,
+    store_bytes_end: usize,
+}
+
+/// Run one arm.  Mirrors `simulate_pool`'s virtual-time shape: the
+/// worker with the minimum clock acts — placing every arrival due by
+/// the pool-wide "now", admitting to its in-flight cap, then stepping
+/// one resident session round-robin.
+fn simulate_multi_turn(warm: bool, phase: &FreqCa) -> MtSim {
+    let mut store = CrfStore::new(64 << 20);
+    let mut placement = Placement::new(MT_WORKERS);
+    let mut clock = vec![0u64; MT_WORKERS];
+    let mut queue: Vec<VecDeque<usize>> =
+        (0..MT_WORKERS).map(|_| VecDeque::new()).collect();
+    let mut in_flight: Vec<VecDeque<usize>> =
+        (0..MT_WORKERS).map(|_| VecDeque::new()).collect();
+    let mut turns: Vec<MtTurn> = (0..MT_CHAINS)
+        .map(|c| MtTurn {
+            chain: c,
+            turn: 0,
+            arrive_us: c as u64 * MT_STAGGER_US,
+            parent: None,
+        })
+        .collect();
+    let mut pending: Vec<usize> = (0..turns.len()).collect();
+    let mut step_idx = vec![0usize; turns.len()];
+    let mut hist = vec![0usize; turns.len()];
+    let mut acc = vec![0.0f64; turns.len()];
+    let mut seen_first = vec![false; turns.len()];
+    let mut out = MtSim::default();
+
+    loop {
+        let Some(w) = (0..MT_WORKERS)
+            .filter(|w| {
+                !pending.is_empty()
+                    || !queue[*w].is_empty()
+                    || !in_flight[*w].is_empty()
+            })
+            .min_by_key(|w| (clock[*w], *w))
+        else {
+            break;
+        };
+        // Place every turn due by the pool-wide "now" (w holds the
+        // minimum clock), oldest arrival first, through the real
+        // placement layer.  Warm children carry their parent's handle
+        // in the batch key (as `Request::batch_key` does), so they
+        // never ride cold affinity — the `parent_home` steering term is
+        // what keeps them on the worker that harvested the parent.
+        loop {
+            let Some(pi) = (0..pending.len())
+                .min_by_key(|i| (turns[pending[*i]].arrive_us, pending[*i]))
+            else {
+                break;
+            };
+            let j = pending[pi];
+            if turns[j].arrive_us > clock[w] {
+                break;
+            }
+            pending.swap_remove(pi);
+            let parent_home = if warm {
+                turns[j].parent.and_then(|h| store.home(h))
+            } else {
+                None
+            };
+            let key = match turns[j].parent {
+                Some(h) if warm => format!("chain{}|p{h}", turns[j].chain),
+                _ => format!("chain{}", turns[j].chain),
+            };
+            let loads: Vec<WorkerLoad> = (0..MT_WORKERS)
+                .map(|v| {
+                    let mut l = WorkerLoad::builder(MT_CAP)
+                        .crf_store(
+                            store.bytes_for_home(v),
+                            store.entries_for_home(v),
+                        )
+                        .build();
+                    l.in_flight_by_class[Priority::Standard.slot()] =
+                        in_flight[v].len();
+                    l.queued_by_class[Priority::Standard.slot()] =
+                        queue[v].len();
+                    l
+                })
+                .collect();
+            let input = PlaceInput {
+                key: &key,
+                class: Priority::Standard,
+                model_slot: None,
+                hot: false,
+                parent_home,
+            };
+            let target = placement.place(&input, &loads);
+            if parent_home == Some(target) {
+                out.steered_home += 1;
+            }
+            queue[target].push_back(j);
+        }
+        // Admit to the cap.  A warm-arm turn with a parent checks the
+        // store out here and validates: the real sampler validates
+        // inside the first full step, and the first step of a session
+        // is always a full, so modeling it at admission keeps the
+        // schedule identical.
+        while in_flight[w].len() < MT_CAP {
+            let Some(j) = queue[w].pop_front() else { break };
+            if warm {
+                if let Some(h) = turns[j].parent {
+                    if store.checkout(h).is_some() {
+                        let drift = mt_drift(turns[j].chain);
+                        if drift <= MT_WARM_BUDGET {
+                            hist[j] = 3; // seeded Hermite history
+                            out.warm_starts += 1;
+                            out.peak_probed = out.peak_probed.max(drift);
+                        } else {
+                            out.warm_demotions += 1;
+                        }
+                        store.release(h);
+                    }
+                    // Unknown/evicted handle: cold start, no error.
+                }
+            }
+            in_flight[w].push_back(j);
+        }
+        // Step one resident session round-robin (all jobs share one
+        // class, so the scheduler's class policy is neutral here).
+        let Some(j) = in_flight[w].pop_front() else {
+            // Idle: jump to the next pending arrival.
+            if let Some(a) =
+                pending.iter().map(|&i| turns[i].arrive_us).min()
+            {
+                clock[w] = clock[w].max(a);
+            }
+            continue;
+        };
+        let kind = phase.peek(step_idx[j], MT_STEPS, hist[j]);
+        if kind == StepKind::Full {
+            out.fulls += 1;
+            if step_idx[j] > 0 {
+                // The full step's probe observes the error the cached
+                // run-up accumulated.
+                out.peak_probed = out.peak_probed.max(acc[j]);
+            }
+            acc[j] = 0.0;
+            hist[j] = (hist[j] + 1).min(3);
+            clock[w] += MT_FULL_US;
+        } else {
+            out.cached += 1;
+            acc[j] += MT_STEP_ERR;
+            clock[w] += MT_CACHED_US;
+        }
+        step_idx[j] += 1;
+        if !seen_first[j] {
+            seen_first[j] = true;
+            out.ttfs_s
+                .push((clock[w] - turns[j].arrive_us) as f64 / 1e6);
+        }
+        if step_idx[j] == MT_STEPS {
+            out.completion_s
+                .push((clock[w] - turns[j].arrive_us) as f64 / 1e6);
+            out.makespan_us = out.makespan_us.max(clock[w]);
+            // Harvest the finished turn's CRF into the store and spawn
+            // the chain's next turn after the user's think time.
+            if turns[j].turn + 1 < MT_TURNS {
+                let parent = if warm {
+                    store.insert(StoredCrf {
+                        model: "edit-sim".into(),
+                        entries: mt_entries(),
+                        home: w,
+                    })
+                } else {
+                    None
+                };
+                turns.push(MtTurn {
+                    chain: turns[j].chain,
+                    turn: turns[j].turn + 1,
+                    arrive_us: clock[w] + MT_THINK_US,
+                    parent,
+                });
+                step_idx.push(0);
+                hist.push(0);
+                acc.push(0.0);
+                seen_first.push(false);
+                pending.push(turns.len() - 1);
+            }
+        } else {
+            in_flight[w].push_back(j);
+        }
+    }
+    out.ttfs_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out.completion_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out.store_entries_end = store.len();
+    out.store_bytes_end = store.bytes();
+    out
+}
+
+fn mt_arm_json(r: &MtSim) -> Json {
+    Json::obj(vec![
+        ("full_steps", Json::num(r.fulls as f64)),
+        ("cached_steps", Json::num(r.cached as f64)),
+        ("peak_probed_error", Json::num(r.peak_probed)),
+        ("warm_starts", Json::num(r.warm_starts as f64)),
+        ("warm_demotions", Json::num(r.warm_demotions as f64)),
+        ("steered_home", Json::num(r.steered_home as f64)),
+        ("ttfs_p50_s", Json::num(percentile(&r.ttfs_s, 50.0))),
+        ("ttfs_p95_s", Json::num(percentile(&r.ttfs_s, 95.0))),
+        (
+            "completion_p95_s",
+            Json::num(percentile(&r.completion_s, 95.0)),
+        ),
+        ("makespan_s", Json::num(r.makespan_us as f64 / 1e6)),
+        ("store_entries_end", Json::num(r.store_entries_end as f64)),
+        ("store_bytes_end", Json::num(r.store_bytes_end as f64)),
+    ])
+}
+
+/// Identical-request dedup over the REAL wire identity: a burst of
+/// concurrent requests collapses to one execution per unique
+/// (batch key, seed, prompt) identity — the same key
+/// `Engine::submit_counted` groups by — with every follower fanned a
+/// bit-identical reply.  (The execute-once and bit-identicality
+/// guarantees themselves are asserted by the engine unit tests and the
+/// multiturn integration test; this fixture pins the identity's
+/// cardinality arithmetic under the bench gate.)
+fn dedup_fixture() -> (usize, usize, usize) {
+    let mk = |id: u64, group: u64| Request {
+        id,
+        model: "edit-sim".into(),
+        policy: "freqca:n=5".into(),
+        priority: Priority::Standard,
+        seed: group,
+        n_steps: 30,
+        cond: vec![group as f32, 1.0, -0.5],
+        ref_img: None,
+        // Reply shape must not split identities: vary it per copy.
+        return_latent: id % 2 == 0,
+        error_budget: None,
+        parent_session: None,
+    };
+    // 12 concurrent requests over 4 unique identities (3 copies each).
+    let reqs: Vec<Request> = (0..12).map(|i| mk(i, i % 4)).collect();
+    let mut groups: std::collections::HashMap<String, usize> =
+        std::collections::HashMap::new();
+    for r in &reqs {
+        let cond_bits: Vec<u32> =
+            r.cond.iter().map(|v| v.to_bits()).collect();
+        let ident =
+            format!("{}|{}|{:?}", r.batch_key(), r.seed, cond_bits);
+        *groups.entry(ident).or_insert(0) += 1;
+    }
+    let executed = groups.len();
+    let followers: usize = groups.values().map(|n| n - 1).sum();
+    (reqs.len(), executed, followers)
+}
+
 /// Drive the mixed-priority qos fixture through a **real `Engine`**
 /// (real runtime, real sessions, the same scheduler the virtual-time
 /// section replays) with wall-clock arrivals, and summarize per-class
@@ -991,6 +1322,7 @@ fn run_live_qos(dir: &str) -> anyhow::Result<Json> {
                     ref_img: None,
                     return_latent: false,
                     error_budget: None,
+                    parent_session: None,
                 },
                 reply: tx,
                 enqueued: Instant::now(),
@@ -1799,6 +2131,106 @@ fn main() -> anyhow::Result<()> {
         ),
     ]);
 
+    // --- cross-request CRF reuse: multi-turn edit chains, cold vs
+    // warm-started, over the real placement/store/schedule (virtual
+    // time), plus the identical-request dedup identity fixture.
+    let mt_phase = FreqCa::new(5, BandSpec::new(Decomp::Dct, 2), 3);
+    let mt_cold = simulate_multi_turn(false, &mt_phase);
+    let mt_warm = simulate_multi_turn(true, &mt_phase);
+    let (dd_served, dd_executed, dd_followers) = dedup_fixture();
+    println!(
+        "\nmulti-turn edit chains ({MT_CHAINS} chains x {MT_TURNS} turns, \
+         {MT_WORKERS} workers):"
+    );
+    println!(
+        "  full computes: cold {} vs warm {} ({} warm starts, {} demoted); \
+         ttfs p95 {:.1} ms -> {:.1} ms; dedup: {} requests -> {} executions",
+        mt_cold.fulls,
+        mt_warm.fulls,
+        mt_warm.warm_starts,
+        mt_warm.warm_demotions,
+        percentile(&mt_cold.ttfs_s, 95.0) * 1e3,
+        percentile(&mt_warm.ttfs_s, 95.0) * 1e3,
+        dd_served,
+        dd_executed,
+    );
+    table.row(vec![
+        "multi-turn full computes (cold -> warm)".into(),
+        format!("{}", mt_cold.fulls),
+        format!("{}", mt_warm.fulls),
+        format!(
+            "{} warm starts / {} demoted",
+            mt_warm.warm_starts, mt_warm.warm_demotions
+        ),
+    ]);
+    // Warm starts must do strictly fewer full computes at an
+    // equal-or-lower worst-case probed error, and the saved fulls must
+    // show up as tail latency (shorter queues), not just less work.
+    assert!(
+        mt_warm.fulls < mt_cold.fulls,
+        "warm-started chains must save full computes \
+         ({} vs {})",
+        mt_warm.fulls,
+        mt_cold.fulls
+    );
+    assert!(
+        mt_warm.peak_probed <= mt_cold.peak_probed,
+        "warm starts must not raise the worst probed error \
+         ({} vs {})",
+        mt_warm.peak_probed,
+        mt_cold.peak_probed
+    );
+    assert!(
+        percentile(&mt_warm.ttfs_s, 95.0)
+            <= percentile(&mt_cold.ttfs_s, 95.0),
+        "warm-started chains must not lose TTFS p95"
+    );
+    assert!(
+        mt_warm.warm_demotions > 0,
+        "the drifted chain must exercise the demotion path"
+    );
+    assert!(
+        mt_warm.steered_home > 0,
+        "placement never steered a warm child to its parent's home"
+    );
+    assert_eq!(
+        (dd_served, dd_executed, dd_followers),
+        (12, 4, 8),
+        "dedup identity must collapse 12 requests into 4 executions"
+    );
+    let multi_turn_json = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("chains", Json::num(MT_CHAINS as f64)),
+                ("turns", Json::num(MT_TURNS as f64)),
+                ("steps", Json::num(MT_STEPS as f64)),
+                ("workers", Json::num(MT_WORKERS as f64)),
+                ("max_in_flight", Json::num(MT_CAP as f64)),
+                ("warm_budget", Json::num(MT_WARM_BUDGET)),
+                ("step_err", Json::num(MT_STEP_ERR)),
+            ]),
+        ),
+        ("cold", mt_arm_json(&mt_cold)),
+        ("warm", mt_arm_json(&mt_warm)),
+        (
+            "dedup",
+            Json::obj(vec![
+                ("requests_served", Json::num(dd_served as f64)),
+                ("requests_executed", Json::num(dd_executed as f64)),
+                ("unique_keys", Json::num(dd_executed as f64)),
+                ("followers", Json::num(dd_followers as f64)),
+            ]),
+        ),
+        (
+            "full_steps_saved_frac",
+            Json::num(
+                mt_cold.fulls.saturating_sub(mt_warm.fulls) as f64
+                    / mt_cold.fulls as f64,
+            ),
+        ),
+    ]);
+
     // --- the same qos fixture through the LIVE engine, when artifacts
     // exist (CI's artifacts job; any box after `make artifacts`).
     let live_json = match live_artifact_dir() {
@@ -1888,6 +2320,7 @@ fn main() -> anyhow::Result<()> {
         ref_img: None,
         return_latent: false,
         error_budget: None,
+        parent_session: None,
     };
     let r = bench("batcher push+drain 256 reqs", &opts, || {
         let mut b = Batcher::new(vec![1, 4], Duration::ZERO, 512);
@@ -1926,6 +2359,7 @@ fn main() -> anyhow::Result<()> {
         ("multi_worker".to_string(), multi_worker_json),
         ("placement_v2".to_string(), placement_v2_json),
         ("feedback".to_string(), feedback_json),
+        ("multi_turn".to_string(), multi_turn_json),
     ];
     if let Some(live) = live_json {
         sections.push(("live".to_string(), live));

@@ -9,11 +9,16 @@
 use anyhow::Result;
 
 use freqca::benchkit::Table;
+use freqca::coordinator::crfstore::{CrfStore, StoredCrf};
 use freqca::harness::Session;
 use freqca::imaging;
 use freqca::quality;
-use freqca::sampler::SampleOpts;
-use freqca::util::Tensor;
+use freqca::sampler::{
+    BatchJob, JobSpec, RunResult, SampleOpts, SamplerSession, WarmStart,
+};
+use freqca::util::{Rng, Tensor};
+use freqca::workload;
+use freqca::policy;
 
 fn main() -> Result<()> {
     std::fs::create_dir_all("results/edits")?;
@@ -80,5 +85,135 @@ fn run_model(model: &str) -> Result<()> {
     println!("\n=== {model} qualitative editing grid (Figs 5/6/9) ===");
     println!("{}", table.render());
     table.save_csv(&format!("results/edits/{model}_scores.csv"))?;
+    run_edit_chains(&s, model)?;
     Ok(())
+}
+
+/// The multi-turn scenario the paper's edit models exist for: a user
+/// iterates on one image across turns.  Each prompt runs a 3-turn edit
+/// chain — the scene drifts a little per turn (`workload::apply_edit`)
+/// — twice per turn: cold (every turn an independent request, the
+/// pre-reuse serving behaviour) and warm (each turn seeds its CRF +
+/// Hermite history from the previous turn's stored final state, the
+/// `parent_session` path).  The store is the real `CrfStore`, so
+/// handle lifecycle (insert/checkout/release) is exercised end to end.
+fn run_edit_chains(s: &Session, model: &str) -> Result<()> {
+    let steps = 50;
+    let desc = "freqca:n=6";
+    let mut store = CrfStore::new(16 << 20);
+    let mut table = Table::new(&[
+        "prompt", "turn", "cold full", "warm full", "cold s", "warm s",
+        "mode",
+    ]);
+    let (mut cold_fulls, mut warm_fulls) = (0usize, 0usize);
+    for idx in 0..3u64 {
+        let mut unit = workload::prompt_unit(idx);
+        let mut rng = Rng::with_stream(0xc4a1, idx);
+        let mut parent: Option<u64> = None;
+        for turn in 0..3u32 {
+            if turn > 0 {
+                unit = workload::apply_edit(&unit, &mut rng);
+            }
+            // Cold control: the same turn as an independent request.
+            let (cold, _, _, _) = run_turn(s, desc, &unit, idx, steps, None)?;
+            // Warm: seeded from the previous turn's stored history (the
+            // eager probe on the first full step validates the seed and
+            // demotes to cold if the edit drifted the features too far).
+            let warm_start = parent.and_then(|h| {
+                store
+                    .checkout(h)
+                    .map(|crf| WarmStart { entries: crf.entries })
+            });
+            let requested = warm_start.is_some();
+            let (warm, hist, started, demoted) =
+                run_turn(s, desc, &unit, idx, steps, warm_start)?;
+            if let Some(h) = parent.take() {
+                store.release(h);
+            }
+            parent = if hist.is_empty() {
+                None
+            } else {
+                store.insert(StoredCrf {
+                    model: model.into(),
+                    entries: hist,
+                    home: 0,
+                })
+            };
+            cold_fulls += cold.full_steps;
+            warm_fulls += warm.full_steps;
+            table.row(vec![
+                idx.to_string(),
+                turn.to_string(),
+                cold.full_steps.to_string(),
+                warm.full_steps.to_string(),
+                format!("{:.3}", cold.wall_s),
+                format!("{:.3}", warm.wall_s),
+                (if started {
+                    "warm"
+                } else if demoted {
+                    "demoted"
+                } else if requested {
+                    "miss"
+                } else {
+                    "cold"
+                })
+                .into(),
+            ]);
+            eprintln!("[{model}] chain {idx} turn {turn} done");
+        }
+    }
+    println!("\n=== {model} 3-turn edit chains (cross-request CRF reuse) ===");
+    println!("{}", table.render());
+    println!(
+        "total full computes across chain turns: cold {cold_fulls} vs \
+         warm-started {warm_fulls}"
+    );
+    table.save_csv(&format!("results/edits/{model}_chains.csv"))?;
+    Ok(())
+}
+
+/// One edit turn at the library level: build the request from the scene
+/// unit, run to completion, and export the final CRF history the next
+/// turn warm-starts from.  Returns (result, exported history,
+/// warm_started, warm_demoted).
+fn run_turn(
+    s: &Session,
+    policy_desc: &str,
+    unit: &[f32],
+    seed: u64,
+    steps: usize,
+    warm_start: Option<WarmStart>,
+) -> Result<(RunResult, Vec<(f64, Vec<f32>)>, bool, bool)> {
+    let cond = workload::cond_vector(unit, s.cfg.cond_dim);
+    let ref_img = if s.cfg.is_edit {
+        Some(
+            workload::render(
+                s.cfg.latent,
+                &workload::scene_from_unit(unit),
+            )
+            .data,
+        )
+    } else {
+        None
+    };
+    let pol = policy::parse_policy(
+        policy_desc,
+        s.decomp()?,
+        s.cfg.grid,
+        s.cfg.k_hist,
+    )?;
+    let batch = BatchJob {
+        cfg: &s.cfg,
+        weights: s.weights.clone(),
+        jobs: vec![JobSpec { cond, ref_img, seed }],
+        n_steps: steps,
+    };
+    let opts = SampleOpts { warm_start, ..SampleOpts::default() };
+    let mut session = SamplerSession::new(&batch, pol, opts)?;
+    session.run_to_completion(&s.rt)?;
+    let hist = session.export_warm_history(0);
+    let started = session.warm_started();
+    let demoted = session.warm_demoted();
+    let r = session.into_results()?.remove(0);
+    Ok((r, hist, started, demoted))
 }

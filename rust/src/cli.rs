@@ -92,6 +92,7 @@ USAGE:
                   [--refresh-concurrency 2] [--dephase-window 8]
                   [--feedback] [--error-budget 0.1] [--probe-sample 1]
                   [--max-resident-models 0] [--steal-after 16]
+                  [--crf-store-bytes 67108864]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
                   [--artifacts DIR]
@@ -100,7 +101,7 @@ USAGE:
   freqca request  [--addr 127.0.0.1:7463] [--model flux-sim]
                   [--policy freqca:n=7] [--priority standard] [--seed 0]
                   [--steps 50] [--prompt IDX] [--cond-dim 64]
-                  [--error-budget 0.1]
+                  [--error-budget 0.1] [--parent-session HANDLE]
   freqca models   [--artifacts DIR]
   freqca metrics  [--addr 127.0.0.1:7463]
   freqca help
@@ -132,6 +133,16 @@ Error feedback (serve --feedback / --error-budget E): per-band
   resolution); when the subsampled estimate's confidence bound
   straddles the budget, the step re-probes at full resolution so
   refresh decisions never ride on sampling noise.
+Cross-request CRF reuse (serve --crf-store-bytes B): completed sessions
+  park their final CRF + Hermite history in a pool-wide host-RAM store
+  (LRU within B bytes; 0 disables).  Replies carry a `session` handle;
+  `request --parent-session HANDLE` warm-starts the next edit turn from
+  that history — validated by an eager error probe on the first full
+  step, demoting to a cold start (counted, bit-identical) when the
+  parent has drifted.  Naming another model's handle is a structured
+  error; an unknown or evicted handle degrades to a cold start.
+  Identical concurrent requests (same batch key, seed, and prompt)
+  dedup into one execution with fanned-out, bit-identical replies.
 ";
 
 #[cfg(test)]

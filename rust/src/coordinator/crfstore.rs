@@ -1,0 +1,342 @@
+//! Pool-wide CRF warm-start store (cross-request reuse).
+//!
+//! The source paper validates FreqCa on editing models
+//! (FLUX.1-Kontext-dev, Qwen-Image-Edit) where a user iterates on the
+//! *same* image across turns — and its §4.4.1 result is that the
+//! Cumulative Residual Feature is ~99% cheaper to keep than layerwise
+//! caches.  That is exactly what makes keeping it *across* requests
+//! affordable: this store is a bounded, byte-budgeted host-RAM map from
+//! a completed session's handle to that request's final CRF history
+//! (oldest-first `(s, [T, D])` slices — one request's rows of the
+//! batch tensor), so a follow-up request carrying
+//! `parent_session: <handle>` can seed its `CrfCache` + Hermite history
+//! instead of cold-starting.  The warm start is *validated*, never
+//! trusted: the sampler probes the seeded history against the first
+//! full step's fresh CRF and demotes to a cold start when the parent
+//! has drifted past the error budget (see `sampler::WarmStart`).
+//!
+//! Semantics:
+//!
+//! * **Byte budget, LRU** — entries are evicted coldest-first to stay
+//!   within `--crf-store-bytes`; an entry larger than the whole budget
+//!   is rejected outright (and counted), never silently truncated.
+//! * **Pinning** — a checkout pins the entry for the duration of the
+//!   child's warm start (checkout → validate at the first full step →
+//!   release), so the parent history cannot be evicted out from under
+//!   a session that is about to validate against it.  Eviction skips
+//!   pinned entries.
+//! * **Per-model + per-home accounting** — byte totals per model and
+//!   per harvesting worker, published as `crf_store_bytes{,_w*}` /
+//!   `crf_store_entries{,_w*}` gauges and carried on [`WorkerLoad`]
+//!   (`coordinator::placement`) so placement can steer a child toward
+//!   the worker that already holds its parent's CRF (`home`).
+//! * **Unknown / evicted handles degrade** — a checkout miss is a
+//!   counter, not an error; the engine falls back to a cold start and
+//!   bumps `warm_start_misses`.
+//!
+//! The store is shared across the pool behind a mutex (`SharedCrfStore`);
+//! every operation is O(entries) at worst and touches only host RAM,
+//! so the lock is never held across a step.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Default `--crf-store-bytes` budget: enough for thousands of
+/// test-scale histories, small next to one model's weights.
+pub const DEFAULT_CRF_STORE_BYTES: usize = 64 << 20;
+
+/// One completed request's harvested CRF history: the model it came
+/// from, oldest-first `(normalized time s, [T, D] feature slice)`
+/// entries (one request's rows of the session's `[B, T, D]` cache
+/// tensors), and the worker that harvested it (the placement steering
+/// hint).
+#[derive(Debug, Clone)]
+pub struct StoredCrf {
+    pub model: String,
+    pub entries: Vec<(f64, Vec<f32>)>,
+    pub home: usize,
+}
+
+impl StoredCrf {
+    /// Accounted footprint: feature payload + per-entry timestamp.
+    pub fn bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|(_, v)| v.len() * std::mem::size_of::<f32>() + 8)
+            .sum()
+    }
+}
+
+#[derive(Debug)]
+struct Slot {
+    crf: StoredCrf,
+    bytes: usize,
+    pins: u32,
+}
+
+/// The warm-start store.  See the module docs for semantics.
+#[derive(Debug)]
+pub struct CrfStore {
+    budget: usize,
+    next_handle: u64,
+    slots: HashMap<u64, Slot>,
+    /// Handles coldest-first (front = next eviction candidate).
+    lru: VecDeque<u64>,
+    bytes: usize,
+    per_model: HashMap<String, usize>,
+    evictions: u64,
+    misses: u64,
+    rejected: u64,
+}
+
+/// The pool-shared handle every engine worker holds.
+pub type SharedCrfStore = Arc<Mutex<CrfStore>>;
+
+impl CrfStore {
+    /// `budget_bytes == 0` disables the store: inserts return `None`
+    /// and every checkout is a (counted) miss.
+    pub fn new(budget_bytes: usize) -> CrfStore {
+        CrfStore {
+            budget: budget_bytes,
+            next_handle: 1,
+            slots: HashMap::new(),
+            lru: VecDeque::new(),
+            bytes: 0,
+            per_model: HashMap::new(),
+            evictions: 0,
+            misses: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn shared(budget_bytes: usize) -> SharedCrfStore {
+        Arc::new(Mutex::new(CrfStore::new(budget_bytes)))
+    }
+
+    /// Admit one completed request's history; returns its handle, or
+    /// `None` when the store is disabled or the entry cannot fit even
+    /// after evicting every unpinned entry (counted in `rejected`).
+    pub fn insert(&mut self, crf: StoredCrf) -> Option<u64> {
+        let bytes = crf.bytes();
+        if self.budget == 0 || bytes == 0 || bytes > self.budget {
+            self.rejected += 1;
+            return None;
+        }
+        while self.bytes + bytes > self.budget {
+            if !self.evict_coldest_unpinned() {
+                // Everything left is pinned mid-warm-start: refuse the
+                // insert rather than breach the byte budget.
+                self.rejected += 1;
+                return None;
+            }
+        }
+        let handle = self.next_handle;
+        self.next_handle += 1;
+        self.bytes += bytes;
+        *self.per_model.entry(crf.model.clone()).or_insert(0) += bytes;
+        self.slots.insert(handle, Slot { crf, bytes, pins: 0 });
+        self.lru.push_back(handle);
+        Some(handle)
+    }
+
+    fn evict_coldest_unpinned(&mut self) -> bool {
+        let Some(pos) = self
+            .lru
+            .iter()
+            .position(|h| self.slots[h].pins == 0)
+        else {
+            return false;
+        };
+        let handle = self.lru.remove(pos).expect("position in range");
+        let slot = self.slots.remove(&handle).expect("lru handle live");
+        self.bytes -= slot.bytes;
+        if let Some(b) = self.per_model.get_mut(&slot.crf.model) {
+            *b = b.saturating_sub(slot.bytes);
+            if *b == 0 {
+                self.per_model.remove(&slot.crf.model);
+            }
+        }
+        self.evictions += 1;
+        true
+    }
+
+    /// Check a parent's history out for a child warm start: pins the
+    /// entry (eviction-proof until [`Self::release`]) and returns a
+    /// clone the caller can tile into the child's batch.  Unknown or
+    /// already-evicted handles count a miss and return `None`.
+    pub fn checkout(&mut self, handle: u64) -> Option<StoredCrf> {
+        let Some(slot) = self.slots.get_mut(&handle) else {
+            self.misses += 1;
+            return None;
+        };
+        slot.pins += 1;
+        let crf = slot.crf.clone();
+        // Touch: a checked-out parent is hot again.
+        if let Some(pos) = self.lru.iter().position(|h| *h == handle) {
+            self.lru.remove(pos);
+            self.lru.push_back(handle);
+        }
+        Some(crf)
+    }
+
+    /// Drop one pin (the child's warm start resolved — accepted or
+    /// demoted).  Unknown handles are ignored.
+    pub fn release(&mut self, handle: u64) {
+        if let Some(slot) = self.slots.get_mut(&handle) {
+            slot.pins = slot.pins.saturating_sub(1);
+        }
+    }
+
+    /// Model a live handle was harvested from (the engine rejects a
+    /// `parent_session` whose model differs from the request's with a
+    /// structured error instead of warm-starting across models).
+    pub fn model_of(&self, handle: u64) -> Option<&str> {
+        self.slots.get(&handle).map(|s| s.crf.model.as_str())
+    }
+
+    /// Worker that harvested a live handle (placement steering hint).
+    pub fn home(&self, handle: u64) -> Option<usize> {
+        self.slots.get(&handle).map(|s| s.crf.home)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn bytes_for_model(&self, model: &str) -> usize {
+        self.per_model.get(model).copied().unwrap_or(0)
+    }
+
+    /// Bytes harvested by worker `home` (per-worker gauge source).
+    pub fn bytes_for_home(&self, home: usize) -> usize {
+        self.slots
+            .values()
+            .filter(|s| s.crf.home == home)
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    /// Entries harvested by worker `home` (per-worker gauge source).
+    pub fn entries_for_home(&self, home: usize) -> usize {
+        self.slots.values().filter(|s| s.crf.home == home).count()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An entry of `n` f32 features accounts n*4 + 8 bytes.
+    fn crf(model: &str, home: usize, n: usize, fill: f32) -> StoredCrf {
+        StoredCrf {
+            model: model.into(),
+            entries: vec![(0.5, vec![fill; n])],
+            home,
+        }
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_order() {
+        // Budget fits exactly two 48-byte entries.
+        let mut s = CrfStore::new(96);
+        let h1 = s.insert(crf("m", 0, 10, 1.0)).unwrap();
+        let h2 = s.insert(crf("m", 0, 10, 2.0)).unwrap();
+        assert_eq!(s.bytes(), 96);
+        let h3 = s.insert(crf("m", 0, 10, 3.0)).unwrap();
+        // h1 (coldest) was evicted; h2/h3 survive.
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.evictions(), 1);
+        assert!(s.checkout(h1).is_none());
+        assert_eq!(s.misses(), 1);
+        assert_eq!(s.checkout(h2).unwrap().entries[0].1[0], 2.0);
+        assert_eq!(s.checkout(h3).unwrap().entries[0].1[0], 3.0);
+    }
+
+    #[test]
+    fn checkout_touch_reorders_eviction() {
+        let mut s = CrfStore::new(96);
+        let h1 = s.insert(crf("m", 0, 10, 1.0)).unwrap();
+        let h2 = s.insert(crf("m", 0, 10, 2.0)).unwrap();
+        // Touch h1 (and release so it is evictable again): h2 becomes
+        // the coldest and is the one to go.
+        assert!(s.checkout(h1).is_some());
+        s.release(h1);
+        s.insert(crf("m", 0, 10, 3.0)).unwrap();
+        assert!(s.model_of(h1).is_some());
+        assert!(s.model_of(h2).is_none());
+    }
+
+    #[test]
+    fn pinned_parent_survives_pressure() {
+        let mut s = CrfStore::new(96);
+        let h1 = s.insert(crf("m", 0, 10, 1.0)).unwrap();
+        let h2 = s.insert(crf("m", 0, 10, 2.0)).unwrap();
+        // A child checks h1 out (mid-warm-start): pressure must evict
+        // h2 instead, even though h1 is older.
+        assert!(s.checkout(h1).is_some());
+        let h3 = s.insert(crf("m", 0, 10, 3.0)).unwrap();
+        assert!(s.model_of(h1).is_some(), "pinned entry evicted");
+        assert!(s.model_of(h2).is_none());
+        // With everything pinned, an insert is refused, not over-budget.
+        assert!(s.checkout(h3).is_some());
+        assert!(s.insert(crf("m", 0, 10, 4.0)).is_none());
+        assert_eq!(s.rejected(), 1);
+        assert!(s.bytes() <= s.budget());
+        // Released pins make room again.
+        s.release(h1);
+        s.release(h3);
+        assert!(s.insert(crf("m", 0, 10, 4.0)).is_some());
+    }
+
+    #[test]
+    fn disabled_and_oversized_inserts_are_rejected() {
+        let mut s = CrfStore::new(0);
+        assert!(s.insert(crf("m", 0, 10, 1.0)).is_none());
+        assert!(s.checkout(7).is_none());
+        assert_eq!(s.misses(), 1);
+        let mut s = CrfStore::new(32);
+        assert!(s.insert(crf("m", 0, 10, 1.0)).is_none(), "48 B > 32 B");
+        assert_eq!(s.rejected(), 1);
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn per_model_and_per_home_accounting() {
+        let mut s = CrfStore::new(1 << 20);
+        let ha = s.insert(crf("a", 0, 10, 1.0)).unwrap();
+        s.insert(crf("a", 1, 10, 2.0)).unwrap();
+        s.insert(crf("b", 1, 20, 3.0)).unwrap();
+        assert_eq!(s.bytes_for_model("a"), 96);
+        assert_eq!(s.bytes_for_model("b"), 88);
+        assert_eq!(s.bytes_for_home(0), 48);
+        assert_eq!(s.bytes_for_home(1), 48 + 88);
+        assert_eq!(s.entries_for_home(1), 2);
+        assert_eq!(s.home(ha), Some(0));
+        assert_eq!(s.model_of(ha), Some("a"));
+        assert_eq!(s.bytes(), s.bytes_for_home(0) + s.bytes_for_home(1));
+    }
+}

@@ -53,6 +53,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Error, Result};
 
 use super::batcher::Pending;
+use super::crfstore::{CrfStore, SharedCrfStore, StoredCrf};
 use super::placement::{PlaceInput, Placement, WorkerLoad};
 use super::residency::Residency;
 use super::router::{RouteResult, Router};
@@ -65,7 +66,9 @@ use crate::metrics::Metrics;
 use crate::model::weights;
 use crate::policy;
 use crate::runtime::{discover_models, Runtime};
-use crate::sampler::{BatchJob, JobSpec, SampleOpts, SamplerSession, StepOutcome};
+use crate::sampler::{
+    BatchJob, JobSpec, SampleOpts, SamplerSession, StepOutcome, WarmStart,
+};
 use crate::util::Arena;
 
 /// Default idle ticks before a pool worker advertises hunger on the
@@ -77,6 +80,51 @@ pub struct WorkItem {
     pub request: Request,
     pub reply: Sender<Response>,
     pub enqueued: Instant,
+}
+
+/// FNV-1a over a request's dense inputs (exact f32 bit patterns of
+/// `cond`, a separator, then `ref_img`), for the identical-request
+/// dedup key.  Lengths ride in [`dedup_key`] alongside the hash, so
+/// only a genuine 64-bit collision between same-length inputs could
+/// alias two different prompts — negligible against the window (the
+/// leader's queue residency) the key lives for.
+fn prompt_fingerprint(req: &Request) -> u64 {
+    fn feed(h: &mut u64, b: u8) {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3); // FNV prime
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV offset basis
+    for v in &req.cond {
+        for b in v.to_bits().to_le_bytes() {
+            feed(&mut h, b);
+        }
+    }
+    feed(&mut h, 0xfe);
+    if let Some(r) = &req.ref_img {
+        for v in r {
+            for b in v.to_bits().to_le_bytes() {
+                feed(&mut h, b);
+            }
+        }
+    }
+    h
+}
+
+/// Exact identity of a request for dedup: everything that decides the
+/// computed result.  The batch key covers model, policy, step count,
+/// class, error budget and parent session; the seed fixes the noise;
+/// the fingerprint (plus input lengths) fixes the conditioning and
+/// reference image.  `return_latent` is deliberately absent — it only
+/// shapes the reply, and each follower keeps its own.
+fn dedup_key(req: &Request) -> String {
+    format!(
+        "{}|{}|{}|{}|{:016x}",
+        req.batch_key(),
+        req.seed,
+        req.cond.len(),
+        req.ref_img.as_ref().map(|r| r.len()).unwrap_or(0),
+        prompt_fingerprint(req)
+    )
 }
 
 /// The placement load board: one [`WorkerLoad`] slot per worker,
@@ -225,6 +273,10 @@ struct Waiter {
     /// Enqueue -> first step completed; filled on the session's first step.
     ttfs_s: Option<f64>,
     enqueued: Instant,
+    /// Which batch member's result this waiter receives.  Dedup
+    /// followers share a member with their leader, so waiters are no
+    /// longer 1:1 with batch slots — each indexes into the results.
+    job: usize,
 }
 
 /// An admitted batch being sampled step-by-step.  Self-contained: when
@@ -245,6 +297,11 @@ struct InFlight {
     /// Scheduling state: class, credits, last tick run, deadline
     /// surrogate (enqueue time of the oldest member), cache phase.
     sched: SchedState<Instant>,
+    /// Warm-start parent handle pinned in the CRF store while this
+    /// child validates (released after the first step, when the payload
+    /// has been accepted or demoted — the pin keeps LRU pressure from
+    /// evicting a parent out from under a queued child).
+    warm_parent: Option<u64>,
 }
 
 /// Is `model` pinned by any in-flight or parked session?  (The
@@ -289,6 +346,22 @@ pub struct Engine {
     /// per-request `error_budget` overrides the budget (and opts a
     /// request in even when the serve-level default is off).
     feedback: Option<FeedbackConfig>,
+    /// Pool-shared CRF warm-start store: completed sessions deposit
+    /// their final CRF history here under a handle the client can pass
+    /// back as `parent_session` on the next turn (`super::crfstore`).
+    store: SharedCrfStore,
+    /// Identical-request dedup: exact identity key -> internal id of
+    /// the *queued* leader request.  Live only while the leader sits in
+    /// the batcher; identical arrivals in that window attach as
+    /// followers instead of executing.
+    dedup: HashMap<String, u64>,
+    /// Reverse map for cleanup when a leader leaves the queue
+    /// (admission, eviction, donation).
+    dedup_key_of: HashMap<u64, String>,
+    /// Followers waiting on a queued leader, by the leader's internal
+    /// id.  A follower keeps its original `WorkItem` (client id, reply
+    /// channel, true enqueue time) and never enters the router.
+    followers: HashMap<u64, Vec<WorkItem>>,
     /// Running peak of the CRF bytes held by this worker's sessions.
     crf_peak_bytes: usize,
     /// Worker-wide host-buffer arena every session draws step scratch
@@ -330,6 +403,7 @@ impl Engine {
             metrics,
             worker,
             0,
+            CrfStore::shared(super::crfstore::DEFAULT_CRF_STORE_BYTES),
         )
     }
 
@@ -352,6 +426,7 @@ impl Engine {
         metrics: Arc<Metrics>,
         worker: WorkerContext,
         max_resident_models: usize,
+        store: SharedCrfStore,
     ) -> Result<Engine> {
         let rt = Runtime::new(artifact_dir)?;
         let configs = discover_models(artifact_dir)?;
@@ -398,6 +473,10 @@ impl Engine {
             sched,
             shed_seen: 0,
             feedback,
+            store,
+            dedup: HashMap::new(),
+            dedup_key_of: HashMap::new(),
+            followers: HashMap::new(),
             crf_peak_bytes: 0,
             arena: Rc::new(Arena::new()),
             deferral: None,
@@ -480,6 +559,55 @@ impl Engine {
         self.next_internal_id += 1;
         let client_id = request.id;
         request.id = internal;
+        // Structured rejection: a `parent_session` minted by a
+        // *different model* is a client bug, not a degradable cache
+        // miss — reply with a clear error instead of silently cold
+        // starting.  (An unknown/evicted handle *does* degrade: it is
+        // checked again at session build, where the miss is counted.)
+        if let Some(h) = request.parent_session {
+            let other = {
+                let store = self.store.lock().unwrap();
+                store
+                    .model_of(h)
+                    .filter(|m| *m != request.model)
+                    .map(String::from)
+            };
+            if let Some(other) = other {
+                self.metrics.bump("warm_start_rejected", 1);
+                let _ = item.reply.send(Response::err(
+                    client_id,
+                    format!(
+                        "parent_session {h} was created by model \
+                         '{other}', not '{}'",
+                        request.model
+                    ),
+                ));
+                return;
+            }
+        }
+        // Identical-request dedup: an exact duplicate of a still-queued
+        // request attaches to it as a *follower* — it never enters the
+        // router, and when the leader's session completes the follower
+        // receives the same batch member's (bit-identical) result.
+        let dkey = dedup_key(&request);
+        if let Some(&leader) = self.dedup.get(&dkey) {
+            if fresh {
+                self.metrics.bump("requests_admitted", 1);
+            }
+            self.metrics.bump("dedup_followers", 1);
+            let flock = self.followers.entry(leader).or_default();
+            if flock.is_empty() {
+                // A leader is only a leader once someone follows it.
+                self.metrics.bump("dedup_leaders", 1);
+            }
+            request.id = client_id;
+            flock.push(WorkItem {
+                request,
+                reply: item.reply,
+                enqueued: item.enqueued,
+            });
+            return;
+        }
         // The true enqueue time rides along so batching deadlines and
         // queue-wait metrics measure from client arrival, not from the
         // placement/admission hop.
@@ -487,6 +615,8 @@ impl Engine {
             RouteResult::Queued => {
                 self.replies
                     .insert(internal, (item.reply, item.enqueued, client_id));
+                self.dedup.insert(dkey.clone(), internal);
+                self.dedup_key_of.insert(internal, dkey);
                 if fresh {
                     self.metrics.bump("requests_admitted", 1);
                 }
@@ -494,6 +624,8 @@ impl Engine {
             RouteResult::QueuedEvicting(victim) => {
                 self.replies
                     .insert(internal, (item.reply, item.enqueued, client_id));
+                self.dedup.insert(dkey.clone(), internal);
+                self.dedup_key_of.insert(internal, dkey);
                 if fresh {
                     self.metrics.bump("requests_admitted", 1);
                 }
@@ -503,6 +635,14 @@ impl Engine {
                 if let Some((tx, _enq, cid)) = self.replies.remove(&victim) {
                     let _ = tx.send(Response::err(
                         cid,
+                        "evicted by higher-priority request (shed)".into(),
+                    ));
+                }
+                // Its followers fall with it.
+                for f in self.dedup_detach(victim) {
+                    self.metrics.bump("requests_evicted", 1);
+                    let _ = f.reply.send(Response::err(
+                        f.request.id,
                         "evicted by higher-priority request (shed)".into(),
                     ));
                 }
@@ -525,6 +665,19 @@ impl Engine {
                 let _ = item.reply.send(Response::err(client_id, msg));
             }
         }
+    }
+
+    /// Retire a leader from the dedup registry (it is leaving the
+    /// queue: admitted, evicted, or donated) and return its followers.
+    /// The key is removed only if it still maps to this leader — a
+    /// later identical request may have become the new leader.
+    fn dedup_detach(&mut self, internal: u64) -> Vec<WorkItem> {
+        if let Some(key) = self.dedup_key_of.remove(&internal) {
+            if self.dedup.get(&key) == Some(&internal) {
+                self.dedup.remove(&key);
+            }
+        }
+        self.followers.remove(&internal).unwrap_or_default()
     }
 
     /// One scheduler tick: fill capacity (resume/admit/preempt), publish
@@ -811,6 +964,18 @@ impl Engine {
             .iter()
             .map(|s| s.session.error_score_fp())
             .sum();
+        // CRF warm-start store occupancy: this worker's slice (entries
+        // whose sessions completed here — what parent-home steering
+        // reads) and the pool totals for the plain aggregate gauges.
+        let (store_bytes_w, store_entries_w, store_bytes, store_entries) = {
+            let st = self.store.lock().unwrap();
+            (
+                st.bytes_for_home(self.worker.id),
+                st.entries_for_home(self.worker.id),
+                st.bytes(),
+                st.len(),
+            )
+        };
         // Overwrites the pool's optimistic queued bumps with real
         // depths — the board self-corrects every tick.
         *self.worker.board[self.worker.id].lock().unwrap() = WorkerLoad {
@@ -827,6 +992,8 @@ impl Engine {
             resident_bytes,
             ledger_share_pm,
             err_score_fp,
+            crf_store_bytes: store_bytes_w,
+            crf_store_entries: store_entries_w,
         };
         self.gauge("in_flight_sessions", self.sessions.len() as f64);
         self.gauge("parked_sessions", self.parked.len() as f64);
@@ -840,6 +1007,8 @@ impl Engine {
         self.gauge("err_score_fp", err_score_fp as f64);
         self.gauge("arena_bytes", self.arena.bytes() as f64);
         self.gauge("arena_hit_rate", self.arena.hit_rate());
+        self.gauge("crf_store_bytes", store_bytes_w as f64);
+        self.gauge("crf_store_entries", store_entries_w as f64);
         for (class, depth) in Priority::ALL.iter().zip(queued_by_class) {
             self.gauge(
                 &format!("queued_requests_{}", class.name()),
@@ -901,6 +1070,11 @@ impl Engine {
             }
             self.metrics.set_gauge("arena_bytes", arena_bytes);
             self.metrics.set_gauge("arena_hit_rate", arena_rate / n as f64);
+            // The store is pool-shared: its totals *are* the pool
+            // aggregates (per-worker gauges carry the home slices).
+            self.metrics.set_gauge("crf_store_bytes", store_bytes as f64);
+            self.metrics
+                .set_gauge("crf_store_entries", store_entries as f64);
             for (class, depth) in
                 Priority::ALL.iter().zip(queued_per_class)
             {
@@ -970,6 +1144,12 @@ impl Engine {
             // Queued entries always have a reply slot; defensive.
             return;
         };
+        // The leader is leaving this worker, so its followers detach
+        // and re-enter the local admission path below: the first
+        // re-collapses onto a new local leader (or becomes one), so
+        // the donation costs at most one extra execution pool-wide —
+        // never one per follower.
+        let followers = self.dedup_detach(pending.request.id);
         let mut request = pending.request;
         request.id = client_id;
         let item = WorkItem { request, reply: tx, enqueued };
@@ -984,6 +1164,9 @@ impl Engine {
                 // already counted as admitted once).
                 self.submit_counted(item, false);
             }
+        }
+        for f in followers {
+            self.submit_counted(f, false);
         }
     }
 
@@ -1007,7 +1190,7 @@ impl Engine {
         let class = batch[0].request.priority;
         let mut waiters = Vec::with_capacity(batch.len());
         let mut oldest = now;
-        for p in &batch {
+        for (k, p) in batch.iter().enumerate() {
             if let Some((tx, enq, client_id)) = self.replies.remove(&p.request.id)
             {
                 let queue_s = now.duration_since(enq).as_secs_f64();
@@ -1021,6 +1204,25 @@ impl Engine {
                     queue_s,
                     ttfs_s: None,
                     enqueued: enq,
+                    job: k,
+                });
+            }
+            // Dedup followers ride their leader's batch slot: same
+            // result, own client identity, own queue-wait/TTFS/latency
+            // accounting from their own enqueue time.
+            for f in self.dedup_detach(p.request.id) {
+                let queue_s = now.duration_since(f.enqueued).as_secs_f64();
+                self.metrics.record_queue_wait(queue_s);
+                self.metrics.record_class("queue_wait_s", class.name(), queue_s);
+                oldest = oldest.min(f.enqueued);
+                waiters.push(Waiter {
+                    tx: f.reply,
+                    client_id: f.request.id,
+                    return_latent: f.request.return_latent,
+                    queue_s,
+                    ttfs_s: None,
+                    enqueued: f.enqueued,
+                    job: k,
                 });
             }
         }
@@ -1028,7 +1230,7 @@ impl Engine {
             .ensure_resident(model)
             .and_then(|weights| self.build_session(model, &batch, weights));
         match built {
-            Ok(session) => {
+            Ok((session, warm_parent)) => {
                 self.sessions.push(InFlight {
                     session,
                     waiters,
@@ -1036,6 +1238,7 @@ impl Engine {
                     model: model.to_string(),
                     started: now,
                     sched: self.sched.admit(class, oldest),
+                    warm_parent,
                 });
             }
             Err(e) => {
@@ -1100,12 +1303,16 @@ impl Engine {
         Ok(buf)
     }
 
+    /// Build the sampler session for one batch.  Returns the session
+    /// and, when it warm-starts, the parent handle checked out (pinned)
+    /// from the CRF store — the caller keeps it on the `InFlight` and
+    /// releases it once validation has run.
     fn build_session(
         &self,
         model: &str,
         batch: &[Pending],
         weights: Rc<xla::PjRtBuffer>,
-    ) -> Result<SamplerSession<'static>> {
+    ) -> Result<(SamplerSession<'static>, Option<u64>)> {
         let cfg = self
             .router
             .config(model)
@@ -1137,15 +1344,52 @@ impl Engine {
             }),
             (None, None) => None,
         };
-        SamplerSession::new(
+        // Warm start: check the parent's final CRF out of the store
+        // (pinning it against eviction until validation).  A missing
+        // handle — evicted, unknown, or a model mismatch that raced
+        // past the submit-time check — degrades to a cold start,
+        // counted; the batch key includes the parent, so it is
+        // batch-uniform.
+        let mut warm_parent = None;
+        let warm_start = first.parent_session.and_then(|h| {
+            let mut store = self.store.lock().unwrap();
+            match store.checkout(h) {
+                Some(crf) if crf.model == cfg.name => {
+                    warm_parent = Some(h);
+                    Some(WarmStart { entries: crf.entries })
+                }
+                Some(_) => {
+                    store.release(h);
+                    self.metrics.bump("warm_start_misses", 1);
+                    None
+                }
+                None => {
+                    self.metrics.bump("warm_start_misses", 1);
+                    None
+                }
+            }
+        });
+        let built = SamplerSession::new(
             &bj,
             pol,
             SampleOpts {
                 feedback,
                 arena: Some(self.arena.clone()),
+                warm_start,
                 ..SampleOpts::default()
             },
-        )
+        );
+        match built {
+            Ok(session) => Ok((session, warm_parent)),
+            Err(e) => {
+                // The session never existed, so nothing will release
+                // the pin later.
+                if let Some(h) = warm_parent {
+                    self.store.lock().unwrap().release(h);
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Advance session `idx` by one step; complete or fail it as needed.
@@ -1196,6 +1440,17 @@ impl Engine {
                         self.metrics.record_ttfs(ttfs);
                         self.metrics.record_class("ttfs_s", class.name(), ttfs);
                     }
+                    // Warm-start validation ran on this first (full)
+                    // step: count the verdict and release the parent's
+                    // store pin.
+                    if let Some(h) = self.sessions[idx].warm_parent.take() {
+                        self.store.lock().unwrap().release(h);
+                    }
+                    if self.sessions[idx].session.warm_started() {
+                        self.metrics.bump("warm_starts", 1);
+                    } else if self.sessions[idx].session.warm_demoted() {
+                        self.metrics.bump("warm_start_demotions", 1);
+                    }
                 }
                 if done {
                     self.complete_session(idx);
@@ -1211,13 +1466,37 @@ impl Engine {
     fn complete_session(&mut self, idx: usize) {
         let inflight = self.sessions.swap_remove(idx);
         let latency_s = inflight.started.elapsed().as_secs_f64();
-        let InFlight { session, waiters, class, .. } = inflight;
+        let InFlight { session, waiters, class, model, warm_parent, .. } =
+            inflight;
+        // Defensive: a session completed without ever stepping (or its
+        // first step never reached the accounting above) still owes the
+        // store its pin back.
+        if let Some(h) = warm_parent {
+            self.store.lock().unwrap().release(h);
+        }
         // Defense-in-depth counter: stays 0 while the controller's
         // refresh override is intact (see feedback::controller).
         let breaches = session.feedback_breaches();
         if breaches > 0 {
             self.metrics.bump("error_budget_breaches", breaches);
         }
+        let warm_started = session.warm_started();
+        // Harvest the final CRF history into the warm-start store, one
+        // handle per batch member (each member's [T, D] slice is its
+        // own future parent), before the session is consumed.
+        let handles: Vec<Option<u64>> = (0..session.batch_size())
+            .map(|j| {
+                let entries = session.export_warm_history(j);
+                if entries.is_empty() {
+                    return None;
+                }
+                self.store.lock().unwrap().insert(StoredCrf {
+                    model: model.clone(),
+                    entries,
+                    home: self.worker.id,
+                })
+            })
+            .collect();
         let results = match session.into_results() {
             Ok(r) => r,
             Err(e) => {
@@ -1237,7 +1516,10 @@ impl Engine {
             self.metrics.bump("full_steps", first.full_steps as u64);
             self.metrics.bump("cached_steps", first.cached_steps as u64);
         }
-        for (w, r) in waiters.into_iter().zip(results) {
+        // Waiters index into the results (dedup followers share their
+        // leader's slot), so this is no longer a 1:1 zip.
+        for w in waiters {
+            let r = &results[w.job];
             self.metrics.record_request(latency_s);
             self.metrics
                 .record_class("completion_s", class.name(), latency_s);
@@ -1253,10 +1535,12 @@ impl Engine {
                 flops: r.flops,
                 cache_peak_bytes: r.cache_peak_bytes,
                 latent: if w.return_latent {
-                    Some(r.latent.data)
+                    Some(r.latent.data.clone())
                 } else {
                     None
                 },
+                session: handles[w.job],
+                warm_started,
             };
             let _ = w.tx.send(resp);
         }
@@ -1266,6 +1550,9 @@ impl Engine {
     /// serves all members, so there is no per-member salvage).
     fn fail_session(&mut self, idx: usize, e: Error) {
         let inflight = self.sessions.swap_remove(idx);
+        if let Some(h) = inflight.warm_parent {
+            self.store.lock().unwrap().release(h);
+        }
         self.metrics.bump("batch_errors", 1);
         for w in inflight.waiters {
             let _ = w
@@ -1399,6 +1686,9 @@ pub struct WorkerPool {
     /// Serve-level error feedback is on: every request is
     /// refresh-hungry for placement steering.
     hot_default: bool,
+    /// Pool-shared CRF warm-start store (placement reads the parent's
+    /// home worker from it to steer warm-started children).
+    store: SharedCrfStore,
 }
 
 impl WorkerPool {
@@ -1414,10 +1704,12 @@ impl WorkerPool {
         workers: usize,
         max_resident_models: usize,
         steal_after: u64,
+        crf_store_bytes: usize,
         warmup: &[String],
     ) -> Result<WorkerPool> {
         let n = workers.max(1);
         let ledger = DephaseLedger::from_config(&qos);
+        let store = CrfStore::shared(crf_store_bytes);
         let board: LoadBoard = Arc::new(
             (0..n).map(|_| Mutex::new(WorkerLoad::default())).collect(),
         );
@@ -1436,6 +1728,7 @@ impl WorkerPool {
             let dir = artifact_dir.to_string();
             let worker_metrics = metrics.clone();
             let warm: Vec<String> = warmup.to_vec();
+            let worker_store = store.clone();
             let ready = ready_tx.clone();
             let thread = std::thread::Builder::new()
                 .name(format!("freqca-worker-{id}"))
@@ -1450,6 +1743,7 @@ impl WorkerPool {
                         worker_metrics,
                         ctx,
                         max_resident_models,
+                        worker_store,
                     )
                     .and_then(|mut engine| {
                         for m in &warm {
@@ -1519,6 +1813,7 @@ impl WorkerPool {
             models,
             model_slots,
             hot_default: feedback.is_some(),
+            store,
         })
     }
 
@@ -1542,6 +1837,14 @@ impl WorkerPool {
         let key = item.request.batch_key();
         let snapshot: Vec<WorkerLoad> =
             self.board.iter().map(|l| *l.lock().unwrap()).collect();
+        // Warm-start steering: prefer the worker whose completed
+        // session minted the parent's CRF (the store is host-RAM and
+        // pool-shared, so any worker *can* serve the child — the home
+        // is a locality hint the score discounts, not a constraint).
+        let parent_home = item
+            .request
+            .parent_session
+            .and_then(|h| self.store.lock().unwrap().home(h));
         let input = PlaceInput {
             key: &key,
             class,
@@ -1549,6 +1852,7 @@ impl WorkerPool {
             // Refresh-hungry: this request's session will contend for
             // de-phase window tokens (error-feedback control plane).
             hot: self.hot_default || item.request.error_budget.is_some(),
+            parent_home,
         };
         let w = self.placement.place(&input, &snapshot);
         self.board[w].lock().unwrap().queued_by_class[class.slot()] += 1;
@@ -1599,6 +1903,7 @@ mod tests {
                     ref_img: None,
                     return_latent: false,
                     error_budget: None,
+                    parent_session: None,
                 },
                 reply: tx,
                 enqueued: Instant::now(),
@@ -1645,6 +1950,37 @@ mod tests {
         assert_eq!(back.request.id, 2);
         assert!(board.take_mail(0).is_empty());
         assert!(board.close_mail(0).is_empty());
+    }
+
+    #[test]
+    fn dedup_key_is_exact_request_identity() {
+        let (base, _rx) = item(1);
+        let base = base.request;
+        // Client id and latent-return shape never split a key: two
+        // clients asking for the same image are the point of dedup.
+        let mut twin = base.clone();
+        twin.id = 99;
+        twin.return_latent = true;
+        assert_eq!(dedup_key(&base), dedup_key(&twin));
+        // Anything that changes the computed result splits it.
+        let mut other = base.clone();
+        other.seed = 1;
+        assert_ne!(dedup_key(&base), dedup_key(&other));
+        let mut other = base.clone();
+        other.cond = vec![0.25];
+        assert_ne!(dedup_key(&base), dedup_key(&other));
+        let mut other = base.clone();
+        other.parent_session = Some(4);
+        assert_ne!(dedup_key(&base), dedup_key(&other));
+        // cond/ref_img boundary: the same floats on either side of the
+        // separator are different prompts.
+        let mut a = base.clone();
+        a.cond = vec![1.0, 2.0];
+        a.ref_img = None;
+        let mut b = base.clone();
+        b.cond = vec![1.0];
+        b.ref_img = Some(vec![2.0]);
+        assert_ne!(dedup_key(&a), dedup_key(&b));
     }
 
     #[test]

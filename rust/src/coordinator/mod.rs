@@ -28,6 +28,7 @@
 //! tick) and the placement load board (`placement::WorkerLoad`).
 
 pub mod batcher;
+pub mod crfstore;
 pub mod engine;
 pub mod placement;
 pub mod residency;
@@ -121,6 +122,15 @@ pub struct Request {
     /// default).  Setting it opts the request in even when the server
     /// runs without `--feedback`.
     pub error_budget: Option<f64>,
+    /// Completed-session handle of this request's parent (wire field
+    /// `parent_session`, from a prior `Response::session`): the engine
+    /// seeds the new session's CRF cache from the parent's final
+    /// history in the pool's warm-start store (`coordinator::crfstore`)
+    /// and validates the reuse with an eager error probe at the first
+    /// full step.  Unknown/evicted handles degrade to a cold start; a
+    /// handle from a *different model* is rejected with a structured
+    /// error.
+    pub parent_session: Option<u64>,
 }
 
 impl Request {
@@ -144,6 +154,18 @@ impl Request {
         if let Some(b) = error_budget {
             crate::feedback::validate_error_budget(b)?;
         }
+        let parent_session = match j.get("parent_session") {
+            None => None,
+            Some(v) => match v.as_f64() {
+                Some(h) if h >= 0.0 && h.fract() == 0.0 => Some(h as u64),
+                // A present-but-malformed handle is a clean parse error:
+                // silently cold-starting would hide a client bug.
+                _ => bail!(
+                    "parent_session must be a non-negative integer \
+                     session handle"
+                ),
+            },
+        };
         Ok(Request {
             id: j.get("id").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
             model: j.req_str("model")?.to_string(),
@@ -162,6 +184,7 @@ impl Request {
                 .and_then(|v| v.as_bool())
                 .unwrap_or(false),
             error_budget,
+            parent_session,
         })
     }
 
@@ -182,6 +205,9 @@ impl Request {
         if let Some(b) = self.error_budget {
             pairs.push(("error_budget", Json::num(b)));
         }
+        if let Some(p) = self.parent_session {
+            pairs.push(("parent_session", Json::num(p as f64)));
+        }
         Json::obj(pairs)
     }
 
@@ -190,16 +216,22 @@ impl Request {
     /// batcher queues already separate classes) so a session's QoS
     /// class is always well-defined as the class of its whole batch;
     /// the error budget is part of it because one controller serves the
-    /// whole batch.
+    /// whole batch; the parent-session handle is part of it because a
+    /// warm-started session seeds its (batch-wide) CRF cache from that
+    /// one parent, so batches must be parent-uniform — and it makes the
+    /// key exact for identical-request dedup.
     pub fn batch_key(&self) -> String {
         format!(
-            "{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}",
             self.model,
             self.policy,
             self.n_steps,
             self.priority.name(),
             self.error_budget
                 .map(|b| b.to_string())
+                .unwrap_or_default(),
+            self.parent_session
+                .map(|p| p.to_string())
                 .unwrap_or_default()
         )
     }
@@ -223,6 +255,15 @@ pub struct Response {
     pub flops: f64,
     pub cache_peak_bytes: usize,
     pub latent: Option<Vec<f32>>,
+    /// Handle of the completed session in the pool's CRF warm-start
+    /// store: pass it back as `parent_session` on a follow-up edit
+    /// request to seed that session from this one's final CRF.  `None`
+    /// when the store is disabled or rejected the entry.
+    pub session: Option<u64>,
+    /// Whether this session actually started warm (a `parent_session`
+    /// was supplied, found, and survived the validation probe).  False
+    /// for cold starts *and* for probe-demoted warm starts.
+    pub warm_started: bool,
 }
 
 impl Response {
@@ -239,6 +280,8 @@ impl Response {
             flops: 0.0,
             cache_peak_bytes: 0,
             latent: None,
+            session: None,
+            warm_started: false,
         }
     }
 
@@ -253,12 +296,16 @@ impl Response {
             ("cached_steps", Json::num(self.cached_steps as f64)),
             ("flops", Json::num(self.flops)),
             ("cache_peak_bytes", Json::num(self.cache_peak_bytes as f64)),
+            ("warm_started", Json::Bool(self.warm_started)),
         ];
         if let Some(e) = &self.error {
             pairs.push(("error", Json::str(e.clone())));
         }
         if let Some(l) = &self.latent {
             pairs.push(("latent", Json::from_f32s(l)));
+        }
+        if let Some(s) = self.session {
+            pairs.push(("session", Json::num(s as f64)));
         }
         Json::obj(pairs)
     }
@@ -290,6 +337,14 @@ impl Response {
                     .map(|v| v as f32)
                     .collect()
             }),
+            session: j
+                .get("session")
+                .and_then(|v| v.as_usize())
+                .map(|v| v as u64),
+            warm_started: j
+                .get("warm_started")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
         }
     }
 }
@@ -311,6 +366,7 @@ mod tests {
             ref_img: None,
             return_latent: true,
             error_budget: None,
+            parent_session: None,
         };
         let j = r.to_json();
         let back = Request::from_json(&Json::parse(&j.to_string()).unwrap())
@@ -367,6 +423,8 @@ mod tests {
             flops: 1e12,
             cache_peak_bytes: 4096,
             latent: Some(vec![1.0, -1.0]),
+            session: Some(11),
+            warm_started: true,
         };
         let back = Response::from_json(
             &Json::parse(&r.to_json().to_string()).unwrap(),
@@ -375,6 +433,15 @@ mod tests {
         assert_eq!(back.full_steps, 8);
         assert!((back.ttfs_s - 0.75).abs() < 1e-12);
         assert_eq!(back.latent.unwrap().len(), 2);
+        assert_eq!(back.session, Some(11));
+        assert!(back.warm_started);
+        // A store-less response omits the handle entirely.
+        let cold = Response::from_json(
+            &Json::parse(&Response::err(1, "x".into()).to_json().to_string())
+                .unwrap(),
+        );
+        assert_eq!(cold.session, None);
+        assert!(!cold.warm_started);
     }
 
     #[test]
@@ -390,6 +457,7 @@ mod tests {
             ref_img: None,
             return_latent: false,
             error_budget: None,
+            parent_session: None,
         };
         let key_a = a.batch_key();
         a.policy = "freqca:n=7".into();
@@ -400,6 +468,14 @@ mod tests {
         let key_c = a.batch_key();
         a.error_budget = Some(0.08);
         assert_ne!(key_c, a.batch_key());
+        // Warm-started children batch separately per parent: the whole
+        // batch seeds from one CRF, so parent identity is key identity.
+        let key_d = a.batch_key();
+        a.parent_session = Some(42);
+        assert_ne!(key_d, a.batch_key());
+        let key_e = a.batch_key();
+        a.parent_session = Some(43);
+        assert_ne!(key_e, a.batch_key());
     }
 
     #[test]
@@ -426,6 +502,34 @@ mod tests {
             assert!(
                 Request::from_json(&j).is_err(),
                 "error_budget {bad} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn parent_session_rides_the_wire() {
+        // Absent -> None (back-compatible wire format).
+        let j = Json::parse(r#"{"model":"m"}"#).unwrap();
+        assert_eq!(Request::from_json(&j).unwrap().parent_session, None);
+        // Present -> parsed and round-tripped.
+        let j =
+            Json::parse(r#"{"model":"m","parent_session":9}"#).unwrap();
+        let r = Request::from_json(&j).unwrap();
+        assert_eq!(r.parent_session, Some(9));
+        let back =
+            Request::from_json(&Json::parse(&r.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.parent_session, Some(9));
+        // A malformed handle is a clean parse error, not a silent cold
+        // start the client can't distinguish from a warm one.
+        for bad in [r#""abc""#, "-3", "1.5"] {
+            let j = Json::parse(&format!(
+                r#"{{"model":"m","parent_session":{bad}}}"#
+            ))
+            .unwrap();
+            assert!(
+                Request::from_json(&j).is_err(),
+                "parent_session {bad} accepted"
             );
         }
     }

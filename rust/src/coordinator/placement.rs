@@ -66,6 +66,13 @@ pub const LEDGER_STEER_COST: usize = 2;
 /// above which a worker counts as refresh-saturated.
 pub const LEDGER_SATURATED_PM: u32 = 500;
 
+/// Extra load units charged to a candidate that is *not* the home
+/// worker of the request's parent CRF (warm-starting off-home still
+/// works — the store is pool-wide host RAM — but landing on the home
+/// keeps the child next to the worker whose sessions produced the
+/// parent and whose byte budget the entry is accounted against).
+pub const WARM_STEER_COST: usize = 2;
+
 /// Point-in-time load of one worker, as placement sees it.  Engines
 /// overwrite their slot every scheduler tick; [`super::engine::WorkerPool`]
 /// bumps the queued count optimistically when it forwards a request so
@@ -113,6 +120,13 @@ pub struct WorkerLoad {
     /// for observability (`err_score_fp` gauges); placement steers by
     /// the ledger share, which is the budget actually contended.
     pub err_score_fp: u64,
+    /// Bytes / entries of the pool's CRF warm-start store homed on this
+    /// worker (completed-session CRFs harvested here).  Not a direct
+    /// placement input — steering uses the request's resolved
+    /// `parent_home` — but carried so `crf_store_bytes` /
+    /// `crf_store_entries` gauges can be published per worker.
+    pub crf_store_bytes: usize,
+    pub crf_store_entries: usize,
 }
 
 impl WorkerLoad {
@@ -230,6 +244,13 @@ impl WorkerLoadBuilder {
         self
     }
 
+    /// CRF warm-start store bytes/entries homed on this worker.
+    pub fn crf_store(mut self, bytes: usize, entries: usize) -> Self {
+        self.load.crf_store_bytes = bytes;
+        self.load.crf_store_entries = entries;
+        self
+    }
+
     pub fn build(self) -> WorkerLoad {
         self.load
     }
@@ -251,13 +272,24 @@ pub struct PlaceInput<'a> {
     /// `error_budget`), so its sessions contend for de-phase window
     /// tokens — steer it away from workers whose share is saturated.
     pub hot: bool,
+    /// Home worker of the request's `parent_session` CRF in the
+    /// warm-start store (`None` = no parent, or parent unknown/evicted:
+    /// no steering term).  Candidates other than the home are charged
+    /// [`WARM_STEER_COST`].
+    pub parent_home: Option<usize>,
 }
 
 impl PlaceInput<'_> {
     /// Class-and-key-only input (legacy behaviour: no residency or
     /// ledger terms in the score).
     pub fn basic(key: &str, class: Priority) -> PlaceInput<'_> {
-        PlaceInput { key, class, model_slot: None, hot: false }
+        PlaceInput {
+            key,
+            class,
+            model_slot: None,
+            hot: false,
+            parent_home: None,
+        }
     }
 }
 
@@ -293,14 +325,18 @@ impl Placement {
     /// (lower wins): competing load at or above the class, plus the
     /// cold-load charge when the model is not resident, plus the
     /// ledger-steer charge for hot requests on refresh-saturated
-    /// workers.
-    fn score(req: &PlaceInput, load: &WorkerLoad) -> usize {
+    /// workers, plus the warm-steer charge when the request has a
+    /// parent CRF homed on a different worker.
+    fn score(req: &PlaceInput, w: usize, load: &WorkerLoad) -> usize {
         let mut cost = load.load_at_or_above(req.class);
         if !load.holds(req.model_slot) {
             cost += COLD_LOAD_COST;
         }
         if req.hot && load.ledger_share_pm >= LEDGER_SATURATED_PM {
             cost += LEDGER_STEER_COST;
+        }
+        if req.parent_home.map_or(false, |home| home != w) {
+            cost += WARM_STEER_COST;
         }
         cost
     }
@@ -327,7 +363,7 @@ impl Placement {
             .filter(|w| loads[*w].has_headroom())
             .min_by_key(|w| {
                 (
-                    Self::score(req, &loads[*w]),
+                    Self::score(req, *w, &loads[*w]),
                     if req.hot { loads[*w].ledger_share_pm } else { 0 },
                     loads[*w].outstanding(),
                     *w,
@@ -517,7 +553,13 @@ mod tests {
         class: Priority,
         model_slot: usize,
     ) -> PlaceInput<'a> {
-        PlaceInput { key, class, model_slot: Some(model_slot), hot: false }
+        PlaceInput {
+            key,
+            class,
+            model_slot: Some(model_slot),
+            hot: false,
+            parent_home: None,
+        }
     }
 
     #[test]
@@ -595,6 +637,7 @@ mod tests {
             class: Priority::Standard,
             model_slot: Some(0),
             hot: true,
+            parent_home: None,
         };
         assert_eq!(p.place(&hot, &loads), 1);
         assert_eq!(p.place(&input("c", Priority::Standard, 0), &loads), 0);
@@ -635,7 +678,47 @@ mod tests {
             class: Priority::Standard,
             model_slot: Some(0),
             hot: true,
+            parent_home: None,
         };
         assert_eq!(p.place(&hot, &loads), 1);
+    }
+
+    // ---------------- cross-request CRF reuse: warm steering ----------
+
+    #[test]
+    fn warm_request_steers_to_parent_home() {
+        // Two otherwise-identical workers; the request's parent CRF is
+        // homed on worker 1, so the warm-steer charge breaks the tie
+        // toward worker 1 (a tie would otherwise pick worker 0).  The
+        // charge is bounded: once the home is busier by more than
+        // WARM_STEER_COST, the child goes elsewhere rather than queue.
+        let mut p = Placement::new(2);
+        let mut loads = vec![idle(8), idle(8)];
+        let warm = PlaceInput {
+            key: "child",
+            class: Priority::Standard,
+            model_slot: None,
+            hot: false,
+            parent_home: Some(1),
+        };
+        assert_eq!(p.place(&warm, &loads), 1);
+        loads[1].queued_by_class[Priority::Standard.slot()] =
+            WARM_STEER_COST + 1;
+        let warm2 = PlaceInput { key: "child2", ..warm };
+        assert_eq!(
+            p.place(&warm2, &loads),
+            0,
+            "a deep queue at the parent's home must win over warmth"
+        );
+        // No parent: bit-for-bit the old least-load tie-break (worker 0).
+        let cold = PlaceInput {
+            key: "cold",
+            class: Priority::Standard,
+            model_slot: None,
+            hot: false,
+            parent_home: None,
+        };
+        loads[1].queued_by_class[Priority::Standard.slot()] = 0;
+        assert_eq!(p.place(&cold, &loads), 0);
     }
 }

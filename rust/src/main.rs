@@ -112,6 +112,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "steal-after",
             freqca::coordinator::engine::DEFAULT_STEAL_AFTER,
         )?,
+        // Cross-request CRF reuse: host-RAM byte budget for completed
+        // sessions' CRFs (0 disables warm starts entirely).
+        crf_store_bytes: args.usize_or(
+            "crf-store-bytes",
+            freqca::coordinator::crfstore::DEFAULT_CRF_STORE_BYTES,
+        )?,
     };
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
     server::serve(&artifacts, opts, Arc::new(AtomicBool::new(false)))
@@ -148,6 +154,14 @@ fn cmd_request(args: &Args) -> Result<()> {
             }
             None => None,
         },
+        // Warm start: seed the CRF cache from a completed session's
+        // stored history (`session` handle from a prior reply).  A
+        // handle the server rejects (wrong model) comes back as a
+        // structured error below; unknown/evicted degrades to cold.
+        parent_session: match args.get("parent-session") {
+            Some(_) => Some(args.u64_or("parent-session", 0)?),
+            None => None,
+        },
     };
     let mut client = Client::connect(&addr)?;
     let resp = client.generate(&request)?;
@@ -158,13 +172,19 @@ fn cmd_request(args: &Args) -> Result<()> {
         ));
     }
     println!(
-        "model={} policy={} priority={} steps full {} / cached {}",
+        "model={} policy={} priority={} steps full {} / cached {}{}",
         request.model,
         request.policy,
         request.priority.name(),
         resp.full_steps,
         resp.cached_steps,
+        if resp.warm_started { "  (warm start)" } else { "" },
     );
+    if let Some(handle) = resp.session {
+        // Feed this back as `--parent-session` to warm-start an edit
+        // turn on this request's final CRF.
+        println!("session {handle}");
+    }
     println!(
         "queue {:.3}s  ttfs {:.3}s  latency {:.3}s  flops {:.3} G",
         resp.queue_s,

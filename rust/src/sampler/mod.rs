@@ -107,6 +107,17 @@ impl RunResult {
     }
 }
 
+/// A parent session's final CRF history, handed to a child session for
+/// cross-request warm-starting (paper §: multi-turn editing — the CRF
+/// is the state worth keeping between turns).  Entries are oldest-first
+/// `(s, [T*D])` per-job slices as exported by
+/// [`SamplerSession::export_warm_history`]; the child re-stamps them
+/// onto its own step clock and tiles them across its batch.
+#[derive(Debug, Clone, Default)]
+pub struct WarmStart {
+    pub entries: Vec<(f64, Vec<f32>)>,
+}
+
 /// Options controlling the sampler.
 #[derive(Debug, Clone, Default)]
 pub struct SampleOpts {
@@ -124,6 +135,13 @@ pub struct SampleOpts {
     /// their per-worker arena so every session on a worker shares one
     /// pool; `None` gives the session a private arena.
     pub arena: Option<Rc<Arena>>,
+    /// Warm-start payload from a parent session's final CRF history
+    /// (None = cold start).  Held aside until the first full step, then
+    /// *validated* by an eager counterfactual probe against the fresh
+    /// CRF: accepted history seeds the cache (so the policy can start
+    /// predicting without its cold warm-up fulls), drifted history is
+    /// demoted to a cold start — counted, never silently wrong.
+    pub warm_start: Option<WarmStart>,
 }
 
 /// What one call to [`SamplerSession::step`] did.
@@ -178,6 +196,19 @@ pub struct SamplerSession<'p> {
     /// Cached/partial steps executed since the last full forward (the
     /// probe's gap, feeding the controller's rate estimate).
     steps_since_full: usize,
+    /// Parent CRF history awaiting validation at the first full step
+    /// (taken out of `opts.warm_start`; dropped on demotion).
+    warm_pending: Option<WarmStart>,
+    /// The warm-start payload survived its validation probe and seeded
+    /// the cache.
+    warm_started: bool,
+    /// The warm-start payload was dropped (drifted past the budget, no
+    /// probe spec, or malformed) and the session ran cold.
+    warm_demoted: bool,
+    /// Residual budget the validation probe must clear: the session's
+    /// error budget when feedback is on, the serve-level default
+    /// otherwise.
+    warm_budget: f64,
 }
 
 impl<'p> SamplerSession<'p> {
@@ -187,7 +218,7 @@ impl<'p> SamplerSession<'p> {
     pub fn new(
         batch: &BatchJob,
         mut policy: Box<dyn CachePolicy + 'p>,
-        opts: SampleOpts,
+        mut opts: SampleOpts,
     ) -> Result<SamplerSession<'p>> {
         let cfg = batch.cfg;
         let b = batch.jobs.len();
@@ -212,6 +243,12 @@ impl<'p> SamplerSession<'p> {
         };
         let arena =
             opts.arena.clone().unwrap_or_else(|| Rc::new(Arena::new()));
+        let warm_pending = opts.warm_start.take();
+        let warm_budget = opts
+            .feedback
+            .as_ref()
+            .map(|fb| fb.error_budget)
+            .unwrap_or_else(|| FeedbackConfig::default().error_budget);
 
         // Assemble batched inputs.
         let mut x_data = Vec::with_capacity(b * cfg.latent_elems());
@@ -276,6 +313,10 @@ impl<'p> SamplerSession<'p> {
             feedback,
             arena,
             steps_since_full: 0,
+            warm_pending,
+            warm_started: false,
+            warm_demoted: false,
+            warm_budget,
         })
     }
 
@@ -370,6 +411,31 @@ impl<'p> SamplerSession<'p> {
         self.cache.peak_bytes()
     }
 
+    /// The warm-start payload survived its validation probe and seeded
+    /// the cache (false for cold starts and until the first full step).
+    pub fn warm_started(&self) -> bool {
+        self.warm_started
+    }
+
+    /// The warm-start payload was dropped by the validation probe (or
+    /// was unverifiable) and the session ran cold.
+    pub fn warm_demoted(&self) -> bool {
+        self.warm_demoted
+    }
+
+    /// Final CRF history of one job of the batch, oldest-first: the
+    /// payload a child session warm-starts from.  Each entry is that
+    /// job's `[T*D]` slice of a cached `[B, T, D]` snapshot, paired
+    /// with the s-time it was computed at (provenance only — the child
+    /// re-stamps onto its own clock).
+    pub fn export_warm_history(&self, job: usize) -> Vec<(f64, Vec<f32>)> {
+        let row = self.cfg.tokens * self.cfg.dim;
+        self.cache
+            .iter()
+            .map(|(s, t)| (s, t.data[job * row..(job + 1) * row].to_vec()))
+            .collect()
+    }
+
     /// Execute exactly one denoising step (the scheduler's unit of work).
     pub fn step(&mut self, rt: &Runtime) -> Result<StepOutcome> {
         if self.is_done() {
@@ -432,10 +498,90 @@ impl<'p> SamplerSession<'p> {
                     self.ref_t.as_ref(),
                     t,
                 )?;
+                // Warm-start validation: the parent's CRF history is
+                // held aside until this first full forward gives us a
+                // ground truth to probe it against.  Accepted history
+                // seeds the cache on the child's own step clock (entry
+                // i of L re-stamped to s + 2*dt*(L-i), i.e. as if the
+                // child had computed it over its previous steps), so
+                // the policy skips its cold warm-up fulls; drifted
+                // history is dropped and the step proceeds exactly as a
+                // cold start would — bit-identical, counted upstream as
+                // a demotion.
+                let mut warm_validated = false;
+                if self.cache.is_empty() && self.warm_pending.is_some() {
+                    let w = self.warm_pending.take().unwrap();
+                    let row = self.cfg.tokens * self.cfg.dim;
+                    let spec = self
+                        .feedback
+                        .as_ref()
+                        .map(|fb| fb.probe)
+                        .or_else(|| self.policy.probe_spec());
+                    let usable = !w.entries.is_empty()
+                        && w.entries.iter().all(|(_, e)| e.len() == row);
+                    match (spec, usable) {
+                        (Some(spec), true) => {
+                            let l = w.entries.len();
+                            let mut warm_s = Vec::with_capacity(l);
+                            let mut tiled = Vec::with_capacity(l);
+                            for (idx, (_, e)) in w.entries.iter().enumerate()
+                            {
+                                warm_s.push(
+                                    s + 2.0 * dt as f64 * (l - idx) as f64,
+                                );
+                                let mut data = Vec::with_capacity(b * row);
+                                for _ in 0..b {
+                                    data.extend_from_slice(e);
+                                }
+                                tiled.push(Tensor::new(
+                                    vec![b, self.cfg.tokens, self.cfg.dim],
+                                    data,
+                                )?);
+                            }
+                            let hist: Vec<&Tensor> = tiled.iter().collect();
+                            // Full resolution: this probe runs once per
+                            // session and decides accept-vs-demote, so
+                            // a subsampling bound has nothing to buy.
+                            let r = probe::probe_residuals_full(
+                                &warm_s,
+                                &hist,
+                                s,
+                                &spec,
+                                self.cfg.grid,
+                                self.cfg.dim,
+                                &crf,
+                                &self.arena,
+                            )?;
+                            if r.overall <= self.warm_budget {
+                                for (st, tensor) in
+                                    warm_s.into_iter().zip(tiled)
+                                {
+                                    self.cache.push(st, tensor);
+                                }
+                                self.warm_started = true;
+                                if let Some(fb) = &mut self.feedback {
+                                    fb.controller.observe_probe(r.overall, 0);
+                                    self.policy.set_feedback_scale(
+                                        fb.controller.scale(),
+                                    );
+                                }
+                                probe_res = Some(r);
+                                warm_validated = true;
+                            } else {
+                                self.warm_demoted = true;
+                            }
+                        }
+                        // No probe spec (baseline policy) or malformed
+                        // payload: unverifiable reuse is never accepted.
+                        _ => self.warm_demoted = true,
+                    }
+                }
                 // Probe before the push: the cache still holds exactly
-                // what the predictor would have worked from.
+                // what the predictor would have worked from.  (Skipped
+                // on the step that just validated a warm start — that
+                // *was* this step's probe.)
                 if let Some(fb) = &mut self.feedback {
-                    if !self.cache.is_empty() {
+                    if !self.cache.is_empty() && !warm_validated {
                         let hist: Vec<&Tensor> =
                             self.cache.iter().map(|(_, t)| t).collect();
                         let est = probe::probe_residuals_sampled(

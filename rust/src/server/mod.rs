@@ -70,6 +70,13 @@ pub struct ServeOpts {
     /// Idle engine ticks before a pool worker advertises hunger on the
     /// work-stealing board (`--steal-after`; 0 disables stealing).
     pub steal_after: u64,
+    /// Byte budget of the pool-wide CRF warm-start store
+    /// (`--crf-store-bytes`; 0 disables cross-request reuse).
+    /// Completed sessions park their final CRF + Hermite history here,
+    /// keyed by the `session` handle returned to the client; a later
+    /// request naming it via `parent_session` warm-starts instead of
+    /// cold-starting.
+    pub crf_store_bytes: usize,
 }
 
 /// Default concurrency cap: enough sessions to keep short jobs
@@ -90,6 +97,8 @@ impl Default for ServeOpts {
             feedback: None,
             max_resident_models: 0,
             steal_after: crate::coordinator::engine::DEFAULT_STEAL_AFTER,
+            crf_store_bytes:
+                crate::coordinator::crfstore::DEFAULT_CRF_STORE_BYTES,
         }
     }
 }
@@ -126,6 +135,7 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         workers,
         opts.max_resident_models,
         opts.steal_after,
+        opts.crf_store_bytes,
         &opts.warmup,
     )?;
     let models = pool.models().to_vec();

@@ -56,6 +56,7 @@ fn req(id: u64, model: &str, policy: &str, steps: usize) -> Request {
         ref_img: None,
         return_latent: true,
         error_budget: None,
+        parent_session: None,
     }
 }
 
@@ -224,6 +225,34 @@ fn pool_serves_and_places_across_workers() {
             .unwrap_or(0.0)
             > 0.0,
         "pool aggregate crf_peak_bytes missing: {m}"
+    );
+    // Cross-request CRF reuse: every completed session harvests its
+    // final CRF history into the pool-wide warm-start store, so after
+    // four completions the store holds entries; each worker publishes
+    // its homed share and the pool publishes the aggregate.
+    for w in 0..2 {
+        assert!(
+            gauges.get(&format!("crf_store_bytes_w{w}")).is_some(),
+            "worker {w} never published crf_store_bytes: {m}"
+        );
+        assert!(
+            gauges.get(&format!("crf_store_entries_w{w}")).is_some(),
+            "worker {w} never published crf_store_entries: {m}"
+        );
+    }
+    assert!(
+        gauges
+            .get("crf_store_entries")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            > 0.0
+            && gauges
+                .get("crf_store_bytes")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+                > 0.0,
+        "completed sessions never harvested into the warm-start \
+         store: {m}"
     );
     // Host-math hot path: every probe this pool ran was either served
     // from the stride-2 subsample or escalated to a full-resolution
@@ -413,6 +442,7 @@ fn class_req(
         ref_img: None,
         return_latent: true,
         error_budget: None,
+        parent_session: None,
     }
 }
 

@@ -216,6 +216,74 @@ def main():
             f"{static_fulls} != baseline {fb_base['static_full_steps']}"
         )
 
+    # Cross-request CRF reuse (virtual time, deterministic): warm-started
+    # turns must spend strictly fewer full computes than cold starts at
+    # an equal-or-lower worst-case probed error and a no-worse TTFS
+    # tail, the drifted chain must exercise the demotion path, and the
+    # dedup fixture must collapse identical concurrent requests to one
+    # execution per unique key.  Full-step counts are exact schedule
+    # sums, so they gate by equality (any drift means the schedule or
+    # fixture changed and the baseline must be regenerated on purpose).
+    mt = need(results, "multi_turn", "bench results")
+    mt_base = need(baseline, "multi_turn", "baseline")
+    mt_cold_fulls = need(mt, "cold.full_steps", "bench results")
+    mt_warm_fulls = need(mt, "warm.full_steps", "bench results")
+    mt_cold_peak = need(mt, "cold.peak_probed_error", "bench results")
+    mt_warm_peak = need(mt, "warm.peak_probed_error", "bench results")
+    mt_cold_ttfs = need(mt, "cold.ttfs_p95_s", "bench results")
+    mt_warm_ttfs = need(mt, "warm.ttfs_p95_s", "bench results")
+    mt_demotions = need(mt, "warm.warm_demotions", "bench results")
+    print(
+        f"multi-turn fulls: cold {mt_cold_fulls}, warm {mt_warm_fulls} "
+        f"({need(mt, 'warm.warm_starts', 'bench results')} warm starts, "
+        f"{mt_demotions} demoted); ttfs p95 {mt_cold_ttfs * 1e3:.1f} ms "
+        f"-> {mt_warm_ttfs * 1e3:.1f} ms; peak err {mt_cold_peak:.4f} "
+        f"-> {mt_warm_peak:.4f}"
+    )
+    if mt_warm_fulls >= mt_cold_fulls:
+        gate.fail("warm starts did not reduce full computes")
+    if mt_warm_peak > mt_cold_peak:
+        gate.fail("warm starts raised the worst-case probed error")
+    if mt_warm_ttfs > mt_cold_ttfs:
+        gate.fail("warm starts worsened the TTFS p95 tail")
+    if mt_cold_fulls != need(mt_base, "cold_full_steps", "baseline"):
+        gate.fail(
+            f"multi-turn cold full computes changed: {mt_cold_fulls} != "
+            f"baseline {mt_base['cold_full_steps']}"
+        )
+    if mt_warm_fulls != need(mt_base, "warm_full_steps", "baseline"):
+        gate.fail(
+            f"multi-turn warm full computes changed: {mt_warm_fulls} != "
+            f"baseline {mt_base['warm_full_steps']}"
+        )
+    if mt_demotions != need(mt_base, "expected_warm_demotions", "baseline"):
+        gate.fail(
+            f"warm-start demotions changed: {mt_demotions} != baseline "
+            f"{mt_base['expected_warm_demotions']} — the drifted-parent "
+            "validation path is not firing as committed"
+        )
+    mt_tol = mt_base.get("tolerance", 0.2)
+    mt_ttfs_limit = need(mt_base, "warm_ttfs_p95_s", "baseline") * (
+        1 + mt_tol
+    )
+    if mt_warm_ttfs > mt_ttfs_limit:
+        gate.fail(
+            f"warm-arm TTFS p95 regressed > {mt_tol * 100:.0f}% "
+            f"({mt_warm_ttfs} > {mt_ttfs_limit:.4f})"
+        )
+    dd_executed = need(mt, "dedup.requests_executed", "bench results")
+    dd_unique = need(mt, "dedup.unique_keys", "bench results")
+    if dd_executed != dd_unique:
+        gate.fail(
+            f"dedup executed {dd_executed} computations for "
+            f"{dd_unique} unique keys"
+        )
+    if dd_executed != need(mt_base, "dedup_executed", "baseline"):
+        gate.fail(
+            f"dedup fixture cardinality changed: {dd_executed} != "
+            f"baseline {mt_base['dedup_executed']}"
+        )
+
     # Live-engine replay (present only when artifacts exist): every
     # class completed and the interactive tail beat batch for real.
     # Wall-clock numbers are noisy, so no latency-level gating here.

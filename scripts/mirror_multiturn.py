@@ -1,0 +1,208 @@
+#!/usr/bin/env python3
+"""Reference mirror of the `multi_turn` bench scenario.
+
+Replicates `simulate_multi_turn` in benches/coordinator.rs integer-for-
+integer — the FreqCa schedule lookahead, the placement layer's scoring
+(affinity, least-load, warm steering) and the round-robin virtual-time
+pool — so the committed baseline keys in
+benches/baseline_coordinator.json can be derived (and audited) without
+running the Rust bench.  Run:  python3 scripts/mirror_multiturn.py
+"""
+
+MT_CHAINS = 8
+MT_TURNS = 3
+MT_STEPS = 30
+MT_WORKERS = 2
+MT_CAP = 3
+MT_FULL_US = 10_000
+MT_CACHED_US = 2_000
+MT_THINK_US = 5_000
+MT_STAGGER_US = 8_000
+MT_WARM_BUDGET = 0.10
+MT_STEP_ERR = 0.004
+WARM_STEER_COST = 2  # coordinator::placement::WARM_STEER_COST
+
+
+def mt_drift(chain):
+    return 0.25 if chain == MT_CHAINS - 1 else 0.002 * (chain + 1)
+
+
+def peek_full(step, hist):
+    # FreqCa::peek with n=5, need=3 (high_order 2), anchor 0.
+    return step % 5 == 0 or hist < 3 or step + 1 == MT_STEPS
+
+
+class Placement:
+    """coordinator::placement::Placement for this fixture: one class
+    (Standard), no model tracking (holds() always true), hot=False."""
+
+    def __init__(self, workers):
+        self.workers = workers
+        self.affinity = {}
+
+    def place(self, key, loads, parent_home):
+        # loads: list of (in_flight, queued)
+        home = self.affinity.get(key)
+        if home is not None:
+            inf, q = loads[home]
+            if inf + q < MT_CAP:  # has_headroom, holds(None)=True
+                return home
+        cands = [w for w in range(self.workers)
+                 if loads[w][0] + loads[w][1] < MT_CAP]
+        if cands:
+            def score(w):
+                s = loads[w][0] + loads[w][1]  # load_at_or_above(Standard)
+                if parent_home is not None and parent_home != w:
+                    s += WARM_STEER_COST
+                return s
+            chosen = min(cands,
+                         key=lambda w: (score(w), 0,
+                                        loads[w][0] + loads[w][1], w))
+        else:
+            # Preemption needs a strictly lower in-flight class; all
+            # jobs are Standard, so fall to least outstanding.
+            chosen = min(range(self.workers),
+                         key=lambda w: (loads[w][0] + loads[w][1], w))
+        self.affinity[key] = chosen
+        return chosen
+
+
+def percentile(sorted_vals, q):
+    # util::stats::percentile — linear interpolation.
+    if not sorted_vals:
+        return 0.0
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    pos = q / 100.0 * (len(sorted_vals) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
+
+
+def simulate(warm):
+    placement = Placement(MT_WORKERS)
+    clock = [0] * MT_WORKERS
+    queue = [[] for _ in range(MT_WORKERS)]
+    in_flight = [[] for _ in range(MT_WORKERS)]
+    # turn: [chain, turn, arrive_us, parent_handle]
+    turns = [[c, 0, c * MT_STAGGER_US, None] for c in range(MT_CHAINS)]
+    pending = list(range(len(turns)))
+    step_idx, hist, acc, seen_first = [], [], [], []
+    for _ in turns:
+        step_idx.append(0); hist.append(0); acc.append(0.0)
+        seen_first.append(False)
+    # store: handle -> home worker (insert order from 1, like CrfStore)
+    store = {}
+    next_handle = 1
+    out = dict(fulls=0, cached=0, peak=0.0, warm_starts=0, demotions=0,
+               steered=0, ttfs=[], completion=[], makespan=0)
+
+    while True:
+        active = [w for w in range(MT_WORKERS)
+                  if pending or queue[w] or in_flight[w]]
+        if not active:
+            break
+        w = min(active, key=lambda w: (clock[w], w))
+        # place arrivals due by clock[w]
+        while pending:
+            pi = min(range(len(pending)),
+                     key=lambda i: (turns[pending[i]][2], pending[i]))
+            j = pending[pi]
+            if turns[j][2] > clock[w]:
+                break
+            pending[pi] = pending[-1]
+            pending.pop()
+            parent_home = None
+            if warm and turns[j][3] is not None:
+                parent_home = store.get(turns[j][3])
+            if warm and turns[j][3] is not None:
+                key = "chain%d|p%d" % (turns[j][0], turns[j][3])
+            else:
+                key = "chain%d" % turns[j][0]
+            loads = [(len(in_flight[v]), len(queue[v]))
+                     for v in range(MT_WORKERS)]
+            target = placement.place(key, loads, parent_home)
+            if parent_home is not None and parent_home == target:
+                out["steered"] += 1
+            queue[target].append(j)
+        # admit
+        while len(in_flight[w]) < MT_CAP and queue[w]:
+            j = queue[w].pop(0)
+            if warm and turns[j][3] is not None and turns[j][3] in store:
+                drift = mt_drift(turns[j][0])
+                if drift <= MT_WARM_BUDGET:
+                    hist[j] = 3
+                    out["warm_starts"] += 1
+                    out["peak"] = max(out["peak"], drift)
+                else:
+                    out["demotions"] += 1
+            in_flight[w].append(j)
+        # step RR
+        if not in_flight[w]:
+            if pending:
+                a = min(turns[i][2] for i in pending)
+                clock[w] = max(clock[w], a)
+            continue
+        j = in_flight[w].pop(0)
+        if peek_full(step_idx[j], hist[j]):
+            out["fulls"] += 1
+            if step_idx[j] > 0:
+                out["peak"] = max(out["peak"], acc[j])
+            acc[j] = 0.0
+            hist[j] = min(hist[j] + 1, 3)
+            clock[w] += MT_FULL_US
+        else:
+            out["cached"] += 1
+            acc[j] += MT_STEP_ERR
+            clock[w] += MT_CACHED_US
+        step_idx[j] += 1
+        if not seen_first[j]:
+            seen_first[j] = True
+            out["ttfs"].append((clock[w] - turns[j][2]) / 1e6)
+        if step_idx[j] == MT_STEPS:
+            out["completion"].append((clock[w] - turns[j][2]) / 1e6)
+            out["makespan"] = max(out["makespan"], clock[w])
+            if turns[j][1] + 1 < MT_TURNS:
+                parent = None
+                if warm:
+                    parent = next_handle
+                    store[next_handle] = w
+                    next_handle += 1
+                turns.append([turns[j][0], turns[j][1] + 1,
+                              clock[w] + MT_THINK_US, parent])
+                step_idx.append(0); hist.append(0); acc.append(0.0)
+                seen_first.append(False)
+                pending.append(len(turns) - 1)
+        else:
+            in_flight[w].append(j)
+    out["ttfs"].sort()
+    out["completion"].sort()
+    return out
+
+
+def main():
+    cold = simulate(False)
+    warmr = simulate(True)
+    for name, r in (("cold", cold), ("warm", warmr)):
+        print("%s: fulls=%d cached=%d peak=%.4f warm_starts=%d "
+              "demotions=%d steered=%d" %
+              (name, r["fulls"], r["cached"], r["peak"],
+               r["warm_starts"], r["demotions"], r["steered"]))
+        print("  ttfs p50=%.6f p95=%.6f  completion p95=%.6f  "
+              "makespan=%.3f  n=%d" %
+              (percentile(r["ttfs"], 50), percentile(r["ttfs"], 95),
+               percentile(r["completion"], 95), r["makespan"] / 1e6,
+               len(r["ttfs"])))
+    assert warmr["fulls"] < cold["fulls"]
+    assert warmr["peak"] <= cold["peak"] + 1e-12
+    assert percentile(warmr["ttfs"], 95) <= percentile(cold["ttfs"], 95)
+    print("baseline keys: cold_full_steps=%d warm_full_steps=%d "
+          "expected_warm_demotions=%d warm_ttfs_p95_s=%.6f "
+          "cold_ttfs_p95_s=%.6f" %
+          (cold["fulls"], warmr["fulls"], warmr["demotions"],
+           percentile(warmr["ttfs"], 95), percentile(cold["ttfs"], 95)))
+
+
+if __name__ == "__main__":
+    main()
