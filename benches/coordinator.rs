@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use freqca::benchkit::{bench, BenchOpts, Table};
 use freqca::coordinator::batcher::Batcher;
 use freqca::coordinator::crfstore::{CrfStore, StoredCrf};
+use freqca::coordinator::durable::{Record, Wal, WalRecord};
 use freqca::coordinator::engine::{Engine, WorkItem};
 use freqca::coordinator::placement::{PlaceInput, Placement, WorkerLoad};
 use freqca::coordinator::residency::Residency;
@@ -1231,6 +1232,162 @@ fn mt_arm_json(r: &MtSim) -> Json {
     ])
 }
 
+// ---------------------------------------------------------------------
+// Durable session tier: the REAL WAL (append/commit framing, replay,
+// torn-tail truncation, compaction) on a deterministic synthetic
+// session history in a scratch directory.  Record counts and the set of
+// live sessions a replay recovers are exact integers; byte totals are
+// deterministic too (fixed request/snapshot/CRF payloads), so the
+// compaction shrink gates as a hard floor.  Wall-clock append+commit
+// latency is reported for the table but never gated.
+// ---------------------------------------------------------------------
+
+/// Sessions admitted over the log's lifetime.
+const DUR_SESSIONS: u64 = 24;
+/// Sessions that completed (and logged a CRF-store insert) before the
+/// simulated crash; the rest are live at replay.
+const DUR_COMPLETED: u64 = 18;
+/// Every DUR_SPILL_EVERY-th session spills twice (the newer snapshot
+/// supersedes the older — exactly what compaction must exploit).
+const DUR_SPILL_EVERY: u64 = 3;
+/// Synthetic spilled-snapshot payload (a small session's snapshot).
+const DUR_SNAP_BYTES: usize = 4096;
+
+struct DurSim {
+    records_appended: u64,
+    wal_bytes_before: u64,
+    wal_bytes_after: u64,
+    records_after_compaction: usize,
+    compaction_shrink_frac: f64,
+    live_sessions_recovered: usize,
+    torn_entries_detected: u64,
+}
+
+fn dur_req(uid: u64) -> Request {
+    Request {
+        id: uid,
+        model: "flux-sim".into(),
+        policy: "freqca:n=5".into(),
+        priority: Priority::Standard,
+        seed: uid,
+        n_steps: 30,
+        cond: vec![0.25; 16],
+        ref_img: None,
+        return_latent: false,
+        error_budget: None,
+        parent_session: None,
+    }
+}
+
+/// Write the synthetic history, compact it with the engine's keep
+/// rules, and replay — verifying the recovered live set and the
+/// torn-tail handling along the way.
+fn simulate_durability(dir: &std::path::Path) -> anyhow::Result<DurSim> {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("worker0.wal");
+    let (mut wal, _) = Wal::open(&path)?;
+
+    // Admissions, repeated spills, completions + CRF harvests — the
+    // record mix a serving worker accumulates.
+    let mut newest_snap: std::collections::HashMap<u64, u64> =
+        std::collections::HashMap::new();
+    for uid in 1..=DUR_SESSIONS {
+        wal.append_record(&WalRecord::Admit {
+            uid,
+            requests: vec![dur_req(uid)],
+        })?;
+    }
+    for uid in (DUR_SPILL_EVERY..=DUR_SESSIONS).step_by(DUR_SPILL_EVERY as usize)
+    {
+        for fill in [0x5Au8, 0xA5u8] {
+            let off = wal.append_record(&WalRecord::Snapshot {
+                uid,
+                bytes: vec![fill; DUR_SNAP_BYTES],
+            })?;
+            newest_snap.insert(uid, off);
+        }
+    }
+    for uid in 1..=DUR_COMPLETED {
+        wal.append_record(&WalRecord::Complete { uid })?;
+        wal.append_record(&WalRecord::CrfInsert {
+            handle: uid,
+            crf: StoredCrf {
+                model: "flux-sim".into(),
+                entries: mt_entries(),
+                home: 0,
+            },
+        })?;
+    }
+    let records_appended = wal.appends();
+    let wal_bytes_before = wal.bytes();
+
+    // Compact with the engine's keep rules: live admits, each live
+    // session's newest snapshot, every CRF insert still in the store;
+    // completions and superseded snapshots are dead weight.
+    let mut keep = |rec: &Record| match rec.decode() {
+        Ok(WalRecord::Admit { uid, .. }) => uid > DUR_COMPLETED,
+        Ok(WalRecord::Snapshot { uid, .. }) => {
+            uid > DUR_COMPLETED && newest_snap.get(&uid) == Some(&rec.offset)
+        }
+        Ok(WalRecord::Complete { .. }) => false,
+        Ok(WalRecord::CrfInsert { .. }) => true,
+        Err(_) => false,
+    };
+    wal.compact(&mut keep)?;
+    let wal_bytes_after = wal.bytes();
+    drop(wal);
+
+    // Replay the compacted log, recovering the live set exactly as
+    // `Engine::enable_durable` does.
+    let (_, replay) = Wal::open(&path)?;
+    anyhow::ensure!(replay.torn_entries == 0, "clean log replayed torn");
+    let mut admitted: std::collections::HashSet<u64> =
+        std::collections::HashSet::new();
+    let mut done: std::collections::HashSet<u64> =
+        std::collections::HashSet::new();
+    for rec in &replay.records {
+        match rec.decode()? {
+            WalRecord::Admit { uid, .. } => {
+                admitted.insert(uid);
+            }
+            WalRecord::Complete { uid } => {
+                done.insert(uid);
+            }
+            _ => {}
+        }
+    }
+    let live_sessions_recovered =
+        admitted.iter().filter(|u| !done.contains(u)).count();
+
+    // Torn tail: garbage where the crash stopped writing must be
+    // counted and truncated, leaving the committed prefix intact.
+    let clean_len = std::fs::metadata(&path)?.len();
+    let mut bytes = std::fs::read(&path)?;
+    bytes.extend_from_slice(&[0x2A; 13]);
+    std::fs::write(&path, &bytes)?;
+    let (_, torn) = Wal::open(&path)?;
+    anyhow::ensure!(
+        torn.records.len() == replay.records.len(),
+        "torn tail changed the committed prefix"
+    );
+    anyhow::ensure!(
+        std::fs::metadata(&path)?.len() == clean_len,
+        "torn tail not truncated"
+    );
+
+    Ok(DurSim {
+        records_appended,
+        wal_bytes_before,
+        wal_bytes_after,
+        records_after_compaction: replay.records.len(),
+        compaction_shrink_frac: 1.0
+            - wal_bytes_after as f64 / wal_bytes_before as f64,
+        live_sessions_recovered,
+        torn_entries_detected: torn.torn_entries,
+    })
+}
+
 /// Identical-request dedup over the REAL wire identity: a burst of
 /// concurrent requests collapses to one execution per unique
 /// (batch key, seed, prompt) identity — the same key
@@ -2231,6 +2388,97 @@ fn main() -> anyhow::Result<()> {
         ),
     ]);
 
+    // --- durable session tier: real WAL mechanics on a deterministic
+    // synthetic history (exact counts) + append/commit wall latency
+    // (informational only).
+    let dur_dir = std::env::temp_dir()
+        .join(format!("freqca-bench-durability-{}", std::process::id()));
+    let dur = simulate_durability(&dur_dir)?;
+    let (mut scratch_wal, _) =
+        Wal::open(&dur_dir.join("append_latency.wal"))?;
+    let snap_payload = vec![7u8; DUR_SNAP_BYTES];
+    let r = bench(
+        "wal append+commit 4 KiB snapshot",
+        &BenchOpts { warmup_iters: 2, iters: 30 },
+        || {
+            scratch_wal
+                .append_record(&WalRecord::Snapshot {
+                    uid: 1,
+                    bytes: snap_payload.clone(),
+                })
+                .unwrap();
+        },
+    );
+    let append_ms = r.summary.p50 * 1e3;
+    drop(scratch_wal);
+    println!(
+        "\ndurable session tier ({DUR_SESSIONS} sessions, {DUR_COMPLETED} \
+         completed, every {DUR_SPILL_EVERY}rd spilled twice):"
+    );
+    println!(
+        "  {} records, {} -> {} B after compaction ({:.0}% shrink); \
+         replay recovered {} live sessions, torn tail: {} entry; \
+         append+commit p50 {:.2} ms",
+        dur.records_appended,
+        dur.wal_bytes_before,
+        dur.wal_bytes_after,
+        dur.compaction_shrink_frac * 100.0,
+        dur.live_sessions_recovered,
+        dur.torn_entries_detected,
+        append_ms,
+    );
+    table.row(vec![
+        "wal append+commit (4 KiB snapshot)".into(),
+        format!("{:.3}", r.summary.mean * 1e3),
+        format!("{:.3}", r.summary.p50 * 1e3),
+        format!("{:.0}% compaction shrink", dur.compaction_shrink_frac * 100.0),
+    ]);
+    assert_eq!(
+        dur.live_sessions_recovered,
+        (DUR_SESSIONS - DUR_COMPLETED) as usize,
+        "replay must recover exactly the never-completed sessions"
+    );
+    assert_eq!(
+        dur.torn_entries_detected, 1,
+        "the torn tail must be detected as exactly one bad entry"
+    );
+    assert!(
+        dur.compaction_shrink_frac > 0.0,
+        "compaction must shrink a log with dead records"
+    );
+    let _ = std::fs::remove_dir_all(&dur_dir);
+    let durability_json = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("sessions", Json::num(DUR_SESSIONS as f64)),
+                ("completed", Json::num(DUR_COMPLETED as f64)),
+                ("spill_every", Json::num(DUR_SPILL_EVERY as f64)),
+                ("snapshot_bytes", Json::num(DUR_SNAP_BYTES as f64)),
+            ]),
+        ),
+        ("records_appended", Json::num(dur.records_appended as f64)),
+        ("wal_bytes_before", Json::num(dur.wal_bytes_before as f64)),
+        ("wal_bytes_after", Json::num(dur.wal_bytes_after as f64)),
+        (
+            "records_after_compaction",
+            Json::num(dur.records_after_compaction as f64),
+        ),
+        (
+            "compaction_shrink_frac",
+            Json::num(dur.compaction_shrink_frac),
+        ),
+        (
+            "live_sessions_recovered",
+            Json::num(dur.live_sessions_recovered as f64),
+        ),
+        (
+            "torn_entries_detected",
+            Json::num(dur.torn_entries_detected as f64),
+        ),
+        ("append_commit_p50_ms", Json::num(append_ms)),
+    ]);
+
     // --- the same qos fixture through the LIVE engine, when artifacts
     // exist (CI's artifacts job; any box after `make artifacts`).
     let live_json = match live_artifact_dir() {
@@ -2360,6 +2608,7 @@ fn main() -> anyhow::Result<()> {
         ("placement_v2".to_string(), placement_v2_json),
         ("feedback".to_string(), feedback_json),
         ("multi_turn".to_string(), multi_turn_json),
+        ("durability".to_string(), durability_json),
     ];
     if let Some(live) = live_json {
         sections.push(("live".to_string(), live));

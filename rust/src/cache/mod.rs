@@ -128,6 +128,46 @@ impl CrfCache {
     pub fn pushes(&self) -> u64 {
         self.pushes
     }
+
+    /// Export the full mutable state for the durable session tier
+    /// (`sampler::snapshot`).  Counters ride along so a restored
+    /// session's metrics continue instead of resetting.
+    pub fn export_state(&self) -> CacheState {
+        CacheState {
+            k: self.k,
+            entries: self.entries.iter().cloned().collect(),
+            peak_bytes: self.peak_bytes,
+            pushes: self.pushes,
+            generation: self.generation,
+        }
+    }
+
+    /// Rebuild a cache from an exported state.  The inverse of
+    /// [`export_state`](Self::export_state): same entries, same
+    /// counters, same generation — a restored sampler resumes the exact
+    /// trajectory (the generation counter also guarantees the device
+    /// stack cache re-uploads rather than trusting a stale handle).
+    pub fn from_state(st: CacheState) -> CrfCache {
+        assert!(st.k >= 1);
+        CrfCache {
+            k: st.k,
+            entries: st.entries.into(),
+            peak_bytes: st.peak_bytes,
+            pushes: st.pushes,
+            generation: st.generation,
+        }
+    }
+}
+
+/// Exported [`CrfCache`] state (see [`CrfCache::export_state`]).
+#[derive(Debug, Clone)]
+pub struct CacheState {
+    pub k: usize,
+    /// `(normalized time, CRF)` pairs, oldest first.
+    pub entries: Vec<(f64, Tensor)>,
+    pub peak_bytes: usize,
+    pub pushes: u64,
+    pub generation: u64,
 }
 
 /// Prior-art layer-wise cache: stores (m+1) history states of 2 features
@@ -282,6 +322,24 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert_eq!(c.newest().unwrap().data[0], 9.0);
         assert_eq!(c.times(), vec![0.0, 1.5]);
+    }
+
+    #[test]
+    fn export_import_state_is_identity() {
+        let mut c = CrfCache::new(3);
+        for i in 0..5 {
+            c.push(i as f64 * 0.1, crf(i as f32));
+        }
+        c.replace_newest(0.45, crf(9.0));
+        let back = CrfCache::from_state(c.export_state());
+        assert_eq!(back.times(), c.times());
+        assert_eq!(back.generation(), c.generation());
+        assert_eq!(back.pushes(), c.pushes());
+        assert_eq!(back.peak_bytes(), c.peak_bytes());
+        assert_eq!(back.bytes(), c.bytes());
+        let (a, b) = (c.stacked().unwrap(), back.stacked().unwrap());
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

@@ -93,6 +93,7 @@ USAGE:
                   [--feedback] [--error-budget 0.1] [--probe-sample 1]
                   [--max-resident-models 0] [--steal-after 16]
                   [--crf-store-bytes 67108864]
+                  [--wal-dir PATH] [--spill-after-ticks 64]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
                   [--artifacts DIR]
@@ -143,6 +144,18 @@ Cross-request CRF reuse (serve --crf-store-bytes B): completed sessions
   error; an unknown or evicted handle degrades to a cold start.
   Identical concurrent requests (same batch key, seed, and prompt)
   dedup into one execution with fanned-out, bit-identical replies.
+Durable session tier (serve --wal-dir PATH): each worker keeps an
+  append-only, checksummed write-ahead log under PATH (worker{id}.wal).
+  Admissions, completions, CRF-store inserts, and spilled-session
+  snapshots are logged; on restart the worker replays the committed
+  prefix (truncating any torn tail), restores warm-start handles, and
+  re-enters every session that was in flight — snapshot-bearing ones
+  resume mid-flight, admit-only ones re-run from step 0, both
+  bit-identical to the uninterrupted run.  A RAM-parked session idle
+  for --spill-after-ticks scheduler ticks while the parking lot is full
+  is spilled: its snapshot moves to the WAL and its RAM (latents, CRF
+  cache, weight pin) is released until revival.  The log compacts
+  itself once enough retired records accumulate.
 ";
 
 #[cfg(test)]

@@ -160,6 +160,41 @@ impl CrfStore {
         true
     }
 
+    /// Re-admit an entry under its **original handle** (WAL replay
+    /// after a restart — children recorded before the crash carry the
+    /// old handle in `parent_session`, so the handle must survive).
+    /// Same byte-budget rules as [`Self::insert`]; an already-live
+    /// handle is left untouched (replay can see an insert twice when a
+    /// compaction raced the crash).  Returns whether the entry is live
+    /// afterwards.
+    pub fn restore_entry(&mut self, handle: u64, crf: StoredCrf) -> bool {
+        if self.slots.contains_key(&handle) {
+            return true;
+        }
+        let bytes = crf.bytes();
+        if self.budget == 0 || bytes == 0 || bytes > self.budget {
+            self.rejected += 1;
+            return false;
+        }
+        while self.bytes + bytes > self.budget {
+            if !self.evict_coldest_unpinned() {
+                self.rejected += 1;
+                return false;
+            }
+        }
+        self.next_handle = self.next_handle.max(handle + 1);
+        self.bytes += bytes;
+        *self.per_model.entry(crf.model.clone()).or_insert(0) += bytes;
+        self.slots.insert(handle, Slot { crf, bytes, pins: 0 });
+        self.lru.push_back(handle);
+        true
+    }
+
+    /// Whether `handle` is live (WAL compaction keep-filter).
+    pub fn contains(&self, handle: u64) -> bool {
+        self.slots.contains_key(&handle)
+    }
+
     /// Check a parent's history out for a child warm start: pins the
     /// entry (eviction-proof until [`Self::release`]) and returns a
     /// clone the caller can tile into the child's batch.  Unknown or
@@ -322,6 +357,30 @@ mod tests {
         assert!(s.insert(crf("m", 0, 10, 1.0)).is_none(), "48 B > 32 B");
         assert_eq!(s.rejected(), 1);
         assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn restore_entry_revives_handles_and_advances_the_counter() {
+        let mut s = CrfStore::new(1 << 20);
+        // Replay re-admits handles 5 and 9 from a WAL.
+        assert!(s.restore_entry(5, crf("m", 0, 10, 1.0)));
+        assert!(s.restore_entry(9, crf("m", 1, 10, 2.0)));
+        assert!(s.contains(5) && s.contains(9));
+        assert_eq!(s.checkout(5).unwrap().entries[0].1[0], 1.0);
+        s.release(5);
+        // Duplicate replay (compaction raced the crash) is a no-op.
+        assert!(s.restore_entry(9, crf("m", 1, 10, -2.0)));
+        assert_eq!(s.checkout(9).unwrap().entries[0].1[0], 2.0);
+        s.release(9);
+        // Fresh inserts never collide with a restored handle.
+        let h = s.insert(crf("m", 0, 10, 3.0)).unwrap();
+        assert!(h > 9);
+        // Budget rules still apply on the restore path.
+        let mut small = CrfStore::new(32);
+        assert!(!small.restore_entry(3, crf("m", 0, 10, 1.0)));
+        assert_eq!(small.rejected(), 1);
+        let mut off = CrfStore::new(0);
+        assert!(!off.restore_entry(3, crf("m", 0, 10, 1.0)));
     }
 
     #[test]

@@ -1,0 +1,805 @@
+//! The durable session tier: an append-only, checksummed WAL with
+//! snapshot compaction.
+//!
+//! The parking lot (`engine`) is bounded RAM and dies with the
+//! process.  The paper's Cumulative Residual Feature makes a paused
+//! session *small* — latents + a K≈3-entry CRF history + controller
+//! and policy scalars + a step index, all host-resident — so
+//! persisting it is cheap.  This module is the persistence substrate:
+//! every worker owns one WAL file (`<wal-dir>/worker<id>.wal`) into
+//! which the engine logs session admissions, spill snapshots, session
+//! retirements, and harvested CRF-store entries.  On restart the
+//! committed prefix replays and every in-flight session is rebuilt —
+//! from its newest snapshot when one was spilled, or bit-identically
+//! from step 0 (sampling is deterministic in the admitted requests)
+//! when not.
+//!
+//! ## On-disk format (version 1)
+//!
+//! ```text
+//! file   := magic "FQCWAL" (6 B) | version u8 | entry*
+//! entry  := state u8          -- 1 intent, 2 written, 3 committed
+//!         | kind u8           -- record kind (Admit/Snapshot/...)
+//!         | seq u64 LE        -- 1-based, contiguous
+//!         | payload_len u32 LE
+//!         | payload_crc u32 LE   -- CRC32 (IEEE) of the payload
+//!         | header_crc u32 LE    -- CRC32 of bytes [1..18) above
+//!         | payload bytes
+//! ```
+//!
+//! An append writes the 22-byte header in `intent` state together with
+//! the payload, then flips the state byte in place to `written` and
+//! finally to `committed` (the idiom of WAL designs that pre-declare an
+//! entry before filling it; the flips are single-byte in-place writes).
+//! `header_crc` deliberately covers bytes `[1..18)` — everything
+//! *except* the state byte and itself — so the state transitions never
+//! invalidate the checksum.  Replay accepts only `committed` entries
+//! with both CRCs intact and a contiguous `seq`; the first violation
+//! marks the torn tail, which is counted (`torn_entries`), physically
+//! truncated, and never trusted.  Replay stops at the first bad entry:
+//! in an append-only file everything after a torn entry is unreachable
+//! without guessing at framing, and guessing is how corrupt state gets
+//! replayed into a live engine.
+//!
+//! **Forward compatibility:** the version byte is load-bearing.  A
+//! reader that sees a version newer than [`WAL_VERSION`] refuses the
+//! whole file rather than misparse entries whose layout it predates;
+//! bumping the entry layout means bumping [`WAL_VERSION`] and teaching
+//! [`Wal::open`] to upgrade (or refuse) older files explicitly.
+//!
+//! ## Compaction
+//!
+//! The log only grows, but most of it is dead weight once sessions
+//! retire: a `Complete` record kills its `Admit` and any `Snapshot`s,
+//! and re-spilled sessions orphan their older snapshots.
+//! [`Wal::compact`] rewrites the live records (caller-filtered) into a
+//! temp file and atomically renames it over the log, re-sequencing from
+//! 1 and returning an old-offset → new-offset map so the engine can
+//! re-point spilled-session stubs at their relocated snapshots.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::crfstore::StoredCrf;
+use crate::coordinator::Request;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::Json;
+
+/// File magic: identifies a FreqCa coordinator WAL.
+pub const WAL_MAGIC: &[u8; 6] = b"FQCWAL";
+/// On-disk format version this build reads and writes.
+pub const WAL_VERSION: u8 = 1;
+/// Default `--spill-after-ticks`: how long a parked session must sit
+/// un-resumed (in scheduler ticks) before a pressured lot spills it.
+pub const DEFAULT_SPILL_AFTER_TICKS: u64 = 64;
+
+const HEADER_LEN: usize = 7;
+const ENTRY_HEADER_LEN: usize = 22;
+
+/// Entry states.  Anything other than `committed` on replay is a torn
+/// write.
+pub const STATE_INTENT: u8 = 1;
+pub const STATE_WRITTEN: u8 = 2;
+pub const STATE_COMMITTED: u8 = 3;
+
+/// Record kinds (the `kind` byte).
+pub const KIND_ADMIT: u8 = 1;
+pub const KIND_SNAPSHOT: u8 = 2;
+pub const KIND_COMPLETE: u8 = 3;
+pub const KIND_CRF: u8 = 4;
+
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected, table-driven).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// One committed WAL entry as replayed from disk.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub kind: u8,
+    pub seq: u64,
+    /// Byte offset of the entry header in the file (stable until the
+    /// next compaction; spilled-session stubs hold these).
+    pub offset: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Record {
+    pub fn decode(&self) -> Result<WalRecord> {
+        WalRecord::decode(self.kind, &self.payload)
+    }
+}
+
+/// The outcome of replaying a WAL file on open.
+#[derive(Debug, Default)]
+pub struct Replay {
+    /// Committed records, in append order.
+    pub records: Vec<Record>,
+    /// Entries dropped at the tail: not committed, CRC-failing, out of
+    /// sequence, or truncated mid-entry.
+    pub torn_entries: u64,
+    /// Bytes physically truncated off the file tail.
+    pub truncated_bytes: u64,
+}
+
+/// The append-only log.  One per worker; never shared across threads.
+#[derive(Debug)]
+pub struct Wal {
+    file: File,
+    path: PathBuf,
+    /// Committed length of the file (== next append offset).
+    len: u64,
+    next_seq: u64,
+    appends: u64,
+    compactions: u64,
+}
+
+impl Wal {
+    /// Open (or create) the log at `path`, replaying the committed
+    /// prefix and truncating any torn tail off the file.
+    pub fn open(path: &Path) -> Result<(Wal, Replay)> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).with_context(|| {
+                    format!("creating WAL directory {}", dir.display())
+                })?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        if bytes.is_empty() {
+            file.write_all(WAL_MAGIC)?;
+            file.write_all(&[WAL_VERSION])?;
+            file.sync_data()?;
+            let wal = Wal {
+                file,
+                path: path.to_path_buf(),
+                len: HEADER_LEN as u64,
+                next_seq: 1,
+                appends: 0,
+                compactions: 0,
+            };
+            return Ok((wal, Replay::default()));
+        }
+        let (records, torn_entries, committed_len) = parse(&bytes)
+            .with_context(|| format!("replaying WAL {}", path.display()))?;
+        let truncated_bytes = bytes.len() as u64 - committed_len as u64;
+        if truncated_bytes > 0 {
+            file.set_len(committed_len as u64)?;
+            file.sync_data()?;
+        }
+        let wal = Wal {
+            file,
+            path: path.to_path_buf(),
+            len: committed_len as u64,
+            next_seq: records.len() as u64 + 1,
+            appends: 0,
+            compactions: 0,
+        };
+        Ok((wal, Replay { records, torn_entries, truncated_bytes }))
+    }
+
+    /// Current committed file size in bytes (the `wal_bytes` gauge).
+    pub fn bytes(&self) -> u64 {
+        self.len
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Appends performed through this handle since open.
+    pub fn appends(&self) -> u64 {
+        self.appends
+    }
+
+    /// Compactions performed through this handle since open.
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Append one entry and commit it: header+payload land in `intent`
+    /// state and are synced, then the state byte flips in place through
+    /// `written` to `committed` and syncs again — a crash between the
+    /// two syncs leaves a well-formed entry that replay counts as torn
+    /// and truncates.  Returns the entry's byte offset.
+    pub fn append(&mut self, kind: u8, payload: &[u8]) -> Result<u64> {
+        let off = self.len;
+        let seq = self.next_seq;
+        let mut header = [0u8; ENTRY_HEADER_LEN];
+        header[0] = STATE_INTENT;
+        header[1] = kind;
+        header[2..10].copy_from_slice(&seq.to_le_bytes());
+        header[10..14].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        header[14..18].copy_from_slice(&crc32(payload).to_le_bytes());
+        let hcrc = crc32(&header[1..18]);
+        header[18..22].copy_from_slice(&hcrc.to_le_bytes());
+
+        self.file.seek(SeekFrom::Start(off))?;
+        self.file.write_all(&header)?;
+        self.file.write_all(payload)?;
+        self.file.seek(SeekFrom::Start(off))?;
+        self.file.write_all(&[STATE_WRITTEN])?;
+        self.file.sync_data()?;
+        self.file.seek(SeekFrom::Start(off))?;
+        self.file.write_all(&[STATE_COMMITTED])?;
+        self.file.sync_data()?;
+
+        self.len = off + (ENTRY_HEADER_LEN + payload.len()) as u64;
+        self.next_seq += 1;
+        self.appends += 1;
+        Ok(off)
+    }
+
+    pub fn append_record(&mut self, rec: &WalRecord) -> Result<u64> {
+        self.append(rec.kind(), &rec.encode())
+    }
+
+    /// Read back one committed entry by offset (spilled-session
+    /// revival).  Validates both CRCs and the committed state.
+    pub fn read_record(&mut self, offset: u64) -> Result<Record> {
+        if offset + ENTRY_HEADER_LEN as u64 > self.len {
+            bail!("WAL offset {offset} past committed length {}", self.len);
+        }
+        let mut header = [0u8; ENTRY_HEADER_LEN];
+        self.file.seek(SeekFrom::Start(offset))?;
+        self.file.read_exact(&mut header)?;
+        let rec = entry_at(&header, offset)?;
+        let plen = u32::from_le_bytes(header[10..14].try_into().unwrap());
+        if offset + (ENTRY_HEADER_LEN + plen as usize) as u64 > self.len {
+            bail!("WAL entry at {offset} overruns committed length");
+        }
+        let mut payload = vec![0u8; plen as usize];
+        self.file.read_exact(&mut payload)?;
+        let want = u32::from_le_bytes(header[14..18].try_into().unwrap());
+        if crc32(&payload) != want {
+            bail!("WAL entry at {offset} failed its payload CRC");
+        }
+        Ok(Record { payload, ..rec })
+    }
+
+    /// Snapshot compaction: rewrite the records `keep` accepts into a
+    /// temp file, atomically rename it over the log, and re-sequence
+    /// from 1.  Returns `(old_offset, new_offset)` for every surviving
+    /// record so callers can re-point offset references.
+    pub fn compact(
+        &mut self,
+        keep: &mut dyn FnMut(&Record) -> bool,
+    ) -> Result<Vec<(u64, u64)>> {
+        self.file.seek(SeekFrom::Start(0))?;
+        let mut bytes = vec![0u8; self.len as usize];
+        self.file.read_exact(&mut bytes)?;
+        let (records, _, _) = parse(&bytes)?;
+
+        let tmp = self.path.with_extension("wal.tmp");
+        let mut out = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        out.write_all(WAL_MAGIC)?;
+        out.write_all(&[WAL_VERSION])?;
+        let mut remap = Vec::new();
+        let mut seq = 1u64;
+        let mut pos = HEADER_LEN as u64;
+        for rec in &records {
+            if !keep(rec) {
+                continue;
+            }
+            let mut header = [0u8; ENTRY_HEADER_LEN];
+            header[0] = STATE_COMMITTED;
+            header[1] = rec.kind;
+            header[2..10].copy_from_slice(&seq.to_le_bytes());
+            header[10..14]
+                .copy_from_slice(&(rec.payload.len() as u32).to_le_bytes());
+            header[14..18].copy_from_slice(&crc32(&rec.payload).to_le_bytes());
+            let hcrc = crc32(&header[1..18]);
+            header[18..22].copy_from_slice(&hcrc.to_le_bytes());
+            out.write_all(&header)?;
+            out.write_all(&rec.payload)?;
+            remap.push((rec.offset, pos));
+            pos += (ENTRY_HEADER_LEN + rec.payload.len()) as u64;
+            seq += 1;
+        }
+        out.sync_data()?;
+        drop(out);
+        std::fs::rename(&tmp, &self.path)?;
+        self.file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&self.path)?;
+        self.len = pos;
+        self.next_seq = seq;
+        self.compactions += 1;
+        Ok(remap)
+    }
+}
+
+/// Validate one entry header (CRC, state, kind byte untouched) without
+/// its payload.
+fn entry_at(header: &[u8; ENTRY_HEADER_LEN], offset: u64) -> Result<Record> {
+    let want = u32::from_le_bytes(header[18..22].try_into().unwrap());
+    if crc32(&header[1..18]) != want {
+        bail!("WAL entry at {offset} failed its header CRC");
+    }
+    if header[0] != STATE_COMMITTED {
+        bail!("WAL entry at {offset} is not committed (state {})", header[0]);
+    }
+    Ok(Record {
+        kind: header[1],
+        seq: u64::from_le_bytes(header[2..10].try_into().unwrap()),
+        offset,
+        payload: Vec::new(),
+    })
+}
+
+/// Replay `bytes` (a whole WAL file): committed records, torn-entry
+/// count, and the committed prefix length in bytes.
+fn parse(bytes: &[u8]) -> Result<(Vec<Record>, u64, usize)> {
+    if bytes.len() < HEADER_LEN {
+        bail!("WAL file shorter than its {HEADER_LEN}-byte header");
+    }
+    if &bytes[..6] != WAL_MAGIC {
+        bail!("not a FreqCa WAL (bad magic)");
+    }
+    let version = bytes[6];
+    if version != WAL_VERSION {
+        bail!(
+            "WAL format version {version} is not the supported version \
+             {WAL_VERSION}; refusing to guess at its entry layout \
+             (a newer writer produced this file)"
+        );
+    }
+    let mut records = Vec::new();
+    let mut pos = HEADER_LEN;
+    let mut torn = 0u64;
+    let mut expect_seq = 1u64;
+    while pos < bytes.len() {
+        if bytes.len() - pos < ENTRY_HEADER_LEN {
+            torn += 1;
+            break;
+        }
+        let header: [u8; ENTRY_HEADER_LEN] =
+            bytes[pos..pos + ENTRY_HEADER_LEN].try_into().unwrap();
+        let Ok(rec) = entry_at(&header, pos as u64) else {
+            torn += 1;
+            break;
+        };
+        if rec.seq != expect_seq {
+            torn += 1;
+            break;
+        }
+        let plen =
+            u32::from_le_bytes(header[10..14].try_into().unwrap()) as usize;
+        let end = pos + ENTRY_HEADER_LEN + plen;
+        if end > bytes.len() {
+            torn += 1;
+            break;
+        }
+        let payload = &bytes[pos + ENTRY_HEADER_LEN..end];
+        let want = u32::from_le_bytes(header[14..18].try_into().unwrap());
+        if crc32(payload) != want {
+            torn += 1;
+            break;
+        }
+        records.push(Record { payload: payload.to_vec(), ..rec });
+        expect_seq += 1;
+        pos = end;
+    }
+    Ok((records, torn, pos))
+}
+
+/// Typed records the engine logs.  `Snapshot::bytes` carries an opaque
+/// `sampler::snapshot::SessionSnapshot` encoding; everything else is
+/// self-describing.
+#[derive(Debug, Clone)]
+pub enum WalRecord {
+    /// A session was admitted: its engine-assigned uid and the member
+    /// requests (wire JSON — the same surface clients speak, so the
+    /// record stays readable and re-parseable across code motion).
+    Admit { uid: u64, requests: Vec<Request> },
+    /// A parked session spilled: the uid and its serialized
+    /// `SessionSnapshot`.
+    Snapshot { uid: u64, bytes: Vec<u8> },
+    /// The session retired (completed or failed): its Admit and any
+    /// Snapshots are dead weight for the next compaction.
+    Complete { uid: u64 },
+    /// A completed session's CRF history entered the warm-start store
+    /// under `handle` — replay restores it so `parent_session` handles
+    /// survive restarts.
+    CrfInsert { handle: u64, crf: StoredCrf },
+}
+
+impl WalRecord {
+    pub fn kind(&self) -> u8 {
+        match self {
+            WalRecord::Admit { .. } => KIND_ADMIT,
+            WalRecord::Snapshot { .. } => KIND_SNAPSHOT,
+            WalRecord::Complete { .. } => KIND_COMPLETE,
+            WalRecord::CrfInsert { .. } => KIND_CRF,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            WalRecord::Admit { uid, requests } => {
+                w.put_u64(*uid);
+                w.put_u32(requests.len() as u32);
+                for r in requests {
+                    w.put_str(&r.to_json().to_string());
+                }
+            }
+            WalRecord::Snapshot { uid, bytes } => {
+                w.put_u64(*uid);
+                w.put_raw(bytes);
+            }
+            WalRecord::Complete { uid } => {
+                w.put_u64(*uid);
+            }
+            WalRecord::CrfInsert { handle, crf } => {
+                w.put_u64(*handle);
+                w.put_str(&crf.model);
+                w.put_u64(crf.home as u64);
+                w.put_u32(crf.entries.len() as u32);
+                for (s, v) in &crf.entries {
+                    w.put_f64(*s);
+                    w.put_f32s(v);
+                }
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<WalRecord> {
+        let mut r = ByteReader::new(payload);
+        let rec = match kind {
+            KIND_ADMIT => {
+                let uid = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut requests = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let js = r.str()?;
+                    let j = Json::parse(&js).map_err(|e| {
+                        anyhow::anyhow!("bad request JSON in Admit: {e}")
+                    })?;
+                    requests.push(Request::from_json(&j)?);
+                }
+                WalRecord::Admit { uid, requests }
+            }
+            KIND_SNAPSHOT => WalRecord::Snapshot {
+                uid: r.u64()?,
+                bytes: r.take_rest().to_vec(),
+            },
+            KIND_COMPLETE => WalRecord::Complete { uid: r.u64()? },
+            KIND_CRF => {
+                let handle = r.u64()?;
+                let model = r.str()?;
+                let home = r.u64()? as usize;
+                let n = r.u32()? as usize;
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let s = r.f64()?;
+                    let v = r.f32s()?;
+                    entries.push((s, v));
+                }
+                WalRecord::CrfInsert {
+                    handle,
+                    crf: StoredCrf { model, entries, home },
+                }
+            }
+            other => bail!("unknown WAL record kind {other}"),
+        };
+        r.finish()?;
+        Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Priority;
+    use std::fs;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+
+    /// A fresh path under the OS temp dir, unique per test invocation.
+    fn tmpwal(tag: &str) -> PathBuf {
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("freqca-wal-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{tag}-{n}.wal"));
+        let _ = fs::remove_file(&path);
+        path
+    }
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            model: "tiny".into(),
+            policy: "freqca:n=3".into(),
+            priority: Priority::Standard,
+            seed: id,
+            n_steps: 4,
+            cond: vec![0.5, -0.25],
+            ref_img: None,
+            return_latent: true,
+            error_budget: Some(0.125),
+            parent_session: Some(9),
+        }
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn records_round_trip_through_append_and_replay() {
+        let path = tmpwal("roundtrip");
+        let (mut wal, replay) = Wal::open(&path).unwrap();
+        assert!(replay.records.is_empty());
+        let recs = [
+            WalRecord::Admit { uid: 1, requests: vec![req(10), req(11)] },
+            WalRecord::Snapshot { uid: 1, bytes: vec![1, 2, 3, 255] },
+            WalRecord::Complete { uid: 1 },
+            WalRecord::CrfInsert {
+                handle: 42,
+                crf: StoredCrf {
+                    model: "tiny".into(),
+                    entries: vec![(0.5, vec![1.0, -2.5]), (0.75, vec![0.0])],
+                    home: 3,
+                },
+            },
+        ];
+        for r in &recs {
+            wal.append_record(r).unwrap();
+        }
+        assert_eq!(wal.appends(), 4);
+        let bytes = wal.bytes();
+        drop(wal);
+
+        let (wal2, replay) = Wal::open(&path).unwrap();
+        assert_eq!(wal2.bytes(), bytes);
+        assert_eq!(replay.torn_entries, 0);
+        assert_eq!(replay.records.len(), 4);
+        for (i, rec) in replay.records.iter().enumerate() {
+            assert_eq!(rec.seq, i as u64 + 1);
+        }
+        match replay.records[0].decode().unwrap() {
+            WalRecord::Admit { uid, requests } => {
+                assert_eq!(uid, 1);
+                assert_eq!(requests.len(), 2);
+                assert_eq!(requests[0].id, 10);
+                assert_eq!(requests[0].cond, vec![0.5, -0.25]);
+                assert_eq!(requests[0].error_budget, Some(0.125));
+                assert_eq!(requests[0].parent_session, Some(9));
+                assert!(requests[0].return_latent);
+            }
+            other => panic!("expected Admit, got {other:?}"),
+        }
+        match replay.records[1].decode().unwrap() {
+            WalRecord::Snapshot { uid, bytes } => {
+                assert_eq!((uid, bytes), (1, vec![1, 2, 3, 255]));
+            }
+            other => panic!("expected Snapshot, got {other:?}"),
+        }
+        match replay.records[3].decode().unwrap() {
+            WalRecord::CrfInsert { handle, crf } => {
+                assert_eq!(handle, 42);
+                assert_eq!(crf.model, "tiny");
+                assert_eq!(crf.home, 3);
+                assert_eq!(crf.entries[0], (0.5, vec![1.0, -2.5]));
+            }
+            other => panic!("expected CrfInsert, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_record_fetches_by_offset() {
+        let path = tmpwal("readat");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append_record(&WalRecord::Complete { uid: 1 }).unwrap();
+        let off =
+            wal.append_record(&WalRecord::Snapshot { uid: 2, bytes: vec![7; 33] })
+                .unwrap();
+        let rec = wal.read_record(off).unwrap();
+        match rec.decode().unwrap() {
+            WalRecord::Snapshot { uid, bytes } => {
+                assert_eq!(uid, 2);
+                assert_eq!(bytes, vec![7; 33]);
+            }
+            other => panic!("expected Snapshot, got {other:?}"),
+        }
+        assert!(wal.read_record(off + 1).is_err(), "misaligned offset read");
+        assert!(wal.read_record(wal.bytes()).is_err(), "past-end read");
+    }
+
+    /// The satellite property test: truncate a valid WAL at **every**
+    /// byte offset inside the tail entry, and bit-flip **every** byte
+    /// of it; replay must recover exactly the committed prefix with
+    /// `torn_entries` accounted, and the file must come back usable.
+    #[test]
+    fn torn_tail_recovers_committed_prefix_at_every_offset() {
+        let path = tmpwal("torn");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append_record(&WalRecord::Admit { uid: 1, requests: vec![req(1)] })
+            .unwrap();
+        wal.append_record(&WalRecord::Snapshot { uid: 1, bytes: vec![9; 17] })
+            .unwrap();
+        let tail_off = wal
+            .append_record(&WalRecord::Complete { uid: 1 })
+            .unwrap() as usize;
+        drop(wal);
+        let full = fs::read(&path).unwrap();
+        assert!(tail_off > HEADER_LEN && tail_off < full.len());
+
+        // Truncation at every byte inside (and at the start of) the
+        // tail entry: exactly the 2-record prefix survives.
+        for cut in tail_off..full.len() {
+            fs::write(&path, &full[..cut]).unwrap();
+            let (_, rep) = Wal::open(&path).unwrap();
+            assert_eq!(rep.records.len(), 2, "cut at {cut}");
+            let want_torn = u64::from(cut != tail_off);
+            assert_eq!(rep.torn_entries, want_torn, "cut at {cut}");
+            assert_eq!(rep.truncated_bytes, (cut - tail_off) as u64);
+            // The torn tail is physically gone after open.
+            assert_eq!(
+                fs::metadata(&path).unwrap().len(),
+                tail_off as u64,
+                "cut at {cut} not truncated"
+            );
+        }
+
+        // Bit-flip every byte of the tail entry: state, kind, seq,
+        // lengths, CRCs, payload — every corruption is caught.
+        for pos in tail_off..full.len() {
+            let mut b = full.clone();
+            b[pos] ^= 0xFF;
+            fs::write(&path, &b).unwrap();
+            let (_, rep) = Wal::open(&path).unwrap();
+            assert_eq!(rep.records.len(), 2, "flip at {pos}");
+            assert_eq!(rep.torn_entries, 1, "flip at {pos}");
+        }
+
+        // After a torn open, appends continue with a contiguous seq.
+        fs::write(&path, &full[..tail_off + 5]).unwrap();
+        let (mut wal, rep) = Wal::open(&path).unwrap();
+        assert_eq!(rep.torn_entries, 1);
+        wal.append_record(&WalRecord::Complete { uid: 1 }).unwrap();
+        drop(wal);
+        let (_, rep) = Wal::open(&path).unwrap();
+        assert_eq!(rep.records.len(), 3);
+        assert_eq!(rep.torn_entries, 0);
+    }
+
+    #[test]
+    fn mid_file_corruption_stops_replay_at_the_damage() {
+        // Replay never guesses past a bad entry: corrupting record 1's
+        // payload drops it AND the (intact) records behind it — an
+        // explicit, documented trade against replaying misframed state.
+        let path = tmpwal("midfile");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        let first = wal
+            .append_record(&WalRecord::Snapshot { uid: 1, bytes: vec![4; 20] })
+            .unwrap();
+        wal.append_record(&WalRecord::Complete { uid: 1 }).unwrap();
+        drop(wal);
+        let mut b = fs::read(&path).unwrap();
+        let payload_pos = first as usize + ENTRY_HEADER_LEN + 3;
+        b[payload_pos] ^= 0x01;
+        fs::write(&path, &b).unwrap();
+        let (_, rep) = Wal::open(&path).unwrap();
+        assert_eq!(rep.records.len(), 0);
+        assert_eq!(rep.torn_entries, 1);
+    }
+
+    #[test]
+    fn compaction_drops_dead_records_and_remaps_offsets() {
+        let path = tmpwal("compact");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append_record(&WalRecord::Admit { uid: 1, requests: vec![req(1)] })
+            .unwrap();
+        let live_snap = wal
+            .append_record(&WalRecord::Snapshot { uid: 2, bytes: vec![5; 40] })
+            .unwrap();
+        wal.append_record(&WalRecord::Complete { uid: 1 }).unwrap();
+        wal.append_record(&WalRecord::Admit { uid: 2, requests: vec![req(2)] })
+            .unwrap();
+        let before = wal.bytes();
+
+        // Keep only uid 2's records (uid 1 retired).
+        let remap = wal
+            .compact(&mut |rec| match rec.decode().unwrap() {
+                WalRecord::Admit { uid, .. }
+                | WalRecord::Snapshot { uid, .. } => uid == 2,
+                WalRecord::Complete { .. } => false,
+                WalRecord::CrfInsert { .. } => true,
+            })
+            .unwrap();
+        assert!(wal.bytes() < before, "compaction did not shrink the log");
+        assert_eq!(wal.compactions(), 1);
+        assert_eq!(remap.len(), 2);
+        let new_snap = remap
+            .iter()
+            .find(|(old, _)| *old == live_snap)
+            .expect("live snapshot remapped")
+            .1;
+        let rec = wal.read_record(new_snap).unwrap();
+        assert!(matches!(rec.decode().unwrap(), WalRecord::Snapshot { uid: 2, .. }));
+
+        // Post-compaction appends and replay agree on the new framing.
+        wal.append_record(&WalRecord::Complete { uid: 2 }).unwrap();
+        drop(wal);
+        let (_, rep) = Wal::open(&path).unwrap();
+        assert_eq!(rep.torn_entries, 0);
+        assert_eq!(rep.records.len(), 3);
+        let seqs: Vec<u64> = rep.records.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn newer_version_byte_is_refused_not_misparsed() {
+        let path = tmpwal("version");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append_record(&WalRecord::Complete { uid: 1 }).unwrap();
+        drop(wal);
+        let mut b = fs::read(&path).unwrap();
+        b[6] = WAL_VERSION + 1;
+        fs::write(&path, &b).unwrap();
+        let err = Wal::open(&path).unwrap_err().to_string();
+        let chain = format!("{err}");
+        assert!(
+            chain.contains("version") || chain.contains("replaying"),
+            "unhelpful version error: {chain}"
+        );
+        // Foreign files are refused too, not clobbered.
+        fs::write(&path, b"definitely not a wal").unwrap();
+        assert!(Wal::open(&path).is_err());
+    }
+
+    #[test]
+    fn unknown_record_kind_is_a_decode_error() {
+        assert!(WalRecord::decode(99, &[0; 8]).is_err());
+        // Trailing garbage after a well-formed record is rejected.
+        let mut payload = WalRecord::Complete { uid: 3 }.encode();
+        payload.push(0);
+        assert!(WalRecord::decode(KIND_COMPLETE, &payload).is_err());
+    }
+}

@@ -43,17 +43,19 @@
 //! admission path, so batching, preemption, and the shared de-phase
 //! ledger invariants all hold unchanged.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Error, Result};
+use anyhow::{anyhow, bail, Error, Result};
 
 use super::batcher::Pending;
 use super::crfstore::{CrfStore, SharedCrfStore, StoredCrf};
+use super::durable::{Record, Wal, WalRecord};
 use super::placement::{PlaceInput, Placement, WorkerLoad};
 use super::residency::Residency;
 use super::router::{RouteResult, Router};
@@ -67,7 +69,8 @@ use crate::model::weights;
 use crate::policy;
 use crate::runtime::{discover_models, Runtime};
 use crate::sampler::{
-    BatchJob, JobSpec, SampleOpts, SamplerSession, StepOutcome, WarmStart,
+    BatchJob, JobSpec, RunResult, SampleOpts, SamplerSession, SessionSnapshot,
+    StepOutcome, WarmStart,
 };
 use crate::util::Arena;
 
@@ -290,7 +293,7 @@ struct InFlight {
     /// QoS class of the whole batch (classes never share a batch).
     class: Priority,
     /// Which model the session runs — pins that model's weights
-    /// resident until the session (in-flight or parked) completes.
+    /// resident until the session (in-flight or RAM-parked) completes.
     model: String,
     /// Session start (admission) time; completion latency = span since.
     started: Instant,
@@ -302,15 +305,113 @@ struct InFlight {
     /// has been accepted or demoted — the pin keeps LRU pressure from
     /// evicting a parent out from under a queued child).
     warm_parent: Option<u64>,
+    /// Engine-assigned durable session id: the key every WAL record for
+    /// this session carries (stable across park, spill, and restart).
+    uid: u64,
+    /// The policy description the session was parsed from — rides along
+    /// so a spill snapshot can record how to rebuild the policy.
+    policy: String,
+    /// Rebuilt from the WAL after a restart: no clients wait on it, and
+    /// its results land in `Engine::recovered_results` on completion.
+    recovered: bool,
 }
 
-/// Is `model` pinned by any in-flight or parked session?  (The
-/// residency eviction guard; free function so `Residency` calls can
-/// borrow it disjointly from `&mut self.residency`.)
-fn model_in_use(sessions: &[InFlight], parked: &[InFlight], model: &str) -> bool {
-    sessions.iter().any(|s| s.model == model)
-        || parked.iter().any(|s| s.model == model)
+/// Where a spilled session's state lives until revival.
+enum SpillSource {
+    /// A `Snapshot` record in this worker's WAL at this byte offset
+    /// (re-pointed on compaction).
+    WalSnapshot { offset: u64 },
+    /// No snapshot exists — only the Admit record.  Sampling is
+    /// deterministic given the requests (the seed fixes the noise), so
+    /// the session rebuilds from step 0 bit-identically.
+    Requests(Vec<Request>),
 }
+
+/// A parked session whose heavy state (latents, CRF cache, device
+/// buffers) has been written to the WAL and dropped from RAM.  Only the
+/// identity, waiters, and scheduling state stay resident — a spilled
+/// session does not count against the RAM parking bound and does not
+/// pin its model's weights.
+struct SpilledStub {
+    uid: u64,
+    waiters: Vec<Waiter>,
+    class: Priority,
+    model: String,
+    policy: String,
+    started: Instant,
+    sched: SchedState<Instant>,
+    warm_parent: Option<u64>,
+    recovered: bool,
+    src: SpillSource,
+}
+
+/// One parking-lot slot: a preempted session either intact in RAM or
+/// spilled to the durable tier.
+enum Parked {
+    Ram {
+        inner: InFlight,
+        /// Scheduler tick at park time — the spill staleness clock.
+        since_tick: u64,
+    },
+    Spilled(SpilledStub),
+}
+
+impl Parked {
+    fn class(&self) -> Priority {
+        match self {
+            Parked::Ram { inner, .. } => inner.class,
+            Parked::Spilled(s) => s.class,
+        }
+    }
+
+    fn sched(&self) -> &SchedState<Instant> {
+        match self {
+            Parked::Ram { inner, .. } => &inner.sched,
+            Parked::Spilled(s) => &s.sched,
+        }
+    }
+
+    fn uid(&self) -> u64 {
+        match self {
+            Parked::Ram { inner, .. } => inner.uid,
+            Parked::Spilled(s) => s.uid,
+        }
+    }
+
+    fn cache_bytes(&self) -> usize {
+        match self {
+            Parked::Ram { inner, .. } => inner.session.cache_bytes(),
+            // The whole point of a spill: no resident cache.
+            Parked::Spilled(_) => 0,
+        }
+    }
+}
+
+/// Is `model` pinned by any in-flight or RAM-parked session?  (The
+/// residency eviction guard; free function so `Residency` calls can
+/// borrow it disjointly from `&mut self.residency`.)  Spilled sessions
+/// deliberately do **not** pin: their device state is gone, and revival
+/// re-acquires residency through the normal admission gate.
+fn model_in_use(sessions: &[InFlight], parked: &[Parked], model: &str) -> bool {
+    sessions.iter().any(|s| s.model == model)
+        || parked.iter().any(|p| match p {
+            Parked::Ram { inner, .. } => inner.model == model,
+            Parked::Spilled(_) => false,
+        })
+}
+
+/// This worker's durable-tier state (`--wal-dir` set).
+struct Durable {
+    wal: Wal,
+    /// Ticks a RAM-parked session must sit before pressure may spill it.
+    spill_after_ticks: u64,
+    /// Records retired (dead for the next compaction) since the last
+    /// compaction; crossing [`COMPACT_AFTER_RETIRED`] triggers one.
+    retired: u64,
+}
+
+/// Retired-record count that triggers a WAL compaction.
+const COMPACT_AFTER_RETIRED: u64 = 32;
 
 pub struct Engine {
     pub rt: Runtime,
@@ -328,9 +429,11 @@ pub struct Engine {
     replies: HashMap<u64, (Sender<Response>, Instant, u64)>,
     next_internal_id: u64,
     sessions: Vec<InFlight>,
-    /// Preempted sessions, state intact, waiting for capacity.  Bounded
-    /// by `max_parked` so preemption cannot hoard per-session memory.
-    parked: Vec<InFlight>,
+    /// Preempted sessions waiting for capacity: intact in RAM (bounded
+    /// by `max_parked` so preemption cannot hoard per-session memory)
+    /// or spilled to the WAL (unbounded — a stub is a few hundred
+    /// bytes).
+    parked: Vec<Parked>,
     /// Concurrency cap: ready batches stay in their (capacity-bounded,
     /// shedding) queues once this many sessions are in flight, so
     /// backpressure still has a surface to push on and per-session
@@ -376,6 +479,16 @@ pub struct Engine {
     /// the eviction slot frees — without this, sustained traffic for a
     /// resident model could pin it forever.
     deferral: Option<(String, u64)>,
+    /// Durable session tier (`--wal-dir`); `None` = volatile engine,
+    /// exactly the pre-WAL behavior.
+    durable: Option<Durable>,
+    /// Monotonic durable session id source (seeded past the WAL's max
+    /// recovered uid so ids never collide across restarts).
+    next_uid: u64,
+    /// Results of WAL-recovered sessions (their clients are gone):
+    /// harvested into the warm-start store as usual, then parked here
+    /// for [`Engine::drain_recovered_results`].
+    recovered_results: Vec<(u64, Vec<RunResult>)>,
     /// Who this engine is within its pool (standalone engines get a
     /// private context from [`WorkerContext::standalone`]).
     worker: WorkerContext,
@@ -480,8 +593,123 @@ impl Engine {
             crf_peak_bytes: 0,
             arena: Rc::new(Arena::new()),
             deferral: None,
+            durable: None,
+            next_uid: 1,
+            recovered_results: Vec::new(),
             worker,
         })
+    }
+
+    /// Turn the durable session tier on: open (or create) this worker's
+    /// WAL under `dir`, replay it, and re-enter every session that was
+    /// in flight at the crash — snapshot-bearing sessions as spilled
+    /// stubs, admit-only ones for a bit-identical re-run from step 0.
+    /// Completed sessions' CRF-store entries are restored under their
+    /// original handles so `parent_session` tokens survive the restart.
+    /// Call before serving (the engine must be empty).
+    pub fn enable_durable(
+        &mut self,
+        dir: &Path,
+        spill_after_ticks: u64,
+    ) -> Result<()> {
+        let path = dir.join(format!("worker{}.wal", self.worker.id));
+        let (wal, replay) = Wal::open(&path)?;
+        if replay.torn_entries > 0 {
+            self.metrics.bump("torn_entries", replay.torn_entries);
+        }
+        let mut admits: HashMap<u64, Vec<Request>> = HashMap::new();
+        let mut snaps: HashMap<u64, u64> = HashMap::new();
+        let mut done: HashSet<u64> = HashSet::new();
+        let mut max_uid = 0u64;
+        for rec in &replay.records {
+            match rec.decode()? {
+                WalRecord::Admit { uid, requests } => {
+                    max_uid = max_uid.max(uid);
+                    admits.insert(uid, requests);
+                }
+                // Newest snapshot wins (a session can spill repeatedly).
+                WalRecord::Snapshot { uid, .. } => {
+                    snaps.insert(uid, rec.offset);
+                }
+                WalRecord::Complete { uid } => {
+                    done.insert(uid);
+                }
+                WalRecord::CrfInsert { handle, crf } => {
+                    // Budget rules re-apply; a rejected restore just
+                    // means that parent handle degrades to a cold start.
+                    self.store.lock().unwrap().restore_entry(handle, crf);
+                }
+            }
+        }
+        let mut live: Vec<u64> = admits
+            .keys()
+            .copied()
+            .filter(|u| !done.contains(u))
+            .collect();
+        live.sort_unstable();
+        let now = Instant::now();
+        for uid in live {
+            let requests = admits.remove(&uid).expect("key from admits");
+            let Some(first) = requests.first() else { continue };
+            let (class, model, policy) =
+                (first.priority, first.model.clone(), first.policy.clone());
+            let src = match snaps.get(&uid) {
+                Some(&offset) => SpillSource::WalSnapshot { offset },
+                None => SpillSource::Requests(requests),
+            };
+            self.parked.push(Parked::Spilled(SpilledStub {
+                uid,
+                // The clients that submitted these died with the old
+                // process; results go to `recovered_results`.
+                waiters: Vec::new(),
+                class,
+                model,
+                policy,
+                started: now,
+                sched: self.sched.admit(class, now),
+                warm_parent: None,
+                recovered: true,
+                src,
+            }));
+            self.metrics.bump("recovered_sessions", 1);
+        }
+        self.next_uid = self.next_uid.max(max_uid + 1);
+        self.gauge("wal_bytes", wal.bytes() as f64);
+        self.durable = Some(Durable {
+            wal,
+            spill_after_ticks: spill_after_ticks.max(1),
+            retired: 0,
+        });
+        Ok(())
+    }
+
+    /// Append one record to the WAL, if durable.  WAL write failures
+    /// are counted, not fatal: the engine degrades to volatile behavior
+    /// for that record rather than failing live sessions.
+    fn append_wal(&mut self, rec: &WalRecord) -> Option<u64> {
+        let d = self.durable.as_mut()?;
+        match d.wal.append_record(rec) {
+            Ok(offset) => Some(offset),
+            Err(_) => {
+                self.metrics.bump("wal_errors", 1);
+                None
+            }
+        }
+    }
+
+    /// RAM-resident parking-lot occupancy (the bound `max_parked`
+    /// enforces; spilled stubs hold no session memory and don't count).
+    fn ram_parked(&self) -> usize {
+        self.parked
+            .iter()
+            .filter(|p| matches!(p, Parked::Ram { .. }))
+            .count()
+    }
+
+    /// Results of sessions recovered from the WAL (their original
+    /// clients are gone).  Each entry is `(uid, per-member results)`.
+    pub fn drain_recovered_results(&mut self) -> Vec<(u64, Vec<RunResult>)> {
+        std::mem::take(&mut self.recovered_results)
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -687,6 +915,7 @@ impl Engine {
     /// nothing in flight).
     pub fn tick(&mut self) -> usize {
         self.admit_ready();
+        self.maybe_spill();
         self.account_backpressure();
         self.donate_surplus();
         // Refresh each session's cache phase (pure lookahead) and hand
@@ -838,8 +1067,8 @@ impl Engine {
                         // extend the starvation guarantee across the
                         // parking lot or sustained higher-class
                         // arrivals would strand parked work forever.
-                        if self.parked[p].class >= r
-                            || self.starved(&self.parked[p].sched)
+                        if self.parked[p].class() >= r
+                            || self.starved(self.parked[p].sched())
                         {
                             self.resume(p);
                         } else {
@@ -858,8 +1087,9 @@ impl Engine {
                 continue;
             }
             // At capacity: preempt only for strictly higher-class work,
-            // and only while the parking lot has room.
-            if self.parked.len() >= self.max_parked {
+            // and only while the RAM parking lot has room (spilled
+            // stubs hold no session memory, so they don't consume it).
+            if self.ram_parked() >= self.max_parked {
                 return;
             }
             let Some(ready) = self.ready_admissible_class() else { return };
@@ -872,7 +1102,10 @@ impl Engine {
             };
             let parked = self.sessions.swap_remove(victim);
             self.metrics.bump("sessions_parked", 1);
-            self.parked.push(parked);
+            self.parked.push(Parked::Ram {
+                inner: parked,
+                since_tick: self.sched.tick(),
+            });
             self.start_session(&model, batch);
         }
     }
@@ -882,15 +1115,26 @@ impl Engine {
     /// guarantee extends across the whole lot, so a starved batch
     /// session cannot be bypassed behind a fresher higher-class one —
     /// otherwise highest class, then longest parked (FIFO — `parked`
-    /// is in park order).
+    /// is in park order).  A spilled stub is resumable only when its
+    /// model can become resident right now (revival must re-acquire
+    /// weights; RAM-parked sessions still pin theirs and always
+    /// qualify).
     fn best_parked(&self) -> Option<usize> {
+        let (residency, sessions, parked) =
+            (&self.residency, &self.sessions, &self.parked);
+        let loadable = |i: &usize| match &parked[*i] {
+            Parked::Ram { .. } => true,
+            Parked::Spilled(s) => residency
+                .admissible(&s.model, &|u| model_in_use(sessions, parked, u)),
+        };
         (0..self.parked.len())
-            .filter(|i| self.starved(&self.parked[*i].sched))
-            .min_by_key(|i| self.parked[*i].sched.freshness())
+            .filter(|i| self.starved(self.parked[*i].sched()))
+            .filter(|i| loadable(i))
+            .min_by_key(|i| self.parked[*i].sched().freshness())
             .or_else(|| {
-                (0..self.parked.len()).max_by_key(|i| {
-                    (self.parked[*i].class, std::cmp::Reverse(*i))
-                })
+                (0..self.parked.len()).filter(|i| loadable(i)).max_by_key(
+                    |i| (self.parked[*i].class(), std::cmp::Reverse(*i)),
+                )
             })
     }
 
@@ -922,9 +1166,258 @@ impl Engine {
         // Scheduling state rides along: a long-parked session's stale
         // `last_ran` makes the QoS policy (or its aging bound) run it
         // promptly, compensating the parked time.
-        let inflight = self.parked.remove(idx);
-        self.metrics.bump("sessions_resumed", 1);
-        self.sessions.push(inflight);
+        match self.parked.remove(idx) {
+            Parked::Ram { inner, .. } => {
+                self.metrics.bump("sessions_resumed", 1);
+                self.sessions.push(inner);
+            }
+            Parked::Spilled(stub) => self.revive(stub),
+        }
+    }
+
+    /// Bring a spilled session back to life: re-acquire weights, then
+    /// restore its snapshot from the WAL — or, for an admit-only
+    /// recovered session, rebuild it from the logged requests (step 0;
+    /// deterministic, so the latents come out bit-identical).
+    fn revive(&mut self, stub: SpilledStub) {
+        match self.build_revived(&stub) {
+            Ok((session, warm_parent)) => {
+                self.metrics.bump("revives", 1);
+                self.metrics.bump("sessions_resumed", 1);
+                self.sessions.push(InFlight {
+                    session,
+                    waiters: stub.waiters,
+                    class: stub.class,
+                    model: stub.model,
+                    started: stub.started,
+                    sched: stub.sched,
+                    warm_parent: warm_parent.or(stub.warm_parent),
+                    uid: stub.uid,
+                    policy: stub.policy,
+                    recovered: stub.recovered,
+                });
+            }
+            Err(e) => {
+                // Retire the uid so the WAL stops resurrecting a
+                // session that can no longer be rebuilt.
+                self.append_wal(&WalRecord::Complete { uid: stub.uid });
+                self.retire_records(2);
+                self.metrics.bump("batch_errors", 1);
+                for w in stub.waiters {
+                    let _ = w.tx.send(Response::err(
+                        w.client_id,
+                        format!("engine: reviving spilled session: {e}"),
+                    ));
+                }
+            }
+        }
+    }
+
+    fn build_revived(
+        &mut self,
+        stub: &SpilledStub,
+    ) -> Result<(SamplerSession<'static>, Option<u64>)> {
+        let weights = self.ensure_resident(&stub.model)?;
+        match &stub.src {
+            SpillSource::WalSnapshot { offset } => {
+                let bytes = {
+                    let d = self.durable.as_mut().ok_or_else(|| {
+                        anyhow!("spilled session {} but no WAL", stub.uid)
+                    })?;
+                    match d.wal.read_record(*offset)?.decode()? {
+                        WalRecord::Snapshot { bytes, .. } => bytes,
+                        other => bail!(
+                            "WAL offset {offset} holds a {:?}, not the \
+                             snapshot of session {}",
+                            other.kind(),
+                            stub.uid
+                        ),
+                    }
+                };
+                let snap = SessionSnapshot::from_bytes(&bytes)?;
+                let cfg = self.router.config(&stub.model).ok_or_else(|| {
+                    anyhow!("model {} vanished", stub.model)
+                })?;
+                let session = SamplerSession::restore(
+                    snap,
+                    cfg,
+                    weights,
+                    Some(self.arena.clone()),
+                )?;
+                Ok((session, None))
+            }
+            SpillSource::Requests(reqs) => {
+                let refs: Vec<&Request> = reqs.iter().collect();
+                self.build_session(&stub.model, &refs, weights)
+            }
+        }
+    }
+
+    /// Under parking-lot pressure, spill the coldest RAM-parked
+    /// session(s) past the staleness threshold to the WAL, freeing
+    /// their session memory (and weight pins) while the lot is full.
+    fn maybe_spill(&mut self) {
+        let Some(d) = &self.durable else { return };
+        let after = d.spill_after_ticks;
+        while self.ram_parked() >= self.max_parked {
+            let tick = self.sched.tick();
+            let coldest = (0..self.parked.len())
+                .filter_map(|i| match &self.parked[i] {
+                    Parked::Ram { since_tick, .. }
+                        if tick.saturating_sub(*since_tick) >= after =>
+                    {
+                        Some((i, *since_tick))
+                    }
+                    _ => None,
+                })
+                .min_by_key(|(_, since)| *since);
+            let Some((idx, _)) = coldest else { return };
+            if !self.spill_one(idx) {
+                return;
+            }
+        }
+    }
+
+    /// Snapshot one RAM-parked session into the WAL and replace it with
+    /// a stub.  Returns false (leaving the lot unchanged) if the WAL
+    /// write fails — better a full lot than a lost session.
+    fn spill_one(&mut self, idx: usize) -> bool {
+        let Parked::Ram { inner, since_tick } = self.parked.remove(idx)
+        else {
+            unreachable!("spill_one called on a spilled stub")
+        };
+        let snap = inner.session.snapshot(&inner.policy);
+        let rec = WalRecord::Snapshot {
+            uid: inner.uid,
+            bytes: snap.to_bytes(),
+        };
+        let Some(offset) = self.append_wal(&rec) else {
+            self.parked.push(Parked::Ram { inner, since_tick });
+            return false;
+        };
+        self.metrics.bump("spills", 1);
+        // A re-spill strands the previous snapshot record.
+        self.retire_records(1);
+        let InFlight {
+            session,
+            waiters,
+            class,
+            model,
+            started,
+            sched,
+            warm_parent,
+            uid,
+            policy,
+            recovered,
+        } = inner;
+        // The whole payload of the spill: latents, CRF cache, and any
+        // device history buffer drop here.
+        drop(session);
+        self.parked.push(Parked::Spilled(SpilledStub {
+            uid,
+            waiters,
+            class,
+            model,
+            policy,
+            started,
+            sched,
+            warm_parent,
+            recovered,
+            src: SpillSource::WalSnapshot { offset },
+        }));
+        true
+    }
+
+    /// Spill every RAM-parked session now (drain-by-persist: tests and
+    /// operators use this to force the durable tier to hold the whole
+    /// lot).  Returns how many sessions spilled.
+    pub fn spill_parked(&mut self) -> usize {
+        if self.durable.is_none() {
+            return 0;
+        }
+        let mut spilled = 0;
+        let mut i = 0;
+        while i < self.parked.len() {
+            if matches!(self.parked[i], Parked::Ram { .. }) {
+                if self.spill_one(i) {
+                    spilled += 1;
+                    // The stub went to the back; the element now at
+                    // `i` is unexamined.
+                    continue;
+                }
+            }
+            i += 1;
+        }
+        spilled
+    }
+
+    /// Count `n` WAL records as retired and compact once enough dead
+    /// weight accumulates.
+    fn retire_records(&mut self, n: u64) {
+        let Some(d) = &mut self.durable else { return };
+        d.retired += n;
+        if d.retired < COMPACT_AFTER_RETIRED {
+            return;
+        }
+        // Build the keep-filter's inputs before borrowing the WAL
+        // mutably: live session uids, each spilled stub's snapshot
+        // offset, and the store's live handles.
+        let live: HashSet<u64> = self
+            .sessions
+            .iter()
+            .map(|s| s.uid)
+            .chain(self.parked.iter().map(|p| p.uid()))
+            .collect();
+        let spill_at: HashMap<u64, u64> = self
+            .parked
+            .iter()
+            .filter_map(|p| match p {
+                Parked::Spilled(SpilledStub {
+                    uid,
+                    src: SpillSource::WalSnapshot { offset },
+                    ..
+                }) => Some((*uid, *offset)),
+                _ => None,
+            })
+            .collect();
+        let store = self.store.clone();
+        let mut keep = |rec: &Record| match rec.decode() {
+            Ok(WalRecord::Admit { uid, .. }) => live.contains(&uid),
+            Ok(WalRecord::Snapshot { uid, .. }) => {
+                spill_at.get(&uid) == Some(&rec.offset)
+            }
+            // Completes only exist to kill Admits; once the Admit is
+            // gone they carry nothing.
+            Ok(WalRecord::Complete { .. }) => false,
+            Ok(WalRecord::CrfInsert { handle, .. }) => {
+                store.lock().unwrap().contains(handle)
+            }
+            Err(_) => false,
+        };
+        let d = self.durable.as_mut().expect("checked above");
+        match d.wal.compact(&mut keep) {
+            Ok(remap) => {
+                d.retired = 0;
+                self.metrics.bump("wal_compactions", 1);
+                let remap: HashMap<u64, u64> = remap.into_iter().collect();
+                for p in &mut self.parked {
+                    if let Parked::Spilled(SpilledStub {
+                        src: SpillSource::WalSnapshot { offset },
+                        ..
+                    }) = p
+                    {
+                        if let Some(new) = remap.get(offset) {
+                            *offset = *new;
+                        }
+                    }
+                }
+            }
+            Err(_) => {
+                // Try again after the next retirement window.
+                d.retired = 0;
+                self.metrics.bump("wal_errors", 1);
+            }
+        }
     }
 
     /// Fold the router's shed counter and queue depths into the metrics
@@ -950,7 +1443,7 @@ impl Engine {
             .sessions
             .iter()
             .map(|s| s.session.cache_bytes())
-            .chain(self.parked.iter().map(|s| s.session.cache_bytes()))
+            .chain(self.parked.iter().map(|p| p.cache_bytes()))
             .sum();
         self.crf_peak_bytes = self.crf_peak_bytes.max(crf_bytes);
         // Weight residency + de-phase ledger share, for placement's
@@ -1009,6 +1502,11 @@ impl Engine {
         self.gauge("arena_hit_rate", self.arena.hit_rate());
         self.gauge("crf_store_bytes", store_bytes_w as f64);
         self.gauge("crf_store_entries", store_entries_w as f64);
+        let spilled = self.parked.len() - self.ram_parked();
+        self.gauge("spilled_sessions", spilled as f64);
+        if let Some(d) = &self.durable {
+            self.gauge("wal_bytes", d.wal.bytes() as f64);
+        }
         for (class, depth) in Priority::ALL.iter().zip(queued_by_class) {
             self.gauge(
                 &format!("queued_requests_{}", class.name()),
@@ -1226,11 +1724,27 @@ impl Engine {
                 });
             }
         }
+        let requests: Vec<&Request> =
+            batch.iter().map(|p| &p.request).collect();
         let built = self
             .ensure_resident(model)
-            .and_then(|weights| self.build_session(model, &batch, weights));
+            .and_then(|weights| self.build_session(model, &requests, weights));
         match built {
             Ok((session, warm_parent)) => {
+                let uid = self.next_uid;
+                self.next_uid += 1;
+                // The durable admission record: everything needed to
+                // re-run this session bit-identically after a crash.
+                if self.durable.is_some() {
+                    let rec = WalRecord::Admit {
+                        uid,
+                        requests: batch
+                            .iter()
+                            .map(|p| p.request.clone())
+                            .collect(),
+                    };
+                    self.append_wal(&rec);
+                }
                 self.sessions.push(InFlight {
                     session,
                     waiters,
@@ -1239,6 +1753,9 @@ impl Engine {
                     started: now,
                     sched: self.sched.admit(class, oldest),
                     warm_parent,
+                    uid,
+                    policy: batch[0].request.policy.clone(),
+                    recovered: false,
                 });
             }
             Err(e) => {
@@ -1310,23 +1827,23 @@ impl Engine {
     fn build_session(
         &self,
         model: &str,
-        batch: &[Pending],
+        batch: &[&Request],
         weights: Rc<xla::PjRtBuffer>,
     ) -> Result<(SamplerSession<'static>, Option<u64>)> {
         let cfg = self
             .router
             .config(model)
             .ok_or_else(|| anyhow!("model {model} vanished"))?;
-        let first = &batch[0].request;
+        let first = batch[0];
         let decomp = crate::freq::Decomp::parse(&cfg.decomp)?;
         let pol =
             policy::parse_policy(&first.policy, decomp, cfg.grid, cfg.k_hist)?;
         let jobs: Vec<JobSpec> = batch
             .iter()
-            .map(|p| JobSpec {
-                cond: p.request.cond.clone(),
-                ref_img: p.request.ref_img.clone(),
-                seed: p.request.seed,
+            .map(|r| JobSpec {
+                cond: r.cond.clone(),
+                ref_img: r.ref_img.clone(),
+                seed: r.seed,
             })
             .collect();
         let bj = BatchJob { cfg, weights, jobs, n_steps: first.n_steps };
@@ -1466,13 +1983,27 @@ impl Engine {
     fn complete_session(&mut self, idx: usize) {
         let inflight = self.sessions.swap_remove(idx);
         let latency_s = inflight.started.elapsed().as_secs_f64();
-        let InFlight { session, waiters, class, model, warm_parent, .. } =
-            inflight;
+        let InFlight {
+            session,
+            waiters,
+            class,
+            model,
+            warm_parent,
+            uid,
+            recovered,
+            ..
+        } = inflight;
         // Defensive: a session completed without ever stepping (or its
         // first step never reached the accounting above) still owes the
         // store its pin back.
         if let Some(h) = warm_parent {
             self.store.lock().unwrap().release(h);
+        }
+        // Retire the uid in the WAL first: whatever happens below, this
+        // session must not be resurrected by a replay.
+        if self.durable.is_some() {
+            self.append_wal(&WalRecord::Complete { uid });
+            self.retire_records(2);
         }
         // Defense-in-depth counter: stays 0 while the controller's
         // refresh override is intact (see feedback::controller).
@@ -1490,11 +2021,19 @@ impl Engine {
                 if entries.is_empty() {
                     return None;
                 }
-                self.store.lock().unwrap().insert(StoredCrf {
+                let crf = StoredCrf {
                     model: model.clone(),
                     entries,
                     home: self.worker.id,
-                })
+                };
+                // Log the insert so the handle (which the client holds
+                // as `parent_session`) survives a restart.
+                let logged = self.durable.is_some().then(|| crf.clone());
+                let handle = self.store.lock().unwrap().insert(crf)?;
+                if let Some(crf) = logged {
+                    self.append_wal(&WalRecord::CrfInsert { handle, crf });
+                }
+                Some(handle)
             })
             .collect();
         let results = match session.into_results() {
@@ -1515,6 +2054,14 @@ impl Engine {
         if let Some(first) = results.first() {
             self.metrics.bump("full_steps", first.full_steps as u64);
             self.metrics.bump("cached_steps", first.cached_steps as u64);
+        }
+        if recovered {
+            // The submitting clients died with the previous process
+            // (waiters is empty); park the results for
+            // [`Engine::drain_recovered_results`].  The CRF harvest
+            // above still ran, so follow-up turns warm-start normally.
+            self.recovered_results.push((uid, results));
+            return;
         }
         // Waiters index into the results (dedup followers share their
         // leader's slot), so this is no longer a 1:1 zip.
@@ -1552,6 +2099,12 @@ impl Engine {
         let inflight = self.sessions.swap_remove(idx);
         if let Some(h) = inflight.warm_parent {
             self.store.lock().unwrap().release(h);
+        }
+        // A failed session is retired, not replayed: re-running it
+        // after a restart would deterministically hit the same error.
+        if self.durable.is_some() {
+            self.append_wal(&WalRecord::Complete { uid: inflight.uid });
+            self.retire_records(2);
         }
         self.metrics.bump("batch_errors", 1);
         for w in inflight.waiters {
@@ -1706,6 +2259,8 @@ impl WorkerPool {
         steal_after: u64,
         crf_store_bytes: usize,
         warmup: &[String],
+        wal_dir: Option<PathBuf>,
+        spill_after_ticks: u64,
     ) -> Result<WorkerPool> {
         let n = workers.max(1);
         let ledger = DephaseLedger::from_config(&qos);
@@ -1729,6 +2284,7 @@ impl WorkerPool {
             let worker_metrics = metrics.clone();
             let warm: Vec<String> = warmup.to_vec();
             let worker_store = store.clone();
+            let worker_wal = wal_dir.clone();
             let ready = ready_tx.clone();
             let thread = std::thread::Builder::new()
                 .name(format!("freqca-worker-{id}"))
@@ -1748,6 +2304,12 @@ impl WorkerPool {
                     .and_then(|mut engine| {
                         for m in &warm {
                             engine.warmup(m)?;
+                        }
+                        // Durable tier last: recovery may immediately
+                        // park spilled stubs, and warmup must not race
+                        // their weight acquisition.
+                        if let Some(wal) = &worker_wal {
+                            engine.enable_durable(wal, spill_after_ticks)?;
                         }
                         Ok(engine)
                     });

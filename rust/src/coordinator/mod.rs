@@ -29,6 +29,7 @@
 
 pub mod batcher;
 pub mod crfstore;
+pub mod durable;
 pub mod engine;
 pub mod placement;
 pub mod residency;

@@ -51,7 +51,7 @@
 pub mod controller;
 pub mod probe;
 
-pub use controller::{ErrorBudgetController, FeedbackConfig};
+pub use controller::{ControllerState, ErrorBudgetController, FeedbackConfig};
 pub use probe::{BandResiduals, ProbeEstimate};
 
 use crate::policy::ProbeSpec;

@@ -118,6 +118,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "crf-store-bytes",
             freqca::coordinator::crfstore::DEFAULT_CRF_STORE_BYTES,
         )?,
+        // Durable session tier: WAL directory (None = volatile) and the
+        // idle-tick threshold before a RAM-parked session spills.
+        wal_dir: args.get("wal-dir").map(std::path::PathBuf::from),
+        spill_after_ticks: args.u64_or(
+            "spill-after-ticks",
+            freqca::coordinator::durable::DEFAULT_SPILL_AFTER_TICKS,
+        )?,
     };
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
     server::serve(&artifacts, opts, Arc::new(AtomicBool::new(false)))

@@ -155,6 +155,47 @@ pub trait CachePolicy {
     fn probe_spec(&self) -> Option<ProbeSpec> {
         None
     }
+
+    // --- the durable-session surface (coordinator::durable) ----------
+
+    /// Export the policy's mutable runtime state for the durable
+    /// session tier.  The default covers every stateless/interval
+    /// policy (only the feedback scale matters); policies with extra
+    /// state (FreqCa's phase anchor, the indicator policies' drift
+    /// accumulator) override both hooks.  `import_state(export_state())`
+    /// must restore the policy **bit-identically**: a restored session
+    /// replays the exact refresh schedule of the uninterrupted one.
+    fn export_state(&self) -> PolicyState {
+        PolicyState {
+            feedback_scale: self.feedback_scale(),
+            ..PolicyState::default()
+        }
+    }
+
+    /// Restore state produced by [`export_state`](Self::export_state).
+    fn import_state(&mut self, st: PolicyState) {
+        self.set_feedback_scale(st.feedback_scale);
+    }
+}
+
+/// Mutable runtime state common to all policies, exported for the
+/// durable session tier (`sampler::snapshot`).  A flat superset: each
+/// policy reads only the fields it owns and leaves the rest at their
+/// defaults, which keeps the WAL encoding policy-agnostic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolicyState {
+    /// The error-feedback aggressiveness scale (1.0 = neutral).
+    pub feedback_scale: f64,
+    /// FreqCa's interval phase anchor (0 for every other policy).
+    pub anchor: usize,
+    /// The indicator policies' accumulated drift (0.0 otherwise).
+    pub acc: f64,
+}
+
+impl Default for PolicyState {
+    fn default() -> PolicyState {
+        PolicyState { feedback_scale: 1.0, anchor: 0, acc: 0.0 }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -301,6 +342,19 @@ impl CachePolicy for FreqCa {
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
         Some(ProbeSpec::new(self.spec, self.low_order, self.high_order))
+    }
+
+    fn export_state(&self) -> PolicyState {
+        PolicyState {
+            feedback_scale: self.feedback_scale,
+            anchor: self.anchor,
+            acc: 0.0,
+        }
+    }
+
+    fn import_state(&mut self, st: PolicyState) {
+        self.feedback_scale = st.feedback_scale;
+        self.anchor = st.anchor;
     }
 }
 
@@ -486,6 +540,19 @@ impl CachePolicy for TeaCache {
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
         Some(ProbeSpec::new(BandSpec::new(Decomp::None, 0), 0, 0))
+    }
+
+    fn export_state(&self) -> PolicyState {
+        PolicyState {
+            feedback_scale: self.feedback_scale,
+            anchor: 0,
+            acc: self.acc,
+        }
+    }
+
+    fn import_state(&mut self, st: PolicyState) {
+        self.feedback_scale = st.feedback_scale;
+        self.acc = st.acc;
     }
 }
 
@@ -694,6 +761,19 @@ impl CachePolicy for FreqCaAdaptive {
 
     fn probe_spec(&self) -> Option<ProbeSpec> {
         Some(ProbeSpec::new(self.spec, self.low_order, self.high_order))
+    }
+
+    fn export_state(&self) -> PolicyState {
+        PolicyState {
+            feedback_scale: self.feedback_scale,
+            anchor: 0,
+            acc: self.acc,
+        }
+    }
+
+    fn import_state(&mut self, st: PolicyState) {
+        self.feedback_scale = st.feedback_scale;
+        self.acc = st.acc;
     }
 }
 
@@ -1085,6 +1165,58 @@ mod tests {
         let mut f = Fora { n: 3, k: 3 };
         f.set_feedback_scale(3.0);
         assert!((CachePolicy::feedback_scale(&f) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_state_round_trips_schedules_bit_identically() {
+        // FreqCa: a re-anchored, feedback-scaled schedule survives
+        // export/import — the restored policy peeks the same steps.
+        let spec = BandSpec::new(Decomp::Dct, 2);
+        let mut p = FreqCa::new(5, spec, 3);
+        p.set_feedback_scale(1.6);
+        p.note_forced_refresh(4);
+        let mut q = FreqCa::new(5, spec, 3);
+        q.import_state(p.export_state());
+        for step in 0..50 {
+            assert_eq!(p.peek(step, 50, 3), q.peek(step, 50, 3), "step {step}");
+        }
+        assert_eq!(q.feedback_scale().to_bits(), p.feedback_scale().to_bits());
+
+        // TeaCache: the drift accumulator survives, so the restored
+        // policy refreshes on the same step the original would have.
+        let mut a = TeaCache::new(0.5, 3);
+        let x0 = [1.0f32, 1.0];
+        let x1 = [1.2f32, 1.2]; // rel_l1 = 0.2 per decide
+        let hist = [-1.0];
+        let c = StepCtx {
+            step: 1,
+            n_steps: 50,
+            s: 0.0,
+            hist_s: &hist,
+            x: &x1,
+            x_at_last_full: Some(&x0),
+        };
+        assert!(matches!(a.decide(&c).unwrap(), Action::Predict(_))); // 0.2
+        assert!(matches!(a.decide(&c).unwrap(), Action::Predict(_))); // 0.4
+        let mut b = TeaCache::new(0.5, 3);
+        b.import_state(a.export_state());
+        assert!(matches!(b.decide(&c).unwrap(), Action::Full)); // 0.6
+        assert!(matches!(a.decide(&c).unwrap(), Action::Full));
+
+        // Stateless policies use the default hooks without panicking.
+        let mut f = Fora { n: 3, k: 3 };
+        let st = f.export_state();
+        assert_eq!(st, PolicyState::default());
+        f.import_state(st);
+
+        // FreqCaAdaptive carries its accumulator through the state.
+        let mut fa = FreqCaAdaptive::new(0.5, spec, 3);
+        fa.set_feedback_scale(2.0);
+        let st = fa.export_state();
+        assert_eq!(st.feedback_scale, 2.0);
+        let mut fb = FreqCaAdaptive::new(0.5, spec, 3);
+        fb.import_state(st);
+        assert_eq!(fb.export_state(), st);
     }
 
     #[test]

@@ -20,6 +20,10 @@
 //! `predict_*_b{B}` execution per step; the CRF cache then holds
 //! [B, T, D] snapshots, still O(1) per request.
 
+pub mod snapshot;
+
+pub use snapshot::SessionSnapshot;
+
 use std::rc::Rc;
 use std::time::Instant;
 

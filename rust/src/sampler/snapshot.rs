@@ -1,0 +1,739 @@
+//! Session snapshots: the serde surface of the durable session tier.
+//!
+//! A [`SessionSnapshot`] captures **every** piece of mutable state a
+//! [`SamplerSession`] owns — latents, conditioning, the CRF cache with
+//! its counters, the policy's runtime state, the error-budget
+//! controller, per-step records, warm-start plumbing — so that
+//! [`SamplerSession::restore`] rebuilds a session whose future float
+//! trajectory is **bit-identical** to the one the snapshotted session
+//! would have taken.  Device-resident state is deliberately absent: the
+//! weights handle is re-acquired from the worker's residency layer, and
+//! the device history stack (`hist_buf`) re-uploads lazily on the next
+//! predicted step (restore leaves it `None`; the cache generation
+//! counter rides the snapshot, so the first predict sees a mismatch and
+//! uploads).
+//!
+//! The encoding is the WAL's [`crate::util::bytes`] codec — floats as
+//! IEEE-754 bit patterns, checked reads, a leading version byte — and
+//! round-trips exactly: `to_bytes ∘ from_bytes ∘ to_bytes` is the
+//! identity on the byte vector, which the park/spill parity tests
+//! assert end to end.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cache::{CacheState, CrfCache};
+use crate::feedback::{
+    BandResiduals, ControllerState, ErrorBudgetController, FeedbackConfig,
+    SessionFeedback,
+};
+use crate::freq::{BandSpec, Decomp};
+use crate::model::ModelConfig;
+use crate::policy::{parse_policy, PolicyState, ProbeSpec};
+use crate::sampler::{
+    SampleOpts, SamplerSession, StepAction, StepRecord, WarmStart,
+};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::{Arena, Tensor};
+
+/// Version byte leading every encoded snapshot.  Bump on any layout
+/// change; [`SessionSnapshot::from_bytes`] refuses versions it does not
+/// know rather than misparse.
+pub const SNAPSHOT_VERSION: u8 = 1;
+
+/// The complete persistable state of one [`SamplerSession`].
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    /// Model name — restore refuses a mismatched `ModelConfig`.
+    pub model: String,
+    /// The policy description string the session was built from
+    /// (`Request::policy`); restore re-parses it and then overlays
+    /// [`policy_state`](Self::policy_state).
+    pub policy_desc: String,
+    pub policy_state: PolicyState,
+    pub n_steps: usize,
+    /// Batch size B.
+    pub b: usize,
+    pub record_pred_error: bool,
+    /// The session-level feedback config (`SampleOpts::feedback`).
+    pub feedback_cfg: Option<FeedbackConfig>,
+    /// Current latent [B, S, S, C].
+    pub x: Tensor,
+    pub cond: Tensor,
+    pub ref_t: Option<Tensor>,
+    pub cache: CacheState,
+    pub token_age: Vec<u32>,
+    pub x_at_last_full: Option<Vec<f32>>,
+    pub full_steps: usize,
+    pub cached_steps: usize,
+    pub partial_steps: usize,
+    pub total_flops: f64,
+    pub steps: Vec<StepRecord>,
+    pub step_idx: usize,
+    pub busy_s: f64,
+    /// Live feedback state: controller + resolved probe plan, present
+    /// exactly when the session runs the error-feedback control plane.
+    pub feedback: Option<(ControllerState, ProbeSpec)>,
+    pub steps_since_full: usize,
+    pub warm_pending: Option<WarmStart>,
+    pub warm_started: bool,
+    pub warm_demoted: bool,
+    pub warm_budget: f64,
+}
+
+impl SessionSnapshot {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(64 + self.x.data.len() * 4);
+        w.put_u8(SNAPSHOT_VERSION);
+        w.put_str(&self.model);
+        w.put_str(&self.policy_desc);
+        w.put_f64(self.policy_state.feedback_scale);
+        w.put_usize(self.policy_state.anchor);
+        w.put_f64(self.policy_state.acc);
+        w.put_usize(self.n_steps);
+        w.put_usize(self.b);
+        w.put_bool(self.record_pred_error);
+        w.put_bool(self.feedback_cfg.is_some());
+        if let Some(cfg) = &self.feedback_cfg {
+            put_feedback_cfg(&mut w, cfg);
+        }
+        put_tensor(&mut w, &self.x);
+        put_tensor(&mut w, &self.cond);
+        w.put_bool(self.ref_t.is_some());
+        if let Some(t) = &self.ref_t {
+            put_tensor(&mut w, t);
+        }
+        w.put_usize(self.cache.k);
+        w.put_u32(self.cache.entries.len() as u32);
+        for (s, t) in &self.cache.entries {
+            w.put_f64(*s);
+            put_tensor(&mut w, t);
+        }
+        w.put_usize(self.cache.peak_bytes);
+        w.put_u64(self.cache.pushes);
+        w.put_u64(self.cache.generation);
+        w.put_u32s(&self.token_age);
+        w.put_bool(self.x_at_last_full.is_some());
+        if let Some(v) = &self.x_at_last_full {
+            w.put_f32s(v);
+        }
+        w.put_usize(self.full_steps);
+        w.put_usize(self.cached_steps);
+        w.put_usize(self.partial_steps);
+        w.put_f64(self.total_flops);
+        w.put_u32(self.steps.len() as u32);
+        for r in &self.steps {
+            put_step_record(&mut w, r);
+        }
+        w.put_usize(self.step_idx);
+        w.put_f64(self.busy_s);
+        w.put_bool(self.feedback.is_some());
+        if let Some((ctl, probe)) = &self.feedback {
+            put_controller(&mut w, ctl);
+            put_probe_spec(&mut w, probe);
+        }
+        w.put_usize(self.steps_since_full);
+        w.put_bool(self.warm_pending.is_some());
+        if let Some(ws) = &self.warm_pending {
+            w.put_u32(ws.entries.len() as u32);
+            for (s, v) in &ws.entries {
+                w.put_f64(*s);
+                w.put_f32s(v);
+            }
+        }
+        w.put_bool(self.warm_started);
+        w.put_bool(self.warm_demoted);
+        w.put_f64(self.warm_budget);
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionSnapshot> {
+        let mut r = ByteReader::new(bytes);
+        let version = r.u8().context("snapshot version byte")?;
+        if version != SNAPSHOT_VERSION {
+            bail!(
+                "session snapshot version {version} is not the supported \
+                 version {SNAPSHOT_VERSION}; refusing to guess at its layout"
+            );
+        }
+        let model = r.str()?;
+        let policy_desc = r.str()?;
+        let policy_state = PolicyState {
+            feedback_scale: r.f64()?,
+            anchor: r.usize()?,
+            acc: r.f64()?,
+        };
+        let n_steps = r.usize()?;
+        let b = r.usize()?;
+        let record_pred_error = r.bool()?;
+        let feedback_cfg = if r.bool()? {
+            Some(read_feedback_cfg(&mut r)?)
+        } else {
+            None
+        };
+        let x = read_tensor(&mut r)?;
+        let cond = read_tensor(&mut r)?;
+        let ref_t = if r.bool()? { Some(read_tensor(&mut r)?) } else { None };
+        let k = r.usize()?;
+        let n_entries = r.u32()? as usize;
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let s = r.f64()?;
+            entries.push((s, read_tensor(&mut r)?));
+        }
+        let cache = CacheState {
+            k,
+            entries,
+            peak_bytes: r.usize()?,
+            pushes: r.u64()?,
+            generation: r.u64()?,
+        };
+        let token_age = r.u32s()?;
+        let x_at_last_full = if r.bool()? { Some(r.f32s()?) } else { None };
+        let full_steps = r.usize()?;
+        let cached_steps = r.usize()?;
+        let partial_steps = r.usize()?;
+        let total_flops = r.f64()?;
+        let n_steps_rec = r.u32()? as usize;
+        let mut steps = Vec::with_capacity(n_steps_rec);
+        for _ in 0..n_steps_rec {
+            steps.push(read_step_record(&mut r)?);
+        }
+        let step_idx = r.usize()?;
+        let busy_s = r.f64()?;
+        let feedback = if r.bool()? {
+            let ctl = read_controller(&mut r)?;
+            let probe = read_probe_spec(&mut r)?;
+            Some((ctl, probe))
+        } else {
+            None
+        };
+        let steps_since_full = r.usize()?;
+        let warm_pending = if r.bool()? {
+            let n = r.u32()? as usize;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let s = r.f64()?;
+                entries.push((s, r.f32s()?));
+            }
+            Some(WarmStart { entries })
+        } else {
+            None
+        };
+        let warm_started = r.bool()?;
+        let warm_demoted = r.bool()?;
+        let warm_budget = r.f64()?;
+        r.finish()?;
+        Ok(SessionSnapshot {
+            model,
+            policy_desc,
+            policy_state,
+            n_steps,
+            b,
+            record_pred_error,
+            feedback_cfg,
+            x,
+            cond,
+            ref_t,
+            cache,
+            token_age,
+            x_at_last_full,
+            full_steps,
+            cached_steps,
+            partial_steps,
+            total_flops,
+            steps,
+            step_idx,
+            busy_s,
+            feedback,
+            steps_since_full,
+            warm_pending,
+            warm_started,
+            warm_demoted,
+            warm_budget,
+        })
+    }
+}
+
+impl SamplerSession<'_> {
+    /// Export this session's complete mutable state.  `policy_desc` is
+    /// the description string the policy was parsed from (the engine
+    /// keeps it alongside the session) — the snapshot stores it so
+    /// restore can rebuild the same policy before overlaying its
+    /// exported runtime state.
+    pub fn snapshot(&self, policy_desc: &str) -> SessionSnapshot {
+        SessionSnapshot {
+            model: self.cfg.name.clone(),
+            policy_desc: policy_desc.to_string(),
+            policy_state: self.policy.export_state(),
+            n_steps: self.n_steps,
+            b: self.b,
+            record_pred_error: self.opts.record_pred_error,
+            feedback_cfg: self.opts.feedback,
+            x: self.x.clone(),
+            cond: self.cond.clone(),
+            ref_t: self.ref_t.clone(),
+            cache: self.cache.export_state(),
+            token_age: self.token_age.clone(),
+            x_at_last_full: self.x_at_last_full.clone(),
+            full_steps: self.full_steps,
+            cached_steps: self.cached_steps,
+            partial_steps: self.partial_steps,
+            total_flops: self.total_flops,
+            steps: self.steps.clone(),
+            step_idx: self.step_idx,
+            busy_s: self.busy_s,
+            feedback: self
+                .feedback
+                .as_ref()
+                .map(|fb| (fb.controller.export_state(), fb.probe)),
+            steps_since_full: self.steps_since_full,
+            warm_pending: self.warm_pending.clone(),
+            warm_started: self.warm_started,
+            warm_demoted: self.warm_demoted,
+            warm_budget: self.warm_budget,
+        }
+    }
+}
+
+impl SamplerSession<'static> {
+    /// Rebuild a session from a snapshot.  `weights` is the
+    /// re-acquired device weights handle for `cfg` (the snapshot never
+    /// holds device state); `arena` is the worker's shared scratch
+    /// arena (None = a private one).  The restored session continues
+    /// from `step_idx` with a float trajectory bit-identical to the
+    /// snapshotted session's.
+    pub fn restore(
+        snap: SessionSnapshot,
+        cfg: &ModelConfig,
+        weights: Rc<xla::PjRtBuffer>,
+        arena: Option<Rc<Arena>>,
+    ) -> Result<SamplerSession<'static>> {
+        if snap.model != cfg.name {
+            bail!(
+                "snapshot is for model '{}', not '{}'",
+                snap.model,
+                cfg.name
+            );
+        }
+        if snap.b == 0 || snap.step_idx > snap.n_steps {
+            bail!(
+                "corrupt snapshot: b={}, step {}/{}",
+                snap.b,
+                snap.step_idx,
+                snap.n_steps
+            );
+        }
+        if snap.x.data.len() != snap.b * cfg.latent_elems() {
+            bail!(
+                "snapshot latent has {} elems, model {} expects {} per \
+                 batch of {}",
+                snap.x.data.len(),
+                cfg.name,
+                cfg.latent_elems(),
+                snap.b
+            );
+        }
+        let decomp = Decomp::parse(&cfg.decomp)?;
+        let mut policy =
+            parse_policy(&snap.policy_desc, decomp, cfg.grid, cfg.k_hist)?;
+        policy.import_state(snap.policy_state);
+        let feedback = snap.feedback.map(|(ctl, probe)| SessionFeedback {
+            controller: ErrorBudgetController::from_state(ctl),
+            probe,
+        });
+        let arena = arena.unwrap_or_else(|| Rc::new(Arena::new()));
+        Ok(SamplerSession {
+            cfg: cfg.clone(),
+            weights,
+            n_steps: snap.n_steps,
+            b: snap.b,
+            opts: SampleOpts {
+                record_pred_error: snap.record_pred_error,
+                feedback: snap.feedback_cfg,
+                arena: None,
+                warm_start: None,
+            },
+            policy,
+            x: snap.x,
+            cond: snap.cond,
+            ref_t: snap.ref_t,
+            cache: CrfCache::from_state(snap.cache),
+            // Re-uploads on the next predicted step: restore leaves no
+            // device state behind and the generation check misses on
+            // `None`.
+            hist_buf: None,
+            token_age: snap.token_age,
+            x_at_last_full: snap.x_at_last_full,
+            full_steps: snap.full_steps,
+            cached_steps: snap.cached_steps,
+            partial_steps: snap.partial_steps,
+            total_flops: snap.total_flops,
+            steps: snap.steps,
+            step_idx: snap.step_idx,
+            busy_s: snap.busy_s,
+            feedback,
+            arena,
+            steps_since_full: snap.steps_since_full,
+            warm_pending: snap.warm_pending,
+            warm_started: snap.warm_started,
+            warm_demoted: snap.warm_demoted,
+            warm_budget: snap.warm_budget,
+        })
+    }
+}
+
+fn put_tensor(w: &mut ByteWriter, t: &Tensor) {
+    w.put_u32(t.shape.len() as u32);
+    for d in &t.shape {
+        w.put_usize(*d);
+    }
+    w.put_f32s(&t.data);
+}
+
+fn read_tensor(r: &mut ByteReader) -> Result<Tensor> {
+    let ndim = r.u32()? as usize;
+    if ndim > 8 {
+        bail!("tensor rank {ndim} is implausible (corrupt snapshot)");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.usize()?);
+    }
+    let data = r.f32s()?;
+    Tensor::new(shape, data)
+}
+
+fn put_feedback_cfg(w: &mut ByteWriter, cfg: &FeedbackConfig) {
+    w.put_f64(cfg.error_budget);
+    w.put_f64(cfg.kp);
+    w.put_f64(cfg.ki);
+    w.put_f64(cfg.min_scale);
+    w.put_f64(cfg.max_scale);
+    w.put_usize(cfg.probe_sample);
+}
+
+fn read_feedback_cfg(r: &mut ByteReader) -> Result<FeedbackConfig> {
+    Ok(FeedbackConfig {
+        error_budget: r.f64()?,
+        kp: r.f64()?,
+        ki: r.f64()?,
+        min_scale: r.f64()?,
+        max_scale: r.f64()?,
+        probe_sample: r.usize()?,
+    })
+}
+
+fn put_controller(w: &mut ByteWriter, st: &ControllerState) {
+    put_feedback_cfg(w, &st.cfg);
+    w.put_f64(st.rate);
+    w.put_f64(st.accumulated);
+    w.put_f64(st.integral);
+    w.put_f64(st.scale);
+    w.put_u64(st.probes);
+    w.put_u64(st.breaches);
+}
+
+fn read_controller(r: &mut ByteReader) -> Result<ControllerState> {
+    Ok(ControllerState {
+        cfg: read_feedback_cfg(r)?,
+        rate: r.f64()?,
+        accumulated: r.f64()?,
+        integral: r.f64()?,
+        scale: r.f64()?,
+        probes: r.u64()?,
+        breaches: r.u64()?,
+    })
+}
+
+fn put_probe_spec(w: &mut ByteWriter, p: &ProbeSpec) {
+    w.put_str(p.spec.decomp.name());
+    w.put_usize(p.spec.cutoff);
+    w.put_usize(p.low_order);
+    w.put_usize(p.high_order);
+    w.put_usize(p.sample_stride);
+}
+
+fn read_probe_spec(r: &mut ByteReader) -> Result<ProbeSpec> {
+    let decomp = Decomp::parse(&r.str()?)?;
+    let cutoff = r.usize()?;
+    Ok(ProbeSpec {
+        spec: BandSpec::new(decomp, cutoff),
+        low_order: r.usize()?,
+        high_order: r.usize()?,
+        sample_stride: r.usize()?,
+    })
+}
+
+fn put_step_record(w: &mut ByteWriter, rec: &StepRecord) {
+    w.put_usize(rec.step);
+    w.put_f32(rec.t);
+    w.put_u8(match rec.action {
+        StepAction::Full => 0,
+        StepAction::Cached => 1,
+        StepAction::Partial => 2,
+    });
+    w.put_f64(rec.wall_s);
+    w.put_bool(rec.pred_mse.is_some());
+    if let Some(v) = rec.pred_mse {
+        w.put_f64(v);
+    }
+    w.put_bool(rec.probe.is_some());
+    if let Some(p) = &rec.probe {
+        w.put_f64(p.low);
+        w.put_f64(p.high);
+        w.put_f64(p.overall);
+    }
+    w.put_bool(rec.feedback_forced);
+    w.put_bool(rec.probe_sampled);
+    w.put_bool(rec.probe_full_fallback);
+}
+
+fn read_step_record(r: &mut ByteReader) -> Result<StepRecord> {
+    let step = r.usize()?;
+    let t = r.f32()?;
+    let action = match r.u8()? {
+        0 => StepAction::Full,
+        1 => StepAction::Cached,
+        2 => StepAction::Partial,
+        other => bail!("unknown step action byte {other}"),
+    };
+    let wall_s = r.f64()?;
+    let pred_mse = if r.bool()? { Some(r.f64()?) } else { None };
+    let probe = if r.bool()? {
+        Some(BandResiduals {
+            low: r.f64()?,
+            high: r.f64()?,
+            overall: r.f64()?,
+        })
+    } else {
+        None
+    };
+    Ok(StepRecord {
+        step,
+        t,
+        action,
+        wall_s,
+        pred_mse,
+        probe,
+        feedback_forced: r.bool()?,
+        probe_sampled: r.bool()?,
+        probe_full_fallback: r.bool()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_cfg() -> ModelConfig {
+        let meta = crate::util::Json::parse(
+            r#"{"name":"t","latent":4,"channels":1,"patch":2,"grid":2,
+            "tokens":4,"dim":2,"depth":1,"heads":1,"cond_dim":4,
+            "mlp_ratio":4,"is_edit":false,"decomp":"dct","param_count":8,
+            "k_hist":3,"batch_sizes":[1],"artifacts":{}}"#,
+        )
+        .unwrap();
+        ModelConfig::from_meta(&meta).unwrap()
+    }
+
+    /// A snapshot exercising every optional branch, consistent with
+    /// `mini_cfg` so `restore` accepts it.
+    fn rich_snapshot() -> SessionSnapshot {
+        let crf = |v: f32| Tensor::new(vec![1, 4, 2], vec![v; 8]).unwrap();
+        SessionSnapshot {
+            model: "t".into(),
+            policy_desc: "freqca:n=3".into(),
+            policy_state: PolicyState {
+                feedback_scale: 1.25,
+                anchor: 2,
+                acc: 0.0,
+            },
+            n_steps: 6,
+            b: 1,
+            record_pred_error: false,
+            feedback_cfg: Some(FeedbackConfig::default()),
+            x: Tensor::new(vec![1, 4, 4, 1], (0..16).map(|i| i as f32 * 0.5)
+                .collect())
+                .unwrap(),
+            cond: Tensor::new(vec![1, 4], vec![0.1, -0.2, 0.3, -0.4])
+                .unwrap(),
+            ref_t: None,
+            cache: CacheState {
+                k: 3,
+                entries: vec![(0.6, crf(1.0)), (0.2, crf(-2.0))],
+                peak_bytes: 96,
+                pushes: 4,
+                generation: 5,
+            },
+            token_age: vec![0, 2, 1, 0],
+            x_at_last_full: Some(vec![0.25; 16]),
+            full_steps: 2,
+            cached_steps: 1,
+            partial_steps: 0,
+            total_flops: 1.5e9,
+            steps: vec![
+                StepRecord {
+                    step: 0,
+                    t: 1.0,
+                    action: StepAction::Full,
+                    wall_s: 0.01,
+                    pred_mse: None,
+                    probe: None,
+                    feedback_forced: false,
+                    probe_sampled: false,
+                    probe_full_fallback: false,
+                },
+                StepRecord {
+                    step: 1,
+                    t: 0.75,
+                    action: StepAction::Cached,
+                    // NaN payload: proves the codec is bit-exact, not
+                    // value-exact.
+                    pred_mse: Some(f64::from_bits(0x7FF8_0000_0000_BEEF)),
+                    wall_s: 0.002,
+                    probe: Some(BandResiduals {
+                        low: 0.01,
+                        high: 0.04,
+                        overall: 0.02,
+                    }),
+                    feedback_forced: true,
+                    probe_sampled: true,
+                    probe_full_fallback: false,
+                },
+            ],
+            step_idx: 3,
+            busy_s: 0.012,
+            feedback: Some((
+                ControllerState {
+                    cfg: FeedbackConfig::default(),
+                    rate: 0.004,
+                    accumulated: 0.008,
+                    integral: 0.6,
+                    scale: 1.25,
+                    probes: 2,
+                    breaches: 0,
+                },
+                ProbeSpec {
+                    spec: BandSpec::new(Decomp::Dct, 1),
+                    low_order: 0,
+                    high_order: 2,
+                    sample_stride: 2,
+                },
+            )),
+            steps_since_full: 1,
+            warm_pending: Some(WarmStart {
+                entries: vec![(0.5, vec![1.0; 8]), (0.7, vec![-1.0; 8])],
+            }),
+            warm_started: false,
+            warm_demoted: false,
+            warm_budget: 0.1,
+        }
+    }
+
+    #[test]
+    fn snapshot_bytes_round_trip_bit_identically() {
+        let snap = rich_snapshot();
+        let bytes = snap.to_bytes();
+        let back = SessionSnapshot::from_bytes(&bytes).unwrap();
+        // Byte identity is the contract the WAL relies on.
+        assert_eq!(back.to_bytes(), bytes);
+        // Spot-check the bit-exactness claim on the NaN payload.
+        assert_eq!(
+            back.steps[1].pred_mse.unwrap().to_bits(),
+            0x7FF8_0000_0000_BEEF
+        );
+        assert_eq!(format!("{back:?}"), format!("{snap:?}"));
+    }
+
+    #[test]
+    fn minimal_snapshot_round_trips_too() {
+        // Every Option at None, empty vectors.
+        let mut snap = rich_snapshot();
+        snap.feedback_cfg = None;
+        snap.ref_t = None;
+        snap.cache.entries.clear();
+        snap.x_at_last_full = None;
+        snap.steps.clear();
+        snap.feedback = None;
+        snap.warm_pending = None;
+        let bytes = snap.to_bytes();
+        let back = SessionSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn corrupt_and_versioned_bytes_are_rejected() {
+        let snap = rich_snapshot();
+        let bytes = snap.to_bytes();
+        // Newer version byte: refused, not misparsed.
+        let mut v = bytes.clone();
+        v[0] = SNAPSHOT_VERSION + 1;
+        let err = SessionSnapshot::from_bytes(&v).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // Truncation anywhere inside is a clean error (checked reads).
+        assert!(SessionSnapshot::from_bytes(&bytes[..bytes.len() - 1])
+            .is_err());
+        assert!(SessionSnapshot::from_bytes(&bytes[..10]).is_err());
+        // Trailing garbage is rejected by finish().
+        let mut t = bytes.clone();
+        t.push(0);
+        assert!(SessionSnapshot::from_bytes(&t).is_err());
+    }
+
+    #[test]
+    fn restore_then_resnapshot_is_byte_identical() {
+        let cfg = mini_cfg();
+        let weights = Rc::new(
+            xla::PjRtClient::cpu()
+                .unwrap()
+                .buffer_from_host_buffer(&[0.0f32; 8], &[8], None)
+                .unwrap(),
+        );
+        let snap = rich_snapshot();
+        let bytes = snap.to_bytes();
+        let session =
+            SamplerSession::restore(snap, &cfg, weights, None).unwrap();
+        assert_eq!(session.step_index(), 3);
+        assert_eq!(session.n_steps(), 6);
+        assert!(!session.is_done());
+        assert_eq!(session.records().len(), 2);
+        // The full circle: restore -> snapshot -> bytes reproduces the
+        // original encoding exactly (policy state, controller, cache
+        // counters and all).
+        assert_eq!(session.snapshot("freqca:n=3").to_bytes(), bytes);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_model_and_shapes() {
+        let cfg = mini_cfg();
+        let weights = Rc::new(
+            xla::PjRtClient::cpu()
+                .unwrap()
+                .buffer_from_host_buffer(&[0.0f32; 8], &[8], None)
+                .unwrap(),
+        );
+        let mut snap = rich_snapshot();
+        snap.model = "other".into();
+        assert!(SamplerSession::restore(
+            snap,
+            &cfg,
+            weights.clone(),
+            None
+        )
+        .is_err());
+        let mut snap = rich_snapshot();
+        snap.x = Tensor::new(vec![1, 2], vec![0.0; 2]).unwrap();
+        assert!(SamplerSession::restore(
+            snap,
+            &cfg,
+            weights.clone(),
+            None
+        )
+        .is_err());
+        let mut snap = rich_snapshot();
+        snap.step_idx = 99;
+        assert!(SamplerSession::restore(snap, &cfg, weights, None).is_err());
+    }
+}

@@ -77,6 +77,17 @@ pub struct ServeOpts {
     /// request naming it via `parent_session` warm-starts instead of
     /// cold-starting.
     pub crf_store_bytes: usize,
+    /// Durable session tier (`--wal-dir`): directory for per-worker
+    /// write-ahead logs (`worker{id}.wal`).  When set, admissions,
+    /// completions, CRF-store inserts, and spilled-session snapshots
+    /// are journalled; on restart each worker replays its committed
+    /// prefix and re-enters every in-flight session.  None = volatile
+    /// (pre-durable behaviour).
+    pub wal_dir: Option<std::path::PathBuf>,
+    /// Scheduler ticks a RAM-parked session must sit idle before it is
+    /// eligible to spill to the WAL when the parking lot is full
+    /// (`--spill-after-ticks`; only meaningful with `wal_dir`).
+    pub spill_after_ticks: u64,
 }
 
 /// Default concurrency cap: enough sessions to keep short jobs
@@ -99,6 +110,9 @@ impl Default for ServeOpts {
             steal_after: crate::coordinator::engine::DEFAULT_STEAL_AFTER,
             crf_store_bytes:
                 crate::coordinator::crfstore::DEFAULT_CRF_STORE_BYTES,
+            wal_dir: None,
+            spill_after_ticks:
+                crate::coordinator::durable::DEFAULT_SPILL_AFTER_TICKS,
         }
     }
 }
@@ -137,6 +151,8 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         opts.steal_after,
         opts.crf_store_bytes,
         &opts.warmup,
+        opts.wal_dir.clone(),
+        opts.spill_after_ticks,
     )?;
     let models = pool.models().to_vec();
     let listener = TcpListener::bind(&opts.addr)

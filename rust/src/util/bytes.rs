@@ -1,0 +1,331 @@
+//! Little-endian byte codec for the durable session tier.
+//!
+//! The WAL (`coordinator::durable`) and the session snapshot surface
+//! (`sampler::snapshot`) both need a serialization that is
+//! **bit-identical** under round trip: a restored session must replay
+//! the exact float trajectory the original would have taken, so floats
+//! travel as their IEEE-754 bit patterns (`to_bits`/`from_bits`), never
+//! through a decimal intermediate.  No general-purpose serde framework
+//! ships in the vendored dependency set, and none is needed — every
+//! persisted structure is a flat composition of the primitives below.
+//!
+//! Reads are checked: a [`ByteReader`] refuses to run past the end of
+//! its buffer and [`ByteReader::finish`] refuses trailing garbage, so a
+//! corrupt payload that slipped past the WAL's CRC (or a
+//! version-skewed writer) surfaces as a clean error instead of a
+//! misaligned decode.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> ByteWriter {
+        ByteWriter { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Encoded as a strict 0/1 byte (the reader rejects anything else).
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` always travels as a u64 so 32- and 64-bit hosts agree on
+    /// the layout.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Bit-exact: NaN payloads and signed zeros survive.
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// Bit-exact: NaN payloads and signed zeros survive.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Raw bytes, no length prefix (caller frames them).
+    pub fn put_raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// u32 byte length + UTF-8 bytes.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v.as_bytes());
+    }
+
+    /// u32 element count + bit-exact elements.
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u32(v.len() as u32);
+        for x in v {
+            self.put_f32(*x);
+        }
+    }
+
+    /// u32 element count + bit-exact elements.
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u32(v.len() as u32);
+        for x in v {
+            self.put_f64(*x);
+        }
+    }
+
+    /// u32 element count + elements.
+    pub fn put_u32s(&mut self, v: &[u32]) {
+        self.put_u32(v.len() as u32);
+        for x in v {
+            self.put_u32(*x);
+        }
+    }
+}
+
+/// Checked little-endian decoder over a borrowed buffer.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Error unless the buffer was consumed exactly.
+    pub fn finish(&self) -> Result<()> {
+        if !self.is_empty() {
+            bail!("{} trailing bytes after decode", self.remaining());
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "buffer underrun: need {n} bytes, {} remain",
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Everything not yet consumed (tail framing, e.g. a nested
+    /// snapshot payload).
+    pub fn take_rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("invalid bool byte {other}"),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| {
+            anyhow::anyhow!("u64 value {v} does not fit in usize")
+        })
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| anyhow::anyhow!("invalid UTF-8 string: {e}"))
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        // Guard the allocation against a corrupt length prefix.
+        if self.remaining() < n.saturating_mul(4) {
+            bail!("f32 vec length {n} exceeds remaining buffer");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        if self.remaining() < n.saturating_mul(8) {
+            bail!("f64 vec length {n} exceeds remaining buffer");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        if self.remaining() < n.saturating_mul(4) {
+            bail!("u32 vec length {n} exceeds remaining buffer");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = ByteWriter::new();
+        w.put_u8(0xAB);
+        w.put_bool(true);
+        w.put_bool(false);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_usize(123_456);
+        w.put_f32(-0.0);
+        w.put_f64(std::f64::consts::PI);
+        w.put_str("durable");
+        w.put_f32s(&[1.5, -2.25, 0.0]);
+        w.put_f64s(&[-1.0, 1e300]);
+        w.put_u32s(&[7, 0, 9]);
+        let bytes = w.into_bytes();
+
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 0xAB);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.usize().unwrap(), 123_456);
+        let z = r.f32().unwrap();
+        assert_eq!(z.to_bits(), (-0.0f32).to_bits(), "signed zero lost");
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.str().unwrap(), "durable");
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -2.25, 0.0]);
+        assert_eq!(r.f64s().unwrap(), vec![-1.0, 1e300]);
+        assert_eq!(r.u32s().unwrap(), vec![7, 0, 9]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn nan_payloads_are_bit_exact() {
+        let weird = f32::from_bits(0x7FC0_1234); // NaN with a payload
+        let mut w = ByteWriter::new();
+        w.put_f32(weird);
+        w.put_f64(f64::from_bits(0x7FF8_0000_0000_BEEF));
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.f32().unwrap().to_bits(), 0x7FC0_1234);
+        assert_eq!(r.f64().unwrap().to_bits(), 0x7FF8_0000_0000_BEEF);
+    }
+
+    #[test]
+    fn underrun_and_trailing_bytes_error() {
+        let mut w = ByteWriter::new();
+        w.put_u32(5);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.u64().is_err(), "underrun accepted");
+        // The failed read consumed nothing usable; a u32 still works.
+        assert_eq!(r.u32().unwrap(), 5);
+
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.finish().is_err(), "trailing bytes accepted");
+        // A corrupt length prefix cannot trigger a giant allocation.
+        let mut w = ByteWriter::new();
+        w.put_u32(u32::MAX);
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).f32s().is_err());
+        assert!(ByteReader::new(&bytes).str().is_err());
+    }
+
+    #[test]
+    fn bad_bool_byte_is_rejected() {
+        let bytes = [2u8];
+        assert!(ByteReader::new(&bytes).bool().is_err());
+    }
+
+    #[test]
+    fn take_rest_consumes_the_tail() {
+        let mut w = ByteWriter::new();
+        w.put_u64(9);
+        w.put_raw(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u64().unwrap(), 9);
+        assert_eq!(r.take_rest(), &[1, 2, 3]);
+        r.finish().unwrap();
+    }
+}

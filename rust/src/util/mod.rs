@@ -5,6 +5,7 @@
 //! the minimal, well-tested subset the serving system needs.
 
 pub mod arena;
+pub mod bytes;
 pub mod json;
 pub mod propcheck;
 pub mod rng;

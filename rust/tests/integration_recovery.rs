@@ -1,0 +1,318 @@
+//! Durable session tier end-to-end: kill an engine mid-session with a
+//! WAL attached, restart on the same directory, and every in-flight
+//! session is recovered and completes **bit-identical** to an
+//! uninterrupted run — admit-only sessions re-run from step 0,
+//! snapshot-bearing (spilled) ones resume mid-flight.  Plus torn-tail
+//! truncation on a dirty log and warm-start handles surviving restarts.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use freqca::coordinator::engine::{Engine, WorkItem};
+use freqca::coordinator::scheduler::QosConfig;
+use freqca::coordinator::{Priority, Request, Response};
+use freqca::metrics::Metrics;
+use freqca::sampler::RunResult;
+
+mod common;
+use common::artifact_dir;
+
+/// Fresh, empty WAL directory for one test (per-process so parallel
+/// `cargo test` runs don't collide).
+fn wal_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("freqca-recovery-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create wal dir");
+    dir
+}
+
+/// One in-flight slot (any higher-class arrival preempts) and zero
+/// batch wait, same shape as the park/resume parity harness.
+fn mini_engine(dir: &str) -> Engine {
+    Engine::new(
+        dir,
+        Duration::ZERO,
+        16,
+        1,
+        QosConfig::default(),
+        Arc::new(Metrics::new()),
+    )
+    .expect("engine boots from artifacts")
+}
+
+fn submit(engine: &mut Engine, request: Request) -> Receiver<Response> {
+    let (tx, rx) = channel();
+    engine.submit(WorkItem { request, reply: tx, enqueued: Instant::now() });
+    rx
+}
+
+fn class_req(id: u64, priority: Priority, steps: usize, seed: u64) -> Request {
+    Request {
+        id,
+        model: "tiny".into(),
+        policy: "freqca:n=3".into(),
+        priority,
+        seed,
+        n_steps: steps,
+        cond: vec![0.1; 12],
+        ref_img: None,
+        return_latent: true,
+        error_budget: None,
+        parent_session: None,
+    }
+}
+
+fn run_until_reply(engine: &mut Engine, rx: &Receiver<Response>) -> Response {
+    for _ in 0..100_000 {
+        engine.tick();
+        if let Ok(resp) = rx.try_recv() {
+            return resp;
+        }
+    }
+    panic!("engine never replied");
+}
+
+/// Tick until `want` recovered sessions have completed (their original
+/// clients died with the crashed process, so results surface through
+/// `drain_recovered_results`, not reply channels).
+fn drive_recovered(
+    engine: &mut Engine,
+    want: usize,
+) -> Vec<(u64, Vec<RunResult>)> {
+    let mut out = Vec::new();
+    for _ in 0..100_000 {
+        engine.tick();
+        out.extend(engine.drain_recovered_results());
+        if out.len() >= want
+            && engine.in_flight() == 0
+            && engine.parked() == 0
+        {
+            return out;
+        }
+    }
+    panic!(
+        "recovery never completed: {} of {want} results, {} in flight, \
+         {} parked",
+        out.len(),
+        engine.in_flight(),
+        engine.parked()
+    );
+}
+
+/// Crash with only an Admit record on disk (no snapshot): the restarted
+/// worker re-runs the session from step 0 and — sampling being
+/// deterministic in the request — lands on the identical latent.
+#[test]
+fn crash_recovery_reruns_admitted_session_bit_identical() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    // Reference: the same request, uninterrupted and undurable.
+    let mut engine = mini_engine(dir);
+    let rx = submit(&mut engine, class_req(1, Priority::Standard, 10, 7));
+    let reference = run_until_reply(&mut engine, &rx);
+    assert!(reference.ok, "error: {:?}", reference.error);
+
+    // Crash arm: durable engine makes partial progress, then the
+    // process "dies" (drop) with the session mid-flight.
+    let wal = wal_dir("admit-only");
+    let mut engine = mini_engine(dir);
+    engine.enable_durable(&wal, 64).expect("wal opens");
+    let _rx = submit(&mut engine, class_req(1, Priority::Standard, 10, 7));
+    for _ in 0..3 {
+        assert_eq!(engine.tick(), 1, "session should be stepping");
+    }
+    drop(engine);
+
+    // Restart on the same directory: the admitted session comes back as
+    // a recovered stub and runs to completion.
+    let mut engine = mini_engine(dir);
+    engine.enable_durable(&wal, 64).expect("wal replays");
+    assert_eq!(engine.metrics.counter("recovered_sessions"), 1);
+    assert_eq!(engine.parked(), 1, "recovered session parks as a stub");
+    let results = drive_recovered(&mut engine, 1);
+    assert_eq!(results.len(), 1);
+    let (uid, members) = &results[0];
+    assert_eq!(*uid, 1);
+    assert_eq!(members.len(), 1);
+    assert_eq!(
+        members[0].latent.data,
+        reference.latent.clone().unwrap(),
+        "recovered re-run must be bit-identical to the uninterrupted run"
+    );
+    assert_eq!(members[0].full_steps, reference.full_steps);
+    assert_eq!(members[0].cached_steps, reference.cached_steps);
+    assert_eq!(engine.metrics.counter("revives"), 1);
+    let _ = std::fs::remove_dir_all(&wal);
+}
+
+/// Crash with a spilled snapshot on disk: the restarted worker restores
+/// the session mid-flight (serialize → WAL → deserialize → resume) and
+/// still matches the uninterrupted latent; the admit-only interactive
+/// session that forced the park recovers alongside it.
+#[test]
+fn crash_recovery_restores_spilled_snapshot_mid_flight() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    // References, uncontended.
+    let mut engine = mini_engine(dir);
+    let rx = submit(&mut engine, class_req(1, Priority::Batch, 12, 7));
+    let batch_ref = run_until_reply(&mut engine, &rx);
+    assert!(batch_ref.ok, "error: {:?}", batch_ref.error);
+    let mut engine = mini_engine(dir);
+    let rx = submit(&mut engine, class_req(2, Priority::Interactive, 6, 9));
+    let inter_ref = run_until_reply(&mut engine, &rx);
+    assert!(inter_ref.ok, "error: {:?}", inter_ref.error);
+
+    // Crash arm: batch progresses, an interactive arrival parks it,
+    // the parked session spills its snapshot to the WAL, then the
+    // process dies with the interactive session in flight.
+    let wal = wal_dir("spilled");
+    let mut engine = mini_engine(dir);
+    engine.enable_durable(&wal, 64).expect("wal opens");
+    let _rx_b = submit(&mut engine, class_req(1, Priority::Batch, 12, 7));
+    for _ in 0..3 {
+        assert_eq!(engine.tick(), 1, "batch session should be stepping");
+    }
+    let _rx_i = submit(&mut engine, class_req(2, Priority::Interactive, 6, 9));
+    engine.tick();
+    assert_eq!(engine.parked(), 1, "batch session should be parked");
+    assert_eq!(engine.spill_parked(), 1, "parked session should spill");
+    assert_eq!(engine.metrics.counter("spills"), 1);
+    drop(engine);
+
+    // Restart: both sessions recover — the batch one from its snapshot
+    // (resuming mid-flight), the interactive one from its admit record.
+    let mut engine = mini_engine(dir);
+    engine.enable_durable(&wal, 64).expect("wal replays");
+    assert_eq!(engine.metrics.counter("recovered_sessions"), 2);
+    assert_eq!(engine.parked(), 2);
+    let mut results = drive_recovered(&mut engine, 2);
+    results.sort_by_key(|(uid, _)| *uid);
+    assert_eq!(results.len(), 2);
+
+    let (uid, batch) = &results[0];
+    assert_eq!(*uid, 1);
+    assert_eq!(
+        batch[0].latent.data,
+        batch_ref.latent.clone().unwrap(),
+        "snapshot-restored session must match the uninterrupted run"
+    );
+    assert_eq!(batch[0].full_steps, batch_ref.full_steps);
+    assert_eq!(batch[0].cached_steps, batch_ref.cached_steps);
+
+    let (uid, inter) = &results[1];
+    assert_eq!(*uid, 2);
+    assert_eq!(
+        inter[0].latent.data,
+        inter_ref.latent.clone().unwrap(),
+        "admit-only recovery must match the uninterrupted run"
+    );
+    assert_eq!(engine.metrics.counter("revives"), 2);
+    let _ = std::fs::remove_dir_all(&wal);
+}
+
+/// A torn tail (the bytes a crash left half-written) is detected by the
+/// CRC framing, counted, and truncated — recovery of the committed
+/// prefix proceeds normally.
+#[test]
+fn torn_wal_tail_is_truncated_and_recovery_proceeds() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let mut engine = mini_engine(dir);
+    let rx = submit(&mut engine, class_req(1, Priority::Standard, 8, 3));
+    let reference = run_until_reply(&mut engine, &rx);
+    assert!(reference.ok, "error: {:?}", reference.error);
+
+    let wal = wal_dir("torn");
+    let mut engine = mini_engine(dir);
+    engine.enable_durable(&wal, 64).expect("wal opens");
+    let _rx = submit(&mut engine, class_req(1, Priority::Standard, 8, 3));
+    for _ in 0..2 {
+        engine.tick();
+    }
+    drop(engine);
+
+    // Simulate the crash tearing a write: garbage where the next entry
+    // header would go.
+    let path = wal.join("worker0.wal");
+    let mut bytes = std::fs::read(&path).expect("wal on disk");
+    let committed_len = bytes.len() as u64;
+    bytes.extend_from_slice(&[0x2A; 13]);
+    std::fs::write(&path, &bytes).expect("tear the tail");
+
+    let mut engine = mini_engine(dir);
+    engine.enable_durable(&wal, 64).expect("torn wal still replays");
+    assert!(
+        engine.metrics.counter("torn_entries") >= 1,
+        "torn tail must be counted"
+    );
+    assert_eq!(
+        std::fs::metadata(&path).expect("wal on disk").len(),
+        committed_len,
+        "torn tail must be truncated back to the committed prefix"
+    );
+    assert_eq!(engine.metrics.counter("recovered_sessions"), 1);
+    let results = drive_recovered(&mut engine, 1);
+    assert_eq!(
+        results[0].1[0].latent.data,
+        reference.latent.clone().unwrap(),
+        "recovery after truncation must still be bit-identical"
+    );
+    let _ = std::fs::remove_dir_all(&wal);
+}
+
+/// CRF-store inserts are journalled, so a `session` handle minted
+/// before a restart still warm-starts a request submitted after it.
+#[test]
+fn warm_start_handle_survives_restart() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let wal = wal_dir("warm");
+    let mut engine = mini_engine(dir);
+    engine.enable_durable(&wal, 64).expect("wal opens");
+    let mut parent = class_req(1, Priority::Standard, 8, 7);
+    // Huge-but-valid budget: the eager warm-validation probe accepts.
+    parent.error_budget = Some(1e6);
+    let rx = submit(&mut engine, parent);
+    let resp = run_until_reply(&mut engine, &rx);
+    assert!(resp.ok, "error: {:?}", resp.error);
+    let handle = resp.session.expect("completed session mints a handle");
+    drop(engine);
+
+    // Restart, then warm-start from the pre-crash handle.
+    let mut engine = mini_engine(dir);
+    engine.enable_durable(&wal, 64).expect("wal replays");
+    assert_eq!(
+        engine.metrics.counter("recovered_sessions"),
+        0,
+        "completed sessions must not be resurrected"
+    );
+    let mut child = class_req(2, Priority::Standard, 8, 7);
+    child.error_budget = Some(1e6);
+    child.parent_session = Some(handle);
+    let rx = submit(&mut engine, child);
+    let warm = run_until_reply(&mut engine, &rx);
+    assert!(warm.ok, "error: {:?}", warm.error);
+    assert!(
+        warm.warm_started,
+        "restored CRF-store entry must warm-start the child"
+    );
+    assert!(
+        warm.full_steps < resp.full_steps,
+        "warm child spent {} fulls, cold parent spent {}",
+        warm.full_steps,
+        resp.full_steps
+    );
+    let _ = std::fs::remove_dir_all(&wal);
+}

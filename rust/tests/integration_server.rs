@@ -460,7 +460,10 @@ fn run_until_reply(engine: &mut Engine, rx: &Receiver<Response>) -> Response {
 /// An interactive arrival at the in-flight cap parks the batch-class
 /// session mid-step; the parked session resumes when capacity frees and
 /// its latent is **bit-identical** to an uninterrupted run of the same
-/// request (the park/resume parity acceptance criterion).
+/// request (the park/resume parity acceptance criterion).  With the
+/// durable tier on, the parked session additionally round-trips through
+/// snapshot → WAL bytes → restore (spill + revive) before resuming, so
+/// parity now also proves the serialize→deserialize leg.
 #[test]
 fn preempted_session_resumes_with_identical_latent() {
     let Some(dir) = artifact_dir() else {
@@ -477,7 +480,12 @@ fn preempted_session_resumes_with_identical_latent() {
 
     // Preempted run: batch request starts, makes some progress, then an
     // interactive request forces it into the parking lot.
+    let wal = std::env::temp_dir()
+        .join(format!("freqca-park-parity-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&wal);
+    std::fs::create_dir_all(&wal).expect("create wal dir");
     let mut engine = mini_engine(dir);
+    engine.enable_durable(&wal, 1).expect("wal opens");
     let rx_batch = submit(&mut engine, class_req(1, Priority::Batch, 12, 7));
     for _ in 0..3 {
         assert_eq!(engine.tick(), 1, "batch session should be stepping");
@@ -488,20 +496,29 @@ fn preempted_session_resumes_with_identical_latent() {
     assert_eq!(engine.in_flight(), 1);
     assert_eq!(engine.metrics.counter("sessions_parked"), 1);
 
+    // Force the parked session through the durable tier: its RAM state
+    // is serialized to the WAL and dropped; resuming must revive it
+    // from the on-disk snapshot bytes.
+    assert_eq!(engine.spill_parked(), 1, "parked session should spill");
+    assert_eq!(engine.parked(), 1, "spilled stub stays in the lot");
+    assert_eq!(engine.metrics.counter("spills"), 1);
+
     let inter = run_until_reply(&mut engine, &rx_inter);
     assert!(inter.ok, "error: {:?}", inter.error);
     let batch = run_until_reply(&mut engine, &rx_batch);
     assert!(batch.ok, "error: {:?}", batch.error);
+    assert_eq!(engine.metrics.counter("revives"), 1);
     assert_eq!(engine.metrics.counter("sessions_resumed"), 1);
     assert_eq!(engine.parked(), 0);
 
     assert_eq!(
         uninterrupted.latent.unwrap(),
         batch.latent.unwrap(),
-        "park/resume must not perturb the latent"
+        "park/spill/revive must not perturb the latent"
     );
     assert_eq!(uninterrupted.full_steps, batch.full_steps);
     assert_eq!(uninterrupted.cached_steps, batch.cached_steps);
+    let _ = std::fs::remove_dir_all(&wal);
 }
 
 /// CRF cache memory is a serving metric (satellite), and a per-request

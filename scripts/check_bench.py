@@ -284,6 +284,46 @@ def main():
             f"baseline {mt_base['dedup_executed']}"
         )
 
+    # Durable session tier (real WAL on a deterministic synthetic
+    # history, scratch dir): record counts, the recovered live set, and
+    # the torn-tail detection are exact integers — any drift means the
+    # record framing, the compaction keep rules, or the fixture changed
+    # and the baseline must be regenerated on purpose.  The compaction
+    # shrink gates as a hard floor (dead snapshots/completions must
+    # actually leave the file).
+    dur = need(results, "durability", "bench results")
+    dur_base = need(baseline, "durability", "baseline")
+    print(
+        "durability: "
+        f"{need(dur, 'records_appended', 'bench results'):.0f} records, "
+        f"{need(dur, 'records_after_compaction', 'bench results'):.0f} "
+        f"after compaction "
+        f"({need(dur, 'compaction_shrink_frac', 'bench results') * 100:.0f}"
+        f"% shrink), "
+        f"{need(dur, 'live_sessions_recovered', 'bench results'):.0f} "
+        f"live recovered, "
+        f"{need(dur, 'torn_entries_detected', 'bench results'):.0f} torn"
+    )
+    for key in (
+        "records_appended",
+        "records_after_compaction",
+        "live_sessions_recovered",
+        "torn_entries_detected",
+    ):
+        got = need(dur, key, "bench results")
+        want = need(dur_base, key, "baseline")
+        if got != want:
+            gate.fail(
+                f"durability {key} changed: {got} != baseline {want}"
+            )
+    shrink = need(dur, "compaction_shrink_frac", "bench results")
+    min_shrink = need(dur_base, "min_compaction_shrink_frac", "baseline")
+    if shrink < min_shrink:
+        gate.fail(
+            f"WAL compaction shrink {shrink:.2f} below the committed "
+            f"floor {min_shrink} — dead records are not being dropped"
+        )
+
     # Live-engine replay (present only when artifacts exist): every
     # class completed and the interactive tail beat batch for real.
     # Wall-clock numbers are noisy, so no latency-level gating here.

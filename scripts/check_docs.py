@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Cross-check docs/OPERATIONS.md against the source tree.
+
+Usage: check_docs.py [repo_root]
+
+Three gates, all hard failures (a docs drift must turn CI red, not rot
+silently):
+
+1. **Knob coverage** — every `--knob` named in the CLI usage string
+   (`rust/src/cli.rs`) must appear in docs/OPERATIONS.md, and every
+   `--knob` the docs mention must exist in the usage string (no
+   documenting removed flags).
+2. **Metric coverage** — every backticked metric name in
+   OPERATIONS.md's reference tables must occur as a string in
+   `rust/src` (dynamic names like `placed_w{w}` appear literally in
+   their `format!` call sites, so a plain substring search finds
+   them), and every counter/gauge name minted in the source must be
+   documented.
+3. **No stale pointers** — documentation must be self-contained:
+   no doc may reference a subpath under `/root/related/` (the
+   related-repo file sets are not shipped with this repo).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+DOCS = ["docs/OPERATIONS.md", "DESIGN.md", "ROADMAP.md", "README.md"]
+
+# Metric names the source mints but the operator docs intentionally
+# skip: test-only literals.
+METRIC_ALLOWLIST = {"nonexistent"}
+
+
+class Gate:
+    def __init__(self):
+        self.failed = False
+
+    def fail(self, msg):
+        print(f"FAIL: {msg}")
+        self.failed = True
+
+
+def usage_knobs(cli_src):
+    """Flag names from the USAGE string and its explanatory prose."""
+    m = re.search(r'USAGE: &str = "(.*?)";', cli_src, re.S)
+    if not m:
+        return None
+    return set(re.findall(r"--([a-z][a-z0-9-]*)", m.group(1)))
+
+
+def doc_knobs(ops):
+    """Knob names from the reference tables only (rows shaped
+    `| `--name` | ...`), so illustrative prose backticks don't count."""
+    names = set()
+    for line in ops.splitlines():
+        for m in re.finditer(r"`--([a-z][a-z0-9-]*)`", line):
+            if line.lstrip().startswith("|"):
+                names.add(m.group(1))
+    return names
+
+
+def doc_metrics(ops):
+    """Backticked names from the metrics-reference tables only (rows
+    shaped `| `name` | ...`), so prose backticks don't count."""
+    names = set()
+    for line in ops.splitlines():
+        m = re.match(r"\| `([a-z][a-z0-9_]*(?:\{[a-z]+\})?)` \|", line)
+        if m:
+            names.add(m.group(1))
+    return names
+
+
+def source_metrics(rust_dir):
+    """Every counter/gauge name *minted* in rust/src.  Mints pass a
+    value after the name (trailing comma); reads (`metrics.counter(n)`,
+    `metrics.gauge(n)`) close immediately and are excluded, so
+    test-only getter literals don't demand documentation."""
+    pat = re.compile(
+        r'(?:bump|set_gauge|gauge)\(\s*(?:&format!\(\s*)?'
+        r'"([a-z][a-z0-9_{}]*)"\s*\)?\s*,'
+    )
+    names = set()
+    for path in rust_dir.rglob("*.rs"):
+        for m in pat.finditer(path.read_text()):
+            names.add(m.group(1))
+    return names
+
+
+def normalize(name):
+    """Dynamic names embed a placeholder (`placed_w{w}` in the source
+    `format!`, `queued_requests_{class}` in the docs); compare on the
+    static prefix before the first brace."""
+    return name.split("{")[0]
+
+
+def main():
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    gate = Gate()
+
+    ops_path = root / "docs/OPERATIONS.md"
+    if not ops_path.exists():
+        print("FAIL: docs/OPERATIONS.md does not exist")
+        return 1
+    ops = ops_path.read_text()
+    cli_src = (root / "rust/src/cli.rs").read_text()
+
+    # 1. Knob coverage, both directions.
+    knobs = usage_knobs(cli_src)
+    if knobs is None:
+        gate.fail("could not locate the USAGE string in rust/src/cli.rs")
+        knobs = set()
+    documented = doc_knobs(ops)
+    for k in sorted(knobs - documented):
+        gate.fail(f"--{k} is in the CLI usage but not in docs/OPERATIONS.md")
+    for k in sorted(documented - knobs):
+        gate.fail(f"--{k} is documented but absent from the CLI usage")
+    print(f"knobs: {len(knobs)} in usage, {len(documented)} documented")
+
+    # 2. Metric coverage, both directions.
+    rust_dir = root / "rust/src"
+    minted = source_metrics(rust_dir) - METRIC_ALLOWLIST
+    listed = doc_metrics(ops)
+    source_blob = "\n".join(
+        p.read_text() for p in sorted(rust_dir.rglob("*.rs"))
+    )
+    listed_norm = {normalize(n) for n in listed}
+    for name in sorted(listed):
+        if normalize(name) not in source_blob:
+            gate.fail(
+                f"metric `{name}` is documented in OPERATIONS.md but "
+                "does not occur anywhere in rust/src"
+            )
+    for name in sorted(minted):
+        if normalize(name) not in listed_norm:
+            gate.fail(
+                f"metric `{name}` is minted in rust/src but not "
+                "documented in docs/OPERATIONS.md"
+            )
+    print(f"metrics: {len(minted)} minted, {len(listed)} in doc tables")
+
+    # 3. Self-contained docs: no /root/related/<subpath> pointers.
+    for rel in DOCS:
+        path = root / rel
+        if not path.exists():
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            if re.search(r"/root/related/[A-Za-z0-9_]", line):
+                gate.fail(
+                    f"{rel}:{i} references a /root/related/ subpath; "
+                    "docs must be self-contained"
+                )
+
+    if gate.failed:
+        return 1
+    print("check_docs: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
