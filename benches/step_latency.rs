@@ -8,6 +8,12 @@
 //!   arena, versus the scalar full-resolution baseline the repo shipped
 //!   before.  Gated by scripts/check_bench.py against
 //!   benches/baseline_step_latency.json.
+//! * `observability` — the flight-recorder tax on the step path: the
+//!   probe host-math workload alone, with a disabled `TraceSink` (the
+//!   branch-only path `--trace-ring-events 0` buys), and with an
+//!   enabled 4096-event ring.  Gated: disabled must be within noise,
+//!   enabled under a few percent, and the ring must stay bounded after
+//!   wrapping many times.
 //! * `models` — the cost of a full DiT forward vs the FreqCa predictor
 //!   paths and the head re-projection, per compiled model.  This is the
 //!   bench behind the paper's C_pred << C_full premise (§4.4.1); it is
@@ -25,6 +31,7 @@ use freqca::freq::{mask, BandSpec, Decomp};
 use freqca::model::{weights, ModelConfig};
 use freqca::policy::ProbeSpec;
 use freqca::runtime::{discover_models, Runtime};
+use freqca::trace::{flag, EventKind, TraceEvent, TraceHub, TraceSink, EVENT_BYTES};
 use freqca::util::{Arena, Json, Rng, Tensor};
 
 /// Synthetic fixture: flux-sim dimensions (python/compile/models.py).
@@ -39,11 +46,13 @@ fn main() -> anyhow::Result<()> {
     let opts = BenchOpts::default();
     let mut table = Table::new(&["section", "arm", "mean ms", "p50 ms"]);
     let host = host_math(&opts, &mut table)?;
+    let obs = observability(&opts, &mut table)?;
     let models = bench_models(&opts, &mut table)?;
     println!("\n{}", table.render());
     let json = Json::obj(vec![
         ("bench", Json::str("step_latency")),
         ("host_math", host),
+        ("observability", obs),
         ("models", models),
     ]);
     std::fs::create_dir_all("results")?;
@@ -194,6 +203,134 @@ fn host_math(opts: &BenchOpts, table: &mut Table) -> anyhow::Result<Json> {
                 ("bytes", Json::num(arena.bytes() as f64)),
             ]),
         ),
+    ]))
+}
+
+/// Flight-recorder tax on the step path.  Each iteration runs the
+/// shipping probe workload (the dominant host math of a traced step)
+/// and then emits one Step event the way `run_one_step` does — through
+/// a disabled sink (`--trace-ring-events 0`) and through an enabled
+/// 4096-event ring.  The ring bound is asserted in-bench after the
+/// recorder has wrapped several times over.
+fn observability(opts: &BenchOpts, table: &mut Table) -> anyhow::Result<Json> {
+    const RING: usize = 4096;
+    let mut rng = Rng::new(11);
+    let n = TOKENS * DIM;
+    let hist: Vec<Tensor> = (0..K_HIST)
+        .map(|_| Tensor::new(vec![1, TOKENS, DIM], rng.normal_vec(n)))
+        .collect::<Result<_, _>>()?;
+    let truth = Tensor::new(vec![1, TOKENS, DIM], rng.normal_vec(n))?;
+    let hist_refs: Vec<&Tensor> = hist.iter().collect();
+    let hist_s = [0.9f64, 0.8, 0.7];
+    let spec = BandSpec::new(Decomp::Dct, BandSpec::default_cutoff(GRID));
+    let mut probe_sub = ProbeSpec::new(spec, 1, 2);
+    probe_sub.sample_stride = STRIDE;
+    let arena = Arena::new();
+    let work = || {
+        with_backend(Backend::Lanes, || {
+            probe::probe_residuals_sampled(
+                &hist_s, &hist_refs, 0.6, &probe_sub, GRID, DIM, &truth,
+                &arena,
+            )
+            .unwrap();
+        })
+    };
+    // One Step event, shaped like the engine's per-tick emission.
+    let emit = |sink: &TraceSink, step: u32| {
+        sink.emit(TraceEvent {
+            t_us: sink.now_us(),
+            session: 42,
+            worker: 0,
+            kind: EventKind::Step,
+            flags: flag::STEP_FULL | flag::PROBE_SAMPLED,
+            step,
+            wall_us: 900,
+            exec_us: 600,
+            probe_us: 120,
+            a: 0.01,
+            b: 0.02,
+            c: 0.015,
+            d: 1.0,
+            ..TraceEvent::default()
+        });
+    };
+
+    let push = |table: &mut Table, arm: &str, r: &BenchResult| {
+        table.row(vec![
+            "observability".into(),
+            arm.into(),
+            format!("{:.3}", ms(r)),
+            format!("{:.3}", r.summary.p50 * 1e3),
+        ]);
+    };
+
+    let work_only = bench("observability/work_only", opts, || {
+        with_backend(Backend::Lanes, || {
+            probe::probe_residuals_sampled(
+                &hist_s, &hist_refs, 0.6, &probe_sub, GRID, DIM, &truth,
+                &arena,
+            )
+            .unwrap();
+        })
+    });
+    push(table, "work_only", &work_only);
+
+    let off = TraceSink::disabled();
+    let disabled = bench("observability/sink_disabled", opts, || {
+        work();
+        emit(&off, 7);
+    });
+    push(table, "sink_disabled", &disabled);
+
+    let hub = TraceHub::new(RING);
+    let on = hub.sink(0);
+    let enabled = bench("observability/sink_enabled", opts, || {
+        work();
+        emit(&on, 7);
+    });
+    push(table, "sink_enabled", &enabled);
+
+    // Wrap the ring several times over, then assert it stayed bounded.
+    for i in 0..(3 * RING) {
+        emit(&on, i as u32);
+    }
+    assert!(
+        on.total_events() > RING as u64,
+        "recorder never wrapped ({} events)",
+        on.total_events()
+    );
+    assert_eq!(
+        on.ring_len(),
+        RING,
+        "ring length must equal capacity once wrapped"
+    );
+    assert_eq!(
+        on.ring_bytes(),
+        RING * EVENT_BYTES,
+        "ring allocation must stay at capacity * event size"
+    );
+
+    let disabled_frac = (ms(&disabled) - ms(&work_only)) / ms(&work_only);
+    let enabled_frac = (ms(&enabled) - ms(&work_only)) / ms(&work_only);
+    println!(
+        "observability: disabled overhead {:.2}%  enabled {:.2}%  \
+         ring {} events x {} B",
+        disabled_frac * 100.0,
+        enabled_frac * 100.0,
+        on.ring_len(),
+        EVENT_BYTES
+    );
+    Ok(Json::obj(vec![
+        ("ring_events", Json::num(RING as f64)),
+        ("event_bytes", Json::num(EVENT_BYTES as f64)),
+        ("work_ms", Json::num(ms(&work_only))),
+        ("disabled_ms", Json::num(ms(&disabled))),
+        ("enabled_ms", Json::num(ms(&enabled))),
+        ("disabled_overhead_frac", Json::num(disabled_frac)),
+        ("enabled_overhead_frac", Json::num(enabled_frac)),
+        ("ring_len_after", Json::num(on.ring_len() as f64)),
+        ("ring_bytes", Json::num(on.ring_bytes() as f64)),
+        ("events_emitted", Json::num(on.total_events() as f64)),
     ]))
 }
 

@@ -94,6 +94,7 @@ USAGE:
                   [--max-resident-models 0] [--steal-after 16]
                   [--crf-store-bytes 67108864]
                   [--wal-dir PATH] [--spill-after-ticks 64]
+                  [--trace-ring-events 4096]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
                   [--artifacts DIR]
@@ -104,7 +105,9 @@ USAGE:
                   [--steps 50] [--prompt IDX] [--cond-dim 64]
                   [--error-budget 0.1] [--parent-session HANDLE]
   freqca models   [--artifacts DIR]
-  freqca metrics  [--addr 127.0.0.1:7463]
+  freqca metrics  [--addr 127.0.0.1:7463] [--watch N] [--json]
+  freqca trace    [SESSION] [--slowest 10] [--recent 50]
+                  [--addr 127.0.0.1:7463] [--json]
   freqca help
 
 Policies: freqca:n=7[,low=0,o=2,c=2,d=dct|fft|none]  freqca-a:l=0.8
@@ -156,6 +159,19 @@ Durable session tier (serve --wal-dir PATH): each worker keeps an
   is spilled: its snapshot moves to the WAL and its RAM (latents, CRF
   cache, weight pin) is released until revival.  The log compacts
   itself once enough retired records accumulate.
+Observability (serve --trace-ring-events N): each worker keeps a
+  bounded in-memory flight recorder — N fixed-size structured events
+  (admit/place/steal/start/step/park/spill/revive/warm-start/dedup/
+  WAL/complete) with per-step stage timing (exec vs probe vs host
+  math), per-band probe rel-L1, and feedback scale.  When the ring
+  wraps, full timelines of budget-breach and p99-slowest sessions are
+  pinned as exemplars.  0 disables tracing.  `freqca trace SESSION`
+  renders one session's causal timeline; `--slowest N` ranks recent
+  completions; `--recent N` tails the merged pool-wide event stream.
+  `freqca metrics` renders the registry as a table (`--watch N`
+  re-polls every N seconds and shows counter deltas; `--json` prints
+  the raw registry); the `metrics_prom` control verb exposes the same
+  registry in Prometheus text format.
 ";
 
 #[cfg(test)]

@@ -70,9 +70,10 @@ use crate::policy;
 use crate::runtime::{discover_models, Runtime};
 use crate::sampler::{
     BatchJob, JobSpec, RunResult, SampleOpts, SamplerSession, SessionSnapshot,
-    StepOutcome, WarmStart,
+    StepAction, StepOutcome, WarmStart,
 };
-use crate::util::Arena;
+use crate::trace::{flag, EventKind, TraceEvent, TraceHub, TraceSink};
+use crate::util::{log, Arena};
 
 /// Default idle ticks before a pool worker advertises hunger on the
 /// steal board (`--steal-after`; 0 disables stealing).
@@ -314,6 +315,12 @@ struct InFlight {
     /// Rebuilt from the WAL after a restart: no clients wait on it, and
     /// its results land in `Engine::recovered_results` on completion.
     recovered: bool,
+    /// Flight-recorder session id: the batch leader's client-visible
+    /// request id (what clients quote at `{"cmd":"trace"}`); falls back
+    /// to `uid` for recovered sessions whose clients are gone.
+    sid: u64,
+    /// Interned trace model slot (`u16::MAX` when tracing is off).
+    mslot: u16,
 }
 
 /// Where a spilled session's state lives until revival.
@@ -342,6 +349,8 @@ struct SpilledStub {
     sched: SchedState<Instant>,
     warm_parent: Option<u64>,
     recovered: bool,
+    sid: u64,
+    mslot: u16,
     src: SpillSource,
 }
 
@@ -492,6 +501,9 @@ pub struct Engine {
     /// Who this engine is within its pool (standalone engines get a
     /// private context from [`WorkerContext::standalone`]).
     worker: WorkerContext,
+    /// Flight-recorder sink (disabled unless [`Engine::set_trace`] ran;
+    /// the disabled path is one branch per would-be event).
+    trace: TraceSink,
 }
 
 impl Engine {
@@ -597,7 +609,28 @@ impl Engine {
             next_uid: 1,
             recovered_results: Vec::new(),
             worker,
+            trace: TraceSink::disabled(),
         })
+    }
+
+    /// Attach this worker's flight-recorder sink.  Call before serving
+    /// (and before [`Engine::enable_durable`], so recovery events land
+    /// on the ring); the default is disabled.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
+    }
+
+    /// Seed a trace event with this worker's identity and the hub
+    /// clock.  Callers fill class/model/payload and emit; only reached
+    /// inside `self.trace.enabled()` guards.
+    fn trace_event(&self, kind: EventKind, sid: u64) -> TraceEvent {
+        TraceEvent {
+            t_us: self.trace.now_us(),
+            session: sid,
+            worker: self.worker.id as u16,
+            kind,
+            ..TraceEvent::default()
+        }
     }
 
     /// Turn the durable session tier on: open (or create) this worker's
@@ -647,12 +680,18 @@ impl Engine {
             .filter(|u| !done.contains(u))
             .collect();
         live.sort_unstable();
+        let recovered = live.len();
         let now = Instant::now();
         for uid in live {
             let requests = admits.remove(&uid).expect("key from admits");
             let Some(first) = requests.first() else { continue };
             let (class, model, policy) =
                 (first.priority, first.model.clone(), first.policy.clone());
+            let mslot = if self.trace.enabled() {
+                self.trace.model_slot(&model)
+            } else {
+                u16::MAX
+            };
             let src = match snaps.get(&uid) {
                 Some(&offset) => SpillSource::WalSnapshot { offset },
                 None => SpillSource::Requests(requests),
@@ -669,11 +708,26 @@ impl Engine {
                 sched: self.sched.admit(class, now),
                 warm_parent: None,
                 recovered: true,
+                // The clients are gone, so no request id exists; the
+                // durable uid doubles as the trace session id.
+                sid: uid,
+                mslot,
                 src,
             }));
             self.metrics.bump("recovered_sessions", 1);
         }
         self.next_uid = self.next_uid.max(max_uid + 1);
+        log::info(
+            Some(self.worker.id),
+            &format!(
+                "wal: opened {} ({} records replayed, {} sessions \
+                 recovered, {} torn)",
+                path.display(),
+                replay.records.len(),
+                recovered,
+                replay.torn_entries
+            ),
+        );
         self.gauge("wal_bytes", wal.bytes() as f64);
         self.durable = Some(Durable {
             wal,
@@ -684,14 +738,35 @@ impl Engine {
     }
 
     /// Append one record to the WAL, if durable.  WAL write failures
-    /// are counted, not fatal: the engine degrades to volatile behavior
-    /// for that record rather than failing live sessions.
-    fn append_wal(&mut self, rec: &WalRecord) -> Option<u64> {
-        let d = self.durable.as_mut()?;
-        match d.wal.append_record(rec) {
-            Ok(offset) => Some(offset),
-            Err(_) => {
+    /// are counted and logged, not fatal: the engine degrades to
+    /// volatile behavior for that record rather than failing live
+    /// sessions.  `sid` attributes the append to a session's flight
+    /// timeline (0 when no session owns the record).
+    fn append_wal(&mut self, rec: &WalRecord, sid: u64) -> Option<u64> {
+        self.durable.as_ref()?;
+        let t0 = Instant::now();
+        let res =
+            self.durable.as_mut().expect("checked above").wal.append_record(rec);
+        match res {
+            Ok(offset) => {
+                if self.trace.enabled() {
+                    let mut ev = self.trace_event(EventKind::WalAppend, sid);
+                    ev.wall_us = t0.elapsed().as_micros() as u32;
+                    self.trace.emit(ev);
+                }
+                Some(offset)
+            }
+            Err(e) => {
                 self.metrics.bump("wal_errors", 1);
+                log::warn(
+                    Some(self.worker.id),
+                    &format!("wal append failed: {e}"),
+                );
+                if self.trace.enabled() {
+                    let mut ev = self.trace_event(EventKind::WalError, sid);
+                    ev.wall_us = t0.elapsed().as_micros() as u32;
+                    self.trace.emit(ev);
+                }
                 None
             }
         }
@@ -823,6 +898,17 @@ impl Engine {
                 self.metrics.bump("requests_admitted", 1);
             }
             self.metrics.bump("dedup_followers", 1);
+            // The attach belongs to the *leader's* timeline: its session
+            // is the one that will serve this follower's reply.
+            if self.trace.enabled() {
+                if let Some((_, _, leader_cid)) = self.replies.get(&leader) {
+                    let mut ev =
+                        self.trace_event(EventKind::DedupAttach, *leader_cid);
+                    ev.class_slot = request.priority.slot() as u8;
+                    ev.a = client_id as f32;
+                    self.trace.emit(ev);
+                }
+            }
             let flock = self.followers.entry(leader).or_default();
             if flock.is_empty() {
                 // A leader is only a leader once someone follows it.
@@ -836,6 +922,13 @@ impl Engine {
             });
             return;
         }
+        let class = request.priority;
+        let trace_mslot = if self.trace.enabled() {
+            self.trace.model_slot(&request.model)
+        } else {
+            u16::MAX
+        };
+        let mut admitted = false;
         // The true enqueue time rides along so batching deadlines and
         // queue-wait metrics measure from client arrival, not from the
         // placement/admission hop.
@@ -848,6 +941,7 @@ impl Engine {
                 if fresh {
                     self.metrics.bump("requests_admitted", 1);
                 }
+                admitted = true;
             }
             RouteResult::QueuedEvicting(victim) => {
                 self.replies
@@ -857,6 +951,7 @@ impl Engine {
                 if fresh {
                     self.metrics.bump("requests_admitted", 1);
                 }
+                admitted = true;
                 self.metrics.bump("requests_evicted", 1);
                 // The victim was queued, never admitted to a session, so
                 // its reply channel is still in the map.
@@ -892,6 +987,12 @@ impl Engine {
             RouteResult::Invalid(msg) => {
                 let _ = item.reply.send(Response::err(client_id, msg));
             }
+        }
+        if admitted && self.trace.enabled() {
+            let mut ev = self.trace_event(EventKind::Admit, client_id);
+            ev.class_slot = class.slot() as u8;
+            ev.model_slot = trace_mslot;
+            self.trace.emit(ev);
         }
     }
 
@@ -949,7 +1050,18 @@ impl Engine {
         if pick.error_prioritized {
             self.metrics.bump("steps_error_prioritized", 1);
         }
-        self.run_one_step(pick.index);
+        // Scheduler-derived step flags ride into the step's trace event.
+        let mut sched_flags = 0u16;
+        if pick.dephased {
+            sched_flags |= flag::DEPHASED;
+        }
+        if pick.forced_full {
+            sched_flags |= flag::SCHED_FORCED_FULL;
+        }
+        if pick.error_prioritized {
+            sched_flags |= flag::ERROR_PRIORITIZED;
+        }
+        self.run_one_step(pick.index, sched_flags);
         1
     }
 
@@ -979,6 +1091,14 @@ impl Engine {
             (Some((cur, _)), Some(m)) if cur == m
         );
         if !unchanged {
+            if let Some(m) = &deferred {
+                log::debug(
+                    Some(self.worker.id),
+                    &format!(
+                        "residency bound defers ready work for model {m}"
+                    ),
+                );
+            }
             self.deferral = deferred.map(|m| (m, self.sched.tick()));
         }
     }
@@ -1102,6 +1222,13 @@ impl Engine {
             };
             let parked = self.sessions.swap_remove(victim);
             self.metrics.bump("sessions_parked", 1);
+            if self.trace.enabled() {
+                let mut ev =
+                    self.trace_event(EventKind::Park, parked.sid);
+                ev.class_slot = parked.class.slot() as u8;
+                ev.model_slot = parked.mslot;
+                self.trace.emit(ev);
+            }
             self.parked.push(Parked::Ram {
                 inner: parked,
                 since_tick: self.sched.tick(),
@@ -1169,6 +1296,13 @@ impl Engine {
         match self.parked.remove(idx) {
             Parked::Ram { inner, .. } => {
                 self.metrics.bump("sessions_resumed", 1);
+                if self.trace.enabled() {
+                    let mut ev =
+                        self.trace_event(EventKind::Revive, inner.sid);
+                    ev.class_slot = inner.class.slot() as u8;
+                    ev.model_slot = inner.mslot;
+                    self.trace.emit(ev);
+                }
                 self.sessions.push(inner);
             }
             Parked::Spilled(stub) => self.revive(stub),
@@ -1184,6 +1318,14 @@ impl Engine {
             Ok((session, warm_parent)) => {
                 self.metrics.bump("revives", 1);
                 self.metrics.bump("sessions_resumed", 1);
+                if self.trace.enabled() {
+                    let mut ev =
+                        self.trace_event(EventKind::Revive, stub.sid);
+                    ev.class_slot = stub.class.slot() as u8;
+                    ev.model_slot = stub.mslot;
+                    ev.flags |= flag::FROM_SPILL;
+                    self.trace.emit(ev);
+                }
                 self.sessions.push(InFlight {
                     session,
                     waiters: stub.waiters,
@@ -1195,12 +1337,17 @@ impl Engine {
                     uid: stub.uid,
                     policy: stub.policy,
                     recovered: stub.recovered,
+                    sid: stub.sid,
+                    mslot: stub.mslot,
                 });
             }
             Err(e) => {
                 // Retire the uid so the WAL stops resurrecting a
                 // session that can no longer be rebuilt.
-                self.append_wal(&WalRecord::Complete { uid: stub.uid });
+                self.append_wal(
+                    &WalRecord::Complete { uid: stub.uid },
+                    stub.sid,
+                );
                 self.retire_records(2);
                 self.metrics.bump("batch_errors", 1);
                 for w in stub.waiters {
@@ -1291,11 +1438,18 @@ impl Engine {
             uid: inner.uid,
             bytes: snap.to_bytes(),
         };
-        let Some(offset) = self.append_wal(&rec) else {
+        let sid = inner.sid;
+        let Some(offset) = self.append_wal(&rec, sid) else {
             self.parked.push(Parked::Ram { inner, since_tick });
             return false;
         };
         self.metrics.bump("spills", 1);
+        if self.trace.enabled() {
+            let mut ev = self.trace_event(EventKind::Spill, sid);
+            ev.class_slot = inner.class.slot() as u8;
+            ev.model_slot = inner.mslot;
+            self.trace.emit(ev);
+        }
         // A re-spill strands the previous snapshot record.
         self.retire_records(1);
         let InFlight {
@@ -1309,6 +1463,8 @@ impl Engine {
             uid,
             policy,
             recovered,
+            sid,
+            mslot,
         } = inner;
         // The whole payload of the spill: latents, CRF cache, and any
         // device history buffer drop here.
@@ -1323,6 +1479,8 @@ impl Engine {
             sched,
             warm_parent,
             recovered,
+            sid,
+            mslot,
             src: SpillSource::WalSnapshot { offset },
         }));
         true
@@ -1650,11 +1808,23 @@ impl Engine {
         let followers = self.dedup_detach(pending.request.id);
         let mut request = pending.request;
         request.id = client_id;
+        let (sid, class) = (client_id, request.priority);
         let item = WorkItem { request, reply: tx, enqueued };
         match self.worker.steal.donate(thief, item) {
             Ok(()) => {
                 self.metrics.bump("steals", 1);
                 self.metrics.bump(&format!("steals_w{thief}"), 1);
+                log::debug(
+                    Some(self.worker.id),
+                    &format!("donated request {sid} to hungry worker \
+                              {thief}"),
+                );
+                if self.trace.enabled() {
+                    let mut ev = self.trace_event(EventKind::Steal, sid);
+                    ev.class_slot = class.slot() as u8;
+                    ev.a = thief as f32;
+                    self.trace.emit(ev);
+                }
             }
             Err(item) => {
                 // The thief exited between the hunger read and the
@@ -1733,6 +1903,15 @@ impl Engine {
             Ok((session, warm_parent)) => {
                 let uid = self.next_uid;
                 self.next_uid += 1;
+                // Trace identity: the batch leader's client id (what
+                // the client will quote at `{"cmd":"trace"}`).
+                let sid =
+                    waiters.first().map(|w| w.client_id).unwrap_or(uid);
+                let mslot = if self.trace.enabled() {
+                    self.trace.model_slot(model)
+                } else {
+                    u16::MAX
+                };
                 // The durable admission record: everything needed to
                 // re-run this session bit-identically after a crash.
                 if self.durable.is_some() {
@@ -1743,7 +1922,17 @@ impl Engine {
                             .map(|p| p.request.clone())
                             .collect(),
                     };
-                    self.append_wal(&rec);
+                    self.append_wal(&rec, sid);
+                }
+                if self.trace.enabled() {
+                    let mut ev = self.trace_event(EventKind::Start, sid);
+                    ev.class_slot = class.slot() as u8;
+                    ev.model_slot = mslot;
+                    ev.a = waiters
+                        .first()
+                        .map(|w| w.queue_s as f32)
+                        .unwrap_or(f32::NAN);
+                    self.trace.emit(ev);
                 }
                 self.sessions.push(InFlight {
                     session,
@@ -1756,6 +1945,8 @@ impl Engine {
                     uid,
                     policy: batch[0].request.policy.clone(),
                     recovered: false,
+                    sid,
+                    mslot,
                 });
             }
             Err(e) => {
@@ -1909,8 +2100,10 @@ impl Engine {
         }
     }
 
-    /// Advance session `idx` by one step; complete or fail it as needed.
-    fn run_one_step(&mut self, idx: usize) {
+    /// Advance session `idx` by one step; complete or fail it as
+    /// needed.  `sched_flags` carries the scheduler's dephase/forced/
+    /// error-prioritized verdicts into the step's trace event.
+    fn run_one_step(&mut self, idx: usize, sched_flags: u16) {
         let outcome = {
             let inflight = &mut self.sessions[idx];
             inflight.session.step(&self.rt)
@@ -1918,6 +2111,40 @@ impl Engine {
         match outcome {
             Ok(StepOutcome::Ran { record, done }) => {
                 self.metrics.record_step(record.wall_s);
+                if self.trace.enabled() {
+                    let s = &self.sessions[idx];
+                    let mut ev = self.trace_event(EventKind::Step, s.sid);
+                    ev.class_slot = s.class.slot() as u8;
+                    ev.model_slot = s.mslot;
+                    ev.step = record.step as u32;
+                    ev.flags = sched_flags
+                        | match record.action {
+                            StepAction::Full => flag::STEP_FULL,
+                            StepAction::Cached => flag::STEP_CACHED,
+                            StepAction::Partial => flag::STEP_PARTIAL,
+                        };
+                    if record.feedback_forced {
+                        ev.flags |= flag::FORCED;
+                    }
+                    if record.probe_sampled {
+                        ev.flags |= flag::PROBE_SAMPLED;
+                    }
+                    if record.probe_full_fallback {
+                        ev.flags |= flag::PROBE_FALLBACK;
+                    }
+                    ev.wall_us = (record.wall_s * 1e6) as u32;
+                    ev.exec_us = (record.exec_s * 1e6) as u32;
+                    ev.probe_us = (record.probe_s * 1e6) as u32;
+                    if let Some(p) = &record.probe {
+                        ev.a = p.low as f32;
+                        ev.b = p.high as f32;
+                        ev.c = p.overall as f32;
+                    }
+                    if let Some(scale) = s.session.feedback_scale() {
+                        ev.d = scale as f32;
+                    }
+                    self.trace.emit(ev);
+                }
                 if let Some(p) = &record.probe {
                     self.metrics.bump("feedback_probes", 1);
                     // Which resolution the probe ran at: subsampled and
@@ -1963,10 +2190,26 @@ impl Engine {
                     if let Some(h) = self.sessions[idx].warm_parent.take() {
                         self.store.lock().unwrap().release(h);
                     }
-                    if self.sessions[idx].session.warm_started() {
+                    let (accepted, demoted) = (
+                        self.sessions[idx].session.warm_started(),
+                        self.sessions[idx].session.warm_demoted(),
+                    );
+                    if accepted {
                         self.metrics.bump("warm_starts", 1);
-                    } else if self.sessions[idx].session.warm_demoted() {
+                    } else if demoted {
                         self.metrics.bump("warm_start_demotions", 1);
+                    }
+                    if self.trace.enabled() && (accepted || demoted) {
+                        let s = &self.sessions[idx];
+                        let kind = if accepted {
+                            EventKind::WarmAccept
+                        } else {
+                            EventKind::WarmDemote
+                        };
+                        let mut ev = self.trace_event(kind, s.sid);
+                        ev.class_slot = s.class.slot() as u8;
+                        ev.model_slot = s.mslot;
+                        self.trace.emit(ev);
                     }
                 }
                 if done {
@@ -1991,6 +2234,8 @@ impl Engine {
             warm_parent,
             uid,
             recovered,
+            sid,
+            mslot,
             ..
         } = inflight;
         // Defensive: a session completed without ever stepping (or its
@@ -2002,7 +2247,7 @@ impl Engine {
         // Retire the uid in the WAL first: whatever happens below, this
         // session must not be resurrected by a replay.
         if self.durable.is_some() {
-            self.append_wal(&WalRecord::Complete { uid });
+            self.append_wal(&WalRecord::Complete { uid }, sid);
             self.retire_records(2);
         }
         // Defense-in-depth counter: stays 0 while the controller's
@@ -2012,6 +2257,22 @@ impl Engine {
             self.metrics.bump("error_budget_breaches", breaches);
         }
         let warm_started = session.warm_started();
+        if self.trace.enabled() {
+            let mut ev = self.trace_event(EventKind::Complete, sid);
+            ev.class_slot = class.slot() as u8;
+            ev.model_slot = mslot;
+            ev.a = latency_s as f32;
+            if breaches > 0 {
+                ev.flags |= flag::BREACHED;
+            }
+            if warm_started {
+                ev.flags |= flag::WARM;
+            }
+            self.trace.emit(ev);
+            // Tail-based retention: a breached or p99-slow session's
+            // timeline is pinned past ring wrap.
+            self.trace.note_complete(sid, latency_s, breaches > 0);
+        }
         // Harvest the final CRF history into the warm-start store, one
         // handle per batch member (each member's [T, D] slice is its
         // own future parent), before the session is consumed.
@@ -2031,8 +2292,14 @@ impl Engine {
                 let logged = self.durable.is_some().then(|| crf.clone());
                 let handle = self.store.lock().unwrap().insert(crf)?;
                 if let Some(crf) = logged {
-                    self.append_wal(&WalRecord::CrfInsert { handle, crf });
+                    self.append_wal(
+                        &WalRecord::CrfInsert { handle, crf },
+                        sid,
+                    );
                 }
+                // Alias the minted handle to the trace session id, so
+                // `{"cmd":"trace"}` accepts a completion's `session`.
+                self.trace.alias(handle, sid);
                 Some(handle)
             })
             .collect();
@@ -2103,7 +2370,10 @@ impl Engine {
         // A failed session is retired, not replayed: re-running it
         // after a restart would deterministically hit the same error.
         if self.durable.is_some() {
-            self.append_wal(&WalRecord::Complete { uid: inflight.uid });
+            self.append_wal(
+                &WalRecord::Complete { uid: inflight.uid },
+                inflight.sid,
+            );
             self.retire_records(2);
         }
         self.metrics.bump("batch_errors", 1);
@@ -2242,6 +2512,10 @@ pub struct WorkerPool {
     /// Pool-shared CRF warm-start store (placement reads the parent's
     /// home worker from it to steer warm-started children).
     store: SharedCrfStore,
+    /// Pool-wide flight-recorder hub (disabled when
+    /// `--trace-ring-events 0`); placement decisions are recorded on
+    /// the chosen worker's ring.
+    hub: Arc<TraceHub>,
 }
 
 impl WorkerPool {
@@ -2261,6 +2535,7 @@ impl WorkerPool {
         warmup: &[String],
         wal_dir: Option<PathBuf>,
         spill_after_ticks: u64,
+        hub: Arc<TraceHub>,
     ) -> Result<WorkerPool> {
         let n = workers.max(1);
         let ledger = DephaseLedger::from_config(&qos);
@@ -2285,6 +2560,7 @@ impl WorkerPool {
             let warm: Vec<String> = warmup.to_vec();
             let worker_store = store.clone();
             let worker_wal = wal_dir.clone();
+            let worker_hub = hub.clone();
             let ready = ready_tx.clone();
             let thread = std::thread::Builder::new()
                 .name(format!("freqca-worker-{id}"))
@@ -2302,6 +2578,9 @@ impl WorkerPool {
                         worker_store,
                     )
                     .and_then(|mut engine| {
+                        // Trace before warmup/recovery so revive events
+                        // from WAL replay land on the ring.
+                        engine.set_trace(worker_hub.sink(id));
                         for m in &warm {
                             engine.warmup(m)?;
                         }
@@ -2376,11 +2655,17 @@ impl WorkerPool {
             model_slots,
             hot_default: feedback.is_some(),
             store,
+            hub,
         })
     }
 
     pub fn workers(&self) -> usize {
         self.senders.len()
+    }
+
+    /// The pool's flight-recorder hub (serves `{"cmd":"trace"}`).
+    pub fn hub(&self) -> &Arc<TraceHub> {
+        &self.hub
     }
 
     /// Model names served (identical on every worker: all workers load
@@ -2419,6 +2704,21 @@ impl WorkerPool {
         let w = self.placement.place(&input, &snapshot);
         self.board[w].lock().unwrap().queued_by_class[class.slot()] += 1;
         self.metrics.bump(&format!("placed_w{w}"), 1);
+        if self.hub.enabled() {
+            // Cross-thread: placement runs on the admission thread, so
+            // the event goes through the hub to the chosen worker's
+            // ring (one uncontended lock).
+            let ev = TraceEvent {
+                t_us: self.hub.now_us(),
+                session: item.request.id,
+                worker: w as u16,
+                kind: EventKind::Place,
+                class_slot: class.slot() as u8,
+                model_slot: self.hub.model_slot(&item.request.model),
+                ..TraceEvent::default()
+            };
+            self.hub.sink(w).emit(ev);
+        }
         if let Err(send_err) = self.senders[w].send(item) {
             // The worker thread is gone (panic); fail fast rather than
             // hang the client, and deaden its board slot — no headroom,

@@ -47,6 +47,7 @@ pub mod quality;
 pub mod runtime;
 pub mod sampler;
 pub mod server;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

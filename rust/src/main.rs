@@ -1,7 +1,8 @@
 //! `freqca` — the leader binary: serve / generate / edit / models /
-//! metrics subcommands.  Python is never on this path; everything runs
-//! from the AOT artifacts in `artifacts/`.
+//! metrics / trace subcommands.  Python is never on this path;
+//! everything runs from the AOT artifacts in `artifacts/`.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
@@ -17,6 +18,7 @@ use freqca::policy;
 use freqca::runtime::{discover_models, Runtime};
 use freqca::sampler::{self, JobSpec, SampleOpts};
 use freqca::server::{self, client::Client, ServeOpts};
+use freqca::util::Json;
 use freqca::{imaging, DEFAULT_ARTIFACT_DIR};
 
 fn main() {
@@ -46,6 +48,7 @@ fn run(args: &Args) -> Result<()> {
         "request" => cmd_request(args),
         "models" => cmd_models(args),
         "metrics" => cmd_metrics(args),
+        "trace" => cmd_trace(args),
         "" | "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -124,6 +127,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         spill_after_ticks: args.u64_or(
             "spill-after-ticks",
             freqca::coordinator::durable::DEFAULT_SPILL_AFTER_TICKS,
+        )?,
+        // Flight recorder: per-worker bounded event ring (0 = off).
+        trace_ring_events: args.usize_or(
+            "trace-ring-events",
+            freqca::trace::DEFAULT_RING_EVENTS,
         )?,
     };
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
@@ -287,11 +295,183 @@ fn cmd_models(args: &Args) -> Result<()> {
 
 fn cmd_metrics(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7463");
+    let watch = args.u64_or("watch", 0)?;
     let mut client = Client::connect(&addr)?;
-    println!("{}", client.metrics()?);
+    let mut prev: BTreeMap<String, f64> = BTreeMap::new();
+    loop {
+        let m = client.metrics()?;
+        if args.bool("json") {
+            println!("{m}");
+        } else {
+            print_metrics_table(&m, &prev);
+            prev = counter_values(&m);
+        }
+        if watch == 0 {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs(watch));
+    }
+}
+
+fn counter_values(m: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    if let Some(Json::Obj(c)) = m.get("counters") {
+        for (k, v) in c {
+            if let Some(x) = v.as_f64() {
+                out.insert(k.clone(), x);
+            }
+        }
+    }
+    out
+}
+
+/// Human-readable registry dump.  In `--watch` mode, counters that
+/// moved since the previous poll are annotated with their delta.
+fn print_metrics_table(m: &Json, prev: &BTreeMap<String, f64>) {
+    for key in ["request_latency_s", "step_latency_s", "queue_wait_s", "ttfs_s"]
+    {
+        if let Some(h) = m.get(key) {
+            let pick = |f: &str| {
+                h.get(f).and_then(Json::as_f64).unwrap_or(0.0)
+            };
+            println!(
+                "{key:<20} n={:<8.0} mean={:<10.4} p50={:<10.4} p99={:.4}",
+                pick("n"),
+                pick("mean"),
+                pick("p50"),
+                pick("p99"),
+            );
+        }
+    }
+    if let Some(Json::Obj(classes)) = m.get("per_class") {
+        for (class, h) in classes {
+            let pick = |f: &str| {
+                h.get(f).and_then(Json::as_f64).unwrap_or(0.0)
+            };
+            println!(
+                "class {class:<14} n={:<8.0} mean={:<10.4} p50={:<10.4} \
+                 p99={:.4}",
+                pick("n"),
+                pick("mean"),
+                pick("p50"),
+                pick("p99"),
+            );
+        }
+    }
+    if let Some(Json::Obj(counters)) = m.get("counters") {
+        println!("counters:");
+        for (k, v) in counters {
+            let cur = v.as_f64().unwrap_or(0.0);
+            match prev.get(k) {
+                Some(p) if cur != *p => {
+                    println!("  {k:<36} {cur:>12.0}  (+{:.0})", cur - p)
+                }
+                _ => println!("  {k:<36} {cur:>12.0}"),
+            }
+        }
+    }
+    if let Some(Json::Obj(gauges)) = m.get("gauges") {
+        if !gauges.is_empty() {
+            println!("gauges:");
+            for (k, v) in gauges {
+                println!("  {k:<36} {:>12.3}", v.as_f64().unwrap_or(0.0));
+            }
+        }
+    }
+}
+
+/// Render a flight-recorder timeline (or listing) from a running
+/// server: `freqca trace SESSION | --slowest N | --recent N`.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7463");
+    let mut client = Client::connect(&addr)?;
+    let reply = if let Some(sid) = args.positional.first() {
+        let sid: u64 = sid.parse().map_err(|_| {
+            anyhow!("SESSION must be an integer id/handle, got '{sid}'")
+        })?;
+        client.trace_session(sid)?
+    } else if args.get("slowest").is_some() {
+        client.trace_slowest(args.usize_or("slowest", 10)?)?
+    } else if args.get("recent").is_some() {
+        client.trace_recent(args.usize_or("recent", 50)?)?
+    } else {
+        return Err(anyhow!(
+            "trace: pass a SESSION id, --slowest N, or --recent N"
+        ));
+    };
+    if !reply.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+        return Err(anyhow!(
+            "trace failed: {}",
+            reply
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown error")
+        ));
+    }
+    if args.bool("json") {
+        println!("{reply}");
+        return Ok(());
+    }
+    if let Some(events) = reply.get("events").and_then(Json::as_arr) {
+        render_trace_events(events);
+    } else if let Some(sessions) = reply.get("sessions").and_then(Json::as_arr)
+    {
+        println!(
+            "{:<20} {:>12} {:>9} {:>7}",
+            "session", "latency_s", "breached", "worker"
+        );
+        for s in sessions {
+            println!(
+                "{:<20.0} {:>12.4} {:>9} {:>7.0}",
+                s.get("session").and_then(Json::as_f64).unwrap_or(0.0),
+                s.get("latency_s").and_then(Json::as_f64).unwrap_or(0.0),
+                s.get("breached").and_then(Json::as_bool).unwrap_or(false),
+                s.get("worker").and_then(Json::as_f64).unwrap_or(0.0),
+            );
+        }
+    }
     Ok(())
 }
 
-// Re-export Request so integration code referencing main compiles cleanly.
-#[allow(dead_code)]
-fn _unused(_: Request) {}
+/// One line per event, offset from the first event's timestamp; every
+/// payload the event carries rides along as `key=value`.
+fn render_trace_events(events: &[Json]) {
+    let t0 = events
+        .first()
+        .and_then(|e| e.get("t_us"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    for ev in events {
+        let Json::Obj(map) = ev else { continue };
+        let t = map.get("t_us").and_then(Json::as_f64).unwrap_or(0.0);
+        let kind = map.get("kind").and_then(Json::as_str).unwrap_or("?");
+        let worker =
+            map.get("worker").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let mut extra: Vec<String> = Vec::new();
+        for (k, v) in map {
+            match k.as_str() {
+                "t_us" | "kind" | "worker" => {}
+                "flags" => {
+                    if let Some(a) = v.as_arr() {
+                        let names: Vec<&str> =
+                            a.iter().filter_map(Json::as_str).collect();
+                        extra.push(format!("[{}]", names.join(",")));
+                    }
+                }
+                _ => match v {
+                    Json::Num(x) if x.fract() == 0.0 && x.abs() < 1e15 => {
+                        extra.push(format!("{k}={x:.0}"))
+                    }
+                    Json::Num(x) => extra.push(format!("{k}={x:.5}")),
+                    Json::Str(s) => extra.push(format!("{k}={s}")),
+                    _ => {}
+                },
+            }
+        }
+        println!(
+            "{:>12.3}ms  w{worker}  {kind:<12} {}",
+            (t - t0) / 1000.0,
+            extra.join("  ")
+        );
+    }
+}

@@ -76,6 +76,13 @@ pub struct StepRecord {
     /// The subsampled probe's bound straddled the budget, so the step
     /// re-probed at full resolution before feeding the controller.
     pub probe_full_fallback: bool,
+    /// Portion of `wall_s` spent executing model artifacts (forward /
+    /// predictor / head) on the runtime.
+    pub exec_s: f64,
+    /// Portion of `wall_s` spent in counterfactual probes (warm-start
+    /// validation + feedback probes).  The remainder of `wall_s` is
+    /// host math: policy decide, cache pushes, blending, Euler update.
+    pub probe_s: f64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -489,9 +496,14 @@ impl<'p> SamplerSession<'p> {
         let mut probe_res = None;
         let mut probe_sampled = false;
         let mut probe_full_fallback = false;
+        // Stage attribution for the flight recorder: runtime execution
+        // vs. probe math; whatever remains of `wall_s` is host math.
+        let mut exec_s = 0.0f64;
+        let mut probe_s = 0.0f64;
 
         let (v, step_action) = match action {
             Action::Full => {
+                let t_exec = Instant::now();
                 let (v, crf) = run_fwd(
                     rt,
                     &self.cfg,
@@ -502,6 +514,7 @@ impl<'p> SamplerSession<'p> {
                     self.ref_t.as_ref(),
                     t,
                 )?;
+                exec_s += t_exec.elapsed().as_secs_f64();
                 // Warm-start validation: the parent's CRF history is
                 // held aside until this first full forward gives us a
                 // ground truth to probe it against.  Accepted history
@@ -546,6 +559,7 @@ impl<'p> SamplerSession<'p> {
                             // Full resolution: this probe runs once per
                             // session and decides accept-vs-demote, so
                             // a subsampling bound has nothing to buy.
+                            let t_probe = Instant::now();
                             let r = probe::probe_residuals_full(
                                 &warm_s,
                                 &hist,
@@ -556,6 +570,7 @@ impl<'p> SamplerSession<'p> {
                                 &crf,
                                 &self.arena,
                             )?;
+                            probe_s += t_probe.elapsed().as_secs_f64();
                             if r.overall <= self.warm_budget {
                                 for (st, tensor) in
                                     warm_s.into_iter().zip(tiled)
@@ -586,6 +601,7 @@ impl<'p> SamplerSession<'p> {
                 // *was* this step's probe.)
                 if let Some(fb) = &mut self.feedback {
                     if !self.cache.is_empty() && !warm_validated {
+                        let t_probe = Instant::now();
                         let hist: Vec<&Tensor> =
                             self.cache.iter().map(|(_, t)| t).collect();
                         let est = probe::probe_residuals_sampled(
@@ -625,6 +641,7 @@ impl<'p> SamplerSession<'p> {
                         } else {
                             est.residuals
                         };
+                        probe_s += t_probe.elapsed().as_secs_f64();
                         fb.controller
                             .observe_probe(r.overall, self.steps_since_full);
                         self.policy
@@ -642,6 +659,7 @@ impl<'p> SamplerSession<'p> {
                 (v, StepAction::Full)
             }
             Action::Predict(plan) => {
+                let t_exec = Instant::now();
                 let crf_hat = run_predict(
                     rt,
                     &self.cfg,
@@ -651,6 +669,7 @@ impl<'p> SamplerSession<'p> {
                     &mut self.hist_buf,
                     &self.arena,
                 )?;
+                exec_s += t_exec.elapsed().as_secs_f64();
                 if self.opts.record_pred_error {
                     let (_, crf_true) = run_fwd(
                         rt,
@@ -667,6 +686,7 @@ impl<'p> SamplerSession<'p> {
                         &crf_true.data,
                     ));
                 }
+                let t_exec = Instant::now();
                 let v = run_head(
                     rt,
                     &self.cfg,
@@ -676,6 +696,7 @@ impl<'p> SamplerSession<'p> {
                     &self.cond,
                     t,
                 )?;
+                exec_s += t_exec.elapsed().as_secs_f64();
                 self.cached_steps += 1;
                 self.total_flops +=
                     flops::predict_flops(&self.cfg, b, plan.decomp != Decomp::None);
@@ -689,6 +710,7 @@ impl<'p> SamplerSession<'p> {
             Action::PartialRefresh { refresh_frac, plan } => {
                 // Token-wise caching: compute fresh features, refresh the
                 // most-stale tokens, reuse the rest from the prediction.
+                let t_exec = Instant::now();
                 let (_, crf_fresh) = run_fwd(
                     rt,
                     &self.cfg,
@@ -708,6 +730,7 @@ impl<'p> SamplerSession<'p> {
                     &mut self.hist_buf,
                     &self.arena,
                 )?;
+                exec_s += t_exec.elapsed().as_secs_f64();
                 let blended = blend_tokens(
                     &self.cfg,
                     b,
@@ -717,6 +740,7 @@ impl<'p> SamplerSession<'p> {
                     refresh_frac,
                 )?;
                 self.cache.replace_newest(s, blended.clone());
+                let t_exec = Instant::now();
                 let v = run_head(
                     rt,
                     &self.cfg,
@@ -726,6 +750,7 @@ impl<'p> SamplerSession<'p> {
                     &self.cond,
                     t,
                 )?;
+                exec_s += t_exec.elapsed().as_secs_f64();
                 self.partial_steps += 1;
                 // Token-wise papers account compute at the refreshed
                 // fraction of a full pass (dense wall-clock differs —
@@ -761,6 +786,8 @@ impl<'p> SamplerSession<'p> {
             feedback_forced,
             probe_sampled,
             probe_full_fallback,
+            exec_s,
+            probe_s,
         };
         self.steps.push(record.clone());
         self.step_idx += 1;

@@ -40,7 +40,7 @@ use crate::util::{Arena, Tensor};
 /// Version byte leading every encoded snapshot.  Bump on any layout
 /// change; [`SessionSnapshot::from_bytes`] refuses versions it does not
 /// know rather than misparse.
-pub const SNAPSHOT_VERSION: u8 = 1;
+pub const SNAPSHOT_VERSION: u8 = 2;
 
 /// The complete persistable state of one [`SamplerSession`].
 #[derive(Debug, Clone)]
@@ -488,6 +488,8 @@ fn put_step_record(w: &mut ByteWriter, rec: &StepRecord) {
     w.put_bool(rec.feedback_forced);
     w.put_bool(rec.probe_sampled);
     w.put_bool(rec.probe_full_fallback);
+    w.put_f64(rec.exec_s);
+    w.put_f64(rec.probe_s);
 }
 
 fn read_step_record(r: &mut ByteReader) -> Result<StepRecord> {
@@ -520,6 +522,8 @@ fn read_step_record(r: &mut ByteReader) -> Result<StepRecord> {
         feedback_forced: r.bool()?,
         probe_sampled: r.bool()?,
         probe_full_fallback: r.bool()?,
+        exec_s: r.f64()?,
+        probe_s: r.f64()?,
     })
 }
 
@@ -584,6 +588,8 @@ mod tests {
                     feedback_forced: false,
                     probe_sampled: false,
                     probe_full_fallback: false,
+                    exec_s: 0.008,
+                    probe_s: 0.0,
                 },
                 StepRecord {
                     step: 1,
@@ -601,6 +607,8 @@ mod tests {
                     feedback_forced: true,
                     probe_sampled: true,
                     probe_full_fallback: false,
+                    exec_s: 0.0015,
+                    probe_s: 0.0003,
                 },
             ],
             step_idx: 3,

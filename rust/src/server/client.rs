@@ -46,6 +46,31 @@ impl Client {
         self.roundtrip(r#"{"cmd":"metrics"}"#)
     }
 
+    /// Prometheus text-format exposition of the server's registry.
+    pub fn metrics_prom(&mut self) -> Result<String> {
+        let j = self.roundtrip(r#"{"cmd":"metrics_prom"}"#)?;
+        Ok(j.get("text")
+            .and_then(|v| v.as_str())
+            .map(String::from)
+            .unwrap_or_default())
+    }
+
+    /// Full flight-recorder timeline for one session (request id or
+    /// the CRF `session` handle from a completed response).
+    pub fn trace_session(&mut self, session: u64) -> Result<Json> {
+        self.roundtrip(&format!(r#"{{"cmd":"trace","session":{session}}}"#))
+    }
+
+    /// The N slowest completed sessions still in the recorder window.
+    pub fn trace_slowest(&mut self, n: usize) -> Result<Json> {
+        self.roundtrip(&format!(r#"{{"cmd":"trace","slowest":{n}}}"#))
+    }
+
+    /// The last N events merged across every worker's ring.
+    pub fn trace_recent(&mut self, n: usize) -> Result<Json> {
+        self.roundtrip(&format!(r#"{{"cmd":"trace","recent":{n}}}"#))
+    }
+
     pub fn models(&mut self) -> Result<Vec<String>> {
         let j = self.roundtrip(r#"{"cmd":"models"}"#)?;
         Ok(j.get("models")

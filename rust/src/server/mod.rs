@@ -35,7 +35,8 @@ use crate::coordinator::scheduler::QosConfig;
 use crate::coordinator::{Request, Response};
 use crate::feedback::FeedbackConfig;
 use crate::metrics::Metrics;
-use crate::util::Json;
+use crate::trace::TraceHub;
+use crate::util::{log, Json};
 
 /// Server options.
 #[derive(Debug, Clone)]
@@ -88,6 +89,11 @@ pub struct ServeOpts {
     /// eligible to spill to the WAL when the parking lot is full
     /// (`--spill-after-ticks`; only meaningful with `wal_dir`).
     pub spill_after_ticks: u64,
+    /// Per-worker flight-recorder ring capacity in events
+    /// (`--trace-ring-events`; 0 disables tracing entirely — the
+    /// disabled path is a single branch per would-be event).  Timelines
+    /// are served by the `{"cmd":"trace"}` control verb.
+    pub trace_ring_events: usize,
 }
 
 /// Default concurrency cap: enough sessions to keep short jobs
@@ -113,6 +119,7 @@ impl Default for ServeOpts {
             wal_dir: None,
             spill_after_ticks:
                 crate::coordinator::durable::DEFAULT_SPILL_AFTER_TICKS,
+            trace_ring_events: crate::trace::DEFAULT_RING_EVENTS,
         }
     }
 }
@@ -129,11 +136,15 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         n => n,
     };
     if !opts.warmup.is_empty() {
-        eprintln!(
-            "[server] warming up {} on {workers} worker(s)...",
-            opts.warmup.join(", ")
+        log::info(
+            None,
+            &format!(
+                "warming up {} on {workers} worker(s)...",
+                opts.warmup.join(", ")
+            ),
         );
     }
+    let hub = TraceHub::new(opts.trace_ring_events);
     let mut pool = WorkerPool::new(
         artifact_dir,
         std::time::Duration::from_millis(opts.batch_wait_ms),
@@ -153,23 +164,35 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         &opts.warmup,
         opts.wal_dir.clone(),
         opts.spill_after_ticks,
+        hub.clone(),
     )?;
     let models = pool.models().to_vec();
     let listener = TcpListener::bind(&opts.addr)
         .with_context(|| format!("binding {}", opts.addr))?;
     listener.set_nonblocking(true)?;
-    eprintln!(
-        "[server] listening on {} ({} workers; models: {})",
-        opts.addr,
-        pool.workers(),
-        models.join(", ")
+    log::info(
+        None,
+        &format!(
+            "listening on {} ({} workers; models: {})",
+            opts.addr,
+            pool.workers(),
+            models.join(", ")
+        ),
     );
 
     let (tx, rx) = channel::<WorkItem>();
     let acceptor_metrics = metrics.clone();
     let acceptor_stop = stop.clone();
+    let acceptor_hub = hub.clone();
     let acceptor = std::thread::spawn(move || {
-        accept_loop(listener, tx, acceptor_metrics, models, acceptor_stop);
+        accept_loop(
+            listener,
+            tx,
+            acceptor_metrics,
+            models,
+            acceptor_hub,
+            acceptor_stop,
+        );
     });
 
     // Shared admission queue -> placement -> per-worker channels.  Ends
@@ -179,9 +202,12 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
     }
     pool.shutdown(); // returns once every worker is fully drained
     let _ = acceptor.join();
-    eprintln!(
-        "[server] drained: {} requests completed",
-        metrics.counter("requests_completed")
+    log::info(
+        None,
+        &format!(
+            "drained: {} requests completed",
+            metrics.counter("requests_completed")
+        ),
     );
     Ok(())
 }
@@ -191,6 +217,7 @@ fn accept_loop(
     tx: Sender<WorkItem>,
     metrics: Arc<Metrics>,
     models: Vec<String>,
+    hub: Arc<TraceHub>,
     stop: Arc<AtomicBool>,
 ) {
     let mut conns = Vec::new();
@@ -203,8 +230,9 @@ fn accept_loop(
                 let tx = tx.clone();
                 let metrics = metrics.clone();
                 let models = models.clone();
+                let hub = hub.clone();
                 conns.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, tx, metrics, models);
+                    let _ = handle_conn(stream, tx, metrics, models, hub);
                 }));
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -220,6 +248,7 @@ fn handle_conn(
     tx: Sender<WorkItem>,
     metrics: Arc<Metrics>,
     models: Vec<String>,
+    hub: Arc<TraceHub>,
 ) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -248,6 +277,11 @@ fn handle_conn(
                 "ping" => Json::obj(vec![("ok", Json::Bool(true)),
                                          ("pong", Json::Bool(true))]),
                 "metrics" => metrics.to_json(),
+                "metrics_prom" => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("text", Json::str(metrics.to_prometheus())),
+                ]),
+                "trace" => trace_reply(&hub, &parsed),
                 "models" => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     (
@@ -297,6 +331,37 @@ fn handle_conn(
     }
     let _ = peer;
     Ok(())
+}
+
+/// Serve `{"cmd":"trace"}`: a full per-session timeline (by request id
+/// or CRF `session` handle), a `slowest` completion ranking, or the
+/// `recent` pool-wide event tail.
+fn trace_reply(hub: &Arc<TraceHub>, req: &Json) -> Json {
+    if !hub.enabled() {
+        return Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            (
+                "error",
+                Json::str("tracing disabled (--trace-ring-events 0)"),
+            ),
+        ]);
+    }
+    if let Some(sid) = req.get("session").and_then(|v| v.as_f64()) {
+        return hub.session_json(sid as u64);
+    }
+    if let Some(n) = req.get("slowest").and_then(|v| v.as_usize()) {
+        return hub.slowest_json(n.max(1));
+    }
+    if let Some(n) = req.get("recent").and_then(|v| v.as_usize()) {
+        return hub.recent_json(n.max(1));
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::str("trace: pass \"session\", \"slowest\" or \"recent\""),
+        ),
+    ])
 }
 
 fn write_json(w: &mut impl Write, j: &Json) -> Result<()> {

@@ -1,0 +1,875 @@
+//! Flight recorder: per-worker bounded rings of structured trace
+//! events, with tail-based exemplar retention and wire/CLI exposure.
+//!
+//! Aggregate counters say *how often* the pool refreshed, demoted a
+//! warm start, or spilled a session — they cannot say *why this one
+//! request* was slow.  The flight recorder answers that: every stage of
+//! a session's life emits one fixed-size [`TraceEvent`] (admit, place,
+//! steal, queue→start, each step tick with its cache kind, per-band
+//! probe residuals, feedback scale and forced/dephased flags, park /
+//! spill / revive, warm-start accept/demote, dedup attach, WAL
+//! append/error, complete) carrying the session id, worker id, model
+//! slot, QoS class and a monotonic timestamp, plus a per-stage wall
+//! attribution (exec / probe / WAL vs. residual host math).
+//!
+//! Cost model, in order of importance:
+//!
+//! * **Disabled is branch-only.**  `--trace-ring-events 0` leaves every
+//!   engine in a [`TraceSink::disabled`] state: the per-event cost is
+//!   one `Option` check, no allocation, no lock (the `observability`
+//!   bench section gates this).
+//! * **Enabled is bounded and lock-cheap.**  Each worker owns one
+//!   [`Recorder`]: a preallocated ring of `Copy` events behind a
+//!   per-worker mutex that only that worker (and the occasional
+//!   placement/trace-query thread) touches — an uncontended lock plus a
+//!   64-byte store per event, never an allocation after construction
+//!   (the `util::Arena` discipline: fixed buffers, steady-state
+//!   allocation-free).
+//! * **The interesting timelines survive the wrap.**  A ring sized for
+//!   minutes of steady state wraps long before an operator looks at it;
+//!   tail-based exemplar retention pins a full copy of a session's
+//!   timeline at completion when it breached its error budget or landed
+//!   in the slowest tail (≥ p99 of the recent completion window), so
+//!   `{"cmd": "trace"}` can still produce the causal story for exactly
+//!   the sessions worth debugging.
+//!
+//! The server exposes the recorder via the `{"cmd": "trace"}` verb
+//! (by session id — request id or the completion's CRF `session`
+//! handle — or `slowest` / `recent` listings) and the registry via
+//! `{"cmd": "metrics_prom"}`; `freqca trace` renders timelines in the
+//! terminal.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::{stats, Json};
+
+/// Default `--trace-ring-events`: per worker, ~4096 events ≈ 256 KiB —
+/// minutes of steady-state stepping at serving rates.
+pub const DEFAULT_RING_EVENTS: usize = 4096;
+
+/// Completed-session window the slowest listing and the p99 exemplar
+/// threshold are computed over (per worker).
+const COMPLETION_WINDOW: usize = 256;
+
+/// Pinned exemplar timelines per worker.  Budget-breach exemplars are
+/// preferred under pressure: a slow-but-clean session is the first to
+/// be unpinned.
+const MAX_EXEMPLARS: usize = 8;
+
+/// Exemplar pinning needs a few completions before "p99-slowest" means
+/// anything; below this only budget breaches pin.
+const MIN_COMPLETIONS_FOR_TAIL: usize = 8;
+
+/// Every kind of event the recorder knows, in wire-name order.
+///
+/// [`EVENT_NAMES`] is the canonical name table (one entry per variant,
+/// same order); `docs/OPERATIONS.md` lists exactly these names and
+/// `scripts/check_docs.py` cross-checks the two both directions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Request accepted into a worker's router queue.
+    Admit = 0,
+    /// Placement chose a worker for the request (pool only).
+    Place,
+    /// An idle worker stole this queued request from a sibling.
+    Steal,
+    /// Queue→start: a session began executing (payload: queue wait).
+    Start,
+    /// One denoising step ran (kind/probe/scale/stage payload).
+    Step,
+    /// Session preempted into the parking lot.
+    Park,
+    /// Parked session's snapshot journalled, RAM copy dropped.
+    Spill,
+    /// Parked or spilled session re-entered the in-flight set.
+    Revive,
+    /// Warm-start payload validated and seeded the cache.
+    WarmAccept,
+    /// Warm-start payload drifted past budget; session ran cold.
+    WarmDemote,
+    /// An identical concurrent request attached to this leader.
+    DedupAttach,
+    /// A WAL record was appended and committed (payload: bytes).
+    WalAppend,
+    /// A WAL append failed; serving continues volatile.
+    WalError,
+    /// Session finished (payload: end-to-end latency).
+    Complete,
+}
+
+/// Canonical wire names, indexed by `EventKind as usize`.
+pub const EVENT_NAMES: [&str; 14] = [
+    "admit",
+    "place",
+    "steal",
+    "start",
+    "step",
+    "park",
+    "spill",
+    "revive",
+    "warm_accept",
+    "warm_demote",
+    "dedup_attach",
+    "wal_append",
+    "wal_error",
+    "complete",
+];
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        EVENT_NAMES[self as usize]
+    }
+}
+
+/// Bit flags qualifying an event (mostly `Step`).
+pub mod flag {
+    /// Step ran the full forward.
+    pub const STEP_FULL: u16 = 1 << 0;
+    /// Step reused/predicted from the CRF cache.
+    pub const STEP_CACHED: u16 = 1 << 1;
+    /// Step did a token-wise partial refresh.
+    pub const STEP_PARTIAL: u16 = 1 << 2;
+    /// The error-budget controller forced this full step.
+    pub const FORCED: u16 = 1 << 3;
+    /// The de-phasing ledger delayed this session's refresh.
+    pub const DEPHASED: u16 = 1 << 4;
+    /// Full step issued despite an exhausted de-phasing budget.
+    pub const SCHED_FORCED_FULL: u16 = 1 << 5;
+    /// Refresh token redirected to the highest-error session.
+    pub const ERROR_PRIORITIZED: u16 = 1 << 6;
+    /// Probe ran subsampled and its bound cleared the budget.
+    pub const PROBE_SAMPLED: u16 = 1 << 7;
+    /// Subsampled probe straddled the budget; re-probed at full res.
+    pub const PROBE_FALLBACK: u16 = 1 << 8;
+    /// (complete) the session breached its error budget.
+    pub const BREACHED: u16 = 1 << 9;
+    /// (complete) the session warm-started from a parent CRF.
+    pub const WARM: u16 = 1 << 10;
+    /// (revive) the session came back from a WAL-spilled snapshot.
+    pub const FROM_SPILL: u16 = 1 << 11;
+
+    pub(super) const NAMES: [(u16, &str); 12] = [
+        (STEP_FULL, "full"),
+        (STEP_CACHED, "cached"),
+        (STEP_PARTIAL, "partial"),
+        (FORCED, "forced"),
+        (DEPHASED, "dephased"),
+        (SCHED_FORCED_FULL, "sched_forced"),
+        (ERROR_PRIORITIZED, "error_prioritized"),
+        (PROBE_SAMPLED, "probe_sampled"),
+        (PROBE_FALLBACK, "probe_fallback"),
+        (BREACHED, "breached"),
+        (WARM, "warm"),
+        (FROM_SPILL, "from_spill"),
+    ];
+}
+
+/// QoS class names by `Priority::slot` (kept local so the trace layer
+/// has no dependency on the coordinator; `coordinator::Priority::ALL`
+/// defines the same order).
+const CLASS_NAMES: [&str; 3] = ["interactive", "standard", "batch"];
+
+/// One fixed-size trace record.  `Copy`, no heap payload: the ring is
+/// a flat preallocated buffer, and recording is a 64-byte store.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Monotonic µs since the hub epoch (shared across workers, so
+    /// cross-worker merges order correctly).
+    pub t_us: u64,
+    /// Session id: the batch leader's client request id; completions
+    /// also alias the minted CRF `session` handle to it.
+    pub session: u64,
+    pub worker: u16,
+    /// Interned model slot (`TraceHub::model_slot`); `u16::MAX` when
+    /// unknown (e.g. recovered stubs before re-resolution).
+    pub model_slot: u16,
+    /// `Priority::slot()` (0 = interactive); `u8::MAX` when unknown.
+    pub class_slot: u8,
+    pub kind: EventKind,
+    pub flags: u16,
+    /// Step index for `Step` events, 0 otherwise.
+    pub step: u32,
+    /// Whole-event wall time, µs (step wall, WAL append wall, ...).
+    pub wall_us: u32,
+    /// Portion of `wall_us` spent executing model artifacts.
+    pub exec_us: u32,
+    /// Portion of `wall_us` spent in counterfactual probes.
+    pub probe_us: u32,
+    /// Kind-specific payload (NaN = absent): for `Step`
+    /// low/high/overall probe rel-L1 + feedback scale; for `Start`
+    /// queue wait seconds; for `Complete` latency seconds; for
+    /// `WalAppend` payload bytes; for `Steal`/`DedupAttach` the peer
+    /// worker / follower id.
+    pub a: f32,
+    pub b: f32,
+    pub c: f32,
+    pub d: f32,
+}
+
+/// Size of one ring slot; the ring's byte bound is
+/// `ring_events * EVENT_BYTES`, asserted by the observability bench.
+pub const EVENT_BYTES: usize = std::mem::size_of::<TraceEvent>();
+
+impl Default for TraceEvent {
+    fn default() -> Self {
+        TraceEvent {
+            t_us: 0,
+            session: 0,
+            worker: 0,
+            model_slot: u16::MAX,
+            class_slot: u8::MAX,
+            kind: EventKind::Admit,
+            flags: 0,
+            step: 0,
+            wall_us: 0,
+            exec_us: 0,
+            probe_us: 0,
+            a: f32::NAN,
+            b: f32::NAN,
+            c: f32::NAN,
+            d: f32::NAN,
+        }
+    }
+}
+
+fn payload_names(kind: EventKind) -> [&'static str; 4] {
+    match kind {
+        EventKind::Step => ["probe_low", "probe_high", "probe_all", "scale"],
+        EventKind::Start => ["queue_s", "b1", "b2", "b3"],
+        EventKind::Complete => ["latency_s", "b1", "b2", "b3"],
+        EventKind::WalAppend => ["bytes", "b1", "b2", "b3"],
+        EventKind::Steal => ["to_worker", "b1", "b2", "b3"],
+        EventKind::DedupAttach => ["follower", "b1", "b2", "b3"],
+        _ => ["a", "b", "c", "d"],
+    }
+}
+
+impl TraceEvent {
+    /// Wire rendering: kind/flags by name, finite payload slots under
+    /// kind-specific keys, stage attribution split out (`host_us` is
+    /// the residual `wall - exec - probe`).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("t_us", Json::num(self.t_us as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("session", Json::num(self.session as f64)),
+            ("worker", Json::num(self.worker as f64)),
+            ("step", Json::num(self.step as f64)),
+        ];
+        if self.class_slot != u8::MAX {
+            let name = CLASS_NAMES
+                .get(self.class_slot as usize)
+                .copied()
+                .unwrap_or("unknown");
+            fields.push(("class", Json::str(name)));
+        }
+        if self.model_slot != u16::MAX {
+            fields.push(("model_slot", Json::num(self.model_slot as f64)));
+        }
+        let flags: Vec<Json> = flag::NAMES
+            .iter()
+            .filter(|(bit, _)| self.flags & bit != 0)
+            .map(|(_, name)| Json::str(*name))
+            .collect();
+        if !flags.is_empty() {
+            fields.push(("flags", Json::Arr(flags)));
+        }
+        if self.wall_us > 0 {
+            fields.push(("wall_us", Json::num(self.wall_us as f64)));
+            fields.push(("exec_us", Json::num(self.exec_us as f64)));
+            fields.push(("probe_us", Json::num(self.probe_us as f64)));
+            let host =
+                self.wall_us.saturating_sub(self.exec_us + self.probe_us);
+            fields.push(("host_us", Json::num(host as f64)));
+        }
+        let names = payload_names(self.kind);
+        for (name, v) in
+            names.iter().zip([self.a, self.b, self.c, self.d])
+        {
+            if v.is_finite() {
+                fields.push((name, Json::num(v as f64)));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+/// One completed session, as kept in the per-worker completion window
+/// (feeds the `slowest` listing and the exemplar p99 threshold).
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub session: u64,
+    pub latency_s: f64,
+    pub breached: bool,
+    pub t_us: u64,
+    pub worker: u16,
+}
+
+/// A pinned full timeline, retained past ring wrap.
+struct Exemplar {
+    session: u64,
+    breached: bool,
+    events: Vec<TraceEvent>,
+}
+
+struct RecorderInner {
+    ring: Vec<TraceEvent>,
+    /// Overwrite cursor once the ring is full.
+    head: usize,
+    /// Events ever pushed (≥ ring.len(); the wrap indicator).
+    total: u64,
+    completions: VecDeque<Completion>,
+    exemplars: VecDeque<Exemplar>,
+}
+
+/// Per-worker bounded event ring + exemplar store.
+pub struct Recorder {
+    worker: u16,
+    capacity: usize,
+    epoch: Instant,
+    inner: Mutex<RecorderInner>,
+}
+
+impl Recorder {
+    fn new(worker: u16, capacity: usize, epoch: Instant) -> Recorder {
+        Recorder {
+            worker,
+            capacity,
+            epoch,
+            inner: Mutex::new(RecorderInner {
+                ring: Vec::with_capacity(capacity),
+                head: 0,
+                total: 0,
+                completions: VecDeque::new(),
+                exemplars: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Monotonic µs since the hub epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one event; overwrites the oldest slot once full.
+    pub fn push(&self, ev: TraceEvent) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.ring.len() < self.capacity {
+            g.ring.push(ev);
+        } else {
+            let h = g.head;
+            g.ring[h] = ev;
+            g.head = (h + 1) % self.capacity;
+        }
+        g.total += 1;
+    }
+
+    /// Account a completed session: feeds the slowest window and pins
+    /// an exemplar timeline when the session breached its budget or
+    /// landed at/beyond the window's p99 latency.
+    pub fn note_complete(&self, session: u64, latency_s: f64, breached: bool) {
+        if self.capacity == 0 {
+            return;
+        }
+        let t_us = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        g.completions.push_back(Completion {
+            session,
+            latency_s,
+            breached,
+            t_us,
+            worker: self.worker,
+        });
+        if g.completions.len() > COMPLETION_WINDOW {
+            g.completions.pop_front();
+        }
+        let mut lat: Vec<f64> =
+            g.completions.iter().map(|c| c.latency_s).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let slow = g.completions.len() >= MIN_COMPLETIONS_FOR_TAIL
+            && latency_s >= stats::percentile(&lat, 99.0);
+        if !(breached || slow) {
+            return;
+        }
+        let events: Vec<TraceEvent> = g
+            .ring
+            .iter()
+            .filter(|e| e.session == session)
+            .copied()
+            .collect();
+        if events.is_empty() {
+            return;
+        }
+        // Re-pin replaces (a session id reused across requests keeps
+        // only the latest timeline).
+        g.exemplars.retain(|x| x.session != session);
+        if g.exemplars.len() >= MAX_EXEMPLARS {
+            // Prefer evicting a non-breach exemplar, oldest first.
+            if let Some(pos) =
+                g.exemplars.iter().position(|x| !x.breached)
+            {
+                g.exemplars.remove(pos);
+            } else {
+                g.exemplars.pop_front();
+            }
+        }
+        g.exemplars.push_back(Exemplar { session, breached, events });
+    }
+
+    /// All events for `session`, from the live ring and any pinned
+    /// exemplar, deduplicated and in time order.
+    pub fn events_for(&self, session: u64) -> Vec<TraceEvent> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<TraceEvent> = g
+            .ring
+            .iter()
+            .filter(|e| e.session == session)
+            .copied()
+            .collect();
+        for x in g.exemplars.iter().filter(|x| x.session == session) {
+            out.extend_from_slice(&x.events);
+        }
+        sort_events(&mut out);
+        out.dedup_by_key(|e| (e.t_us, e.kind as u8, e.step));
+        out
+    }
+
+    /// The most recent `n` events, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<TraceEvent> {
+        let g = self.inner.lock().unwrap();
+        let len = g.ring.len();
+        let take = n.min(len);
+        let mut out = Vec::with_capacity(take);
+        // Ring order: head is the oldest slot once wrapped.
+        for i in 0..len {
+            let idx = (g.head + i) % len.max(1);
+            out.push(g.ring[idx]);
+        }
+        out.split_off(len - take)
+    }
+
+    /// Completion window snapshot, most recent last.
+    pub fn completions(&self) -> Vec<Completion> {
+        self.inner.lock().unwrap().completions.iter().copied().collect()
+    }
+
+    /// Events currently held in the ring (≤ configured capacity).
+    pub fn ring_len(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+
+    /// Events ever pushed (wrap indicator: `> ring_len()`).
+    pub fn total_events(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Bytes the ring retains — fixed at `capacity * EVENT_BYTES`.
+    pub fn ring_bytes(&self) -> usize {
+        self.inner.lock().unwrap().ring.capacity() * EVENT_BYTES
+    }
+}
+
+fn sort_events(events: &mut [TraceEvent]) {
+    events.sort_by_key(|e| (e.t_us, e.kind as u8, e.step));
+}
+
+/// The pool-wide trace registry: owns the shared epoch, hands one
+/// [`Recorder`] to each worker, interns model names to slots, aliases
+/// completion handles to session ids, and serves merged queries.
+pub struct TraceHub {
+    epoch: Instant,
+    capacity: usize,
+    recorders: Mutex<BTreeMap<u16, Arc<Recorder>>>,
+    /// CRF `session` handle → trace session id, bounded FIFO.
+    aliases: Mutex<(BTreeMap<u64, u64>, VecDeque<u64>)>,
+    models: Mutex<Vec<String>>,
+}
+
+/// Alias map bound: old handles expire FIFO.
+const MAX_ALIASES: usize = 4096;
+
+impl TraceHub {
+    /// `ring_events == 0` builds a disabled hub: every sink it hands
+    /// out is a no-op and queries return empty results.
+    pub fn new(ring_events: usize) -> Arc<TraceHub> {
+        Arc::new(TraceHub {
+            epoch: Instant::now(),
+            capacity: ring_events,
+            recorders: Mutex::new(BTreeMap::new()),
+            aliases: Mutex::new((BTreeMap::new(), VecDeque::new())),
+            models: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Configured per-worker ring capacity, in events.
+    pub fn ring_events(&self) -> usize {
+        self.capacity
+    }
+
+    /// Register (or fetch) worker `id`'s recorder and wrap it in a
+    /// sink.  Disabled hubs return a disabled sink.
+    pub fn sink(self: &Arc<Self>, worker: usize) -> TraceSink {
+        if !self.enabled() {
+            return TraceSink::disabled();
+        }
+        let rec = self
+            .recorders
+            .lock()
+            .unwrap()
+            .entry(worker as u16)
+            .or_insert_with(|| {
+                Arc::new(Recorder::new(
+                    worker as u16,
+                    self.capacity,
+                    self.epoch,
+                ))
+            })
+            .clone();
+        TraceSink { rec: Some(rec), hub: Some(self.clone()) }
+    }
+
+    /// Monotonic µs since the hub epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Intern a model name; the slot rides fixed-size events.
+    pub fn model_slot(&self, name: &str) -> u16 {
+        let mut models = self.models.lock().unwrap();
+        if let Some(i) = models.iter().position(|m| m == name) {
+            return i as u16;
+        }
+        models.push(name.to_string());
+        (models.len() - 1) as u16
+    }
+
+    pub fn model_name(&self, slot: u16) -> Option<String> {
+        self.models.lock().unwrap().get(slot as usize).cloned()
+    }
+
+    /// Alias a completion's CRF `session` handle to the trace session
+    /// id, so `{"cmd":"trace"}` accepts either.
+    pub fn alias(&self, handle: u64, session: u64) {
+        let mut g = self.aliases.lock().unwrap();
+        if g.0.insert(handle, session).is_none() {
+            g.1.push_back(handle);
+            if g.1.len() > MAX_ALIASES {
+                if let Some(old) = g.1.pop_front() {
+                    g.0.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Resolve a client-supplied id: alias target if known, else the
+    /// id itself.
+    pub fn resolve(&self, id: u64) -> u64 {
+        self.aliases.lock().unwrap().0.get(&id).copied().unwrap_or(id)
+    }
+
+    fn recorders(&self) -> Vec<Arc<Recorder>> {
+        self.recorders.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Merged timeline for one session across every worker (a stolen
+    /// or re-placed session leaves events on more than one ring).
+    pub fn session_events(&self, id: u64) -> Vec<TraceEvent> {
+        let sid = self.resolve(id);
+        let mut out = Vec::new();
+        for rec in self.recorders() {
+            out.extend(rec.events_for(sid));
+        }
+        sort_events(&mut out);
+        out
+    }
+
+    /// `{"cmd":"trace","session":id}` body.
+    pub fn session_json(&self, id: u64) -> Json {
+        let sid = self.resolve(id);
+        let events = self.session_events(sid);
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("session", Json::num(sid as f64)),
+            (
+                "events",
+                Json::Arr(events.iter().map(TraceEvent::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// `{"cmd":"trace","slowest":n}` body: completed sessions ranked
+    /// by latency, slowest first, across workers.
+    pub fn slowest_json(&self, n: usize) -> Json {
+        let mut all: Vec<Completion> = self
+            .recorders()
+            .into_iter()
+            .flat_map(|r| r.completions())
+            .collect();
+        all.sort_by(|a, b| b.latency_s.partial_cmp(&a.latency_s).unwrap());
+        all.truncate(n);
+        let rows = all
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("session", Json::num(c.session as f64)),
+                    ("latency_s", Json::num(c.latency_s)),
+                    ("breached", Json::Bool(c.breached)),
+                    ("worker", Json::num(c.worker as f64)),
+                    ("t_us", Json::num(c.t_us as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("sessions", Json::Arr(rows)),
+        ])
+    }
+
+    /// `{"cmd":"trace","recent":n}` body: the latest `n` events across
+    /// every worker, time-merged.
+    pub fn recent_json(&self, n: usize) -> Json {
+        let mut all = Vec::new();
+        for rec in self.recorders() {
+            all.extend(rec.recent(n));
+        }
+        sort_events(&mut all);
+        let skip = all.len().saturating_sub(n);
+        let events = all
+            .iter()
+            .skip(skip)
+            .map(TraceEvent::to_json)
+            .collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+}
+
+/// The engine-side handle: a cheap clone holding the worker's recorder
+/// (or nothing, when tracing is off).  The disabled path is one branch.
+#[derive(Clone)]
+pub struct TraceSink {
+    rec: Option<Arc<Recorder>>,
+    hub: Option<Arc<TraceHub>>,
+}
+
+impl TraceSink {
+    pub fn disabled() -> TraceSink {
+        TraceSink { rec: None, hub: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// Monotonic µs since the hub epoch (0 when disabled — callers
+    /// only read this inside an `enabled()` guard).
+    pub fn now_us(&self) -> u64 {
+        self.rec.as_ref().map(|r| r.now_us()).unwrap_or(0)
+    }
+
+    pub fn emit(&self, ev: TraceEvent) {
+        if let Some(rec) = &self.rec {
+            rec.push(ev);
+        }
+    }
+
+    /// See [`Recorder::note_complete`].
+    pub fn note_complete(&self, session: u64, latency_s: f64, breached: bool) {
+        if let Some(rec) = &self.rec {
+            rec.note_complete(session, latency_s, breached);
+        }
+    }
+
+    /// Intern a model name through the hub (0 when disabled).
+    pub fn model_slot(&self, name: &str) -> u16 {
+        self.hub.as_ref().map(|h| h.model_slot(name)).unwrap_or(0)
+    }
+
+    /// Alias a completion handle to a session id.
+    pub fn alias(&self, handle: u64, session: u64) {
+        if let Some(hub) = &self.hub {
+            hub.alias(handle, session);
+        }
+    }
+
+    /// Ring occupancy/bound introspection (bench + tests).
+    pub fn ring_len(&self) -> usize {
+        self.rec.as_ref().map(|r| r.ring_len()).unwrap_or(0)
+    }
+
+    pub fn ring_bytes(&self) -> usize {
+        self.rec.as_ref().map(|r| r.ring_bytes()).unwrap_or(0)
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.rec.as_ref().map(|r| r.total_events()).unwrap_or(0)
+    }
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink")
+            .field("enabled", &self.enabled())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(session: u64, kind: EventKind, t_us: u64) -> TraceEvent {
+        TraceEvent { session, kind, t_us, ..TraceEvent::default() }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_wraps() {
+        let hub = TraceHub::new(8);
+        let sink = hub.sink(0);
+        for i in 0..20u64 {
+            sink.emit(ev(i, EventKind::Step, i));
+        }
+        assert_eq!(sink.ring_len(), 8);
+        assert_eq!(sink.total_events(), 20);
+        assert_eq!(sink.ring_bytes(), 8 * EVENT_BYTES);
+        // Oldest events were overwritten: only the last 8 remain.
+        assert!(hub.session_events(5).is_empty());
+        assert_eq!(hub.session_events(19).len(), 1);
+    }
+
+    #[test]
+    fn disabled_sink_is_a_no_op() {
+        let hub = TraceHub::new(0);
+        let sink = hub.sink(0);
+        assert!(!sink.enabled());
+        sink.emit(ev(1, EventKind::Admit, 1));
+        sink.note_complete(1, 0.5, true);
+        assert_eq!(sink.ring_len(), 0);
+        assert_eq!(sink.total_events(), 0);
+        assert!(hub.session_events(1).is_empty());
+    }
+
+    #[test]
+    fn exemplar_pins_breached_timeline_across_wrap() {
+        let hub = TraceHub::new(8);
+        let sink = hub.sink(0);
+        for step in 0..3u64 {
+            let mut e = ev(7, EventKind::Step, step);
+            e.step = step as u32;
+            sink.emit(e);
+        }
+        sink.emit(ev(7, EventKind::Complete, 3));
+        // Budget breach at completion pins the timeline...
+        sink.note_complete(7, 1.0, true);
+        // ...which survives the ring wrapping with unrelated traffic.
+        for i in 0..50u64 {
+            sink.emit(ev(1000 + i, EventKind::Step, 10 + i));
+        }
+        let timeline = hub.session_events(7);
+        assert_eq!(timeline.len(), 4);
+        assert_eq!(timeline[0].kind, EventKind::Step);
+        assert_eq!(timeline[3].kind, EventKind::Complete);
+    }
+
+    #[test]
+    fn non_breach_fast_sessions_are_not_pinned() {
+        let hub = TraceHub::new(8);
+        let sink = hub.sink(0);
+        sink.emit(ev(3, EventKind::Step, 0));
+        // Not breached and not enough completions for a p99 tail.
+        sink.note_complete(3, 0.01, false);
+        for i in 0..50u64 {
+            sink.emit(ev(1000 + i, EventKind::Step, 10 + i));
+        }
+        assert!(hub.session_events(3).is_empty());
+    }
+
+    #[test]
+    fn slowest_listing_ranks_by_latency() {
+        let hub = TraceHub::new(8);
+        let sink = hub.sink(0);
+        sink.note_complete(1, 0.1, false);
+        sink.note_complete(2, 0.9, false);
+        sink.note_complete(3, 0.5, false);
+        let j = hub.slowest_json(2);
+        let rows = j.get("sessions").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("session").unwrap().as_usize(), Some(2));
+        assert_eq!(rows[1].get("session").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn alias_resolves_completion_handles() {
+        let hub = TraceHub::new(8);
+        let sink = hub.sink(0);
+        sink.emit(ev(42, EventKind::Complete, 5));
+        sink.alias(9001, 42);
+        assert_eq!(hub.resolve(9001), 42);
+        assert_eq!(hub.resolve(42), 42);
+        assert_eq!(hub.session_events(9001).len(), 1);
+    }
+
+    #[test]
+    fn event_json_names_kind_flags_and_stages() {
+        let mut e = TraceEvent {
+            session: 5,
+            kind: EventKind::Step,
+            t_us: 123,
+            flags: flag::STEP_FULL | flag::FORCED,
+            wall_us: 100,
+            exec_us: 60,
+            probe_us: 15,
+            ..TraceEvent::default()
+        };
+        e.a = 0.01;
+        e.c = 0.02;
+        e.class_slot = 2;
+        let j = e.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("step"));
+        assert_eq!(j.get("class").unwrap().as_str(), Some("batch"));
+        let flags = j.get("flags").unwrap().as_arr().unwrap();
+        assert!(flags.iter().any(|f| f.as_str() == Some("full")));
+        assert!(flags.iter().any(|f| f.as_str() == Some("forced")));
+        assert_eq!(j.get("host_us").unwrap().as_usize(), Some(25));
+        assert!((j.get("probe_low").unwrap().as_f64().unwrap() - 0.01).abs() < 1e-6);
+        assert!(j.get("probe_high").is_none(), "NaN payload is omitted");
+    }
+
+    #[test]
+    fn event_kind_name_table_is_total() {
+        // Every variant has a distinct canonical name.
+        let mut names: Vec<&str> = EVENT_NAMES.to_vec();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), EVENT_NAMES.len());
+        assert_eq!(EventKind::Complete.name(), "complete");
+        assert_eq!(EventKind::WarmAccept.name(), "warm_accept");
+    }
+
+    #[test]
+    fn recent_merges_across_workers_in_time_order() {
+        let hub = TraceHub::new(8);
+        let s0 = hub.sink(0);
+        let s1 = hub.sink(1);
+        s0.emit(ev(1, EventKind::Admit, 10));
+        s1.emit(ev(2, EventKind::Admit, 5));
+        s0.emit(ev(3, EventKind::Admit, 20));
+        let j = hub.recent_json(2);
+        let events = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("t_us").unwrap().as_usize(), Some(10));
+        assert_eq!(events[1].get("t_us").unwrap().as_usize(), Some(20));
+    }
+}

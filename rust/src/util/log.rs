@@ -1,0 +1,137 @@
+//! Minimal leveled logger for the serving processes.
+//!
+//! The engine and server used to talk to the operator through bare
+//! `eprintln!` — fine for a single-threaded boot banner, useless once a
+//! worker pool interleaves WAL IO errors and residency deferrals from
+//! four threads at once.  This module is the smallest thing that fixes
+//! attribution: a process-wide level read once from `FREQCA_LOG`
+//! (`warn` default, `info`, `debug`), a monotonic timestamp anchored at
+//! first use, and an optional worker id on every line:
+//!
+//! ```text
+//! [   2.041s][info ][w1] wal: opened worker1.wal (17 records replayed)
+//! [  13.877s][warn ][w0] wal append failed: No space left on device
+//! ```
+//!
+//! Deliberately not a `log`-crate clone: no macros, no targets, no
+//! per-module filtering — three functions (`warn`/`info`/`debug`) that
+//! cost one atomic load when their level is off.  Output goes to
+//! stderr, same as the prints it replaces, so nothing downstream of a
+//! `2>` redirect changes.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Severity, ordered so that a numeric compare implements filtering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Something degraded (WAL IO failure, dead worker, torn log tail).
+    Warn = 1,
+    /// Lifecycle milestones (listening, warmed up, drained, recovered).
+    Info = 2,
+    /// Per-decision chatter (residency deferrals, steal donations).
+    Debug = 3,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Warn => "warn ",
+            Level::Info => "info ",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// 0 = not yet initialized from the environment.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn parse_level(value: Option<&str>) -> u8 {
+    match value {
+        Some("debug") => Level::Debug as u8,
+        Some("info") => Level::Info as u8,
+        // Unknown values fall back to the default rather than erroring:
+        // a typo in an env var must never take the server down.
+        _ => Level::Warn as u8,
+    }
+}
+
+fn level_from_env() -> u8 {
+    parse_level(std::env::var("FREQCA_LOG").ok().as_deref())
+}
+
+fn current_level() -> u8 {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => {
+            let l = level_from_env();
+            LEVEL.store(l, Ordering::Relaxed);
+            l
+        }
+        l => l,
+    }
+}
+
+/// Would a message at `level` be printed?  Call sites that format
+/// expensively can guard on this.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= current_level()
+}
+
+/// Seconds since the process first logged (monotonic).
+fn uptime_s() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Emit one line at `level`, attributed to `worker` when the caller is
+/// a pool worker thread (`None` for process-level messages).
+pub fn log(level: Level, worker: Option<usize>, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    match worker {
+        Some(w) => eprintln!(
+            "[{:>9.3}s][{}][w{w}] {msg}",
+            uptime_s(),
+            level.tag()
+        ),
+        None => {
+            eprintln!("[{:>9.3}s][{}] {msg}", uptime_s(), level.tag())
+        }
+    }
+}
+
+pub fn warn(worker: Option<usize>, msg: &str) {
+    log(Level::Warn, worker, msg);
+}
+
+pub fn info(worker: Option<usize>, msg: &str) {
+    log(Level::Info, worker, msg);
+}
+
+pub fn debug(worker: Option<usize>, msg: &str) {
+    log(Level::Debug, worker, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_parse_defaults_to_warn() {
+        assert_eq!(parse_level(None), Level::Warn as u8);
+        assert_eq!(parse_level(Some("nonsense")), Level::Warn as u8);
+        assert_eq!(parse_level(Some("info")), Level::Info as u8);
+        assert_eq!(parse_level(Some("debug")), Level::Debug as u8);
+        // Warnings always pass, whatever the process env says.
+        assert!(enabled(Level::Warn));
+    }
+
+    #[test]
+    fn levels_order_numerically() {
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

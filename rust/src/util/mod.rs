@@ -7,6 +7,7 @@
 pub mod arena;
 pub mod bytes;
 pub mod json;
+pub mod log;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,357 @@
+//! Flight-recorder observability end-to-end: a warm-started,
+//! budget-forced, parked-then-revived session's full causal timeline
+//! retrieved over TCP via `{"cmd":"trace"}`, the `slowest`/`recent`
+//! listings, CRF-handle aliasing, the Prometheus text exposition, and
+//! the `--trace-ring-events 0` disabled path.
+//!
+//! When `FREQCA_TRACE_DUMP_DIR` is set (CI's artifacts job), retrieved
+//! timelines are dumped as JSON *before* any assertion runs, so a
+//! failing run uploads the evidence.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use freqca::coordinator::{Priority, Request};
+use freqca::server::{client::Client, serve, ServeOpts};
+use freqca::util::Json;
+
+mod common;
+use common::artifact_dir;
+
+/// Long enough that an interactive arrival lands while the batch-class
+/// session is still stepping (the park window), short enough to keep
+/// the test quick.  ~610 events per session also keeps three sessions
+/// inside the default 4096-event ring, so the timeline is complete
+/// without exemplar help.
+const LONG_STEPS: usize = 600;
+
+fn connect(port: u16) -> Client {
+    let addr = format!("127.0.0.1:{port}");
+    for _ in 0..300 {
+        if let Ok(c) = Client::connect(&addr) {
+            return c;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("server did not come up on {addr}");
+}
+
+/// Client ids start above any CRF-store handle this test can mint
+/// (handles count up from 1): a handle that collides with a client id
+/// would alias-shadow that session's timeline.
+fn treq(id: u64, priority: Priority, steps: usize, seed: u64) -> Request {
+    Request {
+        id,
+        model: "tiny".into(),
+        policy: "freqca:n=3".into(),
+        priority,
+        seed,
+        n_steps: steps,
+        cond: vec![0.1; 12],
+        ref_img: None,
+        return_latent: false,
+        error_budget: None,
+        parent_session: None,
+    }
+}
+
+fn dump_trace(j: &Json, name: &str) {
+    if let Some(dir) = std::env::var_os("FREQCA_TRACE_DUMP_DIR") {
+        let dir = std::path::PathBuf::from(dir);
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(dir.join(name), format!("{j}\n"));
+    }
+}
+
+fn kinds(events: &[Json]) -> Vec<&str> {
+    events
+        .iter()
+        .filter_map(|e| e.get("kind").and_then(Json::as_str))
+        .collect()
+}
+
+fn has_flag(ev: &Json, name: &str) -> bool {
+    ev.get("flags")
+        .and_then(Json::as_arr)
+        .map(|f| f.iter().any(|x| x.as_str() == Some(name)))
+        .unwrap_or(false)
+}
+
+/// Poll the trace verb until session `sid`'s timeline contains `kind`
+/// (the recorder is the readiness signal — no sleeps against the
+/// engine's pace).
+fn wait_for_kind(c: &mut Client, sid: u64, kind: &str) {
+    for _ in 0..5_000 {
+        if let Ok(j) = c.trace_session(sid) {
+            if let Some(events) = j.get("events").and_then(Json::as_arr) {
+                if kinds(events).contains(&kind) {
+                    return;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!("session {sid} never produced a '{kind}' event");
+}
+
+/// The acceptance scenario: a warm-started, budget-forced,
+/// parked-then-revived session, its whole causal story retrieved via
+/// `{"cmd":"trace"}`.
+#[test]
+fn trace_timeline_warm_forced_parked_session() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let port = 17533;
+    let stop = Arc::new(AtomicBool::new(false));
+    let s = stop.clone();
+    std::thread::spawn(move || {
+        let opts = ServeOpts {
+            addr: format!("127.0.0.1:{port}"),
+            batch_wait_ms: 1,
+            queue_capacity: 16,
+            // One in-flight slot: any interactive arrival must preempt
+            // the running batch session into the parking lot.
+            max_in_flight: 1,
+            ..ServeOpts::default()
+        };
+        let _ = serve(dir, opts, s);
+    });
+    let mut c = connect(port);
+
+    // Turn 1 (sid 1001): cold parent mints the warm-start handle.
+    let mut parent = treq(1001, Priority::Standard, 8, 7);
+    parent.error_budget = Some(1e6);
+    let p1 = c.generate(&parent).unwrap();
+    assert!(p1.ok, "parent error: {:?}", p1.error);
+    let h1 = p1.session.expect("completed session mints a handle");
+
+    // Turn 2 (sid 1002): warm child under a huge budget — guaranteed
+    // accept.  Its step-0 trace event carries the validation probe's
+    // rel-L1, which is *exactly* what turn 3's identical request will
+    // measure again (the sampler is deterministic).
+    let mut probe_turn = treq(1002, Priority::Standard, LONG_STEPS, 7);
+    probe_turn.error_budget = Some(1e6);
+    probe_turn.parent_session = Some(h1);
+    let p2 = c.generate(&probe_turn).unwrap();
+    assert!(p2.ok, "probe turn error: {:?}", p2.error);
+    assert!(p2.warm_started, "huge budget must warm-start");
+
+    let tl2 = c.trace_session(1002).unwrap();
+    dump_trace(&tl2, "trace_warm_turn.json");
+    let ev2 = tl2.get("events").and_then(Json::as_arr).expect("events");
+    let k2 = kinds(ev2);
+    for need in ["place", "admit", "start", "warm_accept", "step", "complete"]
+    {
+        assert!(k2.contains(&need), "warm turn missing '{need}': {k2:?}");
+    }
+    let eps = ev2
+        .iter()
+        .find_map(|e| {
+            if e.get("kind").and_then(Json::as_str) == Some("step") {
+                e.get("probe_all").and_then(Json::as_f64)
+            } else {
+                None
+            }
+        })
+        .expect("warm-validated step 0 carries its probe payload");
+    assert!(
+        eps.is_finite() && eps > 0.0,
+        "degenerate validation probe rel-L1: {eps}"
+    );
+
+    // The reply's CRF handle aliases to the same timeline.
+    let h2 = p2.session.expect("warm turn mints the next handle");
+    let by_handle = c.trace_session(h2).unwrap();
+    assert_eq!(
+        by_handle.get("session").and_then(Json::as_f64),
+        Some(1002.0),
+        "handle {h2} must resolve to the warm turn's session id"
+    );
+    assert_eq!(
+        by_handle.get("events").and_then(Json::as_arr).map(|e| e.len()),
+        Some(ev2.len()),
+        "aliased lookup must return the same timeline"
+    );
+
+    // Turn 3 (sid 1003, batch class): the same request with the budget
+    // pinned just above the measured drift.  The validation probe
+    // accepts (same parent, same child => same rel-L1), and after one
+    // cached step the controller's accumulated error exceeds the budget
+    // — forced refreshes, deterministically.
+    let b_budget = eps * 1.0001;
+    let b_thread = std::thread::spawn(move || {
+        let mut cb = connect(port);
+        let mut b = treq(1003, Priority::Batch, LONG_STEPS, 7);
+        b.error_budget = Some(b_budget);
+        b.parent_session = Some(h1);
+        cb.generate(&b).unwrap()
+    });
+    // Once the batch session is stepping, an interactive arrival at the
+    // in-flight cap preempts it into the parking lot.
+    wait_for_kind(&mut c, 1003, "start");
+    let inter = treq(1004, Priority::Interactive, 6, 9);
+    let i = c.generate(&inter).unwrap();
+    assert!(i.ok, "interactive error: {:?}", i.error);
+    let b = b_thread.join().unwrap();
+    assert!(b.ok, "batch error: {:?}", b.error);
+    assert!(b.warm_started, "budget {b_budget} must still warm-start");
+
+    let tl3 = c.trace_session(1003).unwrap();
+    dump_trace(&tl3, "trace_parked_session.json");
+    let ev3 = tl3.get("events").and_then(Json::as_arr).expect("events");
+    let k3 = kinds(ev3);
+    let pos = |k: &str| {
+        k3.iter()
+            .position(|x| *x == k)
+            .unwrap_or_else(|| panic!("timeline missing '{k}': {k3:?}"))
+    };
+    // Causal order: admitted, started, warm-validated, preempted into
+    // the lot, revived, completed — with the completion closing the
+    // timeline.
+    assert!(pos("admit") < pos("start"));
+    assert!(pos("start") < pos("warm_accept"));
+    assert!(pos("start") < pos("park"));
+    assert!(pos("park") < pos("revive"));
+    assert!(pos("revive") < pos("complete"));
+    assert_eq!(
+        pos("complete"),
+        k3.len() - 1,
+        "complete must close the timeline: {k3:?}"
+    );
+    // The revive came from the RAM parking lot, not a WAL spill.
+    let revive = &ev3[pos("revive")];
+    assert!(
+        !has_flag(revive, "from_spill"),
+        "no wal_dir, so the revive must not claim a spill"
+    );
+    // Budget-forced refreshes are visible per step.
+    let forced = ev3
+        .iter()
+        .filter(|e| {
+            e.get("kind").and_then(Json::as_str) == Some("step")
+                && has_flag(e, "forced")
+        })
+        .count();
+    assert!(
+        forced > 0,
+        "budget {b_budget} (drift {eps}) never forced a refresh"
+    );
+    // Stage attribution: step wall time split into exec/probe/host
+    // (the keys only render when wall_us > 0, so their presence also
+    // proves the timing was captured).
+    assert!(
+        ev3.iter().any(|e| {
+            e.get("kind").and_then(Json::as_str) == Some("step")
+                && e.get("wall_us").and_then(Json::as_f64).unwrap_or(0.0)
+                    > 0.0
+                && e.get("exec_us").is_some()
+                && e.get("host_us").is_some()
+        }),
+        "no step carries wall/exec/host stage attribution"
+    );
+    // The start event attributes the queue wait.
+    assert!(
+        ev3[pos("start")].get("queue_s").and_then(Json::as_f64).is_some(),
+        "start event must carry queue_s"
+    );
+
+    // Listings: the slowest ranking is ordered and knows the batch
+    // session; the recent tail is bounded.
+    let slow = c.trace_slowest(5).unwrap();
+    dump_trace(&slow, "trace_slowest.json");
+    let rows = slow.get("sessions").and_then(Json::as_arr).expect("rows");
+    assert!(!rows.is_empty());
+    let lats: Vec<f64> = rows
+        .iter()
+        .filter_map(|r| r.get("latency_s").and_then(Json::as_f64))
+        .collect();
+    assert!(
+        lats.windows(2).all(|w| w[0] >= w[1]),
+        "slowest listing must rank by latency: {lats:?}"
+    );
+    assert!(
+        rows.iter().any(|r| {
+            r.get("session").and_then(Json::as_f64) == Some(1003.0)
+        }),
+        "parked session missing from the completion window: {slow}"
+    );
+    let recent = c.trace_recent(10).unwrap();
+    let tail = recent.get("events").and_then(Json::as_arr).expect("events");
+    assert!(!tail.is_empty() && tail.len() <= 10, "recent tail: {recent}");
+
+    // Prometheus exposition: typed series, cumulative buckets, every
+    // sample line "name[{labels}] value".
+    let text = c.metrics_prom().unwrap();
+    assert!(text.contains("# TYPE"), "no TYPE comments:\n{text}");
+    assert!(
+        text.contains("sessions_parked"),
+        "park counter missing from exposition:\n{text}"
+    );
+    assert!(
+        text.contains("_bucket{le=\"+Inf\"}"),
+        "histograms must expose cumulative buckets:\n{text}"
+    );
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| {
+                panic!("malformed exposition line: '{line}'")
+            });
+        assert!(!name.is_empty(), "malformed exposition line: '{line}'");
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "non-numeric sample in '{line}'"
+        );
+    }
+
+    stop.store(true, Ordering::Relaxed);
+}
+
+/// `--trace-ring-events 0`: the verb reports tracing disabled instead
+/// of returning empty timelines, and the Prometheus exposition still
+/// serves.
+#[test]
+fn trace_verb_reports_disabled_when_ring_is_zero() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let port = 17534;
+    let stop = Arc::new(AtomicBool::new(false));
+    let s = stop.clone();
+    std::thread::spawn(move || {
+        let opts = ServeOpts {
+            addr: format!("127.0.0.1:{port}"),
+            batch_wait_ms: 1,
+            queue_capacity: 16,
+            trace_ring_events: 0,
+            ..ServeOpts::default()
+        };
+        let _ = serve(dir, opts, s);
+    });
+    let mut c = connect(port);
+    assert!(c.ping().unwrap());
+
+    let r = c.trace_session(1).unwrap();
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(
+        r.get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .contains("disabled"),
+        "expected a 'tracing disabled' error: {r}"
+    );
+    let r = c.trace_slowest(5).unwrap();
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+
+    // Exposition is independent of the recorder.
+    let text = c.metrics_prom().unwrap();
+    assert!(text.contains("# TYPE"), "no TYPE comments:\n{text}");
+
+    stop.store(true, Ordering::Relaxed);
+}

@@ -80,6 +80,47 @@ def gate_step_latency(results, baseline):
             f"arena missed {misses} steady-state takes "
             f"(limit {max_misses}) — a hot-path buffer is not recycled"
         )
+
+    # Flight recorder (observability): a disabled sink must cost nothing
+    # measurable on the step path, an enabled 4096-event ring only a few
+    # percent, and the ring must stay at its committed bound after
+    # wrapping (the bench asserts the same before writing results).
+    obs = need(results, "observability", "bench results")
+    dis_frac = need(obs, "disabled_overhead_frac", "bench results")
+    en_frac = need(obs, "enabled_overhead_frac", "bench results")
+    ring_len = need(obs, "ring_len_after", "bench results")
+    ring_events = need(obs, "ring_events", "bench results")
+    emitted = need(obs, "events_emitted", "bench results")
+    max_dis = need(baseline, "max_trace_disabled_overhead", "baseline")
+    max_en = need(baseline, "max_trace_enabled_overhead", "baseline")
+    print(
+        f"observability: trace overhead disabled {dis_frac * 100:.2f}% "
+        f"(limit {max_dis * 100:.0f}%), enabled {en_frac * 100:.2f}% "
+        f"(limit {max_en * 100:.0f}%); ring {ring_len:.0f}/"
+        f"{ring_events:.0f} events after {emitted:.0f} emitted"
+    )
+    if dis_frac > max_dis:
+        gate.fail(
+            f"disabled trace sink costs {dis_frac * 100:.2f}% on the step "
+            f"path (limit {max_dis * 100:.0f}%) — the off path must be "
+            "branch-only"
+        )
+    if en_frac > max_en:
+        gate.fail(
+            f"enabled flight recorder costs {en_frac * 100:.2f}% on the "
+            f"step path (limit {max_en * 100:.0f}%)"
+        )
+    if ring_len > ring_events:
+        gate.fail(
+            f"flight-recorder ring grew past its bound "
+            f"({ring_len:.0f} > {ring_events:.0f} events)"
+        )
+    if emitted <= ring_events:
+        gate.fail(
+            "observability bench never wrapped the ring — the bound was "
+            "not actually exercised"
+        )
+
     if gate.failed:
         return 1
     print("OK")

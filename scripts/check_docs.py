@@ -3,7 +3,7 @@
 
 Usage: check_docs.py [repo_root]
 
-Three gates, all hard failures (a docs drift must turn CI red, not rot
+Four gates, all hard failures (a docs drift must turn CI red, not rot
 silently):
 
 1. **Knob coverage** — every `--knob` named in the CLI usage string
@@ -16,7 +16,12 @@ silently):
    their `format!` call sites, so a plain substring search finds
    them), and every counter/gauge name minted in the source must be
    documented.
-3. **No stale pointers** — documentation must be self-contained:
+3. **Trace-event coverage** — the "Trace events" table in
+   OPERATIONS.md must list exactly the canonical event names in
+   `rust/src/trace/mod.rs`'s `EVENT_NAMES` table, both directions (a
+   renamed or added event kind must be documented; a documented event
+   must still exist).
+4. **No stale pointers** — documentation must be self-contained:
    no doc may reference a subpath under `/root/related/` (the
    related-repo file sets are not shipped with this repo).
 """
@@ -87,6 +92,28 @@ def source_metrics(rust_dir):
     return names
 
 
+def source_event_names(trace_src):
+    """The canonical trace-event name table (`EVENT_NAMES`) from
+    rust/src/trace/mod.rs."""
+    m = re.search(r"EVENT_NAMES[^=]*=\s*\[(.*?)\];", trace_src, re.S)
+    if not m:
+        return None
+    return set(re.findall(r'"([a-z][a-z0-9_]*)"', m.group(1)))
+
+
+def doc_event_names(ops):
+    """Event names from the `### Trace events` table rows only."""
+    m = re.search(r"### Trace events\n(.*?)(?:\n###|\n## |\Z)", ops, re.S)
+    if not m:
+        return None
+    names = set()
+    for line in m.group(1).splitlines():
+        row = re.match(r"\| `([a-z][a-z0-9_]*)` \|", line)
+        if row:
+            names.add(row.group(1))
+    return names
+
+
 def normalize(name):
     """Dynamic names embed a placeholder (`placed_w{w}` in the source
     `format!`, `queued_requests_{class}` in the docs); compare on the
@@ -139,7 +166,36 @@ def main():
             )
     print(f"metrics: {len(minted)} minted, {len(listed)} in doc tables")
 
-    # 3. Self-contained docs: no /root/related/<subpath> pointers.
+    # 3. Trace-event coverage, both directions.
+    trace_path = root / "rust/src/trace/mod.rs"
+    if not trace_path.exists():
+        gate.fail("rust/src/trace/mod.rs does not exist")
+    else:
+        minted_events = source_event_names(trace_path.read_text())
+        listed_events = doc_event_names(ops)
+        if minted_events is None:
+            gate.fail("could not locate EVENT_NAMES in rust/src/trace/mod.rs")
+        elif listed_events is None:
+            gate.fail(
+                "docs/OPERATIONS.md has no '### Trace events' table"
+            )
+        else:
+            for name in sorted(minted_events - listed_events):
+                gate.fail(
+                    f"trace event `{name}` is in EVENT_NAMES but not in "
+                    "the OPERATIONS.md trace-events table"
+                )
+            for name in sorted(listed_events - minted_events):
+                gate.fail(
+                    f"trace event `{name}` is documented but absent "
+                    "from EVENT_NAMES in rust/src/trace/mod.rs"
+                )
+            print(
+                f"trace events: {len(minted_events)} in source, "
+                f"{len(listed_events)} documented"
+            )
+
+    # 4. Self-contained docs: no /root/related/<subpath> pointers.
     for rel in DOCS:
         path = root / rel
         if not path.exists():
