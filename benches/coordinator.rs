@@ -39,6 +39,7 @@ use freqca::coordinator::batcher::Batcher;
 use freqca::coordinator::crfstore::{CrfStore, StoredCrf};
 use freqca::coordinator::durable::{Record, Wal, WalRecord};
 use freqca::coordinator::engine::{Engine, WorkItem};
+use freqca::coordinator::forecast::{ForecastConfig, Forecaster};
 use freqca::coordinator::placement::{PlaceInput, Placement, WorkerLoad};
 use freqca::coordinator::residency::Residency;
 use freqca::coordinator::scheduler::{
@@ -579,6 +580,7 @@ fn simulate_placement_v2(
                     None
                 },
                 hot: jobs[j].hot,
+                parent_home: None,
             };
             let target = placement.place(&input, &loads);
             queue[target].push_back(j);
@@ -1779,6 +1781,184 @@ fn per_class_json(outcomes: &[SimOutcome]) -> Json {
     )
 }
 
+// --- predictive placement + migration fixture (virtual time) --------
+// Mirrored operation-for-operation by scripts/mirror_migration.py; any
+// change here must be reflected there and in the committed baseline.
+
+const FX_WORKERS: usize = 2;
+const FX_STEP_S: f64 = 0.010;
+const FX_COLD_S: f64 = 0.050;
+/// Calibrate every N placements (the WorkerPool uses
+/// `FORECAST_CALIBRATE_EVERY`; the fixture calibrates faster so twelve
+/// arrivals exercise three calibrations).
+const FX_CAL_EVERY: usize = 4;
+
+const MG_STEP_S: f64 = 0.010;
+const MG_COLD_S: f64 = 0.050;
+/// Virtual cost of serializing + adopting one parked session.
+const MG_SHIP_S: f64 = 0.002;
+const MG_LONG_STEPS: usize = 50;
+const MG_SHORTS: usize = 4;
+const MG_SHORT_STEPS: usize = 6;
+/// When the sibling worker drains its own queue and turns hungry.
+const MG_RECEIVER_FREE_S: f64 = 0.100;
+
+/// `(arrive_s, model_slot, steps)`: a warmup that builds EWMA demand
+/// for model `b` (slot 1) on one worker, then a burst of `b` while that
+/// sole holder is the only warm copy in the pool.
+fn forecast_jobs() -> Vec<(f64, usize, usize)> {
+    let mut jobs =
+        vec![(0.000, 0, 2), (0.005, 1, 2), (0.080, 1, 2), (0.085, 1, 2)];
+    for k in 0..8 {
+        jobs.push((0.150 + 0.005 * k as f64, 1, 2));
+    }
+    jobs
+}
+
+struct ForecastSim {
+    /// Cold weight loads paid on a request's critical path.
+    cold_loads: usize,
+    /// Background warm loads ordered by the forecaster.
+    prestage_loads: usize,
+    /// Sorted completion latencies of the burst jobs.
+    burst: Vec<f64>,
+}
+
+/// Two workers, greedy finish-time placement with the cold-load
+/// penalty; the forecast arm runs the real `Forecaster` +
+/// `Placement::prestage_target` after every placement, exactly like the
+/// admission loop (observe each arrival, calibrate every
+/// `FX_CAL_EVERY`, validate candidates against a board snapshot).
+fn simulate_forecast(prestage_on: bool) -> ForecastSim {
+    const MODELS: [&str; 2] = ["a", "b"];
+    let mut clock = [0.0f64; FX_WORKERS];
+    // Per worker: virtual time each model slot's weights are usable
+    // (None = not resident; a future value = a load in flight).
+    let mut resident: [[Option<f64>; 2]; FX_WORKERS] =
+        [[Some(0.0), None], [Some(0.0), None]];
+    let placement = Placement::new(FX_WORKERS);
+    let mut fc =
+        prestage_on.then(|| Forecaster::new(ForecastConfig::default()));
+    let mut out =
+        ForecastSim { cold_loads: 0, prestage_loads: 0, burst: Vec::new() };
+    let mut placements = 0usize;
+    for (arrive, slot, steps) in forecast_jobs() {
+        let score = |w: usize| {
+            let start = clock[w].max(arrive);
+            let warm = matches!(resident[w][slot], Some(r) if r <= start);
+            start + if warm { 0.0 } else { FX_COLD_S }
+        };
+        let w = (0..FX_WORKERS)
+            .min_by(|&x, &y| {
+                score(x).partial_cmp(&score(y)).unwrap().then(x.cmp(&y))
+            })
+            .unwrap();
+        let mut start = clock[w].max(arrive);
+        match resident[w][slot] {
+            None => {
+                out.cold_loads += 1;
+                start += FX_COLD_S;
+                resident[w][slot] = Some(start);
+            }
+            // Wait out an in-flight (prestaged) load, no new cold.
+            Some(r) if r > start => start = r,
+            Some(_) => {}
+        }
+        clock[w] = start + steps as f64 * FX_STEP_S;
+        if arrive >= 0.150 {
+            out.burst.push(clock[w] - arrive);
+        }
+        // The admission loop forecasts *after* placing.
+        if let Some(f) = fc.as_mut() {
+            f.observe(MODELS[slot], MODELS[slot]);
+            placements += 1;
+            if placements % FX_CAL_EVERY == 0 {
+                // One board snapshot per calibration, shared by every
+                // candidate (the WorkerPool reads the LoadBoard once).
+                let loads: Vec<WorkerLoad> = (0..FX_WORKERS)
+                    .map(|v| {
+                        let busy = clock[v] > arrive;
+                        let slots: Vec<usize> = (0..2)
+                            .filter(|&s| resident[v][s].is_some())
+                            .collect();
+                        WorkerLoad::builder(1)
+                            .in_flight([0, usize::from(busy), 0])
+                            .resident(&slots)
+                            .build()
+                    })
+                    .collect();
+                for model in f.calibrate() {
+                    let mslot =
+                        MODELS.iter().position(|m| *m == model).unwrap();
+                    let Some(target) =
+                        placement.prestage_target(mslot, &loads)
+                    else {
+                        continue; // covered by the measured board
+                    };
+                    // Background warm load: occupies the idle target,
+                    // never a request's critical path.
+                    let begin = clock[target].max(arrive);
+                    resident[target][mslot] = Some(begin + FX_COLD_S);
+                    clock[target] = begin + FX_COLD_S;
+                    out.prestage_loads += 1;
+                    f.ordered(&model);
+                }
+            }
+        }
+    }
+    out.burst.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+struct MigrationSim {
+    migrations: usize,
+    /// Cold loads the receiver pays to run the adopted sessions.
+    receiver_cold_loads: usize,
+    /// Sorted completion latencies of the parked short sessions.
+    parked: Vec<f64>,
+}
+
+/// Worker 0 is blocked by a 50-step job at cap 1 with four parked
+/// shorts behind it; worker 1 frees up at `MG_RECEIVER_FREE_S` and
+/// advertises hunger.  Migration ships each parked session (snapshot
+/// serialize + adopt = `MG_SHIP_S` apiece) to worker 1, which pays one
+/// cold load for the model and runs them; without it they wait out the
+/// long job.
+fn simulate_migration(migrate_on: bool) -> MigrationSim {
+    let arrivals: Vec<f64> =
+        (0..MG_SHORTS).map(|i| 0.010 + 0.010 * i as f64).collect();
+    let long_done = MG_LONG_STEPS as f64 * MG_STEP_S;
+    let mut out = MigrationSim {
+        migrations: 0,
+        receiver_cold_loads: 0,
+        parked: Vec::new(),
+    };
+    if migrate_on {
+        let mut recv_clock = MG_RECEIVER_FREE_S;
+        let mut resident = false;
+        for (i, &arrive) in arrivals.iter().enumerate() {
+            let adopted = MG_RECEIVER_FREE_S + (i + 1) as f64 * MG_SHIP_S;
+            out.migrations += 1;
+            let mut start = recv_clock.max(adopted);
+            if !resident {
+                out.receiver_cold_loads += 1;
+                start += MG_COLD_S;
+                resident = true;
+            }
+            recv_clock = start + MG_SHORT_STEPS as f64 * MG_STEP_S;
+            out.parked.push(recv_clock - arrive);
+        }
+    } else {
+        let mut donor_clock = long_done;
+        for &arrive in &arrivals {
+            donor_clock += MG_SHORT_STEPS as f64 * MG_STEP_S;
+            out.parked.push(donor_clock - arrive);
+        }
+    }
+    out.parked.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
 fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&["bench", "mean ms", "p50 ms", "note"]);
     let is_short = |o: &SimOutcome| o.short;
@@ -2479,6 +2659,123 @@ fn main() -> anyhow::Result<()> {
         ("append_commit_p50_ms", Json::num(append_ms)),
     ]);
 
+    // --- predictive placement + live session migration (virtual time,
+    // deterministic): the real Forecaster + Placement::prestage_target
+    // must convert the burst's critical-path cold load into one
+    // background prestage, and shipping parked sessions to a hungry
+    // worker must beat waiting out the long job.
+    let fx_reactive = simulate_forecast(false);
+    let fx_forecast = simulate_forecast(true);
+    let mg_off = simulate_migration(false);
+    let mg_on = simulate_migration(true);
+    let fx_reactive_p95 = percentile(&fx_reactive.burst, 95.0);
+    let fx_forecast_p95 = percentile(&fx_forecast.burst, 95.0);
+    let mg_off_p95 = percentile(&mg_off.parked, 95.0);
+    let mg_on_p95 = percentile(&mg_on.parked, 95.0);
+    println!(
+        "\npredictive placement (burst of {} jobs): critical-path cold \
+         loads {} -> {} ({} prestaged), burst completion p95 \
+         {:.1} ms -> {:.1} ms",
+        fx_forecast.burst.len(),
+        fx_reactive.cold_loads,
+        fx_forecast.cold_loads,
+        fx_forecast.prestage_loads,
+        fx_reactive_p95 * 1e3,
+        fx_forecast_p95 * 1e3,
+    );
+    println!(
+        "session migration ({} parked shorts behind a {}-step job): \
+         parked completion p95 {:.1} ms -> {:.1} ms ({} migrations, \
+         {} receiver cold load)",
+        MG_SHORTS,
+        MG_LONG_STEPS,
+        mg_off_p95 * 1e3,
+        mg_on_p95 * 1e3,
+        mg_on.migrations,
+        mg_on.receiver_cold_loads,
+    );
+    table.row(vec![
+        "forecast prestage (burst p95)".into(),
+        format!("{:.2}", fx_reactive_p95 * 1e3),
+        format!("{:.2}", fx_forecast_p95 * 1e3),
+        format!(
+            "cold loads {} -> {}",
+            fx_reactive.cold_loads, fx_forecast.cold_loads
+        ),
+    ]);
+    table.row(vec![
+        "session migration (parked p95)".into(),
+        format!("{:.2}", mg_off_p95 * 1e3),
+        format!("{:.2}", mg_on_p95 * 1e3),
+        format!("{} migrations", mg_on.migrations),
+    ]);
+    assert!(
+        fx_forecast.cold_loads < fx_reactive.cold_loads,
+        "forecast-on must pay fewer critical-path cold loads ({} vs {})",
+        fx_forecast.cold_loads,
+        fx_reactive.cold_loads
+    );
+    assert!(
+        fx_forecast.prestage_loads >= 1,
+        "the forecaster never ordered a prestage"
+    );
+    assert!(
+        fx_forecast_p95 < fx_reactive_p95,
+        "prestaging must lower the burst completion tail \
+         ({fx_forecast_p95} vs {fx_reactive_p95})"
+    );
+    assert_eq!(
+        mg_on.migrations, MG_SHORTS,
+        "every parked short must migrate"
+    );
+    assert!(
+        mg_on_p95 < mg_off_p95,
+        "migrated parked sessions must beat waiting out the long job \
+         ({mg_on_p95} vs {mg_off_p95})"
+    );
+    let migration_json = Json::obj(vec![
+        (
+            "reactive",
+            Json::obj(vec![
+                ("cold_loads", Json::num(fx_reactive.cold_loads as f64)),
+                (
+                    "prestage_loads",
+                    Json::num(fx_reactive.prestage_loads as f64),
+                ),
+                ("burst_p95_s", Json::num(fx_reactive_p95)),
+            ]),
+        ),
+        (
+            "forecast",
+            Json::obj(vec![
+                ("cold_loads", Json::num(fx_forecast.cold_loads as f64)),
+                (
+                    "prestage_loads",
+                    Json::num(fx_forecast.prestage_loads as f64),
+                ),
+                ("burst_p95_s", Json::num(fx_forecast_p95)),
+            ]),
+        ),
+        (
+            "migrate_off",
+            Json::obj(vec![
+                ("migrations", Json::num(mg_off.migrations as f64)),
+                ("parked_p95_s", Json::num(mg_off_p95)),
+            ]),
+        ),
+        (
+            "migrate_on",
+            Json::obj(vec![
+                ("migrations", Json::num(mg_on.migrations as f64)),
+                (
+                    "receiver_cold_loads",
+                    Json::num(mg_on.receiver_cold_loads as f64),
+                ),
+                ("parked_p95_s", Json::num(mg_on_p95)),
+            ]),
+        ),
+    ]);
+
     // --- the same qos fixture through the LIVE engine, when artifacts
     // exist (CI's artifacts job; any box after `make artifacts`).
     let live_json = match live_artifact_dir() {
@@ -2609,6 +2906,7 @@ fn main() -> anyhow::Result<()> {
         ("feedback".to_string(), feedback_json),
         ("multi_turn".to_string(), multi_turn_json),
         ("durability".to_string(), durability_json),
+        ("migration".to_string(), migration_json),
     ];
     if let Some(live) = live_json {
         sections.push(("live".to_string(), live));

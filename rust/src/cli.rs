@@ -95,6 +95,7 @@ USAGE:
                   [--crf-store-bytes 67108864]
                   [--wal-dir PATH] [--spill-after-ticks 64]
                   [--trace-ring-events 4096]
+                  [--prestage] [--migrate-after-ticks 0]
   freqca generate [--model flux-sim] [--policy freqca:n=7] [--seed 0]
                   [--steps 50] [--prompt IDX] [--out out.ppm]
                   [--artifacts DIR]
@@ -159,6 +160,19 @@ Durable session tier (serve --wal-dir PATH): each worker keeps an
   is spilled: its snapshot moves to the WAL and its RAM (latents, CRF
   cache, weight pin) is released until revival.  The log compacts
   itself once enough retired records accumulate.
+Predictive placement & migration (serve --prestage /
+  --migrate-after-ticks T): --prestage runs a per-batch-key EWMA
+  arrival forecaster on the admission path; a model whose forecast
+  demand crosses the threshold and that no headroom worker holds is
+  warm-loaded onto the emptiest idle worker in the background, before
+  the spike lands — never on a request's critical path.  Forecasts are
+  calibrated against the measured residency board, so wrong predictions
+  decay instead of thrashing the LRU.  With --migrate-after-ticks T, a
+  session parked at least T scheduler ticks on a pressured worker
+  (full in-flight set) migrates whole — serialized snapshot, waiting
+  clients, retained requests, and warm-start pin — to a hungry idle
+  worker, which re-journals it into its own WAL and resumes it
+  bit-identically.  0 (the default) disables migration.
 Observability (serve --trace-ring-events N): each worker keeps a
   bounded in-memory flight recorder — N fixed-size structured events
   (admit/place/steal/start/step/park/spill/revive/warm-start/dedup/

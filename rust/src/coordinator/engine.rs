@@ -56,6 +56,7 @@ use anyhow::{anyhow, bail, Error, Result};
 use super::batcher::Pending;
 use super::crfstore::{CrfStore, SharedCrfStore, StoredCrf};
 use super::durable::{Record, Wal, WalRecord};
+use super::forecast::{ForecastConfig, Forecaster};
 use super::placement::{PlaceInput, Placement, WorkerLoad};
 use super::residency::Residency;
 use super::router::{RouteResult, Router};
@@ -78,6 +79,11 @@ use crate::util::{log, Arena};
 /// Default idle ticks before a pool worker advertises hunger on the
 /// steal board (`--steal-after`; 0 disables stealing).
 pub const DEFAULT_STEAL_AFTER: u64 = 16;
+
+/// Admissions between forecaster calibrations on the pool's submit
+/// path.  Small enough to react within a burst, large enough that the
+/// per-key EWMA fold stays invisible next to a placement decision.
+pub const FORECAST_CALIBRATE_EVERY: u64 = 8;
 
 /// One unit of work sent to the engine thread.
 pub struct WorkItem {
@@ -147,7 +153,54 @@ struct StealSlot {
     /// Donated work awaiting the worker's next loop iteration; `None`
     /// once the worker's serve loop has exited (donations bounce back
     /// to the donor, which requeues them locally).
-    mail: Option<VecDeque<WorkItem>>,
+    mail: Option<VecDeque<Donation>>,
+    /// Latest prestage order for this worker: a model the forecaster
+    /// predicts it will need soon.  The worker warm-loads it from its
+    /// idle path (never on a request's critical path).  One slot,
+    /// latest wins — orders are hints, not a queue.
+    prestage: Option<String>,
+}
+
+/// One unit of donated work on the steal board.
+enum Donation {
+    /// A queued request that never started (classic work stealing).
+    Request(WorkItem),
+    /// A whole parked session: serialized state plus everything the
+    /// thief needs to own it outright.
+    Session(Box<MigratedSession>),
+}
+
+/// A parked session in transit between workers.  The snapshot is the
+/// paper's dividend: per-session state is latents + one CRF tensor
+/// (+ Hermite ring + controller state), all host-resident bytes, so
+/// ownership transfers by shipping the serialized session — the
+/// terminal-multiplexer model of sessions as first-class values.
+struct MigratedSession {
+    /// `SessionSnapshot` codec bytes; `None` when the session never
+    /// stepped on the donor (admit-only spill stub) and the receiver
+    /// rebuilds bit-identically from the retained requests at step 0.
+    snapshot: Option<Vec<u8>>,
+    /// The batch's admission requests, retained so the receiver can
+    /// journal a fresh `Admit` into its own WAL (recoverability must
+    /// follow the move) and rebuild snapshot-less stubs.
+    requests: Vec<Request>,
+    /// The clients still waiting on this batch; replies flow from the
+    /// receiving worker.
+    waiters: Vec<Waiter>,
+    class: Priority,
+    model: String,
+    policy: String,
+    started: Instant,
+    /// Warm-start parent pin (the CRF store is pool-shared host RAM,
+    /// so the pin is valid on any worker and must move with the
+    /// session to be released exactly once).  Scheduling state does
+    /// NOT travel: tick clocks are per-worker, so the receiver
+    /// re-admits the session into its own scheduler.
+    warm_parent: Option<u64>,
+    recovered: bool,
+    sid: u64,
+    /// Donor's worker id (trace payload).
+    from_worker: usize,
 }
 
 /// Pool-wide work-stealing rendezvous: idle workers advertise hunger,
@@ -171,6 +224,7 @@ impl StealBoard {
                     Mutex::new(StealSlot {
                         hungry: None,
                         mail: Some(VecDeque::new()),
+                        prestage: None,
                     })
                 })
                 .collect(),
@@ -199,23 +253,24 @@ impl StealBoard {
         })
     }
 
-    /// Donate one work item to `to`.  Fails (returning the item) when
-    /// the target's serve loop already exited; clears the target's
-    /// hunger on success so donors don't dogpile it.
-    fn donate(&self, to: usize, item: WorkItem) -> Result<(), WorkItem> {
+    /// Donate one work item (request or whole session) to `to`.  Fails
+    /// (returning the donation) when the target's serve loop already
+    /// exited; clears the target's hunger on success so donors don't
+    /// dogpile it.
+    fn donate(&self, to: usize, d: Donation) -> Result<(), Donation> {
         let mut slot = self.slots[to].lock().unwrap();
         match slot.mail.as_mut() {
             Some(mail) => {
-                mail.push_back(item);
+                mail.push_back(d);
                 slot.hungry = None;
                 Ok(())
             }
-            None => Err(item),
+            None => Err(d),
         }
     }
 
     /// Drain worker `w`'s mailbox (each serve-loop iteration).
-    fn take_mail(&self, w: usize) -> Vec<WorkItem> {
+    fn take_mail(&self, w: usize) -> Vec<Donation> {
         match self.slots[w].lock().unwrap().mail.as_mut() {
             Some(mail) => mail.drain(..).collect(),
             None => Vec::new(),
@@ -224,13 +279,30 @@ impl StealBoard {
 
     /// Close worker `w`'s mailbox (serve-loop exit), returning whatever
     /// raced in; once closed, donations are refused atomically.
-    fn close_mail(&self, w: usize) -> Vec<WorkItem> {
+    fn close_mail(&self, w: usize) -> Vec<Donation> {
         let mut slot = self.slots[w].lock().unwrap();
         slot.hungry = None;
+        slot.prestage = None;
         match slot.mail.take() {
             Some(mail) => mail.into_iter().collect(),
             None => Vec::new(),
         }
+    }
+
+    /// Order a background prestage warm load of `model` onto worker
+    /// `w` (the admission loop's forecaster calls this).  Latest order
+    /// wins; a closed mailbox refuses orders.
+    pub fn order_prestage(&self, w: usize, model: &str) {
+        let mut slot = self.slots[w].lock().unwrap();
+        if slot.mail.is_some() {
+            slot.prestage = Some(model.to_string());
+        }
+    }
+
+    /// Take worker `w`'s pending prestage order, if any (the worker's
+    /// idle path executes it off the request critical path).
+    pub fn take_prestage(&self, w: usize) -> Option<String> {
+        self.slots[w].lock().unwrap().prestage.take()
     }
 }
 
@@ -291,6 +363,11 @@ struct Waiter {
 struct InFlight {
     session: SamplerSession<'static>,
     waiters: Vec<Waiter>,
+    /// The batch's admission requests, retained for the session's whole
+    /// life: cross-worker migration re-journals them into the receiving
+    /// worker's WAL (recoverability follows the move), and snapshot-less
+    /// rebuilds replay them from step 0.
+    requests: Vec<Request>,
     /// QoS class of the whole batch (classes never share a batch).
     class: Priority,
     /// Which model the session runs — pins that model's weights
@@ -330,8 +407,14 @@ enum SpillSource {
     WalSnapshot { offset: u64 },
     /// No snapshot exists — only the Admit record.  Sampling is
     /// deterministic given the requests (the seed fixes the noise), so
-    /// the session rebuilds from step 0 bit-identically.
-    Requests(Vec<Request>),
+    /// the session rebuilds from the stub's retained requests at step 0
+    /// bit-identically.
+    Requests,
+    /// In-RAM snapshot bytes: a session that migrated in from another
+    /// worker carries its serialized state directly (its donor's WAL
+    /// offset means nothing here).  Host bytes only — the paper's ~99%
+    /// CRF reduction is what keeps this small.
+    Bytes(Vec<u8>),
 }
 
 /// A parked session whose heavy state (latents, CRF cache, device
@@ -342,6 +425,8 @@ enum SpillSource {
 struct SpilledStub {
     uid: u64,
     waiters: Vec<Waiter>,
+    /// Admission requests, retained like [`InFlight::requests`].
+    requests: Vec<Request>,
     class: Priority,
     model: String,
     policy: String,
@@ -498,6 +583,9 @@ pub struct Engine {
     /// harvested into the warm-start store as usual, then parked here
     /// for [`Engine::drain_recovered_results`].
     recovered_results: Vec<(u64, Vec<RunResult>)>,
+    /// Ticks a RAM-parked session must age before sustained pressure
+    /// may migrate it to a hungry sibling (0 = migration off).
+    migrate_after_ticks: u64,
     /// Who this engine is within its pool (standalone engines get a
     /// private context from [`WorkerContext::standalone`]).
     worker: WorkerContext,
@@ -608,9 +696,18 @@ impl Engine {
             durable: None,
             next_uid: 1,
             recovered_results: Vec::new(),
+            migrate_after_ticks: 0,
             worker,
             trace: TraceSink::disabled(),
         })
+    }
+
+    /// Enable whole-session migration: a RAM-parked session that has
+    /// aged `ticks` scheduler ticks (or any already-spilled stub) on a
+    /// pressured worker ships to a hungry sibling.  0 (the default)
+    /// turns migration off.
+    pub fn set_migrate_after(&mut self, ticks: u64) {
+        self.migrate_after_ticks = ticks;
     }
 
     /// Attach this worker's flight-recorder sink.  Call before serving
@@ -694,13 +791,14 @@ impl Engine {
             };
             let src = match snaps.get(&uid) {
                 Some(&offset) => SpillSource::WalSnapshot { offset },
-                None => SpillSource::Requests(requests),
+                None => SpillSource::Requests,
             };
             self.parked.push(Parked::Spilled(SpilledStub {
                 uid,
                 // The clients that submitted these died with the old
                 // process; results go to `recovered_results`.
                 waiters: Vec::new(),
+                requests,
                 class,
                 model,
                 policy,
@@ -1019,6 +1117,7 @@ impl Engine {
         self.maybe_spill();
         self.account_backpressure();
         self.donate_surplus();
+        self.migrate_surplus();
         // Refresh each session's cache phase (pure lookahead) and hand
         // the scheduler a scratch copy of the states; everything it
         // mutates (credits, round refills, last_ran) is written back.
@@ -1329,6 +1428,7 @@ impl Engine {
                 self.sessions.push(InFlight {
                     session,
                     waiters: stub.waiters,
+                    requests: stub.requests,
                     class: stub.class,
                     model: stub.model,
                     started: stub.started,
@@ -1393,9 +1493,22 @@ impl Engine {
                 )?;
                 Ok((session, None))
             }
-            SpillSource::Requests(reqs) => {
-                let refs: Vec<&Request> = reqs.iter().collect();
+            SpillSource::Requests => {
+                let refs: Vec<&Request> = stub.requests.iter().collect();
                 self.build_session(&stub.model, &refs, weights)
+            }
+            SpillSource::Bytes(bytes) => {
+                let snap = SessionSnapshot::from_bytes(bytes)?;
+                let cfg = self.router.config(&stub.model).ok_or_else(|| {
+                    anyhow!("model {} vanished", stub.model)
+                })?;
+                let session = SamplerSession::restore(
+                    snap,
+                    cfg,
+                    weights,
+                    Some(self.arena.clone()),
+                )?;
+                Ok((session, None))
             }
         }
     }
@@ -1455,6 +1568,7 @@ impl Engine {
         let InFlight {
             session,
             waiters,
+            requests,
             class,
             model,
             started,
@@ -1472,6 +1586,7 @@ impl Engine {
         self.parked.push(Parked::Spilled(SpilledStub {
             uid,
             waiters,
+            requests,
             class,
             model,
             policy,
@@ -1538,11 +1653,27 @@ impl Engine {
                 _ => None,
             })
             .collect();
+        // Migrated-in stubs hold their snapshot in RAM; the copy
+        // journalled at adoption has no tracked offset but must
+        // survive compaction for the session to recover mid-flight.
+        let bytes_uids: HashSet<u64> = self
+            .parked
+            .iter()
+            .filter_map(|p| match p {
+                Parked::Spilled(SpilledStub {
+                    uid,
+                    src: SpillSource::Bytes(_),
+                    ..
+                }) => Some(*uid),
+                _ => None,
+            })
+            .collect();
         let store = self.store.clone();
         let mut keep = |rec: &Record| match rec.decode() {
             Ok(WalRecord::Admit { uid, .. }) => live.contains(&uid),
             Ok(WalRecord::Snapshot { uid, .. }) => {
                 spill_at.get(&uid) == Some(&rec.offset)
+                    || bytes_uids.contains(&uid)
             }
             // Completes only exist to kill Admits; once the Admit is
             // gone they carry nothing.
@@ -1826,16 +1957,326 @@ impl Engine {
                     self.trace.emit(ev);
                 }
             }
-            Err(item) => {
+            Err(Donation::Request(item)) => {
                 // The thief exited between the hunger read and the
                 // donation: requeue locally, state unchanged (and
                 // already counted as admitted once).
                 self.submit_counted(item, false);
             }
+            Err(Donation::Session(_)) => {
+                unreachable!("donated a request, bounced a session")
+            }
         }
         for f in followers {
             self.submit_counted(f, false);
         }
+    }
+
+    /// Whole-session migration: under sustained pressure (a full
+    /// in-flight set with sessions parked behind it) and with a hungry
+    /// sibling advertising, serialize one parked session and ship it
+    /// through the steal board.  The session's waiters, retained
+    /// requests (WAL recoverability), warm-start pin, and trace
+    /// identity all follow the move; the receiver re-journals it under
+    /// a fresh uid and resumes it bit-identically
+    /// (`integration_migration` proves output parity against a
+    /// never-migrated run).
+    fn migrate_surplus(&mut self) {
+        if self.migrate_after_ticks == 0 || !self.worker.steal.enabled() {
+            return;
+        }
+        if self.sessions.len() < self.max_in_flight || self.parked.is_empty()
+        {
+            return;
+        }
+        let Some((thief, _mask)) =
+            self.worker.steal.hungry_sibling(self.worker.id)
+        else {
+            return;
+        };
+        let tick = self.sched.tick();
+        // Already-spilled stubs ship first (their state is already
+        // serialized); otherwise the oldest RAM-parked session past
+        // the age threshold.
+        let idx = self
+            .parked
+            .iter()
+            .position(|p| matches!(p, Parked::Spilled(_)))
+            .or_else(|| {
+                (0..self.parked.len())
+                    .filter_map(|i| match &self.parked[i] {
+                        Parked::Ram { since_tick, .. }
+                            if tick.saturating_sub(*since_tick)
+                                >= self.migrate_after_ticks =>
+                        {
+                            Some((i, *since_tick))
+                        }
+                        _ => None,
+                    })
+                    .min_by_key(|(_, since)| *since)
+                    .map(|(i, _)| i)
+            });
+        let Some(idx) = idx else { return };
+        // Serialize (or fetch) the snapshot *before* removing the
+        // entry, so a WAL read failure leaves the lot untouched.
+        let snapshot: Option<Vec<u8>> = match &self.parked[idx] {
+            Parked::Ram { inner, .. } => {
+                Some(inner.session.snapshot(&inner.policy).to_bytes())
+            }
+            Parked::Spilled(stub) => match &stub.src {
+                SpillSource::WalSnapshot { offset } => {
+                    let off = *offset;
+                    let Some(d) = self.durable.as_mut() else { return };
+                    match d.wal.read_record(off).and_then(|r| r.decode()) {
+                        Ok(WalRecord::Snapshot { bytes, .. }) => Some(bytes),
+                        // Unreadable snapshot: keep the stub local, the
+                        // revive path will surface the error.
+                        _ => return,
+                    }
+                }
+                SpillSource::Requests => None,
+                SpillSource::Bytes(b) => Some(b.clone()),
+            },
+        };
+        let (m, uid, sid, class, mslot) = match self.parked.remove(idx) {
+            Parked::Ram { inner, .. } => {
+                let InFlight {
+                    session,
+                    waiters,
+                    requests,
+                    class,
+                    model,
+                    started,
+                    sched: _,
+                    warm_parent,
+                    uid,
+                    policy,
+                    recovered,
+                    sid,
+                    mslot,
+                } = inner;
+                // Device state (latents, CRF cache) drops here; the
+                // snapshot bytes carry it.
+                drop(session);
+                let m = MigratedSession {
+                    snapshot,
+                    requests,
+                    waiters,
+                    class,
+                    model,
+                    policy,
+                    started,
+                    warm_parent,
+                    recovered,
+                    sid,
+                    from_worker: self.worker.id,
+                };
+                (m, uid, sid, class, mslot)
+            }
+            Parked::Spilled(stub) => {
+                let SpilledStub {
+                    uid,
+                    waiters,
+                    requests,
+                    class,
+                    model,
+                    policy,
+                    started,
+                    sched: _,
+                    warm_parent,
+                    recovered,
+                    sid,
+                    mslot,
+                    src: _,
+                } = stub;
+                let m = MigratedSession {
+                    snapshot,
+                    requests,
+                    waiters,
+                    class,
+                    model,
+                    policy,
+                    started,
+                    warm_parent,
+                    recovered,
+                    sid,
+                    from_worker: self.worker.id,
+                };
+                (m, uid, sid, class, mslot)
+            }
+        };
+        // The old uid dies on this worker either way: the receiver
+        // (the thief, or this worker re-adopting on a bounce) journals
+        // the session afresh, so a donor-side replay must not
+        // double-run it.
+        if self.durable.is_some() {
+            self.append_wal(&WalRecord::Complete { uid }, sid);
+            self.retire_records(2);
+        }
+        match self
+            .worker
+            .steal
+            .donate(thief, Donation::Session(Box::new(m)))
+        {
+            Ok(()) => {
+                self.metrics.bump("migrations", 1);
+                self.metrics.bump(&format!("migrations_w{thief}"), 1);
+                log::debug(
+                    Some(self.worker.id),
+                    &format!(
+                        "migrated parked session {sid} to hungry worker \
+                         {thief}"
+                    ),
+                );
+                if self.trace.enabled() {
+                    let mut ev =
+                        self.trace_event(EventKind::MigrateOut, sid);
+                    ev.class_slot = class.slot() as u8;
+                    ev.model_slot = mslot;
+                    ev.a = thief as f32;
+                    self.trace.emit(ev);
+                }
+            }
+            Err(Donation::Session(m)) => {
+                // The thief exited between the hunger read and the
+                // donation: re-adopt locally under a fresh uid, state
+                // intact.
+                self.adopt_migrant(*m);
+            }
+            Err(Donation::Request(_)) => {
+                unreachable!("donated a session, bounced a request")
+            }
+        }
+    }
+
+    /// Take ownership of a migrated-in session: mint a local uid,
+    /// journal it into *this* worker's WAL (recoverability follows the
+    /// session), emit its arrival on the trace timeline, and park it as
+    /// a spilled stub — the normal revive path (admission gate, weight
+    /// acquisition, bit-identical restore, failure handling) brings it
+    /// in flight on a following tick.
+    fn adopt_migrant(&mut self, m: MigratedSession) {
+        let MigratedSession {
+            snapshot,
+            requests,
+            waiters,
+            class,
+            model,
+            policy,
+            started,
+            warm_parent,
+            recovered,
+            sid,
+            from_worker,
+        } = m;
+        let uid = self.next_uid;
+        self.next_uid += 1;
+        let mslot = if self.trace.enabled() {
+            self.trace.model_slot(&model)
+        } else {
+            u16::MAX
+        };
+        if self.durable.is_some() && !requests.is_empty() {
+            self.append_wal(
+                &WalRecord::Admit { uid, requests: requests.clone() },
+                sid,
+            );
+            if let Some(bytes) = &snapshot {
+                self.append_wal(
+                    &WalRecord::Snapshot { uid, bytes: bytes.clone() },
+                    sid,
+                );
+            }
+        }
+        if self.trace.enabled() {
+            let mut ev = self.trace_event(EventKind::MigrateIn, sid);
+            ev.class_slot = class.slot() as u8;
+            ev.model_slot = mslot;
+            ev.a = from_worker as f32;
+            self.trace.emit(ev);
+        }
+        let src = match snapshot {
+            Some(bytes) => SpillSource::Bytes(bytes),
+            None => SpillSource::Requests,
+        };
+        self.parked.push(Parked::Spilled(SpilledStub {
+            uid,
+            waiters,
+            requests,
+            class,
+            model,
+            policy,
+            started,
+            // Tick clocks are per-worker: re-admit into our scheduler
+            // (the stale deadline surrogate makes resumption prompt).
+            sched: self.sched.admit(class, started),
+            warm_parent,
+            recovered,
+            sid,
+            mslot,
+            src,
+        }));
+    }
+
+    /// Drain this worker's steal-board mailbox: donated requests
+    /// re-enter admission, migrated sessions are adopted.  The serve
+    /// loop calls this every iteration; tests drive it directly.
+    pub fn poll_mail(&mut self) {
+        for d in self.worker.steal.take_mail(self.worker.id) {
+            match d {
+                Donation::Request(item) => self.submit_counted(item, false),
+                Donation::Session(m) => self.adopt_migrant(*m),
+            }
+        }
+    }
+
+    /// Execute a pending prestage order, if any: warm-load the
+    /// forecast model's weights now, on an idle tick, never on a
+    /// request's critical path.  Counted in `prestage_loads` only when
+    /// the load actually happened (already-resident models are the
+    /// forecast being late — a no-op).
+    pub fn poll_prestage(&mut self) {
+        let Some(model) =
+            self.worker.steal.take_prestage(self.worker.id)
+        else {
+            return;
+        };
+        if self.residency.touch(&model).is_some() {
+            return;
+        }
+        {
+            let (sessions, parked) = (&self.sessions, &self.parked);
+            if !self
+                .residency
+                .admissible(&model, &|u| model_in_use(sessions, parked, u))
+            {
+                // Bound full of pinned models: dropping the order is
+                // the calibration — the forecast was wrong about this
+                // worker having room.
+                return;
+            }
+        }
+        match self.ensure_resident(&model) {
+            Ok(_) => {
+                self.metrics.bump("prestage_loads", 1);
+                log::debug(
+                    Some(self.worker.id),
+                    &format!("prestaged {model} ahead of forecast demand"),
+                );
+            }
+            Err(e) => log::debug(
+                Some(self.worker.id),
+                &format!("prestage of {model} failed: {e}"),
+            ),
+        }
+    }
+
+    /// Advertise this worker's hunger (idle, wants work) with its
+    /// residency mask.  The serve loop does this after `steal_after`
+    /// idle ticks; tests drive it directly.
+    pub fn advertise_hunger(&mut self) {
+        let mask = self.residency.mask(&self.model_order);
+        self.worker.steal.set_hungry(self.worker.id, Some(mask));
     }
 
     /// Publish one gauge under this worker's name: plain for standalone
@@ -1912,15 +2353,16 @@ impl Engine {
                 } else {
                     u16::MAX
                 };
+                // Retained for the session's life: the WAL admission
+                // record here, re-journalling on migration later.
+                let requests: Vec<Request> =
+                    batch.iter().map(|p| p.request.clone()).collect();
                 // The durable admission record: everything needed to
                 // re-run this session bit-identically after a crash.
                 if self.durable.is_some() {
                     let rec = WalRecord::Admit {
                         uid,
-                        requests: batch
-                            .iter()
-                            .map(|p| p.request.clone())
-                            .collect(),
+                        requests: requests.clone(),
                     };
                     self.append_wal(&rec, sid);
                 }
@@ -1937,6 +2379,7 @@ impl Engine {
                 self.sessions.push(InFlight {
                     session,
                     waiters,
+                    requests,
                     class,
                     model: model.to_string(),
                     started: now,
@@ -2400,11 +2843,10 @@ impl Engine {
         let mut closed = false;
         let mut idle_ticks: u64 = 0;
         loop {
-            // Work donated by busier siblings (work stealing; the
-            // donor already counted these into `requests_admitted`).
-            for item in self.worker.steal.take_mail(self.worker.id) {
-                self.submit_counted(item, false);
-            }
+            // Work donated by busier siblings — stolen requests (the
+            // donor already counted these into `requests_admitted`)
+            // and whole migrated sessions.
+            self.poll_mail();
             // Admit everything currently waiting.
             while !closed {
                 match rx.try_recv() {
@@ -2421,6 +2863,9 @@ impl Engine {
                 self.worker.steal.set_hungry(self.worker.id, None);
                 continue;
             }
+            // Idle tick: execute any pending prestage order now, off
+            // every request's critical path.
+            self.poll_prestage();
             let drained = self.sessions.is_empty()
                 && self.parked.is_empty()
                 && self.router.queued() == 0;
@@ -2434,8 +2879,13 @@ impl Engine {
                     if late.is_empty() {
                         return;
                     }
-                    for item in late {
-                        self.submit_counted(item, false);
+                    for d in late {
+                        match d {
+                            Donation::Request(item) => {
+                                self.submit_counted(item, false)
+                            }
+                            Donation::Session(m) => self.adopt_migrant(*m),
+                        }
                     }
                     continue;
                 }
@@ -2450,8 +2900,7 @@ impl Engine {
                 // count down to a hunger advertisement.
                 idle_ticks += 1;
                 if idle_ticks >= self.worker.steal.steal_after() {
-                    let mask = self.residency.mask(&self.model_order);
-                    self.worker.steal.set_hungry(self.worker.id, Some(mask));
+                    self.advertise_hunger();
                 }
             }
             // Idle: block briefly for the next request to avoid a busy
@@ -2516,6 +2965,14 @@ pub struct WorkerPool {
     /// `--trace-ring-events 0`); placement decisions are recorded on
     /// the chosen worker's ring.
     hub: Arc<TraceHub>,
+    /// The pool's steal board: donation mailboxes plus the forecaster's
+    /// prestage order slots.
+    steal: Arc<StealBoard>,
+    /// Arrival forecaster (`--prestage`); `None` runs the pool purely
+    /// reactively.
+    forecast: Option<Forecaster>,
+    /// Admissions since boot, for the calibration cadence.
+    submits: u64,
 }
 
 impl WorkerPool {
@@ -2536,6 +2993,8 @@ impl WorkerPool {
         wal_dir: Option<PathBuf>,
         spill_after_ticks: u64,
         hub: Arc<TraceHub>,
+        prestage: bool,
+        migrate_after_ticks: u64,
     ) -> Result<WorkerPool> {
         let n = workers.max(1);
         let ledger = DephaseLedger::from_config(&qos);
@@ -2581,6 +3040,7 @@ impl WorkerPool {
                         // Trace before warmup/recovery so revive events
                         // from WAL replay land on the ring.
                         engine.set_trace(worker_hub.sink(id));
+                        engine.set_migrate_after(migrate_after_ticks);
                         for m in &warm {
                             engine.warmup(m)?;
                         }
@@ -2656,6 +3116,10 @@ impl WorkerPool {
             hot_default: feedback.is_some(),
             store,
             hub,
+            steal,
+            forecast: prestage
+                .then(|| Forecaster::new(ForecastConfig::default())),
+            submits: 0,
         })
     }
 
@@ -2704,6 +3168,31 @@ impl WorkerPool {
         let w = self.placement.place(&input, &snapshot);
         self.board[w].lock().unwrap().queued_by_class[class.slot()] += 1;
         self.metrics.bump(&format!("placed_w{w}"), 1);
+        if let Some(f) = self.forecast.as_mut() {
+            f.observe(&key, &item.request.model);
+            self.submits += 1;
+            if self.submits % FORECAST_CALIBRATE_EVERY == 0 {
+                for model in f.calibrate() {
+                    // Calibrate the prediction against the measured
+                    // board: a hot model some headroom worker already
+                    // holds needs nothing, and an uncovered one is
+                    // ordered onto the emptiest non-holder.  Cooldown
+                    // only burns when an order was actually placed.
+                    let Some(slot) = self.model_slots.get(&model).copied()
+                    else {
+                        continue;
+                    };
+                    if let Some(target) =
+                        self.placement.prestage_target(slot, &snapshot)
+                    {
+                        self.steal.order_prestage(target, &model);
+                        f.ordered(&model);
+                    }
+                }
+                self.metrics.set_gauge("forecast_keys", f.keys() as f64);
+                self.metrics.set_gauge("forecast_demand", f.total_demand());
+            }
+        }
         if self.hub.enabled() {
             // Cross-thread: placement runs on the admission thread, so
             // the event goes through the hub to the chosen worker's
@@ -2784,13 +3273,33 @@ mod tests {
         // A worker never sees itself as a donation target.
         assert_eq!(board.hungry_sibling(1), None);
         let (it, _rx) = item(7);
-        assert!(board.donate(1, it).is_ok(), "open mailbox accepts");
+        assert!(
+            board.donate(1, Donation::Request(it)).is_ok(),
+            "open mailbox accepts"
+        );
         // Donation clears the hunger flag so donors don't dogpile.
         assert_eq!(board.hungry_sibling(0), None);
         let mail = board.take_mail(1);
         assert_eq!(mail.len(), 1);
-        assert_eq!(mail[0].request.id, 7);
+        match &mail[0] {
+            Donation::Request(it) => assert_eq!(it.request.id, 7),
+            Donation::Session(_) => panic!("request came back as session"),
+        }
         assert!(board.take_mail(1).is_empty());
+    }
+
+    #[test]
+    fn prestage_orders_need_an_open_mailbox_and_latest_wins() {
+        let board = StealBoard::new(2, 4);
+        assert_eq!(board.take_prestage(0), None);
+        board.order_prestage(0, "m-a");
+        board.order_prestage(0, "m-b"); // supersedes m-a
+        assert_eq!(board.take_prestage(0), Some("m-b".to_string()));
+        assert_eq!(board.take_prestage(0), None, "orders are one-shot");
+        // A closed mailbox refuses prestage orders too (worker exiting).
+        let _ = board.close_mail(1);
+        board.order_prestage(1, "m-c");
+        assert_eq!(board.take_prestage(1), None);
     }
 
     #[test]
@@ -2798,15 +3307,19 @@ mod tests {
         let board = StealBoard::new(2, 4);
         board.set_hungry(0, Some(0));
         let (racing, _rx) = item(1);
-        assert!(board.donate(0, racing).is_ok(), "open before close");
+        assert!(
+            board.donate(0, Donation::Request(racing)).is_ok(),
+            "open before close"
+        );
         // close_mail returns what raced in and flips the slot closed
         // atomically — later donations bounce back to the donor.
         let late = board.close_mail(0);
         assert_eq!(late.len(), 1);
         assert_eq!(board.hungry_sibling(1), None, "close clears hunger");
         let (bounced, _rx2) = item(2);
-        let back = match board.donate(0, bounced) {
-            Err(it) => it,
+        let back = match board.donate(0, Donation::Request(bounced)) {
+            Err(Donation::Request(it)) => it,
+            Err(Donation::Session(_)) => panic!("request bounced as session"),
             Ok(()) => panic!("closed mailbox accepted a donation"),
         };
         assert_eq!(back.request.id, 2);

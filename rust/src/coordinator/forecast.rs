@@ -1,0 +1,277 @@
+//! Per-batch-key arrival forecasting (Placement v3, the predictive
+//! half): an EWMA rate per batch key, folded up to per-model demand, so
+//! placement can **pre-stage** a model's weights on a worker *before*
+//! the traffic spike lands instead of paying the cold load on the first
+//! request's critical path.
+//!
+//! The design follows the forecast-then-calibrate idiom (FoCa, see
+//! PAPERS.md): prediction is deliberately cheap — one add per arrival,
+//! one multiply per key per calibration — and every calibration is
+//! checked against the *measured* residency board by the caller
+//! ([`super::placement::Placement::prestage_target`] returns `None`
+//! when a headroom worker already holds the model), so a wrong forecast
+//! decays away instead of thrashing the residency LRU.  A per-model
+//! cooldown keeps a sustained (correct) forecast from re-ordering the
+//! same load every calibration while the warm load is still in flight.
+//!
+//! Pure data: no clocks, no I/O, no engine types.  The admission loop
+//! owns one [`Forecaster`] and drives it; everything here is
+//! deterministic in the observation sequence, which is what lets the
+//! coordinator bench replay it exactly in virtual time.
+
+use std::collections::HashMap;
+
+/// Default EWMA retention per calibration: `rate = rate * DECAY +
+/// arrivals_since_last_calibration`.  0.5 forgets a dead key in a few
+/// calibrations while two windows of sustained traffic already carry
+/// most of their weight.
+pub const FORECAST_DECAY: f64 = 0.5;
+
+/// A model whose summed key rates reach this many arrivals per
+/// calibration window is worth pre-staging.
+pub const DEFAULT_DEMAND_THRESHOLD: f64 = 1.0;
+
+/// Calibrations a model sits out after a prestage order was actually
+/// placed for it (the warm load needs time to land before the forecast
+/// may re-fire).
+pub const DEFAULT_PRESTAGE_COOLDOWN: u64 = 4;
+
+/// Bound on tracked keys: past it, the coldest (lowest-rate) key is
+/// dropped for each new one, so a rotating key population cannot grow
+/// the map without bound.
+pub const MAX_FORECAST_KEYS: usize = 4096;
+
+/// Rates below this are dead keys; calibration drops them.
+const DEAD_RATE: f64 = 0.01;
+
+#[derive(Debug, Clone)]
+struct KeyRate {
+    /// Model the key's requests run (a batch key never changes model).
+    model: String,
+    /// EWMA arrivals per calibration window.
+    rate: f64,
+    /// Arrivals observed since the last calibration.
+    pending: u64,
+}
+
+/// Tuning knobs, all defaulted; the serve path uses [`Forecaster::new`].
+#[derive(Debug, Clone, Copy)]
+pub struct ForecastConfig {
+    pub decay: f64,
+    pub demand_threshold: f64,
+    pub cooldown: u64,
+    pub max_keys: usize,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            decay: FORECAST_DECAY,
+            demand_threshold: DEFAULT_DEMAND_THRESHOLD,
+            cooldown: DEFAULT_PRESTAGE_COOLDOWN,
+            max_keys: MAX_FORECAST_KEYS,
+        }
+    }
+}
+
+/// Per-key EWMA arrival forecaster with per-model demand roll-up.
+///
+/// Protocol: [`Forecaster::observe`] on every placed request,
+/// [`Forecaster::calibrate`] periodically (the admission loop does it
+/// every few placements); the returned models are *candidates* — the
+/// caller checks each against the measured board and reports back with
+/// [`Forecaster::ordered`] only when a prestage order was actually
+/// placed, so coverage by an already-warm worker never burns cooldown.
+#[derive(Debug, Default)]
+pub struct Forecaster {
+    cfg: ForecastConfig,
+    keys: HashMap<String, KeyRate>,
+    /// model -> calibrations left before it may be ordered again.
+    cooldown: HashMap<String, u64>,
+}
+
+impl Forecaster {
+    pub fn new(cfg: ForecastConfig) -> Forecaster {
+        Forecaster { cfg, keys: HashMap::new(), cooldown: HashMap::new() }
+    }
+
+    /// Record one arrival of `key` (running `model`).  O(1).
+    pub fn observe(&mut self, key: &str, model: &str) {
+        if let Some(k) = self.keys.get_mut(key) {
+            k.pending += 1;
+            return;
+        }
+        if self.keys.len() >= self.cfg.max_keys {
+            // Evict the coldest key; a brand-new key starts at rate 0,
+            // so it only displaces something colder than "unknown".
+            if let Some(victim) = self
+                .keys
+                .iter()
+                .min_by(|a, b| {
+                    a.1.rate
+                        .partial_cmp(&b.1.rate)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(k, _)| k.clone())
+            {
+                self.keys.remove(&victim);
+            }
+        }
+        self.keys.insert(
+            key.to_string(),
+            KeyRate { model: model.to_string(), rate: 0.0, pending: 1 },
+        );
+    }
+
+    /// Fold pending arrivals into every key's EWMA, drop dead keys,
+    /// advance cooldowns, and return the models whose demand crossed
+    /// the threshold (sorted for determinism).  The caller validates
+    /// each candidate against the measured board before ordering.
+    pub fn calibrate(&mut self) -> Vec<String> {
+        let decay = self.cfg.decay;
+        self.keys.retain(|_, k| {
+            k.rate = k.rate * decay + k.pending as f64;
+            k.pending = 0;
+            k.rate >= DEAD_RATE
+        });
+        let mut hot: Vec<String> = {
+            let mut demand: HashMap<&str, f64> = HashMap::new();
+            for k in self.keys.values() {
+                *demand.entry(k.model.as_str()).or_default() += k.rate;
+            }
+            demand
+                .into_iter()
+                .filter(|(m, d)| {
+                    *d >= self.cfg.demand_threshold
+                        && !self.cooldown.contains_key(*m)
+                })
+                .map(|(m, _)| m.to_string())
+                .collect()
+        };
+        // Cooldowns advance *after* muting this round's candidates, so
+        // an order with cooldown N sits out exactly N calibrations.
+        self.cooldown.retain(|_, c| {
+            *c = c.saturating_sub(1);
+            *c > 0
+        });
+        hot.sort();
+        hot
+    }
+
+    /// A prestage order was actually placed for `model`: start its
+    /// cooldown so the next calibrations don't re-order the same load.
+    pub fn ordered(&mut self, model: &str) {
+        if self.cfg.cooldown > 0 {
+            self.cooldown.insert(model.to_string(), self.cfg.cooldown);
+        }
+    }
+
+    /// Tracked (live) batch keys.
+    pub fn keys(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Summed EWMA demand across every model (the pool gauge).
+    pub fn total_demand(&self) -> f64 {
+        self.keys.values().map(|k| k.rate).sum()
+    }
+
+    /// Current EWMA demand of one model (tests/observability).
+    pub fn demand(&self, model: &str) -> f64 {
+        self.keys
+            .values()
+            .filter(|k| k.model == model)
+            .map(|k| k.rate)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fc() -> Forecaster {
+        Forecaster::new(ForecastConfig::default())
+    }
+
+    #[test]
+    fn rate_rises_with_traffic_and_decays_without() {
+        let mut f = fc();
+        for _ in 0..4 {
+            f.observe("a|6", "a");
+        }
+        assert_eq!(f.calibrate(), vec!["a".to_string()]);
+        assert!((f.demand("a") - 4.0).abs() < 1e-12);
+        // Silence: each calibration halves the rate until the key dies.
+        f.ordered("a"); // quiet the candidate list below
+        for _ in 0..12 {
+            f.calibrate();
+        }
+        assert_eq!(f.demand("a"), 0.0, "dead keys must be dropped");
+        assert_eq!(f.keys(), 0);
+    }
+
+    #[test]
+    fn demand_sums_keys_per_model_and_thresholds() {
+        let mut f = fc();
+        // Two keys of model b at half the threshold each: together hot.
+        f.observe("b|6", "b");
+        f.observe("b|30", "b");
+        // One cold key of model a.
+        f.observe("a|6", "a");
+        let hot = f.calibrate();
+        assert_eq!(hot, vec!["b".to_string()]);
+        assert!((f.demand("b") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cooldown_suppresses_reorders_until_elapsed() {
+        let mut f = fc();
+        for _ in 0..4 {
+            f.observe("a|6", "a");
+        }
+        assert_eq!(f.calibrate(), vec!["a".to_string()]);
+        f.ordered("a");
+        // Keep demand hot; the cooldown alone must mute it.
+        for round in 0..DEFAULT_PRESTAGE_COOLDOWN {
+            for _ in 0..4 {
+                f.observe("a|6", "a");
+            }
+            assert!(
+                f.calibrate().is_empty(),
+                "round {round}: cooling model re-offered"
+            );
+        }
+        for _ in 0..4 {
+            f.observe("a|6", "a");
+        }
+        assert_eq!(f.calibrate(), vec!["a".to_string()], "cooldown expired");
+    }
+
+    #[test]
+    fn candidates_skip_uncovered_only_when_caller_orders() {
+        // A candidate the caller does NOT order (measured board already
+        // covered it) stays a candidate next round — no cooldown burnt.
+        let mut f = fc();
+        for _ in 0..2 {
+            f.observe("a|6", "a");
+        }
+        assert_eq!(f.calibrate(), vec!["a".to_string()]);
+        for _ in 0..2 {
+            f.observe("a|6", "a");
+        }
+        assert_eq!(f.calibrate(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn key_map_is_bounded_under_rotation() {
+        let mut f = Forecaster::new(ForecastConfig {
+            max_keys: 8,
+            ..ForecastConfig::default()
+        });
+        for i in 0..100 {
+            f.observe(&format!("k{i}|6"), "a");
+        }
+        assert!(f.keys() <= 8, "rotating keys grew the map: {}", f.keys());
+    }
+}

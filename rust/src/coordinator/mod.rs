@@ -31,6 +31,7 @@ pub mod batcher;
 pub mod crfstore;
 pub mod durable;
 pub mod engine;
+pub mod forecast;
 pub mod placement;
 pub mod residency;
 pub mod router;

@@ -298,18 +298,48 @@ impl PlaceInput<'_> {
 /// client-controlled, so the map must not grow without bound).
 const MAX_AFFINITY_KEYS: usize = 4096;
 
+/// Placements a key's home survives *unused* before the periodic sweep
+/// drops it.  Ages are measured on the placement clock (one tick per
+/// `place` call), so an idle pool never expires anything — only live
+/// traffic rotating through new keys retires the stale ones.
+pub const AFFINITY_IDLE_AGE: u64 = 1024;
+
+/// How often (in placements) the idle sweep runs.
+const AFFINITY_SWEEP_EVERY: u64 = 64;
+
+/// A batch key's sticky home plus the placement-clock stamp of its last
+/// arrival (sweep input).
+#[derive(Debug, Clone, Copy)]
+struct Home {
+    worker: usize,
+    last_used: u64,
+}
+
 /// The placement state: pool width plus the batch-key→worker affinity
 /// map.  Owned by the pool's admission loop; pure and deterministic so
 /// the bench can replay it in virtual time and tests need no threads.
+///
+/// Affinity entries are invalidated two ways: a key whose home worker
+/// went cold (evicted the model) or saturated is re-scored on its next
+/// arrival and re-homed to the choice, and a key that stops arriving at
+/// all is dropped by the [`AFFINITY_IDLE_AGE`] sweep — so a rotating
+/// key population cycles through the map instead of growing it to the
+/// [`MAX_AFFINITY_KEYS`] full-reset backstop.
 #[derive(Debug)]
 pub struct Placement {
     workers: usize,
-    affinity: HashMap<String, usize>,
+    affinity: HashMap<String, Home>,
+    /// Monotonic placement clock: one tick per `place` call.
+    clock: u64,
 }
 
 impl Placement {
     pub fn new(workers: usize) -> Placement {
-        Placement { workers: workers.max(1), affinity: HashMap::new() }
+        Placement {
+            workers: workers.max(1),
+            affinity: HashMap::new(),
+            clock: 0,
+        }
     }
 
     pub fn workers(&self) -> usize {
@@ -318,7 +348,7 @@ impl Placement {
 
     /// Current home worker of a batch key, if any.
     pub fn home(&self, key: &str) -> Option<usize> {
-        self.affinity.get(key).copied()
+        self.affinity.get(key).map(|h| h.worker)
     }
 
     /// Residency-aware least-load score of candidate `w` for `req`
@@ -346,14 +376,21 @@ impl Placement {
     /// key's affinity to the choice.
     pub fn place(&mut self, req: &PlaceInput, loads: &[WorkerLoad]) -> usize {
         debug_assert_eq!(loads.len(), self.workers);
+        self.clock += 1;
+        if self.clock % AFFINITY_SWEEP_EVERY == 0 {
+            let horizon = self.clock.saturating_sub(AFFINITY_IDLE_AGE);
+            self.affinity.retain(|_, h| h.last_used >= horizon);
+        }
         // 1. Sticky affinity while the home worker has headroom and
         // still holds the model's weights (a cold home is re-scored:
         // resident-and-headroom elsewhere beats reloading at home).
-        if let Some(&home) = self.affinity.get(req.key) {
+        if let Some(h) = self.affinity.get_mut(req.key) {
+            let home = h.worker;
             if home < loads.len()
                 && loads[home].has_headroom()
                 && loads[home].holds(req.model_slot)
             {
+                h.last_used = self.clock;
                 return home;
             }
         }
@@ -397,10 +434,43 @@ impl Placement {
         {
             // Rare full reset beats per-entry LRU bookkeeping on a map
             // this small; homes rebuild from live traffic immediately.
+            // The idle-age sweep normally keeps the map far below this.
             self.affinity.clear();
         }
-        self.affinity.insert(req.key.to_string(), chosen);
+        self.affinity.insert(
+            req.key.to_string(),
+            Home { worker: chosen, last_used: self.clock },
+        );
         chosen
+    }
+
+    /// Pick a worker for a background **prestage** warm load of
+    /// `model_slot` (the forecast said its traffic is about to spike).
+    /// This is where the forecast is calibrated against the *measured*
+    /// board: returns `None` — no order — when some worker with
+    /// admission headroom already holds the model (the forecast is
+    /// covered; re-ordering would thrash the residency LRU) or when no
+    /// worker has headroom to absorb the spike anyway.  Otherwise the
+    /// emptiest headroom worker not holding the model wins, tie-broken
+    /// toward the one with the fewest resident models (cheapest load,
+    /// least eviction risk), then the lowest id.
+    pub fn prestage_target(
+        &self,
+        model_slot: usize,
+        loads: &[WorkerLoad],
+    ) -> Option<usize> {
+        if model_slot >= 64 {
+            return None;
+        }
+        let slot = Some(model_slot);
+        if loads.iter().any(|l| l.has_headroom() && l.holds(slot)) {
+            return None;
+        }
+        (0..loads.len())
+            .filter(|w| loads[*w].has_headroom() && !loads[*w].holds(slot))
+            .min_by_key(|w| {
+                (loads[*w].outstanding(), loads[*w].resident_models, *w)
+            })
     }
 }
 
@@ -544,6 +614,66 @@ mod tests {
             place(&mut p, &format!("key-{i}"), Priority::Standard, &loads);
         }
         assert!(p.affinity.len() <= MAX_AFFINITY_KEYS);
+    }
+
+    #[test]
+    fn idle_affinity_entries_age_out_while_live_keys_survive() {
+        // A key that stops arriving is swept once the placement clock
+        // moves AFFINITY_IDLE_AGE past its last use; a key that keeps
+        // arriving is re-stamped on the sticky path and survives
+        // arbitrarily long rotation.  Neither outcome relies on the
+        // MAX_AFFINITY_KEYS full-reset backstop (the rotation below
+        // stays far under it).
+        let mut p = Placement::new(2);
+        let loads = vec![idle(64), idle(64)];
+        place(&mut p, "stale", Priority::Standard, &loads);
+        place(&mut p, "live", Priority::Standard, &loads);
+        assert!(p.home("stale").is_some() && p.home("live").is_some());
+        let rotation = AFFINITY_IDLE_AGE as usize + 256;
+        for i in 0..rotation {
+            place(&mut p, &format!("rot-{i}"), Priority::Standard, &loads);
+            place(&mut p, "live", Priority::Standard, &loads);
+        }
+        assert_eq!(p.home("stale"), None, "idle key must be swept");
+        assert!(p.home("live").is_some(), "live key must survive sweeps");
+        assert!(p.affinity.len() < MAX_AFFINITY_KEYS);
+    }
+
+    // ---------------- placement v3: forecast prestage -----------------
+
+    #[test]
+    fn prestage_target_respects_coverage_and_picks_emptiest() {
+        let p = Placement::new(2);
+        // Covered: worker 1 has headroom and already holds slot 0.
+        let covered = vec![
+            WorkerLoad::builder(4).build(),
+            WorkerLoad::builder(4).resident(&[0]).build(),
+        ];
+        assert_eq!(p.prestage_target(0, &covered), None);
+        // The holder saturates: coverage is gone, the cold worker with
+        // headroom is the target.
+        let holder_full = vec![
+            WorkerLoad::builder(4).build(),
+            WorkerLoad::builder(4)
+                .in_flight([0, 4, 0])
+                .resident(&[0])
+                .build(),
+        ];
+        assert_eq!(p.prestage_target(0, &holder_full), Some(0));
+        // Nobody holds it: the emptiest headroom worker wins.
+        let cold = vec![
+            WorkerLoad::builder(4).queued([0, 2, 0]).build(),
+            WorkerLoad::builder(4).queued([0, 1, 0]).build(),
+        ];
+        assert_eq!(p.prestage_target(0, &cold), Some(1));
+        // No headroom anywhere: no order.
+        let full = vec![
+            WorkerLoad::builder(1).in_flight([0, 1, 0]).build(),
+            WorkerLoad::builder(1).in_flight([0, 1, 0]).build(),
+        ];
+        assert_eq!(p.prestage_target(0, &full), None);
+        // Slots past the mask width are never orderable.
+        assert_eq!(p.prestage_target(64, &cold), None);
     }
 
     // ---------------- placement v2: residency + ledger share ---------

@@ -269,6 +269,7 @@ mod tests {
             ref_img: None,
             return_latent: false,
             error_budget: None,
+            parent_session: None,
         }
     }
 

@@ -133,6 +133,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "trace-ring-events",
             freqca::trace::DEFAULT_RING_EVENTS,
         )?,
+        // Predictive placement: EWMA arrival forecasting drives
+        // background prestage warm loads onto idle workers.
+        prestage: args.bool("prestage"),
+        // Live session migration: parked sessions older than this many
+        // ticks on a pressured worker ship whole to a hungry sibling
+        // (0 = off).
+        migrate_after_ticks: args.u64_or("migrate-after-ticks", 0)?,
     };
     let artifacts = args.str_or("artifacts", DEFAULT_ARTIFACT_DIR);
     server::serve(&artifacts, opts, Arc::new(AtomicBool::new(false)))

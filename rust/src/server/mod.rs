@@ -94,6 +94,16 @@ pub struct ServeOpts {
     /// disabled path is a single branch per would-be event).  Timelines
     /// are served by the `{"cmd":"trace"}` control verb.
     pub trace_ring_events: usize,
+    /// Predictive placement (`--prestage`): per-batch-key EWMA arrival
+    /// forecasting on the admission path; models predicted hot are
+    /// warm-loaded onto idle workers *before* the spike lands, off
+    /// every request's critical path.  Default off.
+    pub prestage: bool,
+    /// Scheduler ticks a parked session must sit on a pressured worker
+    /// before it may migrate whole (snapshot + waiters + warm-start
+    /// pin) to a hungry sibling (`--migrate-after-ticks`; 0 disables
+    /// migration — the work-stealing default).
+    pub migrate_after_ticks: u64,
 }
 
 /// Default concurrency cap: enough sessions to keep short jobs
@@ -120,6 +130,8 @@ impl Default for ServeOpts {
             spill_after_ticks:
                 crate::coordinator::durable::DEFAULT_SPILL_AFTER_TICKS,
             trace_ring_events: crate::trace::DEFAULT_RING_EVENTS,
+            prestage: false,
+            migrate_after_ticks: 0,
         }
     }
 }
@@ -165,6 +177,8 @@ pub fn serve(artifact_dir: &str, opts: ServeOpts, stop: Arc<AtomicBool>) -> Resu
         opts.wal_dir.clone(),
         opts.spill_after_ticks,
         hub.clone(),
+        opts.prestage,
+        opts.migrate_after_ticks,
     )?;
     let models = pool.models().to_vec();
     let listener = TcpListener::bind(&opts.addr)

@@ -98,10 +98,16 @@ pub enum EventKind {
     WalError,
     /// Session finished (payload: end-to-end latency).
     Complete,
+    /// A parked session's serialized snapshot shipped to an idle
+    /// sibling (payload: destination worker).
+    MigrateOut,
+    /// A migrated session arrived and re-parked here (payload: source
+    /// worker).
+    MigrateIn,
 }
 
 /// Canonical wire names, indexed by `EventKind as usize`.
-pub const EVENT_NAMES: [&str; 14] = [
+pub const EVENT_NAMES: [&str; 16] = [
     "admit",
     "place",
     "steal",
@@ -116,6 +122,8 @@ pub const EVENT_NAMES: [&str; 14] = [
     "wal_append",
     "wal_error",
     "complete",
+    "migrate_out",
+    "migrate_in",
 ];
 
 impl EventKind {
@@ -243,6 +251,8 @@ fn payload_names(kind: EventKind) -> [&'static str; 4] {
         EventKind::WalAppend => ["bytes", "b1", "b2", "b3"],
         EventKind::Steal => ["to_worker", "b1", "b2", "b3"],
         EventKind::DedupAttach => ["follower", "b1", "b2", "b3"],
+        EventKind::MigrateOut => ["to_worker", "b1", "b2", "b3"],
+        EventKind::MigrateIn => ["from_worker", "b1", "b2", "b3"],
         _ => ["a", "b", "c", "d"],
     }
 }

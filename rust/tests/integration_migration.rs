@@ -1,0 +1,256 @@
+//! Predictive placement + live session migration, end-to-end on real
+//! engines: a parked session on a pressured worker ships whole
+//! (snapshot, waiting client, WAL journalling) to a hungry idle
+//! sibling and completes there **bit-identical** to an uninterrupted
+//! run, the handoff lands in both workers' trace timelines, and a
+//! prestage order warm-loads weights off the request critical path,
+//! observable via the `prestage_loads` counter.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use freqca::coordinator::crfstore::CrfStore;
+use freqca::coordinator::engine::{
+    Engine, LoadBoard, StealBoard, WorkItem, WorkerContext,
+};
+use freqca::coordinator::placement::WorkerLoad;
+use freqca::coordinator::scheduler::{DephaseLedger, QosConfig};
+use freqca::coordinator::{Priority, Request, Response};
+use freqca::metrics::Metrics;
+use freqca::trace::TraceHub;
+
+mod common;
+use common::artifact_dir;
+
+/// Fresh, empty WAL directory for one test (per-process so parallel
+/// `cargo test` runs don't collide; each worker names its own file).
+fn wal_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("freqca-migration-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create wal dir");
+    dir
+}
+
+/// A two-worker pool driven from one thread: shared ledger, load
+/// board, steal board, CRF store, and trace hub — the same wiring
+/// `WorkerPool::new` does, minus the threads (engines are not `Send`;
+/// ticking both engines by hand keeps the handoff deterministic).
+struct MiniPool {
+    engines: Vec<Engine>,
+    steal: Arc<StealBoard>,
+    hub: Arc<TraceHub>,
+    metrics: Arc<Metrics>,
+}
+
+fn mini_pool(dir: &str, workers: usize, steal_after: u64) -> MiniPool {
+    let qos = QosConfig::default();
+    let ledger = DephaseLedger::from_config(&qos);
+    let board: LoadBoard = Arc::new(
+        (0..workers).map(|_| Mutex::new(WorkerLoad::default())).collect(),
+    );
+    let steal = StealBoard::new(workers, steal_after);
+    let hub = TraceHub::new(4096);
+    let metrics = Arc::new(Metrics::new());
+    let store = CrfStore::shared(8 << 20);
+    let engines = (0..workers)
+        .map(|id| {
+            let ctx = WorkerContext {
+                id,
+                ledger: ledger.clone(),
+                board: board.clone(),
+                steal: steal.clone(),
+            };
+            let mut e = Engine::with_worker(
+                dir,
+                Duration::ZERO,
+                16,
+                1,
+                qos,
+                None,
+                metrics.clone(),
+                ctx,
+                0,
+                store.clone(),
+            )
+            .expect("engine boots from artifacts");
+            e.set_trace(hub.sink(id));
+            e
+        })
+        .collect();
+    MiniPool { engines, steal, hub, metrics }
+}
+
+fn submit(engine: &mut Engine, request: Request) -> Receiver<Response> {
+    let (tx, rx) = channel();
+    engine.submit(WorkItem { request, reply: tx, enqueued: Instant::now() });
+    rx
+}
+
+fn class_req(id: u64, priority: Priority, steps: usize, seed: u64) -> Request {
+    Request {
+        id,
+        model: "tiny".into(),
+        policy: "freqca:n=3".into(),
+        priority,
+        seed,
+        n_steps: steps,
+        cond: vec![0.1; 12],
+        ref_img: None,
+        return_latent: true,
+        error_budget: None,
+        parent_session: None,
+    }
+}
+
+fn run_until_reply(engine: &mut Engine, rx: &Receiver<Response>) -> Response {
+    for _ in 0..100_000 {
+        engine.tick();
+        if let Ok(resp) = rx.try_recv() {
+            return resp;
+        }
+    }
+    panic!("engine never replied");
+}
+
+/// A batch session parked behind an interactive preemption on a
+/// full worker migrates — snapshot, waiting client, and WAL journal —
+/// to the hungry idle sibling, resumes there mid-flight, and its
+/// reply is bit-identical to an uninterrupted single-engine run.  The
+/// handoff is visible in the merged trace timeline as a
+/// `migrate_out`/`migrate_in` pair.
+#[test]
+fn parked_session_migrates_and_resumes_bit_identical() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    // Reference: the same batch request, uninterrupted on one engine.
+    let mut pool = mini_pool(dir, 1, 0);
+    let rx =
+        submit(&mut pool.engines[0], class_req(1, Priority::Batch, 12, 7));
+    let reference = run_until_reply(&mut pool.engines[0], &rx);
+    assert!(reference.ok, "error: {:?}", reference.error);
+    assert!(reference.latent.is_some(), "reference must return its latent");
+
+    // Migration arm: worker 0 makes partial batch progress, parks it
+    // under an interactive preemption, and ships it to worker 1.
+    let wal = wal_dir("handoff");
+    let mut pool = mini_pool(dir, 2, 4);
+    let [donor, receiver] = &mut pool.engines[..] else { unreachable!() };
+    donor.enable_durable(&wal, 64).expect("donor wal opens");
+    receiver.enable_durable(&wal, 64).expect("receiver wal opens");
+    donor.set_migrate_after(1);
+
+    let rx_batch = submit(donor, class_req(1, Priority::Batch, 12, 7));
+    for _ in 0..3 {
+        assert_eq!(donor.tick(), 1, "batch session should be stepping");
+    }
+    let rx_inter = submit(donor, class_req(2, Priority::Interactive, 6, 9));
+    donor.tick();
+    assert_eq!(donor.parked(), 1, "batch session should be parked");
+
+    // The idle sibling advertises hunger (the serve loop does this
+    // after `steal_after` idle ticks); the pressured donor's next tick
+    // ships the aged parked session.
+    receiver.advertise_hunger();
+    for _ in 0..10 {
+        if pool.metrics.counter("migrations") == 1 {
+            break;
+        }
+        donor.tick();
+    }
+    assert_eq!(pool.metrics.counter("migrations"), 1, "no migration fired");
+    assert_eq!(pool.metrics.counter("migrations_w1"), 1);
+    assert_eq!(donor.parked(), 0, "donor must hand the session off");
+
+    receiver.poll_mail();
+    assert_eq!(receiver.parked(), 1, "receiver must adopt the migrant");
+
+    // Drive both workers; the migrated session's original client gets
+    // its reply from the receiver.
+    let mut batch = None;
+    let mut inter = None;
+    for _ in 0..100_000 {
+        donor.tick();
+        receiver.poll_mail();
+        receiver.tick();
+        if batch.is_none() {
+            batch = rx_batch.try_recv().ok();
+        }
+        if inter.is_none() {
+            inter = rx_inter.try_recv().ok();
+        }
+        if batch.is_some() && inter.is_some() {
+            break;
+        }
+    }
+    let batch = batch.expect("migrated batch session never replied");
+    let inter = inter.expect("interactive session never replied");
+    assert!(batch.ok, "error: {:?}", batch.error);
+    assert!(inter.ok, "error: {:?}", inter.error);
+    assert_eq!(
+        batch.latent,
+        reference.latent,
+        "migrated session must be bit-identical to the uninterrupted run"
+    );
+    assert_eq!(batch.full_steps, reference.full_steps);
+    assert_eq!(batch.cached_steps, reference.cached_steps);
+
+    let timeline = pool.hub.recent_json(512).to_string();
+    assert!(
+        timeline.contains("migrate_out"),
+        "donor must log migrate_out: {timeline}"
+    );
+    assert!(
+        timeline.contains("migrate_in"),
+        "receiver must log migrate_in: {timeline}"
+    );
+    let _ = std::fs::remove_dir_all(&wal);
+}
+
+/// A prestage order warm-loads the model on the worker's idle path,
+/// bumps `prestage_loads` exactly once, and re-ordering an
+/// already-resident model is a counted-free no-op (the forecast being
+/// late must not double-load or double-count).
+#[test]
+fn prestage_order_warm_loads_once_off_the_critical_path() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: AOT artifacts not present (run `make artifacts`)");
+        return;
+    };
+    let mut pool = mini_pool(dir, 1, 0);
+    assert_eq!(pool.metrics.counter("prestage_loads"), 0);
+
+    pool.steal.order_prestage(0, "tiny");
+    pool.engines[0].poll_prestage();
+    assert_eq!(
+        pool.metrics.counter("prestage_loads"),
+        1,
+        "the ordered warm load must be counted"
+    );
+
+    // Latest-wins slot is one-shot: nothing pending, nothing loaded.
+    pool.engines[0].poll_prestage();
+    assert_eq!(pool.metrics.counter("prestage_loads"), 1);
+
+    // Re-ordering a resident model: the forecast was late; no-op.
+    pool.steal.order_prestage(0, "tiny");
+    pool.engines[0].poll_prestage();
+    assert_eq!(
+        pool.metrics.counter("prestage_loads"),
+        1,
+        "an already-resident model must not be re-loaded or re-counted"
+    );
+
+    // The warm weights serve a real request with zero extra loads.
+    let rx = submit(
+        &mut pool.engines[0],
+        class_req(1, Priority::Standard, 6, 3),
+    );
+    let resp = run_until_reply(&mut pool.engines[0], &rx);
+    assert!(resp.ok, "error: {:?}", resp.error);
+    assert_eq!(pool.metrics.counter("prestage_loads"), 1);
+}

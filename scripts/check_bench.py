@@ -15,10 +15,48 @@ writing it).
 Missing baseline keys are a **hard failure**, not a silent pass: a new
 scenario whose baseline was never committed (or a typo in the baseline
 file) must turn the gate red, otherwise the gate quietly stops gating.
+
+`check_bench.py --self-test` proves the gate actually gates: it runs
+this script against the fixtures in scripts/tests/ — a results file
+that must pass, a regressed one that must fail, and one with a whole
+section missing that must fail loudly (the silent-skip trap above).
+CI runs the self-test before trusting the real gate.
 """
 
 import json
+import os
+import subprocess
 import sys
+
+
+def self_test():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    fixtures = os.path.join(root, "scripts", "tests")
+    baseline = os.path.join(root, "benches", "baseline_coordinator.json")
+    cases = [
+        ("bench_results_pass.json", 0),
+        ("bench_results_bad_migration.json", 1),
+        ("bench_results_missing_key.json", 1),
+    ]
+    for name, want in cases:
+        proc = subprocess.run(
+            [
+                sys.executable,
+                os.path.abspath(__file__),
+                os.path.join(fixtures, name),
+                baseline,
+            ],
+            capture_output=True,
+            text=True,
+        )
+        if proc.returncode != want:
+            print(
+                f"SELF-TEST FAIL: {name} exited {proc.returncode}, "
+                f"expected {want}\n{proc.stdout}{proc.stderr}"
+            )
+            return 1
+    print(f"check_bench self-test OK ({len(cases)} fixtures)")
+    return 0
 
 
 class Gate:
@@ -128,6 +166,8 @@ def gate_step_latency(results, baseline):
 
 
 def main():
+    if len(sys.argv) == 2 and sys.argv[1] == "--self-test":
+        return self_test()
     if len(sys.argv) != 3:
         print(__doc__)
         return 2
@@ -364,6 +404,75 @@ def main():
             f"WAL compaction shrink {shrink:.2f} below the committed "
             f"floor {min_shrink} — dead records are not being dropped"
         )
+
+    # Predictive placement + live session migration (virtual time,
+    # deterministic; mirror: scripts/mirror_migration.py): the forecast
+    # arm must pay strictly fewer critical-path cold loads than the
+    # reactive arm with at least one background prestage and a lower
+    # burst completion tail; the migration arm must ship every parked
+    # short and beat waiting out the long job.  Counts are exact
+    # integers — any drift means the Forecaster, the prestage coverage
+    # rule, or the fixture changed and the baseline must be regenerated
+    # on purpose.  The p95s also gate against the committed baseline.
+    mig = need(results, "migration", "bench results")
+    mig_base = need(baseline, "migration", "baseline")
+    mig_react_cold = need(mig, "reactive.cold_loads", "bench results")
+    mig_fc_cold = need(mig, "forecast.cold_loads", "bench results")
+    mig_prestage = need(mig, "forecast.prestage_loads", "bench results")
+    mig_react_p95 = need(mig, "reactive.burst_p95_s", "bench results")
+    mig_fc_p95 = need(mig, "forecast.burst_p95_s", "bench results")
+    mig_count = need(mig, "migrate_on.migrations", "bench results")
+    mig_recv_cold = need(
+        mig, "migrate_on.receiver_cold_loads", "bench results"
+    )
+    mig_off_p95 = need(mig, "migrate_off.parked_p95_s", "bench results")
+    mig_on_p95 = need(mig, "migrate_on.parked_p95_s", "bench results")
+    print(
+        f"migration: critical cold loads {mig_react_cold} -> "
+        f"{mig_fc_cold} ({mig_prestage} prestaged), burst p95 "
+        f"{mig_react_p95 * 1e3:.1f} -> {mig_fc_p95 * 1e3:.1f} ms; "
+        f"{mig_count} migrations, parked p95 {mig_off_p95 * 1e3:.1f} -> "
+        f"{mig_on_p95 * 1e3:.1f} ms"
+    )
+    if mig_fc_cold >= mig_react_cold:
+        gate.fail(
+            "forecast-on did not reduce critical-path cold loads "
+            f"({mig_fc_cold} vs reactive {mig_react_cold})"
+        )
+    if mig_prestage < 1:
+        gate.fail("the forecaster never ordered a background prestage")
+    if mig_fc_p95 >= mig_react_p95:
+        gate.fail(
+            "prestaging did not lower the burst completion tail "
+            f"({mig_fc_p95} vs {mig_react_p95})"
+        )
+    if mig_on_p95 >= mig_off_p95:
+        gate.fail(
+            "migration did not beat waiting out the long job "
+            f"({mig_on_p95} vs {mig_off_p95})"
+        )
+    for key, path in (
+        ("reactive_cold_loads", "reactive.cold_loads"),
+        ("forecast_cold_loads", "forecast.cold_loads"),
+        ("forecast_prestage_loads", "forecast.prestage_loads"),
+        ("migrations", "migrate_on.migrations"),
+        ("receiver_cold_loads", "migrate_on.receiver_cold_loads"),
+    ):
+        got = need(mig, path, "bench results")
+        want = need(mig_base, key, "baseline")
+        if got != want:
+            gate.fail(f"migration {key} changed: {got} != baseline {want}")
+    mig_tol = mig_base.get("tolerance", 0.2)
+    for key, got in (
+        ("forecast_burst_p95_s", mig_fc_p95),
+        ("migrated_parked_p95_s", mig_on_p95),
+    ):
+        limit = need(mig_base, key, "baseline") * (1 + mig_tol)
+        if got > limit:
+            gate.fail(
+                f"migration {key} regressed > {mig_tol * 100:.0f}% "
+                f"({got} > {limit:.4f})"
+            )
 
     # Live-engine replay (present only when artifacts exist): every
     # class completed and the interactive tail beat batch for real.

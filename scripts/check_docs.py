@@ -24,11 +24,38 @@ silently):
 4. **No stale pointers** — documentation must be self-contained:
    no doc may reference a subpath under `/root/related/` (the
    related-repo file sets are not shipped with this repo).
+
+`check_docs.py --self-test` proves the gates actually gate: it runs
+this script against the fixture trees in scripts/tests/ — one that
+must pass and one carrying a removed knob, a phantom metric, an
+undocumented mint, a vanished trace event, and a stale pointer, all of
+which must fail.  CI runs the self-test before trusting the real gate.
 """
 
 import re
+import subprocess
 import sys
 from pathlib import Path
+
+
+def self_test():
+    here = Path(__file__).resolve()
+    fixtures = here.parent / "tests"
+    cases = [("check_docs_pass", 0), ("check_docs_fail", 1)]
+    for name, want in cases:
+        proc = subprocess.run(
+            [sys.executable, str(here), str(fixtures / name)],
+            capture_output=True,
+            text=True,
+        )
+        if proc.returncode != want:
+            print(
+                f"SELF-TEST FAIL: {name} exited {proc.returncode}, "
+                f"expected {want}\n{proc.stdout}{proc.stderr}"
+            )
+            return 1
+    print(f"check_docs self-test OK ({len(cases)} fixture trees)")
+    return 0
 
 DOCS = ["docs/OPERATIONS.md", "DESIGN.md", "ROADMAP.md", "README.md"]
 
@@ -122,6 +149,8 @@ def normalize(name):
 
 
 def main():
+    if len(sys.argv) == 2 and sys.argv[1] == "--self-test":
+        return self_test()
     root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
     gate = Gate()
 

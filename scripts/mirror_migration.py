@@ -1,0 +1,267 @@
+#!/usr/bin/env python3
+"""Reference mirror of the `migration` bench scenario.
+
+Replicates `simulate_forecast` / `simulate_migration` in
+benches/coordinator.rs operation-for-operation — the Forecaster EWMA
+(coordinator::forecast: decay 0.5, demand threshold 1.0, cooldown 4,
+dead-rate 0.01, cooldowns advance *after* candidate selection), the
+`Placement::prestage_target` coverage rule (None when any headroom
+worker already holds the model, else the emptiest idle non-holder) and
+the greedy virtual-time pool — so the committed `migration` keys in
+benches/baseline_coordinator.json can be derived (and audited) without
+running the Rust bench.
+
+Run:          python3 scripts/mirror_migration.py
+Audit:        python3 scripts/mirror_migration.py --audit \
+                  benches/baseline_coordinator.json
+(exit 1 when the recomputed values disagree with the committed ones)
+"""
+
+import json
+import sys
+
+# --- forecast arm fixture (mirrors FX_* consts in the bench) ---------
+FX_WORKERS = 2
+FX_STEP_S = 0.010
+FX_COLD_S = 0.050
+FX_CAL_EVERY = 4  # calibrate every 4 placements (bench-local)
+
+# Forecaster defaults (coordinator::forecast).
+FC_DECAY = 0.5
+FC_THRESHOLD = 1.0
+FC_COOLDOWN = 4
+FC_DEAD = 0.01
+
+# --- migration arm fixture (mirrors MG_* consts in the bench) --------
+MG_STEP_S = 0.010
+MG_COLD_S = 0.050
+MG_SHIP_S = 0.002
+MG_LONG_STEPS = 50
+MG_SHORTS = 4
+MG_SHORT_STEPS = 6
+MG_RECEIVER_FREE_S = 0.100
+
+
+def percentile(sorted_vals, q):
+    # util::stats::percentile — linear interpolation.
+    if not sorted_vals:
+        return 0.0
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    pos = q / 100.0 * (len(sorted_vals) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
+
+
+class Forecaster:
+    """coordinator::forecast::Forecaster with default config."""
+
+    def __init__(self):
+        self.keys = {}  # key -> [model, rate, pending]
+        self.cooldown = {}  # model -> calibrations left
+
+    def observe(self, key, model):
+        if key in self.keys:
+            self.keys[key][2] += 1
+        else:
+            self.keys[key] = [model, 0.0, 1]
+
+    def calibrate(self):
+        for key in list(self.keys):
+            k = self.keys[key]
+            k[1] = k[1] * FC_DECAY + k[2]
+            k[2] = 0
+            if k[1] < FC_DEAD:
+                del self.keys[key]
+        demand = {}
+        for model, rate, _ in self.keys.values():
+            demand[model] = demand.get(model, 0.0) + rate
+        hot = sorted(
+            m for m, d in demand.items()
+            if d >= FC_THRESHOLD and m not in self.cooldown
+        )
+        for m in list(self.cooldown):
+            self.cooldown[m] -= 1
+            if self.cooldown[m] <= 0:
+                del self.cooldown[m]
+        return hot
+
+    def ordered(self, model):
+        self.cooldown[model] = FC_COOLDOWN
+
+
+def prestage_target(model, idle, res_snap):
+    """Placement::prestage_target over the bench's load snapshot
+    (captured once per calibration, like the WorkerPool's board read):
+    headroom == idle worker; holds == membership (a load in flight
+    counts, exactly like the residency board's Loading slot)."""
+    idle_ws = [w for w in range(FX_WORKERS) if idle[w]]
+    if any(model in res_snap[w] for w in idle_ws):
+        return None  # covered by the measured board
+    cands = [w for w in idle_ws if model not in res_snap[w]]
+    if not cands:
+        return None
+    # (outstanding, resident model count, id) — all idle, so the
+    # emptiest (fewest resident models), lowest id wins.
+    return min(cands, key=lambda w: (0, len(res_snap[w]), w))
+
+
+def forecast_jobs():
+    # Warmup establishes demand for model b on worker 1, then a burst
+    # of b lands while that sole holder is the only one warm.
+    jobs = [
+        (0.000, "a", 2),
+        (0.005, "b", 2),
+        (0.080, "b", 2),
+        (0.085, "b", 2),
+    ]
+    for k in range(8):
+        jobs.append((0.150 + 0.005 * k, "b", 2))
+    return jobs
+
+
+def simulate_forecast(prestage_on):
+    clock = [0.0] * FX_WORKERS
+    # model -> virtual time its weights are usable on that worker.
+    resident = [{"a": 0.0} for _ in range(FX_WORKERS)]
+    fc = Forecaster() if prestage_on else None
+    out = dict(cold_loads=0, prestage_loads=0, burst=[], all=[])
+    placements = 0
+    for arrive, model, steps in forecast_jobs():
+        # Greedy finish-time placement with the cold-load penalty.
+        def score(w):
+            start = max(clock[w], arrive)
+            warm = model in resident[w] and resident[w][model] <= start
+            return start + (0.0 if warm else FX_COLD_S)
+
+        w = min(range(FX_WORKERS), key=lambda v: (score(v), v))
+        start = max(clock[w], arrive)
+        ready = resident[w].get(model)
+        if ready is None:
+            out["cold_loads"] += 1
+            ready = start + FX_COLD_S
+            resident[w][model] = ready
+            start = ready
+        elif ready > start:
+            start = ready  # wait out an in-flight (prestaged) load
+        clock[w] = start + steps * FX_STEP_S
+        latency = clock[w] - arrive
+        out["all"].append(latency)
+        if arrive >= 0.150:
+            out["burst"].append(latency)
+        # The admission loop forecasts *after* placing (WorkerPool
+        # order): observe every arrival, calibrate every FX_CAL_EVERY.
+        if fc is not None:
+            fc.observe(model, model)
+            placements += 1
+            if placements % FX_CAL_EVERY == 0:
+                idle = [clock[w] <= arrive for w in range(FX_WORKERS)]
+                res_snap = [set(resident[w]) for w in range(FX_WORKERS)]
+                for m in fc.calibrate():
+                    target = prestage_target(m, idle, res_snap)
+                    if target is None:
+                        continue
+                    # Background warm load: occupies the idle worker,
+                    # never a request's critical path.
+                    begin = max(clock[target], arrive)
+                    resident[target][m] = begin + FX_COLD_S
+                    clock[target] = begin + FX_COLD_S
+                    out["prestage_loads"] += 1
+                    fc.ordered(m)
+    out["burst"].sort()
+    out["all"].sort()
+    return out
+
+
+def simulate_migration(migrate_on):
+    # Worker 0 is blocked by a 50-step job at cap 1 with four parked
+    # shorts behind it; worker 1 frees up at MG_RECEIVER_FREE_S and
+    # advertises hunger.  Migration ships each parked session (snapshot
+    # serialize + adopt = MG_SHIP_S apiece) to worker 1, which pays one
+    # cold load for the model and runs them two ticks in; without it
+    # they wait out the long job.
+    arrivals = [0.010 + 0.010 * i for i in range(MG_SHORTS)]
+    long_done = MG_LONG_STEPS * MG_STEP_S
+    out = dict(migrations=0, receiver_cold_loads=0, parked=[])
+    if migrate_on:
+        recv_clock = MG_RECEIVER_FREE_S
+        resident = False
+        for i, arrive in enumerate(arrivals):
+            adopted = MG_RECEIVER_FREE_S + (i + 1) * MG_SHIP_S
+            out["migrations"] += 1
+            start = max(recv_clock, adopted)
+            if not resident:
+                out["receiver_cold_loads"] += 1
+                start += MG_COLD_S
+                resident = True
+            recv_clock = start + MG_SHORT_STEPS * MG_STEP_S
+            out["parked"].append(recv_clock - arrive)
+    else:
+        donor_clock = long_done
+        for arrive in arrivals:
+            donor_clock += MG_SHORT_STEPS * MG_STEP_S
+            out["parked"].append(donor_clock - arrive)
+    out["parked"].sort()
+    out["long_latency_s"] = long_done
+    return out
+
+
+def compute():
+    reactive = simulate_forecast(False)
+    forecast = simulate_forecast(True)
+    off = simulate_migration(False)
+    on = simulate_migration(True)
+    return {
+        "reactive_cold_loads": reactive["cold_loads"],
+        "forecast_cold_loads": forecast["cold_loads"],
+        "forecast_prestage_loads": forecast["prestage_loads"],
+        "reactive_burst_p95_s": percentile(reactive["burst"], 95),
+        "forecast_burst_p95_s": percentile(forecast["burst"], 95),
+        "migrations": on["migrations"],
+        "receiver_cold_loads": on["receiver_cold_loads"],
+        "waited_parked_p95_s": percentile(off["parked"], 95),
+        "migrated_parked_p95_s": percentile(on["parked"], 95),
+    }
+
+
+def main():
+    vals = compute()
+    for k in sorted(vals):
+        v = vals[k]
+        print(f"{k} = {v:.6f}" if isinstance(v, float) else f"{k} = {v}")
+    assert vals["forecast_cold_loads"] < vals["reactive_cold_loads"]
+    assert vals["forecast_prestage_loads"] >= 1
+    assert vals["forecast_burst_p95_s"] < vals["reactive_burst_p95_s"]
+    assert vals["migrations"] == MG_SHORTS
+    assert vals["migrated_parked_p95_s"] < vals["waited_parked_p95_s"]
+    if len(sys.argv) >= 2 and sys.argv[1] == "--audit":
+        path = (
+            sys.argv[2]
+            if len(sys.argv) > 2
+            else "benches/baseline_coordinator.json"
+        )
+        with open(path) as f:
+            base = json.load(f)["migration"]
+        bad = 0
+        for k, v in vals.items():
+            want = base.get(k)
+            if want is None:
+                print(f"AUDIT FAIL: baseline lacks '{k}'")
+                bad += 1
+            elif isinstance(v, float):
+                if abs(v - want) > 1e-9:
+                    print(f"AUDIT FAIL: {k} = {v!r}, baseline {want!r}")
+                    bad += 1
+            elif v != want:
+                print(f"AUDIT FAIL: {k} = {v}, baseline {want}")
+                bad += 1
+        if bad:
+            return 1
+        print(f"audit OK: {len(vals)} keys match {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,8 +6,16 @@ integer — the FreqCa schedule lookahead, the placement layer's scoring
 (affinity, least-load, warm steering) and the round-robin virtual-time
 pool — so the committed baseline keys in
 benches/baseline_coordinator.json can be derived (and audited) without
-running the Rust bench.  Run:  python3 scripts/mirror_multiturn.py
+running the Rust bench.
+
+Run:          python3 scripts/mirror_multiturn.py
+Audit:        python3 scripts/mirror_multiturn.py --audit \
+                  benches/baseline_coordinator.json
+(exit 1 when the recomputed values disagree with the committed ones)
 """
+
+import json
+import sys
 
 MT_CHAINS = 8
 MT_TURNS = 3
@@ -202,7 +210,38 @@ def main():
           "cold_ttfs_p95_s=%.6f" %
           (cold["fulls"], warmr["fulls"], warmr["demotions"],
            percentile(warmr["ttfs"], 95), percentile(cold["ttfs"], 95)))
+    if len(sys.argv) >= 2 and sys.argv[1] == "--audit":
+        path = (
+            sys.argv[2]
+            if len(sys.argv) > 2
+            else "benches/baseline_coordinator.json"
+        )
+        with open(path) as f:
+            base = json.load(f)["multi_turn"]
+        vals = {
+            "cold_full_steps": cold["fulls"],
+            "warm_full_steps": warmr["fulls"],
+            "expected_warm_demotions": warmr["demotions"],
+            "warm_ttfs_p95_s": percentile(warmr["ttfs"], 95),
+        }
+        bad = 0
+        for k, v in vals.items():
+            want = base.get(k)
+            if want is None:
+                print("AUDIT FAIL: baseline lacks '%s'" % k)
+                bad += 1
+            elif isinstance(v, float):
+                if abs(v - want) > 1e-9:
+                    print("AUDIT FAIL: %s = %r, baseline %r" % (k, v, want))
+                    bad += 1
+            elif v != want:
+                print("AUDIT FAIL: %s = %s, baseline %s" % (k, v, want))
+                bad += 1
+        if bad:
+            return 1
+        print("audit OK: %d keys match %s" % (len(vals), path))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,4 @@
+fn serve(metrics: &Metrics) {
+    metrics.bump("reqs", 1);
+    metrics.bump("undocumented_counter", 1);
+}

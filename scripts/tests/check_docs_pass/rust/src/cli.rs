@@ -1,0 +1,3 @@
+pub const USAGE: &str = "\
+demo serve [--foo 1]
+";

@@ -1,0 +1,3 @@
+fn serve(metrics: &Metrics) {
+    metrics.bump("reqs", 1);
+}

@@ -1,0 +1,1 @@
+pub const EVENT_NAMES: [&str; 1] = ["admit"];
